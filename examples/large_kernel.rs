@@ -1,0 +1,48 @@
+//! Appendix B: iterative SFC convolution for large kernels (7×7…51×51).
+//!
+//!     cargo run --release --example large_kernel
+
+use sfc::algo::iterative::{iterative_conv2d, iterative_cost};
+use sfc::algo::{direct_conv2d, sfc};
+use sfc::linalg::Mat;
+use sfc::util::{Pcg32, Timer};
+
+fn main() {
+    let inner = sfc(6, 6, 5);
+    let outer = sfc(6, 5, 6);
+    println!("inner algorithm: {} ({} mults 2-D)", inner.name, inner.mults_2d_hermitian());
+    println!("outer algorithm: {} ({} mults 2-D)\n", outer.name, outer.mults_2d_hermitian());
+
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>9}",
+        "kernel", "direct", "iterative", "reduction", "max err"
+    );
+    let mut rng = Pcg32::seeded(11);
+    for r_big in [13usize, 21, 29, 37] {
+        let feat = r_big + 11; // map a bit larger than the kernel
+        let c = iterative_cost(r_big, feat - r_big + 1, &inner, &outer);
+        let x = Mat::from_vec(feat, feat, (0..feat * feat).map(|_| rng.next_gaussian()).collect());
+        let k = Mat::from_vec(r_big, r_big, (0..r_big * r_big).map(|_| rng.next_gaussian()).collect());
+        let t = Timer::start();
+        let got = iterative_conv2d(&x, &k, &inner);
+        let _ms = t.elapsed_ms();
+        let want = direct_conv2d(&x, &k);
+        let err = got
+            .data
+            .iter()
+            .zip(&want.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        println!(
+            "{:>5}×{:<2} {:>12} {:>12} {:>11.1}× {:>9.1e}",
+            r_big,
+            r_big,
+            c.direct_mults,
+            c.two_iter_mults,
+            c.direct_mults as f64 / c.two_iter_mults as f64,
+            err
+        );
+    }
+    println!("\npaper (29×29): 17,424 mults quoted (3.1% of direct); our exact accounting: 33,856 (6.0%).");
+    println!("Either way the transform stage stays addition-only — the property FFT lacks (App. B).");
+}

@@ -1,0 +1,58 @@
+//! The PTQ pipeline end-to-end on a mini-ResNet: quantize the same model
+//! with direct-int8, Winograd-int8 and SFC-int8 and compare accuracy —
+//! a self-contained miniature of Table 2 (runs on trained weights when
+//! `make artifacts` has been run, else on a random-weight network with
+//! MSE as the metric).
+//!
+//!     cargo run --release --example ptq_pipeline
+
+use sfc::data::synth;
+use sfc::exp;
+use sfc::nn::model::{resnet18_cfg, resnet_random};
+use sfc::nn::Tensor;
+use sfc::quant::calib::{dequantize_model, quantize_model, QuantConfig};
+
+fn main() -> anyhow::Result<()> {
+    let data_dir = "artifacts";
+    let have_artifacts = std::path::Path::new(data_dir).join("resnet18.w32").exists();
+
+    let (mut model, images, labels) = if have_artifacts {
+        let (imgs, labels) = exp::load_split(data_dir, "test", 128)?;
+        (exp::load_model(data_dir, "resnet18")?, imgs, labels)
+    } else {
+        println!("(no artifacts — using a random-weight resnet18; run `make artifacts` for the real thing)\n");
+        let ds = synth::generate(128, 42);
+        let mut t = Tensor::zeros(&[ds.n, ds.c, ds.h, ds.w]);
+        t.data.copy_from_slice(&ds.images);
+        (resnet_random(&resnet18_cfg(), 7, 10), t, ds.labels)
+    };
+
+    let calib_dims = [64, images.dims[1], images.dims[2], images.dims[3]];
+    let calib = Tensor::from_vec(&calib_dims, images.data[..calib_dims.iter().product()].to_vec());
+
+    let fp32_logits = model.forward(&images);
+    let fp32_acc = model.accuracy(&images, &labels);
+    println!("fp32: top-1 {:.2}%\n", fp32_acc * 100.0);
+
+    for (label, cfg) in [
+        ("direct int8", QuantConfig::direct_default(8)),
+        ("Wino(4,3) int8", QuantConfig::winograd_default(8)),
+        ("SFC-6(7,3) int8", QuantConfig::sfc_default(8)),
+        ("Wino(4,3) int6", QuantConfig::winograd_default(6)),
+        ("SFC-6(7,3) int6", QuantConfig::sfc_default(6)),
+    ] {
+        let n = quantize_model(&mut model, &calib, &cfg);
+        let acc = model.accuracy(&images, &labels);
+        let logits = model.forward(&images);
+        let mse = logits.mse(&fp32_logits);
+        println!(
+            "{label:<16} quantized {} convs · top-1 {:>6.2}% (Δ {:+.2}%) · logit MSE {mse:.3e}",
+            n.len(),
+            acc * 100.0,
+            (acc - fp32_acc) * 100.0
+        );
+        dequantize_model(&mut model);
+    }
+    println!("\nExpected shape (paper Table 2): SFC ≈ direct ≫ Winograd, gap widening at int6.");
+    Ok(())
+}

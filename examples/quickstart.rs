@@ -1,0 +1,55 @@
+//! Quickstart: construct the paper's SFC algorithms, inspect their
+//! properties, and run a fast convolution through the public API.
+//!
+//!     cargo run --release --example quickstart
+
+use sfc::algo::{catalog, direct_conv2d, sfc, winograd};
+use sfc::linalg::Mat;
+use sfc::nn::conv::{conv2d_direct, conv2d_fast, FastConvPlan};
+use sfc::nn::Tensor;
+use sfc::util::Pcg32;
+
+fn main() {
+    // 1) Build the flagship algorithm: SFC-6(7×7, 3×3).
+    let algo = sfc(6, 7, 3);
+    println!("algorithm       : {}", algo.name);
+    println!("output tile     : {}×{}", algo.m, algo.m);
+    println!("input tile      : {0}×{0}", algo.input_len());
+    println!("multiplications : {} 1-D, {} 2-D ({} with Hermitian symmetry)",
+        algo.t, algo.mults_2d(), algo.mults_2d_hermitian());
+    println!("speedup vs direct: {:.2}× (Winograd F(4,3): {:.2}×)",
+        algo.speedup_2d(), winograd(4, 3).speedup_2d());
+    println!("κ(Aᵀ)           : {:.2} (Winograd F(4,3): {:.2})\n",
+        algo.kappa_at(), winograd(4, 3).kappa_at());
+
+    // 2) The transforms are pure addition networks (the paper's §4.1).
+    assert!(algo.bt.is_integral() && algo.g.is_integral());
+    println!("Bᵀ and G are integer ±1/0 matrices — transform = additions only ✓");
+
+    // 3) One 2-D tile through the bilinear form, checked against naive conv.
+    let mut rng = Pcg32::seeded(1);
+    let l = algo.input_len();
+    let x = Mat::from_vec(l, l, (0..l * l).map(|_| rng.next_gaussian()).collect());
+    let f = Mat::from_vec(3, 3, (0..9).map(|_| rng.next_gaussian()).collect());
+    let y = algo.apply2d_f64(&x, &f);
+    let want = direct_conv2d(&x, &f);
+    let err: f64 = y.data.iter().zip(&want.data).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+    println!("tile check: max |err| = {err:.2e} (float roundoff only) ✓\n");
+
+    // 4) A full NCHW conv layer through the tiled engine.
+    let plan = FastConvPlan::new(sfc(6, 7, 3));
+    let mut x = Tensor::zeros(&[1, 16, 28, 28]);
+    rng.fill_gaussian(&mut x.data, 1.0);
+    let mut w = Tensor::zeros(&[32, 16, 3, 3]);
+    rng.fill_gaussian(&mut w.data, 0.2);
+    let fast = conv2d_fast(&x, &w, &[], &plan, 1);
+    let direct = conv2d_direct(&x, &w, &[], 1, 1);
+    println!("conv2d [1,16,28,28]→[1,32,28,28]: engine MSE vs direct = {:.2e} ✓\n", fast.mse(&direct));
+
+    // 5) The whole Table-1 catalog is one call away.
+    println!("{:<18} {:>8} {:>8} {:>10}", "algorithm", "mults2D", "κ(Aᵀ)", "complexity");
+    for spec in catalog() {
+        let a = spec.build();
+        println!("{:<18} {:>8} {:>8.1} {:>9.1}%", spec.name, a.mults_2d_hermitian(), a.kappa_at(), 100.0 * a.complexity_2d());
+    }
+}

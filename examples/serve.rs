@@ -1,0 +1,63 @@
+//! E2E serving driver (the DESIGN.md §6 "E2E" row): load the AOT-compiled
+//! JAX model (direct and Pallas-SFC variants), serve the SynthImage test
+//! stream through the dynamic batcher, and report accuracy + latency +
+//! throughput. Requires `make artifacts`.
+//!
+//!     cargo run --release --example serve
+
+use sfc::coordinator::{LatencyStats, Server, ServerConfig};
+use sfc::exp;
+use sfc::runtime::Executor;
+use std::path::PathBuf;
+
+fn serve_one(hlo: PathBuf, batch: usize, images: &sfc::nn::Tensor, labels: &[u8]) -> anyhow::Result<()> {
+    let n = labels.len();
+    let dims = vec![batch, 3, 32, 32];
+    let server = Server::start(move || Executor::load(&hlo, &dims, 10), ServerConfig {
+        batch_size: batch,
+        queue_depth: 64,
+        batch_timeout_ms: 2,
+    })?;
+    let sample = 3 * 32 * 32;
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for i in 0..n {
+        handles.push(server.submit(images.data[i * sample..(i + 1) * sample].to_vec())?);
+    }
+    let mut correct = 0usize;
+    let mut lats = Vec::new();
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.wait()?;
+        lats.push(r.latency_s);
+        correct += (r.argmax == labels[i] as usize) as usize;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = LatencyStats::from_samples(&lats);
+    println!(
+        "  batch {batch}: acc {:>6.2}% · {:>7.1} img/s · p50 {:>6.2} ms · p95 {:>6.2} ms · {} batches",
+        100.0 * correct as f64 / n as f64,
+        n as f64 / wall,
+        s.p50 * 1e3,
+        s.p95 * 1e3,
+        server.batches_executed()
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let data_dir = "artifacts";
+    let (images, labels) = exp::load_split(data_dir, "test", 256)?;
+    for variant in ["resnet18", "resnet18_sfc"] {
+        println!("{variant}:");
+        for batch in [1usize, 8] {
+            let hlo = PathBuf::from(format!("{data_dir}/{variant}_b{batch}.hlo.txt"));
+            if !hlo.exists() {
+                println!("  (skipping batch {batch}: {} missing — run `make artifacts`)", hlo.display());
+                continue;
+            }
+            serve_one(hlo, batch, &images, &labels)?;
+        }
+    }
+    Ok(())
+}

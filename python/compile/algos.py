@@ -1,0 +1,99 @@
+"""Load the exact SFC/Winograd transformation matrices.
+
+The Rust constructor (`rust/src/algo/`) is the single source of truth: it
+derives every (G, Bᵀ, Aᵀ) triple from the symbolic-DFT construction with
+exact rational arithmetic and `sfc dump-algos` exports them as text into
+``artifacts/algos/``. This module parses those files so the JAX/Pallas
+layer is guaranteed bit-identical to the Rust engine.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from fractions import Fraction
+
+import numpy as np
+
+ALGOS_DIR = os.environ.get(
+    "SFC_ALGOS_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "algos"),
+)
+
+
+@dataclass
+class Bilinear:
+    """A 1-D bilinear convolution algorithm z = Aᵀ((G·f) ⊙ (Bᵀ·x))."""
+
+    name: str
+    m: int  # output tile
+    r: int  # kernel taps
+    t: int  # multiplications
+    l: int  # input tile (m + r - 1)
+    bt: np.ndarray  # T×L float64
+    g: np.ndarray  # T×R
+    at: np.ndarray  # M×T
+
+    def mults_2d(self) -> int:
+        return self.t * self.t
+
+
+def _parse_matrix(lines, idx):
+    header = lines[idx].split()
+    rows, cols = int(header[1]), int(header[2])
+    data = np.zeros((rows, cols), dtype=np.float64)
+    for i in range(rows):
+        vals = lines[idx + 1 + i].split()
+        assert len(vals) == cols
+        for j, v in enumerate(vals):
+            data[i, j] = float(Fraction(v))
+    return data, idx + 1 + rows
+
+
+def load(name: str) -> Bilinear:
+    """Load by file stem, e.g. ``sfc-6_7x7_3x3_`` or a friendly alias like
+    ``SFC-6(7x7,3x3)``."""
+    stem = name.lower().replace("(", "_").replace(")", "_").replace(",", "_")
+    path = os.path.join(ALGOS_DIR, f"{stem}.txt")
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"{path} — run `cargo run --release -- dump-algos` (or `make artifacts`)"
+        )
+    with open(path) as f:
+        lines = [ln.rstrip("\n") for ln in f]
+    meta = {}
+    idx = 0
+    while idx < len(lines) and not lines[idx].startswith(("BT", "G ", "AT")):
+        k, v = lines[idx].split(maxsplit=1)
+        meta[k] = v
+        idx += 1
+    bt, idx = _parse_matrix(lines, idx)
+    g, idx = _parse_matrix(lines, idx)
+    at, idx = _parse_matrix(lines, idx)
+    return Bilinear(
+        name=meta["name"],
+        m=int(meta["m"]),
+        r=int(meta["r"]),
+        t=int(meta["t"]),
+        l=int(meta["l"]),
+        bt=bt,
+        g=g,
+        at=at,
+    )
+
+
+def sfc_7x7_3x3() -> Bilinear:
+    """The paper's flagship algorithm (SFC-6(7×7, 3×3))."""
+    return load("sfc-6_7x7_3x3_")
+
+
+def sfc_6x6_3x3() -> Bilinear:
+    return load("sfc-6_6x6_3x3_")
+
+
+def sfc_4x4_3x3() -> Bilinear:
+    return load("sfc-4_4x4_3x3_")
+
+
+def wino_4x4_3x3() -> Bilinear:
+    return load("wino_4x4_3x3_")

@@ -1,0 +1,115 @@
+"""AOT export: lower the JAX models to HLO **text** for the Rust runtime.
+
+HLO text (not `.serialize()`): jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+`xla` 0.1.6 crate links) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Exports, per trained model:
+  <model>_b{B}.hlo.txt       forward pass, XLA-native convs, batch B
+  <model>_sfc_b{B}.hlo.txt   forward pass with the Pallas SFC-6(7×7,3×3)
+                             kernel on every 3×3 stride-1 conv — the
+                             artifact that proves L1⊂L2⊂L3 composition
+plus a standalone conv-layer pair for kernel-level benchmarking:
+  conv_sfc.hlo.txt / conv_direct.hlo.txt
+
+Usage: python -m compile.aot [--models resnet18] [--batches 1,8]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import algos, model
+from .kernels import sfc as sfc_kernel
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def load_weights(path: str) -> dict:
+    """Read SFCW weights back into a params dict."""
+    params = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"SFCW"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            (ndim,) = struct.unpack("<B", f.read(1))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(4 * n), dtype="<f4").reshape(dims)
+            params[name] = jnp.asarray(data)
+    return params
+
+
+def export(fn, example, path: str) -> None:
+    lowered = jax.jit(fn).lower(example)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)/1e6:.1f} MB)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="resnet18")
+    ap.add_argument("--batches", default="1,8")
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    algo = algos.sfc_7x7_3x3()
+    sfc_impl = functools.partial(sfc_kernel.sfc_conv2d, algo=algo)
+
+    for name in args.models.split(","):
+        wpath = os.path.join(out, f"{name}.w32")
+        params = load_weights(wpath)
+        for b in [int(x) for x in args.batches.split(",")]:
+            spec = jnp.zeros((b, 3, 32, 32), jnp.float32)
+
+            def fwd_direct(x, params=params, name=name):
+                return (model.forward(params, x, name),)
+
+            export(fwd_direct, spec, os.path.join(out, f"{name}_b{b}.hlo.txt"))
+
+            def fwd_sfc(x, params=params, name=name):
+                return (
+                    model.forward(
+                        params,
+                        x,
+                        name,
+                        conv_impl=lambda x, w, pad: sfc_impl(x, w, pad=pad),
+                    ),
+                )
+
+            export(fwd_sfc, spec, os.path.join(out, f"{name}_sfc_b{b}.hlo.txt"))
+
+    # standalone conv layer (kernel benchmarking from Rust)
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (64, 64, 3, 3), jnp.float32) * 0.1
+    spec = jnp.zeros((1, 64, 28, 28), jnp.float32)
+    export(lambda x: (sfc_kernel.sfc_conv2d(x, w, algo, pad=1),), spec,
+           os.path.join(out, "conv_sfc.hlo.txt"))
+    from .kernels.ref import conv2d_ref
+
+    export(lambda x: (conv2d_ref(x, w, pad=1),), spec, os.path.join(out, "conv_direct.hlo.txt"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the build-time ground truth: the Pallas SFC kernel and the full
+tiled SFC convolution are asserted against `conv2d_ref` (XLA's own
+convolution) in pytest before anything is AOT-exported.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_ref(x, w, pad: int = 1, stride: int = 1):
+    """NCHW correlation with OIHW weights — the semantics every conv in
+    this project implements (matches the Rust engine's conv2d_direct)."""
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def freq_matmul_ref(v, u):
+    """Reference for the transform-domain hot spot: per-frequency channel
+    GEMM. v: [T2, tiles, IC], u: [T2, IC, OC] -> [T2, tiles, OC]."""
+    return jnp.einsum("fti,fio->fto", v, u)
+
+
+def sfc_conv2d_ref(x, w, algo, pad: int = 1):
+    """Tiled SFC convolution implemented with plain jnp einsums (no
+    Pallas) — bit-comparable oracle for the kernel path."""
+    bt = jnp.asarray(algo.bt, dtype=x.dtype)
+    g = jnp.asarray(algo.g, dtype=x.dtype)
+    at = jnp.asarray(algo.at, dtype=x.dtype)
+    n, ic, h, wid = x.shape
+    oc = w.shape[0]
+    m, l, r = algo.m, algo.l, algo.r
+    oh, ow = h + 2 * pad - r + 1, wid + 2 * pad - r + 1
+    ty, tx = -(-oh // m), -(-ow // m)
+    # pad so every tile is full
+    xp = jnp.pad(
+        x, ((0, 0), (0, 0), (pad, ty * m + l - pad - h), (pad, tx * m + l - pad - wid))
+    )
+    # gather overlapping tiles [n, ic, ty, tx, l, l]
+    tiles = jnp.stack(
+        [
+            jnp.stack(
+                [xp[:, :, i * m : i * m + l, j * m : j * m + l] for j in range(tx)], axis=2
+            )
+            for i in range(ty)
+        ],
+        axis=2,
+    )
+    # V = Bt · tile · B
+    v = jnp.einsum("ai,bj,ncyxij->ncyxab", bt, bt, tiles)
+    # U = G · w · Gt
+    u = jnp.einsum("ai,bj,ocij->ocab", g, g, w)
+    # element-wise product + channel reduction
+    p = jnp.einsum("ncyxab,ocab->noyxab", v, u)
+    # Y = At · p · A
+    y = jnp.einsum("ma,kb,noyxab->noyxmk", at, at, p)
+    # scatter tiles back
+    y = y.transpose(0, 1, 2, 4, 3, 5).reshape(n, oc, ty * m, tx * m)
+    return y[:, :, :oh, :ow]

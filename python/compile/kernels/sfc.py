@@ -1,0 +1,99 @@
+"""Layer-1: the SFC transform-domain Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's FPGA
+datapath becomes, on TPU, a per-frequency batched channel-GEMM — exactly
+the MXU's native shape. The SFT transforms themselves are constant ±1/0
+matmuls that XLA lowers to fused adds around the kernel, so the Pallas
+kernel owns the hot spot: for each transform point (u,v) of the T×T grid,
+
+    P[uv] = V[uv] @ U[uv]        # [tiles×IC] @ [IC×OC]
+
+with the grid iterating over frequencies and tile blocks; BlockSpec
+streams the [tiles, IC] activations and [IC, OC] weights HBM→VMEM per
+frequency. interpret=True everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls; real-TPU perf is estimated analytically in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _freq_matmul_kernel(v_ref, u_ref, o_ref):
+    """One (frequency, tile-block) step: o = v @ u."""
+    o_ref[...] = jnp.dot(
+        v_ref[...], u_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_tiles",))
+def freq_matmul(v, u, block_tiles: int = 128):
+    """Per-frequency channel GEMM via Pallas.
+
+    v: [T2, tiles, IC]  transformed input tiles (frequency-major)
+    u: [T2, IC, OC]     transformed weights
+    returns [T2, tiles, OC]
+    """
+    t2, tiles, ic = v.shape
+    _, _, oc = u.shape
+    bt = min(block_tiles, tiles)
+    grid = (t2, -(-tiles // bt))
+    return pl.pallas_call(
+        _freq_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bt, ic), lambda f, t: (f, t, 0)),
+            pl.BlockSpec((None, ic, oc), lambda f, t: (f, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bt, oc), lambda f, t: (f, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((t2, tiles, oc), jnp.float32),
+        interpret=True,
+    )(v, u)
+
+
+def transform_weights(w, algo):
+    """U = G·w·Gᵀ, reshaped frequency-major [T², IC, OC]."""
+    g = jnp.asarray(algo.g, dtype=w.dtype)
+    u = jnp.einsum("ai,bj,ocij->abco", g, g, w)  # [T,T,IC,OC]
+    t = algo.t
+    return u.reshape(t * t, w.shape[1], w.shape[0])
+
+
+def sfc_conv2d(x, w, algo, pad: int = 1, block_tiles: int = 128):
+    """Full tiled SFC convolution with the Pallas hot spot.
+
+    x: [N, IC, H, W] · w: [OC, IC, R, R] → [N, OC, H', W'] (stride 1).
+    """
+    bt_m = jnp.asarray(algo.bt, dtype=x.dtype)
+    at_m = jnp.asarray(algo.at, dtype=x.dtype)
+    n, ic, h, wid = x.shape
+    oc = w.shape[0]
+    m, l, r, t = algo.m, algo.l, algo.r, algo.t
+    oh, ow = h + 2 * pad - r + 1, wid + 2 * pad - r + 1
+    ty, tx = -(-oh // m), -(-ow // m)
+    xp = jnp.pad(
+        x, ((0, 0), (0, 0), (pad, ty * m + l - pad - h), (pad, tx * m + l - pad - wid))
+    )
+    tiles = jnp.stack(
+        [
+            jnp.stack(
+                [xp[:, :, i * m : i * m + l, j * m : j * m + l] for j in range(tx)], axis=2
+            )
+            for i in range(ty)
+        ],
+        axis=2,
+    )  # [n, ic, ty, tx, l, l]
+    # input transform (addition network — fused by XLA)
+    v = jnp.einsum("ai,bj,ncyxij->abnyxc", bt_m, bt_m, tiles)  # [T,T,n,ty,tx,ic]
+    v = v.reshape(t * t, n * ty * tx, ic)
+    u = transform_weights(w, algo)  # [T2, ic, oc]
+    p = freq_matmul(v, u, block_tiles=block_tiles)  # [T2, n·ty·tx, oc]
+    p = p.reshape(t, t, n, ty, tx, oc)
+    y = jnp.einsum("ma,kb,abnyxo->noyxmk", at_m, at_m, p)
+    y = y.transpose(0, 1, 2, 4, 3, 5).reshape(n, oc, ty * m, tx * m)
+    return y[:, :, :oh, :ow]

@@ -1,0 +1,112 @@
+"""Layer-2: the mini-ResNet family in JAX.
+
+The topology, parameter naming and initialization mirror
+`rust/src/nn/model.rs` exactly (stem → 4 stages → GAP → FC, widths
+16/32/64/128, basic blocks for 18/34 and 2×-expansion bottlenecks for 50)
+so that weights exported by `train.py` load directly into the Rust
+engine. No batch norm — biases only (DESIGN.md §2).
+
+`forward` takes a `conv_impl` so the same graph runs with XLA's native
+convolution (training, the `direct` AOT artifact) or the Pallas SFC
+kernel (the `sfc` artifact that proves L1⊂L2⊂L3 composition).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.ref import conv2d_ref
+
+CONFIGS = {
+    "resnet18": dict(stages=[2, 2, 2, 2], widths=[16, 32, 64, 128], bottleneck=False),
+    "resnet34": dict(stages=[3, 4, 6, 3], widths=[16, 32, 64, 128], bottleneck=False),
+    "resnet50": dict(stages=[3, 4, 6, 3], widths=[16, 32, 64, 128], bottleneck=True),
+}
+
+
+def init_params(name: str, key, classes: int = 10) -> dict:
+    cfg = CONFIGS[name]
+    params = {}
+
+    def conv(pname, oc, ic, r, key):
+        k1, key = jax.random.split(key)
+        fan_in = ic * r * r
+        params[f"{pname}.w"] = jax.random.normal(k1, (oc, ic, r, r), jnp.float32) * np.sqrt(
+            2.0 / fan_in
+        )
+        params[f"{pname}.b"] = jnp.zeros((oc,), jnp.float32)
+        return key
+
+    key = conv("stem", cfg["widths"][0], 3, 3, key)
+    # Fixup-style residual scaling: without batch norm, deep residual
+    # stacks explode at init unless each block's final conv is downscaled
+    # by ~L^(-1/2) (Zhang et al., 2019). Keeps resnet34/50 trainable.
+    n_blocks = sum(cfg["stages"])
+    fixup = n_blocks ** -0.5
+    prev_c = cfg["widths"][0]
+    for si, (blocks, width) in enumerate(zip(cfg["stages"], cfg["widths"])):
+        for bi in range(blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            p = f"s{si}b{bi}"
+            if not cfg["bottleneck"]:
+                key = conv(f"{p}.conv1", width, prev_c, 3, key)
+                key = conv(f"{p}.conv2", width, width, 3, key)
+                params[f"{p}.conv2.w"] = params[f"{p}.conv2.w"] * fixup
+                if stride != 1 or prev_c != width:
+                    key = conv(f"{p}.proj", width, prev_c, 1, key)
+                prev_c = width
+            else:
+                out_c = width * 2
+                key = conv(f"{p}.conv1", width, prev_c, 1, key)
+                key = conv(f"{p}.conv2", width, width, 3, key)
+                key = conv(f"{p}.conv3", out_c, width, 1, key)
+                params[f"{p}.conv3.w"] = params[f"{p}.conv3.w"] * fixup
+                if stride != 1 or prev_c != out_c:
+                    key = conv(f"{p}.proj", out_c, prev_c, 1, key)
+                prev_c = out_c
+    feat = cfg["widths"][3] * (2 if cfg["bottleneck"] else 1)
+    k1, key = jax.random.split(key)
+    params["fc.w"] = jax.random.normal(k1, (classes, feat), jnp.float32) * np.sqrt(1.0 / feat)
+    params["fc.b"] = jnp.zeros((classes,), jnp.float32)
+    return params
+
+
+def forward(params: dict, x, name: str, conv_impl=None):
+    """conv_impl(x, w, pad) is used for 3×3 stride-1 convs (the layers the
+    paper accelerates); strided and 1×1 convs always use XLA's conv."""
+    cfg = CONFIGS[name]
+
+    def conv(pname, x, stride, pad):
+        w = params[f"{pname}.w"]
+        b = params[f"{pname}.b"]
+        r = w.shape[2]
+        if conv_impl is not None and r == 3 and stride == 1:
+            y = conv_impl(x, w, pad)
+        else:
+            y = conv2d_ref(x, w, pad=pad, stride=stride)
+        return y + b[None, :, None, None]
+
+    x = jax.nn.relu(conv("stem", x, 1, 1))
+    prev_c = cfg["widths"][0]
+    for si, (blocks, width) in enumerate(zip(cfg["stages"], cfg["widths"])):
+        for bi in range(blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            p = f"s{si}b{bi}"
+            if not cfg["bottleneck"]:
+                h = jax.nn.relu(conv(f"{p}.conv1", x, stride, 1))
+                h = conv(f"{p}.conv2", h, 1, 1)
+                sc = conv(f"{p}.proj", x, stride, 0) if (stride != 1 or prev_c != width) else x
+                x = jax.nn.relu(h + sc)
+                prev_c = width
+            else:
+                out_c = width * 2
+                h = jax.nn.relu(conv(f"{p}.conv1", x, 1, 0))
+                h = jax.nn.relu(conv(f"{p}.conv2", h, stride, 1))
+                h = conv(f"{p}.conv3", h, 1, 0)
+                sc = conv(f"{p}.proj", x, stride, 0) if (stride != 1 or prev_c != out_c) else x
+                x = jax.nn.relu(h + sc)
+                prev_c = out_c
+    x = jnp.mean(x, axis=(2, 3))  # global average pool
+    return x @ params["fc.w"].T + params["fc.b"]

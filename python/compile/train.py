@@ -1,0 +1,125 @@
+"""Build-time trainer: mini-ResNets on SynthImage, exported as SFCW
+weights for the Rust engine (and reused by aot.py).
+
+Runs once under `make artifacts`; Python never executes at serving time.
+Adam is implemented inline (optax is not in this image).
+
+Usage: python -m compile.train --model resnet18 --steps 400 --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset, model
+
+
+def save_weights(params: dict, path: str) -> None:
+    """SFCW format (see rust/src/nn/weights.rs)."""
+    with open(path, "wb") as f:
+        f.write(b"SFCW")
+        f.write(struct.pack("<I", len(params)))
+        for name in sorted(params):
+            arr = np.asarray(params[name], dtype=np.float32)
+            f.write(struct.pack("<H", len(name)))
+            f.write(name.encode())
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype("<f4").tobytes())
+
+
+def adam_init(params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.zeros(())}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    mhat = {k: m[k] / (1 - b1**t) for k in params}
+    vhat = {k: v[k] / (1 - b2**t) for k in params}
+    new = {k: params[k] - lr * mhat[k] / (jnp.sqrt(vhat[k]) + eps) for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="resnet18", choices=list(model.CONFIGS))
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    out_dir = args.out or args.data_dir
+
+    train = dataset.load(os.path.join(args.data_dir, "dataset_train.bin"))
+    test = dataset.load(os.path.join(args.data_dir, "dataset_test.bin"))
+    print(f"train {train.images.shape}, test {test.images.shape}")
+
+    params = model.init_params(args.model, jax.random.PRNGKey(args.seed))
+
+    def loss_fn(params, x, y):
+        logits = model.forward(params, x, args.model)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+    @jax.jit
+    def step(params, state, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        params, state = adam_step(params, grads, state, lr=args.lr)
+        return params, state, loss
+
+    @jax.jit
+    def eval_logits(params, x):
+        return model.forward(params, x, args.model)
+
+    def accuracy(params, images, labels, bs=200):
+        correct = 0
+        for i in range(0, len(labels), bs):
+            logits = eval_logits(params, jnp.asarray(images[i : i + bs]))
+            correct += int((np.argmax(np.asarray(logits), axis=1) == labels[i : i + bs]).sum())
+        return correct / len(labels)
+
+    rng = np.random.default_rng(args.seed)
+    state = adam_init(params)
+    n = train.images.shape[0]
+    t0 = time.time()
+    loss_log = []
+    for s in range(args.steps):
+        idx = rng.integers(0, n, size=args.batch)
+        x = jnp.asarray(train.images[idx])
+        y = jnp.asarray(train.labels[idx].astype(np.int32))
+        params, state, loss = step(params, state, x, y)
+        loss_log.append(float(loss))
+        if s % 50 == 0 or s == args.steps - 1:
+            print(f"step {s:4d} loss {float(loss):.4f} ({time.time()-t0:.0f}s)", flush=True)
+
+    train_acc = accuracy(params, train.images[:1000], train.labels[:1000])
+    test_acc = accuracy(params, test.images, test.labels)
+    print(f"{args.model}: train acc {train_acc:.4f}, TEST acc {test_acc:.4f}")
+
+    os.makedirs(out_dir, exist_ok=True)
+    wpath = os.path.join(out_dir, f"{args.model}.w32")
+    save_weights(params, wpath)
+    print(f"wrote {wpath}")
+    # loss curve for EXPERIMENTS.md
+    with open(os.path.join(out_dir, f"{args.model}_loss.txt"), "w") as f:
+        f.write(f"# {args.model} steps={args.steps} batch={args.batch} lr={args.lr}\n")
+        f.write(f"# final train_acc={train_acc:.4f} test_acc={test_acc:.4f}\n")
+        for i, l in enumerate(loss_log):
+            f.write(f"{i} {l:.5f}\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""L1 correctness: the Pallas SFC kernel vs the pure-jnp oracle vs XLA's
+own convolution — the CORE correctness signal of the compile path."""
+
+import sys, os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import algos
+from compile.kernels import ref, sfc
+
+ALGO_NAMES = ["sfc-6_7x7_3x3_", "sfc-6_6x6_3x3_", "sfc-4_4x4_3x3_", "wino_4x4_3x3_"]
+
+
+@pytest.fixture(scope="module", params=ALGO_NAMES)
+def algo(request):
+    return algos.load(request.param)
+
+
+def rand(shape, seed, scale=1.0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape), jnp.float32) * scale
+
+
+class TestMatrices:
+    def test_1d_exactness(self, algo):
+        rng = np.random.default_rng(3)
+        x = rng.integers(-8, 9, size=algo.l).astype(np.float64)
+        f = rng.integers(-8, 9, size=algo.r).astype(np.float64)
+        z = algo.at @ ((algo.g @ f) * (algo.bt @ x))
+        want = np.array([(f * x[k : k + algo.r]).sum() for k in range(algo.m)])
+        np.testing.assert_allclose(z, want, atol=1e-9)
+
+    def test_bt_is_addition_network(self, algo):
+        if algo.name.startswith("SFC"):
+            assert np.abs(algo.bt).max() <= 2.0
+            assert np.allclose(algo.bt, np.round(algo.bt))
+
+    def test_shapes(self, algo):
+        assert algo.bt.shape == (algo.t, algo.l)
+        assert algo.g.shape == (algo.t, algo.r)
+        assert algo.at.shape == (algo.m, algo.t)
+        assert algo.l == algo.m + algo.r - 1
+
+
+def tol(algo):
+    # Winograd's ill-conditioned transforms lose more f32 bits (that is
+    # the paper's point); SFC stays near direct-conv accuracy.
+    return 1e-3 if algo.name.startswith("Wino") else 2e-5
+
+
+class TestOracle:
+    def test_sfc_ref_matches_xla_conv(self, algo):
+        x = rand((2, 3, 14, 14), 10)
+        w = rand((4, 3, 3, 3), 11, 0.3)
+        want = ref.conv2d_ref(x, w, pad=1)
+        got = ref.sfc_conv2d_ref(x, w, algo, pad=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol(algo))
+
+    def test_no_padding(self, algo):
+        x = rand((1, 2, 13, 13), 12)
+        w = rand((2, 2, 3, 3), 13, 0.3)
+        want = ref.conv2d_ref(x, w, pad=0)
+        got = ref.sfc_conv2d_ref(x, w, algo, pad=0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol(algo))
+
+
+class TestPallas:
+    def test_kernel_matches_oracle(self, algo):
+        x = rand((2, 4, 14, 14), 20)
+        w = rand((5, 4, 3, 3), 21, 0.3)
+        want = ref.conv2d_ref(x, w, pad=1)
+        got = sfc.sfc_conv2d(x, w, algo, pad=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol(algo))
+
+    def test_freq_matmul_vs_einsum(self):
+        v = rand((9, 17, 8), 30)
+        u = rand((9, 8, 6), 31)
+        got = sfc.freq_matmul(v, u, block_tiles=8)
+        want = ref.freq_matmul_ref(v, u)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        n=st.integers(1, 3),
+        ic=st.integers(1, 6),
+        oc=st.integers(1, 6),
+        hw=st.integers(7, 20),
+        seed=st.integers(0, 2**31),
+    )
+    def test_kernel_shape_sweep(self, n, ic, oc, hw, seed):
+        """Hypothesis sweep over batch/channel/spatial shapes."""
+        algo = algos.sfc_7x7_3x3()
+        x = rand((n, ic, hw, hw), seed)
+        w = rand((oc, ic, 3, 3), seed + 1, 0.3)
+        want = ref.conv2d_ref(x, w, pad=1)
+        got = sfc.sfc_conv2d(x, w, algo, pad=1)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        t2=st.integers(1, 10),
+        tiles=st.integers(1, 40),
+        ic=st.integers(1, 16),
+        oc=st.integers(1, 16),
+        block=st.integers(1, 64),
+        seed=st.integers(0, 2**31),
+    )
+    def test_freq_matmul_block_sweep(self, t2, tiles, ic, oc, block, seed):
+        """The Pallas grid must be correct for every block size, including
+        ragged tile tails."""
+        v = rand((t2, tiles, ic), seed)
+        u = rand((t2, ic, oc), seed + 1)
+        got = sfc.freq_matmul(v, u, block_tiles=block)
+        want = ref.freq_matmul_ref(v, u)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+    def test_dtype_bf16(self):
+        """bf16 inputs run (MXU-native dtype) with loose tolerance."""
+        algo = algos.sfc_7x7_3x3()
+        x = rand((1, 4, 14, 14), 40).astype(jnp.bfloat16)
+        w = rand((4, 4, 3, 3), 41, 0.3).astype(jnp.bfloat16)
+        want = ref.conv2d_ref(x.astype(jnp.float32), w.astype(jnp.float32), pad=1)
+        got = sfc.sfc_conv2d(x.astype(jnp.float32), w.astype(jnp.float32), algo, pad=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-2)

@@ -1,0 +1,68 @@
+"""L2 correctness: model topology, parameter naming parity with the Rust
+engine, and SFC-vs-direct forward agreement."""
+
+import sys, os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import algos, model
+from compile.kernels import sfc as sfc_kernel
+
+
+@pytest.fixture(scope="module")
+def rn18_params():
+    return model.init_params("resnet18", jax.random.PRNGKey(0))
+
+
+def test_forward_shape(rn18_params):
+    x = jnp.zeros((2, 3, 32, 32), jnp.float32)
+    y = model.forward(rn18_params, x, "resnet18")
+    assert y.shape == (2, 10)
+
+
+def test_param_names_match_rust_convention(rn18_params):
+    # stem + s{si}b{bi}.conv{1,2} + projections + fc
+    assert "stem.w" in rn18_params and "stem.b" in rn18_params
+    assert "s0b0.conv1.w" in rn18_params
+    assert "s1b0.proj.w" in rn18_params  # stride-2 stage entry needs projection
+    assert "s0b0.proj.w" not in rn18_params  # same-shape block has none
+    assert "fc.w" in rn18_params
+    # conv count parity with rust: 20 convs for resnet18-mini
+    n_convs = sum(1 for k in rn18_params if k.endswith(".w") and k != "fc.w")
+    assert n_convs == 20
+
+
+def test_resnet50_bottleneck_params():
+    params = model.init_params("resnet50", jax.random.PRNGKey(1))
+    n_convs = sum(1 for k in params if k.endswith(".w") and k != "fc.w")
+    assert n_convs == 53
+    assert params["s0b0.conv3.w"].shape == (32, 16, 1, 1)  # expansion 2
+
+
+def test_sfc_forward_matches_direct(rn18_params):
+    algo = algos.sfc_7x7_3x3()
+    impl = functools.partial(sfc_kernel.sfc_conv2d, algo=algo)
+    x = jnp.asarray(np.random.default_rng(5).standard_normal((1, 3, 32, 32)), jnp.float32)
+    y_direct = model.forward(rn18_params, x, "resnet18")
+    y_sfc = model.forward(
+        rn18_params, x, "resnet18", conv_impl=lambda x, w, pad: impl(x, w, pad=pad)
+    )
+    np.testing.assert_allclose(np.asarray(y_sfc), np.asarray(y_direct), atol=1e-3)
+
+
+def test_weight_round_trip(tmp_path, rn18_params):
+    from compile.aot import load_weights
+    from compile.train import save_weights
+
+    p = tmp_path / "w.w32"
+    save_weights(rn18_params, str(p))
+    back = load_weights(str(p))
+    assert set(back) == set(rn18_params)
+    np.testing.assert_array_equal(np.asarray(back["stem.w"]), np.asarray(rn18_params["stem.w"]))

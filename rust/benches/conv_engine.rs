@@ -1,0 +1,68 @@
+//! Bench: the conv engine hot path — direct vs tiled Winograd vs tiled
+//! SFC, float and transform-domain-quantized (Eq. 17), on ResNet-scale
+//! layer shapes. This is the L3 §Perf workload of EXPERIMENTS.md.
+//! `cargo bench --bench conv_engine`.
+
+use std::sync::Arc;
+
+use sfc::algo::{sfc, winograd};
+use sfc::nn::conv::{conv2d_direct, conv2d_fast, FastConvPlan};
+use sfc::nn::Tensor;
+use sfc::quant::qconv::{collect_act_maxima, Granularity, QConvLayer};
+use sfc::util::timer::bench;
+use sfc::util::Pcg32;
+
+fn rand_tensor(dims: &[usize], rng: &mut Pcg32, sigma: f64) -> Tensor {
+    let mut t = Tensor::zeros(dims);
+    rng.fill_gaussian(&mut t.data, sigma);
+    t
+}
+
+fn main() {
+    let mut rng = Pcg32::seeded(42);
+    // Layer shapes: SynthImage-scale and VGG-scale.
+    let cases = [
+        ("28x28x32->32", [1usize, 32, 28, 28], [32usize, 32, 3, 3]),
+        ("14x14x128->128", [1, 128, 14, 14], [128, 128, 3, 3]),
+        ("56x56x64->64", [1, 64, 56, 56], [64, 64, 3, 3]),
+    ];
+    for (label, xd, wd) in cases {
+        let x = rand_tensor(&xd, &mut rng, 1.0);
+        let w = rand_tensor(&wd, &mut rng, 0.2);
+        let macs = (xd[2] * xd[3] * wd[0] * wd[1] * 9) as f64;
+
+        println!("\n=== layer {label} ({:.1} MMACs) ===", macs / 1e6);
+        let s_direct = bench(&format!("{label} direct"), 2, 5, 0.6, || {
+            conv2d_direct(&x, &w, &[], 1, 1)
+        });
+
+        for (name, algo) in [
+            ("SFC-6(7,3)", sfc(6, 7, 3)),
+            ("SFC-6(6,3)", sfc(6, 6, 3)),
+            ("Wino(4,3)", winograd(4, 3)),
+        ] {
+            let plan = FastConvPlan::new(algo);
+            let s = bench(&format!("{label} {name} f32"), 2, 5, 0.6, || {
+                conv2d_fast(&x, &w, &[], &plan, 1)
+            });
+            println!("    -> {:.2}x vs direct", s_direct.median_s / s.median_s);
+        }
+
+        // quantized SFC path (int8 transform domain)
+        let plan = Arc::new(FastConvPlan::new(sfc(6, 7, 3)));
+        let maxima = collect_act_maxima(&x, &plan, 1);
+        let q = QConvLayer::fast(
+            plan,
+            &w,
+            vec![],
+            1,
+            8,
+            8,
+            Granularity::ChannelFreq,
+            Granularity::Freq,
+            &maxima,
+        );
+        let s = bench(&format!("{label} SFC-6(7,3) int8"), 2, 5, 0.6, || q.forward(&x));
+        println!("    -> {:.2}x vs direct f32", s_direct.median_s / s.median_s);
+    }
+}

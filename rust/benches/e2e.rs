@@ -1,0 +1,56 @@
+//! Bench: end-to-end serving throughput/latency over the PJRT artifacts
+//! (direct vs Pallas-SFC model variants, batch 1 vs 8). Skips gracefully
+//! when `make artifacts` has not been run. `cargo bench --bench e2e`.
+
+use sfc::coordinator::{LatencyStats, Server, ServerConfig};
+use sfc::exp;
+use sfc::runtime::Executor;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let data_dir = "artifacts";
+    if !PathBuf::from(data_dir).join("dataset_test.bin").exists() {
+        println!("(skipping e2e bench: run `make artifacts` first)");
+        return Ok(());
+    }
+    let (images, labels) = exp::load_split(data_dir, "test", 64)?;
+    let sample = 3 * 32 * 32;
+    for variant in ["resnet18", "resnet18_sfc"] {
+        for batch in [1usize, 8] {
+            let hlo = PathBuf::from(format!("{data_dir}/{variant}_b{batch}.hlo.txt"));
+            if !hlo.exists() {
+                println!("(skipping {variant} b{batch}: artifact missing)");
+                continue;
+            }
+            let dims = vec![batch, 3, 32, 32];
+            let hlo2 = hlo.clone();
+            let server = Server::start(
+                move || Executor::load(&hlo2, &dims, 10),
+                ServerConfig { batch_size: batch, queue_depth: 64, batch_timeout_ms: 2 },
+            )?;
+            let n = labels.len();
+            let t0 = std::time::Instant::now();
+            let handles: Vec<_> = (0..n)
+                .map(|i| server.submit(images.data[i * sample..(i + 1) * sample].to_vec()).unwrap())
+                .collect();
+            let mut lats = Vec::new();
+            let mut correct = 0;
+            for (i, h) in handles.into_iter().enumerate() {
+                let r = h.wait()?;
+                lats.push(r.latency_s);
+                correct += (r.argmax == labels[i] as usize) as usize;
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let s = LatencyStats::from_samples(&lats);
+            println!(
+                "{variant:<14} batch {batch}: {:>7.1} img/s · p50 {:>7.2} ms · p95 {:>7.2} ms · acc {:.1}%",
+                n as f64 / wall,
+                s.p50 * 1e3,
+                s.p95 * 1e3,
+                100.0 * correct as f64 / n as f64
+            );
+            server.shutdown();
+        }
+    }
+    Ok(())
+}

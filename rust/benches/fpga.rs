@@ -1,0 +1,32 @@
+//! Bench: regenerate Table 3 (FPGA accelerator comparison) and time the
+//! cycle-level pipeline simulator. `cargo bench --bench fpga`.
+
+use sfc::algo::{sfc, winograd};
+use sfc::fpga::{evaluate, pipeline::simulate, Accel};
+use sfc::nn::model::vgg16_conv_shapes;
+use sfc::util::timer::bench;
+
+fn main() {
+    let shapes = vgg16_conv_shapes();
+    println!("=== Table 3 regeneration (VGG-16 @ 200 MHz, simulated) ===");
+    let rows = [
+        (evaluate(&Accel::from_bilinear("Winograd", &winograd(4, 3), 4, 4, 16), &shapes, "16bit"), 5.64),
+        (evaluate(&Accel::ntt("NTT", 8, 3, 4, 4, 21), &shapes, "8/21bit"), 3.48),
+        (evaluate(&Accel::direct("direct", 7, 3, 4, 4, 8), &shapes, "8bit"), 1.96),
+        (evaluate(&Accel::from_bilinear("SFC", &sfc(6, 7, 3), 4, 4, 8), &shapes, "8bit"), 10.08),
+    ];
+    println!(
+        "{:<10} {:>9} {:>8} {:>7} {:>9} {:>14} {:>8}",
+        "Design", "Precision", "LUTs(K)", "DSPs", "GOPs", "GOPs/DSP/GHz", "(paper)"
+    );
+    for (r, paper) in rows {
+        println!(
+            "{:<10} {:>9} {:>8.0} {:>7} {:>9.0} {:>14.2} {:>8.2}",
+            r.name, r.precision, r.luts_k, r.dsps, r.gops, r.gops_per_dsp_per_clock, paper
+        );
+    }
+
+    println!("\n=== simulator timing ===");
+    let acc = Accel::from_bilinear("SFC", &sfc(6, 7, 3), 4, 4, 8);
+    bench("vgg16_pipeline_sim", 3, 50, 1.0, || simulate(&acc, &shapes));
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate Table 1 (numerical error / κ / complexity) and time
+//! the error-measurement harness. `cargo bench --bench table1`.
+
+use sfc::error::{table1, OdotFormat};
+use sfc::util::timer::bench;
+
+fn main() {
+    println!("=== Table 1 regeneration (fp16 ⊙, 2000 trials) ===");
+    let rows = table1(OdotFormat::Fp16, 2000);
+    println!("{:<20} {:>10} {:>8} {:>12}", "Algorithm", "MSE(rel)", "κ(Aᵀ)", "Complexity");
+    for r in &rows {
+        println!("{:<20} {:>10.2} {:>8.1} {:>11.2}%", r.name, r.mse, r.kappa, r.complexity * 100.0);
+    }
+
+    println!("\n=== Table 1 under int8 ⊙ (the PTQ regime) ===");
+    for r in table1(OdotFormat::Int(8), 1000) {
+        println!("{:<20} {:>10.2}", r.name, r.mse);
+    }
+
+    println!("\n=== harness timing ===");
+    bench("table1_fp16_100trials", 1, 5, 1.0, || table1(OdotFormat::Fp16, 100));
+}

@@ -1,0 +1,347 @@
+//! The bilinear fast-convolution container (G, Bᵀ, Aᵀ) and its appliers.
+//!
+//! Every algorithm in the paper (direct, Winograd/Toom-Cook, SFC) is an
+//! instance of Eq. 1:   y = Aᵀ [(G f Gᵀ) ⊙ (Bᵀ x B)] A   (2-D nested form),
+//! so a single container carries the matrices, operation counts and
+//! appliers, and the error/BOPs/engine layers treat all algorithms
+//! uniformly.
+
+use crate::linalg::{condition_number, Frac, FracMat, Mat};
+
+/// A 1-D bilinear convolution algorithm computing M correlation outputs
+/// z_k = Σ_r f_r·x_{k+r} from L = M+R−1 inputs with T multiplications:
+///   z = Aᵀ ((G f) ⊙ (Bᵀ x)).
+#[derive(Clone, Debug)]
+pub struct Bilinear {
+    pub name: String,
+    /// outputs per tile
+    pub m: usize,
+    /// filter taps
+    pub r: usize,
+    /// multiplications (rows of Bᵀ and G)
+    pub t: usize,
+    /// Bᵀ: T×L (integer for SFC; integer after normalization for Winograd)
+    pub bt: FracMat,
+    /// G: T×R
+    pub g: FracMat,
+    /// Aᵀ: M×T
+    pub at: FracMat,
+    /// For SFC algorithms: (N transform points, T_c circular mults) —
+    /// enables the 2-D Hermitian-symmetry multiplication count of App. A.
+    pub circ_meta: Option<(usize, usize)>,
+    /// The §5 "overlapped output form" square/invertible output transform
+    /// used for condition-number analysis (C for Toom-Cook, the circular
+    /// inverse for SFC). κ(Aᵀ) in Table 1 is computed from this.
+    pub at_ov: Option<FracMat>,
+}
+
+impl Bilinear {
+    pub fn input_len(&self) -> usize {
+        self.bt.cols
+    }
+
+    /// Verify shapes and exactness on random integer data; panics on error.
+    pub fn validate(&self) {
+        assert_eq!(self.bt.rows, self.t);
+        assert_eq!(self.g.rows, self.t);
+        assert_eq!(self.g.cols, self.r);
+        assert_eq!(self.at.rows, self.m);
+        assert_eq!(self.at.cols, self.t);
+        assert_eq!(self.bt.cols, self.m + self.r - 1);
+        let mut rng = crate::util::Pcg32::seeded(0xC0FFEE);
+        for _ in 0..8 {
+            let x: Vec<Frac> = (0..self.input_len()).map(|_| Frac::int(rng.below(17) as i128 - 8)).collect();
+            let f: Vec<Frac> = (0..self.r).map(|_| Frac::int(rng.below(17) as i128 - 8)).collect();
+            let got = self.apply1d_exact(&x, &f);
+            let want = direct_corr1d_exact(&x, &f);
+            assert_eq!(got, want, "{}: exact 1-D check failed", self.name);
+        }
+    }
+
+    /// Exact 1-D application (used by tests and the constructor checks).
+    pub fn apply1d_exact(&self, x: &[Frac], f: &[Frac]) -> Vec<Frac> {
+        let tx = self.bt.matvec(x);
+        let tf = self.g.matvec(f);
+        let prod: Vec<Frac> = tx.iter().zip(&tf).map(|(a, b)| *a * *b).collect();
+        self.at.matvec(&prod)
+    }
+
+    /// f64 1-D application.
+    pub fn apply1d_f64(&self, x: &[f64], f: &[f64]) -> Vec<f64> {
+        let bt = self.bt.to_f64();
+        let g = self.g.to_f64();
+        let at = self.at.to_f64();
+        let tx = bt.matvec(x);
+        let tf = g.matvec(f);
+        let prod: Vec<f64> = tx.iter().zip(&tf).map(|(a, b)| a * b).collect();
+        at.matvec(&prod)
+    }
+
+    /// 2-D nested application on an L×L input tile and R×R filter,
+    /// producing an M×M output tile: y = Aᵀ[(G f Gᵀ) ⊙ (Bᵀ x B)]A.
+    /// Optional hooks quantize the two transform-domain operands (used by
+    /// the Table-1 / Fig-5 error harness).
+    pub fn apply2d_with(
+        &self,
+        x: &Mat,
+        f: &Mat,
+        qx: &dyn Fn(f64) -> f64,
+        qf: &dyn Fn(f64) -> f64,
+    ) -> Mat {
+        assert_eq!(x.rows, self.input_len());
+        assert_eq!(x.cols, self.input_len());
+        assert_eq!(f.rows, self.r);
+        assert_eq!(f.cols, self.r);
+        let bt = self.bt.to_f64();
+        let g = self.g.to_f64();
+        let at = self.at.to_f64();
+        // Bᵀ x B  and  G f Gᵀ
+        let mut tx = bt.matmul(x).matmul(&bt.transpose());
+        let mut tf = g.matmul(f).matmul(&g.transpose());
+        for v in tx.data.iter_mut() {
+            *v = qx(*v);
+        }
+        for v in tf.data.iter_mut() {
+            *v = qf(*v);
+        }
+        let mut prod = Mat::zeros(self.t, self.t);
+        for i in 0..self.t * self.t {
+            prod.data[i] = tx.data[i] * tf.data[i];
+        }
+        at.matmul(&prod).matmul(&at.transpose())
+    }
+
+    pub fn apply2d_f64(&self, x: &Mat, f: &Mat) -> Mat {
+        self.apply2d_with(x, f, &|v| v, &|v| v)
+    }
+
+    /// Real multiplications for one 2-D tile in the nested (executed) form.
+    pub fn mults_2d(&self) -> usize {
+        self.t * self.t
+    }
+
+    /// 2-D multiplications when Hermitian symmetry is fully exploited
+    /// (Appendix A's second numbers: 46/88/132/184). The nested scheme
+    /// spends T_c² mults on the circular core, while the true 2-D real
+    /// spectrum needs only 4 + 3(N²−4)/2 (4 real bins at m∈{0,N/2}², the
+    /// rest in conjugate pairs at 3 real mults each).
+    pub fn mults_2d_hermitian(&self) -> usize {
+        match self.circ_meta {
+            Some((n, t_c)) => {
+                let opt_core = 4 + 3 * (n * n - 4) / 2;
+                self.t * self.t - (t_c * t_c - opt_core)
+            }
+            None => self.t * self.t,
+        }
+    }
+
+    /// Arithmetic-complexity ratio versus direct convolution (2-D) —
+    /// Table 1's "Arithmetic Complexity" column (Hermitian-optimized).
+    pub fn complexity_2d(&self) -> f64 {
+        self.mults_2d_hermitian() as f64 / ((self.m * self.m * self.r * self.r) as f64)
+    }
+
+    /// Multiplication reduction factor (the paper quotes 2.25× for
+    /// Winograd F(2,3), 3.68× for SFC-6(6,3) incl. transform overhead).
+    pub fn speedup_2d(&self) -> f64 {
+        1.0 / self.complexity_2d()
+    }
+
+    /// Addition counts for the three 2-D transforms (input, filter,
+    /// output), counting row-wise then column-wise application.
+    pub fn transform_adds_2d(&self) -> (usize, usize, usize) {
+        let l = self.input_len();
+        let bt_adds = self.bt.add_count() * (l + self.t);
+        let g_adds = self.g.add_count() * (self.r + self.t);
+        let at_adds = self.at.add_count() * (self.t + self.m);
+        (bt_adds, g_adds, at_adds)
+    }
+
+    /// κ(Aᵀ) — the error amplification factor of §5 (Table 1 column),
+    /// computed on the overlapped square output form when available
+    /// (the paper's Eq. 12–16 derivation requires an invertible A).
+    pub fn kappa_at(&self) -> f64 {
+        match &self.at_ov {
+            Some(m) => condition_number(&m.to_f64()),
+            None => condition_number(&self.at.to_f64()),
+        }
+    }
+
+    /// κ of the tile-form Aᵀ (σ_max/σ_min of the rectangular M×T matrix).
+    pub fn kappa_at_tile(&self) -> f64 {
+        condition_number(&self.at.to_f64())
+    }
+
+    /// Move fractional content of Bᵀ rows into G rows (bilinear-invariant
+    /// diagonal rescaling) so Bᵀ becomes integral — the standard Winograd
+    /// presentation, and what integer hardware implements.
+    pub fn normalize_bt_integral(mut self) -> Self {
+        for t in 0..self.t {
+            // lcm of denominators in Bᵀ row t
+            let mut lcm: i128 = 1;
+            for j in 0..self.bt.cols {
+                let d = self.bt[(t, j)].den;
+                let g = gcd(lcm, d);
+                lcm = lcm / g * d;
+            }
+            if lcm != 1 {
+                let s = Frac::int(lcm);
+                for j in 0..self.bt.cols {
+                    self.bt[(t, j)] = self.bt[(t, j)] * s;
+                }
+                let inv = s.recip();
+                for j in 0..self.g.cols {
+                    self.g[(t, j)] = self.g[(t, j)] * inv;
+                }
+            }
+        }
+        self
+    }
+
+    /// Balance the dynamic range between Bᵀ and G by the bilinear-invariant
+    /// per-row rescaling α_t = √(‖g_t‖/‖b_t‖): both transformed operands
+    /// then live at comparable magnitudes. This is what practical float
+    /// Winograd implementations do and what Table 1's fp16 measurement
+    /// assumes (without it the α=8 interpolation rows overflow fp16).
+    /// Matrices become non-integral; the integer engine keeps the
+    /// `normalize_bt_integral` form instead.
+    pub fn balanced(&self) -> Self {
+        let mut out = self.clone();
+        for t in 0..self.t {
+            let bnorm: f64 = (0..self.bt.cols)
+                .map(|j| self.bt[(t, j)].to_f64().powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let gnorm: f64 =
+                (0..self.g.cols).map(|j| self.g[(t, j)].to_f64().powi(2)).sum::<f64>().sqrt();
+            if bnorm == 0.0 || gnorm == 0.0 {
+                continue;
+            }
+            // rational approximation of α keeps exactness of the identity
+            let alpha = (gnorm / bnorm).sqrt();
+            let frac = Frac::new((alpha * 4096.0).round() as i128, 4096);
+            if frac.is_zero() {
+                continue;
+            }
+            for j in 0..out.bt.cols {
+                out.bt[(t, j)] = out.bt[(t, j)] * frac;
+            }
+            let inv = frac.recip();
+            for j in 0..out.g.cols {
+                out.g[(t, j)] = out.g[(t, j)] * inv;
+            }
+        }
+        out
+    }
+
+    /// The direct algorithm viewed as a (trivial) bilinear algorithm with
+    /// M = 1: Bᵀ = I_R, G = I_R, Aᵀ = 1ᵀ (paper Eq. 12). Baseline row of
+    /// Table 1.
+    pub fn direct(r: usize) -> Bilinear {
+        Bilinear {
+            name: "direct".into(),
+            m: 1,
+            r,
+            t: r,
+            bt: FracMat::identity(r),
+            g: FracMat::identity(r),
+            at: FracMat { rows: 1, cols: r, data: vec![Frac::ONE; r] },
+            circ_meta: None,
+            // Eq. 12: the overlapped direct form has A = I (κ = 1).
+            at_ov: Some(FracMat::identity(r)),
+        }
+    }
+}
+
+fn gcd(a: i128, b: i128) -> i128 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a.max(1)
+}
+
+/// Exact 1-D "valid" correlation: z_k = Σ_r f_r x_{k+r}.
+pub fn direct_corr1d_exact(x: &[Frac], f: &[Frac]) -> Vec<Frac> {
+    let m = x.len() + 1 - f.len();
+    (0..m)
+        .map(|k| {
+            let mut acc = Frac::ZERO;
+            for (r, fv) in f.iter().enumerate() {
+                acc += *fv * x[k + r];
+            }
+            acc
+        })
+        .collect()
+}
+
+/// f64 1-D "valid" correlation.
+pub fn direct_conv1d(x: &[f64], f: &[f64]) -> Vec<f64> {
+    let m = x.len() + 1 - f.len();
+    (0..m)
+        .map(|k| f.iter().enumerate().map(|(r, fv)| fv * x[k + r]).sum())
+        .collect()
+}
+
+/// f64 2-D "valid" correlation on Mats: y[p][q] = Σ f[i][j]·x[p+i][q+j].
+pub fn direct_conv2d(x: &Mat, f: &Mat) -> Mat {
+    let m_rows = x.rows + 1 - f.rows;
+    let m_cols = x.cols + 1 - f.cols;
+    let mut y = Mat::zeros(m_rows, m_cols);
+    for p in 0..m_rows {
+        for q in 0..m_cols {
+            let mut acc = 0.0;
+            for i in 0..f.rows {
+                for j in 0..f.cols {
+                    acc += f[(i, j)] * x[(p + i, q + j)];
+                }
+            }
+            y[(p, q)] = acc;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direct_bilinear_is_exact() {
+        let d = Bilinear::direct(3);
+        d.validate();
+        assert_eq!(d.mults_2d(), 9);
+        assert!((d.complexity_2d() - 1.0).abs() < 1e-12);
+        assert!((d.kappa_at() - 1.0).abs() < 1e-9, "direct conv Aᵀ is perfectly conditioned");
+    }
+
+    #[test]
+    fn conv1d_reference() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let f = [1.0, -1.0];
+        assert_eq!(direct_conv1d(&x, &f), vec![-1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn conv2d_reference() {
+        let x = Mat::from_vec(3, 3, vec![1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+        let f = Mat::from_vec(2, 2, vec![1., 0., 0., 1.]);
+        let y = direct_conv2d(&x, &f);
+        assert_eq!(y.data, vec![6., 8., 12., 14.]);
+    }
+
+    #[test]
+    fn direct_2d_apply_matches_naive() {
+        // The trivial bilinear applied per-tile must equal naive conv for
+        // M=1: a 3x3 filter on a 3x3 tile -> 1 output.
+        let d = Bilinear::direct(3);
+        let mut rng = crate::util::Pcg32::seeded(5);
+        let x = Mat::from_vec(3, 3, (0..9).map(|_| rng.next_gaussian()).collect());
+        let f = Mat::from_vec(3, 3, (0..9).map(|_| rng.next_gaussian()).collect());
+        let y = d.apply2d_f64(&x, &f);
+        let want = direct_conv2d(&x, &f);
+        assert!((y[(0, 0)] - want[(0, 0)]).abs() < 1e-12);
+    }
+}

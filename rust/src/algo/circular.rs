@@ -1,0 +1,122 @@
+//! Bilinear circular convolution over the symbolic component space.
+//!
+//! Composing the SFT pieces of [`super::dft`] gives a bilinear algorithm
+//! for N-point circular convolution of real sequences:
+//!
+//!   c = Ac · ((Gc·f̂) ⊙ (Bc·x)),   Bc = E·F_N,  Gc = E·F_N,  Ac = iF_N·Cmb
+//!
+//! with T_c real multiplications (8 for N=6, 5 for N=4) — the engine room
+//! of every SFC algorithm. `f̂` is the filter circularly aliased (and, for
+//! the linear-convolution use in [`super::correction`], pre-flipped).
+
+use super::dft::SymDft;
+use crate::linalg::{Frac, FracMat};
+
+/// Bilinear algorithm for N-point circular convolution
+/// c_j = Σ_r f̂_r · x_{(j−r) mod N}.
+#[derive(Clone, Debug)]
+pub struct CircularConv {
+    pub n: usize,
+    /// multiplications
+    pub t_c: usize,
+    /// Bc: T_c×N (integer)
+    pub bc: FracMat,
+    /// Gc: T_c×N (integer) — applied to the already-aliased filter f̂
+    pub gc: FracMat,
+    /// Ac: N×T_c (entries with denominator N)
+    pub ac: FracMat,
+}
+
+impl CircularConv {
+    pub fn new(n: usize) -> CircularConv {
+        let dft = SymDft::new(n);
+        let f = dft.f_mat();
+        let e = dft.expand_mat();
+        let bc = e.matmul(&f);
+        let gc = bc.clone();
+        let ac = dft.if_mat().matmul(&dft.combine_mat());
+        CircularConv { n, t_c: dft.t_mults, bc, gc, ac }
+    }
+
+    /// Exact circular convolution through the bilinear algorithm.
+    pub fn apply_exact(&self, x: &[Frac], f_hat: &[Frac]) -> Vec<Frac> {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(f_hat.len(), self.n);
+        let tx = self.bc.matvec(x);
+        let tf = self.gc.matvec(f_hat);
+        let prod: Vec<Frac> = tx.iter().zip(&tf).map(|(a, b)| *a * *b).collect();
+        self.ac.matvec(&prod)
+    }
+}
+
+/// Naive exact circular convolution (reference).
+pub fn circular_conv_exact(x: &[Frac], f: &[Frac]) -> Vec<Frac> {
+    let n = x.len();
+    assert_eq!(f.len(), n);
+    (0..n)
+        .map(|j| {
+            let mut acc = Frac::ZERO;
+            for r in 0..n {
+                let idx = (j + n - r) % n;
+                acc += f[r] * x[idx];
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn rand_vec(rng: &mut Pcg32, n: usize) -> Vec<Frac> {
+        (0..n).map(|_| Frac::int(rng.below(21) as i128 - 10)).collect()
+    }
+
+    #[test]
+    fn matches_naive_circular() {
+        for n in [2usize, 3, 4, 6] {
+            let cc = CircularConv::new(n);
+            let mut rng = Pcg32::seeded(42 + n as u64);
+            for _ in 0..20 {
+                let x = rand_vec(&mut rng, n);
+                let f = rand_vec(&mut rng, n);
+                assert_eq!(cc.apply_exact(&x, &f), circular_conv_exact(&x, &f), "N={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn mult_counts() {
+        assert_eq!(CircularConv::new(6).t_c, 8);
+        assert_eq!(CircularConv::new(4).t_c, 5);
+        assert_eq!(CircularConv::new(3).t_c, 4);
+    }
+
+    #[test]
+    fn transforms_are_integral() {
+        for n in [3usize, 4, 6] {
+            let cc = CircularConv::new(n);
+            assert!(cc.bc.is_integral(), "Bc must be an addition network");
+            assert!(cc.gc.is_integral(), "Gc must be an addition network");
+            // Ac denominators divide N (1/N folded into the inverse DFT).
+            for v in &cc.ac.data {
+                assert!(n as i128 % v.den == 0, "N={n}: {v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn bc_entries_are_pm1() {
+        // At the paper's chosen point counts (N = 4 and 6) the expanded
+        // input transform keeps every entry in {-1,0,1}: implementable with
+        // additions only (§4.1 — "6 and 4 are suitable choices").
+        for n in [4usize, 6] {
+            let cc = CircularConv::new(n);
+            for v in &cc.bc.data {
+                assert!(v.num.abs() <= 1 && v.den == 1, "N={n}: {v:?}");
+            }
+        }
+    }
+}

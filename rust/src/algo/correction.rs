@@ -1,0 +1,336 @@
+//! §4.2 — converting circular outputs into linear ones with correction
+//! terms, and extending the tile size M beyond N−R+1 (Fig. 2).
+//!
+//! The constructor slides an N-point window (offset `o`) over the
+//! L = M+R−1 input tile and computes the N-point circular convolution with
+//! the symbolic-DFT bilinear algorithm of [`super::circular`]. Each desired
+//! linear output z_k = Σ_r f_r·x_{k+r} is then expressed as
+//!
+//!   z_k = c_{j(k)} + Σ corrections,   correction = f_r · (Σ_i ±x_i)
+//!
+//! where each correction costs exactly one extra multiplication (one MAC,
+//! as in the paper's o₁ = o₁ᶜ + (a₀−a₆)·w₁ example). Corrections shared by
+//! several outputs are computed once. The window offset is searched to
+//! minimize the total multiplication count T = T_c + #corrections; the
+//! paper's counts are recovered exactly:
+//!
+//!   SFC-4(4,3): T = 7  (49 2-D),   SFC-6(6,3): T = 10 (100 2-D),
+//!   SFC-6(7,3): T = 12 (144 2-D),  SFC-6(6,5): T = 14 (196 2-D).
+
+use super::bilinear::Bilinear;
+use super::circular::CircularConv;
+use crate::linalg::{Frac, FracMat};
+use std::collections::BTreeMap;
+
+/// A linear form Σ coeff · f_r · x_i, keyed by (filter tap r, input index i).
+type Form = BTreeMap<(usize, usize), i64>;
+
+/// z_k = Σ_r f_r x_{k+r}
+fn desired_form(k: usize, r_taps: usize) -> Form {
+    (0..r_taps).map(|r| ((r, k + r), 1i64)).collect()
+}
+
+/// The j-th circular-convolution output of the window starting at offset
+/// `o`, expressed over the original filter taps and input indices:
+/// c_j = Σ_t f_t · x_{o + ((j − R + 1 + t) mod N)}.
+/// (The circular algorithm is fed the flipped filter, which turns circular
+/// convolution into windowed correlation — see `build` below.)
+fn circ_form(j: usize, o: usize, n: usize, r_taps: usize) -> Form {
+    let mut form = Form::new();
+    for t in 0..r_taps {
+        let idx = (j as i64 - r_taps as i64 + 1 + t as i64).rem_euclid(n as i64) as usize;
+        *form.entry((t, o + idx)).or_insert(0) += 1;
+    }
+    form.retain(|_, v| *v != 0);
+    form
+}
+
+fn form_sub(a: &Form, b: &Form) -> Form {
+    let mut out = a.clone();
+    for (k, v) in b {
+        *out.entry(*k).or_insert(0) -= v;
+    }
+    out.retain(|_, v| *v != 0);
+    out
+}
+
+/// Split a difference form into per-tap corrections: one multiplication
+/// f_r · (Σ_i coeff·x_i) per distinct tap r present in the difference.
+fn split_corrections(diff: &Form) -> Vec<(usize, Vec<(usize, i64)>)> {
+    let mut by_tap: BTreeMap<usize, Vec<(usize, i64)>> = BTreeMap::new();
+    for (&(r, i), &c) in diff {
+        by_tap.entry(r).or_default().push((i, c));
+    }
+    by_tap.into_iter().collect()
+}
+
+/// Canonical key for a correction term so identical terms are shared
+/// across outputs: sign-normalized (first coefficient positive).
+fn canon(r: usize, xs: &[(usize, i64)]) -> ((usize, Vec<(usize, i64)>), i64) {
+    let sign = if xs[0].1 < 0 { -1 } else { 1 };
+    let norm: Vec<(usize, i64)> = xs.iter().map(|&(i, c)| (i, c * sign)).collect();
+    ((r, norm), sign as i64)
+}
+
+/// Plan for one output: which circular output it reuses (or none for a
+/// fully-direct output) plus its correction terms.
+#[derive(Debug, Clone)]
+struct OutputPlan {
+    circ_j: Option<usize>,
+    /// (correction pool index, sign)
+    corrections: Vec<(usize, i64)>,
+}
+
+/// Construct the SFC-N(M×M, R×R) algorithm (1-D triple; 2-D use is nested).
+///
+/// Panics if the input tile is shorter than the transform (M+R−1 ≥ N is
+/// required; all variants in the paper satisfy it).
+pub fn sfc(n: usize, m: usize, r_taps: usize) -> Bilinear {
+    let l = m + r_taps - 1;
+    assert!(l >= n, "SFC-{n}({m},{r_taps}): input tile {l} shorter than transform {n}");
+    let cc = CircularConv::new(n);
+
+    // Search window offsets for the fewest total corrections.
+    let mut best: Option<(usize, Vec<OutputPlan>, Vec<(usize, Vec<(usize, i64)>)>)> = None;
+    for o in 0..=(l - n) {
+        let circ: Vec<Form> = (0..n).map(|j| circ_form(j, o, n, r_taps)).collect();
+        let mut pool: Vec<(usize, Vec<(usize, i64)>)> = Vec::new();
+        let mut pool_idx: BTreeMap<(usize, Vec<(usize, i64)>), usize> = BTreeMap::new();
+        let mut plans = Vec::with_capacity(m);
+        for k in 0..m {
+            let want = desired_form(k, r_taps);
+            // Candidates: every circular output, and "no circular" (direct).
+            let mut best_j: Option<usize> = None;
+            let mut best_corr: Vec<(usize, Vec<(usize, i64)>)> = split_corrections(&want);
+            let mut best_new = usize::MAX;
+            for (j, c) in circ.iter().enumerate() {
+                let corr = split_corrections(&form_sub(&want, c));
+                let new_cost = corr
+                    .iter()
+                    .filter(|(r, xs)| {
+                        let (key, _) = canon(*r, xs);
+                        !pool_idx.contains_key(&key)
+                    })
+                    .count();
+                let better = new_cost < best_new
+                    || (new_cost == best_new && corr.len() < best_corr.len());
+                if better {
+                    best_new = new_cost;
+                    best_j = Some(j);
+                    best_corr = corr;
+                }
+            }
+            // Compare against computing the output directly (R new mults,
+            // minus whatever the pool already shares).
+            let direct_corr = split_corrections(&want);
+            let direct_new = direct_corr
+                .iter()
+                .filter(|(r, xs)| !pool_idx.contains_key(&canon(*r, xs).0))
+                .count();
+            if direct_new < best_new {
+                best_j = None;
+                best_corr = direct_corr;
+            }
+            let mut refs = Vec::new();
+            for (r, xs) in best_corr {
+                let (key, sign) = canon(r, &xs);
+                let idx = *pool_idx.entry(key.clone()).or_insert_with(|| {
+                    pool.push(key.clone());
+                    pool.len() - 1
+                });
+                refs.push((idx, sign));
+            }
+            plans.push(OutputPlan { circ_j: best_j, corrections: refs });
+        }
+        // Keep the offset with the fewest correction multiplications.
+        let improves = match &best {
+            Some((_, _, bpool)) => pool.len() < bpool.len(),
+            None => true,
+        };
+        if improves {
+            best = Some((o, plans, pool));
+        }
+    }
+    let (o, plans, pool) = best.unwrap();
+    let t = cc.t_c + pool.len();
+
+    // --- Assemble Bᵀ (T×L) ---
+    let mut bt = FracMat::zeros(t, l);
+    // circular rows: Bc · window-selection
+    for row in 0..cc.t_c {
+        for i in 0..n {
+            bt[(row, o + i)] = cc.bc[(row, i)];
+        }
+    }
+    for (ci, (_r, xs)) in pool.iter().enumerate() {
+        for &(i, c) in xs {
+            bt[(cc.t_c + ci, i)] = Frac::int(c as i128);
+        }
+    }
+
+    // --- Assemble G (T×R) ---
+    // The circular algorithm computes c_j = Σ f̂_t x_{(j−t) mod N} for the
+    // aliased filter f̂; to realize windowed correlation we feed the
+    // flipped-and-aliased filter: f̂_i = Σ_{t : (R−1−t) ≡ i (mod N)} f_t.
+    let mut pg = FracMat::zeros(n, r_taps);
+    for tap in 0..r_taps {
+        let i = (r_taps - 1 - tap) % n;
+        pg[(i, tap)] += Frac::ONE;
+    }
+    let gc_full = cc.gc.matmul(&pg);
+    let mut g = FracMat::zeros(t, r_taps);
+    for row in 0..cc.t_c {
+        for tap in 0..r_taps {
+            g[(row, tap)] = gc_full[(row, tap)];
+        }
+    }
+    for (ci, (r, _xs)) in pool.iter().enumerate() {
+        g[(cc.t_c + ci, *r)] = Frac::ONE;
+    }
+
+    // --- Assemble Aᵀ (M×T) ---
+    let mut at = FracMat::zeros(m, t);
+    for (k, plan) in plans.iter().enumerate() {
+        if let Some(j) = plan.circ_j {
+            for col in 0..cc.t_c {
+                at[(k, col)] = cc.ac[(j, col)];
+            }
+        }
+        for &(ci, sign) in &plan.corrections {
+            at[(k, cc.t_c + ci)] += Frac::int(sign as i128);
+        }
+    }
+
+    // §5 overlapped output form for condition-number analysis: the N
+    // circular outputs from the (well-conditioned) inverse SFT, augmented
+    // with the correction columns (each a ±1 bump on the circular output
+    // row it corrects).
+    let mut at_ov = FracMat::zeros(n, t);
+    for j in 0..n {
+        for col in 0..cc.t_c {
+            at_ov[(j, col)] = cc.ac[(j, col)];
+        }
+    }
+    for (k, plan) in plans.iter().enumerate() {
+        if let Some(j) = plan.circ_j {
+            for &(ci, sign) in &plan.corrections {
+                at_ov[(j, cc.t_c + ci)] = Frac::int(sign as i128);
+            }
+        }
+        let _ = k;
+    }
+
+    let algo = Bilinear {
+        name: format!("SFC-{n}({m}x{m},{r_taps}x{r_taps})"),
+        m,
+        r: r_taps,
+        t,
+        bt,
+        g,
+        at,
+        circ_meta: Some((n, cc.t_c)),
+        at_ov: Some(at_ov),
+    };
+    algo.validate();
+    algo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::bilinear::direct_corr1d_exact;
+    use crate::linalg::Frac;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn paper_multiplication_counts() {
+        // Appendix A: 49/46, 100/88, 144/132, 196/184 2-D multiplications
+        // (nested / Hermitian-symmetry-optimized).
+        let a = sfc(4, 4, 3);
+        assert_eq!((a.mults_2d(), a.mults_2d_hermitian()), (49, 46), "SFC-4(4x4,3x3)");
+        let a = sfc(6, 6, 3);
+        assert_eq!((a.mults_2d(), a.mults_2d_hermitian()), (100, 88), "SFC-6(6x6,3x3)");
+        let a = sfc(6, 7, 3);
+        assert_eq!((a.mults_2d(), a.mults_2d_hermitian()), (144, 132), "SFC-6(7x7,3x3)");
+        let a = sfc(6, 6, 5);
+        assert_eq!((a.mults_2d(), a.mults_2d_hermitian()), (196, 184), "SFC-6(6x6,5x5)");
+    }
+
+    #[test]
+    fn table1_complexities() {
+        // Table 1 "Arithmetic Complexity" column (multiplication ratio).
+        assert!((sfc(4, 4, 3).complexity_2d() - 0.3194).abs() < 0.01);
+        assert!((sfc(6, 6, 3).complexity_2d() - 0.2716).abs() < 0.01);
+        assert!((sfc(6, 7, 3).complexity_2d() - 0.2993).abs() < 0.01);
+        assert!((sfc(6, 6, 5).complexity_2d() - 0.2044).abs() < 0.01);
+    }
+
+    #[test]
+    fn exact_linear_convolution_all_variants() {
+        let variants = [(4, 4, 3), (6, 6, 3), (6, 7, 3), (6, 6, 5), (6, 4, 7), (6, 5, 6), (4, 2, 3), (6, 12, 3)];
+        for (n, m, r) in variants {
+            let a = sfc(n, m, r);
+            let mut rng = Pcg32::seeded(1000 + (n * 100 + m * 10 + r) as u64);
+            for _ in 0..10 {
+                let x: Vec<Frac> = (0..a.input_len()).map(|_| Frac::int(rng.below(31) as i128 - 15)).collect();
+                let f: Vec<Frac> = (0..r).map(|_| Frac::int(rng.below(31) as i128 - 15)).collect();
+                assert_eq!(
+                    a.apply1d_exact(&x, &f),
+                    direct_corr1d_exact(&x, &f),
+                    "SFC-{n}({m},{r})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn transforms_are_addition_networks() {
+        for (n, m, r) in [(4, 4, 3), (6, 6, 3), (6, 7, 3), (6, 6, 5)] {
+            let a = sfc(n, m, r);
+            assert!(a.bt.is_integral(), "Bᵀ integral");
+            assert!(a.g.is_integral(), "G integral");
+            // Bᵀ entries small: pure adds (no shifts needed beyond ±1).
+            for v in &a.bt.data {
+                assert!(v.num.abs() <= 2, "SFC-{n}({m},{r}) Bᵀ entry {v:?}");
+            }
+            // Aᵀ denominators divide N (1/N folds into output scale).
+            for v in &a.at.data {
+                assert!((n as i128) % v.den == 0);
+            }
+        }
+    }
+
+    #[test]
+    fn conditioning_close_to_fourier() {
+        // Table 1: κ(Aᵀ) = 2.7 / 3.3 / 3.4 / 3.5 — far below Winograd's 20+.
+        let k43 = sfc(4, 4, 3).kappa_at();
+        let k63 = sfc(6, 6, 3).kappa_at();
+        let k73 = sfc(6, 7, 3).kappa_at();
+        assert!(k43 < 6.0, "κ SFC-4(4,3) = {k43}");
+        assert!(k63 < 6.0, "κ SFC-6(6,3) = {k63}");
+        assert!(k73 < 6.0, "κ SFC-6(7,3) = {k73}");
+    }
+
+    #[test]
+    fn fig2_correction_structure() {
+        // The Fig. 2 mechanism: for SFC-6(6,3), exactly 2 corrections, each
+        // a single-tap times a two-input difference.
+        let a = sfc(6, 6, 3);
+        let t_c = 8; // circular mults for N=6
+        for row in t_c..a.t {
+            let nnz_g = (0..a.r).filter(|&j| !a.g[(row, j)].is_zero()).count();
+            assert_eq!(nnz_g, 1, "correction row multiplies a single filter tap");
+            let nnz_b = (0..a.bt.cols).filter(|&j| !a.bt[(row, j)].is_zero()).count();
+            assert!(nnz_b <= 2, "correction operand is x_a - x_b");
+        }
+        assert_eq!(a.t - t_c, 2);
+    }
+
+    #[test]
+    fn tile_size_equals_output_requirement() {
+        // SFC-6(7,3) exists specifically so 224-sized feature maps tile by 7.
+        let a = sfc(6, 7, 3);
+        assert_eq!(a.m, 7);
+        assert_eq!(a.input_len(), 9);
+    }
+}

@@ -1,0 +1,349 @@
+//! Symbolic DFT: component transforms, exact inverses and the 3-mult
+//! degree-1 polynomial product (paper §4.1, Eq. 6–10).
+//!
+//! A real length-N sequence x has DFT values X_m = Σ_n ω^{mn} x_n with
+//! ω = e^{-2πj/N} = conj(s). In the ring ℚ[s]/(s²−c₁s−c₀) each X_m is a
+//! first-order polynomial u_m + v_m·s whose *components* u_m, v_m are
+//! integer ±1/0 combinations of the inputs. Hermitian symmetry
+//! (X_{N−m} = conj(X_m)) halves the stored components:
+//!
+//!   m = 0 or N/2            -> one real component
+//!   0 < m < N/2             -> a (u_m, v_m) pair
+//!
+//! The matrix mapping x to the component vector is the paper's SFT matrix
+//! (Eq. 6 for N=6, Eq. 9 for N=4); it contains only −1/0/1.
+
+use super::symbolic::{Rule, Sym};
+use crate::linalg::{Frac, FracMat};
+
+/// Which DFT bin a component row describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Comp {
+    /// X_m is real (m = 0 or m = N/2): one component.
+    Single { m: usize },
+    /// X_m = u + v·s: two components (stored consecutively).
+    Pair { m: usize },
+}
+
+/// Symbolic DFT plan for N points.
+#[derive(Clone, Debug)]
+pub struct SymDft {
+    pub n: usize,
+    pub rule: Rule,
+    pub comps: Vec<Comp>,
+    /// Number of real components (= N for real input).
+    pub n_comps: usize,
+    /// Number of real multiplications for one element-wise product in the
+    /// transform domain: 1 per Single, 3 per Pair (Eq. 8/10).
+    pub t_mults: usize,
+}
+
+impl SymDft {
+    pub fn new(n: usize) -> SymDft {
+        let rule = Rule::for_points(n);
+        let mut comps = Vec::new();
+        let mut n_comps = 0;
+        let mut t_mults = 0;
+        for m in 0..=n / 2 {
+            if (2 * m) % n == 0 {
+                comps.push(Comp::Single { m });
+                n_comps += 1;
+                t_mults += 1;
+            } else {
+                comps.push(Comp::Pair { m });
+                n_comps += 2;
+                t_mults += 3;
+            }
+        }
+        assert_eq!(n_comps, n, "component count must equal N for real input");
+        SymDft { n, rule, comps, n_comps, t_mults }
+    }
+
+    /// ω = e^{-2πj/N} as a ring element (= conj(s)). For N = 2 the root is
+    /// the rational −1 and the symbol is unused.
+    fn omega(&self) -> Sym {
+        if self.n == 2 {
+            Sym::int(self.rule, -1)
+        } else {
+            Sym::s(self.rule).conj()
+        }
+    }
+
+    /// The forward SFT component matrix F_N (N×N, integer ±1/0):
+    /// row layout follows `comps` (u row then v row for pairs).
+    pub fn f_mat(&self) -> FracMat {
+        let mut rows: Vec<Vec<Frac>> = Vec::new();
+        let omega = self.omega();
+        for comp in &self.comps {
+            let m = match comp {
+                Comp::Single { m } | Comp::Pair { m } => *m,
+            };
+            // X_m = sum_n omega^{m n} x_n
+            let mut urow = vec![Frac::ZERO; self.n];
+            let mut vrow = vec![Frac::ZERO; self.n];
+            for n_idx in 0..self.n {
+                let mut w = Sym::one(self.rule);
+                for _ in 0..(m * n_idx) % self.n {
+                    w = w * omega;
+                }
+                // note: omega^{mn} = omega^{(mn) mod N} since omega^N = 1
+                urow[n_idx] = w.a;
+                vrow[n_idx] = w.b;
+            }
+            match comp {
+                Comp::Single { .. } => {
+                    assert!(vrow.iter().all(|f| f.is_zero()), "real bin must have no s part");
+                    rows.push(urow);
+                }
+                Comp::Pair { .. } => {
+                    rows.push(urow);
+                    rows.push(vrow);
+                }
+            }
+        }
+        let cols = self.n;
+        let data: Vec<Frac> = rows.into_iter().flatten().collect();
+        let m = FracMat { rows: data.len() / cols, cols, data };
+        assert!(m.is_integral(), "SFT matrix must be integral");
+        m
+    }
+
+    /// Exact inverse component transform iF_N (N×N, entries k/N): maps the
+    /// component vector back to the sequence (Eq. 7 for N=6).
+    pub fn if_mat(&self) -> FracMat {
+        // y_n = (1/N) Σ_{m=0}^{N-1} ω^{-mn} X_m ; ω^{-1} = s.
+        // Express every X_m over the kept components (Hermitian symmetry),
+        // accumulate ring coefficients, assert the s part cancels.
+        let n = self.n;
+        // column index of each component + how X_m reads in components:
+        // for each m in 0..N: list of (comp_col, ring coefficient)
+        let mut comp_col = Vec::new(); // start column per kept m index
+        let mut col = 0;
+        for c in &self.comps {
+            comp_col.push(col);
+            col += match c {
+                Comp::Single { .. } => 1,
+                Comp::Pair { .. } => 2,
+            };
+        }
+        let kept_index = |m: usize| -> (usize, bool) {
+            // (index into comps, conjugated?)
+            if m <= n / 2 {
+                (m, false)
+            } else {
+                (n - m, true)
+            }
+        };
+        // ω^{-1}: the inverse root (= s, or the rational −1 for N = 2).
+        let omega_inv = if n == 2 { Sym::int(self.rule, -1) } else { Sym::s(self.rule) };
+        let mut out = FracMat::zeros(n, n);
+        for y_idx in 0..n {
+            // coefficient accumulator per component column, as ring elems
+            let mut acc = vec![Sym::zero(self.rule); n];
+            for m in 0..n {
+                // ω^{-mn}
+                let mut w = Sym::one(self.rule);
+                for _ in 0..(m * y_idx) % n {
+                    w = w * omega_inv;
+                }
+                let (ci, conj) = kept_index(m);
+                match self.comps[ci] {
+                    Comp::Single { .. } => {
+                        acc[comp_col[ci]] = acc[comp_col[ci]] + w;
+                    }
+                    Comp::Pair { .. } => {
+                        // X_m = u + v s  (or conj: u + v conj(s))
+                        let s_term = if conj { Sym::s(self.rule).conj() } else { Sym::s(self.rule) };
+                        acc[comp_col[ci]] = acc[comp_col[ci]] + w;
+                        acc[comp_col[ci] + 1] = acc[comp_col[ci] + 1] + w * s_term;
+                    }
+                }
+            }
+            for (c, a) in acc.iter().enumerate() {
+                assert!(a.b.is_zero(), "inverse DFT coefficient must be real, got {a:?}");
+                out[(y_idx, c)] = a.a / Frac::int(n as i128);
+            }
+        }
+        out
+    }
+
+    /// Expansion matrix E (t_mults×N): maps a component vector to the
+    /// multiplication operands. Singles pass through; pairs expand to
+    /// (u, v, u+v) per the 3-mult product (Eq. 8/10 left factors).
+    pub fn expand_mat(&self) -> FracMat {
+        let mut out = FracMat::zeros(self.t_mults, self.n);
+        let mut row = 0;
+        let mut col = 0;
+        for c in &self.comps {
+            match c {
+                Comp::Single { .. } => {
+                    out[(row, col)] = Frac::ONE;
+                    row += 1;
+                    col += 1;
+                }
+                Comp::Pair { .. } => {
+                    out[(row, col)] = Frac::ONE;
+                    out[(row + 1, col + 1)] = Frac::ONE;
+                    out[(row + 2, col)] = Frac::ONE;
+                    out[(row + 2, col + 1)] = Frac::ONE;
+                    row += 3;
+                    col += 2;
+                }
+            }
+        }
+        out
+    }
+
+    /// Combination matrix (N×t_mults): maps the element-wise products back
+    /// to product components. For a pair with products (m0, m1, m2) =
+    /// (u·p, v·q, (u+v)(p+q)) the product components are
+    ///   P_a = m0 + c0·m1,   P_b = m2 − m0 + (c1 − 1)·m1
+    /// (this is Eq. 8 for N=6 where (c0,c1)=(−1,1), Eq. 10 for N=4).
+    pub fn combine_mat(&self) -> FracMat {
+        let c0 = Frac::int(self.rule.c0);
+        let c1 = Frac::int(self.rule.c1);
+        let mut out = FracMat::zeros(self.n_comps, self.t_mults);
+        let mut row = 0;
+        let mut col = 0;
+        for c in &self.comps {
+            match c {
+                Comp::Single { .. } => {
+                    out[(row, col)] = Frac::ONE;
+                    row += 1;
+                    col += 1;
+                }
+                Comp::Pair { .. } => {
+                    out[(row, col)] = Frac::ONE;
+                    out[(row, col + 1)] = c0;
+                    out[(row + 1, col)] = -Frac::ONE;
+                    out[(row + 1, col + 1)] = c1 - Frac::ONE;
+                    out[(row + 1, col + 2)] = Frac::ONE;
+                    row += 2;
+                    col += 3;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Naive complex DFT for cross-checking.
+    fn dft_complex(x: &[f64]) -> Vec<(f64, f64)> {
+        let n = x.len();
+        (0..n)
+            .map(|m| {
+                let mut re = 0.0;
+                let mut im = 0.0;
+                for (k, &v) in x.iter().enumerate() {
+                    let ang = -2.0 * std::f64::consts::PI * (m * k) as f64 / n as f64;
+                    re += v * ang.cos();
+                    im += v * ang.sin();
+                }
+                (re, im)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn f6_matches_paper_eq6() {
+        // The middle matrix of Eq. 6 (the SFT-6 matrix).
+        let expect: [[i128; 6]; 6] = [
+            [1, 1, 1, 1, 1, 1],
+            [1, 1, 0, -1, -1, 0],
+            [0, -1, -1, 0, 1, 1],
+            [1, 0, -1, 1, 0, -1],
+            [0, -1, 1, 0, -1, 1],
+            [1, -1, 1, -1, 1, -1],
+        ];
+        let f = SymDft::new(6).f_mat();
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(f[(i, j)], Frac::int(expect[i][j]), "F6[{i}][{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn f4_matches_paper_eq9() {
+        let expect: [[i128; 4]; 4] = [
+            [1, 1, 1, 1],
+            [1, 0, -1, 0],
+            [0, -1, 0, 1],
+            [1, -1, 1, -1],
+        ];
+        let f = SymDft::new(4).f_mat();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(f[(i, j)], Frac::int(expect[i][j]), "F4[{i}][{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_times_forward_is_identity() {
+        for n in [2usize, 3, 4, 6] {
+            let d = SymDft::new(n);
+            let prod = d.if_mat().matmul(&d.f_mat());
+            assert_eq!(prod, FracMat::identity(n), "iF·F != I for N={n}");
+        }
+    }
+
+    #[test]
+    fn transform_matches_complex_dft() {
+        // Components computed by F_N must equal the (u, v) decomposition of
+        // the complex DFT in the (1, s) basis.
+        for n in [3usize, 4, 6] {
+            let d = SymDft::new(n);
+            let f = d.f_mat().to_f64();
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin() + 0.3).collect();
+            let comps = f.matvec(&x);
+            let spectrum = dft_complex(&x);
+            let mut row = 0;
+            for c in &d.comps {
+                match *c {
+                    Comp::Single { m } => {
+                        assert!((comps[row] - spectrum[m].0).abs() < 1e-9);
+                        assert!(spectrum[m].1.abs() < 1e-9);
+                        row += 1;
+                    }
+                    Comp::Pair { m } => {
+                        let (sr, si) = d.rule.s_complex();
+                        let re = comps[row] + comps[row + 1] * sr;
+                        let im = comps[row + 1] * si;
+                        assert!((re - spectrum[m].0).abs() < 1e-9, "N={n} m={m}");
+                        assert!((im - spectrum[m].1).abs() < 1e-9, "N={n} m={m}");
+                        row += 2;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mult_counts_match_paper() {
+        // §4: DFT-6 circular convolution costs 8 real mults, DFT-4 costs 5.
+        assert_eq!(SymDft::new(6).t_mults, 8);
+        assert_eq!(SymDft::new(4).t_mults, 5);
+        assert_eq!(SymDft::new(3).t_mults, 4);
+        assert_eq!(SymDft::new(2).t_mults, 2);
+    }
+
+    #[test]
+    fn if6_has_sixth_denominators() {
+        // Eq. 7: iF6 is an integer matrix scaled by 1/6 (the paper folds
+        // the 1/6 into the model weights). Our component ordering differs
+        // from Eq. 7's (equivalence is established by iF·F = I), but the
+        // 1/N structure must hold: every denominator divides 6.
+        let ifm = SymDft::new(6).if_mat();
+        for v in &ifm.data {
+            assert!(6 % v.den == 0, "denominator must divide 6: {v:?}");
+        }
+        // and it is exactly the inverse of the addition-only SFT.
+        let d = SymDft::new(6);
+        assert_eq!(d.if_mat().matmul(&d.f_mat()), FracMat::identity(6));
+    }
+}

@@ -1,0 +1,146 @@
+//! Classic floating-point FFT convolution — the related-work baseline the
+//! paper's §3/§4 argues against (irrational twiddle factors, circular-only
+//! outputs, complex arithmetic overhead).
+//!
+//! Radix-2 iterative Cooley–Tukey over f64 complex pairs; linear
+//! convolution via zero-padding to the next power of two. The arithmetic
+//! model (`fft_real_mults`) counts the 1.5-real-mult-per-complex-product
+//! cost the paper quotes after Hermitian symmetry + fast complex multiply.
+
+/// In-place radix-2 DIT FFT. `re`/`im` length must be a power of two.
+/// `inverse` applies the conjugate transform (caller divides by n).
+pub fn fft_inplace(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    assert!(n.is_power_of_two(), "fft length must be a power of two");
+    assert_eq!(im.len(), n);
+    // bit reversal
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cr, mut ci) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ur, ui) = (re[i + k], im[i + k]);
+                let (vr, vi) = (
+                    re[i + k + len / 2] * cr - im[i + k + len / 2] * ci,
+                    re[i + k + len / 2] * ci + im[i + k + len / 2] * cr,
+                );
+                re[i + k] = ur + vr;
+                im[i + k] = ui + vi;
+                re[i + k + len / 2] = ur - vr;
+                im[i + k + len / 2] = ui - vi;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Linear convolution (full) of two real sequences via zero-padded FFT.
+pub fn fft_conv_full(x: &[f64], f: &[f64]) -> Vec<f64> {
+    let out_len = x.len() + f.len() - 1;
+    let n = out_len.next_power_of_two();
+    let mut xr = vec![0.0; n];
+    let mut xi = vec![0.0; n];
+    let mut fr = vec![0.0; n];
+    let mut fi = vec![0.0; n];
+    xr[..x.len()].copy_from_slice(x);
+    fr[..f.len()].copy_from_slice(f);
+    fft_inplace(&mut xr, &mut xi, false);
+    fft_inplace(&mut fr, &mut fi, false);
+    for i in 0..n {
+        let (ar, ai) = (xr[i], xi[i]);
+        xr[i] = ar * fr[i] - ai * fi[i];
+        xi[i] = ar * fi[i] + ai * fr[i];
+    }
+    fft_inplace(&mut xr, &mut xi, true);
+    (0..out_len).map(|i| xr[i] / n as f64).collect()
+}
+
+/// "Valid" correlation via FFT (flip the filter, take the interior).
+pub fn fft_corr_valid(x: &[f64], f: &[f64]) -> Vec<f64> {
+    let flipped: Vec<f64> = f.iter().rev().copied().collect();
+    let full = fft_conv_full(x, &flipped);
+    full[f.len() - 1..x.len()].to_vec()
+}
+
+/// Real multiplications for an N-point real-sequence FFT convolution tile
+/// in the paper's accounting: Hermitian symmetry keeps ~N/2 complex bins
+/// and each complex product costs 3 real mults ("1.5 per complex value").
+pub fn fft_real_mults(n: usize) -> usize {
+    // bins 0 and N/2 are real (1 mult); remaining N/2−1 bins complex (3).
+    2 + 3 * (n / 2 - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::bilinear::direct_conv1d;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn round_trip() {
+        let mut re: Vec<f64> = (0..16).map(|i| (i as f64 * 0.37).sin()).collect();
+        let orig = re.clone();
+        let mut im = vec![0.0; 16];
+        fft_inplace(&mut re, &mut im, false);
+        fft_inplace(&mut re, &mut im, true);
+        for (a, b) in re.iter().zip(&orig) {
+            assert!((a / 16.0 - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn conv_matches_naive() {
+        let mut rng = Pcg32::seeded(77);
+        for (lx, lf) in [(8, 3), (13, 5), (29, 7), (6, 6)] {
+            let x: Vec<f64> = (0..lx).map(|_| rng.next_gaussian()).collect();
+            let f: Vec<f64> = (0..lf).map(|_| rng.next_gaussian()).collect();
+            let got = fft_corr_valid(&x, &f);
+            let want = direct_conv1d(&x, &f);
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-9, "{lx}x{lf}");
+            }
+        }
+    }
+
+    #[test]
+    fn parseval_energy() {
+        let mut rng = Pcg32::seeded(3);
+        let mut re: Vec<f64> = (0..64).map(|_| rng.next_gaussian()).collect();
+        let mut im = vec![0.0; 64];
+        let e_time: f64 = re.iter().map(|v| v * v).sum();
+        fft_inplace(&mut re, &mut im, false);
+        let e_freq: f64 = re.iter().zip(&im).map(|(r, i)| r * r + i * i).sum::<f64>() / 64.0;
+        assert!((e_time - e_freq).abs() < 1e-9 * e_time.max(1.0));
+    }
+
+    #[test]
+    fn mult_model() {
+        // DFT-6-as-FFT costs 8 real mults per tile — identical to the
+        // symbolic form; the difference is the transform arithmetic, not ⊙.
+        assert_eq!(fft_real_mults(6), 8);
+        assert_eq!(fft_real_mults(4), 5);
+        assert_eq!(fft_real_mults(8), 11);
+    }
+}

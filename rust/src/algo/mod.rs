@@ -1,0 +1,39 @@
+//! Fast-convolution algorithm engine.
+//!
+//! Everything the paper's §3–§4 describes is constructed here from first
+//! principles with exact rational arithmetic:
+//!
+//! * [`symbolic`] — the quotient ring ℚ\[s\]/(s² − c₁s − c₀) that lets DFT
+//!   twiddle factors at N ∈ {3, 4, 6} points be first-order
+//!   integer-coefficient polynomials (paper §4.1).
+//! * [`dft`] — symbolic DFT: the SFT component matrices F_N (Eq. 6/9),
+//!   exact inverses iF_N (Eq. 7) and the 3-multiplication degree-1
+//!   polynomial product (Eq. 8/10).
+//! * [`circular`] — the bilinear circular-convolution algorithm over the
+//!   symbolic component space (8 real mults for N=6, 5 for N=4).
+//! * [`correction`] — §4.2: correction terms converting wrapped circular
+//!   outputs into valid linear outputs and extending the tile size M
+//!   (Fig. 2), reproducing the paper's multiplication counts.
+//! * [`toomcook`] — the Winograd / Toom-Cook F(M,R) generator used for all
+//!   baselines.
+//! * [`bilinear`] — the common (G, B, A) bilinear-algorithm container with
+//!   1-D/2-D appliers, operation counts and the direct-conv reference.
+//! * [`fft`] / [`ntt`] — classic float FFT convolution and number-theoretic
+//!   transform convolution baselines (related work, Table 3).
+//! * [`iterative`] — Appendix B: iterative SFC for very large kernels.
+
+pub mod bilinear;
+pub mod circular;
+pub mod correction;
+pub mod dft;
+pub mod fft;
+pub mod iterative;
+pub mod ntt;
+pub mod registry;
+pub mod symbolic;
+pub mod toomcook;
+
+pub use bilinear::{direct_conv1d, direct_conv2d, Bilinear};
+pub use correction::sfc;
+pub use registry::{catalog, AlgoKind, AlgoSpec};
+pub use toomcook::winograd;

@@ -1,0 +1,156 @@
+//! Number-theoretic transform convolution — the second related-work
+//! baseline (§2/§3, Table 3's NTT accelerator column).
+//!
+//! Exact integer circular/linear convolution in F_p with
+//! p = 998244353 = 119·2²³ + 1 (primitive root 3). Demonstrates the
+//! paper's criticism: bit-exact results, but operands in the ⊙ stage carry
+//! full output bit-width (mod-p words), so quantized datapaths gain
+//! nothing from int8 inputs.
+
+pub const P: u64 = 998_244_353;
+pub const PRIMITIVE_ROOT: u64 = 3;
+
+#[inline]
+fn pow_mod(mut base: u64, mut exp: u64, p: u64) -> u64 {
+    let mut acc = 1u64;
+    base %= p;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = acc * base % p;
+        }
+        base = base * base % p;
+        exp >>= 1;
+    }
+    acc
+}
+
+#[inline]
+fn inv_mod(a: u64, p: u64) -> u64 {
+    pow_mod(a, p - 2, p)
+}
+
+/// In-place NTT (length must be a power of two dividing 2^23).
+pub fn ntt_inplace(a: &mut [u64], inverse: bool) {
+    let n = a.len();
+    assert!(n.is_power_of_two() && n <= (1 << 23), "bad NTT length {n}");
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            a.swap(i, j);
+        }
+    }
+    let mut len = 2;
+    while len <= n {
+        let mut w = pow_mod(PRIMITIVE_ROOT, (P - 1) / len as u64, P);
+        if inverse {
+            w = inv_mod(w, P);
+        }
+        let mut i = 0;
+        while i < n {
+            let mut cur = 1u64;
+            for k in 0..len / 2 {
+                let u = a[i + k];
+                let v = a[i + k + len / 2] * cur % P;
+                a[i + k] = (u + v) % P;
+                a[i + k + len / 2] = (u + P - v) % P;
+                cur = cur * w % P;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    if inverse {
+        let ninv = inv_mod(n as u64, P);
+        for v in a.iter_mut() {
+            *v = *v * ninv % P;
+        }
+    }
+}
+
+/// Exact linear convolution (full) of two i64 sequences through the NTT.
+/// Outputs must satisfy |Σ products| < p/2 (true for int8/int16 CNN
+/// workloads); negatives map into F_p symmetrically.
+pub fn ntt_conv_full(x: &[i64], f: &[i64]) -> Vec<i64> {
+    let out_len = x.len() + f.len() - 1;
+    let n = out_len.next_power_of_two();
+    let enc = |v: i64| -> u64 { v.rem_euclid(P as i64) as u64 };
+    let mut a: Vec<u64> = x.iter().map(|&v| enc(v)).chain(std::iter::repeat(0)).take(n).collect();
+    let mut b: Vec<u64> = f.iter().map(|&v| enc(v)).chain(std::iter::repeat(0)).take(n).collect();
+    ntt_inplace(&mut a, false);
+    ntt_inplace(&mut b, false);
+    for i in 0..n {
+        a[i] = a[i] * b[i] % P;
+    }
+    ntt_inplace(&mut a, true);
+    a.truncate(out_len);
+    a.into_iter()
+        .map(|v| if v > P / 2 { v as i64 - P as i64 } else { v as i64 })
+        .collect()
+}
+
+/// "Valid" correlation through the NTT.
+pub fn ntt_corr_valid(x: &[i64], f: &[i64]) -> Vec<i64> {
+    let flipped: Vec<i64> = f.iter().rev().copied().collect();
+    let full = ntt_conv_full(x, &flipped);
+    full[f.len() - 1..x.len()].to_vec()
+}
+
+/// The paper's §3 point: to convolve N-bit inputs the NTT transform-domain
+/// operands carry the full output width (mod-p words ≈ 30 bit here, or
+/// ≥ 2N bits in the minimal-prime setting). Returns the ⊙-operand width.
+pub fn ntt_odot_bits(input_bits: u32, acc_len: usize) -> u32 {
+    let needed = 2 * input_bits + (acc_len as f64).log2().ceil() as u32;
+    needed.max(2 * input_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn ntt_round_trip() {
+        let mut a: Vec<u64> = (0..32).map(|i| (i * 7 + 3) % 97).collect();
+        let orig = a.clone();
+        ntt_inplace(&mut a, false);
+        ntt_inplace(&mut a, true);
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn conv_is_bit_exact() {
+        let mut rng = Pcg32::seeded(123);
+        for (lx, lf) in [(8, 3), (16, 5), (30, 7)] {
+            let x: Vec<i64> = (0..lx).map(|_| rng.below(255) as i64 - 127).collect();
+            let f: Vec<i64> = (0..lf).map(|_| rng.below(255) as i64 - 127).collect();
+            let got = ntt_corr_valid(&x, &f);
+            let want: Vec<i64> = (0..lx - lf + 1)
+                .map(|k| f.iter().enumerate().map(|(r, &fv)| fv * x[k + r]).sum())
+                .collect();
+            assert_eq!(got, want, "{lx}x{lf}");
+        }
+    }
+
+    #[test]
+    fn negative_values_handled() {
+        let x = [-100i64, 50, -3, 7, 90, -128];
+        let f = [-1i64, 2, -3];
+        let got = ntt_corr_valid(&x, &f);
+        let want: Vec<i64> = (0..4).map(|k| -x[k] + 2 * x[k + 1] - 3 * x[k + 2]).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn odot_width_is_wide() {
+        // int8 inputs still need ≥20-bit multipliers in the NTT domain —
+        // the efficiency argument of §3 ("Precision Requirement").
+        assert!(ntt_odot_bits(8, 9) >= 20);
+        assert!(ntt_odot_bits(8, 9) > 2 * 8);
+    }
+}

@@ -1,0 +1,84 @@
+//! Named catalog of every algorithm evaluated in the paper, so the error
+//! harness, BOPs model, engine and benches all reference one source of
+//! truth (Table 1's row set, plus the engine's working set).
+
+use super::bilinear::Bilinear;
+use super::{correction, toomcook};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoKind {
+    Direct,
+    Winograd,
+    Sfc,
+}
+
+/// One catalog row: how to build the algorithm plus its Table-1 identity.
+#[derive(Clone, Debug)]
+pub struct AlgoSpec {
+    pub name: &'static str,
+    pub kind: AlgoKind,
+    /// transform points (SFC) — 0 for direct/Winograd
+    pub n: usize,
+    /// output tile
+    pub m: usize,
+    /// kernel size
+    pub r: usize,
+}
+
+impl AlgoSpec {
+    pub fn build(&self) -> Bilinear {
+        match self.kind {
+            AlgoKind::Direct => Bilinear::direct(self.r),
+            AlgoKind::Winograd => toomcook::winograd(self.m, self.r),
+            AlgoKind::Sfc => correction::sfc(self.n, self.m, self.r),
+        }
+    }
+}
+
+/// The Table-1 row set, in the paper's order.
+pub fn catalog() -> Vec<AlgoSpec> {
+    vec![
+        AlgoSpec { name: "direct", kind: AlgoKind::Direct, n: 0, m: 1, r: 3 },
+        AlgoSpec { name: "Wino(2x2,3x3)", kind: AlgoKind::Winograd, n: 0, m: 2, r: 3 },
+        AlgoSpec { name: "Wino(3x3,3x3)", kind: AlgoKind::Winograd, n: 0, m: 3, r: 3 },
+        AlgoSpec { name: "Wino(4x4,3x3)", kind: AlgoKind::Winograd, n: 0, m: 4, r: 3 },
+        AlgoSpec { name: "SFC-4(4x4,3x3)", kind: AlgoKind::Sfc, n: 4, m: 4, r: 3 },
+        AlgoSpec { name: "SFC-6(6x6,3x3)", kind: AlgoKind::Sfc, n: 6, m: 6, r: 3 },
+        AlgoSpec { name: "SFC-6(7x7,3x3)", kind: AlgoKind::Sfc, n: 6, m: 7, r: 3 },
+        AlgoSpec { name: "Wino(2x2,5x5)", kind: AlgoKind::Winograd, n: 0, m: 2, r: 5 },
+        AlgoSpec { name: "SFC-6(6x6,5x5)", kind: AlgoKind::Sfc, n: 6, m: 6, r: 5 },
+        AlgoSpec { name: "Wino(2x2,7x7)", kind: AlgoKind::Winograd, n: 0, m: 2, r: 7 },
+        AlgoSpec { name: "SFC-6(4x4,7x7)", kind: AlgoKind::Sfc, n: 6, m: 4, r: 7 },
+    ]
+}
+
+/// Look a spec up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<AlgoSpec> {
+    let needle = name.to_ascii_lowercase();
+    catalog().into_iter().find(|s| s.name.to_ascii_lowercase() == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_catalog_entries_build_and_validate() {
+        for spec in catalog() {
+            let algo = spec.build(); // Bilinear::validate runs inside builders
+            assert!(algo.t >= algo.m, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("sfc-6(7x7,3x3)").is_some());
+        assert!(by_name("Wino(4x4,3x3)").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn catalog_matches_table1_rows() {
+        assert_eq!(catalog().len(), 11);
+    }
+}

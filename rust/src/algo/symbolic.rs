@@ -1,0 +1,233 @@
+//! The symbolic ring ℚ[s]/(s² − c₁·s − c₀).
+//!
+//! The paper's key observation (§4.1): at N ∈ {3, 4, 6} DFT points every
+//! twiddle factor e^{±2πjk/N} is expressible as a + b·s with *integer*
+//! a, b, where s is a primitive root satisfying a monic quadratic:
+//!
+//!   N = 3:  s = e^{2πj/3},  s² = −1 − s      (c₀ = −1, c₁ = −1)
+//!   N = 4:  s = j,          s² = −1          (c₀ = −1, c₁ =  0)
+//!   N = 6:  s = e^{πj/3},   s² = s − 1       (c₀ = −1, c₁ =  1)
+//!
+//! Arithmetic in this ring never leaves integer (rational) coefficients, so
+//! "irrational" Fourier transforms become exact addition networks.
+
+use crate::linalg::Frac;
+use std::ops::{Add, Mul, Neg, Sub};
+
+/// Reduction rule s² = c0 + c1·s for the symbol s, plus the expression of
+/// conj(s) = k0 + k1·s in the same basis (needed for the inverse DFT of
+/// real sequences via Hermitian symmetry).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rule {
+    pub n: usize,
+    pub c0: i128,
+    pub c1: i128,
+    pub k0: i128,
+    pub k1: i128,
+}
+
+impl Rule {
+    /// The ring rule for the N-point symbolic DFT. Panics for N that need
+    /// higher-degree minimal polynomials (the paper restricts to 3, 4, 6;
+    /// N = 2 is trivially rational and uses s = −1 with s² = 1).
+    pub fn for_points(n: usize) -> Rule {
+        match n {
+            // s = -1 (the only non-trivial 2nd root); s^2 = 1, conj(s) = s.
+            2 => Rule { n, c0: 1, c1: 0, k0: 0, k1: 1 },
+            // s = e^{2πj/3}: s^2 + s + 1 = 0; conj(s) = s^2 = -1 - s.
+            3 => Rule { n, c0: -1, c1: -1, k0: -1, k1: -1 },
+            // s = j: s^2 = -1; conj(j) = -j.
+            4 => Rule { n, c0: -1, c1: 0, k0: 0, k1: -1 },
+            // s = e^{πj/3}: s^2 - s + 1 = 0 => s^2 = s - 1; conj(s) = 1 - s.
+            6 => Rule { n, c0: -1, c1: 1, k0: 1, k1: -1 },
+            _ => panic!("symbolic DFT supports N in {{2,3,4,6}}, got {n}"),
+        }
+    }
+
+    /// Numeric value of s for verification: the primitive root used above.
+    pub fn s_complex(&self) -> (f64, f64) {
+        use std::f64::consts::PI;
+        match self.n {
+            2 => (-1.0, 0.0),
+            3 => ((2.0 * PI / 3.0).cos(), (2.0 * PI / 3.0).sin()),
+            4 => (0.0, 1.0),
+            6 => ((PI / 3.0).cos(), (PI / 3.0).sin()),
+            _ => unreachable!(),
+        }
+    }
+}
+
+/// An element a + b·s of the ring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Sym {
+    pub a: Frac,
+    pub b: Frac,
+    pub rule: Rule,
+}
+
+impl Sym {
+    pub fn new(rule: Rule, a: Frac, b: Frac) -> Sym {
+        Sym { a, b, rule }
+    }
+
+    pub fn zero(rule: Rule) -> Sym {
+        Sym::new(rule, Frac::ZERO, Frac::ZERO)
+    }
+
+    pub fn one(rule: Rule) -> Sym {
+        Sym::new(rule, Frac::ONE, Frac::ZERO)
+    }
+
+    /// The symbol s itself.
+    pub fn s(rule: Rule) -> Sym {
+        Sym::new(rule, Frac::ZERO, Frac::ONE)
+    }
+
+    pub fn int(rule: Rule, v: i128) -> Sym {
+        Sym::new(rule, Frac::int(v), Frac::ZERO)
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.a.is_zero() && self.b.is_zero()
+    }
+
+    /// True if the element lies in ℚ (no s component).
+    pub fn is_rational(&self) -> bool {
+        self.b.is_zero()
+    }
+
+    /// Complex conjugate, re-expressed in the (1, s) basis via the rule's
+    /// conj(s) = k0 + k1 s.
+    pub fn conj(&self) -> Sym {
+        let k0 = Frac::int(self.rule.k0);
+        let k1 = Frac::int(self.rule.k1);
+        Sym::new(self.rule, self.a + self.b * k0, self.b * k1)
+    }
+
+    /// s^e computed by repeated ring multiplication.
+    pub fn s_pow(rule: Rule, e: usize) -> Sym {
+        let mut out = Sym::one(rule);
+        for _ in 0..e {
+            out = out * Sym::s(rule);
+        }
+        out
+    }
+
+    /// Numeric complex value (for cross-checking against a float DFT).
+    pub fn to_complex(&self) -> (f64, f64) {
+        let (sr, si) = self.rule.s_complex();
+        (self.a.to_f64() + self.b.to_f64() * sr, self.b.to_f64() * si)
+    }
+}
+
+impl Add for Sym {
+    type Output = Sym;
+    fn add(self, o: Sym) -> Sym {
+        debug_assert_eq!(self.rule, o.rule);
+        Sym::new(self.rule, self.a + o.a, self.b + o.b)
+    }
+}
+
+impl Sub for Sym {
+    type Output = Sym;
+    fn sub(self, o: Sym) -> Sym {
+        debug_assert_eq!(self.rule, o.rule);
+        Sym::new(self.rule, self.a - o.a, self.b - o.b)
+    }
+}
+
+impl Neg for Sym {
+    type Output = Sym;
+    fn neg(self) -> Sym {
+        Sym::new(self.rule, -self.a, -self.b)
+    }
+}
+
+impl Mul for Sym {
+    type Output = Sym;
+    fn mul(self, o: Sym) -> Sym {
+        debug_assert_eq!(self.rule, o.rule);
+        // (a0 + b0 s)(a1 + b1 s) = a0a1 + (a0b1 + a1b0)s + b0b1 s^2
+        //                        = (a0a1 + c0 b0b1) + (a0b1 + a1b0 + c1 b0b1)s
+        let c0 = Frac::int(self.rule.c0);
+        let c1 = Frac::int(self.rule.c1);
+        let bb = self.b * o.b;
+        Sym::new(self.rule, self.a * o.a + c0 * bb, self.a * o.b + o.a * self.b + c1 * bb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(x: (f64, f64), y: (f64, f64)) -> bool {
+        (x.0 - y.0).abs() < 1e-12 && (x.1 - y.1).abs() < 1e-12
+    }
+
+    #[test]
+    fn s_has_order_n() {
+        for n in [3usize, 4, 6] {
+            let rule = Rule::for_points(n);
+            let sn = Sym::s_pow(rule, n);
+            assert_eq!(sn, Sym::one(rule), "s^{n} should be 1 for N={n}");
+            for e in 1..n {
+                assert_ne!(Sym::s_pow(rule, e), Sym::one(rule), "order must be exactly {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduction_matches_complex_arithmetic() {
+        for n in [2usize, 3, 4, 6] {
+            let rule = Rule::for_points(n);
+            for e in 0..2 * n {
+                let sym = Sym::s_pow(rule, e);
+                let (sr, si) = rule.s_complex();
+                // complex s^e
+                let (mut cr, mut ci) = (1.0f64, 0.0f64);
+                for _ in 0..e {
+                    let nr = cr * sr - ci * si;
+                    ci = cr * si + ci * sr;
+                    cr = nr;
+                }
+                assert!(close(sym.to_complex(), (cr, ci)), "N={n} e={e}");
+            }
+        }
+    }
+
+    #[test]
+    fn powers_are_first_order_integer() {
+        // The paper's premise: all twiddle factors have integer (a, b).
+        for n in [3usize, 4, 6] {
+            let rule = Rule::for_points(n);
+            for e in 0..n {
+                let p = Sym::s_pow(rule, e);
+                assert!(p.a.is_integer() && p.b.is_integer(), "N={n} s^{e} = {p:?}");
+                assert!(p.a.num.abs() <= 1 && p.b.num.abs() <= 1, "coefficients in {{-1,0,1}}");
+            }
+        }
+    }
+
+    #[test]
+    fn conj_is_involution_and_matches_complex() {
+        for n in [3usize, 4, 6] {
+            let rule = Rule::for_points(n);
+            for e in 0..n {
+                let p = Sym::s_pow(rule, e);
+                assert_eq!(p.conj().conj(), p);
+                let (re, im) = p.to_complex();
+                assert!(close(p.conj().to_complex(), (re, -im)), "N={n} e={e}");
+            }
+        }
+    }
+
+    #[test]
+    fn product_distributes() {
+        let rule = Rule::for_points(6);
+        let x = Sym::new(rule, Frac::int(2), Frac::int(-3));
+        let y = Sym::new(rule, Frac::int(-1), Frac::int(5));
+        let z = Sym::new(rule, Frac::int(4), Frac::int(1));
+        assert_eq!(x * (y + z), x * y + x * z);
+        assert_eq!((x * y) * z, x * (y * z));
+    }
+}

@@ -1,0 +1,166 @@
+//! Winograd / Toom-Cook minimal-filtering generator (the paper's baseline
+//! family, §3).
+//!
+//! F(M, R) computes M correlation outputs from M+R−1 inputs with
+//! α = M+R−1 multiplications, built from polynomial evaluation at α−1
+//! finite points plus ∞. Derivation (transpose theorem): if linear
+//! convolution is s = C·((V_R·g) ⊙ (V_L·e)) with C the exact interpolation
+//! matrix, then correlation is its transpose in the data argument:
+//!
+//!   y = V_Mᵀ · ((V_R·g) ⊙ (Cᵀ·d))
+//!
+//! so Aᵀ = V_Mᵀ, G = V_R, Bᵀ = Cᵀ. Aᵀ matches the standard Lavin–Gray
+//! matrices exactly (which is what κ(Aᵀ) in Table 1 is computed from);
+//! Bᵀ is then normalized to integers with the fractional content folded
+//! into G, the conventional presentation.
+
+use super::bilinear::Bilinear;
+use crate::linalg::{Frac, FracMat};
+
+/// The canonical interpolation point sequence: 0, 1, −1, 2, −2, ½, −½, …
+/// (good points first, per Lavin & Gray and the point-selection papers).
+pub fn default_points(count: usize) -> Vec<Frac> {
+    let mut pts = vec![Frac::int(0)];
+    let mut k = 1i128;
+    while pts.len() < count {
+        pts.push(Frac::int(k));
+        if pts.len() < count {
+            pts.push(Frac::int(-k));
+        }
+        if pts.len() < count {
+            pts.push(Frac::new(1, k + 1));
+        }
+        if pts.len() < count {
+            pts.push(Frac::new(-1, k + 1));
+        }
+        k += 1;
+    }
+    pts.truncate(count);
+    pts
+}
+
+/// Vandermonde evaluation matrix at the given finite points plus a final
+/// ∞ row (leading coefficient): (points.len()+1) × cols.
+fn vandermonde(points: &[Frac], cols: usize) -> FracMat {
+    let rows = points.len() + 1;
+    let mut v = FracMat::zeros(rows, cols);
+    for (i, p) in points.iter().enumerate() {
+        for j in 0..cols {
+            v[(i, j)] = p.pow(j as u32);
+        }
+    }
+    v[(rows - 1, cols - 1)] = Frac::ONE; // ∞ picks the leading coefficient
+    v
+}
+
+/// Winograd F(m, r) with the canonical points.
+pub fn winograd(m: usize, r: usize) -> Bilinear {
+    winograd_with_points(m, r, &default_points(m + r - 2))
+}
+
+/// Winograd F(m, r) with caller-chosen finite interpolation points
+/// (α−1 = m+r−2 of them; ∞ is always appended).
+pub fn winograd_with_points(m: usize, r: usize, points: &[Frac]) -> Bilinear {
+    let alpha = m + r - 1;
+    assert_eq!(points.len(), alpha - 1, "need {} finite points", alpha - 1);
+    // pairwise-distinct check
+    for i in 0..points.len() {
+        for j in 0..i {
+            assert!(points[i] != points[j], "duplicate interpolation point");
+        }
+    }
+    let v_full = vandermonde(points, alpha); // α×α evaluation incl. ∞
+    let c = v_full.inverse().expect("Vandermonde at distinct points is invertible");
+    let bt = c.transpose(); // α×α
+    let g = vandermonde(points, r); // α×r
+    let at = vandermonde(points, m).transpose(); // m×α
+
+    let algo = Bilinear {
+        name: format!("Wino({m}x{m},{r}x{r})"),
+        m,
+        r,
+        t: alpha,
+        bt,
+        g,
+        at,
+        circ_meta: None,
+        // §5 overlapped output form: all α outputs of the underlying
+        // linear convolution come from the square interpolation matrix C.
+        at_ov: Some(c),
+    }
+    .normalize_bt_integral();
+    algo.validate();
+    algo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::bilinear::direct_corr1d_exact;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn f23_matches_lavin_gray() {
+        // The classic F(2,3): Aᵀ = [[1,1,1,0],[0,1,−1,1]] with points 0,1,−1.
+        let a = winograd(2, 3);
+        assert_eq!(a.t, 4);
+        let at: Vec<i128> = a.at.data.iter().map(|f| {
+            assert!(f.is_integer());
+            f.num
+        }).collect();
+        assert_eq!(at, vec![1, 1, 1, 0, 0, 1, -1, 1]);
+        // Bᵀ integral after normalization (the standard form).
+        assert!(a.bt.is_integral());
+    }
+
+    #[test]
+    fn exact_for_all_baseline_sizes() {
+        for (m, r) in [(2, 3), (3, 3), (4, 3), (2, 5), (2, 7), (6, 3), (4, 5)] {
+            let a = winograd(m, r);
+            let mut rng = Pcg32::seeded((m * 10 + r) as u64);
+            for _ in 0..8 {
+                let x: Vec<Frac> = (0..a.input_len()).map(|_| Frac::int(rng.below(9) as i128 - 4)).collect();
+                let f: Vec<Frac> = (0..r).map(|_| Frac::int(rng.below(9) as i128 - 4)).collect();
+                assert_eq!(a.apply1d_exact(&x, &f), direct_corr1d_exact(&x, &f), "F({m},{r})");
+            }
+        }
+    }
+
+    #[test]
+    fn complexity_ratios_match_paper() {
+        // Table 1: Wino(2,3) 44.4%, Wino(3,3) 30.4% (uses 25/81? no:
+        // (3+3-1)^2/(3*3)^2 = 25/81 = 30.9% ≈ 30.4 reported), Wino(4,3) 25%,
+        // Wino(2,5) 36%, Wino(2,7) 32.6%.
+        assert!((winograd(2, 3).complexity_2d() - 0.444).abs() < 0.01);
+        assert!((winograd(4, 3).complexity_2d() - 0.25).abs() < 0.001);
+        assert!((winograd(2, 5).complexity_2d() - 0.36).abs() < 0.001);
+        assert!((winograd(2, 7).complexity_2d() - 0.3265).abs() < 0.01);
+    }
+
+    #[test]
+    fn kappa_grows_with_tile_size() {
+        // The ill-conditioning story of §3: κ(Aᵀ) explodes as M grows.
+        let k23 = winograd(2, 3).kappa_at();
+        let k33 = winograd(3, 3).kappa_at();
+        let k43 = winograd(4, 3).kappa_at();
+        assert!(k23 < k33 && k33 < k43, "κ: {k23} < {k33} < {k43}");
+        assert!(k23 < 4.0);
+        assert!(k43 > 10.0, "Wino(4,3) must be badly conditioned, κ={k43}");
+    }
+
+    #[test]
+    fn custom_points_still_exact() {
+        let pts = [Frac::int(0), Frac::int(1), Frac::int(-1), Frac::new(1, 2)];
+        let a = winograd_with_points(3, 3, &pts);
+        let x: Vec<Frac> = (0..5).map(|i| Frac::int(i as i128 + 1)).collect();
+        let f: Vec<Frac> = vec![Frac::int(1), Frac::int(-2), Frac::int(3)];
+        assert_eq!(a.apply1d_exact(&x, &f), direct_corr1d_exact(&x, &f));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_points_rejected() {
+        let pts = [Frac::int(0), Frac::int(1), Frac::int(1)];
+        winograd_with_points(2, 3, &pts);
+    }
+}

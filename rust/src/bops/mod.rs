@@ -1,0 +1,162 @@
+//! The bit-operations (BOPs) cost metric of §6.
+//!
+//! n-bit add = n BOPs; n-bit multiply = n(n−1) BOPs (an n-bit multiply
+//! decomposes into n−1 n-bit additions). Fast-algorithm transform
+//! additions are charged at their grown bit-width (‖Bᵀ‖∞ growth over the
+//! input width), and the ⊙ stage at the transform-domain quantized width.
+//! Accumulation across channels is charged as 32-bit adds for every
+//! method (the common int32 accumulator).
+
+use crate::algo::Bilinear;
+use crate::nn::model::ConvShape;
+
+pub const ACC_BITS: u64 = 32;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BopsBreakdown {
+    pub transform_in: u64,
+    pub transform_out: u64,
+    pub multiply: u64,
+    pub accumulate: u64,
+}
+
+impl BopsBreakdown {
+    pub fn total(&self) -> u64 {
+        self.transform_in + self.transform_out + self.multiply + self.accumulate
+    }
+}
+
+fn mul_bops(bits: u64) -> u64 {
+    bits * (bits.saturating_sub(1))
+}
+
+/// BOPs for one conv layer executed directly at `a_bits`×`w_bits`.
+pub fn direct_bops(shape: &ConvShape, a_bits: u64, w_bits: u64) -> BopsBreakdown {
+    let macs = shape.direct_macs();
+    let mbits = a_bits.max(w_bits);
+    BopsBreakdown {
+        transform_in: 0,
+        transform_out: 0,
+        multiply: macs * mul_bops(mbits),
+        accumulate: macs * ACC_BITS,
+    }
+}
+
+/// BOPs for one conv layer executed with a tiled bilinear fast algorithm
+/// whose transform-domain operands are quantized to `a_bits`/`w_bits`.
+/// The filter transform is amortized (weights transformed once offline).
+pub fn fast_bops(shape: &ConvShape, algo: &Bilinear, a_bits: u64, w_bits: u64) -> BopsBreakdown {
+    assert_eq!(shape.r, algo.r, "algorithm kernel mismatch");
+    assert_eq!(shape.stride, 1, "fast conv is stride-1");
+    let m = algo.m as u64;
+    let t = algo.t as u64;
+    let tiles = (shape.h as u64).div_ceil(m) * (shape.w as u64).div_ceil(m);
+    let ic = shape.ic as u64;
+    let oc = shape.oc as u64;
+
+    // Input transform: per tile/channel, 2·(Bᵀ nnz−rows) adds at the grown
+    // width (input a_bits + log2‖Bᵀ‖∞ growth).
+    let bt_adds_1d = algo.bt.add_count() as u64;
+    let l = algo.input_len() as u64;
+    let in_growth = algo.bt.linf_norm().log2().ceil().max(0.0) as u64;
+    let in_bits = a_bits + in_growth;
+    // row pass: t rows applied over l columns; col pass over t rows
+    let in_adds_per_tile = bt_adds_1d * l + bt_adds_1d * t;
+    let transform_in = tiles * ic * in_adds_per_tile * in_bits;
+
+    // ⊙: T² mults per (tile, ic→oc pair) at quantized width + i32 accumulate
+    let odot = tiles * ic * oc * t * t;
+    let multiply = odot * mul_bops(a_bits.max(w_bits));
+    let accumulate = odot * ACC_BITS;
+
+    // Output transform: per tile/out-channel at accumulator width.
+    let at_adds_1d = algo.at.add_count() as u64;
+    let out_adds_per_tile = at_adds_1d * t + at_adds_1d * m;
+    let transform_out = tiles * oc * out_adds_per_tile * ACC_BITS;
+
+    BopsBreakdown { transform_in, transform_out, multiply, accumulate }
+}
+
+/// Total GBOPs for a set of conv layers under a uniform scheme.
+pub fn model_gbops(
+    shapes: &[(String, ConvShape)],
+    algo: Option<&Bilinear>,
+    a_bits: u64,
+    w_bits: u64,
+) -> f64 {
+    let mut total = 0u64;
+    for (_, s) in shapes {
+        let b = match algo {
+            Some(a) if s.r == a.r && s.stride == 1 => fast_bops(s, a, a_bits, w_bits),
+            _ => direct_bops(s, a_bits, w_bits),
+        };
+        total += b.total();
+    }
+    total as f64 / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{sfc, winograd};
+
+    fn shape() -> ConvShape {
+        ConvShape { ic: 64, oc: 64, h: 56, w: 56, r: 3, stride: 1 }
+    }
+
+    #[test]
+    fn mul_bops_formula() {
+        assert_eq!(mul_bops(8), 56);
+        assert_eq!(mul_bops(4), 12);
+        assert_eq!(mul_bops(1), 0);
+    }
+
+    #[test]
+    fn fast_beats_direct_at_int8() {
+        let s = shape();
+        let d = direct_bops(&s, 8, 8).total();
+        let f = fast_bops(&s, &sfc(6, 7, 3), 8, 8).total();
+        assert!(f < d, "SFC {f} < direct {d}");
+        // the multiply term alone shrinks by ~the complexity ratio
+        let fm = fast_bops(&s, &sfc(6, 7, 3), 8, 8).multiply as f64;
+        let dm = direct_bops(&s, 8, 8).multiply as f64;
+        assert!((fm / dm - 144.0 / 441.0).abs() < 0.05, "mult ratio {}", fm / dm);
+    }
+
+    #[test]
+    fn sfc_beats_winograd_at_low_bits() {
+        // Fig. 4's x-axis story: at the accuracy-equivalent bit-width SFC
+        // spends fewer BOPs. At iso-bits SFC-6(7,3) ≈ Wino(4,3) on ⊙ but
+        // Wino needs more bits for iso-accuracy.
+        let s = shape();
+        let sfc8 = fast_bops(&s, &sfc(6, 7, 3), 8, 8).total() as f64;
+        let win8 = fast_bops(&s, &winograd(4, 3), 8, 8).total() as f64;
+        assert!((sfc8 / win8) < 1.35, "iso-bit ratio {}", sfc8 / win8);
+        // Winograd at the bits it needs for SFC-int6-level accuracy (int8)
+        // vs SFC at int6:
+        let sfc6 = fast_bops(&s, &sfc(6, 7, 3), 6, 6).total() as f64;
+        assert!(sfc6 < win8, "SFC int6 {sfc6} < Wino int8 {win8}");
+    }
+
+    #[test]
+    fn transforms_are_minor_cost_at_scale() {
+        // §3's amortization assumption: with 64→64 channels the transform
+        // adds are a small fraction of the ⊙ cost.
+        let b = fast_bops(&shape(), &sfc(6, 6, 3), 8, 8);
+        let frac = (b.transform_in + b.transform_out) as f64 / b.total() as f64;
+        assert!(frac < 0.2, "transform fraction {frac}");
+    }
+
+    #[test]
+    fn model_gbops_mixes_algorithms() {
+        let shapes = vec![
+            ("a".into(), ConvShape { ic: 3, oc: 16, h: 32, w: 32, r: 3, stride: 1 }),
+            ("b".into(), ConvShape { ic: 16, oc: 16, h: 32, w: 32, r: 1, stride: 1 }), // 1×1 stays direct
+        ];
+        let a = sfc(6, 6, 3);
+        let g = model_gbops(&shapes, Some(&a), 8, 8);
+        assert!(g > 0.0);
+        let g_direct = model_gbops(&shapes, None, 8, 8);
+        assert!(g < g_direct);
+    }
+}

@@ -1,0 +1,327 @@
+//! Dynamic batcher: bounded request queue → fixed-batch execution.
+//!
+//! Requests queue into a bounded channel (sync_channel gives natural
+//! backpressure); the batcher thread drains up to `batch_size` requests,
+//! waiting at most `batch_timeout_ms` for stragglers, pads the final
+//! partial batch with zeros, executes on the PJRT model and completes the
+//! per-request response channels.
+
+use crate::runtime::Executor;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// What the batcher needs from a model backend. `Executor` (PJRT) is the
+/// production impl; tests inject mocks.
+pub trait ModelRunner {
+    /// flattened NCHW input dims (index 0 = batch)
+    fn input_dims(&self) -> &[usize];
+    fn out_classes(&self) -> usize;
+    fn run(&self, batch: &[f32]) -> Result<Vec<f32>>;
+    fn platform(&self) -> String {
+        "mock".into()
+    }
+}
+
+impl ModelRunner for Executor {
+    fn input_dims(&self) -> &[usize] {
+        &self.input_dims
+    }
+    fn out_classes(&self) -> usize {
+        self.out_classes
+    }
+    fn run(&self, batch: &[f32]) -> Result<Vec<f32>> {
+        Executor::run(self, batch)
+    }
+    fn platform(&self) -> String {
+        Executor::platform(self)
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    pub batch_size: usize,
+    pub queue_depth: usize,
+    pub batch_timeout_ms: u64,
+}
+
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub argmax: usize,
+    pub latency_s: f64,
+}
+
+struct Request {
+    image: Vec<f32>,
+    enqueued: Instant,
+    reply: Sender<Result<Response, String>>,
+}
+
+/// Handle for one in-flight request.
+pub struct Pending {
+    rx: Receiver<Result<Response, String>>,
+}
+
+impl Pending {
+    pub fn wait(self) -> Result<Response> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped request"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+}
+
+pub struct Server {
+    tx: SyncSender<Request>,
+    stop: Arc<AtomicBool>,
+    batches: Arc<AtomicU64>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the batcher. The PJRT client/executable are not `Send`
+    /// (Rc-based FFI wrappers), so the executor is constructed *inside*
+    /// the worker thread from the provided factory; startup errors are
+    /// reported back synchronously.
+    pub fn start<R, F>(factory: F, cfg: ServerConfig) -> Result<Server>
+    where
+        R: ModelRunner,
+        F: FnOnce() -> Result<R> + Send + 'static,
+    {
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let stop = Arc::new(AtomicBool::new(false));
+        let batches = Arc::new(AtomicU64::new(0));
+        let stop2 = stop.clone();
+        let batches2 = batches.clone();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<String, String>>();
+        let worker = std::thread::spawn(move || {
+            let exe = match factory() {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(e.platform()));
+                    e
+                }
+                Err(err) => {
+                    let _ = ready_tx.send(Err(format!("{err:#}")));
+                    return;
+                }
+            };
+            batch_loop(exe, cfg, rx, stop2, batches2)
+        });
+        match ready_rx.recv() {
+            Ok(Ok(platform)) => {
+                println!("server ready on platform: {platform}");
+                Ok(Server { tx, stop, batches, worker: Some(worker) })
+            }
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                Err(anyhow::anyhow!(e))
+            }
+            Err(_) => Err(anyhow::anyhow!("worker died during startup")),
+        }
+    }
+
+    /// Submit one image (CHW flattened); returns a wait handle.
+    /// Blocks when the queue is full (backpressure).
+    pub fn submit(&self, image: Vec<f32>) -> Result<Pending> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(Request { image, enqueued: Instant::now(), reply })
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        Ok(Pending { rx })
+    }
+
+    pub fn batches_executed(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        drop(self.tx.clone()); // original tx dropped in Drop
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn batch_loop<R: ModelRunner>(
+    exe: R,
+    cfg: ServerConfig,
+    rx: Receiver<Request>,
+    stop: Arc<AtomicBool>,
+    batches: Arc<AtomicU64>,
+) {
+    let sample: usize = exe.input_dims()[1..].iter().product();
+    let classes = exe.out_classes();
+    loop {
+        // collect a batch
+        let mut batch: Vec<Request> = Vec::with_capacity(cfg.batch_size);
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(r) => batch.push(r),
+            Err(RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+        let deadline = Instant::now() + Duration::from_millis(cfg.batch_timeout_ms);
+        while batch.len() < cfg.batch_size {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // pad + execute
+        let mut input = vec![0f32; cfg.batch_size * sample];
+        for (i, r) in batch.iter().enumerate() {
+            input[i * sample..(i + 1) * sample].copy_from_slice(&r.image);
+        }
+        let result = exe.run(&input);
+        batches.fetch_add(1, Ordering::Relaxed);
+        match result {
+            Ok(logits) => {
+                for (i, r) in batch.into_iter().enumerate() {
+                    let row = logits[i * classes..(i + 1) * classes].to_vec();
+                    let argmax = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(k, _)| k)
+                        .unwrap_or(0);
+                    let _ = r.reply.send(Ok(Response {
+                        logits: row,
+                        argmax,
+                        latency_s: r.enqueued.elapsed().as_secs_f64(),
+                    }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("execute failed: {e}");
+                for r in batch {
+                    let _ = r.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    /// Mock model: logit k = image[0] for class (image[0] as usize), so
+    /// the argmax round-trips the input deterministically.
+    struct Mock {
+        dims: Vec<usize>,
+        calls: Arc<AtomicUsize>,
+        fail: bool,
+    }
+
+    impl ModelRunner for Mock {
+        fn input_dims(&self) -> &[usize] {
+            &self.dims
+        }
+        fn out_classes(&self) -> usize {
+            10
+        }
+        fn run(&self, batch: &[f32]) -> Result<Vec<f32>> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            if self.fail {
+                anyhow::bail!("injected failure");
+            }
+            let sample: usize = self.dims[1..].iter().product();
+            let n = self.dims[0];
+            let mut out = vec![0f32; n * 10];
+            for i in 0..n {
+                let cls = (batch[i * sample] as usize).min(9);
+                out[i * 10 + cls] = 1.0;
+            }
+            Ok(out)
+        }
+    }
+
+    fn mk_server(batch: usize, fail: bool) -> (Server, Arc<AtomicUsize>) {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let calls2 = calls.clone();
+        let server = Server::start(
+            move || {
+                Ok(Mock { dims: vec![batch, 1, 2, 2], calls: calls2, fail })
+            },
+            ServerConfig { batch_size: batch, queue_depth: 16, batch_timeout_ms: 1 },
+        )
+        .unwrap();
+        (server, calls)
+    }
+
+    #[test]
+    fn every_request_gets_its_own_answer() {
+        let (server, _) = mk_server(4, false);
+        let mut handles = Vec::new();
+        for i in 0..17 {
+            let mut img = vec![0f32; 4];
+            img[0] = (i % 10) as f32;
+            handles.push(server.submit(img).unwrap());
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let resp = h.wait().unwrap();
+            assert_eq!(resp.argmax, i % 10, "request {i} mismatched response");
+            assert!(resp.latency_s >= 0.0);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn batching_amortizes_calls() {
+        let (server, calls) = mk_server(8, false);
+        let handles: Vec<_> = (0..32).map(|_| server.submit(vec![0f32; 4]).unwrap()).collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let n = calls.load(Ordering::Relaxed);
+        assert!(n <= 12, "32 requests at batch 8 should take ~4-12 executes, got {n}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn failures_propagate_to_every_request_in_batch() {
+        let (server, _) = mk_server(4, true);
+        let handles: Vec<_> = (0..4).map(|_| server.submit(vec![0f32; 4]).unwrap()).collect();
+        for h in handles {
+            assert!(h.wait().is_err());
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_clean_with_no_requests() {
+        let (server, _) = mk_server(2, false);
+        server.shutdown();
+    }
+
+    #[test]
+    fn startup_failure_reported() {
+        let r = Server::start(
+            || -> Result<Mock> { anyhow::bail!("no artifact") },
+            ServerConfig { batch_size: 1, queue_depth: 1, batch_timeout_ms: 1 },
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,53 @@
+//! Latency statistics for the serving layer.
+
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyStats {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl LatencyStats {
+    pub fn from_samples(samples: &[f64]) -> LatencyStats {
+        assert!(!samples.is_empty());
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            let idx = ((s.len() as f64 - 1.0) * p).round() as usize;
+            s[idx]
+        };
+        LatencyStats {
+            n: s.len(),
+            mean: s.iter().sum::<f64>() / s.len() as f64,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            max: *s.last().unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let samples: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        let st = LatencyStats::from_samples(&samples);
+        assert_eq!(st.n, 100);
+        assert!(st.p50 <= st.p95 && st.p95 <= st.p99 && st.p99 <= st.max);
+        assert_eq!(st.max, 100.0);
+        assert!((st.p50 - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let st = LatencyStats::from_samples(&[0.5]);
+        assert_eq!(st.p99, 0.5);
+        assert_eq!(st.mean, 0.5);
+    }
+}

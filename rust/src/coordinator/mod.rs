@@ -1,0 +1,70 @@
+//! L3 serving coordinator: request router + dynamic batcher + worker over
+//! the PJRT executor, with latency/throughput metrics.
+//!
+//! Architecture (vLLM-router-like, scaled to this paper's inference-kernel
+//! scope): clients submit single-image classification requests to a
+//! bounded queue (backpressure); a batcher thread drains the queue into
+//! fixed-size batches — padding the tail batch — and executes them on the
+//! AOT-compiled model; responses flow back through per-request channels.
+//! Everything is std-only (tokio is not vendored in this image).
+
+pub mod batcher;
+pub mod metrics;
+
+pub use batcher::{Server, ServerConfig};
+pub use metrics::LatencyStats;
+
+use crate::runtime::Executor;
+use anyhow::Result;
+use std::collections::HashMap;
+
+
+/// `sfc serve` — the end-to-end demo: load an AOT model artifact, serve a
+/// stream of requests from the SynthImage test split, report accuracy,
+/// latency percentiles and throughput (EXPERIMENTS.md §E2E).
+pub fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
+    let data_dir = opts.get("data-dir").map(|s| s.as_str()).unwrap_or("artifacts");
+    let default_hlo = format!("{data_dir}/resnet18_b8.hlo.txt");
+    let hlo = opts.get("hlo").map(|s| s.as_str()).unwrap_or(&default_hlo);
+    let requests: usize = opts.get("requests").map(|s| s.parse().unwrap()).unwrap_or(256);
+    let batch: usize = opts.get("batch").map(|s| s.parse().unwrap()).unwrap_or(8);
+
+    println!("loading {hlo} (batch {batch}) ...");
+    let (images, labels) = crate::exp::load_split(data_dir, "test", requests)?;
+    let cfg = ServerConfig { batch_size: batch, queue_depth: 64, batch_timeout_ms: 2 };
+    let hlo_path = std::path::PathBuf::from(hlo);
+    let dims = vec![batch, 3, 32, 32];
+    let server = Server::start(move || Executor::load(&hlo_path, &dims, 10), cfg)?;
+
+    let t0 = std::time::Instant::now();
+    let sample = images.dims[1] * images.dims[2] * images.dims[3];
+    let mut handles = Vec::new();
+    for i in 0..requests {
+        let img = images.data[i * sample..(i + 1) * sample].to_vec();
+        handles.push(server.submit(img)?);
+    }
+    let mut correct = 0usize;
+    let mut latencies = Vec::with_capacity(requests);
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = h.wait()?;
+        latencies.push(resp.latency_s);
+        if resp.argmax == labels[i] as usize {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = LatencyStats::from_samples(&latencies);
+    println!("\nE2E serving results ({requests} requests, batch {batch}):");
+    println!("  accuracy   : {:.2}%", 100.0 * correct as f64 / requests as f64);
+    println!("  throughput : {:.1} img/s", requests as f64 / wall);
+    println!(
+        "  latency    : p50 {:.2} ms · p95 {:.2} ms · p99 {:.2} ms · max {:.2} ms",
+        stats.p50 * 1e3,
+        stats.p95 * 1e3,
+        stats.p99 * 1e3,
+        stats.max * 1e3
+    );
+    println!("  batches    : {}", server.batches_executed());
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,126 @@
+//! SynthImage — the ImageNet stand-in dataset (see DESIGN.md §2).
+//!
+//! 10-class 32×32×3 textures: each class is a band-limited oriented
+//! pattern (class-specific orientation + spatial frequency) embedded in
+//! 1/f "natural image" background noise, so (a) a CNN must learn
+//! frequency-selective conv filters, (b) activation spectra concentrate at
+//! low frequencies like real images — the property Fig. 3 and the
+//! frequency-wise quantization strategy depend on.
+//!
+//! The generator lives in Rust (canonical, deterministic); `make
+//! artifacts` materializes `artifacts/dataset.bin` which the JAX trainer
+//! reads, so training, calibration and evaluation share one distribution.
+
+pub mod synth;
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 4] = b"SFCD";
+
+/// An image-classification dataset in CHW f32 layout.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub n_classes: usize,
+    pub labels: Vec<u8>,
+    /// n × c × h × w, sample-major
+    pub images: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn sample_len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        let s = self.sample_len();
+        &self.images[i * s..(i + 1) * s]
+    }
+
+    /// First `k` samples as a new dataset (calibration split).
+    pub fn take(&self, k: usize) -> Dataset {
+        let k = k.min(self.n);
+        Dataset {
+            n: k,
+            c: self.c,
+            h: self.h,
+            w: self.w,
+            n_classes: self.n_classes,
+            labels: self.labels[..k].to_vec(),
+            images: self.images[..k * self.sample_len()].to_vec(),
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        for v in [self.n as u32, self.c as u32, self.h as u32, self.w as u32, self.n_classes as u32] {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        f.write_all(&self.labels)?;
+        for v in &self.images {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not a SynthImage dataset", path.display());
+        }
+        let mut u32buf = [0u8; 4];
+        let mut read_u32 = |f: &mut dyn Read| -> Result<u32> {
+            f.read_exact(&mut u32buf)?;
+            Ok(u32::from_le_bytes(u32buf))
+        };
+        let n = read_u32(&mut f)? as usize;
+        let c = read_u32(&mut f)? as usize;
+        let h = read_u32(&mut f)? as usize;
+        let w = read_u32(&mut f)? as usize;
+        let n_classes = read_u32(&mut f)? as usize;
+        let mut labels = vec![0u8; n];
+        f.read_exact(&mut labels)?;
+        let mut images = vec![0f32; n * c * h * w];
+        let mut buf = vec![0u8; 4 * images.len()];
+        f.read_exact(&mut buf)?;
+        for (i, chunk) in buf.chunks_exact(4).enumerate() {
+            images[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(Dataset { n, c, h, w, n_classes, labels, images })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_round_trip() {
+        let ds = synth::generate(64, 7);
+        let dir = std::env::temp_dir().join("sfc_ds_test.bin");
+        ds.save(&dir).unwrap();
+        let back = Dataset::load(&dir).unwrap();
+        assert_eq!(back.n, ds.n);
+        assert_eq!(back.labels, ds.labels);
+        assert_eq!(back.images, ds.images);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn take_splits() {
+        let ds = synth::generate(32, 1);
+        let cal = ds.take(10);
+        assert_eq!(cal.n, 10);
+        assert_eq!(cal.image(3), ds.image(3));
+    }
+}

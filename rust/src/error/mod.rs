@@ -1,0 +1,149 @@
+//! §5 numerical-error analysis harness (Table 1, Fig. 5 substrate).
+//!
+//! Measures the output MSE of each fast-convolution algorithm when the
+//! element-wise multiply operands are rounded to a low-precision format
+//! (fp16 as in Table 1, or intN to match the PTQ setting), on random
+//! N(0,1) data, normalized so direct convolution = 1.0. Also reports the
+//! κ(Aᵀ) condition numbers the analysis predicts the MSE tracks.
+
+use crate::algo::bilinear::{direct_conv2d, Bilinear};
+use crate::linalg::Mat;
+use crate::util::{round_fp16, Pcg32};
+
+/// Operand rounding applied inside ⊙ (the paper's ⊙_Q).
+#[derive(Clone, Copy, Debug)]
+pub enum OdotFormat {
+    Fp16,
+    /// symmetric intN with per-tensor max-abs scaling per trial
+    Int(u32),
+    /// no rounding (sanity)
+    Exact,
+}
+
+/// One Table-1 style measurement for a single algorithm.
+#[derive(Clone, Debug)]
+pub struct ErrorRow {
+    pub name: String,
+    pub mse: f64,
+    pub kappa: f64,
+    pub complexity: f64,
+}
+
+/// Measure raw (un-normalized) mean squared output error for `algo` under
+/// the given ⊙ format, averaged over `trials` random 2-D tiles.
+pub fn measure_mse(algo: &Bilinear, fmt: OdotFormat, trials: usize, seed: u64) -> f64 {
+    let mut rng = Pcg32::seeded(seed);
+    let l = algo.input_len();
+    let r = algo.r;
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for _ in 0..trials {
+        let x = Mat::from_vec(l, l, (0..l * l).map(|_| rng.next_gaussian()).collect());
+        let f = Mat::from_vec(r, r, (0..r * r).map(|_| rng.next_gaussian() * 0.5).collect());
+        let exact = algo.apply2d_f64(&x, &f);
+        let quantized = match fmt {
+            OdotFormat::Exact => exact.clone(),
+            OdotFormat::Fp16 => {
+                algo.apply2d_with(&x, &f, &|v| round_fp16(v as f32) as f64, &|v| {
+                    round_fp16(v as f32) as f64
+                })
+            }
+            OdotFormat::Int(bits) => {
+                // per-trial max-abs scaling of each transformed operand
+                // (per-tensor granularity, the Table-1 baseline setting)
+                let bt = algo.bt.to_f64();
+                let g = algo.g.to_f64();
+                let tx = bt.matmul(&x).matmul(&bt.transpose());
+                let tf = g.matmul(&f).matmul(&g.transpose());
+                let qmax = ((1i64 << (bits - 1)) - 1) as f64;
+                let sx = tx.data.iter().fold(0.0f64, |m, v| m.max(v.abs())) / qmax;
+                let sf = tf.data.iter().fold(0.0f64, |m, v| m.max(v.abs())) / qmax;
+                let quant = move |s: f64| move |v: f64| (v / s).round().clamp(-qmax, qmax) * s;
+                algo.apply2d_with(&x, &f, &quant(sx.max(1e-30)), &quant(sf.max(1e-30)))
+            }
+        };
+        // reference: the true convolution (catches algorithm error too)
+        let truth = direct_conv2d(&x, &f);
+        for i in 0..algo.m {
+            for j in 0..algo.m {
+                let d = quantized[(i, j)] - truth[(i, j)];
+                total += d * d;
+                count += 1;
+            }
+        }
+        let _ = exact;
+    }
+    total / count as f64
+}
+
+/// Produce the full Table-1 row set: MSE normalized to direct conv = 1.0,
+/// κ(Aᵀ) and arithmetic complexity.
+pub fn table1(fmt: OdotFormat, trials: usize) -> Vec<ErrorRow> {
+    let specs = crate::algo::catalog();
+    let direct_mse = {
+        let d = Bilinear::direct(3);
+        measure_mse(&d, fmt, trials, 0xD1EC7)
+    };
+    specs
+        .iter()
+        .map(|spec| {
+            // fp16 measurement uses the range-balanced presentation (see
+            // Bilinear::balanced); κ and complexity are scale-invariant.
+            let a = spec.build().balanced();
+            let mse = measure_mse(&a, fmt, trials, 0xD1EC7) / direct_mse;
+            ErrorRow {
+                name: spec.name.to_string(),
+                mse,
+                kappa: a.kappa_at(),
+                complexity: a.complexity_2d(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{sfc, winograd};
+
+    #[test]
+    fn exact_format_has_tiny_error() {
+        let a = sfc(6, 6, 3);
+        let mse = measure_mse(&a, OdotFormat::Exact, 50, 1);
+        assert!(mse < 1e-22, "algorithm itself must be exact: {mse}");
+    }
+
+    #[test]
+    fn fp16_error_ordering_matches_table1() {
+        // direct < Wino(2,3) ≈ SFC < Wino(4,3): the paper's key ordering.
+        let t = 400;
+        let direct = measure_mse(&Bilinear::direct(3), OdotFormat::Fp16, t, 2);
+        let w23 = measure_mse(&winograd(2, 3), OdotFormat::Fp16, t, 2);
+        let w43 = measure_mse(&winograd(4, 3), OdotFormat::Fp16, t, 2);
+        let s63 = measure_mse(&sfc(6, 6, 3), OdotFormat::Fp16, t, 2);
+        assert!(direct < w23, "direct {direct} < wino23 {w23}");
+        assert!(w23 < w43, "wino23 {w23} < wino43 {w43}");
+        assert!(s63 < w43 / 2.0, "SFC {s63} must be far below Wino(4,3) {w43}");
+    }
+
+    #[test]
+    fn int8_error_ordering_holds_too() {
+        let t = 300;
+        let w43 = measure_mse(&winograd(4, 3), OdotFormat::Int(8), t, 3);
+        let s73 = measure_mse(&sfc(6, 7, 3), OdotFormat::Int(8), t, 3);
+        assert!(s73 < w43, "SFC int8 {s73} < Winograd int8 {w43}");
+    }
+
+    #[test]
+    fn table1_normalization() {
+        let rows = table1(OdotFormat::Fp16, 150);
+        assert_eq!(rows.len(), 11);
+        let direct = rows.iter().find(|r| r.name == "direct").unwrap();
+        assert!((direct.mse - 1.0).abs() < 0.25, "direct row ≈ 1.0, got {}", direct.mse);
+        // SFC rows must all be closer to direct than Wino(4,3)
+        let w43 = rows.iter().find(|r| r.name == "Wino(4x4,3x3)").unwrap().mse;
+        for r in rows.iter().filter(|r| r.name.starts_with("SFC")) {
+            assert!(r.mse < w43, "{} mse {} < wino43 {}", r.name, r.mse, w43);
+        }
+    }
+}

@@ -1,0 +1,354 @@
+//! Experiment harnesses for the weight/data-dependent tables and figures
+//! (Table 2/4/5, Fig. 3/4/5). Each `cmd_*` regenerates one paper artifact
+//! from `artifacts/` (trained weights + SynthImage splits) and prints the
+//! paper's reference values alongside.
+//!
+//! Sizes are scaled to the substrate (DESIGN.md §2): calibration 128
+//! images (paper: 500), evaluation 256 images (paper: 50k val set);
+//! override with SFC_CALIB_N / SFC_EVAL_N.
+
+use crate::algo::registry::by_name;
+use crate::data::Dataset;
+use crate::nn::conv::FastConvPlan;
+use crate::nn::model::{model_conv_shapes, resnet18_cfg, resnet34_cfg, resnet50_cfg, resnet_from_weights, ResNetCfg};
+use crate::nn::weights::WeightMap;
+use crate::nn::{Model, Tensor};
+use crate::quant::calib::{dequantize_model, layer_mse, quantize_model, QAlgoChoice, QuantConfig};
+use crate::quant::Granularity;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+fn env_n(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn calib_n() -> usize {
+    env_n("SFC_CALIB_N", 128)
+}
+
+pub fn eval_n() -> usize {
+    env_n("SFC_EVAL_N", 256)
+}
+
+/// Load a dataset split as one NCHW tensor + labels.
+pub fn load_split(data_dir: &str, split: &str, n: usize) -> Result<(Tensor, Vec<u8>)> {
+    let ds = Dataset::load(&Path::new(data_dir).join(format!("dataset_{split}.bin")))
+        .with_context(|| format!("run `sfc gen-data` / `make artifacts` first"))?;
+    let ds = ds.take(n);
+    let mut t = Tensor::zeros(&[ds.n, ds.c, ds.h, ds.w]);
+    t.data.copy_from_slice(&ds.images);
+    Ok((t, ds.labels))
+}
+
+pub fn load_model(data_dir: &str, name: &str) -> Result<Model> {
+    let cfg: ResNetCfg = match name {
+        "resnet18" => resnet18_cfg(),
+        "resnet34" => resnet34_cfg(),
+        "resnet50" => resnet50_cfg(),
+        other => anyhow::bail!("unknown model {other}"),
+    };
+    let map = WeightMap::load(&Path::new(data_dir).join(format!("{name}.w32")))
+        .with_context(|| "run `make artifacts` to train the mini models")?;
+    Ok(resnet_from_weights(&cfg, &map, 10))
+}
+
+fn eval_acc(model: &Model, images: &Tensor, labels: &[u8]) -> f64 {
+    // batch to bound memory
+    let n = images.dims[0];
+    let bs = 32;
+    let mut correct = 0.0;
+    for start in (0..n).step_by(bs) {
+        let end = (start + bs).min(n);
+        let dims = [end - start, images.dims[1], images.dims[2], images.dims[3]];
+        let len = dims.iter().product::<usize>();
+        let off = start * images.dims[1] * images.dims[2] * images.dims[3];
+        let batch = Tensor::from_vec(&dims, images.data[off..off + len].to_vec());
+        correct += model.accuracy(&batch, &labels[start..end]) * (end - start) as f64;
+    }
+    correct / n as f64
+}
+
+struct Row {
+    method: &'static str,
+    algo: &'static str,
+    bits: u32,
+    acc: f64,
+    delta: f64,
+}
+
+fn quantize_and_eval(
+    model: &mut Model,
+    calib: &Tensor,
+    images: &Tensor,
+    labels: &[u8],
+    cfg: &QuantConfig,
+) -> f64 {
+    quantize_model(model, calib, cfg);
+    let acc = eval_acc(model, images, labels);
+    dequantize_model(model);
+    acc
+}
+
+/// Table 2 — PTQ accuracy, Wino(4,3) vs SFC-6(7,3), int8/int6.
+pub fn cmd_table2(data_dir: &str, models: &str, bits_list: &str) -> Result<()> {
+    let (calib, _) = load_split(data_dir, "train", calib_n())?;
+    let (images, labels) = load_split(data_dir, "test", eval_n())?;
+    let bits: Vec<u32> = bits_list.split(',').map(|b| b.parse().unwrap()).collect();
+    println!("Table 2 — post-training quantization on SynthImage (ImageNet stand-in)\n");
+    println!("paper reference (ImageNet): Wino(4,3) int8 Δ≈−1.6..−2.2, int6 Δ≈−4.5..−5.4;");
+    println!("                            SFC-6(7,3) int8 Δ≈−0.12..−0.17, int6 Δ≈−0.6..−1.0\n");
+    for model_name in models.split(',') {
+        let mut model = load_model(data_dir, model_name)?;
+        let fp32 = eval_acc(&model, &images, &labels);
+        println!("{model_name}: fp32 top-1 = {:.2}%", fp32 * 100.0);
+        let mut rows: Vec<Row> = Vec::new();
+        for &b in &bits {
+            let wino = quantize_and_eval(
+                &mut model, &calib, &images, &labels,
+                &QuantConfig::winograd_default(b),
+            );
+            rows.push(Row { method: "Full Quant.", algo: "Wino(4x4,3x3)", bits: b, acc: wino, delta: wino - fp32 });
+            let s = quantize_and_eval(
+                &mut model, &calib, &images, &labels,
+                &QuantConfig::sfc_default(b),
+            );
+            rows.push(Row { method: "Ours", algo: "SFC6(7x7,3x3)", bits: b, acc: s, delta: s - fp32 });
+        }
+        println!(
+            "  {:<14} {:<16} {:>5} {:>8} {:>8}",
+            "Method", "Algorithm", "Bits", "Top-1", "Δ"
+        );
+        for r in rows {
+            println!(
+                "  {:<14} {:<16} {:>5} {:>7.2}% {:>+7.2}%",
+                r.method,
+                r.algo,
+                r.bits,
+                r.acc * 100.0,
+                r.delta * 100.0
+            );
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// Table 4 — quantization granularity ablation at int8.
+pub fn cmd_table4(data_dir: &str) -> Result<()> {
+    let (calib, _) = load_split(data_dir, "train", calib_n())?;
+    let (images, labels) = load_split(data_dir, "test", eval_n())?;
+    let mut model = load_model(data_dir, "resnet18")?;
+    let fp32 = eval_acc(&model, &images, &labels);
+    println!("Table 4 — granularity ablation, int8, resnet18 (fp32 = {:.2}%)\n", fp32 * 100.0);
+    println!("{:<18} {:<12} {:<16} {:>8}", "Algorithm", "Activation", "Filter", "Top-1");
+    let combos: [(&str, &str, Granularity, Granularity); 6] = [
+        ("SFC-6(7x7,3x3)", "Tensor/Channel", Granularity::Tensor, Granularity::Channel),
+        ("SFC-6(7x7,3x3)", "Freq/Channel", Granularity::Freq, Granularity::Channel),
+        ("SFC-6(7x7,3x3)", "Freq/Freq", Granularity::Freq, Granularity::Freq),
+        ("SFC-6(7x7,3x3)", "Freq/Chan+Freq", Granularity::Freq, Granularity::ChannelFreq),
+        ("Wino(4x4,3x3)", "Tensor/Channel", Granularity::Tensor, Granularity::Channel),
+        ("Wino(4x4,3x3)", "Freq/Chan+Freq", Granularity::Freq, Granularity::ChannelFreq),
+    ];
+    for (algo_name, label, a_gran, w_gran) in combos {
+        let spec = by_name(algo_name).unwrap();
+        let cfg = QuantConfig {
+            algo: QAlgoChoice::Fast(spec),
+            w_bits: 8,
+            a_bits: 8,
+            w_gran,
+            a_gran,
+            adaquant: true,
+        };
+        let acc = quantize_and_eval(&mut model, &calib, &images, &labels, &cfg);
+        let (a_label, w_label) = label.split_once('/').unwrap();
+        println!("{:<18} {:<12} {:<16} {:>7.2}%", algo_name, a_label, w_label, acc * 100.0);
+    }
+    println!("\npaper: SFC barely cares (69.18→69.58); Wino(4,3) collapses at Tensor (57.40 vs 67.62).");
+    Ok(())
+}
+
+/// Table 5 — granularity × bit-width for SFC-6(7,3).
+pub fn cmd_table5(data_dir: &str) -> Result<()> {
+    let (calib, _) = load_split(data_dir, "train", calib_n())?;
+    let (images, labels) = load_split(data_dir, "test", eval_n())?;
+    let mut model = load_model(data_dir, "resnet18")?;
+    let fp32 = eval_acc(&model, &images, &labels);
+    println!("Table 5 — SFC-6(7x7,3x3) granularity × bit-width, resnet18 (fp32 = {:.2}%)\n", fp32 * 100.0);
+    println!("{:<28} {:>8} {:>8} {:>8}", "Quant. granularity", "int8", "int6", "int4");
+    let rows: [(&str, Granularity, Granularity); 3] = [
+        ("A: Tensor, W: Channel", Granularity::Tensor, Granularity::Channel),
+        ("A: Freq,   W: Channel", Granularity::Freq, Granularity::Channel),
+        ("A: Freq,   W: Freq+Channel", Granularity::Freq, Granularity::ChannelFreq),
+    ];
+    for (label, a_gran, w_gran) in rows {
+        let mut accs = Vec::new();
+        for bits in [8u32, 6, 4] {
+            let cfg = QuantConfig {
+                algo: QAlgoChoice::Fast(by_name("SFC-6(7x7,3x3)").unwrap()),
+                w_bits: bits,
+                a_bits: bits,
+                w_gran,
+                a_gran,
+                adaquant: true,
+            };
+            accs.push(quantize_and_eval(&mut model, &calib, &images, &labels, &cfg));
+        }
+        println!(
+            "{:<28} {:>7.2}% {:>7.2}% {:>7.2}%",
+            label,
+            accs[0] * 100.0,
+            accs[1] * 100.0,
+            accs[2] * 100.0
+        );
+    }
+    println!("\npaper: finer granularity matters more as bits shrink (17.81 → 55.82 at int4).");
+    Ok(())
+}
+
+/// Fig. 3 — transform-domain energy distribution of a mid-network layer.
+pub fn cmd_fig3(data_dir: &str) -> Result<()> {
+    let (images, _) = load_split(data_dir, "test", 64.min(eval_n()))?;
+    let model = load_model(data_dir, "resnet18")?;
+    let acts = model.forward_all(&images);
+    // the paper probes the 9th conv layer of ResNet-18
+    let conv_nodes = model.conv_nodes();
+    let probe = conv_nodes[8.min(conv_nodes.len() - 1)];
+    let input_act = &acts[model.nodes[probe].inputs[0]];
+    let plan = FastConvPlan::new(by_name("SFC-6(7x7,3x3)").unwrap().build());
+    let maxima_energy = energy_per_frequency(input_act, &plan);
+    let t = plan.t();
+    println!(
+        "Fig. 3 — mean transform-domain energy, layer '{}' input ({}x{} SFT grid)\n",
+        model.nodes[probe].name, t, t
+    );
+    let max = maxima_energy.iter().cloned().fold(0.0f64, f64::max);
+    for u in 0..t {
+        let row: Vec<String> = (0..t)
+            .map(|v| format!("{:>6.3}", maxima_energy[u * t + v] / max))
+            .collect();
+        println!("  {}", row.join(" "));
+    }
+    // low-frequency concentration metric (frequencies are ordered
+    // [DC, (u1,v1) pairs..., Nyquist] per SFT component layout: row/col 0
+    // is DC, the last is the alternating component)
+    let dc_corner: f64 = (0..3).flat_map(|u| (0..3).map(move |v| (u, v)))
+        .map(|(u, v)| maxima_energy[u * t + v])
+        .sum();
+    let total: f64 = maxima_energy.iter().sum();
+    println!(
+        "\nlow-frequency 3×3 corner holds {:.0}% of total energy (paper: 'energy is concentrated in the low frequencies')",
+        100.0 * dc_corner / total
+    );
+    Ok(())
+}
+
+fn energy_per_frequency(x: &Tensor, plan: &FastConvPlan) -> Vec<f64> {
+    use crate::nn::conv::gather_tile;
+    let (n, ic, h, w) = x.dims4();
+    let (m, l, t) = (plan.m(), plan.l(), plan.t());
+    let tt = t * t;
+    let tiles_y = h.div_ceil(m);
+    let tiles_x = w.div_ceil(m);
+    let mut energy = vec![0f64; tt];
+    let mut tile = vec![0f32; l * l];
+    let mut scratch = vec![0f32; t * l];
+    let mut tv = vec![0f32; tt];
+    for ni in 0..n.min(16) {
+        for c in 0..ic {
+            for ty in 0..tiles_y {
+                for tx in 0..tiles_x {
+                    gather_tile(x, ni, c, ty, tx, m, l, 1, &mut tile);
+                    plan.transform_tile(&tile, &mut scratch, &mut tv);
+                    for uv in 0..tt {
+                        energy[uv] += (tv[uv] as f64).powi(2);
+                    }
+                }
+            }
+        }
+    }
+    energy
+}
+
+/// Fig. 4 — accuracy vs computation cost (GBOPs), int8→int4.
+pub fn cmd_fig4(data_dir: &str) -> Result<()> {
+    let (calib, _) = load_split(data_dir, "train", calib_n())?;
+    let (images, labels) = load_split(data_dir, "test", eval_n())?;
+    let mut model = load_model(data_dir, "resnet18")?;
+    let fp32 = eval_acc(&model, &images, &labels);
+    let shapes = model_conv_shapes(&model, 32);
+    println!("Fig. 4 — accuracy vs computation cost, resnet18 (fp32 = {:.2}%)\n", fp32 * 100.0);
+    println!("{:<18} {:>5} {:>10} {:>8}", "Algorithm", "Bits", "GBOPs", "Top-1");
+    let algo_rows: [(&str, Option<&str>); 3] = [
+        ("direct", None),
+        ("Wino(4x4,3x3)", Some("Wino(4x4,3x3)")),
+        ("SFC-6(7x7,3x3)", Some("SFC-6(7x7,3x3)")),
+    ];
+    for (label, algo_name) in algo_rows {
+        for bits in [8u32, 6, 5, 4] {
+            let (cfg, bil) = match algo_name {
+                None => (QuantConfig::direct_default(bits), None),
+                Some(nm) => {
+                    let spec = by_name(nm).unwrap();
+                    let mut cfg = QuantConfig::sfc_default(bits);
+                    cfg.algo = QAlgoChoice::Fast(spec.clone());
+                    (cfg, Some(spec.build()))
+                }
+            };
+            let acc = quantize_and_eval(&mut model, &calib, &images, &labels, &cfg);
+            let gbops = crate::bops::model_gbops(&shapes, bil.as_ref(), bits as u64, bits as u64);
+            println!("{:<18} {:>5} {:>10.3} {:>7.2}%", label, bits, gbops, acc * 100.0);
+        }
+    }
+    println!("\npaper: SFC curve dominates — 1.6×–2.5× fewer BOPs at equal accuracy.");
+    Ok(())
+}
+
+/// Fig. 5 — per-layer MSE vs fp32 under int8 PTQ, per algorithm.
+pub fn cmd_fig5(data_dir: &str) -> Result<()> {
+    let (calib, _) = load_split(data_dir, "train", calib_n())?;
+    let (probe, _) = load_split(data_dir, "test", 32)?;
+    let mut model = load_model(data_dir, "resnet18")?;
+    let fp32_acts = model.forward_all(&probe);
+    println!("Fig. 5 — per-layer output MSE vs fp32 under int8 PTQ, resnet18\n");
+    let configs: [(&str, QuantConfig); 3] = [
+        ("direct", QuantConfig::direct_default(8)),
+        ("Wino(4x4,3x3)", QuantConfig::winograd_default(8)),
+        ("SFC-6(7x7,3x3)", QuantConfig::sfc_default(8)),
+    ];
+    let mut per_algo: Vec<(String, Vec<(String, f64)>)> = Vec::new();
+    for (label, cfg) in configs {
+        quantize_model(&mut model, &calib, &cfg);
+        per_algo.push((label.to_string(), layer_mse(&model, &fp32_acts, &probe)));
+        dequantize_model(&mut model);
+    }
+    // union of quantized layers (direct quantizes more nodes: print common)
+    let names: Vec<String> = per_algo
+        .iter()
+        .min_by_key(|(_, v)| v.len())
+        .unwrap()
+        .1
+        .iter()
+        .map(|(n, _)| n.clone())
+        .collect();
+    print!("{:<14}", "layer");
+    for (label, _) in &per_algo {
+        print!(" {label:>16}");
+    }
+    println!();
+    let mut geo: Vec<f64> = vec![0.0; per_algo.len()];
+    for name in &names {
+        print!("{name:<14}");
+        for (ai, (_, rows)) in per_algo.iter().enumerate() {
+            let v = rows.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(f64::NAN);
+            geo[ai] += v.max(1e-30).ln();
+            print!(" {v:>16.3e}");
+        }
+        println!();
+    }
+    print!("{:<14}", "geo-mean");
+    for g in &geo {
+        print!(" {:>16.3e}", (g / names.len() as f64).exp());
+    }
+    println!("\n\npaper: Winograd layers sit ~an order of magnitude above direct/SFC (matches κ analysis).");
+    Ok(())
+}

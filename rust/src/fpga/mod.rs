@@ -1,0 +1,233 @@
+//! FPGA accelerator model (Table 3's substitute — DESIGN.md §2).
+//!
+//! Models a fully-pipelined fast-convolution datapath at the paper's
+//! design point: parallelism [P_ic × P_oc × tile], 200 MHz, int8.
+//! Resources follow DSP48E packing rules (one DSP = two int8 multipliers
+//! or one int16 multiplier) and a LUT cost model for the ±1/0 SFT adder
+//! networks; throughput comes from a cycle-level pipeline simulation of a
+//! conv stack (VGG-16 by default), counting effective GOPs (2·MACs of the
+//! *equivalent direct* convolution, the convention all four compared
+//! papers use).
+
+pub mod pipeline;
+
+use crate::algo::Bilinear;
+use crate::nn::model::ConvShape;
+
+/// Arithmetic style of the accelerator datapath.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Datapath {
+    /// direct convolution MAC array
+    Direct { bits: u32 },
+    /// Winograd-style bilinear with `mul_bits` multipliers
+    Bilinear { mul_bits: u32 },
+    /// NTT butterflies + pointwise mod-p multipliers (high width)
+    Ntt { word_bits: u32 },
+}
+
+/// One accelerator configuration (a Table-3 column).
+#[derive(Clone, Debug)]
+pub struct Accel {
+    pub name: String,
+    pub datapath: Datapath,
+    /// input-channel / output-channel parallelism
+    pub p_ic: usize,
+    pub p_oc: usize,
+    /// multiplications per (ic, oc) tile-pair per cycle-group:
+    /// T² for bilinear, M²·R² for direct, FFT-size for NTT
+    pub tile_mults: usize,
+    /// output pixels produced per tile per (ic-group completion)
+    pub tile_outputs: usize,
+    /// equivalent-direct MACs represented by one tile
+    pub tile_eq_macs: usize,
+    /// adds per input tile for the transforms (per channel)
+    pub transform_adds: usize,
+    pub clock_mhz: f64,
+}
+
+/// Resource report (Table 3 rows).
+#[derive(Clone, Debug)]
+pub struct Resources {
+    pub dsps: u64,
+    pub luts_k: f64,
+}
+
+impl Accel {
+    /// SFC/Winograd accelerator from a bilinear algorithm.
+    pub fn from_bilinear(name: &str, algo: &Bilinear, p_ic: usize, p_oc: usize, mul_bits: u32) -> Accel {
+        let (bt_adds, _, at_adds) = algo.transform_adds_2d();
+        Accel {
+            name: name.into(),
+            datapath: Datapath::Bilinear { mul_bits },
+            p_ic,
+            p_oc,
+            tile_mults: algo.mults_2d(),
+            tile_outputs: algo.m * algo.m,
+            tile_eq_macs: algo.m * algo.m * algo.r * algo.r,
+            transform_adds: bt_adds + at_adds,
+            clock_mhz: 200.0,
+        }
+    }
+
+    /// Direct int8 MAC-array accelerator producing m×m outputs per tile.
+    pub fn direct(name: &str, m: usize, r: usize, p_ic: usize, p_oc: usize, bits: u32) -> Accel {
+        Accel {
+            name: name.into(),
+            datapath: Datapath::Direct { bits },
+            p_ic,
+            p_oc,
+            tile_mults: m * m * r * r,
+            tile_outputs: m * m,
+            tile_eq_macs: m * m * r * r,
+            transform_adds: 0,
+            clock_mhz: 200.0,
+        }
+    }
+
+    /// NTT accelerator: FFT-length L tile computing (L−R+1)² valid outputs
+    /// with L² pointwise high-width multiplies (butterflies in LUTs/DSP mix).
+    pub fn ntt(name: &str, l: usize, r: usize, p_ic: usize, p_oc: usize, word_bits: u32) -> Accel {
+        let m = l - r + 1;
+        Accel {
+            name: name.into(),
+            datapath: Datapath::Ntt { word_bits },
+            p_ic,
+            p_oc,
+            tile_mults: l * l,
+            tile_outputs: m * m,
+            tile_eq_macs: m * m * r * r,
+            transform_adds: 4 * l * l, // butterfly adds per tile (both dirs)
+            clock_mhz: 200.0,
+        }
+    }
+
+    /// DSP and LUT usage of the multiply array + adder networks.
+    pub fn resources(&self) -> Resources {
+        let mults = (self.p_ic * self.p_oc * self.tile_mults) as u64;
+        let (dsp_per_mult, mul_bits) = match self.datapath {
+            Datapath::Direct { bits } | Datapath::Bilinear { mul_bits: bits } => {
+                if bits <= 8 {
+                    (0.5, bits)
+                } else if bits <= 18 {
+                    (1.0, bits)
+                } else {
+                    (2.0, bits)
+                }
+            }
+            Datapath::Ntt { word_bits } => (if word_bits <= 18 { 1.0 } else { 2.0 }, word_bits),
+        };
+        let dsps = (mults as f64 * dsp_per_mult).ceil() as u64;
+        // LUT model: transforms (adds at grown width across P_ic lanes,
+        // P_oc lanes for output) + accumulators + control overhead.
+        let add_bits = (mul_bits + 4) as f64;
+        let transform_luts =
+            self.transform_adds as f64 * add_bits * (self.p_ic + self.p_oc) as f64 / 2.0;
+        let acc_luts = (self.p_oc * self.tile_mults) as f64 * 32.0;
+        let ctrl_luts = 30_000.0 + (self.p_ic * self.p_oc) as f64 * 40.0;
+        Resources { dsps, luts_k: (transform_luts + acc_luts + ctrl_luts) / 1000.0 }
+    }
+
+    /// Peak throughput in equivalent-direct GOPs (2 ops per MAC).
+    ///
+    /// Each cycle the array performs P_ic·P_oc·tile_mults physical
+    /// multiplies = P_ic·P_oc tile-channel-pairs; one complete output tile
+    /// (per oc) needs IC/P_ic such cycles, so in steady state the machine
+    /// retires P_ic·P_oc·tile_eq_macs equivalent-direct MACs per cycle.
+    pub fn peak_gops(&self) -> f64 {
+        let macs_per_cycle = (self.p_ic * self.p_oc * self.tile_eq_macs) as f64;
+        2.0 * macs_per_cycle * self.clock_mhz * 1e6 / 1e9
+    }
+
+    /// Efficiency: GOPs / DSP / GHz — Table 3's headline metric.
+    pub fn gops_per_dsp_per_ghz(&self, achieved_gops: f64) -> f64 {
+        achieved_gops / self.resources().dsps as f64 / (self.clock_mhz / 1000.0)
+    }
+}
+
+/// A Table-3 style report row.
+#[derive(Clone, Debug)]
+pub struct Table3Row {
+    pub name: String,
+    pub precision: String,
+    pub luts_k: f64,
+    pub dsps: u64,
+    pub clock_mhz: f64,
+    pub gops: f64,
+    pub gops_per_dsp_per_clock: f64,
+}
+
+/// Run the pipeline simulation of `shapes` on `accel` and produce the row.
+pub fn evaluate(accel: &Accel, shapes: &[ConvShape], precision: &str) -> Table3Row {
+    let res = accel.resources();
+    let sim = pipeline::simulate(accel, shapes);
+    Table3Row {
+        name: accel.name.clone(),
+        precision: precision.into(),
+        luts_k: res.luts_k,
+        dsps: res.dsps,
+        clock_mhz: accel.clock_mhz,
+        gops: sim.achieved_gops,
+        gops_per_dsp_per_clock: accel.gops_per_dsp_per_ghz(sim.achieved_gops),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{sfc, winograd};
+    use crate::nn::model::vgg16_conv_shapes;
+
+    fn sfc_accel() -> Accel {
+        // The paper's design point: [4×4×7×7] parallelism, SFC-6(7,3), int8.
+        Accel::from_bilinear("SFC", &sfc(6, 7, 3), 4, 4, 8)
+    }
+
+    #[test]
+    fn sfc_dsp_count_matches_paper() {
+        // Paper: 4×4×132×0.5 = 1056 DSPs. Our nested tile has 144 mult
+        // lanes (the RTL exploits Hermitian symmetry to implement 132);
+        // check we land in the same range and exactly match with the
+        // Hermitian count.
+        let a = sfc_accel();
+        let dsps = a.resources().dsps;
+        assert_eq!(dsps, (4.0 * 4.0 * 144.0 * 0.5) as u64);
+        let herm = (4.0 * 4.0 * 132.0 * 0.5) as u64;
+        assert_eq!(herm, 1056); // the paper's figure
+        assert!((dsps as f64 - herm as f64).abs() / (herm as f64) < 0.1);
+    }
+
+    #[test]
+    fn winograd16_needs_more_dsps_per_mult() {
+        // 16-bit multipliers cost a whole DSP each (Liang et al. design).
+        let w = Accel::from_bilinear("Wino16", &winograd(4, 3), 4, 4, 16);
+        let s = sfc_accel();
+        let w_per_mult = w.resources().dsps as f64 / (4.0 * 4.0 * w.tile_mults as f64);
+        let s_per_mult = s.resources().dsps as f64 / (4.0 * 4.0 * s.tile_mults as f64);
+        assert!(w_per_mult > s_per_mult * 1.9);
+    }
+
+    #[test]
+    fn efficiency_ranking_matches_table3() {
+        // GOPs/DSP/clock: SFC > Winograd > NTT > direct (paper: 10.08 >
+        // 5.64 > 3.48 > 1.96).
+        let shapes = vgg16_conv_shapes();
+        let rows = [
+            evaluate(&Accel::from_bilinear("Wino", &winograd(4, 3), 4, 4, 16), &shapes, "16bit"),
+            evaluate(&Accel::ntt("NTT", 8, 3, 4, 4, 21), &shapes, "8/21bit"),
+            evaluate(&Accel::direct("direct", 7, 3, 4, 4, 8), &shapes, "8bit"),
+            evaluate(&sfc_accel(), &shapes, "8bit"),
+        ];
+        let eff: Vec<f64> = rows.iter().map(|r| r.gops_per_dsp_per_clock).collect();
+        let (wino, ntt, direct, sfc_eff) = (eff[0], eff[1], eff[2], eff[3]);
+        assert!(sfc_eff > wino, "SFC {sfc_eff} > Wino {wino}");
+        assert!(wino > ntt, "Wino {wino} > NTT {ntt}");
+        assert!(ntt > direct, "NTT {ntt} > direct {direct}");
+    }
+
+    #[test]
+    fn throughput_order_of_magnitude() {
+        // The paper reports ~2129 GOPs for the SFC accelerator on VGG-16.
+        let row = evaluate(&sfc_accel(), &vgg16_conv_shapes(), "8bit");
+        assert!(row.gops > 500.0 && row.gops < 6000.0, "GOPs {}", row.gops);
+    }
+}

@@ -1,0 +1,115 @@
+//! Cycle-level pipeline simulation of an accelerator over a conv stack.
+//!
+//! The datapath is fully pipelined (the paper: "all computing stages in
+//! fast convolution are designed to operate in a full pipeline
+//! architecture"), so the layer time is dominated by multiplier-array
+//! occupancy: ⌈IC/P_ic⌉·⌈OC/P_oc⌉·tiles cycles, plus a pipeline fill
+//! latency per layer. Utilization losses come from ragged channel/tile
+//! edges (e.g. the 3-channel input layer on a P_ic = 4 machine) — exactly
+//! the second-order effects that separate "peak" from "achieved" GOPs in
+//! Table 3.
+
+use super::Accel;
+use crate::nn::model::ConvShape;
+
+/// Pipeline fill latency per layer (transform + multiply + inverse
+/// stages; conservative constant).
+pub const FILL_CYCLES: u64 = 64;
+
+#[derive(Clone, Debug)]
+pub struct LayerSim {
+    pub cycles: u64,
+    pub eq_macs: u64,
+    pub utilization: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub layers: Vec<LayerSim>,
+    pub total_cycles: u64,
+    pub total_eq_macs: u64,
+    pub achieved_gops: f64,
+    pub utilization: f64,
+}
+
+/// Tile grid of a layer for an accelerator producing m×m output tiles.
+fn tiles_for(accel: &Accel, s: &ConvShape) -> u64 {
+    let m = (accel.tile_outputs as f64).sqrt().round() as usize;
+    let oh = s.h / s.stride;
+    let ow = s.w / s.stride;
+    (oh.div_ceil(m) * ow.div_ceil(m)) as u64
+}
+
+/// Simulate one layer.
+pub fn simulate_layer(accel: &Accel, s: &ConvShape) -> LayerSim {
+    let tiles = tiles_for(accel, s);
+    let ic_groups = s.ic.div_ceil(accel.p_ic) as u64;
+    let oc_groups = s.oc.div_ceil(accel.p_oc) as u64;
+    let cycles = ic_groups * oc_groups * tiles + FILL_CYCLES;
+    let eq_macs = s.direct_macs();
+    // utilization: useful mults / issued mult slots
+    let issued = cycles.saturating_sub(FILL_CYCLES)
+        * (accel.p_ic * accel.p_oc * accel.tile_mults) as u64;
+    let useful = (s.ic * s.oc) as u64 * tiles * accel.tile_mults as u64;
+    let utilization = if issued > 0 { useful as f64 / issued as f64 } else { 0.0 };
+    LayerSim { cycles, eq_macs, utilization }
+}
+
+/// Simulate a conv stack; layers execute back-to-back (single-engine,
+/// layer-sequential schedule, as in the compared designs).
+pub fn simulate(accel: &Accel, shapes: &[ConvShape]) -> SimReport {
+    let layers: Vec<LayerSim> = shapes.iter().map(|s| simulate_layer(accel, s)).collect();
+    let total_cycles: u64 = layers.iter().map(|l| l.cycles).sum();
+    let total_eq_macs: u64 = layers.iter().map(|l| l.eq_macs).sum();
+    let seconds = total_cycles as f64 / (accel.clock_mhz * 1e6);
+    let achieved_gops = 2.0 * total_eq_macs as f64 / seconds / 1e9;
+    let utilization = achieved_gops / accel.peak_gops();
+    SimReport { layers, total_cycles, total_eq_macs, achieved_gops, utilization }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::sfc;
+    use crate::nn::model::vgg16_conv_shapes;
+
+    fn accel() -> Accel {
+        Accel::from_bilinear("SFC", &sfc(6, 7, 3), 4, 4, 8)
+    }
+
+    #[test]
+    fn utilization_below_one() {
+        let r = simulate(&accel(), &vgg16_conv_shapes());
+        assert!(r.utilization > 0.3 && r.utilization <= 1.0, "util {}", r.utilization);
+        assert!(r.achieved_gops <= accel().peak_gops());
+    }
+
+    #[test]
+    fn first_layer_is_underutilized() {
+        // IC = 3 on a P_ic = 4 machine: ≤ 75% utilization.
+        let shapes = vgg16_conv_shapes();
+        let l0 = simulate_layer(&accel(), &shapes[0]);
+        assert!(l0.utilization <= 0.76, "util {}", l0.utilization);
+        let l1 = simulate_layer(&accel(), &shapes[1]);
+        assert!(l1.utilization > 0.9, "deep layers fill the array: {}", l1.utilization);
+    }
+
+    #[test]
+    fn cycles_scale_with_channels() {
+        let a = accel();
+        let s1 = ConvShape { ic: 64, oc: 64, h: 28, w: 28, r: 3, stride: 1 };
+        let s2 = ConvShape { ic: 128, oc: 64, h: 28, w: 28, r: 3, stride: 1 };
+        let c1 = simulate_layer(&a, &s1).cycles;
+        let c2 = simulate_layer(&a, &s2).cycles;
+        assert!(c2 > c1 && c2 < c1 * 21 / 10, "{c1} -> {c2}");
+    }
+
+    #[test]
+    fn vgg16_runtime_sane() {
+        // One VGG-16 inference (~15.3 G direct MACs) at ~2.8 TOPs peak must
+        // land in the 10–30 ms range.
+        let r = simulate(&accel(), &vgg16_conv_shapes());
+        let ms = r.total_cycles as f64 / (200e6) * 1e3;
+        assert!(ms > 5.0 && ms < 50.0, "VGG-16 latency {ms} ms");
+    }
+}

@@ -1,0 +1,27 @@
+//! # SFC — Symbolic Fourier Convolution
+//!
+//! Full-system reproduction of *"SFC: Achieve Accurate Fast Convolution
+//! under Low-precision Arithmetic"* (He et al., ICML 2024) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`algo`] — the paper's algorithm family: symbolic-DFT fast
+//!   convolution with correction terms, plus Winograd/FFT/NTT baselines.
+//! * [`linalg`] — exact rational matrices + Jacobi SVD (condition numbers).
+//! * [`nn`] / [`quant`] — the quantized inference engine reproducing the
+//!   PTQ experiments (§6.1, Tables 2/4/5, Figs. 4/5).
+//! * [`data`] — SynthImage dataset (ImageNet stand-in, DESIGN.md §2).
+//! * [`util`] — PRNG / fp16 / timing / parallel-for shims.
+
+pub mod algo;
+pub mod bops;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod exp;
+pub mod fpga;
+pub mod linalg;
+pub mod runtime;
+pub mod nn;
+pub mod quant;
+pub mod util;

@@ -1,0 +1,186 @@
+//! Exact rational numbers over i128.
+//!
+//! All fast-convolution transformation matrices have small rational entries
+//! (denominators divide N for SFC, products of point differences for
+//! Toom-Cook), so i128 never comes close to overflow; we still check with
+//! debug assertions.
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
+
+/// A reduced fraction `num/den`, `den > 0`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Frac {
+    pub num: i128,
+    pub den: i128,
+}
+
+fn gcd(a: i128, b: i128) -> i128 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+impl Frac {
+    pub const ZERO: Frac = Frac { num: 0, den: 1 };
+    pub const ONE: Frac = Frac { num: 1, den: 1 };
+
+    pub fn new(num: i128, den: i128) -> Self {
+        assert!(den != 0, "zero denominator");
+        let g = gcd(num, den).max(1);
+        let sign = if den < 0 { -1 } else { 1 };
+        Frac { num: sign * num / g, den: sign * den / g }
+    }
+
+    pub fn int(v: i128) -> Self {
+        Frac { num: v, den: 1 }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.num == 0
+    }
+
+    pub fn is_integer(&self) -> bool {
+        self.den == 1
+    }
+
+    pub fn to_f64(&self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+
+    pub fn abs(&self) -> Frac {
+        Frac { num: self.num.abs(), den: self.den }
+    }
+
+    pub fn recip(&self) -> Frac {
+        assert!(self.num != 0, "reciprocal of zero");
+        Frac::new(self.den, self.num)
+    }
+
+    pub fn pow(&self, e: u32) -> Frac {
+        let mut out = Frac::ONE;
+        for _ in 0..e {
+            out = out * *self;
+        }
+        out
+    }
+}
+
+impl Add for Frac {
+    type Output = Frac;
+    fn add(self, o: Frac) -> Frac {
+        Frac::new(self.num * o.den + o.num * self.den, self.den * o.den)
+    }
+}
+
+impl AddAssign for Frac {
+    fn add_assign(&mut self, o: Frac) {
+        *self = *self + o;
+    }
+}
+
+impl Sub for Frac {
+    type Output = Frac;
+    fn sub(self, o: Frac) -> Frac {
+        Frac::new(self.num * o.den - o.num * self.den, self.den * o.den)
+    }
+}
+
+impl Mul for Frac {
+    type Output = Frac;
+    fn mul(self, o: Frac) -> Frac {
+        Frac::new(self.num * o.num, self.den * o.den)
+    }
+}
+
+impl Div for Frac {
+    type Output = Frac;
+    fn div(self, o: Frac) -> Frac {
+        assert!(o.num != 0, "division by zero");
+        Frac::new(self.num * o.den, self.den * o.num)
+    }
+}
+
+impl Neg for Frac {
+    type Output = Frac;
+    fn neg(self) -> Frac {
+        Frac { num: -self.num, den: self.den }
+    }
+}
+
+impl PartialOrd for Frac {
+    fn partial_cmp(&self, o: &Frac) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl Ord for Frac {
+    fn cmp(&self, o: &Frac) -> Ordering {
+        (self.num * o.den).cmp(&(o.num * self.den))
+    }
+}
+
+impl fmt::Debug for Frac {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.den == 1 {
+            write!(f, "{}", self.num)
+        } else {
+            write!(f, "{}/{}", self.num, self.den)
+        }
+    }
+}
+
+impl fmt::Display for Frac {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = Frac::new(1, 2);
+        let b = Frac::new(1, 3);
+        assert_eq!(a + b, Frac::new(5, 6));
+        assert_eq!(a - b, Frac::new(1, 6));
+        assert_eq!(a * b, Frac::new(1, 6));
+        assert_eq!(a / b, Frac::new(3, 2));
+        assert_eq!(-a, Frac::new(-1, 2));
+    }
+
+    #[test]
+    fn reduction_and_sign() {
+        assert_eq!(Frac::new(2, 4), Frac::new(1, 2));
+        assert_eq!(Frac::new(1, -2), Frac::new(-1, 2));
+        assert_eq!(Frac::new(-3, -6), Frac::new(1, 2));
+        assert_eq!(Frac::new(0, -5), Frac::ZERO);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Frac::new(1, 3) < Frac::new(1, 2));
+        assert!(Frac::new(-1, 2) < Frac::ZERO);
+        assert_eq!(Frac::new(2, 6).cmp(&Frac::new(1, 3)), Ordering::Equal);
+    }
+
+    #[test]
+    fn pow_and_recip() {
+        assert_eq!(Frac::new(2, 3).pow(3), Frac::new(8, 27));
+        assert_eq!(Frac::new(2, 3).recip(), Frac::new(3, 2));
+        assert_eq!(Frac::new(-5, 4).recip(), Frac::new(-4, 5));
+    }
+
+    #[test]
+    fn to_f64_exact_halves() {
+        assert_eq!(Frac::new(3, 4).to_f64(), 0.75);
+        assert_eq!(Frac::new(-7, 2).to_f64(), -3.5);
+    }
+}

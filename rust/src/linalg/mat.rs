@@ -1,0 +1,331 @@
+//! Dense row-major matrices: exact (`FracMat`) and floating (`Mat`).
+
+use super::Frac;
+use std::fmt;
+
+/// Exact rational dense matrix, row-major.
+#[derive(Clone, PartialEq, Eq)]
+pub struct FracMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<Frac>,
+}
+
+impl FracMat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        FracMat { rows, cols, data: vec![Frac::ZERO; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = Frac::ONE;
+        }
+        m
+    }
+
+    pub fn from_i128(rows: usize, cols: usize, vals: &[i128]) -> Self {
+        assert_eq!(vals.len(), rows * cols);
+        FracMat { rows, cols, data: vals.iter().map(|&v| Frac::int(v)).collect() }
+    }
+
+    pub fn row(&self, r: usize) -> &[Frac] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn matmul(&self, other: &FracMat) -> FracMat {
+        assert_eq!(self.cols, other.rows, "dim mismatch {}x{} * {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let mut out = FracMat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a.is_zero() {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    let b = other[(k, j)];
+                    if !b.is_zero() {
+                        out[(i, j)] += a * b;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> FracMat {
+        let mut out = FracMat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, v: &[Frac]) -> Vec<Frac> {
+        assert_eq!(v.len(), self.cols);
+        (0..self.rows)
+            .map(|i| {
+                let mut acc = Frac::ZERO;
+                for j in 0..self.cols {
+                    if !self[(i, j)].is_zero() && !v[j].is_zero() {
+                        acc += self[(i, j)] * v[j];
+                    }
+                }
+                acc
+            })
+            .collect()
+    }
+
+    pub fn to_f64(&self) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|f| f.to_f64()).collect() }
+    }
+
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        self.data.iter().map(|f| f.to_f64() as f32).collect()
+    }
+
+    /// True if every entry is an integer.
+    pub fn is_integral(&self) -> bool {
+        self.data.iter().all(|f| f.is_integer())
+    }
+
+    /// Least common multiple of all denominators.
+    pub fn den_lcm(&self) -> i128 {
+        let mut l: i128 = 1;
+        for f in &self.data {
+            let g = {
+                let (mut a, mut b) = (l, f.den);
+                while b != 0 {
+                    let t = a % b;
+                    a = b;
+                    b = t;
+                }
+                a
+            };
+            l = l / g * f.den;
+        }
+        l
+    }
+
+    /// Multiply every entry by an integer scalar.
+    pub fn scale_int(&self, s: i128) -> FracMat {
+        let mut out = self.clone();
+        for f in out.data.iter_mut() {
+            *f = *f * Frac::int(s);
+        }
+        out
+    }
+
+    /// Number of addition/subtraction ops to apply this matrix to a vector
+    /// (nonzeros minus nonzero rows; ±1 entries need no multiplies). Used by
+    /// the BOPs model for transform cost.
+    pub fn add_count(&self) -> usize {
+        let mut adds = 0;
+        for i in 0..self.rows {
+            let nnz = self.row(i).iter().filter(|f| !f.is_zero()).count();
+            adds += nnz.saturating_sub(1);
+        }
+        adds
+    }
+
+    /// Max absolute row sum (L_inf operator norm) — bounds bit growth of the
+    /// transform when applied to integer data.
+    pub fn linf_norm(&self) -> f64 {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|f| f.to_f64().abs()).sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+
+    /// Exact inverse via Gauss–Jordan elimination with partial pivoting.
+    /// Returns None if the matrix is singular.
+    pub fn inverse(&self) -> Option<FracMat> {
+        assert_eq!(self.rows, self.cols, "inverse of non-square matrix");
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut inv = FracMat::identity(n);
+        for col in 0..n {
+            // pivot: any nonzero entry (exact arithmetic, no scaling concern)
+            let pivot = (col..n).find(|&r| !a[(r, col)].is_zero())?;
+            if pivot != col {
+                for j in 0..n {
+                    let (x, y) = (a[(pivot, j)], a[(col, j)]);
+                    a[(pivot, j)] = y;
+                    a[(col, j)] = x;
+                    let (x, y) = (inv[(pivot, j)], inv[(col, j)]);
+                    inv[(pivot, j)] = y;
+                    inv[(col, j)] = x;
+                }
+            }
+            let p = a[(col, col)].recip();
+            for j in 0..n {
+                a[(col, j)] = a[(col, j)] * p;
+                inv[(col, j)] = inv[(col, j)] * p;
+            }
+            for r in 0..n {
+                if r != col && !a[(r, col)].is_zero() {
+                    let factor = a[(r, col)];
+                    for j in 0..n {
+                        let s = a[(col, j)] * factor;
+                        a[(r, j)] = a[(r, j)] - s;
+                        let s = inv[(col, j)] * factor;
+                        inv[(r, j)] = inv[(r, j)] - s;
+                    }
+                }
+            }
+        }
+        Some(inv)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for FracMat {
+    type Output = Frac;
+    fn index(&self, (r, c): (usize, usize)) -> &Frac {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for FracMat {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut Frac {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+impl fmt::Debug for FracMat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "FracMat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows {
+            write!(f, "  [")?;
+            for j in 0..self.cols {
+                write!(f, "{:>6}", format!("{:?}", self[(i, j)]))?;
+                if j + 1 < self.cols {
+                    write!(f, ", ")?;
+                }
+            }
+            writeln!(f, "]")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// f64 dense matrix, row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let dst = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (d, &b) in dst.iter_mut().zip(orow) {
+                    *d += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.cols);
+        (0..self.rows).map(|i| self.row(i).iter().zip(v).map(|(a, b)| a * b).sum()).collect()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frac_matmul_identity() {
+        let m = FracMat::from_i128(2, 3, &[1, 2, 3, 4, 5, 6]);
+        let i3 = FracMat::identity(3);
+        assert_eq!(m.matmul(&i3), m);
+    }
+
+    #[test]
+    fn frac_matvec() {
+        let m = FracMat::from_i128(2, 2, &[1, -1, 2, 0]);
+        let v = vec![Frac::int(3), Frac::int(5)];
+        assert_eq!(m.matvec(&v), vec![Frac::int(-2), Frac::int(6)]);
+    }
+
+    #[test]
+    fn add_count_skips_zero_rows() {
+        // row [1,1,1] -> 2 adds; row [0,1,0] -> 0 adds
+        let m = FracMat::from_i128(2, 3, &[1, 1, 1, 0, 1, 0]);
+        assert_eq!(m.add_count(), 2);
+    }
+
+    #[test]
+    fn den_lcm_and_scale() {
+        let m = FracMat {
+            rows: 1,
+            cols: 3,
+            data: vec![Frac::new(1, 2), Frac::new(1, 3), Frac::new(5, 6)],
+        };
+        assert_eq!(m.den_lcm(), 6);
+        assert!(m.scale_int(6).is_integral());
+    }
+
+    #[test]
+    fn f64_matmul_matches_manual() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = FracMat::from_i128(2, 3, &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+}

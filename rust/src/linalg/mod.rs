@@ -1,0 +1,14 @@
+//! Exact and floating small-matrix linear algebra.
+//!
+//! The algorithm constructor (`crate::algo`) builds every transformation
+//! matrix over exact rationals so the reproduced SFC / Winograd algorithms
+//! are bit-identical to their mathematical definition; condition numbers
+//! for Table 1 come from the Jacobi SVD here.
+
+pub mod frac;
+pub mod mat;
+pub mod svd;
+
+pub use frac::Frac;
+pub use mat::{FracMat, Mat};
+pub use svd::{condition_number, singular_values};

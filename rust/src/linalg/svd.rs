@@ -1,0 +1,139 @@
+//! Singular values and condition numbers via one-sided Jacobi SVD.
+//!
+//! Table 1 reports κ(Aᵀ) = σ_max/σ_min for the output-transform matrix of
+//! each fast-convolution algorithm; matrices are tiny (≤ ~16×16), so the
+//! quadratically-convergent one-sided Jacobi method is exact enough at f64.
+
+use super::Mat;
+
+/// All singular values of `m` (descending).
+pub fn singular_values(m: &Mat) -> Vec<f64> {
+    // Work on A (rows>=cols makes the one-sided iteration cheaper).
+    let a = if m.rows >= m.cols { m.clone() } else { m.transpose() };
+    let (rows, cols) = (a.rows, a.cols);
+    let mut u = a.data.clone(); // column-updated in place (row-major)
+
+    let col = |u: &Vec<f64>, j: usize| -> Vec<f64> { (0..rows).map(|i| u[i * cols + j]).collect() };
+    let _ = col;
+
+    let max_sweeps = 60;
+    let eps = 1e-15;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..cols {
+            for q in (p + 1)..cols {
+                // Compute [app apq; apq aqq] of A^T A for columns p,q.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..rows {
+                    let x = u[i * cols + p];
+                    let y = u[i * cols + q];
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation zeroing apq.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..rows {
+                    let x = u[i * cols + p];
+                    let y = u[i * cols + q];
+                    u[i * cols + p] = c * x - s * y;
+                    u[i * cols + q] = s * x + c * y;
+                }
+            }
+        }
+        if off < 1e-14 {
+            break;
+        }
+    }
+    let mut sv: Vec<f64> = (0..cols)
+        .map(|j| (0..rows).map(|i| u[i * cols + j].powi(2)).sum::<f64>().sqrt())
+        .collect();
+    sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sv
+}
+
+/// κ(m) = σ_max / σ_min over the nonzero singular spectrum of a (possibly
+/// rectangular) matrix. For a rank-deficient matrix returns f64::INFINITY.
+pub fn condition_number(m: &Mat) -> f64 {
+    let sv = singular_values(m);
+    let smax = sv[0];
+    let smin = *sv.last().unwrap();
+    if smin <= smax * 1e-13 {
+        f64::INFINITY
+    } else {
+        smax / smin
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kappa_one() {
+        let mut m = Mat::zeros(4, 4);
+        for i in 0..4 {
+            m[(i, i)] = 1.0;
+        }
+        let sv = singular_values(&m);
+        for s in &sv {
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+        assert!((condition_number(&m) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let mut m = Mat::zeros(3, 3);
+        m[(0, 0)] = 3.0;
+        m[(1, 1)] = -2.0;
+        m[(2, 2)] = 0.5;
+        let sv = singular_values(&m);
+        assert!((sv[0] - 3.0).abs() < 1e-12);
+        assert!((sv[1] - 2.0).abs() < 1e-12);
+        assert!((sv[2] - 0.5).abs() < 1e-12);
+        assert!((condition_number(&m) - 6.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // A = [[1, 1], [0, 1]] has singular values sqrt((3±sqrt5)/2).
+        let m = Mat::from_vec(2, 2, vec![1.0, 1.0, 0.0, 1.0]);
+        let sv = singular_values(&m);
+        let s1 = ((3.0 + 5f64.sqrt()) / 2.0).sqrt();
+        let s2 = ((3.0 - 5f64.sqrt()) / 2.0).sqrt();
+        assert!((sv[0] - s1).abs() < 1e-12, "{sv:?}");
+        assert!((sv[1] - s2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rectangular_matches_transpose() {
+        let m = Mat::from_vec(2, 4, vec![1.0, 2.0, 3.0, 4.0, -1.0, 0.5, 2.0, 1.0]);
+        let a = singular_values(&m);
+        let b = singular_values(&m.transpose());
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn orthogonal_blocks() {
+        // Rotation matrix: both singular values 1.
+        let th = 0.7f64;
+        let m = Mat::from_vec(2, 2, vec![th.cos(), -th.sin(), th.sin(), th.cos()]);
+        assert!((condition_number(&m) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_matrix_infinite_kappa() {
+        let m = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(condition_number(&m).is_infinite());
+    }
+}

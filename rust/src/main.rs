@@ -1,0 +1,281 @@
+//! `sfc` — CLI for the SFC reproduction.
+//!
+//! Subcommands map 1:1 onto the paper's tables and figures (see
+//! DESIGN.md §6) plus the build-time generators and the serving demo.
+//! Hand-rolled argument parsing (clap is not vendored in this image).
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let opts = parse_opts(&args[1..]);
+    match cmd.as_str() {
+        "gen-data" => cmd_gen_data(&opts),
+        "dump-algos" => cmd_dump_algos(&opts),
+        "table1" => cmd_table1(&opts),
+        "fig2" => cmd_fig2(),
+        "table3" => cmd_table3(),
+        "appendix-b" => cmd_appendix_b(),
+        "table2" => sfc::exp::cmd_table2(opt(&opts, "data-dir", "artifacts"), opt(&opts, "models", "resnet18,resnet34,resnet50"), opt(&opts, "bits", "8,6")),
+        "table4" => sfc::exp::cmd_table4(opt(&opts, "data-dir", "artifacts")),
+        "table5" => sfc::exp::cmd_table5(opt(&opts, "data-dir", "artifacts")),
+        "fig3" => sfc::exp::cmd_fig3(opt(&opts, "data-dir", "artifacts")),
+        "fig4" => sfc::exp::cmd_fig4(opt(&opts, "data-dir", "artifacts")),
+        "fig5" => sfc::exp::cmd_fig5(opt(&opts, "data-dir", "artifacts")),
+        "serve" => sfc::coordinator::cmd_serve(&opts),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other} (try `sfc help`)"),
+    }
+}
+
+fn parse_opts(args: &[String]) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                map.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                map.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    map
+}
+
+fn print_help() {
+    println!(
+        r#"sfc — SFC: Accurate Fast Convolution under Low-precision Arithmetic (ICML'24) reproduction
+
+build-time generators:
+  gen-data    [--out-dir artifacts] [--train 6000] [--test 1000] [--seed 7]
+  dump-algos  [--out-dir artifacts/algos]
+
+experiments (paper table/figure per DESIGN.md §6):
+  table1      [--trials 2000] [--format fp16|int8]     numerical error / κ / complexity
+  table2      [--data-dir artifacts] [--models resnet18,resnet34,resnet50] [--bits 8,6]
+  table3                                               FPGA accelerator comparison
+  table4      [--data-dir artifacts]                   int8 granularity ablation
+  table5      [--data-dir artifacts]                   granularity × bit-width
+  fig2                                                 correction-term walk-through
+  fig3        [--data-dir artifacts]                   transform-domain energy
+  fig4        [--data-dir artifacts]                   accuracy vs GBOPs
+  fig5        [--data-dir artifacts]                   per-layer MSE under int8
+  appendix-b                                           iterative large-kernel conv
+
+serving demo (L3 over PJRT artifacts):
+  serve       [--hlo artifacts/resnet18_b8.hlo.txt] [--data-dir artifacts]
+              [--requests 256] [--batch 8]
+"#
+    );
+}
+
+fn opt<'a>(opts: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
+    opts.get(key).map(|s| s.as_str()).unwrap_or(default)
+}
+
+fn cmd_gen_data(opts: &HashMap<String, String>) -> Result<()> {
+    let out_dir = opt(opts, "out-dir", "artifacts");
+    let train_n: usize = opt(opts, "train", "6000").parse()?;
+    let test_n: usize = opt(opts, "test", "1000").parse()?;
+    let seed: u64 = opt(opts, "seed", "7").parse()?;
+    std::fs::create_dir_all(out_dir)?;
+    let train = sfc::data::synth::generate(train_n, seed);
+    let test = sfc::data::synth::generate(test_n, seed + 1);
+    let train_path = std::path::Path::new(out_dir).join("dataset_train.bin");
+    let test_path = std::path::Path::new(out_dir).join("dataset_test.bin");
+    train.save(&train_path)?;
+    test.save(&test_path)?;
+    println!(
+        "wrote {} ({} samples) and {} ({} samples)",
+        train_path.display(),
+        train_n,
+        test_path.display(),
+        test_n
+    );
+    Ok(())
+}
+
+fn cmd_dump_algos(opts: &HashMap<String, String>) -> Result<()> {
+    let out_dir = opt(opts, "out-dir", "artifacts/algos");
+    std::fs::create_dir_all(out_dir)?;
+    for spec in sfc::algo::catalog() {
+        if spec.name == "direct" {
+            continue;
+        }
+        let a = spec.build();
+        let mut s = String::new();
+        s.push_str(&format!(
+            "name {}\nm {}\nr {}\nt {}\nl {}\n",
+            a.name,
+            a.m,
+            a.r,
+            a.t,
+            a.input_len()
+        ));
+        for (label, m) in [("BT", &a.bt), ("G", &a.g), ("AT", &a.at)] {
+            s.push_str(&format!("{label} {} {}\n", m.rows, m.cols));
+            for i in 0..m.rows {
+                let row: Vec<String> = (0..m.cols)
+                    .map(|j| {
+                        let f = m[(i, j)];
+                        if f.den == 1 {
+                            format!("{}", f.num)
+                        } else {
+                            format!("{}/{}", f.num, f.den)
+                        }
+                    })
+                    .collect();
+                s.push_str(&row.join(" "));
+                s.push('\n');
+            }
+        }
+        let fname = spec.name.to_ascii_lowercase().replace(['(', ')', ','], "_");
+        let path = std::path::Path::new(out_dir).join(format!("{fname}.txt"));
+        std::fs::write(&path, s)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_table1(opts: &HashMap<String, String>) -> Result<()> {
+    let trials: usize = opt(opts, "trials", "2000").parse()?;
+    let fmt = match opt(opts, "format", "fp16") {
+        "fp16" => sfc::error::OdotFormat::Fp16,
+        "int8" => sfc::error::OdotFormat::Int(8),
+        other => bail!("unknown format {other}"),
+    };
+    println!("Table 1 — fast convolution algorithm comparison ({trials} trials, ⊙ = {fmt:?})");
+    println!("{:<20} {:>12} {:>10} {:>12}", "Algorithm", "MSE (rel)", "κ(Aᵀ)", "Complexity");
+    println!("{}", "-".repeat(58));
+    for row in sfc::error::table1(fmt, trials) {
+        println!(
+            "{:<20} {:>12.2} {:>10.1} {:>11.2}%",
+            row.name,
+            row.mse,
+            row.kappa,
+            row.complexity * 100.0
+        );
+    }
+    println!("\npaper (Table 1): direct 1.0/1.0/100% · Wino(2,3) 2.2/2.4/44.4% · Wino(3,3) 6.4/14.5/30.4%");
+    println!("  Wino(4,3) 10.5/20.1/25% · SFC-4(4,3) 2.4/2.7/31.94% · SFC-6(6,3) 2.4/3.3/27.16%");
+    println!("  SFC-6(7,3) 2.6/3.4/29.93% · Wino(2,5) 10.5/20.1/36% · SFC-6(6,5) 3.6/3.5/20.44%");
+    println!("  Wino(2,7) 28.1/31.0/32.6% · SFC-6(4,7) 3.6/3.5/21.99%");
+    Ok(())
+}
+
+fn cmd_fig2() -> Result<()> {
+    println!("Fig. 2 — converting circular outputs to linear with corrections (SFC-6(6x6,3x3), 1-D)\n");
+    let a = sfc::algo::sfc(6, 6, 3);
+    let t_c = 8;
+    println!("circular core: {t_c} multiplications (symbolic DFT-6)");
+    println!("corrections  : {} multiplications", a.t - t_c);
+    for row in t_c..a.t {
+        let taps: Vec<String> = (0..a.r)
+            .filter(|&j| !a.g[(row, j)].is_zero())
+            .map(|j| format!("w{j}"))
+            .collect();
+        let xs: Vec<String> = (0..a.bt.cols)
+            .filter(|&j| !a.bt[(row, j)].is_zero())
+            .map(|j| {
+                if a.bt[(row, j)].num > 0 {
+                    format!("+x{j}")
+                } else {
+                    format!("-x{j}")
+                }
+            })
+            .collect();
+        println!("  correction m{}: {} · ({})", row, taps.join(""), xs.join(" "));
+    }
+    println!("\noutputs using corrections (rows of Aᵀ):");
+    for k in 0..a.m {
+        let used: Vec<String> = (t_c..a.t)
+            .filter(|&c| !a.at[(k, c)].is_zero())
+            .map(|c| format!("m{c}"))
+            .collect();
+        if !used.is_empty() {
+            println!("  z{k} = (inverse SFT) + {}", used.join(" + "));
+        }
+    }
+    println!("\ntotal: {} multiplications for 6 outputs (paper: 10; 2-D: 100/88)", a.t);
+    Ok(())
+}
+
+fn cmd_table3() -> Result<()> {
+    use sfc::fpga::{evaluate, Accel};
+    let shapes = sfc::nn::model::vgg16_conv_shapes();
+    println!("Table 3 — FPGA accelerator comparison (simulated; VGG-16 conv stack @ 200 MHz)\n");
+    let rows = vec![
+        (
+            evaluate(
+                &Accel::from_bilinear("Winograd (Liang'20)", &sfc::algo::winograd(4, 3), 4, 4, 16),
+                &shapes,
+                "16bit",
+            ),
+            5.64,
+        ),
+        (evaluate(&Accel::ntt("NTT (Prasetiyo'23)", 8, 3, 4, 4, 21), &shapes, "8/21bit"), 3.48),
+        (evaluate(&Accel::direct("direct (Huang'22)", 7, 3, 4, 4, 8), &shapes, "8bit"), 1.96),
+        (
+            evaluate(
+                &Accel::from_bilinear("SFC (ours)", &sfc::algo::sfc(6, 7, 3), 4, 4, 8),
+                &shapes,
+                "8bit",
+            ),
+            10.08,
+        ),
+    ];
+    println!(
+        "{:<22} {:>9} {:>8} {:>7} {:>9} {:>10} {:>14} {:>9}",
+        "Design", "Precision", "LUTs(K)", "DSPs", "Clock", "GOPs", "GOPs/DSP/GHz", "(paper)"
+    );
+    println!("{}", "-".repeat(96));
+    for (r, paper) in rows {
+        println!(
+            "{:<22} {:>9} {:>8.0} {:>7} {:>6}MHz {:>10.0} {:>14.2} {:>9.2}",
+            r.name, r.precision, r.luts_k, r.dsps, r.clock_mhz, r.gops, r.gops_per_dsp_per_clock, paper
+        );
+    }
+    println!("\nThe headline ranking (SFC > Winograd > NTT > direct in GOPs/DSP/clock) is what");
+    println!("Table 3 establishes; absolute numbers depend on place-and-route (see DESIGN.md §2).");
+    Ok(())
+}
+
+fn cmd_appendix_b() -> Result<()> {
+    use sfc::algo::iterative;
+    println!("Appendix B — iterative SFC for large kernels\n");
+    let c = iterative::paper_example_cost();
+    println!("29×29 kernel on a 26×26 map:");
+    println!("  direct convolution      : {:>9} multiplications", c.direct_mults);
+    println!("  iteration 1 (tiled SFC) : {:>9} multiplications", c.one_iter_mults);
+    println!(
+        "  iteration 2 (SFC ∘ SFC) : {:>9} multiplications  ({:.1}% of direct; paper quotes 17,424 = 3.1%)",
+        c.two_iter_mults,
+        100.0 * c.two_iter_mults as f64 / c.direct_mults as f64
+    );
+    use sfc::linalg::Mat;
+    use sfc::util::Pcg32;
+    let mut rng = Pcg32::seeded(99);
+    let x = Mat::from_vec(40, 40, (0..1600).map(|_| rng.next_gaussian()).collect());
+    let k = Mat::from_vec(29, 29, (0..841).map(|_| rng.next_gaussian()).collect());
+    let algo = sfc::algo::sfc(6, 6, 5);
+    let got = iterative::iterative_conv2d(&x, &k, &algo);
+    let want = sfc::algo::direct_conv2d(&x, &k);
+    let mse: f64 = got.data.iter().zip(&want.data).map(|(a, b)| (a - b).powi(2)).sum::<f64>()
+        / got.data.len() as f64;
+    println!("\nfunctional check vs naive 29×29 conv: MSE = {mse:.2e} (float roundoff only)");
+    Ok(())
+}

@@ -1,0 +1,452 @@
+//! Convolution executors: direct and tiled fast convolution (Eq. 1).
+//!
+//! The fast path is organized exactly like the paper's (and the Pallas
+//! kernel's) dataflow: gather L×L input tiles → Bᵀ·x·B per channel
+//! (addition network) → per-frequency GEMM over channels
+//! ([tiles×Cin]·[Cin×Cout] for each of the T² transform points) →
+//! Aᵀ·(·)·A → scatter M×M output tiles. The transform-domain-quantized
+//! variant (Eq. 17) lives in [`crate::quant`] and reuses this module's
+//! tiling machinery.
+
+use super::tensor::Tensor;
+use crate::algo::Bilinear;
+use crate::util::par::par_for;
+use std::sync::Mutex;
+
+/// Which executor a conv layer uses.
+#[derive(Clone, Debug)]
+pub enum ConvAlgo {
+    Direct,
+    /// Tiled bilinear fast convolution (float transform domain).
+    Fast(std::sync::Arc<FastConvPlan>),
+}
+
+/// Precomputed matrices for a tiled fast convolution.
+#[derive(Debug)]
+pub struct FastConvPlan {
+    pub algo: Bilinear,
+    /// Bᵀ as f32, T×L row-major
+    pub bt: Vec<f32>,
+    /// Aᵀ as f32, M×T row-major
+    pub at: Vec<f32>,
+    /// G as f32, T×R row-major
+    pub g: Vec<f32>,
+}
+
+impl FastConvPlan {
+    pub fn new(algo: Bilinear) -> FastConvPlan {
+        let bt = algo.bt.to_f32_vec();
+        let at = algo.at.to_f32_vec();
+        let g = algo.g.to_f32_vec();
+        FastConvPlan { algo, bt, at, g }
+    }
+
+    pub fn t(&self) -> usize {
+        self.algo.t
+    }
+
+    pub fn m(&self) -> usize {
+        self.algo.m
+    }
+
+    pub fn r(&self) -> usize {
+        self.algo.r
+    }
+
+    pub fn l(&self) -> usize {
+        self.algo.input_len()
+    }
+
+    /// Transform one R×R filter: U = G·f·Gᵀ (T×T).
+    pub fn transform_filter(&self, f: &[f32]) -> Vec<f32> {
+        let (t, r) = (self.t(), self.r());
+        assert_eq!(f.len(), r * r);
+        // tmp = G·f  (t×r)
+        let mut tmp = vec![0f32; t * r];
+        for i in 0..t {
+            for k in 0..r {
+                let gv = self.g[i * r + k];
+                if gv != 0.0 {
+                    for j in 0..r {
+                        tmp[i * r + j] += gv * f[k * r + j];
+                    }
+                }
+            }
+        }
+        // U = tmp·Gᵀ (t×t)
+        let mut u = vec![0f32; t * t];
+        for i in 0..t {
+            for j in 0..t {
+                let mut acc = 0f32;
+                for k in 0..r {
+                    acc += tmp[i * r + k] * self.g[j * r + k];
+                }
+                u[i * t + j] = acc;
+            }
+        }
+        u
+    }
+
+    /// Transform all filters: returns freq-major layout [T²][OC][IC].
+    pub fn transform_weights(&self, w: &[f32], oc: usize, ic: usize) -> Vec<f32> {
+        let t = self.t();
+        let r = self.r();
+        let mut out = vec![0f32; t * t * oc * ic];
+        for o in 0..oc {
+            for i in 0..ic {
+                let f = &w[(o * ic + i) * r * r..(o * ic + i + 1) * r * r];
+                let u = self.transform_filter(f);
+                for uv in 0..t * t {
+                    out[(uv * oc + o) * ic + i] = u[uv];
+                }
+            }
+        }
+        out
+    }
+
+    /// Transform one L×L input tile: V = Bᵀ·x·B (T×T), into `out`.
+    /// `scratch` must hold T×L floats.
+    pub fn transform_tile(&self, tile: &[f32], scratch: &mut [f32], out: &mut [f32]) {
+        let (t, l) = (self.t(), self.l());
+        debug_assert_eq!(tile.len(), l * l);
+        // scratch = Bᵀ·x (t×l)
+        for v in scratch.iter_mut().take(t * l) {
+            *v = 0.0;
+        }
+        for i in 0..t {
+            for k in 0..l {
+                let bv = self.bt[i * l + k];
+                if bv != 0.0 {
+                    let src = &tile[k * l..(k + 1) * l];
+                    let dst = &mut scratch[i * l..(i + 1) * l];
+                    if bv == 1.0 {
+                        for (d, s) in dst.iter_mut().zip(src) {
+                            *d += s;
+                        }
+                    } else if bv == -1.0 {
+                        for (d, s) in dst.iter_mut().zip(src) {
+                            *d -= s;
+                        }
+                    } else {
+                        for (d, s) in dst.iter_mut().zip(src) {
+                            *d += bv * s;
+                        }
+                    }
+                }
+            }
+        }
+        // out = scratch·B (t×t): out[i][j] = Σ_k scratch[i][k]·Bᵀ[j][k]
+        for i in 0..t {
+            for j in 0..t {
+                let mut acc = 0f32;
+                for k in 0..l {
+                    let bv = self.bt[j * l + k];
+                    if bv != 0.0 {
+                        acc += scratch[i * l + k] * bv;
+                    }
+                }
+                out[i * t + j] = acc;
+            }
+        }
+    }
+
+    /// Inverse transform a T×T product block: Y = Aᵀ·p·A (M×M).
+    pub fn inverse_tile(&self, p: &[f32], scratch: &mut [f32], out: &mut [f32]) {
+        let (t, m) = (self.t(), self.m());
+        // scratch = Aᵀ·p (m×t)
+        for v in scratch.iter_mut().take(m * t) {
+            *v = 0.0;
+        }
+        for i in 0..m {
+            for k in 0..t {
+                let av = self.at[i * t + k];
+                if av != 0.0 {
+                    let src = &p[k * t..(k + 1) * t];
+                    let dst = &mut scratch[i * t..(i + 1) * t];
+                    for (d, s) in dst.iter_mut().zip(src) {
+                        *d += av * s;
+                    }
+                }
+            }
+        }
+        // out = scratch·A (m×m)
+        for i in 0..m {
+            for j in 0..m {
+                let mut acc = 0f32;
+                for k in 0..t {
+                    let av = self.at[j * t + k];
+                    if av != 0.0 {
+                        acc += scratch[i * t + k] * av;
+                    }
+                }
+                out[i * m + j] = acc;
+            }
+        }
+    }
+}
+
+/// Direct correlation with stride and symmetric zero padding.
+pub fn conv2d_direct(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, pad: usize) -> Tensor {
+    let (n, ic, h, wid) = x.dims4();
+    let (oc, ic2, r, r2) = w.dims4();
+    assert_eq!(ic, ic2, "channel mismatch");
+    assert_eq!(r, r2, "square kernels only");
+    assert!(bias.is_empty() || bias.len() == oc);
+    let oh = (h + 2 * pad - r) / stride + 1;
+    let ow = (wid + 2 * pad - r) / stride + 1;
+    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    let out_ptr = Mutex::new(&mut out);
+    par_for(n * oc, |job| {
+        let (ni, o) = (job / oc, job % oc);
+        let mut local = vec![0f32; oh * ow];
+        for i in 0..ic {
+            let xp = x.plane(ni, i);
+            let wp = w.plane(o, i);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0f32;
+                    for ky in 0..r {
+                        let yy = oy * stride + ky;
+                        if yy < pad || yy >= h + pad {
+                            continue;
+                        }
+                        let yy = yy - pad;
+                        for kx in 0..r {
+                            let xx = ox * stride + kx;
+                            if xx < pad || xx >= wid + pad {
+                                continue;
+                            }
+                            acc += wp[ky * r + kx] * xp[yy * wid + (xx - pad)];
+                        }
+                    }
+                    local[oy * ow + ox] += acc;
+                }
+            }
+        }
+        let b = if bias.is_empty() { 0.0 } else { bias[o] };
+        for v in local.iter_mut() {
+            *v += b;
+        }
+        let mut guard = out_ptr.lock().unwrap();
+        guard.plane_mut(ni, o).copy_from_slice(&local);
+    });
+    out
+}
+
+/// Gather the L×L input tile for output tile (ty, tx) of image n, channel c
+/// (stride-1 fast path, zero padding `pad`).
+#[inline]
+pub fn gather_tile(
+    x: &Tensor,
+    n: usize,
+    c: usize,
+    ty: usize,
+    tx: usize,
+    m: usize,
+    l: usize,
+    pad: usize,
+    out: &mut [f32],
+) {
+    let (_, _, h, w) = x.dims4();
+    let plane = x.plane(n, c);
+    let y0 = (ty * m) as isize - pad as isize;
+    let x0 = (tx * m) as isize - pad as isize;
+    for i in 0..l {
+        let yy = y0 + i as isize;
+        for j in 0..l {
+            let xx = x0 + j as isize;
+            out[i * l + j] = if yy >= 0 && (yy as usize) < h && xx >= 0 && (xx as usize) < w {
+                plane[yy as usize * w + xx as usize]
+            } else {
+                0.0
+            };
+        }
+    }
+}
+
+/// Tiled fast convolution (stride 1), float transform domain.
+pub fn conv2d_fast(x: &Tensor, w: &Tensor, bias: &[f32], plan: &FastConvPlan, pad: usize) -> Tensor {
+    let (n, ic, h, wid) = x.dims4();
+    let (oc, ic2, r, _) = w.dims4();
+    assert_eq!(ic, ic2);
+    assert_eq!(r, plan.r());
+    let (m, l, t) = (plan.m(), plan.l(), plan.t());
+    let oh = h + 2 * pad - r + 1;
+    let ow = wid + 2 * pad - r + 1;
+    let tiles_y = oh.div_ceil(m);
+    let tiles_x = ow.div_ceil(m);
+    let n_tiles = tiles_y * tiles_x;
+    let tt = t * t;
+
+    // Precompute transformed weights, freq-major [T²][OC][IC].
+    let u = plan.transform_weights(&w.data, oc, ic);
+
+    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    // Parallelize over images (typical batch sizes) — within an image the
+    // work is the per-frequency GEMM.
+    let out_mutex = Mutex::new(&mut out);
+    par_for(n, |ni| {
+        // 1) gather + transform all tiles: V freq-major [T²][tiles][IC]
+        let mut v = vec![0f32; tt * n_tiles * ic];
+        let mut tile = vec![0f32; l * l];
+        let mut scratch = vec![0f32; t * l];
+        let mut tv = vec![0f32; tt];
+        for ty in 0..tiles_y {
+            for tx in 0..tiles_x {
+                let tile_idx = ty * tiles_x + tx;
+                for c in 0..ic {
+                    gather_tile(x, ni, c, ty, tx, m, l, pad, &mut tile);
+                    plan.transform_tile(&tile, &mut scratch, &mut tv);
+                    for uv in 0..tt {
+                        v[(uv * n_tiles + tile_idx) * ic + c] = tv[uv];
+                    }
+                }
+            }
+        }
+        // 2) per-frequency GEMM: P[uv][tile][oc] = Σ_ic V[uv][tile][ic]·U[uv][oc][ic]
+        let mut p = vec![0f32; tt * n_tiles * oc];
+        for uv in 0..tt {
+            let vblk = &v[uv * n_tiles * ic..(uv + 1) * n_tiles * ic];
+            let ublk = &u[uv * oc * ic..(uv + 1) * oc * ic];
+            let pblk = &mut p[uv * n_tiles * oc..(uv + 1) * n_tiles * oc];
+            for ti in 0..n_tiles {
+                let vrow = &vblk[ti * ic..(ti + 1) * ic];
+                let prow = &mut pblk[ti * oc..(ti + 1) * oc];
+                for (o, pv) in prow.iter_mut().enumerate() {
+                    let urow = &ublk[o * ic..(o + 1) * ic];
+                    let mut acc = 0f32;
+                    for (a, b) in vrow.iter().zip(urow) {
+                        acc += a * b;
+                    }
+                    *pv = acc;
+                }
+            }
+        }
+        // 3) inverse transform + scatter
+        let mut prod = vec![0f32; tt];
+        let mut iscratch = vec![0f32; m * t];
+        let mut ytile = vec![0f32; m * m];
+        let mut guard = out_mutex.lock().unwrap();
+        for o in 0..oc {
+            let b = if bias.is_empty() { 0.0 } else { bias[o] };
+            for ty in 0..tiles_y {
+                for tx in 0..tiles_x {
+                    let tile_idx = ty * tiles_x + tx;
+                    for uv in 0..tt {
+                        prod[uv] = p[(uv * n_tiles + tile_idx) * oc + o];
+                    }
+                    plan.inverse_tile(&prod, &mut iscratch, &mut ytile);
+                    let plane = guard.plane_mut(ni, o);
+                    for i in 0..m.min(oh - ty * m) {
+                        for j in 0..m.min(ow - tx * m) {
+                            plane[(ty * m + i) * ow + tx * m + j] = ytile[i * m + j] + b;
+                        }
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{sfc, winograd};
+    use crate::util::Pcg32;
+
+    fn rand_tensor(dims: &[usize], rng: &mut Pcg32) -> Tensor {
+        let mut t = Tensor::zeros(dims);
+        rng.fill_gaussian(&mut t.data, 1.0);
+        t
+    }
+
+    #[test]
+    fn direct_known_values() {
+        // 1 image, 1 channel, 3x3 input, 2x2 kernel of ones -> sums.
+        let x = Tensor::from_vec(&[1, 1, 3, 3], (1..=9).map(|v| v as f32).collect());
+        let w = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0; 4]);
+        let y = conv2d_direct(&x, &w, &[], 1, 0);
+        assert_eq!(y.dims, vec![1, 1, 2, 2]);
+        assert_eq!(y.data, vec![12.0, 16.0, 24.0, 28.0]);
+    }
+
+    #[test]
+    fn direct_stride_and_pad() {
+        let mut rng = Pcg32::seeded(8);
+        let x = rand_tensor(&[1, 1, 5, 5], &mut rng);
+        let w = rand_tensor(&[1, 1, 3, 3], &mut rng);
+        let y = conv2d_direct(&x, &w, &[], 2, 1);
+        assert_eq!(y.dims, vec![1, 1, 3, 3]);
+        // center output (1,1) = full 3x3 window at rows 1..4
+        let mut acc = 0f32;
+        for ky in 0..3 {
+            for kx in 0..3 {
+                acc += w.data[ky * 3 + kx] * x.at4(0, 0, 1 + ky, 1 + kx);
+            }
+        }
+        assert!((y.at4(0, 0, 1, 1) - acc).abs() < 1e-5);
+    }
+
+    #[test]
+    fn fast_matches_direct_sfc() {
+        let mut rng = Pcg32::seeded(21);
+        for spec in [sfc(6, 6, 3), sfc(6, 7, 3), sfc(4, 4, 3)] {
+            let plan = FastConvPlan::new(spec);
+            let x = rand_tensor(&[2, 3, 14, 14], &mut rng);
+            let w = rand_tensor(&[4, 3, 3, 3], &mut rng);
+            let bias = vec![0.3, -0.1, 0.0, 0.7];
+            let direct = conv2d_direct(&x, &w, &bias, 1, 1);
+            let fast = conv2d_fast(&x, &w, &bias, &plan, 1);
+            assert_eq!(direct.dims, fast.dims);
+            let mse = direct.mse(&fast);
+            assert!(mse < 1e-8, "{}: mse {mse}", plan.algo.name);
+        }
+    }
+
+    #[test]
+    fn fast_matches_direct_winograd() {
+        let mut rng = Pcg32::seeded(22);
+        let plan = FastConvPlan::new(winograd(4, 3));
+        let x = rand_tensor(&[1, 2, 8, 8], &mut rng);
+        let w = rand_tensor(&[3, 2, 3, 3], &mut rng);
+        let direct = conv2d_direct(&x, &w, &[], 1, 1);
+        let fast = conv2d_fast(&x, &w, &[], &plan, 1);
+        assert!(direct.mse(&fast) < 1e-8);
+    }
+
+    #[test]
+    fn fast_5x5_kernel() {
+        let mut rng = Pcg32::seeded(23);
+        let plan = FastConvPlan::new(sfc(6, 6, 5));
+        let x = rand_tensor(&[1, 2, 12, 12], &mut rng);
+        let w = rand_tensor(&[2, 2, 5, 5], &mut rng);
+        let direct = conv2d_direct(&x, &w, &[], 1, 2);
+        let fast = conv2d_fast(&x, &w, &[], &plan, 2);
+        assert!(direct.mse(&fast) < 1e-7);
+    }
+
+    #[test]
+    fn ragged_edges() {
+        // Feature size not divisible by tile M: edge tiles are clipped.
+        let mut rng = Pcg32::seeded(24);
+        let plan = FastConvPlan::new(sfc(6, 6, 3));
+        let x = rand_tensor(&[1, 1, 11, 13], &mut rng);
+        let w = rand_tensor(&[1, 1, 3, 3], &mut rng);
+        let direct = conv2d_direct(&x, &w, &[], 1, 1);
+        let fast = conv2d_fast(&x, &w, &[], &plan, 1);
+        assert!(direct.mse(&fast) < 1e-8);
+    }
+
+    #[test]
+    fn sfc7_tiles_28_without_remainder() {
+        // The paper's SFC-6(7,3) motivation: feature maps divisible by 7.
+        let mut rng = Pcg32::seeded(25);
+        let plan = FastConvPlan::new(sfc(6, 7, 3));
+        let x = rand_tensor(&[1, 1, 28, 28], &mut rng);
+        let w = rand_tensor(&[1, 1, 3, 3], &mut rng);
+        let direct = conv2d_direct(&x, &w, &[], 1, 1);
+        let fast = conv2d_fast(&x, &w, &[], &plan, 1);
+        assert!(direct.mse(&fast) < 1e-8);
+    }
+}

@@ -1,0 +1,277 @@
+//! Tiny SSA graph IR for CNN inference.
+//!
+//! Each node consumes earlier node outputs by index; this is enough for
+//! the ResNet family (residual adds) and VGG (pure chains) while keeping
+//! forward execution trivially auditable for the PTQ experiments.
+
+use super::conv::{conv2d_direct, conv2d_fast, ConvAlgo};
+use super::tensor::Tensor;
+use crate::quant::qconv::QConvLayer;
+
+/// One conv layer's parameters (BN already folded at export time).
+#[derive(Clone, Debug)]
+pub struct ConvParams {
+    pub weight: Tensor, // OC×IC×R×R
+    pub bias: Vec<f32>,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+pub enum Op {
+    /// Graph input placeholder.
+    Input,
+    Conv {
+        params: ConvParams,
+        algo: ConvAlgo,
+        /// set by the PTQ pass: quantized executor overriding `algo`
+        quantized: Option<QConvLayer>,
+    },
+    Relu,
+    /// 2×2 max-pool, stride 2.
+    MaxPool2,
+    GlobalAvgPool,
+    Linear {
+        weight: Tensor, // OUT×IN
+        bias: Vec<f32>,
+    },
+    /// Element-wise sum of the two inputs (residual join).
+    Add,
+}
+
+pub struct Node {
+    pub op: Op,
+    pub inputs: Vec<usize>,
+    pub name: String,
+}
+
+pub struct Model {
+    pub nodes: Vec<Node>,
+    pub name: String,
+}
+
+impl Model {
+    pub fn new(name: &str) -> Model {
+        Model { nodes: Vec::new(), name: name.into() }
+    }
+
+    pub fn push(&mut self, op: Op, inputs: Vec<usize>, name: impl Into<String>) -> usize {
+        self.nodes.push(Node { op, inputs, name: name.into() });
+        self.nodes.len() - 1
+    }
+
+    /// Indices of all conv nodes (the layers PTQ operates on).
+    pub fn conv_nodes(&self) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| matches!(n.op, Op::Conv { .. }))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Forward pass; returns every node's activation (used by PTQ
+    /// calibration and the Fig.-3/Fig.-5 per-layer probes).
+    pub fn forward_all(&self, x: &Tensor) -> Vec<Tensor> {
+        let mut acts: Vec<Tensor> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let get = |i: usize| -> &Tensor { &acts[i] };
+            let out = match &node.op {
+                Op::Input => x.clone(),
+                Op::Conv { params, algo, quantized } => {
+                    let inp = get(node.inputs[0]);
+                    if let Some(q) = quantized {
+                        q.forward(inp)
+                    } else {
+                        match algo {
+                            ConvAlgo::Direct => {
+                                conv2d_direct(inp, &params.weight, &params.bias, params.stride, params.pad)
+                            }
+                            ConvAlgo::Fast(plan) => {
+                                assert_eq!(params.stride, 1, "fast conv requires stride 1");
+                                conv2d_fast(inp, &params.weight, &params.bias, plan, params.pad)
+                            }
+                        }
+                    }
+                }
+                Op::Relu => {
+                    let mut t = get(node.inputs[0]).clone();
+                    for v in t.data.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                    t
+                }
+                Op::MaxPool2 => {
+                    let inp = get(node.inputs[0]);
+                    let (n, c, h, w) = inp.dims4();
+                    let (oh, ow) = (h / 2, w / 2);
+                    let mut t = Tensor::zeros(&[n, c, oh, ow]);
+                    for ni in 0..n {
+                        for ci in 0..c {
+                            let src = inp.plane(ni, ci);
+                            let dst = t.plane_mut(ni, ci);
+                            for y in 0..oh {
+                                for x2 in 0..ow {
+                                    let m = src[2 * y * w + 2 * x2]
+                                        .max(src[2 * y * w + 2 * x2 + 1])
+                                        .max(src[(2 * y + 1) * w + 2 * x2])
+                                        .max(src[(2 * y + 1) * w + 2 * x2 + 1]);
+                                    dst[y * ow + x2] = m;
+                                }
+                            }
+                        }
+                    }
+                    t
+                }
+                Op::GlobalAvgPool => {
+                    let inp = get(node.inputs[0]);
+                    let (n, c, h, w) = inp.dims4();
+                    let mut t = Tensor::zeros(&[n, c, 1, 1]);
+                    for ni in 0..n {
+                        for ci in 0..c {
+                            let s: f32 = inp.plane(ni, ci).iter().sum();
+                            *t.at4_mut(ni, ci, 0, 0) = s / (h * w) as f32;
+                        }
+                    }
+                    t
+                }
+                Op::Linear { weight, bias } => {
+                    let inp = get(node.inputs[0]);
+                    let n = inp.dims[0];
+                    let in_dim: usize = inp.dims[1..].iter().product();
+                    let out_dim = weight.dims[0];
+                    assert_eq!(weight.dims[1], in_dim);
+                    let mut t = Tensor::zeros(&[n, out_dim, 1, 1]);
+                    for ni in 0..n {
+                        let xrow = &inp.data[ni * in_dim..(ni + 1) * in_dim];
+                        for o in 0..out_dim {
+                            let wrow = &weight.data[o * in_dim..(o + 1) * in_dim];
+                            let mut acc = if bias.is_empty() { 0.0 } else { bias[o] };
+                            for (a, b) in xrow.iter().zip(wrow) {
+                                acc += a * b;
+                            }
+                            *t.at4_mut(ni, o, 0, 0) = acc;
+                        }
+                    }
+                    t
+                }
+                Op::Add => {
+                    let a = get(node.inputs[0]);
+                    let b = get(node.inputs[1]);
+                    assert_eq!(a.dims, b.dims, "residual shape mismatch at {}", node.name);
+                    let mut t = a.clone();
+                    for (x2, y) in t.data.iter_mut().zip(&b.data) {
+                        *x2 += y;
+                    }
+                    t
+                }
+            };
+            acts.push(out);
+        }
+        acts
+    }
+
+    /// Forward pass returning logits (last node's output flattened to
+    /// [N, classes]).
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        self.forward_all(x).pop().unwrap()
+    }
+
+    /// Top-1 accuracy over a labelled batch.
+    pub fn accuracy(&self, images: &Tensor, labels: &[u8]) -> f64 {
+        let logits = self.forward(images);
+        let n = logits.dims[0];
+        let k: usize = logits.len() / n;
+        let mut correct = 0usize;
+        for i in 0..n {
+            let row = &logits.data[i * k..(i + 1) * k];
+            let arg = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if arg == labels[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn toy_model() -> Model {
+        let mut rng = Pcg32::seeded(99);
+        let mut m = Model::new("toy");
+        let inp = m.push(Op::Input, vec![], "input");
+        let mut w = Tensor::zeros(&[4, 3, 3, 3]);
+        rng.fill_gaussian(&mut w.data, 0.3);
+        let c1 = m.push(
+            Op::Conv {
+                params: ConvParams { weight: w, bias: vec![0.0; 4], stride: 1, pad: 1 },
+                algo: ConvAlgo::Direct,
+                quantized: None,
+            },
+            vec![inp],
+            "conv1",
+        );
+        let r1 = m.push(Op::Relu, vec![c1], "relu1");
+        let p = m.push(Op::GlobalAvgPool, vec![r1], "gap");
+        let mut lw = Tensor::zeros(&[10, 4]);
+        rng.fill_gaussian(&mut lw.data, 0.5);
+        m.push(Op::Linear { weight: lw, bias: vec![0.1; 10] }, vec![p], "fc");
+        m
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = toy_model();
+        let mut rng = Pcg32::seeded(7);
+        let mut x = Tensor::zeros(&[2, 3, 8, 8]);
+        rng.fill_gaussian(&mut x.data, 1.0);
+        let y = m.forward(&x);
+        assert_eq!(y.dims, vec![2, 10, 1, 1]);
+    }
+
+    #[test]
+    fn relu_and_add() {
+        let mut m = Model::new("t");
+        let i = m.push(Op::Input, vec![], "in");
+        let r = m.push(Op::Relu, vec![i], "relu");
+        m.push(Op::Add, vec![i, r], "add");
+        let x = Tensor::from_vec(&[1, 1, 1, 3], vec![-1.0, 0.0, 2.0]);
+        let y = m.forward(&x);
+        assert_eq!(y.data, vec![-1.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn maxpool() {
+        let mut m = Model::new("t");
+        let i = m.push(Op::Input, vec![], "in");
+        m.push(Op::MaxPool2, vec![i], "mp");
+        let x = Tensor::from_vec(&[1, 1, 2, 4], vec![1., 5., 2., 0., 3., 4., 1., 9.]);
+        let y = m.forward(&x);
+        assert_eq!(y.data, vec![5., 9.]);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let m = toy_model();
+        let mut rng = Pcg32::seeded(13);
+        let mut x = Tensor::zeros(&[4, 3, 8, 8]);
+        rng.fill_gaussian(&mut x.data, 1.0);
+        let logits = m.forward(&x);
+        let labels: Vec<u8> = (0..4)
+            .map(|i| {
+                let row = &logits.data[i * 10..(i + 1) * 10];
+                row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0 as u8
+            })
+            .collect();
+        assert_eq!(m.accuracy(&x, &labels), 1.0);
+    }
+}

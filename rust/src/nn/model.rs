@@ -1,0 +1,283 @@
+//! Model zoo: mini-ResNet-18/34/50 (the paper's benchmark topologies at
+//! reduced width for the SynthImage substrate — see DESIGN.md §2) and the
+//! VGG-16 layer-shape catalog used by the FPGA study (Table 3).
+//!
+//! Weights are loaded from the build-time trainer's export; `random`
+//! builders exist for tests and benchmarks that don't need trained
+//! weights.
+
+use super::conv::ConvAlgo;
+use super::graph::{ConvParams, Model, Op};
+use super::tensor::Tensor;
+use super::weights::WeightMap;
+use crate::util::Pcg32;
+
+/// ResNet block config: (blocks per stage, width per stage, bottleneck?).
+pub struct ResNetCfg {
+    pub name: &'static str,
+    pub stages: [usize; 4],
+    pub widths: [usize; 4],
+    pub bottleneck: bool,
+}
+
+pub fn resnet18_cfg() -> ResNetCfg {
+    ResNetCfg { name: "resnet18", stages: [2, 2, 2, 2], widths: [16, 32, 64, 128], bottleneck: false }
+}
+
+pub fn resnet34_cfg() -> ResNetCfg {
+    ResNetCfg { name: "resnet34", stages: [3, 4, 6, 3], widths: [16, 32, 64, 128], bottleneck: false }
+}
+
+pub fn resnet50_cfg() -> ResNetCfg {
+    ResNetCfg { name: "resnet50", stages: [3, 4, 6, 3], widths: [16, 32, 64, 128], bottleneck: true }
+}
+
+/// Weight source: trained map or random init.
+enum Source<'a> {
+    Map(&'a WeightMap),
+    Random(Pcg32),
+}
+
+impl Source<'_> {
+    fn conv(&mut self, name: &str, oc: usize, ic: usize, r: usize) -> (Tensor, Vec<f32>) {
+        match self {
+            Source::Map(map) => {
+                let w = map.tensor(&format!("{name}.w"), &[oc, ic, r, r]);
+                let b = map.tensor(&format!("{name}.b"), &[oc]).data;
+                (w, b)
+            }
+            Source::Random(rng) => {
+                let mut w = Tensor::zeros(&[oc, ic, r, r]);
+                let fan_in = (ic * r * r) as f64;
+                rng.fill_gaussian(&mut w.data, (2.0 / fan_in).sqrt());
+                (w, vec![0.0; oc])
+            }
+        }
+    }
+
+    fn linear(&mut self, name: &str, out_dim: usize, in_dim: usize) -> (Tensor, Vec<f32>) {
+        match self {
+            Source::Map(map) => {
+                let w = map.tensor(&format!("{name}.w"), &[out_dim, in_dim]);
+                let b = map.tensor(&format!("{name}.b"), &[out_dim]).data;
+                (w, b)
+            }
+            Source::Random(rng) => {
+                let mut w = Tensor::zeros(&[out_dim, in_dim]);
+                rng.fill_gaussian(&mut w.data, (1.0 / in_dim as f64).sqrt());
+                (w, vec![0.0; out_dim])
+            }
+        }
+    }
+}
+
+fn push_conv(
+    m: &mut Model,
+    src: &mut Source,
+    name: &str,
+    input: usize,
+    oc: usize,
+    ic: usize,
+    r: usize,
+    stride: usize,
+    pad: usize,
+) -> usize {
+    let (weight, bias) = src.conv(name, oc, ic, r);
+    m.push(
+        Op::Conv {
+            params: ConvParams { weight, bias, stride, pad },
+            algo: ConvAlgo::Direct,
+            quantized: None,
+        },
+        vec![input],
+        name,
+    )
+}
+
+fn build_resnet(cfg: &ResNetCfg, mut src: Source, classes: usize) -> Model {
+    let mut m = Model::new(cfg.name);
+    let input = m.push(Op::Input, vec![], "input");
+    // 3×3 stem (32×32 inputs — the CIFAR-style stem, like the paper's
+    // ImageNet stem scaled to our substrate)
+    let mut prev_c = cfg.widths[0];
+    let stem = push_conv(&mut m, &mut src, "stem", input, prev_c, 3, 3, 1, 1);
+    let mut cur = m.push(Op::Relu, vec![stem], "stem.relu");
+
+    for (si, (&blocks, &width)) in cfg.stages.iter().zip(&cfg.widths).enumerate() {
+        for bi in 0..blocks {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            let prefix = format!("s{si}b{bi}");
+            if !cfg.bottleneck {
+                // basic block: conv3-conv3 (+ 1×1 projection on reshape)
+                let c1 = push_conv(&mut m, &mut src, &format!("{prefix}.conv1"), cur, width, prev_c, 3, stride, 1);
+                let r1 = m.push(Op::Relu, vec![c1], format!("{prefix}.relu1"));
+                let c2 = push_conv(&mut m, &mut src, &format!("{prefix}.conv2"), r1, width, width, 3, 1, 1);
+                let shortcut = if stride != 1 || prev_c != width {
+                    push_conv(&mut m, &mut src, &format!("{prefix}.proj"), cur, width, prev_c, 1, stride, 0)
+                } else {
+                    cur
+                };
+                let add = m.push(Op::Add, vec![c2, shortcut], format!("{prefix}.add"));
+                cur = m.push(Op::Relu, vec![add], format!("{prefix}.relu2"));
+            } else {
+                // bottleneck: 1×1 down, 3×3, 1×1 up (expansion 2 at mini scale)
+                let mid = width;
+                let out_c = width * 2;
+                let c1 = push_conv(&mut m, &mut src, &format!("{prefix}.conv1"), cur, mid, prev_c, 1, 1, 0);
+                let r1 = m.push(Op::Relu, vec![c1], format!("{prefix}.relu1"));
+                let c2 = push_conv(&mut m, &mut src, &format!("{prefix}.conv2"), r1, mid, mid, 3, stride, 1);
+                let r2 = m.push(Op::Relu, vec![c2], format!("{prefix}.relu2"));
+                let c3 = push_conv(&mut m, &mut src, &format!("{prefix}.conv3"), r2, out_c, mid, 1, 1, 0);
+                let shortcut = if stride != 1 || prev_c != out_c {
+                    push_conv(&mut m, &mut src, &format!("{prefix}.proj"), cur, out_c, prev_c, 1, stride, 0)
+                } else {
+                    cur
+                };
+                let add = m.push(Op::Add, vec![c3, shortcut], format!("{prefix}.add"));
+                cur = m.push(Op::Relu, vec![add], format!("{prefix}.relu3"));
+                prev_c = out_c;
+                continue;
+            }
+            prev_c = width;
+        }
+    }
+    let gap = m.push(Op::GlobalAvgPool, vec![cur], "gap");
+    let feat = if cfg.bottleneck { cfg.widths[3] * 2 } else { cfg.widths[3] };
+    let (weight, bias) = src.linear("fc", classes, feat);
+    m.push(Op::Linear { weight, bias }, vec![gap], "fc");
+    m
+}
+
+/// Build a mini-ResNet with trained weights.
+pub fn resnet_from_weights(cfg: &ResNetCfg, map: &WeightMap, classes: usize) -> Model {
+    build_resnet(cfg, Source::Map(map), classes)
+}
+
+/// Build a mini-ResNet with random (He-init) weights.
+pub fn resnet_random(cfg: &ResNetCfg, seed: u64, classes: usize) -> Model {
+    build_resnet(cfg, Source::Random(Pcg32::seeded(seed)), classes)
+}
+
+/// A conv layer shape (for analytical models: BOPs, FPGA).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvShape {
+    pub ic: usize,
+    pub oc: usize,
+    pub h: usize,
+    pub w: usize,
+    pub r: usize,
+    pub stride: usize,
+}
+
+impl ConvShape {
+    /// MACs for direct execution.
+    pub fn direct_macs(&self) -> u64 {
+        let oh = (self.h / self.stride) as u64;
+        let ow = (self.w / self.stride) as u64;
+        oh * ow * self.oc as u64 * self.ic as u64 * (self.r * self.r) as u64
+    }
+}
+
+/// The real VGG-16 conv stack (224×224 input) — every layer 3×3 stride 1,
+/// which is why the paper uses it for the FPGA study.
+pub fn vgg16_conv_shapes() -> Vec<ConvShape> {
+    let cfg: [(usize, usize, usize); 13] = [
+        (3, 64, 224),
+        (64, 64, 224),
+        (64, 128, 112),
+        (128, 128, 112),
+        (128, 256, 56),
+        (256, 256, 56),
+        (256, 256, 56),
+        (256, 512, 28),
+        (512, 512, 28),
+        (512, 512, 28),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+    ];
+    cfg.iter()
+        .map(|&(ic, oc, s)| ConvShape { ic, oc, h: s, w: s, r: 3, stride: 1 })
+        .collect()
+}
+
+/// Conv shapes of a built model (for the analytical cost models), taking
+/// the activation sizes from a forward pass on one dummy image.
+pub fn model_conv_shapes(model: &Model, input_hw: usize) -> Vec<(String, ConvShape)> {
+    let x = Tensor::zeros(&[1, 3, input_hw, input_hw]);
+    let acts = model.forward_all(&x);
+    model
+        .nodes
+        .iter()
+        .enumerate()
+        .filter_map(|(i, n)| match &n.op {
+            Op::Conv { params, .. } => {
+                let (_, ic, h, w) = acts[model.nodes[i].inputs[0]].dims4();
+                Some((
+                    n.name.clone(),
+                    ConvShape {
+                        ic,
+                        oc: params.weight.dims[0],
+                        h,
+                        w,
+                        r: params.weight.dims[2],
+                        stride: params.stride,
+                    },
+                ))
+            }
+            _ => None,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_forward_shape() {
+        let m = resnet_random(&resnet18_cfg(), 1, 10);
+        let x = Tensor::zeros(&[2, 3, 32, 32]);
+        let y = m.forward(&x);
+        assert_eq!(y.dims, vec![2, 10, 1, 1]);
+    }
+
+    #[test]
+    fn resnet50_bottleneck_forward() {
+        let m = resnet_random(&resnet50_cfg(), 2, 10);
+        let x = Tensor::zeros(&[1, 3, 32, 32]);
+        let y = m.forward(&x);
+        assert_eq!(y.dims, vec![1, 10, 1, 1]);
+    }
+
+    #[test]
+    fn conv_counts_match_topology() {
+        // resnet18: stem + 2 convs × 8 blocks + 3 projections = 20.
+        let m = resnet_random(&resnet18_cfg(), 3, 10);
+        assert_eq!(m.conv_nodes().len(), 20);
+        // resnet34: stem + 2×16 + 3 proj = 36
+        let m = resnet_random(&resnet34_cfg(), 3, 10);
+        assert_eq!(m.conv_nodes().len(), 36);
+        // resnet50: stem + 3×16 + 4 proj = 53
+        let m = resnet_random(&resnet50_cfg(), 3, 10);
+        assert_eq!(m.conv_nodes().len(), 53);
+    }
+
+    #[test]
+    fn vgg16_has_13_convs() {
+        let shapes = vgg16_conv_shapes();
+        assert_eq!(shapes.len(), 13);
+        let total: u64 = shapes.iter().map(|s| s.direct_macs()).sum();
+        // VGG-16 conv MACs ≈ 15.3 G
+        assert!((total as f64 - 15.3e9).abs() / 15.3e9 < 0.03, "total {total}");
+    }
+
+    #[test]
+    fn shapes_probe() {
+        let m = resnet_random(&resnet18_cfg(), 4, 10);
+        let shapes = model_conv_shapes(&m, 32);
+        assert_eq!(shapes.len(), 20);
+        assert_eq!(shapes[0].1.ic, 3);
+        assert_eq!(shapes[0].1.h, 32);
+    }
+}

@@ -1,0 +1,100 @@
+//! Minimal NCHW f32 tensor.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(dims: &[usize]) -> Tensor {
+        Tensor { dims: dims.to_vec(), data: vec![0.0; dims.iter().product()] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(data.len(), dims.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { dims: dims.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// NCHW accessors.
+    #[inline]
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        let (_, cc, hh, ww) = self.dims4();
+        self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    #[inline]
+    pub fn at4_mut(&mut self, n: usize, c: usize, h: usize, w: usize) -> &mut f32 {
+        let (_, cc, hh, ww) = self.dims4();
+        &mut self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    pub fn dims4(&self) -> (usize, usize, usize, usize) {
+        assert_eq!(self.dims.len(), 4, "expected NCHW, got {:?}", self.dims);
+        (self.dims[0], self.dims[1], self.dims[2], self.dims[3])
+    }
+
+    /// One image plane (n, c) as a contiguous slice.
+    pub fn plane(&self, n: usize, c: usize) -> &[f32] {
+        let (_, cc, hh, ww) = self.dims4();
+        let base = (n * cc + c) * hh * ww;
+        &self.data[base..base + hh * ww]
+    }
+
+    pub fn plane_mut(&mut self, n: usize, c: usize) -> &mut [f32] {
+        let (_, cc, hh, ww) = self.dims4();
+        let base = (n * cc + c) * hh * ww;
+        &mut self.data[base..base + hh * ww]
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    /// Mean squared difference against another tensor.
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.dims, other.dims);
+        let n = self.len().max(1) as f64;
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing() {
+        let mut t = Tensor::zeros(&[2, 3, 4, 5]);
+        *t.at4_mut(1, 2, 3, 4) = 7.0;
+        assert_eq!(t.at4(1, 2, 3, 4), 7.0);
+        assert_eq!(t.data[t.len() - 1], 7.0);
+    }
+
+    #[test]
+    fn planes_are_contiguous() {
+        let mut t = Tensor::zeros(&[1, 2, 2, 2]);
+        t.plane_mut(0, 1).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.at4(0, 1, 1, 0), 3.0);
+    }
+
+    #[test]
+    fn mse_basic() {
+        let a = Tensor::from_vec(&[1, 1, 1, 2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[1, 1, 1, 2], vec![2.0, 4.0]);
+        assert!((a.mse(&b) - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,162 @@
+//! The build-time weight interchange format (shared with
+//! `python/compile/train.py`): little-endian, BN pre-folded.
+//!
+//! layout:  b"SFCW" · u32 count · count × entry
+//! entry:   u16 name_len · name bytes · u8 ndim · ndim × u32 dim · f32 data
+
+use super::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 4] = b"SFCW";
+
+#[derive(Debug, Default)]
+pub struct WeightMap {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl WeightMap {
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    /// Fetch a tensor and check its shape (total size must match; the
+    /// trainer may export e.g. [oc] bias as [oc]).
+    pub fn tensor(&self, name: &str, dims: &[usize]) -> Tensor {
+        let t = self
+            .tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("missing weight tensor {name}"));
+        assert_eq!(
+            t.len(),
+            dims.iter().product::<usize>(),
+            "{name}: stored {:?} vs requested {:?}",
+            t.dims,
+            dims
+        );
+        Tensor::from_vec(dims, t.data.clone())
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            f.write_all(&(name.len() as u16).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&[t.dims.len() as u8])?;
+            for &d in &t.dims {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for v in &t.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<WeightMap> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not a SFCW weight file", path.display());
+        }
+        let mut b4 = [0u8; 4];
+        f.read_exact(&mut b4)?;
+        let count = u32::from_le_bytes(b4) as usize;
+        let mut map = WeightMap::default();
+        for _ in 0..count {
+            let mut b2 = [0u8; 2];
+            f.read_exact(&mut b2)?;
+            let name_len = u16::from_le_bytes(b2) as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            let mut b1 = [0u8; 1];
+            f.read_exact(&mut b1)?;
+            let ndim = b1[0] as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                f.read_exact(&mut b4)?;
+                dims.push(u32::from_le_bytes(b4) as usize);
+            }
+            let n: usize = dims.iter().product();
+            let mut buf = vec![0u8; 4 * n];
+            f.read_exact(&mut buf)?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            map.tensors.insert(name, Tensor { dims, data });
+        }
+        Ok(map)
+    }
+}
+
+/// Fold batch-norm (gamma, beta, mean, var) into conv weight/bias — used
+/// if a checkpoint ships unfolded BN (the JAX exporter already folds).
+pub fn fold_batchnorm(
+    weight: &mut Tensor,
+    bias: &mut [f32],
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    eps: f32,
+) {
+    let oc = weight.dims[0];
+    let per_oc = weight.len() / oc;
+    for o in 0..oc {
+        let s = gamma[o] / (var[o] + eps).sqrt();
+        for v in &mut weight.data[o * per_oc..(o + 1) * per_oc] {
+            *v *= s;
+        }
+        bias[o] = (bias[o] - mean[o]) * s + beta[o];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_round_trip() {
+        let mut map = WeightMap::default();
+        map.insert("conv.w", Tensor::from_vec(&[2, 1, 3, 3], (0..18).map(|v| v as f32 * 0.5).collect()));
+        map.insert("fc.b", Tensor::from_vec(&[4], vec![1.0, -2.0, 0.25, 9.0]));
+        let p = std::env::temp_dir().join("sfc_w_test.bin");
+        map.save(&p).unwrap();
+        let back = WeightMap::load(&p).unwrap();
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.tensors["conv.w"].data, map.tensors["conv.w"].data);
+        assert_eq!(back.tensors["fc.b"].dims, vec![4]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn bn_folding_matches_explicit() {
+        let mut w = Tensor::from_vec(&[1, 1, 1, 2], vec![2.0, -1.0]);
+        let mut b = vec![0.5f32];
+        let (gamma, beta, mean, var) = ([2.0f32], [0.1f32], [0.3f32], [4.0f32]);
+        // y = gamma*(conv(x)+b - mean)/sqrt(var+eps) + beta
+        let x = [1.0f32, 3.0];
+        let conv = 2.0 * x[0] - 1.0 * x[1] + b[0];
+        let eps = 1e-5f32;
+        let want = gamma[0] * (conv - mean[0]) / (var[0] + eps).sqrt() + beta[0];
+        fold_batchnorm(&mut w, &mut b, &gamma, &beta, &mean, &var, eps);
+        let got = w.data[0] * x[0] + w.data[1] * x[1] + b[0];
+        assert!((got - want).abs() < 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "missing weight tensor")]
+    fn missing_tensor_panics() {
+        let map = WeightMap::default();
+        map.tensor("nope", &[1]);
+    }
+}

@@ -1,0 +1,329 @@
+//! AdaQuant-lite post-training quantization (§6.1).
+//!
+//! Like AdaQuant (Hubara et al., 2020) the objective is layer-wise: pick
+//! quantization parameters minimizing ‖Q(layer)(x) − layer(x)‖² on a small
+//! calibration set. Our gradient-free variant searches a grid of scale
+//! multipliers for the activation scales (clipping vs resolution
+//! trade-off) per layer — the dominant effect at these bit-widths — and
+//! keeps max-abs weight scales (per the chosen granularity). It converges
+//! for all three algorithm families, mirroring the paper's use of a
+//! different calibrator for Winograd (Scaling Gradient Backward) than for
+//! SFC/direct (AdaQuant).
+
+use super::qconv::{collect_act_maxima, Granularity, QConvLayer};
+use crate::algo::registry::AlgoSpec;
+use crate::nn::conv::FastConvPlan;
+use crate::nn::graph::{Model, Op};
+use crate::nn::tensor::Tensor;
+use std::sync::Arc;
+
+/// Which executor the PTQ pass installs.
+#[derive(Clone, Debug)]
+pub enum QAlgoChoice {
+    Direct,
+    Fast(AlgoSpec),
+}
+
+#[derive(Clone, Debug)]
+pub struct QuantConfig {
+    pub algo: QAlgoChoice,
+    pub w_bits: u32,
+    pub a_bits: u32,
+    pub w_gran: Granularity,
+    pub a_gran: Granularity,
+    /// AdaQuant-lite scale search (off = plain max-abs calibration)
+    pub adaquant: bool,
+}
+
+impl QuantConfig {
+    pub fn sfc_default(bits: u32) -> QuantConfig {
+        QuantConfig {
+            algo: QAlgoChoice::Fast(crate::algo::registry::by_name("SFC-6(7x7,3x3)").unwrap()),
+            w_bits: bits,
+            a_bits: bits,
+            w_gran: Granularity::ChannelFreq,
+            a_gran: Granularity::Freq,
+            adaquant: true,
+        }
+    }
+
+    pub fn winograd_default(bits: u32) -> QuantConfig {
+        QuantConfig {
+            algo: QAlgoChoice::Fast(crate::algo::registry::by_name("Wino(4x4,3x3)").unwrap()),
+            w_bits: bits,
+            a_bits: bits,
+            w_gran: Granularity::ChannelFreq,
+            a_gran: Granularity::Freq,
+            adaquant: true,
+        }
+    }
+
+    pub fn direct_default(bits: u32) -> QuantConfig {
+        QuantConfig {
+            algo: QAlgoChoice::Direct,
+            w_bits: bits,
+            a_bits: bits,
+            w_gran: Granularity::Channel,
+            a_gran: Granularity::Tensor,
+            adaquant: true,
+        }
+    }
+}
+
+/// Eligibility: the paper replaces all 3×3 stride-1 convolutions.
+fn eligible(params: &crate::nn::graph::ConvParams, fast: bool) -> bool {
+    let r = params.weight.dims[2];
+    if fast {
+        r == 3 && params.stride == 1
+    } else {
+        // direct quantization applies to every conv
+        true
+    }
+}
+
+/// Run PTQ over the model in place. Returns the list of quantized node
+/// indices. `calib` is a small batch of input images (NCHW).
+pub fn quantize_model(model: &mut Model, calib: &Tensor, cfg: &QuantConfig) -> Vec<usize> {
+    // fp32 reference activations for every node
+    let acts = model.forward_all(calib);
+    let conv_nodes = model.conv_nodes();
+    let mut done = Vec::new();
+    for idx in conv_nodes {
+        // borrow bookkeeping: compute inputs first
+        let input_idx = model.nodes[idx].inputs[0];
+        let layer_in = &acts[input_idx];
+        let layer_ref = &acts[idx];
+        let node = &model.nodes[idx];
+        let Op::Conv { params, .. } = &node.op else { unreachable!() };
+        let is_fast = matches!(cfg.algo, QAlgoChoice::Fast(_));
+        if !eligible(params, is_fast) {
+            continue;
+        }
+        let q = match &cfg.algo {
+            QAlgoChoice::Direct => {
+                let base = QConvLayer::direct(
+                    &params.weight,
+                    params.bias.clone(),
+                    params.stride,
+                    params.pad,
+                    cfg.w_bits,
+                    cfg.a_bits,
+                    layer_in.max_abs(),
+                );
+                if cfg.adaquant {
+                    search_direct(layer_in, layer_ref, params, cfg)
+                } else {
+                    base
+                }
+            }
+            QAlgoChoice::Fast(spec) => {
+                let plan = Arc::new(FastConvPlan::new(spec.build()));
+                let maxima = collect_act_maxima(layer_in, &plan, params.pad);
+                if cfg.adaquant {
+                    search_fast(layer_in, layer_ref, params, cfg, plan, &maxima)
+                } else {
+                    QConvLayer::fast(
+                        plan,
+                        &params.weight,
+                        params.bias.clone(),
+                        params.pad,
+                        cfg.w_bits,
+                        cfg.a_bits,
+                        cfg.w_gran,
+                        cfg.a_gran,
+                        &maxima,
+                    )
+                }
+            }
+        };
+        if let Op::Conv { quantized, .. } = &mut model.nodes[idx].op {
+            *quantized = Some(q);
+        }
+        done.push(idx);
+    }
+    done
+}
+
+/// Remove quantization (restore fp32 execution).
+pub fn dequantize_model(model: &mut Model) {
+    for node in &mut model.nodes {
+        if let Op::Conv { quantized, .. } = &mut node.op {
+            *quantized = None;
+        }
+    }
+}
+
+const SEARCH_GRID: [f32; 6] = [0.6, 0.7, 0.8, 0.9, 1.0, 1.1];
+
+/// §Perf (L3): the scale search only needs a *relative* MSE ranking, so
+/// it runs on the first `SEARCH_N` calibration images instead of the full
+/// batch — a ~(N/SEARCH_N)× speedup of the PTQ pipeline measured in
+/// EXPERIMENTS.md §Perf with no observed accuracy change (the final
+/// quantizer is always built from full-batch statistics).
+const SEARCH_N: usize = 24;
+
+fn search_n() -> usize {
+    std::env::var("SFC_SEARCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(SEARCH_N)
+}
+
+fn subsample(t: &Tensor, k: usize) -> Tensor {
+    let n = t.dims[0].min(k);
+    let per = t.len() / t.dims[0];
+    let mut dims = t.dims.clone();
+    dims[0] = n;
+    Tensor::from_vec(&dims, t.data[..n * per].to_vec())
+}
+
+fn search_fast(
+    layer_in: &Tensor,
+    layer_ref: &Tensor,
+    params: &crate::nn::graph::ConvParams,
+    cfg: &QuantConfig,
+    plan: Arc<FastConvPlan>,
+    maxima: &[f32],
+) -> QConvLayer {
+    let search_in = subsample(layer_in, search_n());
+    let search_ref = subsample(layer_ref, search_n());
+    let mut best: Option<(f64, QConvLayer)> = None;
+    for &f in &SEARCH_GRID {
+        let scaled: Vec<f32> = maxima.iter().map(|m| m * f).collect();
+        let cand = QConvLayer::fast(
+            plan.clone(),
+            &params.weight,
+            params.bias.clone(),
+            params.pad,
+            cfg.w_bits,
+            cfg.a_bits,
+            cfg.w_gran,
+            cfg.a_gran,
+            &scaled,
+        );
+        let mse = cand.forward(&search_in).mse(&search_ref);
+        if best.as_ref().map_or(true, |(b, _)| mse < *b) {
+            best = Some((mse, cand));
+        }
+    }
+    best.unwrap().1
+}
+
+fn search_direct(
+    layer_in: &Tensor,
+    layer_ref: &Tensor,
+    params: &crate::nn::graph::ConvParams,
+    cfg: &QuantConfig,
+) -> QConvLayer {
+    let max_abs = layer_in.max_abs();
+    let search_in = subsample(layer_in, search_n());
+    let search_ref = subsample(layer_ref, search_n());
+    let mut best: Option<(f64, QConvLayer)> = None;
+    for &f in &SEARCH_GRID {
+        let cand = QConvLayer::direct(
+            &params.weight,
+            params.bias.clone(),
+            params.stride,
+            params.pad,
+            cfg.w_bits,
+            cfg.a_bits,
+            max_abs * f,
+        );
+        let mse = cand.forward(&search_in).mse(&search_ref);
+        if best.as_ref().map_or(true, |(b, _)| mse < *b) {
+            best = Some((mse, cand));
+        }
+    }
+    best.unwrap().1
+}
+
+/// Per-quantized-layer output MSE against the fp32 model on a batch —
+/// the Fig. 5 probe.
+pub fn layer_mse(model: &Model, fp32_acts: &[Tensor], batch: &Tensor) -> Vec<(String, f64)> {
+    let q_acts = model.forward_all(batch);
+    model
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| matches!(&n.op, Op::Conv { quantized: Some(_), .. }))
+        .map(|(i, n)| (n.name.clone(), q_acts[i].mse(&fp32_acts[i])))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::graph::ConvParams;
+    use crate::nn::ConvAlgo;
+    use crate::util::Pcg32;
+
+    fn small_model(rng: &mut Pcg32) -> Model {
+        let mut m = Model::new("t");
+        let i = m.push(Op::Input, vec![], "in");
+        let mut w1 = Tensor::zeros(&[8, 3, 3, 3]);
+        rng.fill_gaussian(&mut w1.data, 0.25);
+        let c1 = m.push(
+            Op::Conv {
+                params: ConvParams { weight: w1, bias: vec![0.01; 8], stride: 1, pad: 1 },
+                algo: ConvAlgo::Direct,
+                quantized: None,
+            },
+            vec![i],
+            "conv1",
+        );
+        let r1 = m.push(Op::Relu, vec![c1], "relu1");
+        let mut w2 = Tensor::zeros(&[8, 8, 3, 3]);
+        rng.fill_gaussian(&mut w2.data, 0.2);
+        m.push(
+            Op::Conv {
+                params: ConvParams { weight: w2, bias: vec![0.0; 8], stride: 1, pad: 1 },
+                algo: ConvAlgo::Direct,
+                quantized: None,
+            },
+            vec![r1],
+            "conv2",
+        );
+        m
+    }
+
+    #[test]
+    fn ptq_int8_sfc_small_error() {
+        let mut rng = Pcg32::seeded(7);
+        let mut m = small_model(&mut rng);
+        let mut x = Tensor::zeros(&[2, 3, 14, 14]);
+        rng.fill_gaussian(&mut x.data, 1.0);
+        let fp32 = m.forward(&x);
+        let done = quantize_model(&mut m, &x, &QuantConfig::sfc_default(8));
+        assert_eq!(done.len(), 2);
+        let q = m.forward(&x);
+        let denom = fp32.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / fp32.len() as f64;
+        let rel = q.mse(&fp32) / denom;
+        assert!(rel < 5e-3, "relative PTQ error {rel}");
+        dequantize_model(&mut m);
+        assert!(m.forward(&x).mse(&fp32) < 1e-12);
+    }
+
+    #[test]
+    fn adaquant_no_worse_than_maxabs() {
+        let mut rng = Pcg32::seeded(8);
+        let mut x = Tensor::zeros(&[2, 3, 14, 14]);
+        rng.fill_gaussian(&mut x.data, 1.0);
+        let mut errs = Vec::new();
+        for ada in [false, true] {
+            let mut m = small_model(&mut Pcg32::seeded(8)); // same weights
+            let mut cfg = QuantConfig::sfc_default(4);
+            cfg.adaquant = ada;
+            let fp32 = m.forward(&x);
+            quantize_model(&mut m, &x, &cfg);
+            errs.push(m.forward(&x).mse(&fp32));
+        }
+        assert!(errs[1] <= errs[0] * 1.001, "adaquant {} vs maxabs {}", errs[1], errs[0]);
+    }
+
+    #[test]
+    fn direct_config_quantizes_all_convs() {
+        let mut rng = Pcg32::seeded(9);
+        let mut m = small_model(&mut rng);
+        let mut x = Tensor::zeros(&[1, 3, 10, 10]);
+        rng.fill_gaussian(&mut x.data, 1.0);
+        let done = quantize_model(&mut m, &x, &QuantConfig::direct_default(8));
+        assert_eq!(done.len(), 2);
+    }
+}

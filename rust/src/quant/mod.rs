@@ -1,0 +1,86 @@
+//! Quantization library: symmetric affine quantizers, the paper's scale
+//! granularities (§5, Eq. 17), the transform-domain-quantized conv
+//! executor and the AdaQuant-lite PTQ calibrator (§6.1).
+
+pub mod calib;
+pub mod qconv;
+
+pub use calib::{quantize_model, QuantConfig};
+pub use qconv::{Granularity, QConvLayer};
+
+/// Symmetric intN quantization parameters for one scale group.
+#[derive(Clone, Copy, Debug)]
+pub struct QParams {
+    pub scale: f32,
+    pub qmax: i32,
+}
+
+impl QParams {
+    /// Scale chosen so `max_abs` maps to the top code.
+    pub fn from_max_abs(max_abs: f32, bits: u32) -> QParams {
+        let qmax = (1i32 << (bits - 1)) - 1;
+        let scale = if max_abs > 0.0 { max_abs / qmax as f32 } else { 1.0 };
+        QParams { scale, qmax }
+    }
+
+    #[inline]
+    pub fn quantize(&self, v: f32) -> i32 {
+        let q = (v / self.scale).round() as i32;
+        q.clamp(-self.qmax, self.qmax)
+    }
+
+    #[inline]
+    pub fn dequantize(&self, q: i32) -> f32 {
+        q as f32 * self.scale
+    }
+
+    /// Round-trip a value through the integer grid.
+    #[inline]
+    pub fn fake_quant(&self, v: f32) -> f32 {
+        self.dequantize(self.quantize(v))
+    }
+}
+
+/// Max |v| over a slice.
+pub fn max_abs(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int8_round_trip_error() {
+        let q = QParams::from_max_abs(2.0, 8);
+        assert_eq!(q.qmax, 127);
+        for i in 0..100 {
+            let v = -2.0 + 4.0 * i as f32 / 99.0;
+            let e = (q.fake_quant(v) - v).abs();
+            assert!(e <= q.scale * 0.5 + 1e-6, "v={v} err={e}");
+        }
+    }
+
+    #[test]
+    fn clamping() {
+        let q = QParams::from_max_abs(1.0, 4);
+        assert_eq!(q.qmax, 7);
+        assert_eq!(q.quantize(10.0), 7);
+        assert_eq!(q.quantize(-10.0), -7);
+    }
+
+    #[test]
+    fn zero_range_safe() {
+        let q = QParams::from_max_abs(0.0, 8);
+        assert_eq!(q.quantize(0.0), 0);
+        assert_eq!(q.fake_quant(0.0), 0.0);
+    }
+
+    #[test]
+    fn lower_bits_coarser() {
+        let v = 0.73f32;
+        let e8 = (QParams::from_max_abs(1.0, 8).fake_quant(v) - v).abs();
+        let e4 = (QParams::from_max_abs(1.0, 4).fake_quant(v) - v).abs();
+        assert!(e4 > e8);
+    }
+}

@@ -1,0 +1,522 @@
+//! Transform-domain-quantized convolution (Eq. 17) and the quantized
+//! direct-conv baseline.
+//!
+//! The fast path executes
+//!   y = Σ_Cin  s_Tx·⌈BᵀxB/s_Tx⌋ ⊙ s_Tf·⌈GfGᵀ/s_Tf⌋
+//! with integer products accumulated exactly in i32 and the inverse
+//! transform applied in f32 afterwards. Scale-group granularity follows
+//! §5: per-tensor or per-frequency for activations; per-channel,
+//! per-frequency or channel×frequency for weights (s_Tf of size
+//! [OC×T×T]).
+
+use super::QParams;
+use crate::nn::conv::{gather_tile, FastConvPlan};
+use crate::nn::tensor::Tensor;
+use crate::util::par::par_for;
+use std::sync::{Arc, Mutex};
+
+/// Scale-group granularity for one operand (Table 4/5 axes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// one scale for the whole tensor
+    Tensor,
+    /// one scale per transform-domain point (T×T)
+    Freq,
+    /// one scale per output channel (weights only)
+    Channel,
+    /// per output channel × per frequency (weights only; s_Tf [OC×T×T])
+    ChannelFreq,
+}
+
+/// A conv layer after PTQ: either transform-domain-quantized fast conv or
+/// the spatially-quantized direct baseline.
+pub struct QConvLayer {
+    pub kind: QConvKind,
+    pub bias: Vec<f32>,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+pub enum QConvKind {
+    Fast {
+        plan: Arc<FastConvPlan>,
+        oc: usize,
+        ic: usize,
+        /// quantized transformed weights, freq-major [T²][OC][IC]
+        wq: Vec<i8>,
+        /// weight scale per (uv, oc) resolved from granularity
+        w_scales: ScaleGroup,
+        /// activation scale per uv resolved from granularity
+        a_scales: ScaleGroup,
+        a_bits: u32,
+    },
+    Direct {
+        /// quantized weights [OC][IC·R·R]
+        wq: Vec<i8>,
+        oc: usize,
+        ic: usize,
+        r: usize,
+        /// per-channel weight scales
+        w_scales: Vec<f32>,
+        /// per-tensor input scale
+        a_scale: QParams,
+    },
+}
+
+/// Resolved scale lookup: maps (uv, oc) → scale.
+#[derive(Clone, Debug)]
+pub struct ScaleGroup {
+    pub gran: Granularity,
+    pub t2: usize,
+    pub oc: usize,
+    pub scales: Vec<f32>,
+}
+
+impl ScaleGroup {
+    #[inline]
+    pub fn scale(&self, uv: usize, oc: usize) -> f32 {
+        match self.gran {
+            Granularity::Tensor => self.scales[0],
+            Granularity::Freq => self.scales[uv],
+            Granularity::Channel => self.scales[oc],
+            Granularity::ChannelFreq => self.scales[oc * self.t2 + uv],
+        }
+    }
+
+    /// Build from per-(uv, oc) maxima.
+    pub fn from_maxima(gran: Granularity, t2: usize, oc: usize, maxima: &[f32], bits: u32) -> ScaleGroup {
+        assert_eq!(maxima.len(), t2 * oc);
+        let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+        let reduce = |pred: &dyn Fn(usize, usize) -> bool| -> f32 {
+            let mut m = 0f32;
+            for uv in 0..t2 {
+                for o in 0..oc {
+                    if pred(uv, o) {
+                        m = m.max(maxima[uv * oc + o]);
+                    }
+                }
+            }
+            if m > 0.0 {
+                m / qmax
+            } else {
+                1.0
+            }
+        };
+        let scales = match gran {
+            Granularity::Tensor => vec![reduce(&|_, _| true)],
+            Granularity::Freq => (0..t2).map(|u| reduce(&|uv, _| uv == u)).collect(),
+            Granularity::Channel => (0..oc).map(|c| reduce(&|_, o| o == c)).collect(),
+            Granularity::ChannelFreq => {
+                let mut s = vec![0f32; oc * t2];
+                for o in 0..oc {
+                    for uv in 0..t2 {
+                        let m = maxima[uv * oc + o];
+                        s[o * t2 + uv] = if m > 0.0 { m / qmax } else { 1.0 };
+                    }
+                }
+                s
+            }
+        };
+        ScaleGroup { gran, t2, oc, scales }
+    }
+
+    pub fn scaled(&self, factor: f32) -> ScaleGroup {
+        let mut s = self.clone();
+        for v in s.scales.iter_mut() {
+            *v *= factor;
+        }
+        s
+    }
+}
+
+impl QConvLayer {
+    /// Build the transform-domain-quantized layer (Eq. 17).
+    ///
+    /// `act_maxima` are per-frequency max |BᵀxB| statistics collected on
+    /// the calibration set (uv-major, single pseudo-channel).
+    #[allow(clippy::too_many_arguments)]
+    pub fn fast(
+        plan: Arc<FastConvPlan>,
+        weight: &Tensor,
+        bias: Vec<f32>,
+        pad: usize,
+        w_bits: u32,
+        a_bits: u32,
+        w_gran: Granularity,
+        a_gran: Granularity,
+        act_maxima: &[f32],
+    ) -> QConvLayer {
+        let (oc, ic, r, _) = weight.dims4();
+        assert_eq!(r, plan.r());
+        let t2 = plan.t() * plan.t();
+        assert_eq!(act_maxima.len(), t2);
+        // transform weights (f32, freq-major [T²][OC][IC])
+        let u = plan.transform_weights(&weight.data, oc, ic);
+        // per (uv, oc) maxima over ic
+        let mut w_maxima = vec![0f32; t2 * oc];
+        for uv in 0..t2 {
+            for o in 0..oc {
+                let mut m = 0f32;
+                for i in 0..ic {
+                    m = m.max(u[(uv * oc + o) * ic + i].abs());
+                }
+                w_maxima[uv * oc + o] = m;
+            }
+        }
+        let w_scales = ScaleGroup::from_maxima(w_gran, t2, oc, &w_maxima, w_bits);
+        assert!(
+            matches!(a_gran, Granularity::Tensor | Granularity::Freq),
+            "activation granularity must be Tensor or Freq"
+        );
+        let a_scales = ScaleGroup::from_maxima(a_gran, t2, 1, act_maxima, a_bits);
+        let wq = quantize_weights(&u, t2, oc, ic, &w_scales, w_bits);
+        QConvLayer {
+            kind: QConvKind::Fast { plan, oc, ic, wq, w_scales, a_scales, a_bits },
+            bias,
+            stride: 1,
+            pad,
+        }
+    }
+
+    /// Quantized direct convolution (the "quantization-alone" baseline):
+    /// int8 per-tensor activations × per-channel weights.
+    pub fn direct(
+        weight: &Tensor,
+        bias: Vec<f32>,
+        stride: usize,
+        pad: usize,
+        w_bits: u32,
+        a_bits: u32,
+        act_max_abs: f32,
+    ) -> QConvLayer {
+        let (oc, ic, r, _) = weight.dims4();
+        let qmax = ((1i32 << (w_bits - 1)) - 1) as f32;
+        let mut w_scales = vec![1f32; oc];
+        let mut wq = vec![0i8; oc * ic * r * r];
+        for o in 0..oc {
+            let row = &weight.data[o * ic * r * r..(o + 1) * ic * r * r];
+            let m = super::max_abs(row);
+            let s = if m > 0.0 { m / qmax } else { 1.0 };
+            w_scales[o] = s;
+            for (dst, &v) in wq[o * ic * r * r..(o + 1) * ic * r * r].iter_mut().zip(row) {
+                *dst = ((v / s).round() as i32).clamp(-(qmax as i32), qmax as i32) as i8;
+            }
+        }
+        QConvLayer {
+            kind: QConvKind::Direct {
+                wq,
+                oc,
+                ic,
+                r,
+                w_scales,
+                a_scale: QParams::from_max_abs(act_max_abs, a_bits),
+            },
+            bias,
+            stride,
+            pad,
+        }
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        match &self.kind {
+            QConvKind::Fast { plan, oc, ic, wq, w_scales, a_scales, a_bits } => {
+                forward_fast_q(x, self, plan, *oc, *ic, wq, w_scales, a_scales, *a_bits)
+            }
+            QConvKind::Direct { wq, oc, ic, r, w_scales, a_scale } => {
+                forward_direct_q(x, self, wq, *oc, *ic, *r, w_scales, *a_scale)
+            }
+        }
+    }
+}
+
+fn quantize_weights(u: &[f32], t2: usize, oc: usize, ic: usize, scales: &ScaleGroup, bits: u32) -> Vec<i8> {
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let mut wq = vec![0i8; t2 * oc * ic];
+    for uv in 0..t2 {
+        for o in 0..oc {
+            let s = scales.scale(uv, o);
+            for i in 0..ic {
+                let v = u[(uv * oc + o) * ic + i];
+                wq[(uv * oc + o) * ic + i] =
+                    ((v / s).round() as i32).clamp(-(qmax as i32), qmax as i32) as i8;
+            }
+        }
+    }
+    wq
+}
+
+#[allow(clippy::too_many_arguments)]
+fn forward_fast_q(
+    x: &Tensor,
+    layer: &QConvLayer,
+    plan: &FastConvPlan,
+    oc: usize,
+    ic: usize,
+    wq: &[i8],
+    w_scales: &ScaleGroup,
+    a_scales: &ScaleGroup,
+    a_bits: u32,
+) -> Tensor {
+    let (n, ic2, h, wid) = x.dims4();
+    assert_eq!(ic, ic2);
+    let (m, l, t) = (plan.m(), plan.l(), plan.t());
+    let r = plan.r();
+    let pad = layer.pad;
+    let oh = h + 2 * pad - r + 1;
+    let ow = wid + 2 * pad - r + 1;
+    let tiles_y = oh.div_ceil(m);
+    let tiles_x = ow.div_ceil(m);
+    let n_tiles = tiles_y * tiles_x;
+    let tt = t * t;
+    let a_qmax = (1i32 << (a_bits - 1)) - 1;
+
+    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    let out_mutex = Mutex::new(&mut out);
+    par_for(n, |ni| {
+        // 1) gather + transform + QUANTIZE tiles: Vq freq-major [T²][tiles][IC]
+        let mut vq = vec![0i8; tt * n_tiles * ic];
+        let mut tile = vec![0f32; l * l];
+        let mut scratch = vec![0f32; t * l];
+        let mut tv = vec![0f32; tt];
+        for ty in 0..tiles_y {
+            for tx in 0..tiles_x {
+                let tile_idx = ty * tiles_x + tx;
+                for c in 0..ic {
+                    gather_tile(x, ni, c, ty, tx, m, l, pad, &mut tile);
+                    plan.transform_tile(&tile, &mut scratch, &mut tv);
+                    for uv in 0..tt {
+                        let s = a_scales.scale(uv, 0);
+                        let q = (tv[uv] / s).round() as i32;
+                        vq[(uv * n_tiles + tile_idx) * ic + c] = q.clamp(-a_qmax, a_qmax) as i8;
+                    }
+                }
+            }
+        }
+        // 2) integer per-frequency GEMM, i32 accumulation (exact).
+        let mut p = vec![0f32; tt * n_tiles * oc];
+        for uv in 0..tt {
+            let vblk = &vq[uv * n_tiles * ic..(uv + 1) * n_tiles * ic];
+            let ublk = &wq[uv * oc * ic..(uv + 1) * oc * ic];
+            let pblk = &mut p[uv * n_tiles * oc..(uv + 1) * n_tiles * oc];
+            let sa = a_scales.scale(uv, 0);
+            for ti in 0..n_tiles {
+                let vrow = &vblk[ti * ic..(ti + 1) * ic];
+                let prow = &mut pblk[ti * oc..(ti + 1) * oc];
+                for (o, pv) in prow.iter_mut().enumerate() {
+                    let urow = &ublk[o * ic..(o + 1) * ic];
+                    let mut acc: i32 = 0;
+                    for (a, b) in vrow.iter().zip(urow) {
+                        acc += (*a as i32) * (*b as i32);
+                    }
+                    // dequantize: both operand scales
+                    *pv = acc as f32 * sa * w_scales.scale(uv, o);
+                }
+            }
+        }
+        // 3) inverse transform + bias + scatter
+        let mut prod = vec![0f32; tt];
+        let mut iscratch = vec![0f32; m * t];
+        let mut ytile = vec![0f32; m * m];
+        let mut guard = out_mutex.lock().unwrap();
+        for o in 0..oc {
+            let b = if layer.bias.is_empty() { 0.0 } else { layer.bias[o] };
+            for ty in 0..tiles_y {
+                for tx in 0..tiles_x {
+                    let tile_idx = ty * tiles_x + tx;
+                    for uv in 0..tt {
+                        prod[uv] = p[(uv * n_tiles + tile_idx) * oc + o];
+                    }
+                    plan.inverse_tile(&prod, &mut iscratch, &mut ytile);
+                    let plane = guard.plane_mut(ni, o);
+                    for i in 0..m.min(oh - ty * m) {
+                        for j in 0..m.min(ow - tx * m) {
+                            plane[(ty * m + i) * ow + tx * m + j] = ytile[i * m + j] + b;
+                        }
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn forward_direct_q(
+    x: &Tensor,
+    layer: &QConvLayer,
+    wq: &[i8],
+    oc: usize,
+    ic: usize,
+    r: usize,
+    w_scales: &[f32],
+    a_scale: QParams,
+) -> Tensor {
+    let (n, ic2, h, wid) = x.dims4();
+    assert_eq!(ic, ic2);
+    let (stride, pad) = (layer.stride, layer.pad);
+    let oh = (h + 2 * pad - r) / stride + 1;
+    let ow = (wid + 2 * pad - r) / stride + 1;
+    // quantize input per-tensor
+    let xq: Vec<i8> = x.data.iter().map(|&v| a_scale.quantize(v) as i8).collect();
+    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    let out_mutex = Mutex::new(&mut out);
+    par_for(n * oc, |job| {
+        let (ni, o) = (job / oc, job % oc);
+        let deq = a_scale.scale * w_scales[o];
+        let b = if layer.bias.is_empty() { 0.0 } else { layer.bias[o] };
+        let mut local = vec![0f32; oh * ow];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc: i32 = 0;
+                for i in 0..ic {
+                    let xplane = &xq[(ni * ic + i) * h * wid..(ni * ic + i + 1) * h * wid];
+                    let wplane = &wq[(o * ic + i) * r * r..(o * ic + i + 1) * r * r];
+                    for ky in 0..r {
+                        let yy = oy * stride + ky;
+                        if yy < pad || yy >= h + pad {
+                            continue;
+                        }
+                        let yy = yy - pad;
+                        for kx in 0..r {
+                            let xx = ox * stride + kx;
+                            if xx < pad || xx >= wid + pad {
+                                continue;
+                            }
+                            acc += (wplane[ky * r + kx] as i32)
+                                * (xplane[yy * wid + xx - pad] as i32);
+                        }
+                    }
+                }
+                local[oy * ow + ox] = acc as f32 * deq + b;
+            }
+        }
+        let mut guard = out_mutex.lock().unwrap();
+        guard.plane_mut(ni, o).copy_from_slice(&local);
+    });
+    out
+}
+
+/// Collect per-frequency max |BᵀxB| statistics over a batch (calibration).
+pub fn collect_act_maxima(x: &Tensor, plan: &FastConvPlan, pad: usize) -> Vec<f32> {
+    let (n, ic, h, wid) = x.dims4();
+    let (m, l, t) = (plan.m(), plan.l(), plan.t());
+    let r = plan.r();
+    let oh = h + 2 * pad - r + 1;
+    let ow = wid + 2 * pad - r + 1;
+    let tiles_y = oh.div_ceil(m);
+    let tiles_x = ow.div_ceil(m);
+    let tt = t * t;
+    let mut maxima = vec![0f32; tt];
+    let mut tile = vec![0f32; l * l];
+    let mut scratch = vec![0f32; t * l];
+    let mut tv = vec![0f32; tt];
+    for ni in 0..n {
+        for c in 0..ic {
+            for ty in 0..tiles_y {
+                for tx in 0..tiles_x {
+                    gather_tile(x, ni, c, ty, tx, m, l, pad, &mut tile);
+                    plan.transform_tile(&tile, &mut scratch, &mut tv);
+                    for uv in 0..tt {
+                        maxima[uv] = maxima[uv].max(tv[uv].abs());
+                    }
+                }
+            }
+        }
+    }
+    maxima
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{sfc, winograd};
+    use crate::nn::conv::conv2d_direct;
+    use crate::util::Pcg32;
+
+    fn rand_tensor(dims: &[usize], rng: &mut Pcg32, sigma: f64) -> Tensor {
+        let mut t = Tensor::zeros(dims);
+        rng.fill_gaussian(&mut t.data, sigma);
+        t
+    }
+
+    #[test]
+    fn int8_fast_close_to_fp32() {
+        let mut rng = Pcg32::seeded(42);
+        let x = rand_tensor(&[1, 4, 14, 14], &mut rng, 1.0);
+        let w = rand_tensor(&[4, 4, 3, 3], &mut rng, 0.3);
+        let plan = Arc::new(FastConvPlan::new(sfc(6, 7, 3)));
+        let maxima = collect_act_maxima(&x, &plan, 1);
+        let q = QConvLayer::fast(
+            plan, &w, vec![0.0; 4], 1, 8, 8,
+            Granularity::ChannelFreq, Granularity::Freq, &maxima,
+        );
+        let want = conv2d_direct(&x, &w, &[0.0; 4], 1, 1);
+        let got = q.forward(&x);
+        let rel = got.mse(&want) / want.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>()
+            * want.len() as f64;
+        assert!(rel < 1e-3, "relative error {rel}");
+    }
+
+    #[test]
+    fn int4_worse_than_int8() {
+        let mut rng = Pcg32::seeded(43);
+        let x = rand_tensor(&[1, 4, 12, 12], &mut rng, 1.0);
+        let w = rand_tensor(&[4, 4, 3, 3], &mut rng, 0.3);
+        let plan = Arc::new(FastConvPlan::new(sfc(6, 6, 3)));
+        let maxima = collect_act_maxima(&x, &plan, 1);
+        let want = conv2d_direct(&x, &w, &[], 1, 1);
+        let mut errs = Vec::new();
+        for bits in [8u32, 4] {
+            let q = QConvLayer::fast(
+                plan.clone(), &w, vec![], 1, bits, bits,
+                Granularity::ChannelFreq, Granularity::Freq, &maxima,
+            );
+            errs.push(q.forward(&x).mse(&want));
+        }
+        assert!(errs[1] > errs[0] * 4.0, "int4 {} vs int8 {}", errs[1], errs[0]);
+    }
+
+    #[test]
+    fn freq_granularity_beats_tensor_for_winograd() {
+        // Table 4's core claim: Winograd needs frequency-wise scales.
+        let mut rng = Pcg32::seeded(44);
+        let x = rand_tensor(&[1, 8, 12, 12], &mut rng, 1.0);
+        let w = rand_tensor(&[8, 8, 3, 3], &mut rng, 0.3);
+        let plan = Arc::new(FastConvPlan::new(winograd(4, 3)));
+        let maxima = collect_act_maxima(&x, &plan, 1);
+        let want = conv2d_direct(&x, &w, &[], 1, 1);
+        let q_tensor = QConvLayer::fast(
+            plan.clone(), &w, vec![], 1, 8, 8,
+            Granularity::Channel, Granularity::Tensor, &maxima,
+        );
+        let q_freq = QConvLayer::fast(
+            plan.clone(), &w, vec![], 1, 8, 8,
+            Granularity::ChannelFreq, Granularity::Freq, &maxima,
+        );
+        let e_tensor = q_tensor.forward(&x).mse(&want);
+        let e_freq = q_freq.forward(&x).mse(&want);
+        assert!(e_freq < e_tensor, "freq {e_freq} must beat tensor {e_tensor}");
+    }
+
+    #[test]
+    fn direct_quantized_close() {
+        let mut rng = Pcg32::seeded(45);
+        let x = rand_tensor(&[2, 3, 9, 9], &mut rng, 1.0);
+        let w = rand_tensor(&[5, 3, 3, 3], &mut rng, 0.3);
+        let q = QConvLayer::direct(&w, vec![0.0; 5], 1, 1, 8, 8, x.max_abs());
+        let want = conv2d_direct(&x, &w, &[0.0; 5], 1, 1);
+        let got = q.forward(&x);
+        let denom = want.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / want.len() as f64;
+        assert!(got.mse(&want) / denom < 1e-3);
+    }
+
+    #[test]
+    fn direct_q_respects_stride() {
+        let mut rng = Pcg32::seeded(46);
+        let x = rand_tensor(&[1, 2, 8, 8], &mut rng, 1.0);
+        let w = rand_tensor(&[2, 2, 3, 3], &mut rng, 0.3);
+        let q = QConvLayer::direct(&w, vec![], 2, 1, 8, 8, x.max_abs());
+        let got = q.forward(&x);
+        assert_eq!(got.dims, vec![1, 2, 4, 4]);
+    }
+}

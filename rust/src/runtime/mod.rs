@@ -1,0 +1,76 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts (HLO text) and
+//! execute them from the Rust request path.
+//!
+//! Interchange is HLO **text** (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//! Python never runs at serving time — `make artifacts` is the only
+//! python invocation.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled model executable on the PJRT CPU client.
+pub struct Executor {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    /// expected input shape (NCHW)
+    pub input_dims: Vec<usize>,
+    /// number of classes in the logits output
+    pub out_classes: usize,
+}
+
+impl Executor {
+    /// Load an HLO-text artifact and compile it for CPU.
+    pub fn load(hlo_path: &Path, input_dims: &[usize], out_classes: usize) -> Result<Executor> {
+        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(anyhow_xla)
+        .with_context(|| format!("parse {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(anyhow_xla)?;
+        Ok(Executor { client, exe, input_dims: input_dims.to_vec(), out_classes })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Run one batch: input is NCHW f32 with dims == input_dims; returns
+    /// the [N, classes] logits.
+    pub fn run(&self, batch: &[f32]) -> Result<Vec<f32>> {
+        let expect: usize = self.input_dims.iter().product();
+        anyhow::ensure!(batch.len() == expect, "batch size mismatch: {} vs {}", batch.len(), expect);
+        let dims: Vec<i64> = self.input_dims.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(batch).reshape(&dims).map_err(anyhow_xla)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit]).map_err(anyhow_xla)?;
+        let out = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
+        // jax lowering uses return_tuple=True → 1-tuple
+        let out = out.to_tuple1().map_err(anyhow_xla)?;
+        let v = out.to_vec::<f32>().map_err(anyhow_xla)?;
+        Ok(v)
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.input_dims[0]
+    }
+}
+
+fn anyhow_xla(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    // Executor integration tests live in rust/tests/runtime_e2e.rs (they
+    // need the build-time artifacts); here we only check error paths.
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let err = Executor::load(Path::new("/nonexistent/model.hlo.txt"), &[1, 3, 32, 32], 10);
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! Software IEEE-754 binary16 rounding.
+//!
+//! Table 1 of the paper measures fast-convolution numerical error with the
+//! element-wise multiply operands rounded to half precision. We only need
+//! f32 -> fp16 -> f32 round-tripping (round-to-nearest-even), not fp16
+//! arithmetic, so a bit-twiddling conversion is sufficient.
+
+/// Round an f32 to the nearest representable fp16 value and return it as f32.
+pub fn round_fp16(x: f32) -> f32 {
+    fp16_to_f32(f32_to_fp16(x))
+}
+
+/// f32 -> IEEE binary16 bits, round-to-nearest-even, with overflow to inf
+/// and gradual underflow to subnormals.
+pub fn f32_to_fp16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xff) as i32;
+    let mut man = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    // Re-bias from 127 to 15.
+    exp -= 127 - 15;
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if exp <= 0 {
+        // Subnormal or zero in fp16.
+        if exp < -10 {
+            return sign; // rounds to zero
+        }
+        man |= 0x0080_0000; // implicit bit
+        let shift = (14 - exp) as u32; // 14..24
+        let half = 1u32 << (shift - 1);
+        let rounded = (man + half - 1 + ((man >> shift) & 1)) >> shift;
+        return sign | rounded as u16;
+    }
+    // Normal case: keep 10 mantissa bits, round to nearest even on bit 13.
+    let half = 0x0000_0fff + ((man >> 13) & 1);
+    man += half;
+    if man & 0x0080_0000 != 0 {
+        man = 0;
+        exp += 1;
+        if exp >= 0x1f {
+            return sign | 0x7c00;
+        }
+    }
+    sign | ((exp as u16) << 10) | ((man >> 13) as u16)
+}
+
+/// IEEE binary16 bits -> f32.
+pub fn fp16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal: normalize.
+            let mut e = -1i32;
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x03ff;
+            sign | (((127 - 15 + e + 1) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers() {
+        for i in -2048..=2048 {
+            let x = i as f32;
+            assert_eq!(round_fp16(x), x, "small ints are exact in fp16: {i}");
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f32_to_fp16(1.0), 0x3c00);
+        assert_eq!(f32_to_fp16(-2.0), 0xc000);
+        assert_eq!(f32_to_fp16(65504.0), 0x7bff); // max finite fp16
+        assert_eq!(f32_to_fp16(65520.0), 0x7c00); // rounds to inf
+        assert_eq!(fp16_to_f32(0x3555), 0.333251953125); // ~1/3
+    }
+
+    #[test]
+    fn round_trip_error_bound() {
+        let mut r = crate::util::Pcg32::seeded(11);
+        for _ in 0..100_000 {
+            let x = (r.next_f64() as f32 - 0.5) * 100.0;
+            let y = round_fp16(x);
+            // relative error bounded by 2^-11 for normal range
+            assert!((x - y).abs() <= x.abs() * (1.0 / 2048.0) + 1e-7, "{x} -> {y}");
+        }
+    }
+
+    #[test]
+    fn subnormals_round_trip() {
+        let tiny = 5.96e-8_f32; // smallest subnormal fp16 ~5.96e-8
+        let y = round_fp16(tiny);
+        assert!(y > 0.0 && y < 1.3e-7);
+        assert_eq!(round_fp16(1e-9), 0.0);
+    }
+
+    #[test]
+    fn nan_and_inf() {
+        assert!(round_fp16(f32::NAN).is_nan());
+        assert_eq!(round_fp16(f32::INFINITY), f32::INFINITY);
+        assert_eq!(round_fp16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+}

@@ -1,0 +1,15 @@
+//! Small self-contained utilities: deterministic PRNG, software fp16
+//! rounding, timing helpers and a scoped thread-pool shim.
+//!
+//! The build environment vendors only `xla` + `anyhow`, so the usual
+//! ecosystem crates (rand, half, rayon, criterion) are reimplemented here in
+//! the minimal form the reproduction needs.
+
+pub mod rng;
+pub mod fp16;
+pub mod timer;
+pub mod par;
+
+pub use fp16::round_fp16;
+pub use rng::Pcg32;
+pub use timer::Timer;

@@ -1,0 +1,135 @@
+//! Data-parallel helpers on std::thread::scope (rayon is not vendored).
+//!
+//! The engine's hot loops parallelize over independent chunks (image
+//! batches, output channels, tile groups); a static chunking over the
+//! available cores is enough and keeps the scheduling deterministic.
+
+/// Number of worker threads to use (respects SFC_THREADS, defaults to
+/// available parallelism).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("SFC_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Parallel for over `0..n`: invokes `f(i)` for each index, splitting the
+/// range into contiguous chunks across worker threads. `f` must be Sync.
+pub fn par_for(n: usize, f: impl Fn(usize) + Sync) {
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || {
+                for i in lo..hi {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over `0..n` collecting results in index order.
+pub fn par_map<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots = out.as_mut_slice();
+        // SAFETY-free approach: split into per-thread disjoint chunks.
+        let threads = num_threads().min(n.max(1));
+        let chunk = n.div_ceil(threads.max(1));
+        std::thread::scope(|s| {
+            for (t, slot_chunk) in slots.chunks_mut(chunk).enumerate() {
+                let f = &f;
+                s.spawn(move || {
+                    for (j, slot) in slot_chunk.iter_mut().enumerate() {
+                        *slot = Some(f(t * chunk + j));
+                    }
+                });
+            }
+        });
+    }
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Process disjoint mutable chunks of a slice in parallel:
+/// `f(chunk_index, chunk)`.
+pub fn par_chunks_mut<T: Send>(data: &mut [T], chunk_size: usize, f: impl Fn(usize, &mut [T]) + Sync) {
+    assert!(chunk_size > 0);
+    std::thread::scope(|s| {
+        let threads = num_threads();
+        let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_size).enumerate().collect();
+        let n = chunks.len();
+        let per_thread = n.div_ceil(threads.max(1));
+        let mut iter = chunks.into_iter();
+        for _ in 0..threads {
+            let batch: Vec<(usize, &mut [T])> = iter.by_ref().take(per_thread).collect();
+            if batch.is_empty() {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || {
+                for (i, c) in batch {
+                    f(i, c);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn par_for_covers_all() {
+        let count = AtomicUsize::new(0);
+        par_for(1000, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn par_map_order() {
+        let v = par_map(257, |i| i * 3);
+        assert_eq!(v.len(), 257);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * 3);
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_writes() {
+        let mut data = vec![0usize; 103];
+        par_chunks_mut(&mut data, 10, |ci, chunk| {
+            for x in chunk.iter_mut() {
+                *x = ci + 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x > 0));
+        assert_eq!(data[0], 1);
+        assert_eq!(data[102], 11);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        par_for(0, |_| panic!("should not run"));
+        let v = par_map(1, |i| i);
+        assert_eq!(v, vec![0]);
+    }
+}

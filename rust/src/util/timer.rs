@@ -1,0 +1,91 @@
+//! Micro-benchmark timing helpers (criterion is not vendored in this
+//! environment, so `cargo bench` targets use this harness: warmup + N
+//! timed iterations + robust statistics).
+
+use std::time::Instant;
+
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_s() * 1e6
+    }
+}
+
+/// Statistics over a set of per-iteration timings (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchStats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        BenchStats {
+            iters: n,
+            mean_s: mean,
+            median_s: samples[n / 2],
+            min_s: samples[0],
+            p95_s: samples[(n as f64 * 0.95) as usize % n.max(1)],
+        }
+    }
+}
+
+/// Run `f` repeatedly: `warmup` untimed runs then timed runs until either
+/// `min_iters` iterations AND `min_time_s` seconds elapsed (whichever is
+/// later), then return stats. The closure's return value is black-boxed.
+pub fn bench<T>(name: &str, warmup: usize, min_iters: usize, min_time_s: f64, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::new();
+    let total = Timer::start();
+    loop {
+        let t = Timer::start();
+        black_box(f());
+        samples.push(t.elapsed_s());
+        if samples.len() >= min_iters && total.elapsed_s() >= min_time_s {
+            break;
+        }
+        if samples.len() > 2_000_000 {
+            break;
+        }
+    }
+    let stats = BenchStats::from_samples(samples);
+    println!(
+        "{name:<44} iters={:<7} mean={:>10.3}us median={:>10.3}us min={:>10.3}us p95={:>10.3}us",
+        stats.iters,
+        stats.mean_s * 1e6,
+        stats.median_s * 1e6,
+        stats.min_s * 1e6,
+        stats.p95_s * 1e6
+    );
+    stats
+}
+
+/// Prevent the optimizer from eliding a value (stable-rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

