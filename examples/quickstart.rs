@@ -49,7 +49,8 @@ fn main() {
     // 5) The whole Table-1 catalog is one call away.
     println!("{:<18} {:>8} {:>8} {:>10}", "algorithm", "mults2D", "κ(Aᵀ)", "complexity");
     for spec in catalog() {
-        let a = spec.build();
+        // FFT/NTT catalog rows have no bilinear error/complexity model
+        let Some(a) = spec.bilinear() else { continue };
         println!("{:<18} {:>8} {:>8.1} {:>9.1}%", spec.name, a.mults_2d_hermitian(), a.kappa_at(), 100.0 * a.complexity_2d());
     }
 }

@@ -1,14 +1,12 @@
-//! Bench: the conv engine hot path — direct vs tiled Winograd vs tiled
-//! SFC, float and transform-domain-quantized (Eq. 17), on ResNet-scale
-//! layer shapes. This is the L3 §Perf workload of EXPERIMENTS.md.
-//! `cargo bench --bench conv_engine`.
+//! Bench: the conv engine hot path through the unified `ConvEngine` API —
+//! every catalog engine on ResNet/VGG-scale layer shapes, float and
+//! transform-domain-quantized (Eq. 17), plus the heuristic selector's
+//! pick and the plan-cache counters. This is the L3 §Perf workload of
+//! EXPERIMENTS.md. `cargo bench --bench conv_engine`.
 
-use std::sync::Arc;
-
-use sfc::algo::{sfc, winograd};
-use sfc::nn::conv::{conv2d_direct, conv2d_fast, FastConvPlan};
+use sfc::engine::{default_selector, ConvDesc, QuantSpec};
 use sfc::nn::Tensor;
-use sfc::quant::qconv::{collect_act_maxima, Granularity, QConvLayer};
+use sfc::quant::qconv::{collect_act_maxima, QCalib, QConvLayer};
 use sfc::util::timer::bench;
 use sfc::util::Pcg32;
 
@@ -26,43 +24,40 @@ fn main() {
         ("14x14x128->128", [1, 128, 14, 14], [128, 128, 3, 3]),
         ("56x56x64->64", [1, 64, 56, 56], [64, 64, 3, 3]),
     ];
+    let sel = default_selector();
     for (label, xd, wd) in cases {
         let x = rand_tensor(&xd, &mut rng, 1.0);
         let w = rand_tensor(&wd, &mut rng, 0.2);
         let macs = (xd[2] * xd[3] * wd[0] * wd[1] * 9) as f64;
+        let desc = ConvDesc::new(1, wd[1], wd[0], xd[2], xd[3], 3, 1, 1);
 
         println!("\n=== layer {label} ({:.1} MMACs) ===", macs / 1e6);
-        let s_direct = bench(&format!("{label} direct"), 2, 5, 0.6, || {
-            conv2d_direct(&x, &w, &[], 1, 1)
-        });
+        let direct_plan = sel.plan_named("direct", &desc).unwrap();
+        let s_direct =
+            bench(&format!("{label} direct"), 2, 5, 0.6, || direct_plan.run(&x, &w, &[]));
 
-        for (name, algo) in [
-            ("SFC-6(7,3)", sfc(6, 7, 3)),
-            ("SFC-6(6,3)", sfc(6, 6, 3)),
-            ("Wino(4,3)", winograd(4, 3)),
-        ] {
-            let plan = FastConvPlan::new(algo);
-            let s = bench(&format!("{label} {name} f32"), 2, 5, 0.6, || {
-                conv2d_fast(&x, &w, &[], &plan, 1)
-            });
+        for name in ["im2col-gemm", "SFC-6(7x7,3x3)", "SFC-6(6x6,3x3)", "Wino(4x4,3x3)", "FFT", "NTT"] {
+            let Ok(plan) = sel.plan_named(name, &desc) else {
+                println!("{label} {name:<18} (unsupported at this shape)");
+                continue;
+            };
+            let s = bench(&format!("{label} {name} f32"), 2, 5, 0.6, || plan.run(&x, &w, &[]));
             println!("    -> {:.2}x vs direct", s_direct.median_s / s.median_s);
         }
 
-        // quantized SFC path (int8 transform domain)
-        let plan = Arc::new(FastConvPlan::new(sfc(6, 7, 3)));
-        let maxima = collect_act_maxima(&x, &plan, 1);
-        let q = QConvLayer::fast(
-            plan,
-            &w,
-            vec![],
-            1,
-            8,
-            8,
-            Granularity::ChannelFreq,
-            Granularity::Freq,
-            &maxima,
-        );
-        let s = bench(&format!("{label} SFC-6(7,3) int8"), 2, 5, 0.6, || q.forward(&x));
+        let hplan = sel.plan(&desc).unwrap();
+        println!("  heuristic selector picks: {}", hplan.engine);
+
+        // quantized SFC path (int8 transform domain) through the same API
+        let spec = QuantSpec::transform_default(8);
+        let qdesc = desc.with_quant(spec);
+        let qplan = sel.plan_named("SFC-6(7x7,3x3)", &qdesc).unwrap();
+        let maxima = collect_act_maxima(&x, qplan.fast_plan().unwrap(), 1);
+        let q = QConvLayer::from_plan(qplan, &w, vec![], &QCalib::TransformMaxima(&maxima));
+        let s = bench(&format!("{label} SFC-6(7x7,3x3) int8"), 2, 5, 0.6, || q.forward(&x));
         println!("    -> {:.2}x vs direct f32", s_direct.median_s / s.median_s);
     }
+
+    let (hits, misses) = sfc::coordinator::metrics::plan_cache_counters();
+    println!("\nplan cache: {hits} hits / {misses} misses");
 }

@@ -1,6 +1,8 @@
-//! Named catalog of every algorithm evaluated in the paper, so the error
-//! harness, BOPs model, engine and benches all reference one source of
-//! truth (Table 1's row set, plus the engine's working set).
+//! Named catalog of every algorithm evaluated in the paper — Table 1's
+//! row set plus the FFT/NTT related-work baselines (Table 3) — so the
+//! error harness, BOPs model, engine layer and benches all reference one
+//! source of truth. The [`crate::engine`] selector seeds its engine list
+//! from this catalog.
 
 use super::bilinear::Bilinear;
 use super::{correction, toomcook};
@@ -10,32 +12,53 @@ pub enum AlgoKind {
     Direct,
     Winograd,
     Sfc,
+    /// whole-image float FFT convolution (related work, §2)
+    Fft,
+    /// whole-image exact integer NTT convolution (related work, Table 3)
+    Ntt,
 }
 
 /// One catalog row: how to build the algorithm plus its Table-1 identity.
+/// FFT/NTT rows are not bilinear (no (G, Bᵀ, Aᵀ) triple); their executors
+/// live in [`crate::engine::exec`] and `n`/`m` are 0.
 #[derive(Clone, Debug)]
 pub struct AlgoSpec {
     pub name: &'static str,
     pub kind: AlgoKind,
-    /// transform points (SFC) — 0 for direct/Winograd
+    /// transform points (SFC) — 0 for direct/Winograd/FFT/NTT
     pub n: usize,
-    /// output tile
+    /// output tile — 0 for the whole-image FFT/NTT baselines
     pub m: usize,
-    /// kernel size
+    /// kernel size — 0 means "any kernel" (FFT/NTT)
     pub r: usize,
 }
 
 impl AlgoSpec {
-    pub fn build(&self) -> Bilinear {
+    /// Does this row have a bilinear (G, Bᵀ, Aᵀ) realization?
+    pub fn is_bilinear(&self) -> bool {
+        matches!(self.kind, AlgoKind::Direct | AlgoKind::Winograd | AlgoKind::Sfc)
+    }
+
+    /// The bilinear realization, when one exists.
+    pub fn bilinear(&self) -> Option<Bilinear> {
         match self.kind {
-            AlgoKind::Direct => Bilinear::direct(self.r),
-            AlgoKind::Winograd => toomcook::winograd(self.m, self.r),
-            AlgoKind::Sfc => correction::sfc(self.n, self.m, self.r),
+            AlgoKind::Direct => Some(Bilinear::direct(self.r)),
+            AlgoKind::Winograd => Some(toomcook::winograd(self.m, self.r)),
+            AlgoKind::Sfc => Some(correction::sfc(self.n, self.m, self.r)),
+            AlgoKind::Fft | AlgoKind::Ntt => None,
         }
+    }
+
+    /// Build the bilinear algorithm; panics for the FFT/NTT rows (use
+    /// [`AlgoSpec::bilinear`] when iterating the whole catalog).
+    pub fn build(&self) -> Bilinear {
+        self.bilinear()
+            .unwrap_or_else(|| panic!("{} has no bilinear realization", self.name))
     }
 }
 
-/// The Table-1 row set, in the paper's order.
+/// The Table-1 row set in the paper's order, followed by the Table-3
+/// related-work baselines.
 pub fn catalog() -> Vec<AlgoSpec> {
     vec![
         AlgoSpec { name: "direct", kind: AlgoKind::Direct, n: 0, m: 1, r: 3 },
@@ -49,6 +72,8 @@ pub fn catalog() -> Vec<AlgoSpec> {
         AlgoSpec { name: "SFC-6(6x6,5x5)", kind: AlgoKind::Sfc, n: 6, m: 6, r: 5 },
         AlgoSpec { name: "Wino(2x2,7x7)", kind: AlgoKind::Winograd, n: 0, m: 2, r: 7 },
         AlgoSpec { name: "SFC-6(4x4,7x7)", kind: AlgoKind::Sfc, n: 6, m: 4, r: 7 },
+        AlgoSpec { name: "FFT", kind: AlgoKind::Fft, n: 0, m: 0, r: 0 },
+        AlgoSpec { name: "NTT", kind: AlgoKind::Ntt, n: 0, m: 0, r: 0 },
     ]
 }
 
@@ -63,22 +88,38 @@ mod tests {
     use super::*;
 
     #[test]
-    fn all_catalog_entries_build_and_validate() {
+    fn all_bilinear_entries_build_and_validate() {
+        let mut built = 0;
         for spec in catalog() {
-            let algo = spec.build(); // Bilinear::validate runs inside builders
+            let Some(algo) = spec.bilinear() else { continue };
+            // Bilinear::validate runs inside the builders
             assert!(algo.t >= algo.m, "{}", spec.name);
+            built += 1;
         }
+        assert_eq!(built, 11, "Table 1 has 11 bilinear rows");
     }
 
     #[test]
     fn lookup_by_name() {
         assert!(by_name("sfc-6(7x7,3x3)").is_some());
         assert!(by_name("Wino(4x4,3x3)").is_some());
+        assert!(by_name("fft").is_some());
+        assert!(by_name("ntt").is_some());
         assert!(by_name("nope").is_none());
     }
 
     #[test]
-    fn catalog_matches_table1_rows() {
-        assert_eq!(catalog().len(), 11);
+    fn catalog_matches_table1_plus_baselines() {
+        let rows = catalog();
+        assert_eq!(rows.len(), 13);
+        assert_eq!(rows.iter().filter(|s| s.is_bilinear()).count(), 11);
+        assert!(rows.iter().any(|s| s.kind == AlgoKind::Fft));
+        assert!(rows.iter().any(|s| s.kind == AlgoKind::Ntt));
+    }
+
+    #[test]
+    fn fft_ntt_rows_have_no_bilinear_form() {
+        assert!(by_name("FFT").unwrap().bilinear().is_none());
+        assert!(by_name("NTT").unwrap().bilinear().is_none());
     }
 }

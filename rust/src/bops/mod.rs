@@ -26,7 +26,9 @@ impl BopsBreakdown {
     }
 }
 
-fn mul_bops(bits: u64) -> u64 {
+/// BOPs of one n-bit multiply (n−1 n-bit additions). Shared by the
+/// direct/fast models below and the engine-layer cost models.
+pub fn mul_bops(bits: u64) -> u64 {
     bits * (bits.saturating_sub(1))
 }
 

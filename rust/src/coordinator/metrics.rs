@@ -1,4 +1,27 @@
-//! Latency statistics for the serving layer.
+//! Serving-layer metrics: latency statistics and engine plan-cache
+//! counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide plan-cache hit counter (mirrored from every
+/// [`crate::engine::PlanCache`] instance).
+pub static PLAN_CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+/// Process-wide plan-cache miss counter.
+pub static PLAN_CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Record one plan-cache lookup outcome.
+pub fn record_plan_cache(hit: bool) {
+    if hit {
+        PLAN_CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+    } else {
+        PLAN_CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// (hits, misses) snapshot of the process-wide plan-cache counters.
+pub fn plan_cache_counters() -> (u64, u64) {
+    (PLAN_CACHE_HITS.load(Ordering::Relaxed), PLAN_CACHE_MISSES.load(Ordering::Relaxed))
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct LatencyStats {

@@ -18,6 +18,23 @@ use crate::runtime::Executor;
 use anyhow::Result;
 use std::collections::HashMap;
 
+/// Parse an optional `--key value` CLI flag with a contextful error:
+/// `sfc serve --requests=abc` reports the bad flag instead of panicking.
+pub fn parse_opt<T: std::str::FromStr>(
+    opts: &HashMap<String, String>,
+    key: &str,
+    default: T,
+) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    match opts.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse::<T>()
+            .map_err(|e| anyhow::anyhow!("invalid --{key} value '{v}': {e}")),
+    }
+}
 
 /// `sfc serve` — the end-to-end demo: load an AOT model artifact, serve a
 /// stream of requests from the SynthImage test split, report accuracy,
@@ -26,8 +43,8 @@ pub fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
     let data_dir = opts.get("data-dir").map(|s| s.as_str()).unwrap_or("artifacts");
     let default_hlo = format!("{data_dir}/resnet18_b8.hlo.txt");
     let hlo = opts.get("hlo").map(|s| s.as_str()).unwrap_or(&default_hlo);
-    let requests: usize = opts.get("requests").map(|s| s.parse().unwrap()).unwrap_or(256);
-    let batch: usize = opts.get("batch").map(|s| s.parse().unwrap()).unwrap_or(8);
+    let requests: usize = parse_opt(opts, "requests", 256)?;
+    let batch: usize = parse_opt(opts, "batch", 8)?;
 
     println!("loading {hlo} (batch {batch}) ...");
     let (images, labels) = crate::exp::load_split(data_dir, "test", requests)?;
@@ -65,6 +82,8 @@ pub fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
         stats.max * 1e3
     );
     println!("  batches    : {}", server.batches_executed());
+    let (hits, misses) = metrics::plan_cache_counters();
+    println!("  plan cache : {hits} hits / {misses} misses");
     server.shutdown();
     Ok(())
 }

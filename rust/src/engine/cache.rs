@@ -1,0 +1,141 @@
+//! Shape-keyed plan cache (cuDNN-execution-plan style).
+//!
+//! Planning is cheap for direct conv but real work for the bilinear
+//! engines (exact rational transform construction + f32 lowering) and for
+//! autotune selection (micro-benchmarks). Serving traffic re-creates
+//! models and quantizers with identical layer shapes constantly, so plans
+//! are cached behind an interior-mutable map shared via `Arc`. Hit/miss
+//! counters are mirrored into [`crate::coordinator::metrics`] so the
+//! serving layer reports them alongside latency stats.
+
+use super::desc::ConvDesc;
+use super::ConvPlan;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Cache key: the problem descriptor plus the selection mode that
+/// produced the plan (an engine name for pinned plans, or a policy tag
+/// like "heuristic"/"autotune" — the two policies may legitimately pick
+/// different engines for one descriptor).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub desc: ConvDesc,
+    pub mode: String,
+}
+
+impl PlanKey {
+    pub fn new(desc: ConvDesc, mode: &str) -> PlanKey {
+        PlanKey { desc, mode: mode.to_string() }
+    }
+}
+
+/// Interior-mutable, thread-safe plan cache.
+pub struct PlanCache {
+    map: Mutex<HashMap<PlanKey, Arc<ConvPlan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache { map: Mutex::new(HashMap::new()), hits: AtomicU64::new(0), misses: AtomicU64::new(0) }
+    }
+
+    /// Look up `key`, building and inserting on miss. The build runs
+    /// under the cache lock, so concurrent requests for one shape plan it
+    /// exactly once (the others wait and then hit).
+    pub fn get_or_try_insert<F>(&self, key: PlanKey, build: F) -> Result<Arc<ConvPlan>>
+    where
+        F: FnOnce() -> Result<Arc<ConvPlan>>,
+    {
+        let mut map = self.map.lock().unwrap();
+        if let Some(p) = map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            crate::coordinator::metrics::record_plan_cache(true);
+            return Ok(p.clone());
+        }
+        let plan = build()?;
+        map.insert(key, plan.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        crate::coordinator::metrics::record_plan_cache(false);
+        Ok(plan)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::new()
+    }
+}
+
+/// The process-wide cache used by the default selector (and anything
+/// else that doesn't need isolation).
+pub fn global() -> Arc<PlanCache> {
+    static GLOBAL: OnceLock<Arc<PlanCache>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Arc::new(PlanCache::new())).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn desc(h: usize) -> ConvDesc {
+        ConvDesc::new(1, 3, 8, h, h, 3, 1, 1)
+    }
+
+    #[test]
+    fn hit_and_miss_counting() {
+        let cache = PlanCache::new();
+        let build = |d: ConvDesc| move || Ok(Arc::new(ConvPlan::direct(d)));
+        let p1 = cache.get_or_try_insert(PlanKey::new(desc(8), "direct"), build(desc(8))).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        let p2 = cache.get_or_try_insert(PlanKey::new(desc(8), "direct"), build(desc(8))).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert!(Arc::ptr_eq(&p1, &p2));
+        cache.get_or_try_insert(PlanKey::new(desc(16), "direct"), build(desc(16))).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (1, 2));
+        // same desc, different mode = different entry
+        cache.get_or_try_insert(PlanKey::new(desc(8), "heuristic"), build(desc(8))).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (1, 3));
+        assert_eq!(cache.len(), 3);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn build_error_is_not_cached() {
+        let cache = PlanCache::new();
+        let err = cache.get_or_try_insert(PlanKey::new(desc(8), "x"), || {
+            anyhow::bail!("no engine")
+        });
+        assert!(err.is_err());
+        assert_eq!(cache.len(), 0);
+        // a later successful build still works
+        cache
+            .get_or_try_insert(PlanKey::new(desc(8), "x"), || Ok(Arc::new(ConvPlan::direct(desc(8)))))
+            .unwrap();
+        assert_eq!(cache.len(), 1);
+    }
+}

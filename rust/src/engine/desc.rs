@@ -1,0 +1,170 @@
+//! Convolution problem descriptors — the cuDNN-style "what", decoupled
+//! from the "how" (engines) and the "ready-to-run" (plans).
+//!
+//! A [`ConvDesc`] fully describes one conv layer invocation: tensor
+//! shapes, stride/pad geometry and (optionally) the quantization scheme
+//! of §5 (bit-widths + scale-group granularity per operand). Descriptors
+//! are small, hashable values — they key the [`crate::engine::PlanCache`]
+//! and parameterize every engine's `supports`/`plan`/`cost_model`.
+
+use crate::nn::model::ConvShape;
+use crate::quant::Granularity;
+
+/// Quantization scheme for a conv (Eq. 17 / Table 4–5 axes): bit-widths
+/// and scale-group granularity for weights and activations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct QuantSpec {
+    pub w_bits: u32,
+    pub a_bits: u32,
+    pub w_gran: Granularity,
+    pub a_gran: Granularity,
+}
+
+impl QuantSpec {
+    /// The paper's SFC/Winograd default: per-frequency activations,
+    /// channel×frequency weights.
+    pub fn transform_default(bits: u32) -> QuantSpec {
+        QuantSpec {
+            w_bits: bits,
+            a_bits: bits,
+            w_gran: Granularity::ChannelFreq,
+            a_gran: Granularity::Freq,
+        }
+    }
+
+    /// The spatial-domain baseline: per-tensor activations, per-channel
+    /// weights.
+    pub fn spatial_default(bits: u32) -> QuantSpec {
+        QuantSpec {
+            w_bits: bits,
+            a_bits: bits,
+            w_gran: Granularity::Channel,
+            a_gran: Granularity::Tensor,
+        }
+    }
+}
+
+/// Full description of one 2-D convolution problem (NCHW, square kernel).
+///
+/// `quant: None` means float execution; `Some(spec)` asks engines for
+/// their low-precision path with the given scheme. Shape-identical layers
+/// produce equal descriptors, which is what makes plan caching effective
+/// across the repeated blocks of ResNet/VGG topologies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ConvDesc {
+    /// batch size the plan is tuned for (kernels accept any batch)
+    pub batch: usize,
+    pub ic: usize,
+    pub oc: usize,
+    /// input spatial height/width
+    pub h: usize,
+    pub w: usize,
+    /// square kernel size
+    pub r: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub quant: Option<QuantSpec>,
+}
+
+impl ConvDesc {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        batch: usize,
+        ic: usize,
+        oc: usize,
+        h: usize,
+        w: usize,
+        r: usize,
+        stride: usize,
+        pad: usize,
+    ) -> ConvDesc {
+        assert!(stride >= 1, "stride must be >= 1");
+        assert!(r >= 1, "kernel must be >= 1");
+        assert!(
+            h + 2 * pad >= r && w + 2 * pad >= r,
+            "kernel {r} exceeds padded input {h}x{w} (pad {pad})"
+        );
+        ConvDesc { batch, ic, oc, h, w, r, stride, pad, quant: None }
+    }
+
+    /// Same problem with a quantization scheme attached.
+    pub fn with_quant(mut self, spec: QuantSpec) -> ConvDesc {
+        self.quant = Some(spec);
+        self
+    }
+
+    /// Output spatial size.
+    pub fn out_hw(&self) -> (usize, usize) {
+        let oh = (self.h + 2 * self.pad - self.r) / self.stride + 1;
+        let ow = (self.w + 2 * self.pad - self.r) / self.stride + 1;
+        (oh, ow)
+    }
+
+    /// Multiply-accumulates for direct execution of the whole batch.
+    pub fn macs(&self) -> u64 {
+        let (oh, ow) = self.out_hw();
+        (self.batch * oh * ow * self.oc * self.ic * self.r * self.r) as u64
+    }
+
+    /// The analytical-model shape (BOPs / FPGA layers use this view).
+    pub fn shape(&self) -> ConvShape {
+        ConvShape {
+            ic: self.ic,
+            oc: self.oc,
+            h: self.h,
+            w: self.w,
+            r: self.r,
+            stride: self.stride,
+        }
+    }
+
+    /// Descriptor for an analytical [`ConvShape`] (pad chosen "same"-style).
+    pub fn from_shape(s: &ConvShape, batch: usize) -> ConvDesc {
+        ConvDesc::new(batch, s.ic, s.oc, s.h, s.w, s.r, s.stride, s.r / 2)
+    }
+
+    /// Effective ⊙ bit-widths for cost models: the quant scheme's, or a
+    /// 16-bit float proxy (Table 1's fp16 ⊙ baseline).
+    pub fn odot_bits(&self) -> (u64, u64) {
+        match self.quant {
+            Some(q) => (q.a_bits as u64, q.w_bits as u64),
+            None => (16, 16),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn out_hw_matches_conv_arithmetic() {
+        let d = ConvDesc::new(1, 3, 16, 32, 32, 3, 1, 1);
+        assert_eq!(d.out_hw(), (32, 32));
+        let d = ConvDesc::new(1, 16, 32, 32, 32, 3, 2, 1);
+        assert_eq!(d.out_hw(), (16, 16));
+        let d = ConvDesc::new(1, 16, 32, 32, 32, 1, 2, 0);
+        assert_eq!(d.out_hw(), (16, 16));
+    }
+
+    #[test]
+    fn descriptor_is_a_usable_map_key() {
+        let a = ConvDesc::new(1, 3, 16, 32, 32, 3, 1, 1);
+        let b = a;
+        let c = a.with_quant(QuantSpec::transform_default(8));
+        let mut m: HashMap<ConvDesc, u32> = HashMap::new();
+        m.insert(a, 1);
+        m.insert(c, 2);
+        assert_eq!(m[&b], 1);
+        assert_eq!(m[&c], 2);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn macs_counts_batch() {
+        let d1 = ConvDesc::new(1, 4, 4, 8, 8, 3, 1, 1);
+        let d2 = ConvDesc::new(2, 4, 4, 8, 8, 3, 1, 1);
+        assert_eq!(d1.macs() * 2, d2.macs());
+    }
+}

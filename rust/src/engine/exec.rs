@@ -1,0 +1,437 @@
+//! Additional conv executors owned by the engine layer: im2col+GEMM
+//! lowering, float FFT convolution and exact int8 NTT convolution.
+//!
+//! The direct and tiled-bilinear (Winograd/SFC) executors live in
+//! [`crate::nn::conv`]; this module adds the remaining Table-1/Table-3
+//! backends so every catalog row is runnable through the same
+//! [`crate::engine::ConvPlan`] interface.
+
+use crate::algo::fft::fft_inplace;
+use crate::algo::ntt::{ntt_inplace, P};
+use crate::nn::tensor::Tensor;
+use crate::util::par::{par_for, par_map};
+use std::sync::Mutex;
+
+/// im2col + GEMM convolution: lower each image to a [OH·OW × IC·R·R]
+/// matrix and multiply by the [OC × IC·R·R] filter matrix. Supports any
+/// stride/pad; this is the classic GEMM-friendly baseline (cuDNN's
+/// `IMPLICIT_GEMM` ancestor).
+pub fn conv2d_im2col(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, pad: usize) -> Tensor {
+    let (n, ic, h, wid) = x.dims4();
+    let (oc, ic2, r, r2) = w.dims4();
+    assert_eq!(ic, ic2, "channel mismatch");
+    assert_eq!(r, r2, "square kernels only");
+    assert!(bias.is_empty() || bias.len() == oc);
+    let oh = (h + 2 * pad - r) / stride + 1;
+    let ow = (wid + 2 * pad - r) / stride + 1;
+    let k = ic * r * r;
+    let npix = oh * ow;
+    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    let out_mutex = Mutex::new(&mut out);
+    par_for(n, |ni| {
+        // 1) lowering: col[p][kk], kk = (c·R + ky)·R + kx — the same
+        //    layout as one row of the OC×(IC·R·R) weight matrix.
+        let mut col = vec![0f32; npix * k];
+        for c in 0..ic {
+            let plane = x.plane(ni, c);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let p = oy * ow + ox;
+                    let dst = &mut col[p * k + c * r * r..p * k + (c + 1) * r * r];
+                    for ky in 0..r {
+                        let yy = (oy * stride + ky) as isize - pad as isize;
+                        for kx in 0..r {
+                            let xx = (ox * stride + kx) as isize - pad as isize;
+                            dst[ky * r + kx] = if yy >= 0
+                                && (yy as usize) < h
+                                && xx >= 0
+                                && (xx as usize) < wid
+                            {
+                                plane[yy as usize * wid + xx as usize]
+                            } else {
+                                0.0
+                            };
+                        }
+                    }
+                }
+            }
+        }
+        // 2) GEMM: res[o][p] = Σ_kk W[o][kk]·col[p][kk]
+        let mut res = vec![0f32; oc * npix];
+        for o in 0..oc {
+            let wrow = &w.data[o * k..(o + 1) * k];
+            let b = if bias.is_empty() { 0.0 } else { bias[o] };
+            for p in 0..npix {
+                let crow = &col[p * k..(p + 1) * k];
+                let mut acc = 0f32;
+                for (a, c2) in wrow.iter().zip(crow) {
+                    acc += a * c2;
+                }
+                res[o * npix + p] = acc + b;
+            }
+        }
+        let mut guard = out_mutex.lock().unwrap();
+        for o in 0..oc {
+            guard.plane_mut(ni, o).copy_from_slice(&res[o * npix..(o + 1) * npix]);
+        }
+    });
+    out
+}
+
+/// 2-D FFT over a row-major `sh`×`sw` complex grid (both powers of two).
+/// The inverse pass does NOT normalize; callers divide by `sh·sw`.
+fn fft2d(re: &mut [f64], im: &mut [f64], sh: usize, sw: usize, inverse: bool) {
+    for y in 0..sh {
+        fft_inplace(&mut re[y * sw..(y + 1) * sw], &mut im[y * sw..(y + 1) * sw], inverse);
+    }
+    let mut cr = vec![0f64; sh];
+    let mut ci = vec![0f64; sh];
+    for xcol in 0..sw {
+        for y in 0..sh {
+            cr[y] = re[y * sw + xcol];
+            ci[y] = im[y * sw + xcol];
+        }
+        fft_inplace(&mut cr, &mut ci, inverse);
+        for y in 0..sh {
+            re[y * sw + xcol] = cr[y];
+            im[y * sw + xcol] = ci[y];
+        }
+    }
+}
+
+/// Float FFT convolution (stride 1): whole-image frequency-domain
+/// correlation with per-channel accumulation in the frequency domain —
+/// the classic related-work baseline (§2). Exact up to f64 roundoff.
+pub fn conv2d_fft(x: &Tensor, w: &Tensor, bias: &[f32], pad: usize) -> Tensor {
+    let (n, ic, h, wid) = x.dims4();
+    let (oc, ic2, r, r2) = w.dims4();
+    assert_eq!(ic, ic2, "channel mismatch");
+    assert_eq!(r, r2, "square kernels only");
+    assert!(bias.is_empty() || bias.len() == oc);
+    let (hp, wp) = (h + 2 * pad, wid + 2 * pad);
+    let oh = hp - r + 1;
+    let ow = wp - r + 1;
+    let sh = (hp + r - 1).next_power_of_two();
+    let sw = (wp + r - 1).next_power_of_two();
+    let s2 = sh * sw;
+
+    // Flipped-kernel FFTs, once for all images: [OC][IC] planes.
+    let mut kf_re = vec![0f64; oc * ic * s2];
+    let mut kf_im = vec![0f64; oc * ic * s2];
+    for o in 0..oc {
+        for c in 0..ic {
+            let base = (o * ic + c) * s2;
+            let wplane = w.plane(o, c);
+            for ky in 0..r {
+                for kx in 0..r {
+                    // correlation = convolution with the flipped filter
+                    kf_re[base + (r - 1 - ky) * sw + (r - 1 - kx)] = wplane[ky * r + kx] as f64;
+                }
+            }
+            fft2d(&mut kf_re[base..base + s2], &mut kf_im[base..base + s2], sh, sw, false);
+        }
+    }
+
+    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    let out_mutex = Mutex::new(&mut out);
+    par_for(n, |ni| {
+        let mut xre = vec![0f64; ic * s2];
+        let mut xim = vec![0f64; ic * s2];
+        for c in 0..ic {
+            let base = c * s2;
+            let plane = x.plane(ni, c);
+            for yy in 0..h {
+                for xx in 0..wid {
+                    xre[base + (yy + pad) * sw + (xx + pad)] = plane[yy * wid + xx] as f64;
+                }
+            }
+            fft2d(&mut xre[base..base + s2], &mut xim[base..base + s2], sh, sw, false);
+        }
+        let mut acc_re = vec![0f64; s2];
+        let mut acc_im = vec![0f64; s2];
+        let mut res = vec![0f32; oc * oh * ow];
+        let inv_scale = 1.0 / s2 as f64;
+        for o in 0..oc {
+            acc_re.iter_mut().for_each(|v| *v = 0.0);
+            acc_im.iter_mut().for_each(|v| *v = 0.0);
+            for c in 0..ic {
+                let xb = c * s2;
+                let kb = (o * ic + c) * s2;
+                for i in 0..s2 {
+                    let (ar, ai) = (xre[xb + i], xim[xb + i]);
+                    let (br, bi) = (kf_re[kb + i], kf_im[kb + i]);
+                    acc_re[i] += ar * br - ai * bi;
+                    acc_im[i] += ar * bi + ai * br;
+                }
+            }
+            fft2d(&mut acc_re, &mut acc_im, sh, sw, true);
+            let b = if bias.is_empty() { 0.0 } else { bias[o] };
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    res[o * oh * ow + oy * ow + ox] =
+                        (acc_re[(oy + r - 1) * sw + (ox + r - 1)] * inv_scale) as f32 + b;
+                }
+            }
+        }
+        let mut guard = out_mutex.lock().unwrap();
+        for o in 0..oc {
+            guard.plane_mut(ni, o).copy_from_slice(&res[o * oh * ow..(o + 1) * oh * ow]);
+        }
+    });
+    out
+}
+
+/// 2-D NTT (row-column) over an `sh`×`sw` grid in F_p. The inverse pass
+/// of [`ntt_inplace`] normalizes per axis, so a full 2-D round trip is
+/// already scaled correctly.
+fn ntt2d(a: &mut [u64], sh: usize, sw: usize, inverse: bool) {
+    for y in 0..sh {
+        ntt_inplace(&mut a[y * sw..(y + 1) * sw], inverse);
+    }
+    let mut col = vec![0u64; sh];
+    for xcol in 0..sw {
+        for y in 0..sh {
+            col[y] = a[y * sw + xcol];
+        }
+        ntt_inplace(&mut col, inverse);
+        for y in 0..sh {
+            a[y * sw + xcol] = col[y];
+        }
+    }
+}
+
+#[inline]
+fn ntt_encode(v: i64) -> u64 {
+    v.rem_euclid(P as i64) as u64
+}
+
+#[inline]
+fn ntt_decode(v: u64) -> i64 {
+    if v > P / 2 {
+        v as i64 - P as i64
+    } else {
+        v as i64
+    }
+}
+
+/// Exact stride-1 integer correlation via 2-D NTT with frequency-domain
+/// channel accumulation: returns `[N][OC][OH][OW]` i64 accumulators,
+/// bit-identical to the nested-loop integer conv as long as every true
+/// output satisfies `|y| < p/2` (int8 operands: IC·R² ≤ ~30k). `xq` is
+/// NCHW, `wq` is OC×IC×R×R.
+#[allow(clippy::too_many_arguments)]
+pub fn ntt_corr2d_i8(
+    xq: &[i8],
+    n: usize,
+    ic: usize,
+    h: usize,
+    w: usize,
+    wq: &[i8],
+    oc: usize,
+    r: usize,
+    pad: usize,
+) -> Vec<i64> {
+    assert_eq!(xq.len(), n * ic * h * w);
+    assert_eq!(wq.len(), oc * ic * r * r);
+    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    let oh = hp - r + 1;
+    let ow = wp - r + 1;
+    let sh = (hp + r - 1).next_power_of_two();
+    let sw = (wp + r - 1).next_power_of_two();
+    let s2 = sh * sw;
+
+    // Flipped-kernel NTTs, shared across images.
+    let mut knt = vec![0u64; oc * ic * s2];
+    for o in 0..oc {
+        for c in 0..ic {
+            let base = (o * ic + c) * s2;
+            let wplane = &wq[(o * ic + c) * r * r..(o * ic + c + 1) * r * r];
+            for ky in 0..r {
+                for kx in 0..r {
+                    knt[base + (r - 1 - ky) * sw + (r - 1 - kx)] =
+                        ntt_encode(wplane[ky * r + kx] as i64);
+                }
+            }
+            ntt2d(&mut knt[base..base + s2], sh, sw, false);
+        }
+    }
+
+    let per_image: Vec<Vec<i64>> = par_map(n, |ni| {
+        let mut xnt = vec![0u64; ic * s2];
+        for c in 0..ic {
+            let base = c * s2;
+            let plane = &xq[(ni * ic + c) * h * w..(ni * ic + c + 1) * h * w];
+            for yy in 0..h {
+                for xx in 0..w {
+                    xnt[base + (yy + pad) * sw + (xx + pad)] =
+                        ntt_encode(plane[yy * w + xx] as i64);
+                }
+            }
+            ntt2d(&mut xnt[base..base + s2], sh, sw, false);
+        }
+        let mut img_out = vec![0i64; oc * oh * ow];
+        let mut acc = vec![0u64; s2];
+        for o in 0..oc {
+            acc.iter_mut().for_each(|v| *v = 0);
+            for c in 0..ic {
+                let xb = c * s2;
+                let kb = (o * ic + c) * s2;
+                for i in 0..s2 {
+                    // operands < p < 2^30 ⇒ the product fits u64
+                    acc[i] = (acc[i] + xnt[xb + i] * knt[kb + i] % P) % P;
+                }
+            }
+            ntt2d(&mut acc, sh, sw, true);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    img_out[o * oh * ow + oy * ow + ox] =
+                        ntt_decode(acc[(oy + r - 1) * sw + (ox + r - 1)]);
+                }
+            }
+        }
+        img_out
+    });
+
+    let mut out = Vec::with_capacity(n * oc * oh * ow);
+    for img in per_image {
+        out.extend_from_slice(&img);
+    }
+    out
+}
+
+/// Float-entry NTT convolution (stride 1): per-tensor symmetric int8
+/// quantization of both operands, exact integer correlation through the
+/// NTT, dequantize. This is the Table-3 NTT accelerator's datapath — the
+/// ⊙ operands carry full mod-p width regardless of the 8-bit inputs,
+/// which is exactly the paper's criticism of NTT under low precision.
+pub fn conv2d_ntt_int8(x: &Tensor, w: &Tensor, bias: &[f32], pad: usize) -> Tensor {
+    let (n, ic, h, wid) = x.dims4();
+    let (oc, ic2, r, r2) = w.dims4();
+    assert_eq!(ic, ic2, "channel mismatch");
+    assert_eq!(r, r2, "square kernels only");
+    let sx = {
+        let m = x.max_abs();
+        if m > 0.0 {
+            m / 127.0
+        } else {
+            1.0
+        }
+    };
+    let sw_ = {
+        let m = w.max_abs();
+        if m > 0.0 {
+            m / 127.0
+        } else {
+            1.0
+        }
+    };
+    let xq: Vec<i8> = x.data.iter().map(|&v| ((v / sx).round() as i32).clamp(-127, 127) as i8).collect();
+    let wq: Vec<i8> = w.data.iter().map(|&v| ((v / sw_).round() as i32).clamp(-127, 127) as i8).collect();
+    let acc = ntt_corr2d_i8(&xq, n, ic, h, wid, &wq, oc, r, pad);
+    let oh = h + 2 * pad - r + 1;
+    let ow = wid + 2 * pad - r + 1;
+    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    let deq = sx * sw_;
+    for ni in 0..n {
+        for o in 0..oc {
+            let b = if bias.is_empty() { 0.0 } else { bias[o] };
+            let src = &acc[(ni * oc + o) * oh * ow..(ni * oc + o + 1) * oh * ow];
+            let dst = out.plane_mut(ni, o);
+            for (d, &a) in dst.iter_mut().zip(src) {
+                *d = a as f32 * deq + b;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::conv::conv2d_direct;
+    use crate::util::Pcg32;
+
+    fn rand_tensor(dims: &[usize], rng: &mut Pcg32, sigma: f64) -> Tensor {
+        let mut t = Tensor::zeros(dims);
+        rng.fill_gaussian(&mut t.data, sigma);
+        t
+    }
+
+    fn rel_mse(got: &Tensor, want: &Tensor) -> f64 {
+        let denom = want.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>()
+            / want.len().max(1) as f64;
+        got.mse(want) / denom.max(1e-30)
+    }
+
+    #[test]
+    fn im2col_matches_direct_stride_pad() {
+        let mut rng = Pcg32::seeded(11);
+        for (stride, pad, r) in [(1usize, 1usize, 3usize), (2, 1, 3), (1, 0, 1), (2, 0, 1), (1, 2, 5)] {
+            let x = rand_tensor(&[2, 3, 11, 9], &mut rng, 1.0);
+            let w = rand_tensor(&[4, 3, r, r], &mut rng, 0.3);
+            let bias = vec![0.1, -0.2, 0.0, 0.5];
+            let want = conv2d_direct(&x, &w, &bias, stride, pad);
+            let got = conv2d_im2col(&x, &w, &bias, stride, pad);
+            assert_eq!(got.dims, want.dims, "s{stride} p{pad} r{r}");
+            assert!(got.mse(&want) < 1e-10, "s{stride} p{pad} r{r}: {}", got.mse(&want));
+        }
+    }
+
+    #[test]
+    fn fft_matches_direct() {
+        let mut rng = Pcg32::seeded(12);
+        for (hh, ww, r, pad) in [(8usize, 8usize, 3usize, 1usize), (11, 13, 3, 1), (12, 12, 5, 2), (9, 9, 3, 0)] {
+            let x = rand_tensor(&[2, 3, hh, ww], &mut rng, 1.0);
+            let w = rand_tensor(&[2, 3, r, r], &mut rng, 0.3);
+            let bias = vec![0.2, -0.4];
+            let want = conv2d_direct(&x, &w, &bias, 1, pad);
+            let got = conv2d_fft(&x, &w, &bias, pad);
+            assert_eq!(got.dims, want.dims);
+            assert!(got.mse(&want) < 1e-9, "{hh}x{ww} r{r} p{pad}: {}", got.mse(&want));
+        }
+    }
+
+    #[test]
+    fn ntt_integer_path_is_exact() {
+        // int8 inputs → the NTT accumulators must equal the nested-loop
+        // integer conv exactly (both are exact integer arithmetic).
+        let mut rng = Pcg32::seeded(13);
+        let (n, ic, h, w, oc, r, pad) = (1usize, 3usize, 9usize, 8usize, 2usize, 3usize, 1usize);
+        let xq: Vec<i8> = (0..n * ic * h * w).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let wq: Vec<i8> = (0..oc * ic * r * r).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let got = ntt_corr2d_i8(&xq, n, ic, h, w, &wq, oc, r, pad);
+        let (oh, ow) = (h + 2 * pad - r + 1, w + 2 * pad - r + 1);
+        for o in 0..oc {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0i64;
+                    for c in 0..ic {
+                        for ky in 0..r {
+                            for kx in 0..r {
+                                let yy = (oy + ky) as isize - pad as isize;
+                                let xx = (ox + kx) as isize - pad as isize;
+                                if yy >= 0 && (yy as usize) < h && xx >= 0 && (xx as usize) < w {
+                                    acc += wq[(o * ic + c) * r * r + ky * r + kx] as i64
+                                        * xq[(c * h + yy as usize) * w + xx as usize] as i64;
+                                }
+                            }
+                        }
+                    }
+                    assert_eq!(got[(o * oh + oy) * ow + ox], acc, "o{o} {oy},{ox}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ntt_float_entry_close_to_direct() {
+        let mut rng = Pcg32::seeded(14);
+        let x = rand_tensor(&[1, 4, 10, 10], &mut rng, 1.0);
+        let w = rand_tensor(&[3, 4, 3, 3], &mut rng, 0.3);
+        let want = conv2d_direct(&x, &w, &[], 1, 1);
+        let got = conv2d_ntt_int8(&x, &w, &[], 1);
+        assert_eq!(got.dims, want.dims);
+        let rel = rel_mse(&got, &want);
+        assert!(rel < 1e-2, "int8 NTT relative error {rel}");
+    }
+}

@@ -1,0 +1,463 @@
+//! The unified convolution engine API (cuDNN-style).
+//!
+//! The paper's central claim is that direct, im2col, Winograd, SFC, FFT
+//! and NTT convolution are interchangeable *engines* with different
+//! cost/accuracy trade-offs (Tables 1/3). This module is the surface that
+//! makes them interchangeable in code:
+//!
+//! * [`ConvDesc`] — what to compute (shapes, stride/pad, quantization);
+//! * [`ConvEngine`] — how one backend computes it (`supports`, `plan`,
+//!   `workspace_bytes`, `cost_model`);
+//! * [`ConvPlan`] — a ready-to-run, shareable execution plan;
+//! * [`PlanCache`] — shape-keyed plan reuse with hit/miss metrics;
+//! * [`Selector`] — per-layer engine choice: BOPs-model [`Policy::Heuristic`]
+//!   or measured [`Policy::Autotune`] (cuDNN `findAlgorithm` style).
+//!
+//! Engine instances are seeded from the Table-1 catalog
+//! ([`crate::algo::registry`]), so every algorithm the paper evaluates is
+//! one `plan_named` away, and `nn`/`quant`/`exp`/CLI all construct conv
+//! layers exclusively through descriptors + selector.
+
+pub mod cache;
+pub mod desc;
+pub mod exec;
+pub mod select;
+
+pub use cache::{global as global_plan_cache, PlanCache, PlanKey};
+pub use desc::{ConvDesc, QuantSpec};
+pub use select::{default_selector, AutotuneCfg, Policy, Selector, TuneEntry};
+
+use crate::algo::ntt::ntt_odot_bits;
+use crate::algo::registry::{catalog, AlgoKind, AlgoSpec};
+use crate::bops::{direct_bops, fast_bops, mul_bops};
+use crate::nn::conv::{conv2d_direct, conv2d_fast, FastConvPlan};
+use crate::nn::tensor::Tensor;
+use crate::quant::Granularity;
+use anyhow::{bail, Result};
+use std::sync::{Arc, OnceLock};
+
+/// How a plan executes. The variants map 1:1 onto the executor kernels;
+/// `Fast` carries the shared transform matrices (Winograd/SFC).
+pub enum PlanKernel {
+    Direct,
+    Im2col,
+    Fast(Arc<FastConvPlan>),
+    Fft,
+    Ntt,
+}
+
+/// A ready-to-run convolution plan: the descriptor it was planned for,
+/// the engine that produced it and the executor kernel. Plans are
+/// immutable and shared via `Arc` (model graphs, the plan cache and the
+/// quantizer all hold references to the same plan).
+pub struct ConvPlan {
+    pub engine: &'static str,
+    pub desc: ConvDesc,
+    pub kernel: PlanKernel,
+}
+
+impl ConvPlan {
+    /// A direct-conv plan for any descriptor (the universal fallback).
+    pub fn direct(desc: ConvDesc) -> ConvPlan {
+        ConvPlan { engine: "direct", desc, kernel: PlanKernel::Direct }
+    }
+
+    /// The bilinear transform matrices, when this is a Winograd/SFC plan
+    /// (the transform-domain quantizer needs them).
+    pub fn fast_plan(&self) -> Option<&Arc<FastConvPlan>> {
+        match &self.kernel {
+            PlanKernel::Fast(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Execute the float path on an NCHW batch. Kernels read the actual
+    /// tensor dims; the descriptor supplies stride/pad geometry.
+    pub fn run(&self, x: &Tensor, w: &Tensor, bias: &[f32]) -> Tensor {
+        match &self.kernel {
+            PlanKernel::Direct => conv2d_direct(x, w, bias, self.desc.stride, self.desc.pad),
+            PlanKernel::Im2col => exec::conv2d_im2col(x, w, bias, self.desc.stride, self.desc.pad),
+            PlanKernel::Fast(p) => conv2d_fast(x, w, bias, p, self.desc.pad),
+            PlanKernel::Fft => exec::conv2d_fft(x, w, bias, self.desc.pad),
+            PlanKernel::Ntt => exec::conv2d_ntt_int8(x, w, bias, self.desc.pad),
+        }
+    }
+}
+
+impl std::fmt::Debug for ConvPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ConvPlan").field("engine", &self.engine).field("desc", &self.desc).finish()
+    }
+}
+
+/// One convolution backend. Implementations must be cheap to construct
+/// and thread-safe; expensive per-algorithm state (transform matrices) is
+/// built lazily and shared.
+pub trait ConvEngine: Send + Sync {
+    /// Catalog name (also the `plan_named` / CLI handle).
+    fn name(&self) -> &'static str;
+
+    /// Can this engine execute the descriptor (shape, stride, quant
+    /// scheme) at all?
+    fn supports(&self, d: &ConvDesc) -> bool;
+
+    /// Build an execution plan. Contract: only called on descriptors for
+    /// which [`ConvEngine::supports`] returns true.
+    fn plan(&self, d: &ConvDesc) -> Result<ConvPlan>;
+
+    /// Scratch memory the executor allocates for one batch, in bytes.
+    fn workspace_bytes(&self, d: &ConvDesc) -> usize;
+
+    /// Analytic cost in bit-operations (the §6 BOPs model) for the whole
+    /// batch — the heuristic selector ranks engines by this.
+    fn cost_model(&self, d: &ConvDesc) -> f64;
+}
+
+// ---------------------------------------------------------------------
+// Direct
+// ---------------------------------------------------------------------
+
+/// Nested-loop spatial convolution; supports every geometry and the
+/// spatial int8 quantization scheme. The universal fallback.
+pub struct DirectEngine;
+
+impl ConvEngine for DirectEngine {
+    fn name(&self) -> &'static str {
+        "direct"
+    }
+
+    fn supports(&self, d: &ConvDesc) -> bool {
+        match d.quant {
+            None => true,
+            // spatial quantization: per-tensor activations × per-channel
+            // weights (the implemented Eq.-16 baseline)
+            Some(q) => q.a_gran == Granularity::Tensor && q.w_gran == Granularity::Channel,
+        }
+    }
+
+    fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
+        Ok(ConvPlan::direct(*d))
+    }
+
+    fn workspace_bytes(&self, d: &ConvDesc) -> usize {
+        let (oh, ow) = d.out_hw();
+        oh * ow * 4 // one per-job output plane
+    }
+
+    fn cost_model(&self, d: &ConvDesc) -> f64 {
+        let (a, w) = d.odot_bits();
+        direct_bops(&d.shape(), a, w).total() as f64 * d.batch as f64
+    }
+}
+
+// ---------------------------------------------------------------------
+// im2col + GEMM
+// ---------------------------------------------------------------------
+
+/// GEMM-lowered convolution. Same arithmetic as direct, better locality;
+/// float-only (the spatial quantized path stays on the direct engine).
+pub struct Im2colEngine;
+
+impl ConvEngine for Im2colEngine {
+    fn name(&self) -> &'static str {
+        "im2col-gemm"
+    }
+
+    fn supports(&self, d: &ConvDesc) -> bool {
+        d.quant.is_none()
+    }
+
+    fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
+        Ok(ConvPlan { engine: self.name(), desc: *d, kernel: PlanKernel::Im2col })
+    }
+
+    fn workspace_bytes(&self, d: &ConvDesc) -> usize {
+        let (oh, ow) = d.out_hw();
+        (oh * ow * d.ic * d.r * d.r + d.oc * oh * ow) * 4
+    }
+
+    fn cost_model(&self, d: &ConvDesc) -> f64 {
+        // identical MAC count; a fixed GEMM-locality discount makes the
+        // heuristic prefer it over nested loops when nothing faster fits
+        DirectEngine.cost_model(d) * 0.9
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tiled bilinear (Winograd / SFC)
+// ---------------------------------------------------------------------
+
+/// A tiled bilinear fast-convolution engine wrapping one Table-1 row.
+/// The exact transform construction runs once (lazily) and is shared by
+/// every plan this engine produces.
+pub struct BilinearEngine {
+    spec: AlgoSpec,
+    fast: OnceLock<Arc<FastConvPlan>>,
+}
+
+impl BilinearEngine {
+    pub fn new(spec: AlgoSpec) -> BilinearEngine {
+        assert!(
+            matches!(spec.kind, AlgoKind::Winograd | AlgoKind::Sfc),
+            "BilinearEngine wraps Winograd/SFC rows, got {:?}",
+            spec.kind
+        );
+        BilinearEngine { spec, fast: OnceLock::new() }
+    }
+
+    fn fast_plan(&self) -> Arc<FastConvPlan> {
+        self.fast.get_or_init(|| Arc::new(FastConvPlan::new(self.spec.build()))).clone()
+    }
+}
+
+impl ConvEngine for BilinearEngine {
+    fn name(&self) -> &'static str {
+        self.spec.name
+    }
+
+    fn supports(&self, d: &ConvDesc) -> bool {
+        if d.r != self.spec.r || d.stride != 1 {
+            return false;
+        }
+        match d.quant {
+            None => true,
+            // transform-domain quantization (Eq. 17): activation scales
+            // are per-tensor or per-frequency; weights any granularity
+            Some(q) => matches!(q.a_gran, Granularity::Tensor | Granularity::Freq),
+        }
+    }
+
+    fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
+        if !self.supports(d) {
+            bail!("{} does not support descriptor {:?}", self.name(), d);
+        }
+        Ok(ConvPlan { engine: self.name(), desc: *d, kernel: PlanKernel::Fast(self.fast_plan()) })
+    }
+
+    fn workspace_bytes(&self, d: &ConvDesc) -> usize {
+        let p = self.fast_plan();
+        let (m, t) = (p.m(), p.t());
+        let (oh, ow) = d.out_hw();
+        let tiles = oh.div_ceil(m) * ow.div_ceil(m);
+        let tt = t * t;
+        // V + P blocks per image, plus the transformed weights
+        (tt * tiles * (d.ic + d.oc) + tt * d.oc * d.ic) * 4
+    }
+
+    fn cost_model(&self, d: &ConvDesc) -> f64 {
+        let (a, w) = d.odot_bits();
+        let p = self.fast_plan();
+        fast_bops(&d.shape(), &p.algo, a, w).total() as f64 * d.batch as f64
+    }
+}
+
+// ---------------------------------------------------------------------
+// FFT
+// ---------------------------------------------------------------------
+
+/// Padded spatial size for whole-image FFT/NTT convolution.
+fn padded_pow2(d: &ConvDesc) -> (usize, usize) {
+    let sh = (d.h + 2 * d.pad + d.r - 1).next_power_of_two();
+    let sw = (d.w + 2 * d.pad + d.r - 1).next_power_of_two();
+    (sh, sw)
+}
+
+/// Keep whole-image frequency-domain kernels bounded: the executors
+/// precompute OC×IC transformed filter planes.
+const FREQ_KERNEL_ELEMS_MAX: usize = 4_000_000;
+
+/// Whole-image float FFT convolution — the classic related-work baseline.
+/// Float-only (irrational twiddles defeat the quantized datapath, §3).
+pub struct FftEngine;
+
+impl ConvEngine for FftEngine {
+    fn name(&self) -> &'static str {
+        "FFT"
+    }
+
+    fn supports(&self, d: &ConvDesc) -> bool {
+        let (sh, sw) = padded_pow2(d);
+        d.stride == 1 && d.quant.is_none() && d.oc * d.ic * sh * sw <= FREQ_KERNEL_ELEMS_MAX
+    }
+
+    fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
+        if !self.supports(d) {
+            bail!("FFT engine does not support descriptor {:?}", d);
+        }
+        Ok(ConvPlan { engine: self.name(), desc: *d, kernel: PlanKernel::Fft })
+    }
+
+    fn workspace_bytes(&self, d: &ConvDesc) -> usize {
+        let (sh, sw) = padded_pow2(d);
+        let s2 = sh * sw;
+        (d.oc * d.ic + d.ic + 2) * s2 * 16 // complex f64 planes
+    }
+
+    fn cost_model(&self, d: &ConvDesc) -> f64 {
+        let (sh, sw) = padded_pow2(d);
+        let s2 = (sh * sw) as f64;
+        let lg = s2.log2().max(1.0);
+        let b = d.batch as f64;
+        let (ic, oc) = (d.ic as f64, d.oc as f64);
+        // transforms (input + inverse per image, filters once) + pointwise
+        let fft_mults = (b * (ic + oc) + ic * oc) * 2.0 * s2 * lg;
+        let pointwise = b * ic * oc * s2 * 3.0; // 3 real mults per complex product
+        // ⊙ runs at float width — charge the fp16 proxy like Table 1
+        (fft_mults + pointwise) * mul_bops(16) as f64
+    }
+}
+
+// ---------------------------------------------------------------------
+// NTT
+// ---------------------------------------------------------------------
+
+/// Whole-image exact integer convolution in F_p. Bit-exact for int8
+/// operands, but the ⊙ stage carries full mod-p word width — the paper's
+/// §3 criticism, visible directly in this engine's cost model.
+pub struct NttEngine;
+
+impl NttEngine {
+    /// Output magnitude bound: |y| ≤ qmax²·IC·R² must stay below p/2.
+    fn acc_bound_ok(d: &ConvDesc) -> bool {
+        d.ic * d.r * d.r <= 16_384
+    }
+}
+
+impl ConvEngine for NttEngine {
+    fn name(&self) -> &'static str {
+        "NTT"
+    }
+
+    fn supports(&self, d: &ConvDesc) -> bool {
+        let (sh, sw) = padded_pow2(d);
+        let quant_ok = match d.quant {
+            None => true, // float entry runs the int8 fixed-point datapath
+            Some(q) => {
+                q.a_bits <= 8
+                    && q.w_bits <= 8
+                    && q.a_gran == Granularity::Tensor
+                    && q.w_gran == Granularity::Channel
+            }
+        };
+        d.stride == 1
+            && quant_ok
+            && Self::acc_bound_ok(d)
+            && d.oc * d.ic * sh * sw <= FREQ_KERNEL_ELEMS_MAX
+    }
+
+    fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
+        if !self.supports(d) {
+            bail!("NTT engine does not support descriptor {:?}", d);
+        }
+        Ok(ConvPlan { engine: self.name(), desc: *d, kernel: PlanKernel::Ntt })
+    }
+
+    fn workspace_bytes(&self, d: &ConvDesc) -> usize {
+        let (sh, sw) = padded_pow2(d);
+        let s2 = sh * sw;
+        (d.oc * d.ic + d.ic + 1) * s2 * 8 // u64 planes
+    }
+
+    fn cost_model(&self, d: &ConvDesc) -> f64 {
+        let (sh, sw) = padded_pow2(d);
+        let s2 = (sh * sw) as f64;
+        let lg = s2.log2().max(1.0);
+        let b = d.batch as f64;
+        let (ic, oc) = (d.ic as f64, d.oc as f64);
+        let (a_bits, w_bits) = d.odot_bits();
+        // mod-p word width for the ⊙ stage (the §3 point)
+        let odot = ntt_odot_bits(a_bits.max(w_bits) as u32, d.ic * d.r * d.r) as u64;
+        let transforms = (b * (ic + oc) + ic * oc) * s2 * lg; // butterfly mod-muls
+        let pointwise = b * ic * oc * s2;
+        (transforms + pointwise) * mul_bops(odot) as f64
+    }
+}
+
+/// The full engine list, seeded from the Table-1 catalog: one universal
+/// direct engine, the im2col lowering, one bilinear engine per
+/// Winograd/SFC row and the FFT/NTT whole-image engines.
+pub fn all_engines() -> Vec<Box<dyn ConvEngine>> {
+    let mut engines: Vec<Box<dyn ConvEngine>> = vec![Box::new(DirectEngine), Box::new(Im2colEngine)];
+    for spec in catalog() {
+        match spec.kind {
+            AlgoKind::Direct => {} // DirectEngine covers the catalog row
+            AlgoKind::Winograd | AlgoKind::Sfc => engines.push(Box::new(BilinearEngine::new(spec))),
+            AlgoKind::Fft => engines.push(Box::new(FftEngine)),
+            AlgoKind::Ntt => engines.push(Box::new(NttEngine)),
+        }
+    }
+    engines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_list_covers_catalog() {
+        let engines = all_engines();
+        assert!(engines.len() >= 12, "got {}", engines.len());
+        let names: Vec<&str> = engines.iter().map(|e| e.name()).collect();
+        assert!(names.contains(&"direct"));
+        assert!(names.contains(&"im2col-gemm"));
+        assert!(names.contains(&"SFC-6(7x7,3x3)"));
+        assert!(names.contains(&"Wino(4x4,3x3)"));
+        assert!(names.contains(&"FFT"));
+        assert!(names.contains(&"NTT"));
+    }
+
+    #[test]
+    fn supports_respects_geometry_and_quant() {
+        let engines = all_engines();
+        let d33 = ConvDesc::new(1, 8, 8, 16, 16, 3, 1, 1);
+        let d11s2 = ConvDesc::new(1, 8, 8, 16, 16, 1, 2, 0);
+        let dq = d33.with_quant(QuantSpec::transform_default(8));
+        for e in &engines {
+            if e.name() == "direct" {
+                assert!(e.supports(&d33) && e.supports(&d11s2));
+            }
+            if e.name() == "SFC-6(7x7,3x3)" {
+                assert!(e.supports(&d33) && e.supports(&dq));
+                assert!(!e.supports(&d11s2), "fast conv is stride-1 3x3 only");
+            }
+            if e.name() == "FFT" {
+                assert!(e.supports(&d33));
+                assert!(!e.supports(&dq), "FFT has no quantized datapath");
+            }
+        }
+    }
+
+    #[test]
+    fn cost_model_prefers_fast_conv_for_3x3() {
+        let d = ConvDesc::new(1, 64, 64, 56, 56, 3, 1, 1)
+            .with_quant(QuantSpec::transform_default(8));
+        let direct = DirectEngine.cost_model(&d);
+        let sfc = BilinearEngine::new(
+            crate::algo::registry::by_name("SFC-6(7x7,3x3)").unwrap(),
+        );
+        assert!(sfc.supports(&d));
+        assert!(sfc.cost_model(&d) < direct, "SFC must beat direct on BOPs");
+        // and the NTT ⊙ width makes it the costliest quantized path
+        assert!(NttEngine.cost_model(&d) > sfc.cost_model(&d));
+    }
+
+    #[test]
+    fn plans_run_and_match_shapes() {
+        use crate::util::Pcg32;
+        let mut rng = Pcg32::seeded(3);
+        let d = ConvDesc::new(1, 2, 3, 10, 10, 3, 1, 1);
+        let mut x = Tensor::zeros(&[1, 2, 10, 10]);
+        rng.fill_gaussian(&mut x.data, 1.0);
+        let mut w = Tensor::zeros(&[3, 2, 3, 3]);
+        rng.fill_gaussian(&mut w.data, 0.3);
+        for e in all_engines() {
+            if !e.supports(&d) {
+                continue;
+            }
+            let plan = e.plan(&d).unwrap();
+            let y = plan.run(&x, &w, &[]);
+            assert_eq!(y.dims, vec![1, 3, 10, 10], "{}", e.name());
+            assert!(e.workspace_bytes(&d) > 0, "{}", e.name());
+        }
+    }
+}

@@ -1,0 +1,360 @@
+//! Engine selection: BOPs-model heuristics and measured autotuning.
+//!
+//! [`Policy::Heuristic`] ranks the engines that support a descriptor by
+//! their analytic bit-operation cost (reusing [`crate::bops`]) — fast and
+//! deterministic, the right default at model-build time.
+//! [`Policy::Autotune`] micro-benchmarks every supporting engine on a
+//! synthetic workload of the real layer shape and picks the measured
+//! winner — cuDNN `findAlgorithm` style, exposed as `sfc autotune`.
+//! Either way the chosen plan lands in the [`PlanCache`] keyed by
+//! (descriptor, policy), so selection runs once per shape.
+
+use super::cache::{self, PlanCache, PlanKey};
+use super::desc::{ConvDesc, QuantSpec};
+use super::{all_engines, ConvEngine, ConvPlan};
+use crate::nn::model::ConvShape;
+use crate::nn::tensor::Tensor;
+use crate::quant::qconv::{collect_act_maxima, QCalib, QConvLayer};
+use crate::quant::Granularity;
+use crate::util::Pcg32;
+use anyhow::{bail, Result};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+/// Micro-benchmark budget for [`Policy::Autotune`].
+#[derive(Clone, Copy, Debug)]
+pub struct AutotuneCfg {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for AutotuneCfg {
+    fn default() -> Self {
+        AutotuneCfg { warmup: 1, iters: 3 }
+    }
+}
+
+/// How the selector picks among supporting engines.
+#[derive(Clone, Copy, Debug)]
+pub enum Policy {
+    /// analytic BOPs-model ranking (deterministic, no execution)
+    Heuristic,
+    /// measure every candidate on the real shape, pick the fastest
+    Autotune(AutotuneCfg),
+}
+
+impl Policy {
+    fn tag(&self) -> &'static str {
+        match self {
+            Policy::Heuristic => "heuristic",
+            Policy::Autotune(_) => "autotune",
+        }
+    }
+}
+
+/// One row of an autotune report.
+#[derive(Clone, Copy, Debug)]
+pub struct TuneEntry {
+    pub engine: &'static str,
+    pub median_s: f64,
+    pub cost_bops: f64,
+    pub workspace_bytes: usize,
+    pub selected: bool,
+}
+
+/// The algorithm selector: engine list + plan cache + policy.
+pub struct Selector {
+    engines: Vec<Box<dyn ConvEngine>>,
+    cache: Arc<PlanCache>,
+    policy: Policy,
+}
+
+impl Selector {
+    /// Selector over the full catalog-seeded engine list. Heuristic
+    /// selectors share the process-wide plan cache; Autotune selectors
+    /// get an isolated cache, because their planning runs multi-second
+    /// micro-benchmarks inside the cache's build slot and must never
+    /// hold the global lock against concurrent model builders.
+    pub fn new(policy: Policy) -> Selector {
+        let cache = match policy {
+            Policy::Heuristic => cache::global(),
+            Policy::Autotune(_) => Arc::new(PlanCache::new()),
+        };
+        Selector::with_cache(policy, cache)
+    }
+
+    /// Selector with an isolated cache (tests, experiments).
+    pub fn with_cache(policy: Policy, cache: Arc<PlanCache>) -> Selector {
+        Selector { engines: all_engines(), cache, policy }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    pub fn cache(&self) -> &Arc<PlanCache> {
+        &self.cache
+    }
+
+    pub fn engines(&self) -> &[Box<dyn ConvEngine>] {
+        &self.engines
+    }
+
+    /// Case-insensitive engine lookup by catalog name.
+    pub fn engine_named(&self, name: &str) -> Option<&dyn ConvEngine> {
+        self.engines.iter().find(|e| e.name().eq_ignore_ascii_case(name)).map(|e| e.as_ref())
+    }
+
+    /// Engines able to execute this descriptor.
+    pub fn candidates(&self, d: &ConvDesc) -> Vec<&dyn ConvEngine> {
+        self.engines.iter().filter(|e| e.supports(d)).map(|e| e.as_ref()).collect()
+    }
+
+    /// Policy-driven plan for a descriptor (cached).
+    pub fn plan(&self, d: &ConvDesc) -> Result<Arc<ConvPlan>> {
+        self.cache.get_or_try_insert(PlanKey::new(*d, self.policy.tag()), || {
+            let plan = match self.policy {
+                Policy::Heuristic => self.select_heuristic(d)?,
+                Policy::Autotune(cfg) => self.select_autotune(d, cfg)?,
+            };
+            Ok(Arc::new(plan))
+        })
+    }
+
+    /// Plan pinned to a named engine (cached). The way experiment
+    /// harnesses reproduce a specific Table-1 row.
+    pub fn plan_named(&self, name: &str, d: &ConvDesc) -> Result<Arc<ConvPlan>> {
+        let Some(engine) = self.engine_named(name) else {
+            bail!("unknown engine '{name}' (run `sfc autotune` to list engines)")
+        };
+        self.cache.get_or_try_insert(PlanKey::new(*d, engine.name()), || {
+            if !engine.supports(d) {
+                bail!("engine '{}' does not support descriptor {:?}", engine.name(), d);
+            }
+            Ok(Arc::new(engine.plan(d)?))
+        })
+    }
+
+    fn select_heuristic(&self, d: &ConvDesc) -> Result<ConvPlan> {
+        let mut best: Option<(f64, &dyn ConvEngine)> = None;
+        for e in self.candidates(d) {
+            let c = e.cost_model(d);
+            if best.as_ref().map_or(true, |(bc, _)| c < *bc) {
+                best = Some((c, e));
+            }
+        }
+        match best {
+            Some((_, e)) => e.plan(d),
+            None => bail!("no engine supports descriptor {:?}", d),
+        }
+    }
+
+    fn select_autotune(&self, d: &ConvDesc, cfg: AutotuneCfg) -> Result<ConvPlan> {
+        let entries = self.autotune_with(d, cfg)?;
+        let winner = entries.iter().find(|t| t.selected).expect("autotune marks a winner");
+        self.engine_named(winner.engine).expect("winner is a known engine").plan(d)
+    }
+
+    /// Measure every supporting engine on this descriptor's shape and
+    /// return the report, fastest first (winner flagged).
+    pub fn autotune(&self, d: &ConvDesc) -> Result<Vec<TuneEntry>> {
+        let cfg = match self.policy {
+            Policy::Autotune(c) => c,
+            Policy::Heuristic => AutotuneCfg::default(),
+        };
+        self.autotune_with(d, cfg)
+    }
+
+    fn autotune_with(&self, d: &ConvDesc, cfg: AutotuneCfg) -> Result<Vec<TuneEntry>> {
+        let cands = self.candidates(d);
+        if cands.is_empty() {
+            bail!("no engine supports descriptor {:?}", d);
+        }
+        // deterministic synthetic workload of the descriptor's shape
+        let mut rng = Pcg32::seeded(0xA070 ^ d.macs());
+        let mut x = Tensor::zeros(&[d.batch.max(1), d.ic, d.h, d.w]);
+        rng.fill_gaussian(&mut x.data, 1.0);
+        let mut w = Tensor::zeros(&[d.oc, d.ic, d.r, d.r]);
+        rng.fill_gaussian(&mut w.data, 0.2);
+        let mut entries = Vec::with_capacity(cands.len());
+        for e in cands {
+            let plan = Arc::new(e.plan(d)?);
+            // Quantized descriptors are measured on the datapath PTQ will
+            // actually install (the quantized executor, calibrated on the
+            // synthetic workload) — not the float kernel.
+            let qexec = if d.quant.is_some() {
+                Some(match plan.fast_plan() {
+                    Some(fast) => {
+                        let maxima = collect_act_maxima(&x, fast, d.pad);
+                        QConvLayer::from_plan(
+                            plan.clone(),
+                            &w,
+                            Vec::new(),
+                            &QCalib::TransformMaxima(&maxima),
+                        )
+                    }
+                    None => QConvLayer::from_plan(
+                        plan.clone(),
+                        &w,
+                        Vec::new(),
+                        &QCalib::MaxAbs(x.max_abs()),
+                    ),
+                })
+            } else {
+                None
+            };
+            let run_once = || match &qexec {
+                Some(q) => q.forward(&x),
+                None => plan.run(&x, &w, &[]),
+            };
+            for _ in 0..cfg.warmup {
+                std::hint::black_box(run_once());
+            }
+            let mut samples = Vec::with_capacity(cfg.iters.max(1));
+            for _ in 0..cfg.iters.max(1) {
+                let t0 = Instant::now();
+                std::hint::black_box(run_once());
+                samples.push(t0.elapsed().as_secs_f64());
+            }
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            entries.push(TuneEntry {
+                engine: e.name(),
+                median_s: samples[samples.len() / 2],
+                cost_bops: e.cost_model(d),
+                workspace_bytes: e.workspace_bytes(d),
+                selected: false,
+            });
+        }
+        let best = entries
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.median_s.partial_cmp(&b.1.median_s).unwrap())
+            .map(|(i, _)| i)
+            .expect("non-empty candidate list");
+        entries[best].selected = true;
+        entries.sort_by(|a, b| a.median_s.partial_cmp(&b.median_s).unwrap());
+        Ok(entries)
+    }
+
+    /// Analytic GBOPs for a conv stack under a named engine at uniform
+    /// bit-widths, falling back to spatially-quantized direct conv for
+    /// layers the engine can't take — the Fig. 4 x-axis, computed through
+    /// the engine cost models instead of ad-hoc registry lookups.
+    pub fn model_gbops(
+        &self,
+        shapes: &[(String, ConvShape)],
+        engine: Option<&str>,
+        a_bits: u32,
+        w_bits: u32,
+    ) -> f64 {
+        let transform_spec = QuantSpec {
+            w_bits,
+            a_bits,
+            w_gran: Granularity::ChannelFreq,
+            a_gran: Granularity::Freq,
+        };
+        let spatial_spec = QuantSpec {
+            w_bits,
+            a_bits,
+            w_gran: Granularity::Channel,
+            a_gran: Granularity::Tensor,
+        };
+        let direct = self.engine_named("direct").expect("direct engine always present");
+        let mut total = 0f64;
+        for (_, s) in shapes {
+            let base = ConvDesc::from_shape(s, 1);
+            let mut cost = None;
+            if let Some(e) = engine.and_then(|nm| self.engine_named(nm)) {
+                for spec in [transform_spec, spatial_spec] {
+                    let d = base.with_quant(spec);
+                    if e.supports(&d) {
+                        cost = Some(e.cost_model(&d));
+                        break;
+                    }
+                }
+            }
+            total += cost.unwrap_or_else(|| direct.cost_model(&base.with_quant(spatial_spec)));
+        }
+        total / 1e9
+    }
+}
+
+/// The process-wide heuristic selector: what `nn::model` builders and the
+/// quantizer use unless handed something else.
+pub fn default_selector() -> &'static Selector {
+    static SEL: OnceLock<Selector> = OnceLock::new();
+    SEL.get_or_init(|| Selector::new(Policy::Heuristic))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn isolated(policy: Policy) -> Selector {
+        Selector::with_cache(policy, Arc::new(PlanCache::new()))
+    }
+
+    #[test]
+    fn heuristic_picks_a_fast_engine_for_3x3_stride1() {
+        let sel = isolated(Policy::Heuristic);
+        let d = ConvDesc::new(1, 32, 32, 28, 28, 3, 1, 1);
+        let plan = sel.plan(&d).unwrap();
+        assert!(plan.fast_plan().is_some(), "picked {}", plan.engine);
+        // 1×1 stride-2: only direct/im2col apply
+        let d11 = ConvDesc::new(1, 32, 64, 28, 28, 1, 2, 0);
+        let plan = sel.plan(&d11).unwrap();
+        assert!(
+            plan.engine == "direct" || plan.engine == "im2col-gemm",
+            "picked {}",
+            plan.engine
+        );
+    }
+
+    #[test]
+    fn plans_are_cached_per_descriptor() {
+        let sel = isolated(Policy::Heuristic);
+        let d = ConvDesc::new(1, 4, 4, 12, 12, 3, 1, 1);
+        let p1 = sel.plan(&d).unwrap();
+        let p2 = sel.plan(&d).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(sel.cache().misses(), 1);
+        assert_eq!(sel.cache().hits(), 1);
+    }
+
+    #[test]
+    fn unknown_engine_is_a_clean_error() {
+        let sel = isolated(Policy::Heuristic);
+        let d = ConvDesc::new(1, 4, 4, 12, 12, 3, 1, 1);
+        let e = sel.plan_named("definitely-not-an-engine", &d);
+        assert!(e.is_err());
+        let e = sel.plan_named("FFT", &d.with_quant(QuantSpec::transform_default(8)));
+        assert!(e.is_err(), "FFT must refuse quantized descriptors");
+    }
+
+    #[test]
+    fn autotune_reports_all_candidates_and_flags_one_winner() {
+        let sel = isolated(Policy::Autotune(AutotuneCfg { warmup: 0, iters: 1 }));
+        let d = ConvDesc::new(1, 3, 4, 10, 10, 3, 1, 1);
+        let entries = sel.autotune(&d).unwrap();
+        assert!(entries.len() >= 4, "got {}", entries.len());
+        assert_eq!(entries.iter().filter(|t| t.selected).count(), 1);
+        for t in &entries {
+            assert!(t.median_s >= 0.0 && t.cost_bops > 0.0, "{}", t.engine);
+        }
+        // the policy plan agrees with the report's winner modulo caching
+        let plan = sel.plan(&d).unwrap();
+        assert!(entries.iter().any(|t| t.engine == plan.engine));
+    }
+
+    #[test]
+    fn model_gbops_orders_like_the_paper() {
+        let sel = isolated(Policy::Heuristic);
+        let shapes = vec![(
+            "l".to_string(),
+            ConvShape { ic: 64, oc: 64, h: 56, w: 56, r: 3, stride: 1 },
+        )];
+        let direct = sel.model_gbops(&shapes, None, 8, 8);
+        let sfc = sel.model_gbops(&shapes, Some("SFC-6(7x7,3x3)"), 8, 8);
+        assert!(sfc < direct, "SFC {sfc} must beat direct {direct}");
+    }
+}

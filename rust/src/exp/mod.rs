@@ -7,13 +7,12 @@
 //! images (paper: 500), evaluation 256 images (paper: 50k val set);
 //! override with SFC_CALIB_N / SFC_EVAL_N.
 
-use crate::algo::registry::by_name;
 use crate::data::Dataset;
-use crate::nn::conv::FastConvPlan;
+use crate::engine::{default_selector, ConvDesc, QuantSpec};
 use crate::nn::model::{model_conv_shapes, resnet18_cfg, resnet34_cfg, resnet50_cfg, resnet_from_weights, ResNetCfg};
 use crate::nn::weights::WeightMap;
-use crate::nn::{Model, Tensor};
-use crate::quant::calib::{dequantize_model, layer_mse, quantize_model, QAlgoChoice, QuantConfig};
+use crate::nn::{FastConvPlan, Model, Tensor};
+use crate::quant::calib::{dequantize_model, layer_mse, quantize_model, QuantConfig};
 use crate::quant::Granularity;
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -93,7 +92,14 @@ fn quantize_and_eval(
 pub fn cmd_table2(data_dir: &str, models: &str, bits_list: &str) -> Result<()> {
     let (calib, _) = load_split(data_dir, "train", calib_n())?;
     let (images, labels) = load_split(data_dir, "test", eval_n())?;
-    let bits: Vec<u32> = bits_list.split(',').map(|b| b.parse().unwrap()).collect();
+    let mut bits: Vec<u32> = Vec::new();
+    for b in bits_list.split(',') {
+        bits.push(
+            b.trim()
+                .parse::<u32>()
+                .map_err(|e| anyhow::anyhow!("invalid --bits entry '{b}': {e}"))?,
+        );
+    }
     println!("Table 2 — post-training quantization on SynthImage (ImageNet stand-in)\n");
     println!("paper reference (ImageNet): Wino(4,3) int8 Δ≈−1.6..−2.2, int6 Δ≈−4.5..−5.4;");
     println!("                            SFC-6(7,3) int8 Δ≈−0.12..−0.17, int6 Δ≈−0.6..−1.0\n");
@@ -150,9 +156,8 @@ pub fn cmd_table4(data_dir: &str) -> Result<()> {
         ("Wino(4x4,3x3)", "Freq/Chan+Freq", Granularity::Freq, Granularity::ChannelFreq),
     ];
     for (algo_name, label, a_gran, w_gran) in combos {
-        let spec = by_name(algo_name).unwrap();
         let cfg = QuantConfig {
-            algo: QAlgoChoice::Fast(spec),
+            engine: Some(algo_name),
             w_bits: 8,
             a_bits: 8,
             w_gran,
@@ -184,7 +189,7 @@ pub fn cmd_table5(data_dir: &str) -> Result<()> {
         let mut accs = Vec::new();
         for bits in [8u32, 6, 4] {
             let cfg = QuantConfig {
-                algo: QAlgoChoice::Fast(by_name("SFC-6(7x7,3x3)").unwrap()),
+                engine: Some("SFC-6(7x7,3x3)"),
                 w_bits: bits,
                 a_bits: bits,
                 w_gran,
@@ -214,8 +219,14 @@ pub fn cmd_fig3(data_dir: &str) -> Result<()> {
     let conv_nodes = model.conv_nodes();
     let probe = conv_nodes[8.min(conv_nodes.len() - 1)];
     let input_act = &acts[model.nodes[probe].inputs[0]];
-    let plan = FastConvPlan::new(by_name("SFC-6(7x7,3x3)").unwrap().build());
-    let maxima_energy = energy_per_frequency(input_act, &plan);
+    let (_, ic, h, w) = input_act.dims4();
+    let desc = ConvDesc::new(1, ic, ic, h, w, 3, 1, 1)
+        .with_quant(QuantSpec::transform_default(8));
+    let plan = default_selector()
+        .plan_named("SFC-6(7x7,3x3)", &desc)
+        .expect("SFC engine supports 3x3 stride-1");
+    let plan = plan.fast_plan().expect("bilinear plan");
+    let maxima_energy = energy_per_frequency(input_act, plan);
     let t = plan.t();
     println!(
         "Fig. 3 — mean transform-domain energy, layer '{}' input ({}x{} SFT grid)\n",
@@ -278,24 +289,24 @@ pub fn cmd_fig4(data_dir: &str) -> Result<()> {
     let shapes = model_conv_shapes(&model, 32);
     println!("Fig. 4 — accuracy vs computation cost, resnet18 (fp32 = {:.2}%)\n", fp32 * 100.0);
     println!("{:<18} {:>5} {:>10} {:>8}", "Algorithm", "Bits", "GBOPs", "Top-1");
-    let algo_rows: [(&str, Option<&str>); 3] = [
+    let algo_rows: [(&str, Option<&'static str>); 3] = [
         ("direct", None),
         ("Wino(4x4,3x3)", Some("Wino(4x4,3x3)")),
         ("SFC-6(7x7,3x3)", Some("SFC-6(7x7,3x3)")),
     ];
-    for (label, algo_name) in algo_rows {
+    let sel = default_selector();
+    for (label, engine) in algo_rows {
         for bits in [8u32, 6, 5, 4] {
-            let (cfg, bil) = match algo_name {
-                None => (QuantConfig::direct_default(bits), None),
+            let cfg = match engine {
+                None => QuantConfig::direct_default(bits),
                 Some(nm) => {
-                    let spec = by_name(nm).unwrap();
                     let mut cfg = QuantConfig::sfc_default(bits);
-                    cfg.algo = QAlgoChoice::Fast(spec.clone());
-                    (cfg, Some(spec.build()))
+                    cfg.engine = Some(nm);
+                    cfg
                 }
             };
             let acc = quantize_and_eval(&mut model, &calib, &images, &labels, &cfg);
-            let gbops = crate::bops::model_gbops(&shapes, bil.as_ref(), bits as u64, bits as u64);
+            let gbops = sel.model_gbops(&shapes, engine, bits, bits);
             println!("{:<18} {:>5} {:>10.3} {:>7.2}%", label, bits, gbops, acc * 100.0);
         }
     }

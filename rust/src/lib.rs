@@ -4,24 +4,42 @@
 //! under Low-precision Arithmetic"* (He et al., ICML 2024) as a
 //! three-layer Rust + JAX + Pallas stack.
 //!
-//! Layer map (see DESIGN.md):
-//! * [`algo`] — the paper's algorithm family: symbolic-DFT fast
-//!   convolution with correction terms, plus Winograd/FFT/NTT baselines.
+//! Layer map (see DESIGN.md and ENGINE.md):
+//! * [`algo`] — the paper's algorithm family built from exact rational
+//!   arithmetic: symbolic-DFT fast convolution with correction terms,
+//!   Winograd/Toom-Cook, plus the FFT/NTT related-work baselines. Its
+//!   [`algo::registry`] catalog (Table 1 + Table 3 rows) is the single
+//!   source of algorithm truth.
+//! * [`engine`] — the unified convolution API: [`engine::ConvDesc`]
+//!   problem descriptors, the [`engine::ConvEngine`] trait implemented by
+//!   direct / im2col / Winograd / SFC / FFT / NTT backends, shape-keyed
+//!   [`engine::PlanCache`] plan reuse, and the [`engine::Selector`] with
+//!   BOPs-heuristic and measured-autotune policies (`sfc autotune`).
 //! * [`linalg`] — exact rational matrices + Jacobi SVD (condition numbers).
-//! * [`nn`] / [`quant`] — the quantized inference engine reproducing the
-//!   PTQ experiments (§6.1, Tables 2/4/5, Figs. 4/5).
+//! * [`nn`] / [`quant`] — the CNN inference substrate and the PTQ
+//!   pipeline reproducing §6.1 (Tables 2/4/5, Figs. 4/5); conv layers
+//!   execute through engine plans, quantized layers through
+//!   [`quant::qconv::QConvLayer`] built from the same plans.
+//! * [`bops`] / [`error`] / [`fpga`] — the analytical models: §6 BOPs
+//!   (feeding the engine cost models), Table-1 numerical error, Table-3
+//!   FPGA accelerator comparison.
+//! * [`runtime`] / [`coordinator`] — serving: PJRT executor over AOT
+//!   artifacts (feature `pjrt`; clean stub otherwise) and the dynamic
+//!   batcher with latency + plan-cache metrics.
 //! * [`data`] — SynthImage dataset (ImageNet stand-in, DESIGN.md §2).
+//! * [`exp`] — experiment harnesses regenerating the paper's tables.
 //! * [`util`] — PRNG / fp16 / timing / parallel-for shims.
 
 pub mod algo;
 pub mod bops;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod error;
 pub mod exp;
 pub mod fpga;
 pub mod linalg;
-pub mod runtime;
 pub mod nn;
 pub mod quant;
+pub mod runtime;
 pub mod util;

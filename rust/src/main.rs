@@ -5,6 +5,7 @@
 //! Hand-rolled argument parsing (clap is not vendored in this image).
 
 use anyhow::{bail, Result};
+use sfc::coordinator::parse_opt;
 use std::collections::HashMap;
 
 fn main() -> Result<()> {
@@ -28,6 +29,7 @@ fn main() -> Result<()> {
         "fig4" => sfc::exp::cmd_fig4(opt(&opts, "data-dir", "artifacts")),
         "fig5" => sfc::exp::cmd_fig5(opt(&opts, "data-dir", "artifacts")),
         "serve" => sfc::coordinator::cmd_serve(&opts),
+        "autotune" => cmd_autotune(&opts),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -76,6 +78,13 @@ experiments (paper table/figure per DESIGN.md §6):
   fig5        [--data-dir artifacts]                   per-layer MSE under int8
   appendix-b                                           iterative large-kernel conv
 
+engine selection (cuDNN findAlgorithm-style):
+  autotune    [--model resnet18|resnet34|resnet50|vgg16] [--batch 1]
+              [--iters 3] [--bits 0]
+              micro-benchmark every supporting engine per layer shape,
+              print measured times + the selected winner (--bits N asks
+              for the intN transform-domain scheme; 0 = float)
+
 serving demo (L3 over PJRT artifacts):
   serve       [--hlo artifacts/resnet18_b8.hlo.txt] [--data-dir artifacts]
               [--requests 256] [--batch 8]
@@ -89,9 +98,9 @@ fn opt<'a>(opts: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'
 
 fn cmd_gen_data(opts: &HashMap<String, String>) -> Result<()> {
     let out_dir = opt(opts, "out-dir", "artifacts");
-    let train_n: usize = opt(opts, "train", "6000").parse()?;
-    let test_n: usize = opt(opts, "test", "1000").parse()?;
-    let seed: u64 = opt(opts, "seed", "7").parse()?;
+    let train_n: usize = parse_opt(opts, "train", 6000)?;
+    let test_n: usize = parse_opt(opts, "test", 1000)?;
+    let seed: u64 = parse_opt(opts, "seed", 7)?;
     std::fs::create_dir_all(out_dir)?;
     let train = sfc::data::synth::generate(train_n, seed);
     let test = sfc::data::synth::generate(test_n, seed + 1);
@@ -116,7 +125,8 @@ fn cmd_dump_algos(opts: &HashMap<String, String>) -> Result<()> {
         if spec.name == "direct" {
             continue;
         }
-        let a = spec.build();
+        // FFT/NTT rows have no (G, Bᵀ, Aᵀ) matrices to dump
+        let Some(a) = spec.bilinear() else { continue };
         let mut s = String::new();
         s.push_str(&format!(
             "name {}\nm {}\nr {}\nt {}\nl {}\n",
@@ -152,7 +162,7 @@ fn cmd_dump_algos(opts: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_table1(opts: &HashMap<String, String>) -> Result<()> {
-    let trials: usize = opt(opts, "trials", "2000").parse()?;
+    let trials: usize = parse_opt(opts, "trials", 2000)?;
     let fmt = match opt(opts, "format", "fp16") {
         "fp16" => sfc::error::OdotFormat::Fp16,
         "int8" => sfc::error::OdotFormat::Int(8),
@@ -251,6 +261,119 @@ fn cmd_table3() -> Result<()> {
     }
     println!("\nThe headline ranking (SFC > Winograd > NTT > direct in GOPs/DSP/clock) is what");
     println!("Table 3 establishes; absolute numbers depend on place-and-route (see DESIGN.md §2).");
+    Ok(())
+}
+
+fn resnet_cfg_by_name(name: &str) -> Result<sfc::nn::model::ResNetCfg> {
+    use sfc::nn::model::{resnet18_cfg, resnet34_cfg, resnet50_cfg};
+    Ok(match name {
+        "resnet18" => resnet18_cfg(),
+        "resnet34" => resnet34_cfg(),
+        "resnet50" => resnet50_cfg(),
+        other => bail!("unknown model {other} (try resnet18|resnet34|resnet50|vgg16)"),
+    })
+}
+
+/// `sfc autotune` — measure every supporting engine on each distinct
+/// layer shape of a model and print the per-shape winner (the cuDNN
+/// `findAlgorithm` workflow over the Table-1 engine catalog).
+fn cmd_autotune(opts: &HashMap<String, String>) -> Result<()> {
+    use sfc::engine::{AutotuneCfg, ConvDesc, Policy, QuantSpec, Selector};
+    use sfc::nn::model::{model_conv_shapes, resnet_random, vgg16_conv_shapes};
+
+    let model_name = opt(opts, "model", "resnet18");
+    let batch: usize = parse_opt(opts, "batch", 1)?;
+    let iters: usize = parse_opt(opts, "iters", 3)?;
+    let bits: u32 = parse_opt(opts, "bits", 0)?; // 0 = float path
+
+    let shapes: Vec<(String, sfc::nn::model::ConvShape)> = if model_name == "vgg16" {
+        vgg16_conv_shapes()
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| (format!("conv{}", i + 1), s))
+            .collect()
+    } else {
+        let cfg = resnet_cfg_by_name(model_name)?;
+        let m = resnet_random(&cfg, 1, 10);
+        model_conv_shapes(&m, 32)
+    };
+
+    // Group layers by descriptor: repeated ResNet blocks share shapes.
+    let mut groups: Vec<(ConvDesc, Vec<String>)> = Vec::new();
+    for (name, s) in &shapes {
+        let mut d = ConvDesc::from_shape(s, batch);
+        if bits > 0 {
+            // transform-domain scheme where fast engines apply, the
+            // spatial scheme on layers only direct/NTT can quantize
+            let spec = if s.r == 3 && s.stride == 1 {
+                QuantSpec::transform_default(bits)
+            } else {
+                QuantSpec::spatial_default(bits)
+            };
+            d = d.with_quant(spec);
+        }
+        if let Some(pos) = groups.iter().position(|(d2, _)| *d2 == d) {
+            groups[pos].1.push(name.clone());
+        } else {
+            groups.push((d, vec![name.clone()]));
+        }
+    }
+
+    let scheme = if bits > 0 { format!("int{bits} transform-domain") } else { "f32".to_string() };
+    println!(
+        "autotune — {model_name}, batch {batch}, {scheme}, {} distinct shapes from {} conv layers\n",
+        groups.len(),
+        shapes.len()
+    );
+    let sel = Selector::new(Policy::Autotune(AutotuneCfg { warmup: 1, iters }));
+    for (d, names) in &groups {
+        println!(
+            "shape {}x{}x{} -> {} (r={}, stride {}, pad {}) — {} layer(s): {}",
+            d.h,
+            d.w,
+            d.ic,
+            d.oc,
+            d.r,
+            d.stride,
+            d.pad,
+            names.len(),
+            names.join(", ")
+        );
+        let entries = sel.autotune(d)?;
+        println!(
+            "    {:<18} {:>12} {:>12} {:>12}",
+            "engine", "median", "model GBOPs", "workspace"
+        );
+        for t in &entries {
+            println!(
+                "  {} {:<18} {:>9.3} ms {:>12.4} {:>9.1} KB",
+                if t.selected { "*" } else { " " },
+                t.engine,
+                t.median_s * 1e3,
+                t.cost_bops / 1e9,
+                t.workspace_bytes as f64 / 1024.0
+            );
+        }
+        let winner = entries.iter().find(|t| t.selected).expect("autotune flags a winner");
+        println!("    selected: {}\n", winner.engine);
+    }
+
+    // Repeated model construction reuses cached plans — the serving-path
+    // property the PlanCache exists for.
+    if model_name != "vgg16" {
+        let (h0, _) = sfc::coordinator::metrics::plan_cache_counters();
+        let cfg = resnet_cfg_by_name(model_name)?;
+        let _ = resnet_random(&cfg, 2, 10);
+        let (h1, m1) = sfc::coordinator::metrics::plan_cache_counters();
+        println!(
+            "rebuilt {model_name}: +{} plan-cache hits from shared layer shapes",
+            h1 - h0
+        );
+        println!("plan cache totals: {h1} hits / {m1} misses (process-wide)");
+    } else {
+        let (h, m) = sfc::coordinator::metrics::plan_cache_counters();
+        println!("plan cache totals: {h} hits / {m} misses (process-wide)");
+    }
     Ok(())
 }
 

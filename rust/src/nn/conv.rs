@@ -13,14 +13,6 @@ use crate::algo::Bilinear;
 use crate::util::par::par_for;
 use std::sync::Mutex;
 
-/// Which executor a conv layer uses.
-#[derive(Clone, Debug)]
-pub enum ConvAlgo {
-    Direct,
-    /// Tiled bilinear fast convolution (float transform domain).
-    Fast(std::sync::Arc<FastConvPlan>),
-}
-
 /// Precomputed matrices for a tiled fast convolution.
 #[derive(Debug)]
 pub struct FastConvPlan {

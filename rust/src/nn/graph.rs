@@ -4,9 +4,10 @@
 //! the ResNet family (residual adds) and VGG (pure chains) while keeping
 //! forward execution trivially auditable for the PTQ experiments.
 
-use super::conv::{conv2d_direct, conv2d_fast, ConvAlgo};
 use super::tensor::Tensor;
+use crate::engine::ConvPlan;
 use crate::quant::qconv::QConvLayer;
+use std::sync::Arc;
 
 /// One conv layer's parameters (BN already folded at export time).
 #[derive(Clone, Debug)]
@@ -22,8 +23,9 @@ pub enum Op {
     Input,
     Conv {
         params: ConvParams,
-        algo: ConvAlgo,
-        /// set by the PTQ pass: quantized executor overriding `algo`
+        /// engine-selected execution plan (see [`crate::engine`])
+        plan: Arc<ConvPlan>,
+        /// set by the PTQ pass: quantized executor overriding `plan`
         quantized: Option<QConvLayer>,
     },
     Relu,
@@ -77,20 +79,18 @@ impl Model {
             let get = |i: usize| -> &Tensor { &acts[i] };
             let out = match &node.op {
                 Op::Input => x.clone(),
-                Op::Conv { params, algo, quantized } => {
+                Op::Conv { params, plan, quantized } => {
+                    debug_assert_eq!(
+                        (params.stride, params.pad),
+                        (plan.desc.stride, plan.desc.pad),
+                        "ConvParams and plan descriptor disagree at {}",
+                        node.name
+                    );
                     let inp = get(node.inputs[0]);
                     if let Some(q) = quantized {
                         q.forward(inp)
                     } else {
-                        match algo {
-                            ConvAlgo::Direct => {
-                                conv2d_direct(inp, &params.weight, &params.bias, params.stride, params.pad)
-                            }
-                            ConvAlgo::Fast(plan) => {
-                                assert_eq!(params.stride, 1, "fast conv requires stride 1");
-                                conv2d_fast(inp, &params.weight, &params.bias, plan, params.pad)
-                            }
-                        }
+                        plan.run(inp, &params.weight, &params.bias)
                     }
                 }
                 Op::Relu => {
@@ -211,10 +211,11 @@ mod tests {
         let inp = m.push(Op::Input, vec![], "input");
         let mut w = Tensor::zeros(&[4, 3, 3, 3]);
         rng.fill_gaussian(&mut w.data, 0.3);
+        let desc = crate::engine::ConvDesc::new(2, 3, 4, 8, 8, 3, 1, 1);
         let c1 = m.push(
             Op::Conv {
                 params: ConvParams { weight: w, bias: vec![0.0; 4], stride: 1, pad: 1 },
-                algo: ConvAlgo::Direct,
+                plan: Arc::new(ConvPlan::direct(desc)),
                 quantized: None,
             },
             vec![inp],

@@ -13,6 +13,6 @@ pub mod model;
 pub mod tensor;
 pub mod weights;
 
-pub use conv::{conv2d_direct, conv2d_fast, ConvAlgo};
+pub use conv::{conv2d_direct, conv2d_fast, FastConvPlan};
 pub use graph::{Model, Op};
 pub use tensor::Tensor;

@@ -6,11 +6,12 @@
 //! builders exist for tests and benchmarks that don't need trained
 //! weights.
 
-use super::conv::ConvAlgo;
 use super::graph::{ConvParams, Model, Op};
 use super::tensor::Tensor;
 use super::weights::WeightMap;
+use crate::engine::{default_selector, ConvDesc, ConvPlan};
 use crate::util::Pcg32;
+use std::sync::Arc;
 
 /// ResNet block config: (blocks per stage, width per stage, bottleneck?).
 pub struct ResNetCfg {
@@ -71,6 +72,10 @@ impl Source<'_> {
     }
 }
 
+/// Push one conv node: weights from `src`, execution plan from the
+/// default selector over a [`ConvDesc`] of the layer's geometry (spatial
+/// size tracked by the builder). Returns (node index, output spatial).
+#[allow(clippy::too_many_arguments)]
 fn push_conv(
     m: &mut Model,
     src: &mut Source,
@@ -81,17 +86,20 @@ fn push_conv(
     r: usize,
     stride: usize,
     pad: usize,
-) -> usize {
+    hw: usize,
+) -> (usize, usize) {
     let (weight, bias) = src.conv(name, oc, ic, r);
-    m.push(
-        Op::Conv {
-            params: ConvParams { weight, bias, stride, pad },
-            algo: ConvAlgo::Direct,
-            quantized: None,
-        },
+    let desc = ConvDesc::new(1, ic, oc, hw, hw, r, stride, pad);
+    let plan = default_selector()
+        .plan(&desc)
+        .unwrap_or_else(|_| Arc::new(ConvPlan::direct(desc)));
+    let out_hw = (hw + 2 * pad - r) / stride + 1;
+    let node = m.push(
+        Op::Conv { params: ConvParams { weight, bias, stride, pad }, plan, quantized: None },
         vec![input],
         name,
-    )
+    );
+    (node, out_hw)
 }
 
 fn build_resnet(cfg: &ResNetCfg, mut src: Source, classes: usize) -> Model {
@@ -99,8 +107,10 @@ fn build_resnet(cfg: &ResNetCfg, mut src: Source, classes: usize) -> Model {
     let input = m.push(Op::Input, vec![], "input");
     // 3×3 stem (32×32 inputs — the CIFAR-style stem, like the paper's
     // ImageNet stem scaled to our substrate)
+    let mut hw = 32usize;
     let mut prev_c = cfg.widths[0];
-    let stem = push_conv(&mut m, &mut src, "stem", input, prev_c, 3, 3, 1, 1);
+    let (stem, stem_hw) = push_conv(&mut m, &mut src, "stem", input, prev_c, 3, 3, 1, 1, hw);
+    hw = stem_hw;
     let mut cur = m.push(Op::Relu, vec![stem], "stem.relu");
 
     for (si, (&blocks, &width)) in cfg.stages.iter().zip(&cfg.widths).enumerate() {
@@ -109,33 +119,40 @@ fn build_resnet(cfg: &ResNetCfg, mut src: Source, classes: usize) -> Model {
             let prefix = format!("s{si}b{bi}");
             if !cfg.bottleneck {
                 // basic block: conv3-conv3 (+ 1×1 projection on reshape)
-                let c1 = push_conv(&mut m, &mut src, &format!("{prefix}.conv1"), cur, width, prev_c, 3, stride, 1);
+                let (c1, hw1) =
+                    push_conv(&mut m, &mut src, &format!("{prefix}.conv1"), cur, width, prev_c, 3, stride, 1, hw);
                 let r1 = m.push(Op::Relu, vec![c1], format!("{prefix}.relu1"));
-                let c2 = push_conv(&mut m, &mut src, &format!("{prefix}.conv2"), r1, width, width, 3, 1, 1);
+                let (c2, hw2) =
+                    push_conv(&mut m, &mut src, &format!("{prefix}.conv2"), r1, width, width, 3, 1, 1, hw1);
                 let shortcut = if stride != 1 || prev_c != width {
-                    push_conv(&mut m, &mut src, &format!("{prefix}.proj"), cur, width, prev_c, 1, stride, 0)
+                    push_conv(&mut m, &mut src, &format!("{prefix}.proj"), cur, width, prev_c, 1, stride, 0, hw).0
                 } else {
                     cur
                 };
                 let add = m.push(Op::Add, vec![c2, shortcut], format!("{prefix}.add"));
                 cur = m.push(Op::Relu, vec![add], format!("{prefix}.relu2"));
+                hw = hw2;
             } else {
                 // bottleneck: 1×1 down, 3×3, 1×1 up (expansion 2 at mini scale)
                 let mid = width;
                 let out_c = width * 2;
-                let c1 = push_conv(&mut m, &mut src, &format!("{prefix}.conv1"), cur, mid, prev_c, 1, 1, 0);
+                let (c1, _) =
+                    push_conv(&mut m, &mut src, &format!("{prefix}.conv1"), cur, mid, prev_c, 1, 1, 0, hw);
                 let r1 = m.push(Op::Relu, vec![c1], format!("{prefix}.relu1"));
-                let c2 = push_conv(&mut m, &mut src, &format!("{prefix}.conv2"), r1, mid, mid, 3, stride, 1);
+                let (c2, hw2) =
+                    push_conv(&mut m, &mut src, &format!("{prefix}.conv2"), r1, mid, mid, 3, stride, 1, hw);
                 let r2 = m.push(Op::Relu, vec![c2], format!("{prefix}.relu2"));
-                let c3 = push_conv(&mut m, &mut src, &format!("{prefix}.conv3"), r2, out_c, mid, 1, 1, 0);
+                let (c3, _) =
+                    push_conv(&mut m, &mut src, &format!("{prefix}.conv3"), r2, out_c, mid, 1, 1, 0, hw2);
                 let shortcut = if stride != 1 || prev_c != out_c {
-                    push_conv(&mut m, &mut src, &format!("{prefix}.proj"), cur, out_c, prev_c, 1, stride, 0)
+                    push_conv(&mut m, &mut src, &format!("{prefix}.proj"), cur, out_c, prev_c, 1, stride, 0, hw).0
                 } else {
                     cur
                 };
                 let add = m.push(Op::Add, vec![c3, shortcut], format!("{prefix}.add"));
                 cur = m.push(Op::Relu, vec![add], format!("{prefix}.relu3"));
                 prev_c = out_c;
+                hw = hw2;
                 continue;
             }
             prev_c = width;

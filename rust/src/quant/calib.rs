@@ -1,32 +1,31 @@
-//! AdaQuant-lite post-training quantization (§6.1).
+//! AdaQuant-lite post-training quantization (§6.1), descriptor-driven.
 //!
 //! Like AdaQuant (Hubara et al., 2020) the objective is layer-wise: pick
 //! quantization parameters minimizing ‖Q(layer)(x) − layer(x)‖² on a small
 //! calibration set. Our gradient-free variant searches a grid of scale
 //! multipliers for the activation scales (clipping vs resolution
 //! trade-off) per layer — the dominant effect at these bit-widths — and
-//! keeps max-abs weight scales (per the chosen granularity). It converges
-//! for all three algorithm families, mirroring the paper's use of a
-//! different calibrator for Winograd (Scaling Gradient Backward) than for
-//! SFC/direct (AdaQuant).
+//! keeps max-abs weight scales (per the chosen granularity).
+//!
+//! The pass builds one [`ConvDesc`] per conv node from its calibrated
+//! activation shape, asks the engine [`Selector`](crate::engine::Selector)
+//! for the configured engine's plan (plans are shared through the
+//! [`PlanCache`](crate::engine::PlanCache) across layers and repeated
+//! quantization runs) and installs a [`QConvLayer`] built from that plan.
 
-use super::qconv::{collect_act_maxima, Granularity, QConvLayer};
-use crate::algo::registry::AlgoSpec;
-use crate::nn::conv::FastConvPlan;
-use crate::nn::graph::{Model, Op};
+use super::qconv::{collect_act_maxima, Granularity, QCalib, QConvLayer};
+use crate::engine::{default_selector, ConvDesc, ConvPlan, QuantSpec};
+use crate::nn::graph::{ConvParams, Model, Op};
 use crate::nn::tensor::Tensor;
 use std::sync::Arc;
 
-/// Which executor the PTQ pass installs.
-#[derive(Clone, Debug)]
-pub enum QAlgoChoice {
-    Direct,
-    Fast(AlgoSpec),
-}
-
+/// PTQ configuration: which engine executes quantized layers plus the §5
+/// quantization scheme.
 #[derive(Clone, Debug)]
 pub struct QuantConfig {
-    pub algo: QAlgoChoice,
+    /// Engine installed on supporting conv layers (a Table-1 catalog
+    /// name). `None` = spatially-quantized direct conv on every layer.
+    pub engine: Option<&'static str>,
     pub w_bits: u32,
     pub a_bits: u32,
     pub w_gran: Granularity,
@@ -38,7 +37,7 @@ pub struct QuantConfig {
 impl QuantConfig {
     pub fn sfc_default(bits: u32) -> QuantConfig {
         QuantConfig {
-            algo: QAlgoChoice::Fast(crate::algo::registry::by_name("SFC-6(7x7,3x3)").unwrap()),
+            engine: Some("SFC-6(7x7,3x3)"),
             w_bits: bits,
             a_bits: bits,
             w_gran: Granularity::ChannelFreq,
@@ -49,7 +48,7 @@ impl QuantConfig {
 
     pub fn winograd_default(bits: u32) -> QuantConfig {
         QuantConfig {
-            algo: QAlgoChoice::Fast(crate::algo::registry::by_name("Wino(4x4,3x3)").unwrap()),
+            engine: Some("Wino(4x4,3x3)"),
             w_bits: bits,
             a_bits: bits,
             w_gran: Granularity::ChannelFreq,
@@ -60,7 +59,7 @@ impl QuantConfig {
 
     pub fn direct_default(bits: u32) -> QuantConfig {
         QuantConfig {
-            algo: QAlgoChoice::Direct,
+            engine: None,
             w_bits: bits,
             a_bits: bits,
             w_gran: Granularity::Channel,
@@ -68,24 +67,29 @@ impl QuantConfig {
             adaquant: true,
         }
     }
-}
 
-/// Eligibility: the paper replaces all 3×3 stride-1 convolutions.
-fn eligible(params: &crate::nn::graph::ConvParams, fast: bool) -> bool {
-    let r = params.weight.dims[2];
-    if fast {
-        r == 3 && params.stride == 1
-    } else {
-        // direct quantization applies to every conv
-        true
+    /// The descriptor-level quantization scheme.
+    pub fn spec(&self) -> QuantSpec {
+        QuantSpec { w_bits: self.w_bits, a_bits: self.a_bits, w_gran: self.w_gran, a_gran: self.a_gran }
     }
 }
 
 /// Run PTQ over the model in place. Returns the list of quantized node
-/// indices. `calib` is a small batch of input images (NCHW).
+/// indices. `calib` is a small batch of input images (NCHW). Layers the
+/// configured engine cannot take (e.g. 1×1 or strided convs under a fast
+/// engine — the paper replaces 3×3 stride-1 convolutions) are left in
+/// float.
 pub fn quantize_model(model: &mut Model, calib: &Tensor, cfg: &QuantConfig) -> Vec<usize> {
     // fp32 reference activations for every node
     let acts = model.forward_all(calib);
+    let sel = default_selector();
+    let engine_name = cfg.engine.unwrap_or("direct");
+    // A typo'd engine name must fail loudly, not return an all-float
+    // model that masquerades as a quantized result.
+    assert!(
+        sel.engine_named(engine_name).is_some(),
+        "unknown engine '{engine_name}' in QuantConfig (see `sfc autotune` for the catalog)"
+    );
     let conv_nodes = model.conv_nodes();
     let mut done = Vec::new();
     for idx in conv_nodes {
@@ -95,53 +99,54 @@ pub fn quantize_model(model: &mut Model, calib: &Tensor, cfg: &QuantConfig) -> V
         let layer_ref = &acts[idx];
         let node = &model.nodes[idx];
         let Op::Conv { params, .. } = &node.op else { unreachable!() };
-        let is_fast = matches!(cfg.algo, QAlgoChoice::Fast(_));
-        if !eligible(params, is_fast) {
-            continue;
-        }
-        let q = match &cfg.algo {
-            QAlgoChoice::Direct => {
-                let base = QConvLayer::direct(
-                    &params.weight,
-                    params.bias.clone(),
-                    params.stride,
-                    params.pad,
-                    cfg.w_bits,
-                    cfg.a_bits,
-                    layer_in.max_abs(),
-                );
-                if cfg.adaquant {
-                    search_direct(layer_in, layer_ref, params, cfg)
-                } else {
-                    base
-                }
-            }
-            QAlgoChoice::Fast(spec) => {
-                let plan = Arc::new(FastConvPlan::new(spec.build()));
-                let maxima = collect_act_maxima(layer_in, &plan, params.pad);
-                if cfg.adaquant {
-                    search_fast(layer_in, layer_ref, params, cfg, plan, &maxima)
-                } else {
-                    QConvLayer::fast(
-                        plan,
-                        &params.weight,
-                        params.bias.clone(),
-                        params.pad,
-                        cfg.w_bits,
-                        cfg.a_bits,
-                        cfg.w_gran,
-                        cfg.a_gran,
-                        &maxima,
-                    )
-                }
-            }
+        let (n, ic, h, w) = layer_in.dims4();
+        let (oc, _, r, _) = params.weight.dims4();
+        let desc =
+            ConvDesc::new(n, ic, oc, h, w, r, params.stride, params.pad).with_quant(cfg.spec());
+        let Ok(plan) = sel.plan_named(engine_name, &desc) else {
+            continue; // engine unknown or unsupported for this layer
         };
+        let q = build_quantized(plan, layer_in, layer_ref, params, cfg);
         if let Op::Conv { quantized, .. } = &mut model.nodes[idx].op {
             *quantized = Some(q);
         }
         done.push(idx);
     }
     done
+}
+
+fn build_quantized(
+    plan: Arc<ConvPlan>,
+    layer_in: &Tensor,
+    layer_ref: &Tensor,
+    params: &ConvParams,
+    cfg: &QuantConfig,
+) -> QConvLayer {
+    if let Some(fast) = plan.fast_plan() {
+        let maxima = collect_act_maxima(layer_in, fast, params.pad);
+        if cfg.adaquant {
+            search_transform(plan, layer_in, layer_ref, params, &maxima)
+        } else {
+            QConvLayer::from_plan(
+                plan.clone(),
+                &params.weight,
+                params.bias.clone(),
+                &QCalib::TransformMaxima(&maxima),
+            )
+        }
+    } else {
+        let max_abs = layer_in.max_abs();
+        if cfg.adaquant {
+            search_spatial(plan, layer_in, layer_ref, params, max_abs)
+        } else {
+            QConvLayer::from_plan(
+                plan.clone(),
+                &params.weight,
+                params.bias.clone(),
+                &QCalib::MaxAbs(max_abs),
+            )
+        }
+    }
 }
 
 /// Remove quantization (restore fp32 execution).
@@ -174,12 +179,11 @@ fn subsample(t: &Tensor, k: usize) -> Tensor {
     Tensor::from_vec(&dims, t.data[..n * per].to_vec())
 }
 
-fn search_fast(
+fn search_transform(
+    plan: Arc<ConvPlan>,
     layer_in: &Tensor,
     layer_ref: &Tensor,
-    params: &crate::nn::graph::ConvParams,
-    cfg: &QuantConfig,
-    plan: Arc<FastConvPlan>,
+    params: &ConvParams,
     maxima: &[f32],
 ) -> QConvLayer {
     let search_in = subsample(layer_in, search_n());
@@ -187,16 +191,11 @@ fn search_fast(
     let mut best: Option<(f64, QConvLayer)> = None;
     for &f in &SEARCH_GRID {
         let scaled: Vec<f32> = maxima.iter().map(|m| m * f).collect();
-        let cand = QConvLayer::fast(
+        let cand = QConvLayer::from_plan(
             plan.clone(),
             &params.weight,
             params.bias.clone(),
-            params.pad,
-            cfg.w_bits,
-            cfg.a_bits,
-            cfg.w_gran,
-            cfg.a_gran,
-            &scaled,
+            &QCalib::TransformMaxima(&scaled),
         );
         let mse = cand.forward(&search_in).mse(&search_ref);
         if best.as_ref().map_or(true, |(b, _)| mse < *b) {
@@ -206,25 +205,22 @@ fn search_fast(
     best.unwrap().1
 }
 
-fn search_direct(
+fn search_spatial(
+    plan: Arc<ConvPlan>,
     layer_in: &Tensor,
     layer_ref: &Tensor,
-    params: &crate::nn::graph::ConvParams,
-    cfg: &QuantConfig,
+    params: &ConvParams,
+    max_abs: f32,
 ) -> QConvLayer {
-    let max_abs = layer_in.max_abs();
     let search_in = subsample(layer_in, search_n());
     let search_ref = subsample(layer_ref, search_n());
     let mut best: Option<(f64, QConvLayer)> = None;
     for &f in &SEARCH_GRID {
-        let cand = QConvLayer::direct(
+        let cand = QConvLayer::from_plan(
+            plan.clone(),
             &params.weight,
             params.bias.clone(),
-            params.stride,
-            params.pad,
-            cfg.w_bits,
-            cfg.a_bits,
-            max_abs * f,
+            &QCalib::MaxAbs(max_abs * f),
         );
         let mse = cand.forward(&search_in).mse(&search_ref);
         if best.as_ref().map_or(true, |(b, _)| mse < *b) {
@@ -251,35 +247,32 @@ pub fn layer_mse(model: &Model, fp32_acts: &[Tensor], batch: &Tensor) -> Vec<(St
 mod tests {
     use super::*;
     use crate::nn::graph::ConvParams;
-    use crate::nn::ConvAlgo;
     use crate::util::Pcg32;
+
+    fn push_direct_conv(m: &mut Model, input: usize, w: Tensor, bias: Vec<f32>, name: &str) -> usize {
+        let (oc, ic, r, _) = w.dims4();
+        let desc = ConvDesc::new(1, ic, oc, 14, 14, r, 1, 1);
+        m.push(
+            Op::Conv {
+                params: ConvParams { weight: w, bias, stride: 1, pad: 1 },
+                plan: Arc::new(ConvPlan::direct(desc)),
+                quantized: None,
+            },
+            vec![input],
+            name,
+        )
+    }
 
     fn small_model(rng: &mut Pcg32) -> Model {
         let mut m = Model::new("t");
         let i = m.push(Op::Input, vec![], "in");
         let mut w1 = Tensor::zeros(&[8, 3, 3, 3]);
         rng.fill_gaussian(&mut w1.data, 0.25);
-        let c1 = m.push(
-            Op::Conv {
-                params: ConvParams { weight: w1, bias: vec![0.01; 8], stride: 1, pad: 1 },
-                algo: ConvAlgo::Direct,
-                quantized: None,
-            },
-            vec![i],
-            "conv1",
-        );
+        let c1 = push_direct_conv(&mut m, i, w1, vec![0.01; 8], "conv1");
         let r1 = m.push(Op::Relu, vec![c1], "relu1");
         let mut w2 = Tensor::zeros(&[8, 8, 3, 3]);
         rng.fill_gaussian(&mut w2.data, 0.2);
-        m.push(
-            Op::Conv {
-                params: ConvParams { weight: w2, bias: vec![0.0; 8], stride: 1, pad: 1 },
-                algo: ConvAlgo::Direct,
-                quantized: None,
-            },
-            vec![r1],
-            "conv2",
-        );
+        push_direct_conv(&mut m, r1, w2, vec![0.0; 8], "conv2");
         m
     }
 
@@ -325,5 +318,17 @@ mod tests {
         rng.fill_gaussian(&mut x.data, 1.0);
         let done = quantize_model(&mut m, &x, &QuantConfig::direct_default(8));
         assert_eq!(done.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown engine")]
+    fn unknown_engine_fails_loudly() {
+        let mut rng = Pcg32::seeded(10);
+        let mut m = small_model(&mut rng);
+        let mut x = Tensor::zeros(&[1, 3, 10, 10]);
+        rng.fill_gaussian(&mut x.data, 1.0);
+        let mut cfg = QuantConfig::sfc_default(8);
+        cfg.engine = Some("not-a-real-engine");
+        quantize_model(&mut m, &x, &cfg);
     }
 }

@@ -1,22 +1,23 @@
-//! Transform-domain-quantized convolution (Eq. 17) and the quantized
-//! direct-conv baseline.
+//! Quantized conv executors built on engine plans: transform-domain
+//! quantization (Eq. 17) for the bilinear engines, and the spatially
+//! quantized baseline for the direct/NTT engines.
 //!
-//! The fast path executes
-//!   y = Σ_Cin  s_Tx·⌈BᵀxB/s_Tx⌋ ⊙ s_Tf·⌈GfGᵀ/s_Tf⌋
-//! with integer products accumulated exactly in i32 and the inverse
-//! transform applied in f32 afterwards. Scale-group granularity follows
-//! §5: per-tensor or per-frequency for activations; per-channel,
-//! per-frequency or channel×frequency for weights (s_Tf of size
-//! [OC×T×T]).
+//! A [`QConvLayer`] is constructed from an engine [`ConvPlan`] plus the
+//! quantization scheme carried by the descriptor ([`QuantSpec`]): the
+//! plan decides the datapath, the spec decides bit-widths and scale-group
+//! granularity (§5: per-tensor or per-frequency for activations;
+//! per-channel, per-frequency or channel×frequency for weights).
 
 use super::QParams;
+use crate::engine::exec::ntt_corr2d_i8;
+use crate::engine::{ConvPlan, PlanKernel, QuantSpec};
 use crate::nn::conv::{gather_tile, FastConvPlan};
 use crate::nn::tensor::Tensor;
 use crate::util::par::par_for;
 use std::sync::{Arc, Mutex};
 
 /// Scale-group granularity for one operand (Table 4/5 axes).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Granularity {
     /// one scale for the whole tensor
     Tensor,
@@ -26,41 +27,6 @@ pub enum Granularity {
     Channel,
     /// per output channel × per frequency (weights only; s_Tf [OC×T×T])
     ChannelFreq,
-}
-
-/// A conv layer after PTQ: either transform-domain-quantized fast conv or
-/// the spatially-quantized direct baseline.
-pub struct QConvLayer {
-    pub kind: QConvKind,
-    pub bias: Vec<f32>,
-    pub stride: usize,
-    pub pad: usize,
-}
-
-pub enum QConvKind {
-    Fast {
-        plan: Arc<FastConvPlan>,
-        oc: usize,
-        ic: usize,
-        /// quantized transformed weights, freq-major [T²][OC][IC]
-        wq: Vec<i8>,
-        /// weight scale per (uv, oc) resolved from granularity
-        w_scales: ScaleGroup,
-        /// activation scale per uv resolved from granularity
-        a_scales: ScaleGroup,
-        a_bits: u32,
-    },
-    Direct {
-        /// quantized weights [OC][IC·R·R]
-        wq: Vec<i8>,
-        oc: usize,
-        ic: usize,
-        r: usize,
-        /// per-channel weight scales
-        w_scales: Vec<f32>,
-        /// per-tensor input scale
-        a_scale: QParams,
-    },
 }
 
 /// Resolved scale lookup: maps (uv, oc) → scale.
@@ -129,29 +95,103 @@ impl ScaleGroup {
     }
 }
 
+/// Activation calibration statistics for building a quantized layer:
+/// what [`crate::quant::calib`] collects depends on the plan's datapath.
+pub enum QCalib<'a> {
+    /// per-frequency max |BᵀxB| over the calibration set (bilinear plans)
+    TransformMaxima(&'a [f32]),
+    /// max |x| over the calibration set (spatial plans: direct/NTT)
+    MaxAbs(f32),
+}
+
+/// A conv layer after PTQ. The engine plan decides the datapath
+/// (transform-domain int GEMM vs spatial int conv, optionally through
+/// the NTT); the layer owns the quantized weights and resolved scales.
+pub struct QConvLayer {
+    pub plan: Arc<ConvPlan>,
+    pub bias: Vec<f32>,
+    kernel: QKernel,
+}
+
+enum QKernel {
+    /// Eq. 17: quantize BᵀxB and GfGᵀ, exact i32 ⊙-accumulation,
+    /// float inverse transform.
+    TransformDomain {
+        oc: usize,
+        ic: usize,
+        /// quantized transformed weights, freq-major [T²][OC][IC]
+        wq: Vec<i8>,
+        /// weight scale per (uv, oc) resolved from granularity
+        w_scales: ScaleGroup,
+        /// activation scale per uv resolved from granularity
+        a_scales: ScaleGroup,
+        a_bits: u32,
+    },
+    /// Spatially quantized conv: int8 per-tensor activations ×
+    /// per-channel weights, executed by nested loops or the exact NTT.
+    Spatial {
+        /// quantized weights [OC][IC·R·R]
+        wq: Vec<i8>,
+        oc: usize,
+        ic: usize,
+        r: usize,
+        w_scales: Vec<f32>,
+        a_scale: QParams,
+        via_ntt: bool,
+    },
+}
+
 impl QConvLayer {
-    /// Build the transform-domain-quantized layer (Eq. 17).
-    ///
-    /// `act_maxima` are per-frequency max |BᵀxB| statistics collected on
-    /// the calibration set (uv-major, single pseudo-channel).
-    #[allow(clippy::too_many_arguments)]
-    pub fn fast(
-        plan: Arc<FastConvPlan>,
+    /// Build the quantized executor for an engine plan. The quantization
+    /// scheme comes from the plan's own descriptor (build the plan from
+    /// `desc.with_quant(..)`), so plan and quantizer can never disagree.
+    /// The calibration statistic must match the plan's datapath
+    /// (per-frequency maxima for bilinear plans, max-abs for spatial).
+    pub fn from_plan(
+        plan: Arc<ConvPlan>,
         weight: &Tensor,
         bias: Vec<f32>,
-        pad: usize,
-        w_bits: u32,
-        a_bits: u32,
-        w_gran: Granularity,
-        a_gran: Granularity,
+        calib: &QCalib,
+    ) -> QConvLayer {
+        let spec = plan
+            .desc
+            .quant
+            .expect("plan descriptor lacks a QuantSpec — build it from desc.with_quant(..)");
+        match calib {
+            QCalib::TransformMaxima(maxima) => {
+                assert!(
+                    matches!(plan.kernel, PlanKernel::Fast(_)),
+                    "transform-domain calibration requires a bilinear plan, got {}",
+                    plan.engine
+                );
+                QConvLayer::transform_domain(plan, weight, bias, spec, maxima)
+            }
+            QCalib::MaxAbs(max_abs) => {
+                let via_ntt = match plan.kernel {
+                    PlanKernel::Direct | PlanKernel::Im2col => false,
+                    PlanKernel::Ntt => true,
+                    _ => panic!("{} plan has no spatial quantized path", plan.engine),
+                };
+                QConvLayer::spatial(plan, weight, bias, spec, *max_abs, via_ntt)
+            }
+        }
+    }
+
+    fn transform_domain(
+        plan: Arc<ConvPlan>,
+        weight: &Tensor,
+        bias: Vec<f32>,
+        spec: QuantSpec,
         act_maxima: &[f32],
     ) -> QConvLayer {
+        let fast = plan.fast_plan().expect("bilinear plan").clone();
         let (oc, ic, r, _) = weight.dims4();
-        assert_eq!(r, plan.r());
-        let t2 = plan.t() * plan.t();
+        assert_eq!(r, fast.r());
+        assert_eq!(plan.desc.stride, 1, "fast conv requires stride 1");
+        let t2 = fast.t() * fast.t();
         assert_eq!(act_maxima.len(), t2);
         // transform weights (f32, freq-major [T²][OC][IC])
-        let u = plan.transform_weights(&weight.data, oc, ic);
+        let u = fast.transform_weights(&weight.data, oc, ic);
         // per (uv, oc) maxima over ic
         let mut w_maxima = vec![0f32; t2 * oc];
         for uv in 0..t2 {
@@ -163,34 +203,30 @@ impl QConvLayer {
                 w_maxima[uv * oc + o] = m;
             }
         }
-        let w_scales = ScaleGroup::from_maxima(w_gran, t2, oc, &w_maxima, w_bits);
+        let w_scales = ScaleGroup::from_maxima(spec.w_gran, t2, oc, &w_maxima, spec.w_bits);
         assert!(
-            matches!(a_gran, Granularity::Tensor | Granularity::Freq),
+            matches!(spec.a_gran, Granularity::Tensor | Granularity::Freq),
             "activation granularity must be Tensor or Freq"
         );
-        let a_scales = ScaleGroup::from_maxima(a_gran, t2, 1, act_maxima, a_bits);
-        let wq = quantize_weights(&u, t2, oc, ic, &w_scales, w_bits);
+        let a_scales = ScaleGroup::from_maxima(spec.a_gran, t2, 1, act_maxima, spec.a_bits);
+        let wq = quantize_weights(&u, t2, oc, ic, &w_scales, spec.w_bits);
         QConvLayer {
-            kind: QConvKind::Fast { plan, oc, ic, wq, w_scales, a_scales, a_bits },
+            plan,
             bias,
-            stride: 1,
-            pad,
+            kernel: QKernel::TransformDomain { oc, ic, wq, w_scales, a_scales, a_bits: spec.a_bits },
         }
     }
 
-    /// Quantized direct convolution (the "quantization-alone" baseline):
-    /// int8 per-tensor activations × per-channel weights.
-    pub fn direct(
+    fn spatial(
+        plan: Arc<ConvPlan>,
         weight: &Tensor,
         bias: Vec<f32>,
-        stride: usize,
-        pad: usize,
-        w_bits: u32,
-        a_bits: u32,
+        spec: QuantSpec,
         act_max_abs: f32,
+        via_ntt: bool,
     ) -> QConvLayer {
         let (oc, ic, r, _) = weight.dims4();
-        let qmax = ((1i32 << (w_bits - 1)) - 1) as f32;
+        let qmax = ((1i32 << (spec.w_bits - 1)) - 1) as f32;
         let mut w_scales = vec![1f32; oc];
         let mut wq = vec![0i8; oc * ic * r * r];
         for o in 0..oc {
@@ -202,28 +238,30 @@ impl QConvLayer {
                 *dst = ((v / s).round() as i32).clamp(-(qmax as i32), qmax as i32) as i8;
             }
         }
+        let a_scale = QParams::from_max_abs(act_max_abs, spec.a_bits);
         QConvLayer {
-            kind: QConvKind::Direct {
-                wq,
-                oc,
-                ic,
-                r,
-                w_scales,
-                a_scale: QParams::from_max_abs(act_max_abs, a_bits),
-            },
+            plan,
             bias,
-            stride,
-            pad,
+            kernel: QKernel::Spatial { wq, oc, ic, r, w_scales, a_scale, via_ntt },
         }
     }
 
+    /// Which engine executes this layer.
+    pub fn engine(&self) -> &'static str {
+        self.plan.engine
+    }
+
     pub fn forward(&self, x: &Tensor) -> Tensor {
-        match &self.kind {
-            QConvKind::Fast { plan, oc, ic, wq, w_scales, a_scales, a_bits } => {
-                forward_fast_q(x, self, plan, *oc, *ic, wq, w_scales, a_scales, *a_bits)
+        match &self.kernel {
+            QKernel::TransformDomain { oc, ic, wq, w_scales, a_scales, a_bits } => {
+                forward_transform_q(x, self, *oc, *ic, wq, w_scales, a_scales, *a_bits)
             }
-            QConvKind::Direct { wq, oc, ic, r, w_scales, a_scale } => {
-                forward_direct_q(x, self, wq, *oc, *ic, *r, w_scales, *a_scale)
+            QKernel::Spatial { wq, oc, ic, r, w_scales, a_scale, via_ntt } => {
+                if *via_ntt {
+                    forward_spatial_ntt(x, self, wq, *oc, *ic, *r, w_scales, *a_scale)
+                } else {
+                    forward_spatial_q(x, self, wq, *oc, *ic, *r, w_scales, *a_scale)
+                }
             }
         }
     }
@@ -246,10 +284,9 @@ fn quantize_weights(u: &[f32], t2: usize, oc: usize, ic: usize, scales: &ScaleGr
 }
 
 #[allow(clippy::too_many_arguments)]
-fn forward_fast_q(
+fn forward_transform_q(
     x: &Tensor,
     layer: &QConvLayer,
-    plan: &FastConvPlan,
     oc: usize,
     ic: usize,
     wq: &[i8],
@@ -257,11 +294,12 @@ fn forward_fast_q(
     a_scales: &ScaleGroup,
     a_bits: u32,
 ) -> Tensor {
+    let plan = layer.plan.fast_plan().expect("bilinear plan");
     let (n, ic2, h, wid) = x.dims4();
     assert_eq!(ic, ic2);
     let (m, l, t) = (plan.m(), plan.l(), plan.t());
     let r = plan.r();
-    let pad = layer.pad;
+    let pad = layer.plan.desc.pad;
     let oh = h + 2 * pad - r + 1;
     let ow = wid + 2 * pad - r + 1;
     let tiles_y = oh.div_ceil(m);
@@ -341,7 +379,7 @@ fn forward_fast_q(
 }
 
 #[allow(clippy::too_many_arguments)]
-fn forward_direct_q(
+fn forward_spatial_q(
     x: &Tensor,
     layer: &QConvLayer,
     wq: &[i8],
@@ -353,7 +391,7 @@ fn forward_direct_q(
 ) -> Tensor {
     let (n, ic2, h, wid) = x.dims4();
     assert_eq!(ic, ic2);
-    let (stride, pad) = (layer.stride, layer.pad);
+    let (stride, pad) = (layer.plan.desc.stride, layer.plan.desc.pad);
     let oh = (h + 2 * pad - r) / stride + 1;
     let ow = (wid + 2 * pad - r) / stride + 1;
     // quantize input per-tensor
@@ -396,6 +434,43 @@ fn forward_direct_q(
     out
 }
 
+/// The NTT-backed spatial path: bit-identical accumulators to
+/// [`forward_spatial_q`] (both are exact integer arithmetic), computed
+/// through the frequency domain — the Table-3 NTT accelerator datapath.
+#[allow(clippy::too_many_arguments)]
+fn forward_spatial_ntt(
+    x: &Tensor,
+    layer: &QConvLayer,
+    wq: &[i8],
+    oc: usize,
+    ic: usize,
+    r: usize,
+    w_scales: &[f32],
+    a_scale: QParams,
+) -> Tensor {
+    let (n, ic2, h, wid) = x.dims4();
+    assert_eq!(ic, ic2);
+    let pad = layer.plan.desc.pad;
+    assert_eq!(layer.plan.desc.stride, 1, "NTT path is stride-1");
+    let xq: Vec<i8> = x.data.iter().map(|&v| a_scale.quantize(v) as i8).collect();
+    let acc = ntt_corr2d_i8(&xq, n, ic, h, wid, wq, oc, r, pad);
+    let oh = h + 2 * pad - r + 1;
+    let ow = wid + 2 * pad - r + 1;
+    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    for ni in 0..n {
+        for o in 0..oc {
+            let deq = a_scale.scale * w_scales[o];
+            let b = if layer.bias.is_empty() { 0.0 } else { layer.bias[o] };
+            let src = &acc[(ni * oc + o) * oh * ow..(ni * oc + o + 1) * oh * ow];
+            let dst = out.plane_mut(ni, o);
+            for (d, &a) in dst.iter_mut().zip(src) {
+                *d = a as f32 * deq + b;
+            }
+        }
+    }
+    out
+}
+
 /// Collect per-frequency max |BᵀxB| statistics over a batch (calibration).
 pub fn collect_act_maxima(x: &Tensor, plan: &FastConvPlan, pad: usize) -> Vec<f32> {
     let (n, ic, h, wid) = x.dims4();
@@ -429,7 +504,7 @@ pub fn collect_act_maxima(x: &Tensor, plan: &FastConvPlan, pad: usize) -> Vec<f3
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algo::{sfc, winograd};
+    use crate::engine::{default_selector, ConvDesc};
     use crate::nn::conv::conv2d_direct;
     use crate::util::Pcg32;
 
@@ -439,17 +514,24 @@ mod tests {
         t
     }
 
+    fn transform_spec(w_bits: u32, a_bits: u32, w_gran: Granularity, a_gran: Granularity) -> QuantSpec {
+        QuantSpec { w_bits, a_bits, w_gran, a_gran }
+    }
+
+    fn named_plan(name: &str, desc: ConvDesc) -> Arc<ConvPlan> {
+        default_selector().plan_named(name, &desc).unwrap()
+    }
+
     #[test]
     fn int8_fast_close_to_fp32() {
         let mut rng = Pcg32::seeded(42);
         let x = rand_tensor(&[1, 4, 14, 14], &mut rng, 1.0);
         let w = rand_tensor(&[4, 4, 3, 3], &mut rng, 0.3);
-        let plan = Arc::new(FastConvPlan::new(sfc(6, 7, 3)));
-        let maxima = collect_act_maxima(&x, &plan, 1);
-        let q = QConvLayer::fast(
-            plan, &w, vec![0.0; 4], 1, 8, 8,
-            Granularity::ChannelFreq, Granularity::Freq, &maxima,
-        );
+        let spec = transform_spec(8, 8, Granularity::ChannelFreq, Granularity::Freq);
+        let desc = ConvDesc::new(1, 4, 4, 14, 14, 3, 1, 1).with_quant(spec);
+        let plan = named_plan("SFC-6(7x7,3x3)", desc);
+        let maxima = collect_act_maxima(&x, plan.fast_plan().unwrap(), 1);
+        let q = QConvLayer::from_plan(plan, &w, vec![0.0; 4], &QCalib::TransformMaxima(&maxima));
         let want = conv2d_direct(&x, &w, &[0.0; 4], 1, 1);
         let got = q.forward(&x);
         let rel = got.mse(&want) / want.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>()
@@ -462,15 +544,14 @@ mod tests {
         let mut rng = Pcg32::seeded(43);
         let x = rand_tensor(&[1, 4, 12, 12], &mut rng, 1.0);
         let w = rand_tensor(&[4, 4, 3, 3], &mut rng, 0.3);
-        let plan = Arc::new(FastConvPlan::new(sfc(6, 6, 3)));
-        let maxima = collect_act_maxima(&x, &plan, 1);
         let want = conv2d_direct(&x, &w, &[], 1, 1);
         let mut errs = Vec::new();
         for bits in [8u32, 4] {
-            let q = QConvLayer::fast(
-                plan.clone(), &w, vec![], 1, bits, bits,
-                Granularity::ChannelFreq, Granularity::Freq, &maxima,
-            );
+            let spec = transform_spec(bits, bits, Granularity::ChannelFreq, Granularity::Freq);
+            let desc = ConvDesc::new(1, 4, 4, 12, 12, 3, 1, 1).with_quant(spec);
+            let plan = named_plan("SFC-6(6x6,3x3)", desc);
+            let maxima = collect_act_maxima(&x, plan.fast_plan().unwrap(), 1);
+            let q = QConvLayer::from_plan(plan, &w, vec![], &QCalib::TransformMaxima(&maxima));
             errs.push(q.forward(&x).mse(&want));
         }
         assert!(errs[1] > errs[0] * 4.0, "int4 {} vs int8 {}", errs[1], errs[0]);
@@ -482,19 +563,20 @@ mod tests {
         let mut rng = Pcg32::seeded(44);
         let x = rand_tensor(&[1, 8, 12, 12], &mut rng, 1.0);
         let w = rand_tensor(&[8, 8, 3, 3], &mut rng, 0.3);
-        let plan = Arc::new(FastConvPlan::new(winograd(4, 3)));
-        let maxima = collect_act_maxima(&x, &plan, 1);
         let want = conv2d_direct(&x, &w, &[], 1, 1);
-        let q_tensor = QConvLayer::fast(
-            plan.clone(), &w, vec![], 1, 8, 8,
-            Granularity::Channel, Granularity::Tensor, &maxima,
-        );
-        let q_freq = QConvLayer::fast(
-            plan.clone(), &w, vec![], 1, 8, 8,
-            Granularity::ChannelFreq, Granularity::Freq, &maxima,
-        );
-        let e_tensor = q_tensor.forward(&x).mse(&want);
-        let e_freq = q_freq.forward(&x).mse(&want);
+        let mut errs = Vec::new();
+        for (w_gran, a_gran) in [
+            (Granularity::Channel, Granularity::Tensor),
+            (Granularity::ChannelFreq, Granularity::Freq),
+        ] {
+            let spec = transform_spec(8, 8, w_gran, a_gran);
+            let desc = ConvDesc::new(1, 8, 8, 12, 12, 3, 1, 1).with_quant(spec);
+            let plan = named_plan("Wino(4x4,3x3)", desc);
+            let maxima = collect_act_maxima(&x, plan.fast_plan().unwrap(), 1);
+            let q = QConvLayer::from_plan(plan, &w, vec![], &QCalib::TransformMaxima(&maxima));
+            errs.push(q.forward(&x).mse(&want));
+        }
+        let (e_tensor, e_freq) = (errs[0], errs[1]);
         assert!(e_freq < e_tensor, "freq {e_freq} must beat tensor {e_tensor}");
     }
 
@@ -503,7 +585,10 @@ mod tests {
         let mut rng = Pcg32::seeded(45);
         let x = rand_tensor(&[2, 3, 9, 9], &mut rng, 1.0);
         let w = rand_tensor(&[5, 3, 3, 3], &mut rng, 0.3);
-        let q = QConvLayer::direct(&w, vec![0.0; 5], 1, 1, 8, 8, x.max_abs());
+        let spec = QuantSpec::spatial_default(8);
+        let desc = ConvDesc::new(2, 3, 5, 9, 9, 3, 1, 1).with_quant(spec);
+        let plan = named_plan("direct", desc);
+        let q = QConvLayer::from_plan(plan, &w, vec![0.0; 5], &QCalib::MaxAbs(x.max_abs()));
         let want = conv2d_direct(&x, &w, &[0.0; 5], 1, 1);
         let got = q.forward(&x);
         let denom = want.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / want.len() as f64;
@@ -515,8 +600,32 @@ mod tests {
         let mut rng = Pcg32::seeded(46);
         let x = rand_tensor(&[1, 2, 8, 8], &mut rng, 1.0);
         let w = rand_tensor(&[2, 2, 3, 3], &mut rng, 0.3);
-        let q = QConvLayer::direct(&w, vec![], 2, 1, 8, 8, x.max_abs());
+        let spec = QuantSpec::spatial_default(8);
+        let desc = ConvDesc::new(1, 2, 2, 8, 8, 3, 2, 1).with_quant(spec);
+        let plan = named_plan("direct", desc);
+        let q = QConvLayer::from_plan(plan, &w, vec![], &QCalib::MaxAbs(x.max_abs()));
         let got = q.forward(&x);
         assert_eq!(got.dims, vec![1, 2, 4, 4]);
+    }
+
+    #[test]
+    fn ntt_spatial_matches_direct_spatial_exactly() {
+        // Both paths run exact integer arithmetic on identical quantizers,
+        // so their outputs must agree to the last bit.
+        let mut rng = Pcg32::seeded(47);
+        let x = rand_tensor(&[2, 3, 10, 10], &mut rng, 1.0);
+        let w = rand_tensor(&[4, 3, 3, 3], &mut rng, 0.3);
+        let spec = QuantSpec::spatial_default(8);
+        let desc = ConvDesc::new(2, 3, 4, 10, 10, 3, 1, 1).with_quant(spec);
+        let pd = named_plan("direct", desc);
+        let pn = named_plan("NTT", desc);
+        let calib = QCalib::MaxAbs(x.max_abs());
+        let qd = QConvLayer::from_plan(pd, &w, vec![0.1; 4], &calib);
+        let qn = QConvLayer::from_plan(pn, &w, vec![0.1; 4], &calib);
+        assert_eq!(qn.engine(), "NTT");
+        let yd = qd.forward(&x);
+        let yn = qn.forward(&x);
+        assert_eq!(yd.dims, yn.dims);
+        assert!(yd.mse(&yn) < 1e-12, "NTT vs direct int path mse {}", yd.mse(&yn));
     }
 }

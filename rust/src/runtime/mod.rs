@@ -6,67 +6,121 @@
 //! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
 //! Python never runs at serving time — `make artifacts` is the only
 //! python invocation.
+//!
+//! The real executor needs the vendored `xla` crate and is gated behind
+//! the `pjrt` feature (add the dependency to Cargo.toml when enabling).
+//! Without it a stub with the identical API returns clean errors, so the
+//! serving stack (batcher, CLI, benches) builds and tests everywhere.
 
-use anyhow::{Context, Result};
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use anyhow::{Context, Result};
+    use std::path::Path;
 
-/// A compiled model executable on the PJRT CPU client.
-pub struct Executor {
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
-    /// expected input shape (NCHW)
-    pub input_dims: Vec<usize>,
-    /// number of classes in the logits output
-    pub out_classes: usize,
+    /// A compiled model executable on the PJRT CPU client.
+    pub struct Executor {
+        client: xla::PjRtClient,
+        exe: xla::PjRtLoadedExecutable,
+        /// expected input shape (NCHW)
+        pub input_dims: Vec<usize>,
+        /// number of classes in the logits output
+        pub out_classes: usize,
+    }
+
+    impl Executor {
+        /// Load an HLO-text artifact and compile it for CPU.
+        pub fn load(hlo_path: &Path, input_dims: &[usize], out_classes: usize) -> Result<Executor> {
+            let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(anyhow_xla)
+            .with_context(|| format!("parse {}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(anyhow_xla)?;
+            Ok(Executor { client, exe, input_dims: input_dims.to_vec(), out_classes })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Run one batch: input is NCHW f32 with dims == input_dims;
+        /// returns the [N, classes] logits.
+        pub fn run(&self, batch: &[f32]) -> Result<Vec<f32>> {
+            let expect: usize = self.input_dims.iter().product();
+            anyhow::ensure!(
+                batch.len() == expect,
+                "batch size mismatch: {} vs {}",
+                batch.len(),
+                expect
+            );
+            let dims: Vec<i64> = self.input_dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(batch).reshape(&dims).map_err(anyhow_xla)?;
+            let result = self.exe.execute::<xla::Literal>(&[lit]).map_err(anyhow_xla)?;
+            let out = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
+            // jax lowering uses return_tuple=True → 1-tuple
+            let out = out.to_tuple1().map_err(anyhow_xla)?;
+            let v = out.to_vec::<f32>().map_err(anyhow_xla)?;
+            Ok(v)
+        }
+
+        pub fn batch_size(&self) -> usize {
+            self.input_dims[0]
+        }
+    }
+
+    fn anyhow_xla(e: xla::Error) -> anyhow::Error {
+        anyhow::anyhow!("xla: {e}")
+    }
 }
 
-impl Executor {
-    /// Load an HLO-text artifact and compile it for CPU.
-    pub fn load(hlo_path: &Path, input_dims: &[usize], out_classes: usize) -> Result<Executor> {
-        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path.to_str().context("non-utf8 path")?,
-        )
-        .map_err(anyhow_xla)
-        .with_context(|| format!("parse {}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).map_err(anyhow_xla)?;
-        Ok(Executor { client, exe, input_dims: input_dims.to_vec(), out_classes })
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_impl {
+    use anyhow::Result;
+    use std::path::Path;
+
+    /// Stub executor: same API as the PJRT-backed one, every entry point
+    /// returns a clean "feature disabled" error. Artifact-dependent tests
+    /// and benches skip on the missing artifacts before reaching it.
+    pub struct Executor {
+        /// expected input shape (NCHW)
+        pub input_dims: Vec<usize>,
+        /// number of classes in the logits output
+        pub out_classes: usize,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    impl Executor {
+        pub fn load(hlo_path: &Path, _input_dims: &[usize], _out_classes: usize) -> Result<Executor> {
+            anyhow::bail!(
+                "PJRT runtime disabled (build with `--features pjrt` and the vendored `xla` \
+                 crate); cannot load {}",
+                hlo_path.display()
+            )
+        }
 
-    /// Run one batch: input is NCHW f32 with dims == input_dims; returns
-    /// the [N, classes] logits.
-    pub fn run(&self, batch: &[f32]) -> Result<Vec<f32>> {
-        let expect: usize = self.input_dims.iter().product();
-        anyhow::ensure!(batch.len() == expect, "batch size mismatch: {} vs {}", batch.len(), expect);
-        let dims: Vec<i64> = self.input_dims.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(batch).reshape(&dims).map_err(anyhow_xla)?;
-        let result = self.exe.execute::<xla::Literal>(&[lit]).map_err(anyhow_xla)?;
-        let out = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
-        // jax lowering uses return_tuple=True → 1-tuple
-        let out = out.to_tuple1().map_err(anyhow_xla)?;
-        let v = out.to_vec::<f32>().map_err(anyhow_xla)?;
-        Ok(v)
-    }
+        pub fn platform(&self) -> String {
+            "stub".into()
+        }
 
-    pub fn batch_size(&self) -> usize {
-        self.input_dims[0]
+        pub fn run(&self, _batch: &[f32]) -> Result<Vec<f32>> {
+            anyhow::bail!("PJRT runtime disabled (build with `--features pjrt`)")
+        }
+
+        pub fn batch_size(&self) -> usize {
+            self.input_dims[0]
+        }
     }
 }
 
-fn anyhow_xla(e: xla::Error) -> anyhow::Error {
-    anyhow::anyhow!("xla: {e}")
-}
+pub use pjrt_impl::Executor;
 
 #[cfg(test)]
 mod tests {
     // Executor integration tests live in rust/tests/runtime_e2e.rs (they
     // need the build-time artifacts); here we only check error paths.
     use super::*;
+    use std::path::Path;
 
     #[test]
     fn missing_artifact_is_a_clean_error() {

@@ -1,0 +1,195 @@
+//! Engine-API integration tests: the equivalence property (every engine
+//! that `supports()` a descriptor matches direct convolution on random
+//! tensors, float and quantized), plan-cache hit/miss/concurrency
+//! behavior, and cache reuse across repeated model construction.
+
+use sfc::engine::{default_selector, ConvDesc, PlanCache, Policy, QuantSpec, Selector};
+use sfc::nn::conv::conv2d_direct;
+use sfc::nn::Tensor;
+use sfc::quant::qconv::{collect_act_maxima, QCalib, QConvLayer};
+use sfc::util::Pcg32;
+use std::sync::Arc;
+
+fn rand_tensor(dims: &[usize], rng: &mut Pcg32, sigma: f64) -> Tensor {
+    let mut t = Tensor::zeros(dims);
+    rng.fill_gaussian(&mut t.data, sigma);
+    t
+}
+
+fn rel_mse(got: &Tensor, want: &Tensor) -> f64 {
+    let denom =
+        want.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / want.len().max(1) as f64;
+    got.mse(want) / denom.max(1e-30)
+}
+
+/// Property: every engine that supports a float descriptor agrees with
+/// direct convolution within its numerical class (exact-rational and
+/// f64-FFT engines at float roundoff; the NTT engine at its documented
+/// int8 fixed-point precision).
+#[test]
+fn property_every_supporting_engine_matches_direct() {
+    let sel = default_selector();
+    let mut rng = Pcg32::seeded(0xE9);
+    let cases: [(usize, usize, usize, usize, usize, usize, usize, usize); 6] = [
+        (1, 3, 4, 16, 16, 3, 1, 1),
+        (2, 5, 3, 12, 11, 3, 1, 1),
+        (1, 2, 2, 14, 14, 3, 1, 0),
+        (1, 3, 4, 12, 12, 5, 1, 2),
+        (1, 4, 6, 11, 11, 1, 1, 0),
+        (2, 3, 5, 12, 12, 3, 2, 1),
+    ];
+    for (n, ic, oc, h, w, r, stride, pad) in cases {
+        let d = ConvDesc::new(n, ic, oc, h, w, r, stride, pad);
+        let x = rand_tensor(&[n, ic, h, w], &mut rng, 1.0);
+        let wt = rand_tensor(&[oc, ic, r, r], &mut rng, 0.3);
+        let bias: Vec<f32> = (0..oc).map(|i| i as f32 * 0.1 - 0.2).collect();
+        let want = conv2d_direct(&x, &wt, &bias, stride, pad);
+        let mut tested = 0;
+        for e in sel.engines() {
+            if !e.supports(&d) {
+                continue;
+            }
+            let plan = sel.plan_named(e.name(), &d).unwrap();
+            let got = plan.run(&x, &wt, &bias);
+            assert_eq!(got.dims, want.dims, "{} on {d:?}", e.name());
+            let rel = rel_mse(&got, &want);
+            let tol = if e.name() == "NTT" { 5e-2 } else { 1e-6 };
+            assert!(rel < tol, "{} on {d:?}: rel mse {rel}", e.name(), );
+            tested += 1;
+        }
+        assert!(tested >= 2, "descriptor {d:?} should have several engines, got {tested}");
+    }
+}
+
+/// Property: every engine with a quantized datapath stays close to the
+/// float reference at int8 with its native granularity.
+#[test]
+fn property_quantized_engines_agree_with_float_reference() {
+    let sel = default_selector();
+    let mut rng = Pcg32::seeded(0x51);
+    let (n, ic, oc, h, w) = (1usize, 4usize, 4usize, 12usize, 12usize);
+    let base = ConvDesc::new(n, ic, oc, h, w, 3, 1, 1);
+    let x = rand_tensor(&[n, ic, h, w], &mut rng, 1.0);
+    let wt = rand_tensor(&[oc, ic, 3, 3], &mut rng, 0.3);
+    let want = conv2d_direct(&x, &wt, &[], 1, 1);
+    let t_spec = QuantSpec::transform_default(8);
+    let s_spec = QuantSpec::spatial_default(8);
+    let mut quantized = 0;
+    for e in sel.engines() {
+        let d = if e.supports(&base.with_quant(t_spec)) {
+            base.with_quant(t_spec)
+        } else if e.supports(&base.with_quant(s_spec)) {
+            base.with_quant(s_spec)
+        } else {
+            continue; // float-only engine (im2col, FFT)
+        };
+        let plan = sel.plan_named(e.name(), &d).unwrap();
+        let q = match plan.fast_plan() {
+            Some(fast) => {
+                let maxima = collect_act_maxima(&x, fast, 1);
+                QConvLayer::from_plan(
+                    plan.clone(),
+                    &wt,
+                    vec![],
+                    &QCalib::TransformMaxima(&maxima),
+                )
+            }
+            None => QConvLayer::from_plan(plan.clone(), &wt, vec![], &QCalib::MaxAbs(x.max_abs())),
+        };
+        let got = q.forward(&x);
+        assert_eq!(got.dims, want.dims, "{}", e.name());
+        let rel = rel_mse(&got, &want);
+        assert!(rel < 2e-2, "{}: quantized rel mse {rel}", e.name());
+        quantized += 1;
+    }
+    assert!(quantized >= 4, "expected several quantized engines, got {quantized}");
+}
+
+#[test]
+fn plan_cache_hit_miss_accounting_through_selector() {
+    let cache = Arc::new(PlanCache::new());
+    let sel = Selector::with_cache(Policy::Heuristic, cache.clone());
+    let d1 = ConvDesc::new(1, 4, 4, 12, 12, 3, 1, 1);
+    let d2 = ConvDesc::new(1, 4, 4, 16, 16, 3, 1, 1);
+    sel.plan(&d1).unwrap();
+    sel.plan(&d1).unwrap();
+    sel.plan(&d2).unwrap();
+    assert_eq!(cache.misses(), 2, "two distinct descriptors");
+    assert_eq!(cache.hits(), 1, "one repeat");
+    // pinned plans get their own cache entries, keyed by engine name
+    sel.plan_named("direct", &d1).unwrap();
+    sel.plan_named("direct", &d1).unwrap();
+    assert_eq!(cache.misses(), 3);
+    assert_eq!(cache.hits(), 2);
+    assert_eq!(cache.len(), 3);
+}
+
+#[test]
+fn plan_cache_concurrent_requests_plan_once() {
+    let cache = Arc::new(PlanCache::new());
+    let sel = Selector::with_cache(Policy::Heuristic, cache.clone());
+    let d = ConvDesc::new(1, 8, 8, 16, 16, 3, 1, 1);
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let sel_ref = &sel;
+            s.spawn(move || {
+                sel_ref.plan(&d).unwrap();
+            });
+        }
+    });
+    assert_eq!(cache.misses(), 1, "one shape must be planned exactly once");
+    assert_eq!(cache.hits(), 7);
+}
+
+#[test]
+fn repeated_model_construction_hits_plan_cache() {
+    use sfc::nn::model::{resnet18_cfg, resnet_random};
+    // first build warms the global cache (repeated blocks already share)
+    let _ = resnet_random(&resnet18_cfg(), 1, 10);
+    let (h0, _) = sfc::coordinator::metrics::plan_cache_counters();
+    let _ = resnet_random(&resnet18_cfg(), 2, 10);
+    let (h1, _) = sfc::coordinator::metrics::plan_cache_counters();
+    assert!(h1 > h0, "second construction must hit the plan cache ({h0} -> {h1})");
+}
+
+#[test]
+fn model_through_selected_plans_matches_reference_numerics() {
+    // A small two-conv stack executed through whatever the heuristic
+    // picks must match the all-direct reference within float-fast-conv
+    // tolerance (the engines are numerically interchangeable).
+    use sfc::nn::graph::{ConvParams, Model, Op};
+    let mut rng = Pcg32::seeded(0x77);
+    let x = rand_tensor(&[2, 3, 16, 16], &mut rng, 1.0);
+    let w1 = rand_tensor(&[4, 3, 3, 3], &mut rng, 0.25);
+    let w2 = rand_tensor(&[4, 4, 3, 3], &mut rng, 0.2);
+    let sel = default_selector();
+    let build = |pin_direct: bool| -> Model {
+        let mut m = Model::new("t");
+        let i = m.push(Op::Input, vec![], "in");
+        let mut prev = i;
+        for (k, w) in [w1.clone(), w2.clone()].into_iter().enumerate() {
+            let (oc, ic, r, _) = w.dims4();
+            let d = ConvDesc::new(2, ic, oc, 16, 16, r, 1, 1);
+            let plan = if pin_direct {
+                sel.plan_named("direct", &d).unwrap()
+            } else {
+                sel.plan(&d).unwrap()
+            };
+            let c = m.push(
+                Op::Conv {
+                    params: ConvParams { weight: w, bias: vec![0.0; oc], stride: 1, pad: 1 },
+                    plan,
+                    quantized: None,
+                },
+                vec![prev],
+                format!("conv{k}"),
+            );
+            prev = m.push(Op::Relu, vec![c], format!("relu{k}"));
+        }
+        m
+    };
+    let reference = build(true).forward(&x);
+    let selected = build(false).forward(&x);
+    let rel = rel_mse(&selected, &reference);
+    assert!(rel < 1e-6, "selected engines drifted from direct: rel mse {rel}");
+}

@@ -1,0 +1,196 @@
+//! Minimal, dependency-free shim of the `anyhow` error-handling API.
+//!
+//! The build image for this repository vendors no registry crates, so the
+//! subset of `anyhow` the SFC crate uses is reimplemented here: the
+//! string-backed [`Error`], the [`Result`] alias, the [`Context`]
+//! extension trait and the `anyhow!` / `bail!` / `ensure!` macros.
+//! Context is flattened into the message eagerly ("outer: inner"), which
+//! is what the CLI prints anyway; downcasting and backtraces are not
+//! supported.
+
+use std::fmt;
+
+/// A string-backed error value. Like `anyhow::Error` it deliberately does
+/// NOT implement `std::error::Error`, which is what makes the blanket
+/// `From<E: std::error::Error>` impl coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer ("context: cause").
+    pub fn wrap<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` with the usual overridable error parameter.
+pub type Result<T, E = Error> = core::result::Result<T, E>;
+
+/// Conversion into [`Error`] for context chaining. Implemented for every
+/// std error type and for [`Error`] itself (the same split that lets real
+/// anyhow attach context to both).
+#[doc(hidden)]
+pub trait StdErrorLike {
+    fn into_error(self) -> Error;
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> StdErrorLike for E {
+    fn into_error(self) -> Error {
+        Error::msg(self)
+    }
+}
+
+impl StdErrorLike for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+mod private {
+    pub trait Sealed {}
+    impl<T, E> Sealed for core::result::Result<T, E> {}
+    impl<T> Sealed for Option<T> {}
+}
+
+/// Attach human context to an error as it crosses a layer boundary.
+pub trait Context<T>: private::Sealed {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdErrorLike> Context<T> for core::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into_error().wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a formatted message, or any
+/// displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> core::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn question_mark_from_std_error() {
+        fn inner() -> Result<()> {
+            io_err()?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains_on_std_and_anyhow_results() {
+        let e = io_err().context("open file").unwrap_err();
+        assert_eq!(e.to_string(), "open file: gone");
+        let r: Result<()> = Err(e);
+        let e2 = r.with_context(|| "loading model").unwrap_err();
+        assert_eq!(e2.to_string(), "loading model: open file: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(3u32).context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(e.to_string(), "owned");
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {}", flag);
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert!(f(true).is_ok());
+        assert!(f(false).unwrap_err().to_string().contains("false"));
+    }
+}
