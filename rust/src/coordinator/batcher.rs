@@ -6,20 +6,30 @@
 //! partial batch with zeros, executes on the PJRT model and completes the
 //! per-request response channels.
 
-use crate::runtime::Executor;
+use crate::engine::Workspace;
+use crate::runtime::{EngineExecutor, Executor};
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// What the batcher needs from a model backend. `Executor` (PJRT) is the
-/// production impl; tests inject mocks.
+/// What the batcher needs from a model backend. `Executor` (PJRT) and
+/// the workspace-backed [`EngineExecutor`] are the production impls;
+/// tests inject mocks.
 pub trait ModelRunner {
     /// flattened NCHW input dims (index 0 = batch)
     fn input_dims(&self) -> &[usize];
     fn out_classes(&self) -> usize;
     fn run(&self, batch: &[f32]) -> Result<Vec<f32>>;
+    /// Workspace-aware entry point: the batcher worker owns one
+    /// [`Workspace`] for its lifetime and passes it to every batch, so
+    /// workspace-backed runners serve steady-state traffic without heap
+    /// allocation. Backends that manage their own memory (PJRT) ignore
+    /// the workspace.
+    fn run_with(&self, batch: &[f32], _ws: &mut Workspace) -> Result<Vec<f32>> {
+        self.run(batch)
+    }
     fn platform(&self) -> String {
         "mock".into()
     }
@@ -37,6 +47,24 @@ impl ModelRunner for Executor {
     }
     fn platform(&self) -> String {
         Executor::platform(self)
+    }
+}
+
+impl ModelRunner for EngineExecutor {
+    fn input_dims(&self) -> &[usize] {
+        &self.input_dims
+    }
+    fn out_classes(&self) -> usize {
+        self.out_classes
+    }
+    fn run(&self, batch: &[f32]) -> Result<Vec<f32>> {
+        EngineExecutor::run(self, batch)
+    }
+    fn run_with(&self, batch: &[f32], ws: &mut Workspace) -> Result<Vec<f32>> {
+        EngineExecutor::run_with(self, batch, ws)
+    }
+    fn platform(&self) -> String {
+        EngineExecutor::platform(self)
     }
 }
 
@@ -73,10 +101,21 @@ impl Pending {
     }
 }
 
+/// Worker-side resource counters, published after every batch.
+#[derive(Default)]
+struct WorkerStats {
+    /// peak bytes checked out of the worker's workspace
+    ws_peak_bytes: AtomicU64,
+    /// workspace checkouts that fell back to the heap (pool misses);
+    /// stops growing once serving reaches steady state
+    ws_heap_allocs: AtomicU64,
+}
+
 pub struct Server {
     tx: SyncSender<Request>,
     stop: Arc<AtomicBool>,
     batches: Arc<AtomicU64>,
+    stats: Arc<WorkerStats>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -93,8 +132,10 @@ impl Server {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let stop = Arc::new(AtomicBool::new(false));
         let batches = Arc::new(AtomicU64::new(0));
+        let stats = Arc::new(WorkerStats::default());
         let stop2 = stop.clone();
         let batches2 = batches.clone();
+        let stats2 = stats.clone();
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<String, String>>();
         let worker = std::thread::spawn(move || {
             let exe = match factory() {
@@ -107,12 +148,12 @@ impl Server {
                     return;
                 }
             };
-            batch_loop(exe, cfg, rx, stop2, batches2)
+            batch_loop(exe, cfg, rx, stop2, batches2, stats2)
         });
         match ready_rx.recv() {
             Ok(Ok(platform)) => {
                 println!("server ready on platform: {platform}");
-                Ok(Server { tx, stop, batches, worker: Some(worker) })
+                Ok(Server { tx, stop, batches, stats, worker: Some(worker) })
             }
             Ok(Err(e)) => {
                 let _ = worker.join();
@@ -134,6 +175,18 @@ impl Server {
 
     pub fn batches_executed(&self) -> u64 {
         self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Peak bytes checked out of the worker's workspace so far.
+    pub fn ws_peak_bytes(&self) -> u64 {
+        self.stats.ws_peak_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Workspace checkouts that fell back to a heap allocation. After
+    /// the warm-up batch this must stop growing — the steady-state
+    /// zero-alloc property asserted by the runtime e2e test.
+    pub fn ws_heap_allocs(&self) -> u64 {
+        self.stats.ws_heap_allocs.load(Ordering::Relaxed)
     }
 
     pub fn shutdown(mut self) {
@@ -160,9 +213,15 @@ fn batch_loop<R: ModelRunner>(
     rx: Receiver<Request>,
     stop: Arc<AtomicBool>,
     batches: Arc<AtomicU64>,
+    stats: Arc<WorkerStats>,
 ) {
     let sample: usize = exe.input_dims()[1..].iter().product();
     let classes = exe.out_classes();
+    // One workspace and one padded input buffer for the worker's
+    // lifetime: after the first batch warms the pools, steady-state
+    // serving checks every buffer out of the arena.
+    let mut ws = Workspace::new();
+    let mut input = vec![0f32; cfg.batch_size * sample];
     loop {
         // collect a batch
         let mut batch: Vec<Request> = Vec::with_capacity(cfg.batch_size);
@@ -188,13 +247,15 @@ fn batch_loop<R: ModelRunner>(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        // pad + execute
-        let mut input = vec![0f32; cfg.batch_size * sample];
+        // pad + execute (the input buffer is reused; zero the tail pad)
+        input[batch.len() * sample..].fill(0.0);
         for (i, r) in batch.iter().enumerate() {
             input[i * sample..(i + 1) * sample].copy_from_slice(&r.image);
         }
-        let result = exe.run(&input);
+        let result = exe.run_with(&input, &mut ws);
         batches.fetch_add(1, Ordering::Relaxed);
+        stats.ws_peak_bytes.store(ws.peak_bytes() as u64, Ordering::Relaxed);
+        stats.ws_heap_allocs.store(ws.heap_allocs(), Ordering::Relaxed);
         match result {
             Ok(logits) => {
                 for (i, r) in batch.into_iter().enumerate() {

@@ -23,6 +23,15 @@ pub fn plan_cache_counters() -> (u64, u64) {
     (PLAN_CACHE_HITS.load(Ordering::Relaxed), PLAN_CACHE_MISSES.load(Ordering::Relaxed))
 }
 
+/// (peak bytes, heap-fallback allocations) snapshot of the process-wide
+/// workspace counters. The atomics live with the arena
+/// ([`crate::engine::workspace::global_counters`]) so the engine layer
+/// stays below the serving layer; this is the serving-side view of
+/// them, reported by `sfc serve` next to latency and plan-cache stats.
+pub fn workspace_counters() -> (u64, u64) {
+    crate::engine::workspace::global_counters()
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct LatencyStats {
     pub n: usize,

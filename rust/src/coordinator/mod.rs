@@ -36,22 +36,42 @@ where
     }
 }
 
-/// `sfc serve` — the end-to-end demo: load an AOT model artifact, serve a
-/// stream of requests from the SynthImage test split, report accuracy,
-/// latency percentiles and throughput (EXPERIMENTS.md §E2E).
+/// `sfc serve` — the end-to-end demo: load a model (PJRT AOT artifact,
+/// or the pure-Rust engine stack with `--runner engine`), serve a stream
+/// of requests from the SynthImage test split, report accuracy, latency
+/// percentiles, throughput and workspace stats (EXPERIMENTS.md §E2E).
 pub fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
     let data_dir = opts.get("data-dir").map(|s| s.as_str()).unwrap_or("artifacts");
     let default_hlo = format!("{data_dir}/resnet18_b8.hlo.txt");
     let hlo = opts.get("hlo").map(|s| s.as_str()).unwrap_or(&default_hlo);
     let requests: usize = parse_opt(opts, "requests", 256)?;
     let batch: usize = parse_opt(opts, "batch", 8)?;
+    let runner = opts.get("runner").map(|s| s.as_str()).unwrap_or("pjrt");
 
-    println!("loading {hlo} (batch {batch}) ...");
     let (images, labels) = crate::exp::load_split(data_dir, "test", requests)?;
     let cfg = ServerConfig { batch_size: batch, queue_depth: 64, batch_timeout_ms: 2 };
-    let hlo_path = std::path::PathBuf::from(hlo);
     let dims = vec![batch, 3, 32, 32];
-    let server = Server::start(move || Executor::load(&hlo_path, &dims, 10), cfg)?;
+    let server = match runner {
+        "pjrt" => {
+            println!("loading {hlo} (batch {batch}) ...");
+            let hlo_path = std::path::PathBuf::from(hlo);
+            Server::start(move || Executor::load(&hlo_path, &dims, 10), cfg)?
+        }
+        "engine" => {
+            let model_name =
+                opts.get("model").map(|s| s.as_str()).unwrap_or("resnet18").to_string();
+            println!("loading {model_name} weights from {data_dir} (batch {batch}) ...");
+            let data_dir = data_dir.to_string();
+            Server::start(
+                move || {
+                    let m = crate::exp::load_model(&data_dir, &model_name)?;
+                    Ok(crate::runtime::EngineExecutor::from_model(m, dims, 10))
+                },
+                cfg,
+            )?
+        }
+        other => anyhow::bail!("unknown --runner '{other}' (expected pjrt|engine)"),
+    };
 
     let t0 = std::time::Instant::now();
     let sample = images.dims[1] * images.dims[2] * images.dims[3];
@@ -84,6 +104,11 @@ pub fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
     println!("  batches    : {}", server.batches_executed());
     let (hits, misses) = metrics::plan_cache_counters();
     println!("  plan cache : {hits} hits / {misses} misses");
+    println!(
+        "  workspace  : peak {:.1} KB · {} heap fallbacks (0 after warm-up = zero-alloc)",
+        server.ws_peak_bytes() as f64 / 1024.0,
+        server.ws_heap_allocs()
+    );
     server.shutdown();
     Ok(())
 }

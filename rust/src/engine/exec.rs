@@ -4,19 +4,31 @@
 //! The direct and tiled-bilinear (Winograd/SFC) executors live in
 //! [`crate::nn::conv`]; this module adds the remaining Table-1/Table-3
 //! backends so every catalog row is runnable through the same
-//! [`crate::engine::ConvPlan`] interface.
+//! [`crate::engine::ConvPlan`] interface. Each executor has an `*_into`
+//! entry point that runs entirely out of a caller [`Workspace`] — the
+//! historical allocating signatures remain as thin wrappers.
 
+use super::workspace::Workspace;
 use crate::algo::fft::fft_inplace;
 use crate::algo::ntt::{ntt_inplace, P};
+use crate::linalg::gemm::gemm_nt_f32;
 use crate::nn::tensor::Tensor;
-use crate::util::par::{par_for, par_map};
-use std::sync::Mutex;
+use crate::util::par::{num_threads, par_chunks_states};
 
-/// im2col + GEMM convolution: lower each image to a [OH·OW × IC·R·R]
-/// matrix and multiply by the [OC × IC·R·R] filter matrix. Supports any
-/// stride/pad; this is the classic GEMM-friendly baseline (cuDNN's
-/// `IMPLICIT_GEMM` ancestor).
-pub fn conv2d_im2col(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, pad: usize) -> Tensor {
+/// im2col + GEMM convolution into `out`: lower each image to a
+/// [OH·OW × IC·R·R] matrix (one workspace panel per worker) and reduce
+/// with the shared blocked GEMM directly into the image's output chunk.
+/// Supports any stride/pad; this is the classic GEMM-friendly baseline
+/// (cuDNN's `IMPLICIT_GEMM` ancestor).
+pub fn conv2d_im2col_into(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    pad: usize,
+    ws: &mut Workspace,
+    out: &mut Tensor,
+) {
     let (n, ic, h, wid) = x.dims4();
     let (oc, ic2, r, r2) = w.dims4();
     assert_eq!(ic, ic2, "channel mismatch");
@@ -24,14 +36,14 @@ pub fn conv2d_im2col(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, pad: u
     assert!(bias.is_empty() || bias.len() == oc);
     let oh = (h + 2 * pad - r) / stride + 1;
     let ow = (wid + 2 * pad - r) / stride + 1;
+    out.assert_dims(&[n, oc, oh, ow]);
     let k = ic * r * r;
     let npix = oh * ow;
-    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
-    let out_mutex = Mutex::new(&mut out);
-    par_for(n, |ni| {
+    let workers = num_threads().min(n).max(1);
+    let mut states: Vec<Vec<f32>> = (0..workers).map(|_| ws.take_f32(npix * k)).collect();
+    par_chunks_states(&mut out.data, oc * npix, &mut states, |col, ni, out_img| {
         // 1) lowering: col[p][kk], kk = (c·R + ky)·R + kx — the same
         //    layout as one row of the OC×(IC·R·R) weight matrix.
-        let mut col = vec![0f32; npix * k];
         for c in 0..ic {
             let plane = x.plane(ni, c);
             for oy in 0..oh {
@@ -56,42 +68,55 @@ pub fn conv2d_im2col(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, pad: u
                 }
             }
         }
-        // 2) GEMM: res[o][p] = Σ_kk W[o][kk]·col[p][kk]
-        let mut res = vec![0f32; oc * npix];
-        for o in 0..oc {
-            let wrow = &w.data[o * k..(o + 1) * k];
-            let b = if bias.is_empty() { 0.0 } else { bias[o] };
-            for p in 0..npix {
-                let crow = &col[p * k..(p + 1) * k];
-                let mut acc = 0f32;
-                for (a, c2) in wrow.iter().zip(crow) {
-                    acc += a * c2;
+        // 2) GEMM straight into the output: out[o][p] = Σ_kk W[o][kk]·col[p][kk]
+        gemm_nt_f32(oc, npix, k, &w.data, col, out_img);
+        if !bias.is_empty() {
+            for (o, &b) in bias.iter().enumerate() {
+                for v in &mut out_img[o * npix..(o + 1) * npix] {
+                    *v += b;
                 }
-                res[o * npix + p] = acc + b;
             }
         }
-        let mut guard = out_mutex.lock().unwrap();
-        for o in 0..oc {
-            guard.plane_mut(ni, o).copy_from_slice(&res[o * npix..(o + 1) * npix]);
-        }
     });
+    for col in states {
+        ws.give_f32(col);
+    }
+}
+
+/// im2col + GEMM convolution (allocating wrapper).
+pub fn conv2d_im2col(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, pad: usize) -> Tensor {
+    let (n, _, h, wid) = x.dims4();
+    let (oc, _, r, _) = w.dims4();
+    let oh = (h + 2 * pad - r) / stride + 1;
+    let ow = (wid + 2 * pad - r) / stride + 1;
+    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    let mut ws = Workspace::new();
+    conv2d_im2col_into(x, w, bias, stride, pad, &mut ws, &mut out);
     out
 }
 
 /// 2-D FFT over a row-major `sh`×`sw` complex grid (both powers of two).
-/// The inverse pass does NOT normalize; callers divide by `sh·sw`.
-fn fft2d(re: &mut [f64], im: &mut [f64], sh: usize, sw: usize, inverse: bool) {
+/// `cr`/`ci` are caller column scratch of `sh` elements each. The inverse
+/// pass does NOT normalize; callers divide by `sh·sw`.
+#[allow(clippy::too_many_arguments)]
+fn fft2d(
+    re: &mut [f64],
+    im: &mut [f64],
+    sh: usize,
+    sw: usize,
+    inverse: bool,
+    cr: &mut [f64],
+    ci: &mut [f64],
+) {
     for y in 0..sh {
         fft_inplace(&mut re[y * sw..(y + 1) * sw], &mut im[y * sw..(y + 1) * sw], inverse);
     }
-    let mut cr = vec![0f64; sh];
-    let mut ci = vec![0f64; sh];
     for xcol in 0..sw {
         for y in 0..sh {
             cr[y] = re[y * sw + xcol];
             ci[y] = im[y * sw + xcol];
         }
-        fft_inplace(&mut cr, &mut ci, inverse);
+        fft_inplace(&mut cr[..sh], &mut ci[..sh], inverse);
         for y in 0..sh {
             re[y * sw + xcol] = cr[y];
             im[y * sw + xcol] = ci[y];
@@ -99,10 +124,28 @@ fn fft2d(re: &mut [f64], im: &mut [f64], sh: usize, sw: usize, inverse: bool) {
     }
 }
 
-/// Float FFT convolution (stride 1): whole-image frequency-domain
-/// correlation with per-channel accumulation in the frequency domain —
-/// the classic related-work baseline (§2). Exact up to f64 roundoff.
-pub fn conv2d_fft(x: &Tensor, w: &Tensor, bias: &[f32], pad: usize) -> Tensor {
+/// Per-worker scratch for the whole-image FFT path.
+struct FftScratch {
+    xre: Vec<f64>,
+    xim: Vec<f64>,
+    acc_re: Vec<f64>,
+    acc_im: Vec<f64>,
+    cr: Vec<f64>,
+    ci: Vec<f64>,
+}
+
+/// Float FFT convolution (stride 1) into `out`: whole-image
+/// frequency-domain correlation with per-channel accumulation in the
+/// frequency domain — the classic related-work baseline (§2). Exact up
+/// to f64 roundoff.
+pub fn conv2d_fft_into(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    pad: usize,
+    ws: &mut Workspace,
+    out: &mut Tensor,
+) {
     let (n, ic, h, wid) = x.dims4();
     let (oc, ic2, r, r2) = w.dims4();
     assert_eq!(ic, ic2, "channel mismatch");
@@ -111,89 +154,124 @@ pub fn conv2d_fft(x: &Tensor, w: &Tensor, bias: &[f32], pad: usize) -> Tensor {
     let (hp, wp) = (h + 2 * pad, wid + 2 * pad);
     let oh = hp - r + 1;
     let ow = wp - r + 1;
+    out.assert_dims(&[n, oc, oh, ow]);
     let sh = (hp + r - 1).next_power_of_two();
     let sw = (wp + r - 1).next_power_of_two();
     let s2 = sh * sw;
 
     // Flipped-kernel FFTs, once for all images: [OC][IC] planes.
-    let mut kf_re = vec![0f64; oc * ic * s2];
-    let mut kf_im = vec![0f64; oc * ic * s2];
-    for o in 0..oc {
-        for c in 0..ic {
-            let base = (o * ic + c) * s2;
-            let wplane = w.plane(o, c);
-            for ky in 0..r {
-                for kx in 0..r {
-                    // correlation = convolution with the flipped filter
-                    kf_re[base + (r - 1 - ky) * sw + (r - 1 - kx)] = wplane[ky * r + kx] as f64;
+    let mut kf_re = ws.take_f64(oc * ic * s2);
+    let mut kf_im = ws.take_f64(oc * ic * s2);
+    {
+        let mut cr = ws.take_f64(sh);
+        let mut ci = ws.take_f64(sh);
+        for o in 0..oc {
+            for c in 0..ic {
+                let base = (o * ic + c) * s2;
+                let wplane = w.plane(o, c);
+                for ky in 0..r {
+                    for kx in 0..r {
+                        // correlation = convolution with the flipped filter
+                        kf_re[base + (r - 1 - ky) * sw + (r - 1 - kx)] = wplane[ky * r + kx] as f64;
+                    }
                 }
+                let kre = &mut kf_re[base..base + s2];
+                let kim = &mut kf_im[base..base + s2];
+                fft2d(kre, kim, sh, sw, false, &mut cr, &mut ci);
             }
-            fft2d(&mut kf_re[base..base + s2], &mut kf_im[base..base + s2], sh, sw, false);
         }
+        ws.give_f64(cr);
+        ws.give_f64(ci);
     }
 
-    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
-    let out_mutex = Mutex::new(&mut out);
-    par_for(n, |ni| {
-        let mut xre = vec![0f64; ic * s2];
-        let mut xim = vec![0f64; ic * s2];
+    let workers = num_threads().min(n).max(1);
+    let mut states: Vec<FftScratch> = (0..workers)
+        .map(|_| FftScratch {
+            xre: ws.take_f64(ic * s2),
+            xim: ws.take_f64(ic * s2),
+            acc_re: ws.take_f64(s2),
+            acc_im: ws.take_f64(s2),
+            cr: ws.take_f64(sh),
+            ci: ws.take_f64(sh),
+        })
+        .collect();
+    let inv_scale = 1.0 / s2 as f64;
+    par_chunks_states(&mut out.data, oc * oh * ow, &mut states, |st, ni, out_img| {
+        st.xre.fill(0.0);
+        st.xim.fill(0.0);
         for c in 0..ic {
             let base = c * s2;
             let plane = x.plane(ni, c);
             for yy in 0..h {
                 for xx in 0..wid {
-                    xre[base + (yy + pad) * sw + (xx + pad)] = plane[yy * wid + xx] as f64;
+                    st.xre[base + (yy + pad) * sw + (xx + pad)] = plane[yy * wid + xx] as f64;
                 }
             }
-            fft2d(&mut xre[base..base + s2], &mut xim[base..base + s2], sh, sw, false);
+            let xre = &mut st.xre[base..base + s2];
+            let xim = &mut st.xim[base..base + s2];
+            fft2d(xre, xim, sh, sw, false, &mut st.cr, &mut st.ci);
         }
-        let mut acc_re = vec![0f64; s2];
-        let mut acc_im = vec![0f64; s2];
-        let mut res = vec![0f32; oc * oh * ow];
-        let inv_scale = 1.0 / s2 as f64;
         for o in 0..oc {
-            acc_re.iter_mut().for_each(|v| *v = 0.0);
-            acc_im.iter_mut().for_each(|v| *v = 0.0);
+            st.acc_re.fill(0.0);
+            st.acc_im.fill(0.0);
             for c in 0..ic {
                 let xb = c * s2;
                 let kb = (o * ic + c) * s2;
                 for i in 0..s2 {
-                    let (ar, ai) = (xre[xb + i], xim[xb + i]);
+                    let (ar, ai) = (st.xre[xb + i], st.xim[xb + i]);
                     let (br, bi) = (kf_re[kb + i], kf_im[kb + i]);
-                    acc_re[i] += ar * br - ai * bi;
-                    acc_im[i] += ar * bi + ai * br;
+                    st.acc_re[i] += ar * br - ai * bi;
+                    st.acc_im[i] += ar * bi + ai * br;
                 }
             }
-            fft2d(&mut acc_re, &mut acc_im, sh, sw, true);
+            fft2d(&mut st.acc_re, &mut st.acc_im, sh, sw, true, &mut st.cr, &mut st.ci);
             let b = if bias.is_empty() { 0.0 } else { bias[o] };
+            let plane = &mut out_img[o * oh * ow..(o + 1) * oh * ow];
             for oy in 0..oh {
                 for ox in 0..ow {
-                    res[o * oh * ow + oy * ow + ox] =
-                        (acc_re[(oy + r - 1) * sw + (ox + r - 1)] * inv_scale) as f32 + b;
+                    plane[oy * ow + ox] =
+                        (st.acc_re[(oy + r - 1) * sw + (ox + r - 1)] * inv_scale) as f32 + b;
                 }
             }
         }
-        let mut guard = out_mutex.lock().unwrap();
-        for o in 0..oc {
-            guard.plane_mut(ni, o).copy_from_slice(&res[o * oh * ow..(o + 1) * oh * ow]);
-        }
     });
+    for st in states {
+        ws.give_f64(st.xre);
+        ws.give_f64(st.xim);
+        ws.give_f64(st.acc_re);
+        ws.give_f64(st.acc_im);
+        ws.give_f64(st.cr);
+        ws.give_f64(st.ci);
+    }
+    ws.give_f64(kf_re);
+    ws.give_f64(kf_im);
+}
+
+/// Float FFT convolution (allocating wrapper).
+pub fn conv2d_fft(x: &Tensor, w: &Tensor, bias: &[f32], pad: usize) -> Tensor {
+    let (n, _, h, wid) = x.dims4();
+    let (oc, _, r, _) = w.dims4();
+    let oh = h + 2 * pad - r + 1;
+    let ow = wid + 2 * pad - r + 1;
+    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    let mut ws = Workspace::new();
+    conv2d_fft_into(x, w, bias, pad, &mut ws, &mut out);
     out
 }
 
-/// 2-D NTT (row-column) over an `sh`×`sw` grid in F_p. The inverse pass
-/// of [`ntt_inplace`] normalizes per axis, so a full 2-D round trip is
-/// already scaled correctly.
-fn ntt2d(a: &mut [u64], sh: usize, sw: usize, inverse: bool) {
+/// 2-D NTT (row-column) over an `sh`×`sw` grid in F_p; `col` is caller
+/// column scratch of `sh` elements. The inverse pass of [`ntt_inplace`]
+/// normalizes per axis, so a full 2-D round trip is already scaled
+/// correctly.
+fn ntt2d(a: &mut [u64], sh: usize, sw: usize, inverse: bool, col: &mut [u64]) {
     for y in 0..sh {
         ntt_inplace(&mut a[y * sw..(y + 1) * sw], inverse);
     }
-    let mut col = vec![0u64; sh];
     for xcol in 0..sw {
         for y in 0..sh {
             col[y] = a[y * sw + xcol];
         }
-        ntt_inplace(&mut col, inverse);
+        ntt_inplace(&mut col[..sh], inverse);
         for y in 0..sh {
             a[y * sw + xcol] = col[y];
         }
@@ -214,11 +292,112 @@ fn ntt_decode(v: u64) -> i64 {
     }
 }
 
+/// Per-worker scratch for the whole-image NTT path.
+struct NttScratch {
+    xnt: Vec<u64>,
+    acc: Vec<u64>,
+    col: Vec<u64>,
+}
+
 /// Exact stride-1 integer correlation via 2-D NTT with frequency-domain
-/// channel accumulation: returns `[N][OC][OH][OW]` i64 accumulators,
-/// bit-identical to the nested-loop integer conv as long as every true
-/// output satisfies `|y| < p/2` (int8 operands: IC·R² ≤ ~30k). `xq` is
-/// NCHW, `wq` is OC×IC×R×R.
+/// channel accumulation, written into the `[N][OC][OH][OW]` i64
+/// accumulator slice `out`. Bit-identical to the nested-loop integer
+/// conv as long as every true output satisfies `|y| < p/2` (int8
+/// operands: IC·R² ≤ ~30k). `xq` is NCHW, `wq` is OC×IC×R×R.
+#[allow(clippy::too_many_arguments)]
+pub fn ntt_corr2d_i8_into(
+    xq: &[i8],
+    n: usize,
+    ic: usize,
+    h: usize,
+    w: usize,
+    wq: &[i8],
+    oc: usize,
+    r: usize,
+    pad: usize,
+    ws: &mut Workspace,
+    out: &mut [i64],
+) {
+    assert_eq!(xq.len(), n * ic * h * w);
+    assert_eq!(wq.len(), oc * ic * r * r);
+    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    let oh = hp - r + 1;
+    let ow = wp - r + 1;
+    assert_eq!(out.len(), n * oc * oh * ow, "accumulator slice size mismatch");
+    let sh = (hp + r - 1).next_power_of_two();
+    let sw = (wp + r - 1).next_power_of_two();
+    let s2 = sh * sw;
+
+    // Flipped-kernel NTTs, shared across images.
+    let mut knt = ws.take_u64(oc * ic * s2);
+    {
+        let mut col = ws.take_u64(sh);
+        for o in 0..oc {
+            for c in 0..ic {
+                let base = (o * ic + c) * s2;
+                let wplane = &wq[(o * ic + c) * r * r..(o * ic + c + 1) * r * r];
+                for ky in 0..r {
+                    for kx in 0..r {
+                        knt[base + (r - 1 - ky) * sw + (r - 1 - kx)] =
+                            ntt_encode(wplane[ky * r + kx] as i64);
+                    }
+                }
+                ntt2d(&mut knt[base..base + s2], sh, sw, false, &mut col);
+            }
+        }
+        ws.give_u64(col);
+    }
+
+    let workers = num_threads().min(n).max(1);
+    let mut states: Vec<NttScratch> = (0..workers)
+        .map(|_| NttScratch {
+            xnt: ws.take_u64(ic * s2),
+            acc: ws.take_u64(s2),
+            col: ws.take_u64(sh),
+        })
+        .collect();
+    par_chunks_states(out, oc * oh * ow, &mut states, |st, ni, img_out| {
+        st.xnt.fill(0);
+        for c in 0..ic {
+            let base = c * s2;
+            let plane = &xq[(ni * ic + c) * h * w..(ni * ic + c + 1) * h * w];
+            for yy in 0..h {
+                for xx in 0..w {
+                    st.xnt[base + (yy + pad) * sw + (xx + pad)] =
+                        ntt_encode(plane[yy * w + xx] as i64);
+                }
+            }
+            ntt2d(&mut st.xnt[base..base + s2], sh, sw, false, &mut st.col);
+        }
+        for o in 0..oc {
+            st.acc.fill(0);
+            for c in 0..ic {
+                let xb = c * s2;
+                let kb = (o * ic + c) * s2;
+                for i in 0..s2 {
+                    // operands < p < 2^30 ⇒ the product fits u64
+                    st.acc[i] = (st.acc[i] + st.xnt[xb + i] * knt[kb + i] % P) % P;
+                }
+            }
+            ntt2d(&mut st.acc, sh, sw, true, &mut st.col);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    img_out[o * oh * ow + oy * ow + ox] =
+                        ntt_decode(st.acc[(oy + r - 1) * sw + (ox + r - 1)]);
+                }
+            }
+        }
+    });
+    for st in states {
+        ws.give_u64(st.xnt);
+        ws.give_u64(st.acc);
+        ws.give_u64(st.col);
+    }
+    ws.give_u64(knt);
+}
+
+/// Exact stride-1 integer correlation via 2-D NTT (allocating wrapper):
+/// returns `[N][OC][OH][OW]` i64 accumulators.
 #[allow(clippy::too_many_arguments)]
 pub fn ntt_corr2d_i8(
     xq: &[i8],
@@ -231,84 +410,35 @@ pub fn ntt_corr2d_i8(
     r: usize,
     pad: usize,
 ) -> Vec<i64> {
-    assert_eq!(xq.len(), n * ic * h * w);
-    assert_eq!(wq.len(), oc * ic * r * r);
-    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
-    let oh = hp - r + 1;
-    let ow = wp - r + 1;
-    let sh = (hp + r - 1).next_power_of_two();
-    let sw = (wp + r - 1).next_power_of_two();
-    let s2 = sh * sw;
-
-    // Flipped-kernel NTTs, shared across images.
-    let mut knt = vec![0u64; oc * ic * s2];
-    for o in 0..oc {
-        for c in 0..ic {
-            let base = (o * ic + c) * s2;
-            let wplane = &wq[(o * ic + c) * r * r..(o * ic + c + 1) * r * r];
-            for ky in 0..r {
-                for kx in 0..r {
-                    knt[base + (r - 1 - ky) * sw + (r - 1 - kx)] =
-                        ntt_encode(wplane[ky * r + kx] as i64);
-                }
-            }
-            ntt2d(&mut knt[base..base + s2], sh, sw, false);
-        }
-    }
-
-    let per_image: Vec<Vec<i64>> = par_map(n, |ni| {
-        let mut xnt = vec![0u64; ic * s2];
-        for c in 0..ic {
-            let base = c * s2;
-            let plane = &xq[(ni * ic + c) * h * w..(ni * ic + c + 1) * h * w];
-            for yy in 0..h {
-                for xx in 0..w {
-                    xnt[base + (yy + pad) * sw + (xx + pad)] =
-                        ntt_encode(plane[yy * w + xx] as i64);
-                }
-            }
-            ntt2d(&mut xnt[base..base + s2], sh, sw, false);
-        }
-        let mut img_out = vec![0i64; oc * oh * ow];
-        let mut acc = vec![0u64; s2];
-        for o in 0..oc {
-            acc.iter_mut().for_each(|v| *v = 0);
-            for c in 0..ic {
-                let xb = c * s2;
-                let kb = (o * ic + c) * s2;
-                for i in 0..s2 {
-                    // operands < p < 2^30 ⇒ the product fits u64
-                    acc[i] = (acc[i] + xnt[xb + i] * knt[kb + i] % P) % P;
-                }
-            }
-            ntt2d(&mut acc, sh, sw, true);
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    img_out[o * oh * ow + oy * ow + ox] =
-                        ntt_decode(acc[(oy + r - 1) * sw + (ox + r - 1)]);
-                }
-            }
-        }
-        img_out
-    });
-
-    let mut out = Vec::with_capacity(n * oc * oh * ow);
-    for img in per_image {
-        out.extend_from_slice(&img);
-    }
+    let oh = h + 2 * pad - r + 1;
+    let ow = w + 2 * pad - r + 1;
+    let mut out = vec![0i64; n * oc * oh * ow];
+    let mut ws = Workspace::new();
+    ntt_corr2d_i8_into(xq, n, ic, h, w, wq, oc, r, pad, &mut ws, &mut out);
     out
 }
 
-/// Float-entry NTT convolution (stride 1): per-tensor symmetric int8
-/// quantization of both operands, exact integer correlation through the
-/// NTT, dequantize. This is the Table-3 NTT accelerator's datapath — the
-/// ⊙ operands carry full mod-p width regardless of the 8-bit inputs,
-/// which is exactly the paper's criticism of NTT under low precision.
-pub fn conv2d_ntt_int8(x: &Tensor, w: &Tensor, bias: &[f32], pad: usize) -> Tensor {
+/// Float-entry NTT convolution (stride 1) into `out`: per-tensor
+/// symmetric int8 quantization of both operands, exact integer
+/// correlation through the NTT, dequantize. This is the Table-3 NTT
+/// accelerator's datapath — the ⊙ operands carry full mod-p word width
+/// regardless of the 8-bit inputs, which is exactly the paper's
+/// criticism of NTT under low precision.
+pub fn conv2d_ntt_int8_into(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    pad: usize,
+    ws: &mut Workspace,
+    out: &mut Tensor,
+) {
     let (n, ic, h, wid) = x.dims4();
     let (oc, ic2, r, r2) = w.dims4();
     assert_eq!(ic, ic2, "channel mismatch");
     assert_eq!(r, r2, "square kernels only");
+    let oh = h + 2 * pad - r + 1;
+    let ow = wid + 2 * pad - r + 1;
+    out.assert_dims(&[n, oc, oh, ow]);
     let sx = {
         let m = x.max_abs();
         if m > 0.0 {
@@ -325,12 +455,16 @@ pub fn conv2d_ntt_int8(x: &Tensor, w: &Tensor, bias: &[f32], pad: usize) -> Tens
             1.0
         }
     };
-    let xq: Vec<i8> = x.data.iter().map(|&v| ((v / sx).round() as i32).clamp(-127, 127) as i8).collect();
-    let wq: Vec<i8> = w.data.iter().map(|&v| ((v / sw_).round() as i32).clamp(-127, 127) as i8).collect();
-    let acc = ntt_corr2d_i8(&xq, n, ic, h, wid, &wq, oc, r, pad);
-    let oh = h + 2 * pad - r + 1;
-    let ow = wid + 2 * pad - r + 1;
-    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    let mut xq = ws.take_i8(x.data.len());
+    for (q, &v) in xq.iter_mut().zip(&x.data) {
+        *q = ((v / sx).round() as i32).clamp(-127, 127) as i8;
+    }
+    let mut wq = ws.take_i8(w.data.len());
+    for (q, &v) in wq.iter_mut().zip(&w.data) {
+        *q = ((v / sw_).round() as i32).clamp(-127, 127) as i8;
+    }
+    let mut acc = ws.take_i64(n * oc * oh * ow);
+    ntt_corr2d_i8_into(&xq, n, ic, h, wid, &wq, oc, r, pad, ws, &mut acc);
     let deq = sx * sw_;
     for ni in 0..n {
         for o in 0..oc {
@@ -342,6 +476,20 @@ pub fn conv2d_ntt_int8(x: &Tensor, w: &Tensor, bias: &[f32], pad: usize) -> Tens
             }
         }
     }
+    ws.give_i8(xq);
+    ws.give_i8(wq);
+    ws.give_i64(acc);
+}
+
+/// Float-entry NTT convolution (allocating wrapper).
+pub fn conv2d_ntt_int8(x: &Tensor, w: &Tensor, bias: &[f32], pad: usize) -> Tensor {
+    let (n, _, h, wid) = x.dims4();
+    let (oc, _, r, _) = w.dims4();
+    let oh = h + 2 * pad - r + 1;
+    let ow = wid + 2 * pad - r + 1;
+    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    let mut ws = Workspace::new();
+    conv2d_ntt_int8_into(x, w, bias, pad, &mut ws, &mut out);
     out
 }
 

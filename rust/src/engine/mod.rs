@@ -22,15 +22,17 @@ pub mod cache;
 pub mod desc;
 pub mod exec;
 pub mod select;
+pub mod workspace;
 
 pub use cache::{global as global_plan_cache, PlanCache, PlanKey};
 pub use desc::{ConvDesc, QuantSpec};
 pub use select::{default_selector, AutotuneCfg, Policy, Selector, TuneEntry};
+pub use workspace::Workspace;
 
 use crate::algo::ntt::ntt_odot_bits;
 use crate::algo::registry::{catalog, AlgoKind, AlgoSpec};
 use crate::bops::{direct_bops, fast_bops, mul_bops};
-use crate::nn::conv::{conv2d_direct, conv2d_fast, FastConvPlan};
+use crate::nn::conv::{conv2d_direct_into, conv2d_fast_into, FastConvPlan};
 use crate::nn::tensor::Tensor;
 use crate::quant::Granularity;
 use anyhow::{bail, Result};
@@ -73,13 +75,97 @@ impl ConvPlan {
 
     /// Execute the float path on an NCHW batch. Kernels read the actual
     /// tensor dims; the descriptor supplies stride/pad geometry.
+    /// Convenience wrapper over [`ConvPlan::run_with`] with a throwaway
+    /// workspace — hot paths should keep a [`Workspace`] alive instead.
     pub fn run(&self, x: &Tensor, w: &Tensor, bias: &[f32]) -> Tensor {
+        let mut ws = Workspace::new();
+        self.run_with(x, w, bias, &mut ws)
+    }
+
+    /// Execute out of a caller workspace, allocating only the output.
+    pub fn run_with(&self, x: &Tensor, w: &Tensor, bias: &[f32], ws: &mut Workspace) -> Tensor {
+        let mut out = Tensor::zeros(&self.out_dims(x, w));
+        self.run_into(x, w, bias, ws, &mut out);
+        out
+    }
+
+    /// Output shape for an actual input/weight pair (kernels read tensor
+    /// dims; the descriptor supplies stride/pad geometry).
+    pub fn out_dims(&self, x: &Tensor, w: &Tensor) -> Vec<usize> {
+        let (n, _, h, wid) = x.dims4();
+        let (oc, _, r, _) = w.dims4();
+        let (stride, pad) = match self.kernel {
+            // whole-image / tiled kernels are stride-1 by construction
+            PlanKernel::Direct | PlanKernel::Im2col => (self.desc.stride, self.desc.pad),
+            _ => (1, self.desc.pad),
+        };
+        let oh = (h + 2 * pad - r) / stride + 1;
+        let ow = (wid + 2 * pad - r) / stride + 1;
+        vec![n, oc, oh, ow]
+    }
+
+    /// The zero-alloc entry point: execute out of `ws` straight into
+    /// `out` (shape must equal [`ConvPlan::out_dims`]). All five kernels
+    /// route through here; results are bit-identical to [`ConvPlan::run`]
+    /// whether `ws` is fresh or reused across calls and shapes.
+    pub fn run_into(
+        &self,
+        x: &Tensor,
+        w: &Tensor,
+        bias: &[f32],
+        ws: &mut Workspace,
+        out: &mut Tensor,
+    ) {
         match &self.kernel {
-            PlanKernel::Direct => conv2d_direct(x, w, bias, self.desc.stride, self.desc.pad),
-            PlanKernel::Im2col => exec::conv2d_im2col(x, w, bias, self.desc.stride, self.desc.pad),
-            PlanKernel::Fast(p) => conv2d_fast(x, w, bias, p, self.desc.pad),
-            PlanKernel::Fft => exec::conv2d_fft(x, w, bias, self.desc.pad),
-            PlanKernel::Ntt => exec::conv2d_ntt_int8(x, w, bias, self.desc.pad),
+            PlanKernel::Direct => {
+                conv2d_direct_into(x, w, bias, self.desc.stride, self.desc.pad, out)
+            }
+            PlanKernel::Im2col => {
+                exec::conv2d_im2col_into(x, w, bias, self.desc.stride, self.desc.pad, ws, out)
+            }
+            PlanKernel::Fast(p) => conv2d_fast_into(x, w, bias, p, self.desc.pad, ws, out),
+            PlanKernel::Fft => exec::conv2d_fft_into(x, w, bias, self.desc.pad, ws, out),
+            PlanKernel::Ntt => exec::conv2d_ntt_int8_into(x, w, bias, self.desc.pad, ws, out),
+        }
+    }
+
+    /// Scratch bytes one `run_into` call checks out of its workspace for
+    /// the planned descriptor (single-image parallelism accounted at the
+    /// configured thread count). Callers can pre-warm with
+    /// [`Workspace::with_capacity`].
+    pub fn workspace_bytes(&self) -> usize {
+        let d = &self.desc;
+        let (oh, ow) = d.out_hw();
+        let workers = crate::util::par::num_threads().min(d.batch.max(1));
+        match &self.kernel {
+            // direct accumulates in the output planes themselves
+            PlanKernel::Direct => 0,
+            PlanKernel::Im2col => workers * oh * ow * d.ic * d.r * d.r * 4,
+            PlanKernel::Fast(p) => {
+                let (m, l, t) = (p.m(), p.l(), p.t());
+                let tiles = oh.div_ceil(m) * ow.div_ceil(m);
+                let tt = t * t;
+                let shared = tt * d.oc * d.ic + t * d.r + tt;
+                let per_worker =
+                    tt * tiles * (d.ic + d.oc) + l * l + t * l + 2 * tt + m * t + m * m;
+                (shared + workers * per_worker) * 4
+            }
+            PlanKernel::Fft => {
+                let (sh, sw) = padded_pow2(d);
+                let s2 = sh * sw;
+                let shared = 2 * d.oc * d.ic * s2;
+                let per_worker = 2 * d.ic * s2 + 2 * s2 + 2 * sh;
+                (shared + workers * per_worker) * 8
+            }
+            PlanKernel::Ntt => {
+                let (sh, sw) = padded_pow2(d);
+                let s2 = sh * sw;
+                let shared = d.oc * d.ic * s2 + sh; // knt + column scratch
+                let per_worker = d.ic * s2 + s2 + sh;
+                let quant = d.batch * d.ic * d.h * d.w + d.oc * d.ic * d.r * d.r; // i8
+                let acc = d.batch * d.oc * oh * ow; // i64
+                (shared + workers * per_worker) * 8 + quant + acc * 8
+            }
         }
     }
 }
@@ -105,7 +191,9 @@ pub trait ConvEngine: Send + Sync {
     /// which [`ConvEngine::supports`] returns true.
     fn plan(&self, d: &ConvDesc) -> Result<ConvPlan>;
 
-    /// Scratch memory the executor allocates for one batch, in bytes.
+    /// Scratch bytes the executor checks out of its [`Workspace`] for
+    /// one batch. Implementations delegate to
+    /// [`ConvPlan::workspace_bytes`] so sizing has one source of truth.
     fn workspace_bytes(&self, d: &ConvDesc) -> usize;
 
     /// Analytic cost in bit-operations (the §6 BOPs model) for the whole
@@ -140,8 +228,7 @@ impl ConvEngine for DirectEngine {
     }
 
     fn workspace_bytes(&self, d: &ConvDesc) -> usize {
-        let (oh, ow) = d.out_hw();
-        oh * ow * 4 // one per-job output plane
+        ConvPlan::direct(*d).workspace_bytes() // 0: runs in the output planes
     }
 
     fn cost_model(&self, d: &ConvDesc) -> f64 {
@@ -172,8 +259,7 @@ impl ConvEngine for Im2colEngine {
     }
 
     fn workspace_bytes(&self, d: &ConvDesc) -> usize {
-        let (oh, ow) = d.out_hw();
-        (oh * ow * d.ic * d.r * d.r + d.oc * oh * ow) * 4
+        ConvPlan { engine: self.name(), desc: *d, kernel: PlanKernel::Im2col }.workspace_bytes()
     }
 
     fn cost_model(&self, d: &ConvDesc) -> f64 {
@@ -235,13 +321,8 @@ impl ConvEngine for BilinearEngine {
     }
 
     fn workspace_bytes(&self, d: &ConvDesc) -> usize {
-        let p = self.fast_plan();
-        let (m, t) = (p.m(), p.t());
-        let (oh, ow) = d.out_hw();
-        let tiles = oh.div_ceil(m) * ow.div_ceil(m);
-        let tt = t * t;
-        // V + P blocks per image, plus the transformed weights
-        (tt * tiles * (d.ic + d.oc) + tt * d.oc * d.ic) * 4
+        ConvPlan { engine: self.name(), desc: *d, kernel: PlanKernel::Fast(self.fast_plan()) }
+            .workspace_bytes()
     }
 
     fn cost_model(&self, d: &ConvDesc) -> f64 {
@@ -288,9 +369,7 @@ impl ConvEngine for FftEngine {
     }
 
     fn workspace_bytes(&self, d: &ConvDesc) -> usize {
-        let (sh, sw) = padded_pow2(d);
-        let s2 = sh * sw;
-        (d.oc * d.ic + d.ic + 2) * s2 * 16 // complex f64 planes
+        ConvPlan { engine: self.name(), desc: *d, kernel: PlanKernel::Fft }.workspace_bytes()
     }
 
     fn cost_model(&self, d: &ConvDesc) -> f64 {
@@ -353,9 +432,7 @@ impl ConvEngine for NttEngine {
     }
 
     fn workspace_bytes(&self, d: &ConvDesc) -> usize {
-        let (sh, sw) = padded_pow2(d);
-        let s2 = sh * sw;
-        (d.oc * d.ic + d.ic + 1) * s2 * 8 // u64 planes
+        ConvPlan { engine: self.name(), desc: *d, kernel: PlanKernel::Ntt }.workspace_bytes()
     }
 
     fn cost_model(&self, d: &ConvDesc) -> f64 {
@@ -457,7 +534,37 @@ mod tests {
             let plan = e.plan(&d).unwrap();
             let y = plan.run(&x, &w, &[]);
             assert_eq!(y.dims, vec![1, 3, 10, 10], "{}", e.name());
-            assert!(e.workspace_bytes(&d) > 0, "{}", e.name());
+            if e.name() == "direct" {
+                assert_eq!(e.workspace_bytes(&d), 0, "direct runs in the output planes");
+            } else {
+                assert!(e.workspace_bytes(&d) > 0, "{}", e.name());
+            }
+        }
+    }
+
+    #[test]
+    fn run_into_reuses_a_workspace_bit_identically() {
+        use crate::util::Pcg32;
+        let mut rng = Pcg32::seeded(9);
+        let d = ConvDesc::new(1, 3, 4, 12, 12, 3, 1, 1);
+        let mut x = Tensor::zeros(&[1, 3, 12, 12]);
+        rng.fill_gaussian(&mut x.data, 1.0);
+        let mut w = Tensor::zeros(&[4, 3, 3, 3]);
+        rng.fill_gaussian(&mut w.data, 0.3);
+        for e in all_engines() {
+            if !e.supports(&d) {
+                continue;
+            }
+            let plan = e.plan(&d).unwrap();
+            let want = plan.run(&x, &w, &[]);
+            let mut ws = Workspace::new();
+            let mut out = Tensor::zeros(&plan.out_dims(&x, &w));
+            plan.run_into(&x, &w, &[], &mut ws, &mut out);
+            assert_eq!(out.data, want.data, "{}: fresh workspace", e.name());
+            out.data.fill(f32::NAN);
+            plan.run_into(&x, &w, &[], &mut ws, &mut out);
+            assert_eq!(out.data, want.data, "{}: reused workspace", e.name());
+            assert_eq!(ws.in_use_bytes(), 0, "{}: all buffers returned", e.name());
         }
     }
 }

@@ -203,9 +203,12 @@ impl Selector {
             } else {
                 None
             };
-            let run_once = || match &qexec {
-                Some(q) => q.forward(&x),
-                None => plan.run(&x, &w, &[]),
+            // Measure the steady-state (reused-workspace) datapath, like
+            // a serving worker would run it.
+            let mut ws = super::Workspace::new();
+            let mut run_once = || match &qexec {
+                Some(q) => q.forward_with(&x, &mut ws),
+                None => plan.run_with(&x, &w, &[], &mut ws),
             };
             for _ in 0..cfg.warmup {
                 std::hint::black_box(run_once());

@@ -1,0 +1,265 @@
+//! The workspace arena: reusable scratch memory for conv executors.
+//!
+//! cuDNN-style contract: a plan *reports* its scratch need
+//! ([`crate::engine::ConvEngine::workspace_bytes`],
+//! [`crate::engine::ConvPlan::workspace_bytes`]) and the caller *owns*
+//! the memory, checking buffers out of a [`Workspace`] it keeps alive
+//! across calls. Executors take typed buffers (`take_f32` …), use them,
+//! and give them back (`give_f32` …); the arena pools returned buffers
+//! so a steady-state serving loop performs **zero workspace heap
+//! allocations** — every checkout is satisfied from the pool after the
+//! first call. (Parallel dispatch still makes O(workers) bookkeeping
+//! allocations per call in `par_chunks_states`; the arena counters
+//! track the data buffers, which dominate by orders of magnitude.)
+//!
+//! The arena is single-threaded by design (`&mut self` everywhere).
+//! Parallel executors check out one buffer set per worker *before*
+//! entering `std::thread::scope` and return them after — see
+//! [`crate::util::par::par_chunks_states`].
+//!
+//! Accounting: `in_use_bytes`/`peak_bytes` track checked-out bytes,
+//! `heap_allocs` counts pool misses. Both are mirrored into the
+//! process-wide counters here ([`global_counters`]), which the serving
+//! layer re-exports via `coordinator::metrics::workspace_counters` to
+//! assert the zero-alloc property end to end.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide high-water mark of bytes simultaneously checked out of
+/// any [`Workspace`] in this process.
+static GLOBAL_PEAK_BYTES: AtomicU64 = AtomicU64::new(0);
+/// Process-wide count of checkouts that fell back to a heap allocation.
+static GLOBAL_HEAP_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// (peak bytes, heap-fallback allocations) across every workspace in
+/// the process.
+pub fn global_counters() -> (u64, u64) {
+    (GLOBAL_PEAK_BYTES.load(Ordering::Relaxed), GLOBAL_HEAP_ALLOCS.load(Ordering::Relaxed))
+}
+
+/// Typed free-list of returned buffers.
+struct Pool<T> {
+    free: Vec<Vec<T>>,
+}
+
+impl<T: Clone + Default> Pool<T> {
+    fn new() -> Pool<T> {
+        Pool { free: Vec::new() }
+    }
+
+    /// Best-fit checkout: the smallest pooled buffer with enough
+    /// capacity, or a fresh allocation. Returns (buffer, pool_missed).
+    /// The buffer comes back zeroed (`T::default()`) at exactly `len` —
+    /// a deliberate memset per checkout so padding-dependent consumers
+    /// (frequency-domain kernel planes) can never read stale data; the
+    /// cost is small against the compute the buffers feed, and callers
+    /// that fully overwrite could grow a non-zeroing variant later.
+    fn take(&mut self, len: usize) -> (Vec<T>, bool) {
+        let mut best: Option<usize> = None;
+        let mut best_cap = usize::MAX;
+        for (i, v) in self.free.iter().enumerate() {
+            let cap = v.capacity();
+            if cap >= len && cap < best_cap {
+                best = Some(i);
+                best_cap = cap;
+            }
+        }
+        match best {
+            Some(i) => {
+                let mut v = self.free.swap_remove(i);
+                v.clear();
+                v.resize(len, T::default());
+                (v, false)
+            }
+            None => (vec![T::default(); len], true),
+        }
+    }
+
+    fn give(&mut self, v: Vec<T>) {
+        self.free.push(v);
+    }
+
+    fn pooled_bytes(&self) -> usize {
+        self.free.iter().map(|v| v.capacity() * std::mem::size_of::<T>()).sum()
+    }
+}
+
+/// A reusable scratch-memory arena for conv execution.
+pub struct Workspace {
+    f32s: Pool<f32>,
+    f64s: Pool<f64>,
+    i8s: Pool<i8>,
+    i32s: Pool<i32>,
+    i64s: Pool<i64>,
+    u64s: Pool<u64>,
+    in_use_bytes: usize,
+    peak_bytes: usize,
+    heap_allocs: u64,
+}
+
+macro_rules! typed_pool {
+    ($take:ident, $give:ident, $field:ident, $ty:ty) => {
+        /// Check out a zeroed buffer of `len` elements.
+        pub fn $take(&mut self, len: usize) -> Vec<$ty> {
+            let (v, missed) = self.$field.take(len);
+            self.account_take(v.len() * std::mem::size_of::<$ty>(), missed);
+            v
+        }
+
+        /// Return a buffer to the pool for reuse.
+        pub fn $give(&mut self, v: Vec<$ty>) {
+            self.in_use_bytes =
+                self.in_use_bytes.saturating_sub(v.len() * std::mem::size_of::<$ty>());
+            self.$field.give(v);
+        }
+    };
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace {
+            f32s: Pool::new(),
+            f64s: Pool::new(),
+            i8s: Pool::new(),
+            i32s: Pool::new(),
+            i64s: Pool::new(),
+            u64s: Pool::new(),
+            in_use_bytes: 0,
+            peak_bytes: 0,
+            heap_allocs: 0,
+        }
+    }
+
+    /// Arena pre-warmed with one pooled f32 buffer of `bytes` — a coarse
+    /// way to reserve address space up front (e.g. from a plan's
+    /// [`crate::engine::ConvPlan::workspace_bytes`] report). Pools are
+    /// typed and executors check out several buffers, so the first call
+    /// still populates the pool with its exact working set; the real
+    /// zero-alloc guarantee comes from reusing the workspace across
+    /// calls, not from this pre-warm. The warm-up allocation is counted
+    /// (it happens before steady state).
+    pub fn with_capacity(bytes: usize) -> Workspace {
+        let mut ws = Workspace::new();
+        let v = ws.take_f32(bytes.div_ceil(std::mem::size_of::<f32>()));
+        ws.give_f32(v);
+        ws
+    }
+
+    typed_pool!(take_f32, give_f32, f32s, f32);
+    typed_pool!(take_f64, give_f64, f64s, f64);
+    typed_pool!(take_i8, give_i8, i8s, i8);
+    typed_pool!(take_i32, give_i32, i32s, i32);
+    typed_pool!(take_i64, give_i64, i64s, i64);
+    typed_pool!(take_u64, give_u64, u64s, u64);
+
+    fn account_take(&mut self, bytes: usize, missed: bool) {
+        if missed {
+            self.heap_allocs += 1;
+            GLOBAL_HEAP_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        self.in_use_bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.in_use_bytes);
+        GLOBAL_PEAK_BYTES.fetch_max(self.in_use_bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Bytes currently checked out.
+    pub fn in_use_bytes(&self) -> usize {
+        self.in_use_bytes
+    }
+
+    /// High-water mark of simultaneously checked-out bytes.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    /// Checkouts that missed the pool and hit the heap. Stops growing
+    /// once the arena has seen every buffer shape of its workload.
+    pub fn heap_allocs(&self) -> u64 {
+        self.heap_allocs
+    }
+
+    /// Bytes parked in the pools (capacity retained for reuse).
+    pub fn pooled_bytes(&self) -> usize {
+        self.f32s.pooled_bytes()
+            + self.f64s.pooled_bytes()
+            + self.i8s.pooled_bytes()
+            + self.i32s.pooled_bytes()
+            + self.i64s.pooled_bytes()
+            + self.u64s.pooled_bytes()
+    }
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Workspace::new()
+    }
+}
+
+impl std::fmt::Debug for Workspace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Workspace")
+            .field("in_use_bytes", &self.in_use_bytes)
+            .field("peak_bytes", &self.peak_bytes)
+            .field("heap_allocs", &self.heap_allocs)
+            .field("pooled_bytes", &self.pooled_bytes())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_sized() {
+        let mut ws = Workspace::new();
+        let mut v = ws.take_f32(10);
+        assert_eq!(v, vec![0f32; 10]);
+        v.iter_mut().for_each(|x| *x = 3.0);
+        ws.give_f32(v);
+        let v2 = ws.take_f32(8);
+        assert_eq!(v2, vec![0f32; 8], "reused buffers are re-zeroed");
+    }
+
+    #[test]
+    fn pool_reuse_stops_allocating() {
+        let mut ws = Workspace::new();
+        for round in 0..3 {
+            let a = ws.take_f32(100);
+            let b = ws.take_f32(50);
+            let c = ws.take_i8(64);
+            ws.give_f32(a);
+            ws.give_f32(b);
+            ws.give_i8(c);
+            if round == 0 {
+                assert_eq!(ws.heap_allocs(), 3);
+            }
+        }
+        assert_eq!(ws.heap_allocs(), 3, "steady state must be alloc-free");
+        assert_eq!(ws.in_use_bytes(), 0);
+        assert!(ws.peak_bytes() >= 150 * 4 + 64);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_adequate() {
+        let mut ws = Workspace::new();
+        let small = ws.take_f32(10);
+        let big = ws.take_f32(1000);
+        ws.give_f32(small);
+        ws.give_f32(big);
+        let v = ws.take_f32(5);
+        assert!(v.capacity() < 1000, "small request must not consume the big buffer");
+        let v2 = ws.take_f32(900);
+        assert!(v2.capacity() >= 1000);
+        assert_eq!(ws.heap_allocs(), 2);
+    }
+
+    #[test]
+    fn with_capacity_prewarms() {
+        let mut ws = Workspace::with_capacity(4096);
+        let before = ws.heap_allocs();
+        let v = ws.take_f32(1024);
+        assert_eq!(ws.heap_allocs(), before, "prewarmed bytes must satisfy the take");
+        ws.give_f32(v);
+    }
+}

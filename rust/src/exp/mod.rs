@@ -7,6 +7,8 @@
 //! images (paper: 500), evaluation 256 images (paper: 50k val set);
 //! override with SFC_CALIB_N / SFC_EVAL_N.
 
+pub mod perf;
+
 use crate::data::Dataset;
 use crate::engine::{default_selector, ConvDesc, QuantSpec};
 use crate::nn::model::{model_conv_shapes, resnet18_cfg, resnet34_cfg, resnet50_cfg, resnet_from_weights, ResNetCfg};

@@ -1,0 +1,233 @@
+//! `sfc bench` — the conv perf-snapshot harness.
+//!
+//! Measures every supporting engine on a fixed set of ResNet/VGG-scale
+//! layer shapes through the steady-state datapath (`run_into` with a
+//! reused [`Workspace`]), prints a table and — with `--json` — writes a
+//! machine-readable `BENCH_conv.json` so the perf trajectory of the
+//! repo is tracked across PRs: per shape and engine, ns/call, GFLOP/s
+//! (2·MACs / time) and the workspace heap-fallback count during the
+//! timed window (0 = the zero-alloc property held).
+
+use crate::engine::{default_selector, ConvDesc, QuantSpec, Workspace};
+use crate::nn::Tensor;
+use crate::quant::qconv::{collect_act_maxima, QCalib, QConvLayer};
+use crate::util::Pcg32;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// The engines every snapshot covers (where they support the shape).
+const ENGINES: [&str; 7] =
+    ["direct", "im2col-gemm", "Wino(4x4,3x3)", "SFC-6(6x6,3x3)", "SFC-6(7x7,3x3)", "FFT", "NTT"];
+
+/// One measured (shape, engine) cell.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    pub shape: String,
+    pub engine: String,
+    pub ns_per_call: f64,
+    pub gflops: f64,
+    pub workspace_bytes: usize,
+    /// heap fallbacks observed during the timed window (0 = zero-alloc)
+    pub ws_heap_allocs_steady: u64,
+}
+
+/// Benchmark configuration (CLI flags).
+pub struct BenchCfg {
+    pub iters: usize,
+    pub warmup: usize,
+    /// restrict to the smallest shape + float engines (CI smoke)
+    pub quick: bool,
+}
+
+fn shapes(quick: bool) -> Vec<(&'static str, ConvDesc)> {
+    let mut v = vec![("28x28x32->32", ConvDesc::new(1, 32, 32, 28, 28, 3, 1, 1))];
+    if !quick {
+        v.push(("14x14x128->128", ConvDesc::new(1, 128, 128, 14, 14, 3, 1, 1)));
+        v.push(("56x56x64->64", ConvDesc::new(1, 64, 64, 56, 56, 3, 1, 1)));
+    }
+    v
+}
+
+fn median_ns(samples: &mut Vec<f64>) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// Run the snapshot; returns every measured row.
+pub fn run_bench(cfg: &BenchCfg) -> Result<Vec<BenchRow>> {
+    let sel = default_selector();
+    let mut rng = Pcg32::seeded(42);
+    let mut rows = Vec::new();
+    for (label, desc) in shapes(cfg.quick) {
+        let mut x = Tensor::zeros(&[desc.batch, desc.ic, desc.h, desc.w]);
+        rng.fill_gaussian(&mut x.data, 1.0);
+        let mut w = Tensor::zeros(&[desc.oc, desc.ic, desc.r, desc.r]);
+        rng.fill_gaussian(&mut w.data, 0.2);
+        let flops = 2.0 * desc.macs() as f64;
+        println!("\n=== {label} ({:.1} MMACs) ===", desc.macs() as f64 / 1e6);
+        for name in ENGINES {
+            let Ok(plan) = sel.plan_named(name, &desc) else {
+                println!("  {name:<18} (unsupported at this shape)");
+                continue;
+            };
+            let mut ws = Workspace::new();
+            let mut out = Tensor::zeros(&plan.out_dims(&x, &w));
+            for _ in 0..cfg.warmup.max(1) {
+                plan.run_into(&x, &w, &[], &mut ws, &mut out);
+            }
+            let allocs_before = ws.heap_allocs();
+            let mut samples = Vec::with_capacity(cfg.iters.max(1));
+            for _ in 0..cfg.iters.max(1) {
+                let t0 = Instant::now();
+                plan.run_into(&x, &w, &[], &mut ws, &mut out);
+                std::hint::black_box(&out.data);
+                samples.push(t0.elapsed().as_nanos() as f64);
+            }
+            let ns = median_ns(&mut samples);
+            let row = BenchRow {
+                shape: label.to_string(),
+                engine: name.to_string(),
+                ns_per_call: ns,
+                gflops: flops / ns.max(1.0),
+                workspace_bytes: plan.workspace_bytes(),
+                ws_heap_allocs_steady: ws.heap_allocs() - allocs_before,
+            };
+            println!(
+                "  {:<18} {:>12.0} ns/call {:>8.2} GFLOP/s  ws {:>8.1} KB  steady allocs {}",
+                row.engine,
+                row.ns_per_call,
+                row.gflops,
+                row.workspace_bytes as f64 / 1024.0,
+                row.ws_heap_allocs_steady
+            );
+            rows.push(row);
+        }
+        if !cfg.quick {
+            // int8 transform-domain SFC through the same reused-workspace path
+            let qdesc = desc.with_quant(QuantSpec::transform_default(8));
+            if let Ok(qplan) = sel.plan_named("SFC-6(7x7,3x3)", &qdesc) {
+                let maxima = collect_act_maxima(&x, qplan.fast_plan().unwrap(), desc.pad);
+                let q = QConvLayer::from_plan(qplan, &w, vec![], &QCalib::TransformMaxima(&maxima));
+                let mut ws = Workspace::new();
+                let mut out = Tensor::zeros(&q.out_dims(&x));
+                for _ in 0..cfg.warmup.max(1) {
+                    q.forward_into(&x, &mut ws, &mut out);
+                }
+                let allocs_before = ws.heap_allocs();
+                let mut samples = Vec::with_capacity(cfg.iters.max(1));
+                for _ in 0..cfg.iters.max(1) {
+                    let t0 = Instant::now();
+                    q.forward_into(&x, &mut ws, &mut out);
+                    std::hint::black_box(&out.data);
+                    samples.push(t0.elapsed().as_nanos() as f64);
+                }
+                let ns = median_ns(&mut samples);
+                let row = BenchRow {
+                    shape: label.to_string(),
+                    engine: "SFC-6(7x7,3x3)-int8".to_string(),
+                    ns_per_call: ns,
+                    gflops: flops / ns.max(1.0),
+                    workspace_bytes: 0,
+                    ws_heap_allocs_steady: ws.heap_allocs() - allocs_before,
+                };
+                println!(
+                    "  {:<18} {:>12.0} ns/call {:>8.2} GFLOP/s  (int8 ⊙)      steady allocs {}",
+                    row.engine, row.ns_per_call, row.gflops, row.ws_heap_allocs_steady
+                );
+                rows.push(row);
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Serialize rows as the BENCH_conv.json snapshot (no serde in this
+/// image — the format is flat enough to emit by hand).
+pub fn to_json(rows: &[BenchRow]) -> String {
+    let mut s = String::from(concat!(
+        "{\n  \"bench\": \"conv\",\n",
+        "  \"units\": {\"time\": \"ns/call\", \"rate\": \"GFLOP/s\"},\n",
+        "  \"results\": [\n"
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            concat!(
+                "    {{\"shape\": \"{}\", \"engine\": \"{}\", \"ns_per_call\": {:.1}, ",
+                "\"gflops\": {:.4}, \"workspace_bytes\": {}, ",
+                "\"ws_heap_allocs_steady\": {}}}{}\n"
+            ),
+            r.shape,
+            r.engine,
+            r.ns_per_call,
+            r.gflops,
+            r.workspace_bytes,
+            r.ws_heap_allocs_steady,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// `sfc bench [--json] [--out PATH] [--iters N] [--warmup N] [--quick]`.
+pub fn cmd_bench(cfg: &BenchCfg, json: bool, out_path: &str) -> Result<()> {
+    let rows = run_bench(cfg)?;
+    if json {
+        let body = to_json(&rows);
+        std::fs::write(out_path, &body).with_context(|| format!("write {out_path}"))?;
+        println!("\nwrote {out_path} ({} rows)", rows.len());
+    }
+    // The headline the snapshot exists to track: GEMM-cored fast conv vs
+    // the direct baseline on the 3x3 shapes.
+    for (label, _) in shapes(cfg.quick) {
+        let direct = rows.iter().find(|r| r.shape == label && r.engine == "direct");
+        let best_fast = rows
+            .iter()
+            .filter(|r| {
+                r.shape == label
+                    && (r.engine.starts_with("SFC") || r.engine.starts_with("Wino"))
+            })
+            .min_by(|a, b| a.ns_per_call.partial_cmp(&b.ns_per_call).unwrap());
+        if let (Some(d), Some(f)) = (direct, best_fast) {
+            println!(
+                "{label}: best fast engine {} at {:.2}x vs direct",
+                f.engine,
+                d.ns_per_call / f.ns_per_call
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_shape_is_valid_enough() {
+        let rows = vec![BenchRow {
+            shape: "s".into(),
+            engine: "direct".into(),
+            ns_per_call: 12.5,
+            gflops: 1.25,
+            workspace_bytes: 64,
+            ws_heap_allocs_steady: 0,
+        }];
+        let j = to_json(&rows);
+        assert!(j.contains("\"bench\": \"conv\""));
+        assert!(j.contains("\"engine\": \"direct\""));
+        assert!(j.contains("\"ns_per_call\": 12.5"));
+        assert!(!j.contains(",\n  ]"), "no trailing comma before the array close");
+    }
+
+    #[test]
+    fn quick_bench_runs_and_is_alloc_free_in_steady_state() {
+        let rows = run_bench(&BenchCfg { iters: 1, warmup: 1, quick: true }).unwrap();
+        assert!(rows.iter().any(|r| r.engine == "direct"));
+        assert!(rows.iter().any(|r| r.engine.starts_with("SFC")));
+        for r in &rows {
+            assert!(r.ns_per_call > 0.0, "{}", r.engine);
+            assert_eq!(r.ws_heap_allocs_steady, 0, "{} must be zero-alloc after warm-up", r.engine);
+        }
+    }
+}

@@ -13,21 +13,30 @@
 //! * [`engine`] — the unified convolution API: [`engine::ConvDesc`]
 //!   problem descriptors, the [`engine::ConvEngine`] trait implemented by
 //!   direct / im2col / Winograd / SFC / FFT / NTT backends, shape-keyed
-//!   [`engine::PlanCache`] plan reuse, and the [`engine::Selector`] with
-//!   BOPs-heuristic and measured-autotune policies (`sfc autotune`).
-//! * [`linalg`] — exact rational matrices + Jacobi SVD (condition numbers).
+//!   [`engine::PlanCache`] plan reuse, the [`engine::Selector`] with
+//!   BOPs-heuristic and measured-autotune policies (`sfc autotune`), and
+//!   the [`engine::Workspace`] arena behind the zero-alloc
+//!   `ConvPlan::run_into` execution path (see ENGINE.md §Memory model).
+//! * [`linalg`] — exact rational matrices + Jacobi SVD (condition
+//!   numbers), plus [`linalg::gemm`]: the blocked, register-tiled
+//!   `f32`/`i8→i32` GEMM core every executor's ⊙ reduction runs on.
 //! * [`nn`] / [`quant`] — the CNN inference substrate and the PTQ
 //!   pipeline reproducing §6.1 (Tables 2/4/5, Figs. 4/5); conv layers
-//!   execute through engine plans, quantized layers through
-//!   [`quant::qconv::QConvLayer`] built from the same plans.
+//!   execute through engine plans (`Model::forward_ws` recycles
+//!   activations through a per-forward workspace), quantized layers
+//!   through [`quant::qconv::QConvLayer`] built from the same plans.
 //! * [`bops`] / [`error`] / [`fpga`] — the analytical models: §6 BOPs
 //!   (feeding the engine cost models), Table-1 numerical error, Table-3
 //!   FPGA accelerator comparison.
 //! * [`runtime`] / [`coordinator`] — serving: PJRT executor over AOT
-//!   artifacts (feature `pjrt`; clean stub otherwise) and the dynamic
-//!   batcher with latency + plan-cache metrics.
+//!   artifacts (feature `pjrt`; clean stub otherwise), the pure-Rust
+//!   [`runtime::EngineExecutor`] over the engine stack, and the dynamic
+//!   batcher holding one workspace per worker (zero-alloc steady state,
+//!   surfaced via latency + plan-cache + workspace metrics).
 //! * [`data`] — SynthImage dataset (ImageNet stand-in, DESIGN.md §2).
-//! * [`exp`] — experiment harnesses regenerating the paper's tables.
+//! * [`exp`] — experiment harnesses regenerating the paper's tables, and
+//!   [`exp::perf`]: the `sfc bench --json` perf-snapshot harness
+//!   (BENCH_conv.json, tracked across PRs).
 //! * [`util`] — PRNG / fp16 / timing / parallel-for shims.
 
 pub mod algo;

@@ -1,0 +1,260 @@
+//! Blocked, register-tiled GEMM kernels — the shared ⊙-reduction core.
+//!
+//! Every conv executor in this crate ultimately reduces to the same
+//! matrix shape: `C[m×n] = A[m×k] · B[n×k]ᵀ` with both operands row-major
+//! along `k` (a batch of dot products). That layout is what im2col
+//! lowering, the per-frequency channel reduction of tiled Winograd/SFC
+//! (`[tiles×Cin]·[Cin×Cout]`, Eq. 1's ⊙ stage) and the quantized Eq.-17
+//! datapath all produce, so one pair of kernels serves them all:
+//!
+//! * [`gemm_nt_f32`] — float path;
+//! * [`gemm_nt_i8_i32`] — int8 operands, exact i32 accumulation.
+//!
+//! The kernels are blocked (`MB×NB` panels keep the B panel hot in L1/L2)
+//! and register-tiled (a 4×4 micro-kernel reuses every loaded operand
+//! four times). The `k` loop runs in index order inside each micro-tile,
+//! so float results are bit-identical to the naive scalar dot product —
+//! a property the workspace-reuse tests rely on.
+
+/// Panel height (rows of A per block).
+const MB: usize = 64;
+/// Panel width (rows of B per block).
+const NB: usize = 64;
+/// Register tile edge: the micro-kernel computes MR×NR outputs at once.
+const MR: usize = 4;
+const NR: usize = 4;
+
+/// `C[m×n] = A[m×k] · B[n×k]ᵀ` (all row-major). `C` is overwritten.
+pub fn gemm_nt_f32(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert!(a.len() >= m * k, "A too small: {} < {}", a.len(), m * k);
+    assert!(b.len() >= n * k, "B too small: {} < {}", b.len(), n * k);
+    assert!(c.len() >= m * n, "C too small: {} < {}", c.len(), m * n);
+    for i0 in (0..m).step_by(MB) {
+        let i1 = (i0 + MB).min(m);
+        for j0 in (0..n).step_by(NB) {
+            let j1 = (j0 + NB).min(n);
+            block_nt_f32(i0, i1, j0, j1, n, k, a, b, c);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn block_nt_f32(
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    let mut i = i0;
+    while i + MR <= i1 {
+        let a0 = &a[i * k..i * k + k];
+        let a1 = &a[(i + 1) * k..(i + 1) * k + k];
+        let a2 = &a[(i + 2) * k..(i + 2) * k + k];
+        let a3 = &a[(i + 3) * k..(i + 3) * k + k];
+        let mut j = j0;
+        while j + NR <= j1 {
+            let b0 = &b[j * k..j * k + k];
+            let b1 = &b[(j + 1) * k..(j + 1) * k + k];
+            let b2 = &b[(j + 2) * k..(j + 2) * k + k];
+            let b3 = &b[(j + 3) * k..(j + 3) * k + k];
+            let mut acc = [[0f32; NR]; MR];
+            for l in 0..k {
+                let av = [a0[l], a1[l], a2[l], a3[l]];
+                let bv = [b0[l], b1[l], b2[l], b3[l]];
+                for (accr, &avi) in acc.iter_mut().zip(&av) {
+                    for (accv, &bvj) in accr.iter_mut().zip(&bv) {
+                        *accv += avi * bvj;
+                    }
+                }
+            }
+            for (ii, accr) in acc.iter().enumerate() {
+                c[(i + ii) * n + j..(i + ii) * n + j + NR].copy_from_slice(accr);
+            }
+            j += NR;
+        }
+        while j < j1 {
+            let br = &b[j * k..j * k + k];
+            for (ii, ar) in [a0, a1, a2, a3].into_iter().enumerate() {
+                c[(i + ii) * n + j] = dot_f32(ar, br);
+            }
+            j += 1;
+        }
+        i += MR;
+    }
+    while i < i1 {
+        let ar = &a[i * k..i * k + k];
+        for j in j0..j1 {
+            c[i * n + j] = dot_f32(ar, &b[j * k..j * k + k]);
+        }
+        i += 1;
+    }
+}
+
+#[inline]
+fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// `C[m×n] = A[m×k] · B[n×k]ᵀ` with int8 operands and exact i32
+/// accumulation (the Eq.-17 low-precision ⊙ stage). `C` is overwritten.
+pub fn gemm_nt_i8_i32(m: usize, n: usize, k: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+    assert!(a.len() >= m * k, "A too small: {} < {}", a.len(), m * k);
+    assert!(b.len() >= n * k, "B too small: {} < {}", b.len(), n * k);
+    assert!(c.len() >= m * n, "C too small: {} < {}", c.len(), m * n);
+    for i0 in (0..m).step_by(MB) {
+        let i1 = (i0 + MB).min(m);
+        for j0 in (0..n).step_by(NB) {
+            let j1 = (j0 + NB).min(n);
+            block_nt_i8(i0, i1, j0, j1, n, k, a, b, c);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn block_nt_i8(
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    n: usize,
+    k: usize,
+    a: &[i8],
+    b: &[i8],
+    c: &mut [i32],
+) {
+    let mut i = i0;
+    while i + MR <= i1 {
+        let a0 = &a[i * k..i * k + k];
+        let a1 = &a[(i + 1) * k..(i + 1) * k + k];
+        let a2 = &a[(i + 2) * k..(i + 2) * k + k];
+        let a3 = &a[(i + 3) * k..(i + 3) * k + k];
+        let mut j = j0;
+        while j + NR <= j1 {
+            let b0 = &b[j * k..j * k + k];
+            let b1 = &b[(j + 1) * k..(j + 1) * k + k];
+            let b2 = &b[(j + 2) * k..(j + 2) * k + k];
+            let b3 = &b[(j + 3) * k..(j + 3) * k + k];
+            let mut acc = [[0i32; NR]; MR];
+            for l in 0..k {
+                let av = [a0[l] as i32, a1[l] as i32, a2[l] as i32, a3[l] as i32];
+                let bv = [b0[l] as i32, b1[l] as i32, b2[l] as i32, b3[l] as i32];
+                for (accr, &avi) in acc.iter_mut().zip(&av) {
+                    for (accv, &bvj) in accr.iter_mut().zip(&bv) {
+                        *accv += avi * bvj;
+                    }
+                }
+            }
+            for (ii, accr) in acc.iter().enumerate() {
+                c[(i + ii) * n + j..(i + ii) * n + j + NR].copy_from_slice(accr);
+            }
+            j += NR;
+        }
+        while j < j1 {
+            let br = &b[j * k..j * k + k];
+            for (ii, ar) in [a0, a1, a2, a3].into_iter().enumerate() {
+                c[(i + ii) * n + j] = dot_i8(ar, br);
+            }
+            j += 1;
+        }
+        i += MR;
+    }
+    while i < i1 {
+        let ar = &a[i * k..i * k + k];
+        for j in j0..j1 {
+            c[i * n + j] = dot_i8(ar, &b[j * k..j * k + k]);
+        }
+        i += 1;
+    }
+}
+
+#[inline]
+fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    let mut acc = 0i32;
+    for (x, y) in a.iter().zip(b) {
+        acc += (*x as i32) * (*y as i32);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn naive_f32(m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for l in 0..k {
+                    acc += a[i * k + l] * b[j * k + l];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_bitwise_over_shapes() {
+        let mut rng = Pcg32::seeded(5);
+        // edge sizes crossing every tile/block boundary
+        for (m, n, k) in [
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, 4, 16),
+            (5, 9, 3),
+            (17, 13, 21),
+            (64, 64, 8),
+            (65, 67, 33),
+            (130, 70, 100),
+        ] {
+            let mut a = vec![0f32; m * k];
+            let mut b = vec![0f32; n * k];
+            rng.fill_gaussian(&mut a, 1.0);
+            rng.fill_gaussian(&mut b, 1.0);
+            let want = naive_f32(m, n, k, &a, &b);
+            let mut got = vec![7f32; m * n]; // poison: C must be overwritten
+            gemm_nt_f32(m, n, k, &a, &b, &mut got);
+            assert_eq!(got, want, "m{m} n{n} k{k} must be bit-identical to scalar order");
+        }
+    }
+
+    #[test]
+    fn zero_k_zeroes_c() {
+        let mut c = vec![3f32; 6];
+        gemm_nt_f32(2, 3, 0, &[], &[], &mut c);
+        assert_eq!(c, vec![0f32; 6]);
+    }
+
+    #[test]
+    fn i8_matches_naive_exactly() {
+        let mut rng = Pcg32::seeded(6);
+        for (m, n, k) in [(1usize, 3usize, 4usize), (6, 6, 6), (19, 11, 35), (70, 66, 9)] {
+            let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let b: Vec<i8> = (0..n * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let mut want = vec![0i32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0i32;
+                    for l in 0..k {
+                        acc += a[i * k + l] as i32 * b[j * k + l] as i32;
+                    }
+                    want[i * n + j] = acc;
+                }
+            }
+            let mut got = vec![-1i32; m * n];
+            gemm_nt_i8_i32(m, n, k, &a, &b, &mut got);
+            assert_eq!(got, want, "m{m} n{n} k{k}");
+        }
+    }
+}

@@ -1,14 +1,19 @@
-//! Exact and floating small-matrix linear algebra.
+//! Exact and floating small-matrix linear algebra, plus the blocked GEMM
+//! core every conv executor reduces onto.
 //!
 //! The algorithm constructor (`crate::algo`) builds every transformation
 //! matrix over exact rationals so the reproduced SFC / Winograd algorithms
 //! are bit-identical to their mathematical definition; condition numbers
-//! for Table 1 come from the Jacobi SVD here.
+//! for Table 1 come from the Jacobi SVD here. [`gemm`] holds the
+//! register-tiled `f32` / `i8→i32` kernels shared by im2col, the tiled
+//! bilinear fast path and the quantized Eq.-17 datapath.
 
 pub mod frac;
+pub mod gemm;
 pub mod mat;
 pub mod svd;
 
 pub use frac::Frac;
+pub use gemm::{gemm_nt_f32, gemm_nt_i8_i32};
 pub use mat::{FracMat, Mat};
 pub use svd::{condition_number, singular_values};

@@ -30,6 +30,7 @@ fn main() -> Result<()> {
         "fig5" => sfc::exp::cmd_fig5(opt(&opts, "data-dir", "artifacts")),
         "serve" => sfc::coordinator::cmd_serve(&opts),
         "autotune" => cmd_autotune(&opts),
+        "bench" => cmd_bench(&opts),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -85,9 +86,18 @@ engine selection (cuDNN findAlgorithm-style):
               print measured times + the selected winner (--bits N asks
               for the intN transform-domain scheme; 0 = float)
 
-serving demo (L3 over PJRT artifacts):
+perf snapshot (steady-state run_into over a reused workspace):
+  bench       [--json] [--out BENCH_conv.json] [--iters 9] [--warmup 2]
+              [--quick]
+              per-shape, per-engine ns/call + GFLOP/s; --json writes the
+              machine-readable snapshot tracked across PRs; --quick is
+              the CI smoke subset
+
+serving demo (L3 over PJRT artifacts, or --runner engine for the
+pure-Rust workspace-backed path):
   serve       [--hlo artifacts/resnet18_b8.hlo.txt] [--data-dir artifacts]
-              [--requests 256] [--batch 8]
+              [--requests 256] [--batch 8] [--runner pjrt|engine]
+              [--model resnet18]
 "#
     );
 }
@@ -375,6 +385,18 @@ fn cmd_autotune(opts: &HashMap<String, String>) -> Result<()> {
         println!("plan cache totals: {h} hits / {m} misses (process-wide)");
     }
     Ok(())
+}
+
+/// `sfc bench` — the perf snapshot harness (see `exp::perf`).
+fn cmd_bench(opts: &HashMap<String, String>) -> Result<()> {
+    let cfg = sfc::exp::perf::BenchCfg {
+        iters: parse_opt(opts, "iters", 9)?,
+        warmup: parse_opt(opts, "warmup", 2)?,
+        quick: opts.get("quick").is_some(),
+    };
+    let json = opts.get("json").is_some();
+    let out = opt(opts, "out", "BENCH_conv.json");
+    sfc::exp::perf::cmd_bench(&cfg, json, out)
 }
 
 fn cmd_appendix_b() -> Result<()> {

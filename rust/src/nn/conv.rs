@@ -3,15 +3,19 @@
 //! The fast path is organized exactly like the paper's (and the Pallas
 //! kernel's) dataflow: gather L×L input tiles → Bᵀ·x·B per channel
 //! (addition network) → per-frequency GEMM over channels
-//! ([tiles×Cin]·[Cin×Cout] for each of the T² transform points) →
-//! Aᵀ·(·)·A → scatter M×M output tiles. The transform-domain-quantized
+//! ([tiles×Cin]·[Cin×Cout] for each of the T² transform points, executed
+//! by the blocked [`crate::linalg::gemm`] core) → Aᵀ·(·)·A → scatter M×M
+//! output tiles. The `*_into` entry points run entirely out of a caller
+//! [`Workspace`] and write straight into the caller's output tensor —
+//! zero heap allocation in steady state. The transform-domain-quantized
 //! variant (Eq. 17) lives in [`crate::quant`] and reuses this module's
 //! tiling machinery.
 
 use super::tensor::Tensor;
 use crate::algo::Bilinear;
-use crate::util::par::par_for;
-use std::sync::Mutex;
+use crate::engine::Workspace;
+use crate::linalg::gemm::gemm_nt_f32;
+use crate::util::par::{num_threads, par_chunks_mut, par_chunks_states};
 
 /// Precomputed matrices for a tiled fast convolution.
 #[derive(Debug)]
@@ -49,12 +53,15 @@ impl FastConvPlan {
         self.algo.input_len()
     }
 
-    /// Transform one R×R filter: U = G·f·Gᵀ (T×T).
-    pub fn transform_filter(&self, f: &[f32]) -> Vec<f32> {
+    /// Transform one R×R filter: U = G·f·Gᵀ (T×T), written into `u`.
+    /// `tmp` must hold T×R floats.
+    pub fn transform_filter_into(&self, f: &[f32], tmp: &mut [f32], u: &mut [f32]) {
         let (t, r) = (self.t(), self.r());
         assert_eq!(f.len(), r * r);
         // tmp = G·f  (t×r)
-        let mut tmp = vec![0f32; t * r];
+        for v in tmp.iter_mut().take(t * r) {
+            *v = 0.0;
+        }
         for i in 0..t {
             for k in 0..r {
                 let gv = self.g[i * r + k];
@@ -66,7 +73,6 @@ impl FastConvPlan {
             }
         }
         // U = tmp·Gᵀ (t×t)
-        let mut u = vec![0f32; t * t];
         for i in 0..t {
             for j in 0..t {
                 let mut acc = 0f32;
@@ -76,23 +82,49 @@ impl FastConvPlan {
                 u[i * t + j] = acc;
             }
         }
+    }
+
+    /// Transform one R×R filter: U = G·f·Gᵀ (T×T).
+    pub fn transform_filter(&self, f: &[f32]) -> Vec<f32> {
+        let (t, r) = (self.t(), self.r());
+        let mut tmp = vec![0f32; t * r];
+        let mut u = vec![0f32; t * t];
+        self.transform_filter_into(f, &mut tmp, &mut u);
         u
+    }
+
+    /// Transform all filters into freq-major layout [T²][OC][IC], using
+    /// caller scratch: `tmp` holds T×R floats, `utile` holds T×T.
+    pub fn transform_weights_into(
+        &self,
+        w: &[f32],
+        oc: usize,
+        ic: usize,
+        tmp: &mut [f32],
+        utile: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let t = self.t();
+        let r = self.r();
+        assert!(out.len() >= t * t * oc * ic);
+        for o in 0..oc {
+            for i in 0..ic {
+                let f = &w[(o * ic + i) * r * r..(o * ic + i + 1) * r * r];
+                self.transform_filter_into(f, tmp, utile);
+                for uv in 0..t * t {
+                    out[(uv * oc + o) * ic + i] = utile[uv];
+                }
+            }
+        }
     }
 
     /// Transform all filters: returns freq-major layout [T²][OC][IC].
     pub fn transform_weights(&self, w: &[f32], oc: usize, ic: usize) -> Vec<f32> {
         let t = self.t();
-        let r = self.r();
+        let mut tmp = vec![0f32; t * self.r()];
+        let mut utile = vec![0f32; t * t];
         let mut out = vec![0f32; t * t * oc * ic];
-        for o in 0..oc {
-            for i in 0..ic {
-                let f = &w[(o * ic + i) * r * r..(o * ic + i + 1) * r * r];
-                let u = self.transform_filter(f);
-                for uv in 0..t * t {
-                    out[(uv * oc + o) * ic + i] = u[uv];
-                }
-            }
-        }
+        self.transform_weights_into(w, oc, ic, &mut tmp, &mut utile, &mut out);
         out
     }
 
@@ -177,8 +209,17 @@ impl FastConvPlan {
     }
 }
 
-/// Direct correlation with stride and symmetric zero padding.
-pub fn conv2d_direct(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, pad: usize) -> Tensor {
+/// Direct correlation with stride and symmetric zero padding, written
+/// into `out` (shape `[N, OC, OH, OW]`). Allocation-free: each output
+/// plane is accumulated in place by its worker.
+pub fn conv2d_direct_into(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    pad: usize,
+    out: &mut Tensor,
+) {
     let (n, ic, h, wid) = x.dims4();
     let (oc, ic2, r, r2) = w.dims4();
     assert_eq!(ic, ic2, "channel mismatch");
@@ -186,11 +227,10 @@ pub fn conv2d_direct(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, pad: u
     assert!(bias.is_empty() || bias.len() == oc);
     let oh = (h + 2 * pad - r) / stride + 1;
     let ow = (wid + 2 * pad - r) / stride + 1;
-    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
-    let out_ptr = Mutex::new(&mut out);
-    par_for(n * oc, |job| {
+    out.assert_dims(&[n, oc, oh, ow]);
+    par_chunks_mut(&mut out.data, oh * ow, |job, plane| {
         let (ni, o) = (job / oc, job % oc);
-        let mut local = vec![0f32; oh * ow];
+        plane.fill(0.0);
         for i in 0..ic {
             let xp = x.plane(ni, i);
             let wp = w.plane(o, i);
@@ -211,17 +251,25 @@ pub fn conv2d_direct(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, pad: u
                             acc += wp[ky * r + kx] * xp[yy * wid + (xx - pad)];
                         }
                     }
-                    local[oy * ow + ox] += acc;
+                    plane[oy * ow + ox] += acc;
                 }
             }
         }
         let b = if bias.is_empty() { 0.0 } else { bias[o] };
-        for v in local.iter_mut() {
+        for v in plane.iter_mut() {
             *v += b;
         }
-        let mut guard = out_ptr.lock().unwrap();
-        guard.plane_mut(ni, o).copy_from_slice(&local);
     });
+}
+
+/// Direct correlation with stride and symmetric zero padding.
+pub fn conv2d_direct(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, pad: usize) -> Tensor {
+    let (n, _, h, wid) = x.dims4();
+    let (oc, _, r, _) = w.dims4();
+    let oh = (h + 2 * pad - r) / stride + 1;
+    let ow = (wid + 2 * pad - r) / stride + 1;
+    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    conv2d_direct_into(x, w, bias, stride, pad, &mut out);
     out
 }
 
@@ -256,88 +304,163 @@ pub fn gather_tile(
     }
 }
 
-/// Tiled fast convolution (stride 1), float transform domain.
-pub fn conv2d_fast(x: &Tensor, w: &Tensor, bias: &[f32], plan: &FastConvPlan, pad: usize) -> Tensor {
+/// Per-worker scratch for the tiled fast path, checked out of a
+/// [`Workspace`] before the parallel region and returned after.
+struct FastScratch {
+    /// V blocks, freq-major [T²][tiles][IC]
+    v: Vec<f32>,
+    /// P blocks, freq-major [T²][tiles][OC]
+    p: Vec<f32>,
+    /// gathered L×L input tile
+    tile: Vec<f32>,
+    /// Bᵀ·x intermediate (T×L)
+    tscr: Vec<f32>,
+    /// one transformed tile (T×T)
+    tv: Vec<f32>,
+    /// one tile's ⊙ products (T×T)
+    prod: Vec<f32>,
+    /// Aᵀ·p intermediate (M×T)
+    iscr: Vec<f32>,
+    /// one M×M output tile
+    ytile: Vec<f32>,
+}
+
+impl FastScratch {
+    #[allow(clippy::too_many_arguments)]
+    fn take(
+        ws: &mut Workspace,
+        tt: usize,
+        n_tiles: usize,
+        ic: usize,
+        oc: usize,
+        m: usize,
+        l: usize,
+        t: usize,
+    ) -> FastScratch {
+        FastScratch {
+            v: ws.take_f32(tt * n_tiles * ic),
+            p: ws.take_f32(tt * n_tiles * oc),
+            tile: ws.take_f32(l * l),
+            tscr: ws.take_f32(t * l),
+            tv: ws.take_f32(tt),
+            prod: ws.take_f32(tt),
+            iscr: ws.take_f32(m * t),
+            ytile: ws.take_f32(m * m),
+        }
+    }
+
+    fn give(self, ws: &mut Workspace) {
+        ws.give_f32(self.v);
+        ws.give_f32(self.p);
+        ws.give_f32(self.tile);
+        ws.give_f32(self.tscr);
+        ws.give_f32(self.tv);
+        ws.give_f32(self.prod);
+        ws.give_f32(self.iscr);
+        ws.give_f32(self.ytile);
+    }
+}
+
+/// Tiled fast convolution (stride 1), float transform domain, executed
+/// out of `ws` into `out`: gather all tiles → batched Bᵀ·x·B → one
+/// [tiles×IC]·[IC×OC] GEMM per transform point → batched Aᵀ·(·)·A →
+/// scatter. All data buffers come from `ws` — zero workspace heap
+/// allocation once the arena is warm.
+pub fn conv2d_fast_into(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    plan: &FastConvPlan,
+    pad: usize,
+    ws: &mut Workspace,
+    out: &mut Tensor,
+) {
     let (n, ic, h, wid) = x.dims4();
     let (oc, ic2, r, _) = w.dims4();
     assert_eq!(ic, ic2);
     assert_eq!(r, plan.r());
+    assert!(bias.is_empty() || bias.len() == oc);
     let (m, l, t) = (plan.m(), plan.l(), plan.t());
     let oh = h + 2 * pad - r + 1;
     let ow = wid + 2 * pad - r + 1;
+    out.assert_dims(&[n, oc, oh, ow]);
     let tiles_y = oh.div_ceil(m);
     let tiles_x = ow.div_ceil(m);
     let n_tiles = tiles_y * tiles_x;
     let tt = t * t;
 
-    // Precompute transformed weights, freq-major [T²][OC][IC].
-    let u = plan.transform_weights(&w.data, oc, ic);
+    // Transformed weights, freq-major [T²][OC][IC], shared by all workers.
+    let mut u = ws.take_f32(tt * oc * ic);
+    {
+        let mut tmp = ws.take_f32(t * r);
+        let mut utile = ws.take_f32(tt);
+        plan.transform_weights_into(&w.data, oc, ic, &mut tmp, &mut utile, &mut u);
+        ws.give_f32(tmp);
+        ws.give_f32(utile);
+    }
 
-    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
-    // Parallelize over images (typical batch sizes) — within an image the
-    // work is the per-frequency GEMM.
-    let out_mutex = Mutex::new(&mut out);
-    par_for(n, |ni| {
+    // One scratch set per worker; images are distributed contiguously and
+    // each worker writes its images' output chunks directly (no mutex).
+    let workers = num_threads().min(n).max(1);
+    let mut states: Vec<FastScratch> =
+        (0..workers).map(|_| FastScratch::take(ws, tt, n_tiles, ic, oc, m, l, t)).collect();
+    let img_len = oc * oh * ow;
+    par_chunks_states(&mut out.data, img_len, &mut states, |st, ni, out_img| {
         // 1) gather + transform all tiles: V freq-major [T²][tiles][IC]
-        let mut v = vec![0f32; tt * n_tiles * ic];
-        let mut tile = vec![0f32; l * l];
-        let mut scratch = vec![0f32; t * l];
-        let mut tv = vec![0f32; tt];
         for ty in 0..tiles_y {
             for tx in 0..tiles_x {
                 let tile_idx = ty * tiles_x + tx;
                 for c in 0..ic {
-                    gather_tile(x, ni, c, ty, tx, m, l, pad, &mut tile);
-                    plan.transform_tile(&tile, &mut scratch, &mut tv);
+                    gather_tile(x, ni, c, ty, tx, m, l, pad, &mut st.tile);
+                    plan.transform_tile(&st.tile, &mut st.tscr, &mut st.tv);
                     for uv in 0..tt {
-                        v[(uv * n_tiles + tile_idx) * ic + c] = tv[uv];
+                        st.v[(uv * n_tiles + tile_idx) * ic + c] = st.tv[uv];
                     }
                 }
             }
         }
-        // 2) per-frequency GEMM: P[uv][tile][oc] = Σ_ic V[uv][tile][ic]·U[uv][oc][ic]
-        let mut p = vec![0f32; tt * n_tiles * oc];
+        // 2) per-frequency GEMM: P[uv] = V[uv] · U[uv]ᵀ ([tiles×IC]·[IC×OC])
         for uv in 0..tt {
-            let vblk = &v[uv * n_tiles * ic..(uv + 1) * n_tiles * ic];
+            let vblk = &st.v[uv * n_tiles * ic..(uv + 1) * n_tiles * ic];
             let ublk = &u[uv * oc * ic..(uv + 1) * oc * ic];
-            let pblk = &mut p[uv * n_tiles * oc..(uv + 1) * n_tiles * oc];
-            for ti in 0..n_tiles {
-                let vrow = &vblk[ti * ic..(ti + 1) * ic];
-                let prow = &mut pblk[ti * oc..(ti + 1) * oc];
-                for (o, pv) in prow.iter_mut().enumerate() {
-                    let urow = &ublk[o * ic..(o + 1) * ic];
-                    let mut acc = 0f32;
-                    for (a, b) in vrow.iter().zip(urow) {
-                        acc += a * b;
-                    }
-                    *pv = acc;
-                }
-            }
+            let pblk = &mut st.p[uv * n_tiles * oc..(uv + 1) * n_tiles * oc];
+            gemm_nt_f32(n_tiles, oc, ic, vblk, ublk, pblk);
         }
-        // 3) inverse transform + scatter
-        let mut prod = vec![0f32; tt];
-        let mut iscratch = vec![0f32; m * t];
-        let mut ytile = vec![0f32; m * m];
-        let mut guard = out_mutex.lock().unwrap();
+        // 3) inverse transform + scatter into this image's output chunk
         for o in 0..oc {
             let b = if bias.is_empty() { 0.0 } else { bias[o] };
+            let plane = &mut out_img[o * oh * ow..(o + 1) * oh * ow];
             for ty in 0..tiles_y {
                 for tx in 0..tiles_x {
                     let tile_idx = ty * tiles_x + tx;
                     for uv in 0..tt {
-                        prod[uv] = p[(uv * n_tiles + tile_idx) * oc + o];
+                        st.prod[uv] = st.p[(uv * n_tiles + tile_idx) * oc + o];
                     }
-                    plan.inverse_tile(&prod, &mut iscratch, &mut ytile);
-                    let plane = guard.plane_mut(ni, o);
+                    plan.inverse_tile(&st.prod, &mut st.iscr, &mut st.ytile);
                     for i in 0..m.min(oh - ty * m) {
                         for j in 0..m.min(ow - tx * m) {
-                            plane[(ty * m + i) * ow + tx * m + j] = ytile[i * m + j] + b;
+                            plane[(ty * m + i) * ow + tx * m + j] = st.ytile[i * m + j] + b;
                         }
                     }
                 }
             }
         }
     });
+    for st in states {
+        st.give(ws);
+    }
+    ws.give_f32(u);
+}
+
+/// Tiled fast convolution (stride 1), float transform domain.
+pub fn conv2d_fast(x: &Tensor, w: &Tensor, bias: &[f32], plan: &FastConvPlan, pad: usize) -> Tensor {
+    let (n, _, h, wid) = x.dims4();
+    let (oc, _, r, _) = w.dims4();
+    let oh = h + 2 * pad - r + 1;
+    let ow = wid + 2 * pad - r + 1;
+    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    let mut ws = Workspace::new();
+    conv2d_fast_into(x, w, bias, plan, pad, &mut ws, &mut out);
     out
 }
 

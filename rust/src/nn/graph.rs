@@ -3,9 +3,15 @@
 //! Each node consumes earlier node outputs by index; this is enough for
 //! the ResNet family (residual adds) and VGG (pure chains) while keeping
 //! forward execution trivially auditable for the PTQ experiments.
+//!
+//! Two execution modes share one set of per-op kernels:
+//! [`Model::forward_all`] keeps every activation (calibration, probes),
+//! while [`Model::forward_ws`] / [`Model::forward_ws_owned`] run out of a
+//! caller [`Workspace`], recycling each activation the moment its last
+//! consumer ran — the zero-alloc serving path.
 
 use super::tensor::Tensor;
-use crate::engine::ConvPlan;
+use crate::engine::{ConvPlan, Workspace};
 use crate::quant::qconv::QConvLayer;
 use std::sync::Arc;
 
@@ -49,6 +55,93 @@ pub struct Node {
 pub struct Model {
     pub nodes: Vec<Node>,
     pub name: String,
+}
+
+// --- per-op kernels, shared by forward_all and the workspace path ---
+
+fn relu_inplace(t: &mut Tensor) {
+    for v in t.data.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+fn maxpool2_dims(inp: &Tensor) -> Vec<usize> {
+    let (n, c, h, w) = inp.dims4();
+    vec![n, c, h / 2, w / 2]
+}
+
+fn maxpool2_into(inp: &Tensor, out: &mut Tensor) {
+    let (n, c, h, w) = inp.dims4();
+    let (oh, ow) = (h / 2, w / 2);
+    out.assert_dims(&[n, c, oh, ow]);
+    for ni in 0..n {
+        for ci in 0..c {
+            let src = inp.plane(ni, ci);
+            let dst = out.plane_mut(ni, ci);
+            for y in 0..oh {
+                for x in 0..ow {
+                    let m = src[2 * y * w + 2 * x]
+                        .max(src[2 * y * w + 2 * x + 1])
+                        .max(src[(2 * y + 1) * w + 2 * x])
+                        .max(src[(2 * y + 1) * w + 2 * x + 1]);
+                    dst[y * ow + x] = m;
+                }
+            }
+        }
+    }
+}
+
+fn gap_dims(inp: &Tensor) -> Vec<usize> {
+    let (n, c, _, _) = inp.dims4();
+    vec![n, c, 1, 1]
+}
+
+fn global_avg_pool_into(inp: &Tensor, out: &mut Tensor) {
+    let (n, c, h, w) = inp.dims4();
+    out.assert_dims(&[n, c, 1, 1]);
+    for ni in 0..n {
+        for ci in 0..c {
+            let s: f32 = inp.plane(ni, ci).iter().sum();
+            *out.at4_mut(ni, ci, 0, 0) = s / (h * w) as f32;
+        }
+    }
+}
+
+fn linear_dims(inp: &Tensor, weight: &Tensor) -> Vec<usize> {
+    vec![inp.dims[0], weight.dims[0], 1, 1]
+}
+
+fn linear_into(inp: &Tensor, weight: &Tensor, bias: &[f32], out: &mut Tensor) {
+    let n = inp.dims[0];
+    let in_dim: usize = inp.dims[1..].iter().product();
+    let out_dim = weight.dims[0];
+    assert_eq!(weight.dims[1], in_dim);
+    out.assert_dims(&[n, out_dim, 1, 1]);
+    for ni in 0..n {
+        let xrow = &inp.data[ni * in_dim..(ni + 1) * in_dim];
+        for o in 0..out_dim {
+            let wrow = &weight.data[o * in_dim..(o + 1) * in_dim];
+            let mut acc = if bias.is_empty() { 0.0 } else { bias[o] };
+            for (a, b) in xrow.iter().zip(wrow) {
+                acc += a * b;
+            }
+            *out.at4_mut(ni, o, 0, 0) = acc;
+        }
+    }
+}
+
+fn add_assign(t: &mut Tensor, b: &Tensor, name: &str) {
+    assert_eq!(t.dims, b.dims, "residual shape mismatch at {name}");
+    for (x, y) in t.data.iter_mut().zip(&b.data) {
+        *x += y;
+    }
+}
+
+/// A tensor whose buffer is checked out of the workspace (zeroed).
+fn ws_tensor(ws: &mut Workspace, dims: &[usize]) -> Tensor {
+    Tensor::from_vec(dims, ws.take_f32(dims.iter().product()))
 }
 
 impl Model {
@@ -95,75 +188,30 @@ impl Model {
                 }
                 Op::Relu => {
                     let mut t = get(node.inputs[0]).clone();
-                    for v in t.data.iter_mut() {
-                        if *v < 0.0 {
-                            *v = 0.0;
-                        }
-                    }
+                    relu_inplace(&mut t);
                     t
                 }
                 Op::MaxPool2 => {
                     let inp = get(node.inputs[0]);
-                    let (n, c, h, w) = inp.dims4();
-                    let (oh, ow) = (h / 2, w / 2);
-                    let mut t = Tensor::zeros(&[n, c, oh, ow]);
-                    for ni in 0..n {
-                        for ci in 0..c {
-                            let src = inp.plane(ni, ci);
-                            let dst = t.plane_mut(ni, ci);
-                            for y in 0..oh {
-                                for x2 in 0..ow {
-                                    let m = src[2 * y * w + 2 * x2]
-                                        .max(src[2 * y * w + 2 * x2 + 1])
-                                        .max(src[(2 * y + 1) * w + 2 * x2])
-                                        .max(src[(2 * y + 1) * w + 2 * x2 + 1]);
-                                    dst[y * ow + x2] = m;
-                                }
-                            }
-                        }
-                    }
+                    let mut t = Tensor::zeros(&maxpool2_dims(inp));
+                    maxpool2_into(inp, &mut t);
                     t
                 }
                 Op::GlobalAvgPool => {
                     let inp = get(node.inputs[0]);
-                    let (n, c, h, w) = inp.dims4();
-                    let mut t = Tensor::zeros(&[n, c, 1, 1]);
-                    for ni in 0..n {
-                        for ci in 0..c {
-                            let s: f32 = inp.plane(ni, ci).iter().sum();
-                            *t.at4_mut(ni, ci, 0, 0) = s / (h * w) as f32;
-                        }
-                    }
+                    let mut t = Tensor::zeros(&gap_dims(inp));
+                    global_avg_pool_into(inp, &mut t);
                     t
                 }
                 Op::Linear { weight, bias } => {
                     let inp = get(node.inputs[0]);
-                    let n = inp.dims[0];
-                    let in_dim: usize = inp.dims[1..].iter().product();
-                    let out_dim = weight.dims[0];
-                    assert_eq!(weight.dims[1], in_dim);
-                    let mut t = Tensor::zeros(&[n, out_dim, 1, 1]);
-                    for ni in 0..n {
-                        let xrow = &inp.data[ni * in_dim..(ni + 1) * in_dim];
-                        for o in 0..out_dim {
-                            let wrow = &weight.data[o * in_dim..(o + 1) * in_dim];
-                            let mut acc = if bias.is_empty() { 0.0 } else { bias[o] };
-                            for (a, b) in xrow.iter().zip(wrow) {
-                                acc += a * b;
-                            }
-                            *t.at4_mut(ni, o, 0, 0) = acc;
-                        }
-                    }
+                    let mut t = Tensor::zeros(&linear_dims(inp, weight));
+                    linear_into(inp, weight, bias, &mut t);
                     t
                 }
                 Op::Add => {
-                    let a = get(node.inputs[0]);
-                    let b = get(node.inputs[1]);
-                    assert_eq!(a.dims, b.dims, "residual shape mismatch at {}", node.name);
-                    let mut t = a.clone();
-                    for (x2, y) in t.data.iter_mut().zip(&b.data) {
-                        *x2 += y;
-                    }
+                    let mut t = get(node.inputs[0]).clone();
+                    add_assign(&mut t, get(node.inputs[1]), &node.name);
                     t
                 }
             };
@@ -173,9 +221,123 @@ impl Model {
     }
 
     /// Forward pass returning logits (last node's output flattened to
-    /// [N, classes]).
+    /// [N, classes]). Runs through [`Model::forward_ws`] with a local
+    /// workspace; inference servers keep a long-lived [`Workspace`] and
+    /// call `forward_ws` directly for zero-alloc steady state.
     pub fn forward(&self, x: &Tensor) -> Tensor {
-        self.forward_all(x).pop().unwrap()
+        let mut ws = Workspace::new();
+        self.forward_ws(x, &mut ws)
+    }
+
+    /// Workspace-backed forward pass over a borrowed input: copies `x`
+    /// into an arena buffer and delegates to
+    /// [`Model::forward_ws_owned`]. Bit-identical to
+    /// [`Model::forward_all`]'s final activation.
+    pub fn forward_ws(&self, x: &Tensor, ws: &mut Workspace) -> Tensor {
+        let mut t = ws_tensor(ws, &x.dims);
+        t.data.copy_from_slice(&x.data);
+        self.forward_ws_owned(t, ws)
+    }
+
+    /// Workspace-backed forward pass taking ownership of the input
+    /// (single-`Op::Input` graphs — every model in this crate; callers
+    /// feeding the input from the arena avoid a defensive copy). Every
+    /// activation buffer is checked out of `ws`, dead activations are
+    /// returned the moment their last consumer ran (ping-pong across a
+    /// chain of layers), and single-use inputs of element-wise ops are
+    /// mutated in place. After one warm-up call a reused workspace
+    /// serves the whole pass without heap allocation. The returned
+    /// tensor's buffer is owned by the caller (give it back to `ws` to
+    /// recycle it).
+    pub fn forward_ws_owned(&self, x: Tensor, ws: &mut Workspace) -> Tensor {
+        // Liveness: the last node index consuming each activation.
+        let mut last_use = vec![0usize; self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &inp in &node.inputs {
+                last_use[inp] = last_use[inp].max(i);
+            }
+        }
+        let mut input = Some(x);
+        let mut acts: Vec<Option<Tensor>> = (0..self.nodes.len()).map(|_| None).collect();
+        for (i, node) in self.nodes.iter().enumerate() {
+            let out = match &node.op {
+                Op::Input => input
+                    .take()
+                    .expect("forward_ws_owned supports one Input node; use forward_ws"),
+                Op::Conv { params, plan, quantized } => {
+                    debug_assert_eq!(
+                        (params.stride, params.pad),
+                        (plan.desc.stride, plan.desc.pad),
+                        "ConvParams and plan descriptor disagree at {}",
+                        node.name
+                    );
+                    let inp = acts[node.inputs[0]].as_ref().expect("SSA order");
+                    if let Some(q) = quantized {
+                        let mut out = ws_tensor(ws, &q.out_dims(inp));
+                        q.forward_into(inp, ws, &mut out);
+                        out
+                    } else {
+                        let mut out = ws_tensor(ws, &plan.out_dims(inp, &params.weight));
+                        plan.run_into(inp, &params.weight, &params.bias, ws, &mut out);
+                        out
+                    }
+                }
+                Op::Relu => {
+                    let src = node.inputs[0];
+                    let mut t = take_or_copy(&mut acts, src, last_use[src] == i, ws);
+                    relu_inplace(&mut t);
+                    t
+                }
+                Op::MaxPool2 => {
+                    let inp = acts[node.inputs[0]].as_ref().expect("SSA order");
+                    let mut t = ws_tensor(ws, &maxpool2_dims(inp));
+                    maxpool2_into(inp, &mut t);
+                    t
+                }
+                Op::GlobalAvgPool => {
+                    let inp = acts[node.inputs[0]].as_ref().expect("SSA order");
+                    let mut t = ws_tensor(ws, &gap_dims(inp));
+                    global_avg_pool_into(inp, &mut t);
+                    t
+                }
+                Op::Linear { weight, bias } => {
+                    let inp = acts[node.inputs[0]].as_ref().expect("SSA order");
+                    let mut t = ws_tensor(ws, &linear_dims(inp, weight));
+                    linear_into(inp, weight, bias, &mut t);
+                    t
+                }
+                Op::Add => {
+                    // Keep the a + b evaluation order of `forward_all`;
+                    // reuse a's buffer when this is its last use.
+                    let (ia, ib) = (node.inputs[0], node.inputs[1]);
+                    let mut t = take_or_copy(&mut acts, ia, last_use[ia] == i && ia != ib, ws);
+                    let b = acts[ib].as_ref().expect("SSA order");
+                    add_assign(&mut t, b, &node.name);
+                    t
+                }
+            };
+            // Recycle activations whose last consumer just ran (ones an
+            // op already moved out of `acts` are skipped by the `take`).
+            for &inp in &node.inputs {
+                if last_use[inp] == i {
+                    if let Some(dead) = acts[inp].take() {
+                        ws.give_f32(dead.data);
+                    }
+                }
+            }
+            acts[i] = Some(out);
+        }
+        let result = acts.pop().flatten().expect("model has at least one node");
+        // Activations no node consumed (e.g. auxiliary heads) never hit
+        // the last-use release above — recycle them so reuse stays
+        // alloc-free and `in_use_bytes` returns to the output alone.
+        for dead in acts.into_iter().flatten() {
+            ws.give_f32(dead.data);
+        }
+        if let Some(unused) = input.take() {
+            ws.give_f32(unused.data);
+        }
+        result
     }
 
     /// Top-1 accuracy over a labelled batch.
@@ -197,6 +359,24 @@ impl Model {
             }
         }
         correct as f64 / n as f64
+    }
+}
+
+/// Move activation `src` out of `acts` when this is its last use (the
+/// in-place fast path), else copy it into a fresh workspace tensor.
+fn take_or_copy(
+    acts: &mut [Option<Tensor>],
+    src: usize,
+    movable: bool,
+    ws: &mut Workspace,
+) -> Tensor {
+    if movable {
+        acts[src].take().expect("SSA order")
+    } else {
+        let inp = acts[src].as_ref().expect("SSA order");
+        let mut t = ws_tensor(ws, &inp.dims);
+        t.data.copy_from_slice(&inp.data);
+        t
     }
 }
 
@@ -274,5 +454,15 @@ mod tests {
             })
             .collect();
         assert_eq!(m.accuracy(&x, &labels), 1.0);
+    }
+
+    #[test]
+    fn forward_all_and_forward_agree() {
+        let m = toy_model();
+        let mut rng = Pcg32::seeded(14);
+        let mut x = Tensor::zeros(&[2, 3, 8, 8]);
+        rng.fill_gaussian(&mut x.data, 1.0);
+        let want = m.forward_all(&x).pop().unwrap();
+        assert_eq!(m.forward(&x).data, want.data);
     }
 }

@@ -55,6 +55,13 @@ impl Tensor {
         &mut self.data[base..base + hh * ww]
     }
 
+    /// Assert this tensor has exactly the given shape (executors use it
+    /// to validate caller-provided output tensors).
+    #[inline]
+    pub fn assert_dims(&self, dims: &[usize]) {
+        assert_eq!(self.dims, dims, "tensor shape mismatch: got {:?}, want {dims:?}", self.dims);
+    }
+
     pub fn max_abs(&self) -> f32 {
         self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
     }

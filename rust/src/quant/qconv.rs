@@ -9,12 +9,13 @@
 //! per-channel, per-frequency or channel×frequency for weights).
 
 use super::QParams;
-use crate::engine::exec::ntt_corr2d_i8;
-use crate::engine::{ConvPlan, PlanKernel, QuantSpec};
+use crate::engine::exec::ntt_corr2d_i8_into;
+use crate::engine::{ConvPlan, PlanKernel, QuantSpec, Workspace};
+use crate::linalg::gemm::gemm_nt_i8_i32;
 use crate::nn::conv::{gather_tile, FastConvPlan};
 use crate::nn::tensor::Tensor;
-use crate::util::par::par_for;
-use std::sync::{Arc, Mutex};
+use crate::util::par::{num_threads, par_chunks_mut, par_chunks_states};
+use std::sync::Arc;
 
 /// Scale-group granularity for one operand (Table 4/5 axes).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -251,16 +252,46 @@ impl QConvLayer {
         self.plan.engine
     }
 
+    /// Convenience wrapper over [`QConvLayer::forward_into`] with a
+    /// throwaway workspace.
     pub fn forward(&self, x: &Tensor) -> Tensor {
+        let mut ws = Workspace::new();
+        self.forward_with(x, &mut ws)
+    }
+
+    /// Execute out of a caller workspace, allocating only the output.
+    pub fn forward_with(&self, x: &Tensor, ws: &mut Workspace) -> Tensor {
+        let mut out = Tensor::zeros(&self.out_dims(x));
+        self.forward_into(x, ws, &mut out);
+        out
+    }
+
+    /// Output shape for an actual input batch.
+    pub fn out_dims(&self, x: &Tensor) -> Vec<usize> {
+        let (n, _, h, wid) = x.dims4();
+        let (stride, pad) = (self.plan.desc.stride, self.plan.desc.pad);
+        let (oc, r) = match &self.kernel {
+            QKernel::TransformDomain { oc, .. } => (*oc, self.plan.desc.r),
+            QKernel::Spatial { oc, r, .. } => (*oc, *r),
+        };
+        let oh = (h + 2 * pad - r) / stride + 1;
+        let ow = (wid + 2 * pad - r) / stride + 1;
+        vec![n, oc, oh, ow]
+    }
+
+    /// The zero-alloc quantized entry point: execute out of `ws` straight
+    /// into `out`. Bit-identical to [`QConvLayer::forward`] whether `ws`
+    /// is fresh or reused.
+    pub fn forward_into(&self, x: &Tensor, ws: &mut Workspace, out: &mut Tensor) {
         match &self.kernel {
             QKernel::TransformDomain { oc, ic, wq, w_scales, a_scales, a_bits } => {
-                forward_transform_q(x, self, *oc, *ic, wq, w_scales, a_scales, *a_bits)
+                forward_transform_q(x, self, *oc, *ic, wq, w_scales, a_scales, *a_bits, ws, out)
             }
             QKernel::Spatial { wq, oc, ic, r, w_scales, a_scale, via_ntt } => {
                 if *via_ntt {
-                    forward_spatial_ntt(x, self, wq, *oc, *ic, *r, w_scales, *a_scale)
+                    forward_spatial_ntt(x, self, wq, *oc, *ic, *r, w_scales, *a_scale, ws, out)
                 } else {
-                    forward_spatial_q(x, self, wq, *oc, *ic, *r, w_scales, *a_scale)
+                    forward_spatial_q(x, self, wq, *oc, *ic, *r, w_scales, *a_scale, ws, out)
                 }
             }
         }
@@ -283,6 +314,20 @@ fn quantize_weights(u: &[f32], t2: usize, oc: usize, ic: usize, scales: &ScaleGr
     wq
 }
 
+/// Per-worker scratch for the quantized transform-domain path.
+struct QFastScratch {
+    /// quantized V blocks, freq-major [T²][tiles][IC]
+    vq: Vec<i8>,
+    /// exact i32 ⊙ accumulators, freq-major [T²][tiles][OC]
+    pi: Vec<i32>,
+    tile: Vec<f32>,
+    tscr: Vec<f32>,
+    tv: Vec<f32>,
+    prod: Vec<f32>,
+    iscr: Vec<f32>,
+    ytile: Vec<f32>,
+}
+
 #[allow(clippy::too_many_arguments)]
 fn forward_transform_q(
     x: &Tensor,
@@ -293,7 +338,9 @@ fn forward_transform_q(
     w_scales: &ScaleGroup,
     a_scales: &ScaleGroup,
     a_bits: u32,
-) -> Tensor {
+    ws: &mut Workspace,
+    out: &mut Tensor,
+) {
     let plan = layer.plan.fast_plan().expect("bilinear plan");
     let (n, ic2, h, wid) = x.dims4();
     assert_eq!(ic, ic2);
@@ -302,80 +349,84 @@ fn forward_transform_q(
     let pad = layer.plan.desc.pad;
     let oh = h + 2 * pad - r + 1;
     let ow = wid + 2 * pad - r + 1;
+    assert_eq!(out.dims, [n, oc, oh, ow], "output shape mismatch: {:?}", out.dims);
     let tiles_y = oh.div_ceil(m);
     let tiles_x = ow.div_ceil(m);
     let n_tiles = tiles_y * tiles_x;
     let tt = t * t;
     let a_qmax = (1i32 << (a_bits - 1)) - 1;
 
-    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
-    let out_mutex = Mutex::new(&mut out);
-    par_for(n, |ni| {
+    let workers = num_threads().min(n).max(1);
+    let mut states: Vec<QFastScratch> = (0..workers)
+        .map(|_| QFastScratch {
+            vq: ws.take_i8(tt * n_tiles * ic),
+            pi: ws.take_i32(tt * n_tiles * oc),
+            tile: ws.take_f32(l * l),
+            tscr: ws.take_f32(t * l),
+            tv: ws.take_f32(tt),
+            prod: ws.take_f32(tt),
+            iscr: ws.take_f32(m * t),
+            ytile: ws.take_f32(m * m),
+        })
+        .collect();
+    par_chunks_states(&mut out.data, oc * oh * ow, &mut states, |st, ni, out_img| {
         // 1) gather + transform + QUANTIZE tiles: Vq freq-major [T²][tiles][IC]
-        let mut vq = vec![0i8; tt * n_tiles * ic];
-        let mut tile = vec![0f32; l * l];
-        let mut scratch = vec![0f32; t * l];
-        let mut tv = vec![0f32; tt];
         for ty in 0..tiles_y {
             for tx in 0..tiles_x {
                 let tile_idx = ty * tiles_x + tx;
                 for c in 0..ic {
-                    gather_tile(x, ni, c, ty, tx, m, l, pad, &mut tile);
-                    plan.transform_tile(&tile, &mut scratch, &mut tv);
+                    gather_tile(x, ni, c, ty, tx, m, l, pad, &mut st.tile);
+                    plan.transform_tile(&st.tile, &mut st.tscr, &mut st.tv);
                     for uv in 0..tt {
                         let s = a_scales.scale(uv, 0);
-                        let q = (tv[uv] / s).round() as i32;
-                        vq[(uv * n_tiles + tile_idx) * ic + c] = q.clamp(-a_qmax, a_qmax) as i8;
+                        let q = (st.tv[uv] / s).round() as i32;
+                        st.vq[(uv * n_tiles + tile_idx) * ic + c] = q.clamp(-a_qmax, a_qmax) as i8;
                     }
                 }
             }
         }
-        // 2) integer per-frequency GEMM, i32 accumulation (exact).
-        let mut p = vec![0f32; tt * n_tiles * oc];
+        // 2) integer per-frequency GEMM, i32 accumulation (exact):
+        //    PI[uv] = Vq[uv] · Wq[uv]ᵀ ([tiles×IC]·[IC×OC])
         for uv in 0..tt {
-            let vblk = &vq[uv * n_tiles * ic..(uv + 1) * n_tiles * ic];
+            let vblk = &st.vq[uv * n_tiles * ic..(uv + 1) * n_tiles * ic];
             let ublk = &wq[uv * oc * ic..(uv + 1) * oc * ic];
-            let pblk = &mut p[uv * n_tiles * oc..(uv + 1) * n_tiles * oc];
-            let sa = a_scales.scale(uv, 0);
-            for ti in 0..n_tiles {
-                let vrow = &vblk[ti * ic..(ti + 1) * ic];
-                let prow = &mut pblk[ti * oc..(ti + 1) * oc];
-                for (o, pv) in prow.iter_mut().enumerate() {
-                    let urow = &ublk[o * ic..(o + 1) * ic];
-                    let mut acc: i32 = 0;
-                    for (a, b) in vrow.iter().zip(urow) {
-                        acc += (*a as i32) * (*b as i32);
-                    }
-                    // dequantize: both operand scales
-                    *pv = acc as f32 * sa * w_scales.scale(uv, o);
-                }
-            }
+            let pblk = &mut st.pi[uv * n_tiles * oc..(uv + 1) * n_tiles * oc];
+            gemm_nt_i8_i32(n_tiles, oc, ic, vblk, ublk, pblk);
         }
-        // 3) inverse transform + bias + scatter
-        let mut prod = vec![0f32; tt];
-        let mut iscratch = vec![0f32; m * t];
-        let mut ytile = vec![0f32; m * m];
-        let mut guard = out_mutex.lock().unwrap();
+        // 3) dequantize + inverse transform + bias + scatter
         for o in 0..oc {
             let b = if layer.bias.is_empty() { 0.0 } else { layer.bias[o] };
+            let plane = &mut out_img[o * oh * ow..(o + 1) * oh * ow];
             for ty in 0..tiles_y {
                 for tx in 0..tiles_x {
                     let tile_idx = ty * tiles_x + tx;
                     for uv in 0..tt {
-                        prod[uv] = p[(uv * n_tiles + tile_idx) * oc + o];
+                        // dequantize: both operand scales
+                        let sa = a_scales.scale(uv, 0);
+                        st.prod[uv] = st.pi[(uv * n_tiles + tile_idx) * oc + o] as f32
+                            * sa
+                            * w_scales.scale(uv, o);
                     }
-                    plan.inverse_tile(&prod, &mut iscratch, &mut ytile);
-                    let plane = guard.plane_mut(ni, o);
+                    plan.inverse_tile(&st.prod, &mut st.iscr, &mut st.ytile);
                     for i in 0..m.min(oh - ty * m) {
                         for j in 0..m.min(ow - tx * m) {
-                            plane[(ty * m + i) * ow + tx * m + j] = ytile[i * m + j] + b;
+                            plane[(ty * m + i) * ow + tx * m + j] = st.ytile[i * m + j] + b;
                         }
                     }
                 }
             }
         }
     });
-    out
+    for st in states {
+        ws.give_i8(st.vq);
+        ws.give_i32(st.pi);
+        ws.give_f32(st.tile);
+        ws.give_f32(st.tscr);
+        ws.give_f32(st.tv);
+        ws.give_f32(st.prod);
+        ws.give_f32(st.iscr);
+        ws.give_f32(st.ytile);
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -388,21 +439,24 @@ fn forward_spatial_q(
     r: usize,
     w_scales: &[f32],
     a_scale: QParams,
-) -> Tensor {
+    ws: &mut Workspace,
+    out: &mut Tensor,
+) {
     let (n, ic2, h, wid) = x.dims4();
     assert_eq!(ic, ic2);
     let (stride, pad) = (layer.plan.desc.stride, layer.plan.desc.pad);
     let oh = (h + 2 * pad - r) / stride + 1;
     let ow = (wid + 2 * pad - r) / stride + 1;
+    assert_eq!(out.dims, [n, oc, oh, ow], "output shape mismatch: {:?}", out.dims);
     // quantize input per-tensor
-    let xq: Vec<i8> = x.data.iter().map(|&v| a_scale.quantize(v) as i8).collect();
-    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
-    let out_mutex = Mutex::new(&mut out);
-    par_for(n * oc, |job| {
+    let mut xq = ws.take_i8(x.data.len());
+    for (q, &v) in xq.iter_mut().zip(&x.data) {
+        *q = a_scale.quantize(v) as i8;
+    }
+    par_chunks_mut(&mut out.data, oh * ow, |job, plane| {
         let (ni, o) = (job / oc, job % oc);
         let deq = a_scale.scale * w_scales[o];
         let b = if layer.bias.is_empty() { 0.0 } else { layer.bias[o] };
-        let mut local = vec![0f32; oh * ow];
         for oy in 0..oh {
             for ox in 0..ow {
                 let mut acc: i32 = 0;
@@ -425,13 +479,11 @@ fn forward_spatial_q(
                         }
                     }
                 }
-                local[oy * ow + ox] = acc as f32 * deq + b;
+                plane[oy * ow + ox] = acc as f32 * deq + b;
             }
         }
-        let mut guard = out_mutex.lock().unwrap();
-        guard.plane_mut(ni, o).copy_from_slice(&local);
     });
-    out
+    ws.give_i8(xq);
 }
 
 /// The NTT-backed spatial path: bit-identical accumulators to
@@ -447,16 +499,22 @@ fn forward_spatial_ntt(
     r: usize,
     w_scales: &[f32],
     a_scale: QParams,
-) -> Tensor {
+    ws: &mut Workspace,
+    out: &mut Tensor,
+) {
     let (n, ic2, h, wid) = x.dims4();
     assert_eq!(ic, ic2);
     let pad = layer.plan.desc.pad;
     assert_eq!(layer.plan.desc.stride, 1, "NTT path is stride-1");
-    let xq: Vec<i8> = x.data.iter().map(|&v| a_scale.quantize(v) as i8).collect();
-    let acc = ntt_corr2d_i8(&xq, n, ic, h, wid, wq, oc, r, pad);
     let oh = h + 2 * pad - r + 1;
     let ow = wid + 2 * pad - r + 1;
-    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    assert_eq!(out.dims, [n, oc, oh, ow], "output shape mismatch: {:?}", out.dims);
+    let mut xq = ws.take_i8(x.data.len());
+    for (q, &v) in xq.iter_mut().zip(&x.data) {
+        *q = a_scale.quantize(v) as i8;
+    }
+    let mut acc = ws.take_i64(n * oc * oh * ow);
+    ntt_corr2d_i8_into(&xq, n, ic, h, wid, wq, oc, r, pad, ws, &mut acc);
     for ni in 0..n {
         for o in 0..oc {
             let deq = a_scale.scale * w_scales[o];
@@ -468,7 +526,8 @@ fn forward_spatial_ntt(
             }
         }
     }
-    out
+    ws.give_i8(xq);
+    ws.give_i64(acc);
 }
 
 /// Collect per-frequency max |BᵀxB| statistics over a batch (calibration).

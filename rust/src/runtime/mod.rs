@@ -115,6 +115,70 @@ mod pjrt_impl {
 
 pub use pjrt_impl::Executor;
 
+use crate::engine::Workspace;
+use crate::nn::{Model, Tensor};
+use anyhow::Result;
+
+/// A pure-Rust executor over the engine stack: the same batch-in /
+/// logits-out surface as the PJRT [`Executor`], but running the
+/// [`Model`] graph through workspace-backed conv plans. This is the
+/// serving path that needs no AOT artifacts and no `pjrt` feature —
+/// and, given a long-lived [`Workspace`] via
+/// [`EngineExecutor::run_with`], does zero workspace heap allocation
+/// per batch in steady state.
+pub struct EngineExecutor {
+    model: Model,
+    /// expected input shape (NCHW)
+    pub input_dims: Vec<usize>,
+    /// number of classes in the logits output
+    pub out_classes: usize,
+}
+
+impl EngineExecutor {
+    pub fn from_model(model: Model, input_dims: Vec<usize>, out_classes: usize) -> EngineExecutor {
+        assert_eq!(input_dims.len(), 4, "NCHW input dims expected, got {input_dims:?}");
+        EngineExecutor { model, input_dims, out_classes }
+    }
+
+    pub fn platform(&self) -> String {
+        "rust-engine".into()
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.input_dims[0]
+    }
+
+    /// Run one batch out of a caller workspace: input is NCHW f32 with
+    /// dims == `input_dims`; returns the [N, classes] logits. The batch
+    /// is copied once, into an arena buffer the graph's `Input` node
+    /// takes ownership of (`forward_ws_owned`).
+    pub fn run_with(&self, batch: &[f32], ws: &mut Workspace) -> Result<Vec<f32>> {
+        let expect: usize = self.input_dims.iter().product();
+        anyhow::ensure!(batch.len() == expect, "batch size mismatch: {} vs {expect}", batch.len());
+        let mut xbuf = ws.take_f32(expect);
+        xbuf.copy_from_slice(batch);
+        let x = Tensor::from_vec(&self.input_dims, xbuf);
+        let y = self.model.forward_ws_owned(x, ws);
+        let n = self.input_dims[0];
+        anyhow::ensure!(
+            y.len() == n * self.out_classes,
+            "model produced {} logits, expected {}x{}",
+            y.len(),
+            n,
+            self.out_classes
+        );
+        let logits = y.data.clone();
+        ws.give_f32(y.data);
+        Ok(logits)
+    }
+
+    /// Run one batch with a throwaway workspace.
+    pub fn run(&self, batch: &[f32]) -> Result<Vec<f32>> {
+        let mut ws = Workspace::new();
+        self.run_with(batch, &mut ws)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     // Executor integration tests live in rust/tests/runtime_e2e.rs (they

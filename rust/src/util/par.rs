@@ -44,25 +44,82 @@ pub fn par_for(n: usize, f: impl Fn(usize) + Sync) {
 }
 
 /// Parallel map over `0..n` collecting results in index order.
+///
+/// Results are written once, directly into the output vector's spare
+/// capacity through disjoint per-thread chunks — no `Vec<Option<T>>`
+/// build-then-unwrap second pass, no per-slot `Option` overhead.
+///
+/// Panic behavior: if `f` panics, the panic propagates after all
+/// workers join and already-computed results are leaked (never
+/// dropped), not double-freed — safe, but heap-owning `T`s should not
+/// rely on `Drop` running when the map aborts.
 pub fn par_map<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
-    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let mut out: Vec<T> = Vec::with_capacity(n);
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        out.extend((0..n).map(f));
+        return out;
+    }
+    let chunk = n.div_ceil(threads);
     {
-        let slots = out.as_mut_slice();
-        // SAFETY-free approach: split into per-thread disjoint chunks.
-        let threads = num_threads().min(n.max(1));
-        let chunk = n.div_ceil(threads.max(1));
+        let slots = &mut out.spare_capacity_mut()[..n];
         std::thread::scope(|s| {
             for (t, slot_chunk) in slots.chunks_mut(chunk).enumerate() {
                 let f = &f;
                 s.spawn(move || {
                     for (j, slot) in slot_chunk.iter_mut().enumerate() {
-                        *slot = Some(f(t * chunk + j));
+                        slot.write(f(t * chunk + j));
                     }
                 });
             }
         });
     }
-    out.into_iter().map(|x| x.unwrap()).collect()
+    // SAFETY: the scope joined every worker; together the disjoint chunks
+    // cover exactly `out[..n]`, so all n slots are initialized. A worker
+    // panic propagates out of the scope above before reaching this line.
+    unsafe { out.set_len(n) };
+    out
+}
+
+/// Process disjoint `chunk_size`-element chunks of `data` in parallel,
+/// giving each worker exclusive `&mut` access to one element of
+/// `states` — the pattern conv executors use to combine per-worker
+/// workspace buffers with direct (mutex-free) output writes. Chunks are
+/// distributed contiguously, so which state processes which chunk is
+/// deterministic for a fixed thread count.
+pub fn par_chunks_states<S: Send, T: Send>(
+    data: &mut [T],
+    chunk_size: usize,
+    states: &mut [S],
+    f: impl Fn(&mut S, usize, &mut [T]) + Sync,
+) {
+    assert!(chunk_size > 0, "chunk_size must be positive");
+    assert!(!states.is_empty(), "need at least one worker state");
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_size).enumerate().collect();
+    let nc = chunks.len();
+    if states.len() <= 1 || nc <= 1 {
+        let st = &mut states[0];
+        for (i, c) in chunks {
+            f(st, i, c);
+        }
+        return;
+    }
+    let per = nc.div_ceil(states.len());
+    std::thread::scope(|s| {
+        let mut iter = chunks.into_iter();
+        for st in states.iter_mut() {
+            let batch: Vec<(usize, &mut [T])> = iter.by_ref().take(per).collect();
+            if batch.is_empty() {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || {
+                for (i, c) in batch {
+                    f(st, i, c);
+                }
+            });
+        }
+    });
 }
 
 /// Process disjoint mutable chunks of a slice in parallel:
@@ -131,5 +188,44 @@ mod tests {
         par_for(0, |_| panic!("should not run"));
         let v = par_map(1, |i| i);
         assert_eq!(v, vec![0]);
+        let e: Vec<usize> = par_map(0, |i| i);
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn par_map_non_copy_results() {
+        let v = par_map(97, |i| vec![i; 3]);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, vec![i; 3]);
+        }
+    }
+
+    #[test]
+    fn par_chunks_states_disjoint_and_deterministic() {
+        let mut data = vec![0usize; 53];
+        let mut states = vec![0usize; 4]; // per-worker chunk counters
+        par_chunks_states(&mut data, 5, &mut states, |st, ci, chunk| {
+            *st += 1;
+            for x in chunk.iter_mut() {
+                *x = ci + 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x > 0));
+        assert_eq!(data[0], 1);
+        assert_eq!(data[52], 11);
+        let total: usize = states.iter().sum();
+        assert_eq!(total, 11, "every chunk processed exactly once");
+    }
+
+    #[test]
+    fn par_chunks_states_single_worker() {
+        let mut data = vec![0u8; 7];
+        let mut states = vec![()];
+        par_chunks_states(&mut data, 3, &mut states, |_, ci, chunk| {
+            for x in chunk.iter_mut() {
+                *x = ci as u8 + 1;
+            }
+        });
+        assert_eq!(data, vec![1, 1, 1, 2, 2, 2, 3]);
     }
 }

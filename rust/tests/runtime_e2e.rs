@@ -114,3 +114,76 @@ fn missing_artifact_path_errors() {
     let e = Executor::load(Path::new("artifacts/definitely_missing.hlo.txt"), &[1, 3, 32, 32], 10);
     assert!(e.is_err());
 }
+
+/// The workspace e2e property (needs no artifacts and no `pjrt`): a
+/// server over the pure-Rust `EngineExecutor` keeps one `Workspace` per
+/// worker, so once the first batch has warmed the pools, serving does
+/// zero workspace heap allocations per request.
+#[test]
+fn engine_server_steady_state_is_alloc_free() {
+    use sfc::engine::{default_selector, ConvDesc};
+    use sfc::nn::graph::ConvParams;
+    use sfc::nn::{Model, Op, Tensor};
+    use sfc::runtime::EngineExecutor;
+    use sfc::util::Pcg32;
+
+    let mut rng = Pcg32::seeded(81);
+    let mut rand_t = |dims: &[usize], sigma: f64| {
+        let mut t = Tensor::zeros(dims);
+        rng.fill_gaussian(&mut t.data, sigma);
+        t
+    };
+    let mut m = Model::new("serve-toy");
+    let inp = m.push(Op::Input, vec![], "input");
+    let desc = ConvDesc::new(4, 3, 8, 8, 8, 3, 1, 1);
+    let c1 = m.push(
+        Op::Conv {
+            params: ConvParams {
+                weight: rand_t(&[8, 3, 3, 3], 0.3),
+                bias: vec![0.1; 8],
+                stride: 1,
+                pad: 1,
+            },
+            plan: default_selector().plan(&desc).unwrap(),
+            quantized: None,
+        },
+        vec![inp],
+        "conv1",
+    );
+    let r1 = m.push(Op::Relu, vec![c1], "relu1");
+    let gap = m.push(Op::GlobalAvgPool, vec![r1], "gap");
+    m.push(Op::Linear { weight: rand_t(&[10, 8], 0.5), bias: vec![0.0; 10] }, vec![gap], "fc");
+
+    let exe = EngineExecutor::from_model(m, vec![4, 3, 8, 8], 10);
+    let server = Server::start(
+        move || Ok(exe),
+        ServerConfig { batch_size: 4, queue_depth: 32, batch_timeout_ms: 1 },
+    )
+    .unwrap();
+    let sample = 3 * 8 * 8;
+    let submit_wait = |k: usize| {
+        let handles: Vec<_> =
+            (0..k).map(|_| server.submit(vec![0.5f32; sample]).unwrap()).collect();
+        for h in handles {
+            let r = h.wait().unwrap();
+            assert_eq!(r.logits.len(), 10);
+            assert!(r.logits.iter().all(|v| v.is_finite()));
+        }
+    };
+    // warm-up: every batch has identical shapes, so one wave fills the pools
+    submit_wait(8);
+    let warm_allocs = server.ws_heap_allocs();
+    assert!(warm_allocs > 0, "warm-up must have populated the workspace");
+    assert!(server.ws_peak_bytes() > 0);
+    // steady state: no new heap fallbacks across many more requests
+    submit_wait(16);
+    assert_eq!(
+        server.ws_heap_allocs(),
+        warm_allocs,
+        "steady-state serving must perform zero workspace heap allocations"
+    );
+    // the process-wide mirror in coordinator::metrics saw the same traffic
+    let (peak, allocs) = sfc::coordinator::metrics::workspace_counters();
+    assert!(peak > 0 && allocs >= warm_allocs);
+    server.shutdown();
+}

@@ -1,0 +1,171 @@
+//! Workspace-reuse property tests (cross-layer): running any plan
+//! through one reused `Workspace` — including interleaving two different
+//! shapes — must be bit-identical to fresh-allocation runs, for the
+//! float and int8 paths; and once warm, execution must be heap-alloc
+//! free. Also covers `Model::forward_ws` against `Model::forward_all`.
+
+use sfc::engine::{default_selector, ConvDesc, ConvPlan, QuantSpec, Workspace};
+use sfc::nn::graph::ConvParams;
+use sfc::nn::{Model, Op, Tensor};
+use sfc::quant::qconv::{collect_act_maxima, QCalib, QConvLayer};
+use sfc::util::Pcg32;
+use std::sync::Arc;
+
+fn rand_tensor(dims: &[usize], rng: &mut Pcg32, sigma: f64) -> Tensor {
+    let mut t = Tensor::zeros(dims);
+    rng.fill_gaussian(&mut t.data, sigma);
+    t
+}
+
+const ENGINES: [&str; 7] =
+    ["direct", "im2col-gemm", "Wino(4x4,3x3)", "SFC-6(6x6,3x3)", "SFC-6(7x7,3x3)", "FFT", "NTT"];
+
+#[test]
+fn float_paths_bit_identical_under_workspace_reuse() {
+    let sel = default_selector();
+    let mut rng = Pcg32::seeded(71);
+    let d1 = ConvDesc::new(2, 3, 4, 12, 12, 3, 1, 1);
+    let d2 = ConvDesc::new(1, 2, 3, 9, 7, 3, 1, 1);
+    let x1 = rand_tensor(&[2, 3, 12, 12], &mut rng, 1.0);
+    let w1 = rand_tensor(&[4, 3, 3, 3], &mut rng, 0.3);
+    let bias1 = vec![0.2, -0.1, 0.0, 0.4];
+    let x2 = rand_tensor(&[1, 2, 9, 7], &mut rng, 1.0);
+    let w2 = rand_tensor(&[3, 2, 3, 3], &mut rng, 0.3);
+    for name in ENGINES {
+        let p1 = sel.plan_named(name, &d1).unwrap();
+        let p2 = sel.plan_named(name, &d2).unwrap();
+        // fresh-allocation reference
+        let want1 = p1.run(&x1, &w1, &bias1);
+        let want2 = p2.run(&x2, &w2, &[]);
+        // one reused workspace, shapes interleaved, first shape repeated
+        let mut ws = Workspace::new();
+        let a = p1.run_with(&x1, &w1, &bias1, &mut ws);
+        let b = p2.run_with(&x2, &w2, &[], &mut ws);
+        let c = p1.run_with(&x1, &w1, &bias1, &mut ws);
+        assert_eq!(a.data, want1.data, "{name}: first reused run");
+        assert_eq!(b.data, want2.data, "{name}: interleaved second shape");
+        assert_eq!(c.data, want1.data, "{name}: repeat after interleave");
+    }
+}
+
+#[test]
+fn int8_paths_bit_identical_under_workspace_reuse() {
+    let sel = default_selector();
+    let mut rng = Pcg32::seeded(72);
+    let x = rand_tensor(&[1, 3, 12, 12], &mut rng, 1.0);
+    let w = rand_tensor(&[4, 3, 3, 3], &mut rng, 0.3);
+    let bias = vec![0.1, 0.0, -0.2, 0.3];
+    let dt = ConvDesc::new(1, 3, 4, 12, 12, 3, 1, 1).with_quant(QuantSpec::transform_default(8));
+    let ds = ConvDesc::new(1, 3, 4, 12, 12, 3, 1, 1).with_quant(QuantSpec::spatial_default(8));
+    let pt = sel.plan_named("SFC-6(6x6,3x3)", &dt).unwrap();
+    let maxima = collect_act_maxima(&x, pt.fast_plan().unwrap(), 1);
+    let qt = QConvLayer::from_plan(pt, &w, bias.clone(), &QCalib::TransformMaxima(&maxima));
+    let calib = QCalib::MaxAbs(x.max_abs());
+    let pd = sel.plan_named("direct", &ds).unwrap();
+    let qd = QConvLayer::from_plan(pd, &w, bias.clone(), &calib);
+    let qn = QConvLayer::from_plan(sel.plan_named("NTT", &ds).unwrap(), &w, bias, &calib);
+    // fresh-allocation references
+    let want = [qt.forward(&x), qd.forward(&x), qn.forward(&x)];
+    // interleave all three layers twice through one workspace
+    let mut ws = Workspace::new();
+    for round in 0..2 {
+        for (layer, want) in [&qt, &qd, &qn].into_iter().zip(&want) {
+            let got = layer.forward_with(&x, &mut ws);
+            assert_eq!(
+                got.data,
+                want.data,
+                "{} round {round} must be bit-identical under reuse",
+                layer.engine()
+            );
+        }
+    }
+}
+
+#[test]
+fn steady_state_is_alloc_free() {
+    let sel = default_selector();
+    let mut rng = Pcg32::seeded(73);
+    let d = ConvDesc::new(2, 3, 4, 14, 14, 3, 1, 1);
+    let x = rand_tensor(&[2, 3, 14, 14], &mut rng, 1.0);
+    let w = rand_tensor(&[4, 3, 3, 3], &mut rng, 0.3);
+    for name in ENGINES {
+        let plan = sel.plan_named(name, &d).unwrap();
+        let mut ws = Workspace::new();
+        let mut out = Tensor::zeros(&plan.out_dims(&x, &w));
+        plan.run_into(&x, &w, &[], &mut ws, &mut out); // warm-up
+        let warm = ws.heap_allocs();
+        for _ in 0..3 {
+            plan.run_into(&x, &w, &[], &mut ws, &mut out);
+        }
+        assert_eq!(ws.heap_allocs(), warm, "{name}: steady state must not allocate");
+        if name != "direct" {
+            assert!(ws.peak_bytes() > 0, "{name}: workspace must be exercised");
+        }
+        assert_eq!(ws.in_use_bytes(), 0, "{name}: all buffers must be returned");
+    }
+}
+
+#[test]
+fn plan_reports_consumable_workspace_bytes() {
+    let sel = default_selector();
+    let d = ConvDesc::new(1, 8, 8, 16, 16, 3, 1, 1);
+    for name in ["im2col-gemm", "SFC-6(6x6,3x3)", "FFT", "NTT"] {
+        let plan = sel.plan_named(name, &d).unwrap();
+        assert!(plan.workspace_bytes() > 0, "{name} must report scratch demand");
+        // pre-warming with the reported size must be legal
+        let ws = Workspace::with_capacity(plan.workspace_bytes());
+        assert!(ws.pooled_bytes() >= plan.workspace_bytes());
+    }
+    let direct = sel.plan_named("direct", &d).unwrap();
+    assert_eq!(direct.workspace_bytes(), 0, "direct accumulates in the output planes");
+}
+
+fn toy_model(rng: &mut Pcg32) -> Model {
+    let sel = default_selector();
+    let mut m = Model::new("ws-toy");
+    let inp = m.push(Op::Input, vec![], "input");
+    let w1 = rand_tensor(&[3, 3, 3, 3], rng, 0.3);
+    let d1 = ConvDesc::new(2, 3, 3, 12, 12, 3, 1, 1);
+    let c1 = m.push(
+        Op::Conv {
+            params: ConvParams { weight: w1, bias: vec![0.1; 3], stride: 1, pad: 1 },
+            plan: sel.plan_named("SFC-6(6x6,3x3)", &d1).unwrap(),
+            quantized: None,
+        },
+        vec![inp],
+        "conv1",
+    );
+    let r1 = m.push(Op::Relu, vec![c1], "relu1");
+    let add = m.push(Op::Add, vec![inp, r1], "res1");
+    let w2 = rand_tensor(&[8, 3, 3, 3], rng, 0.3);
+    let d2 = ConvDesc::new(2, 3, 8, 12, 12, 3, 1, 1);
+    let c2 = m.push(
+        Op::Conv {
+            params: ConvParams { weight: w2, bias: vec![0.0; 8], stride: 1, pad: 1 },
+            plan: Arc::new(ConvPlan::direct(d2)),
+            quantized: None,
+        },
+        vec![add],
+        "conv2",
+    );
+    let gap = m.push(Op::GlobalAvgPool, vec![c2], "gap");
+    let lw = rand_tensor(&[10, 8], rng, 0.5);
+    m.push(Op::Linear { weight: lw, bias: vec![0.05; 10] }, vec![gap], "fc");
+    m
+}
+
+#[test]
+fn model_forward_ws_matches_forward_all_and_reuses_buffers() {
+    let mut rng = Pcg32::seeded(74);
+    let m = toy_model(&mut rng);
+    let x = rand_tensor(&[2, 3, 12, 12], &mut rng, 1.0);
+    let want = m.forward_all(&x).pop().unwrap();
+    let mut ws = Workspace::new();
+    let y1 = m.forward_ws(&x, &mut ws);
+    assert_eq!(y1.data, want.data, "workspace forward must be bit-identical");
+    ws.give_f32(y1.data);
+    let warm = ws.heap_allocs();
+    let y2 = m.forward_ws(&x, &mut ws);
+    assert_eq!(y2.data, want.data, "reused-workspace forward must be bit-identical");
+    assert_eq!(ws.heap_allocs(), warm, "second forward must run entirely from the pool");
+}
