@@ -13,6 +13,7 @@ use crate::linalg::{condition_number, Frac, FracMat, Mat};
 ///   z = Aᵀ ((G f) ⊙ (Bᵀ x)).
 #[derive(Clone, Debug)]
 pub struct Bilinear {
+    /// Table-1 row name (e.g. "SFC-6(6x6,3x3)").
     pub name: String,
     /// outputs per tile
     pub m: usize,
@@ -36,6 +37,7 @@ pub struct Bilinear {
 }
 
 impl Bilinear {
+    /// Inputs per tile: L = M + R − 1.
     pub fn input_len(&self) -> usize {
         self.bt.cols
     }
@@ -111,6 +113,7 @@ impl Bilinear {
         at.matmul(&prod).matmul(&at.transpose())
     }
 
+    /// 2-D nested application in f64, no quantization hooks.
     pub fn apply2d_f64(&self, x: &Mat, f: &Mat) -> Mat {
         self.apply2d_with(x, f, &|v| v, &|v| v)
     }

@@ -16,6 +16,7 @@ use crate::linalg::{Frac, FracMat};
 /// c_j = Σ_r f̂_r · x_{(j−r) mod N}.
 #[derive(Clone, Debug)]
 pub struct CircularConv {
+    /// circular length N
     pub n: usize,
     /// multiplications
     pub t_c: usize,
@@ -28,6 +29,7 @@ pub struct CircularConv {
 }
 
 impl CircularConv {
+    /// Build the N-point circular convolution from the symbolic DFT.
     pub fn new(n: usize) -> CircularConv {
         let dft = SymDft::new(n);
         let f = dft.f_mat();

@@ -20,16 +20,25 @@ use crate::linalg::{Frac, FracMat};
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Comp {
     /// X_m is real (m = 0 or m = N/2): one component.
-    Single { m: usize },
+    Single {
+        /// bin index
+        m: usize,
+    },
     /// X_m = u + v·s: two components (stored consecutively).
-    Pair { m: usize },
+    Pair {
+        /// bin index
+        m: usize,
+    },
 }
 
 /// Symbolic DFT plan for N points.
 #[derive(Clone, Debug)]
 pub struct SymDft {
+    /// transform length N
     pub n: usize,
+    /// reduction rule of the symbol s
     pub rule: Rule,
+    /// real-component layout of the spectrum
     pub comps: Vec<Comp>,
     /// Number of real components (= N for real input).
     pub n_comps: usize,
@@ -39,6 +48,7 @@ pub struct SymDft {
 }
 
 impl SymDft {
+    /// Symbolic DFT plan for N points (N ∈ {2, 3, 4, 6}).
     pub fn new(n: usize) -> SymDft {
         let rule = Rule::for_points(n);
         let mut comps = Vec::new();

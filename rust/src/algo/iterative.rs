@@ -95,7 +95,9 @@ fn tiled_conv2d_view(
 
 /// Multiplication-count model for the paper's two-iteration scheme.
 pub struct IterativeCost {
+    /// large-kernel size R the model was evaluated for
     pub kernel: usize,
+    /// feature-map size the model was evaluated for
     pub feature: usize,
     /// mults for iteration-1 only (tiled SFC per sub-kernel)
     pub one_iter_mults: usize,

@@ -7,7 +7,9 @@
 //! full output bit-width (mod-p words), so quantized datapaths gain
 //! nothing from int8 inputs.
 
+/// The NTT prime p = 119·2²³ + 1.
 pub const P: u64 = 998_244_353;
+/// A primitive root of F_p (generates the 2²³-th roots of unity).
 pub const PRIMITIVE_ROOT: u64 = 3;
 
 #[inline]

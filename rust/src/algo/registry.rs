@@ -7,10 +7,14 @@
 use super::bilinear::Bilinear;
 use super::{correction, toomcook};
 
+/// Algorithm family of one catalog row.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AlgoKind {
+    /// nested-loop spatial convolution
     Direct,
+    /// Toom-Cook/Winograd minimal filtering
     Winograd,
+    /// the paper's symbolic-Fourier algorithm with corrections
     Sfc,
     /// whole-image float FFT convolution (related work, §2)
     Fft,
@@ -23,7 +27,9 @@ pub enum AlgoKind {
 /// live in [`crate::engine::exec`] and `n`/`m` are 0.
 #[derive(Clone, Debug)]
 pub struct AlgoSpec {
+    /// catalog name (also the engine / CLI handle)
     pub name: &'static str,
+    /// algorithm family
     pub kind: AlgoKind,
     /// transform points (SFC) — 0 for direct/Winograd/FFT/NTT
     pub n: usize,

@@ -19,10 +19,15 @@ use std::ops::{Add, Mul, Neg, Sub};
 /// real sequences via Hermitian symmetry).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Rule {
+    /// DFT length N this rule belongs to
     pub n: usize,
+    /// s² = c0 + c1·s: constant coefficient
     pub c0: i128,
+    /// s² = c0 + c1·s: linear coefficient
     pub c1: i128,
+    /// conj(s) = k0 + k1·s: constant coefficient
     pub k0: i128,
+    /// conj(s) = k0 + k1·s: linear coefficient
     pub k1: i128,
 }
 
@@ -60,20 +65,26 @@ impl Rule {
 /// An element a + b·s of the ring.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Sym {
+    /// rational part
     pub a: Frac,
+    /// coefficient of the symbol s
     pub b: Frac,
+    /// the ring's reduction rule
     pub rule: Rule,
 }
 
 impl Sym {
+    /// The element a + b·s.
     pub fn new(rule: Rule, a: Frac, b: Frac) -> Sym {
         Sym { a, b, rule }
     }
 
+    /// The additive identity.
     pub fn zero(rule: Rule) -> Sym {
         Sym::new(rule, Frac::ZERO, Frac::ZERO)
     }
 
+    /// The multiplicative identity.
     pub fn one(rule: Rule) -> Sym {
         Sym::new(rule, Frac::ONE, Frac::ZERO)
     }
@@ -83,10 +94,12 @@ impl Sym {
         Sym::new(rule, Frac::ZERO, Frac::ONE)
     }
 
+    /// The rational integer v.
     pub fn int(rule: Rule, v: i128) -> Sym {
         Sym::new(rule, Frac::int(v), Frac::ZERO)
     }
 
+    /// True if both components are zero.
     pub fn is_zero(&self) -> bool {
         self.a.is_zero() && self.b.is_zero()
     }

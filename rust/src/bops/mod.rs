@@ -10,17 +10,25 @@
 use crate::algo::Bilinear;
 use crate::nn::model::ConvShape;
 
+/// Accumulator width charged for cross-channel reduction (the common
+/// int32 accumulator, every method).
 pub const ACC_BITS: u64 = 32;
 
+/// Per-stage BOPs of one conv layer under one execution scheme.
 #[derive(Clone, Copy, Debug)]
 pub struct BopsBreakdown {
+    /// input-transform additions (Bᵀ·x·B), at the grown bit-width
     pub transform_in: u64,
+    /// output-transform additions (Aᵀ·y·A), at accumulator width
     pub transform_out: u64,
+    /// the ⊙ stage's multiplications
     pub multiply: u64,
+    /// cross-channel accumulation (int32 adds)
     pub accumulate: u64,
 }
 
 impl BopsBreakdown {
+    /// Sum of all four stages.
     pub fn total(&self) -> u64 {
         self.transform_in + self.transform_out + self.multiply + self.accumulate
     }
@@ -34,7 +42,19 @@ pub fn mul_bops(bits: u64) -> u64 {
 
 /// BOPs for one conv layer executed directly at `a_bits`×`w_bits`.
 pub fn direct_bops(shape: &ConvShape, a_bits: u64, w_bits: u64) -> BopsBreakdown {
-    let macs = shape.direct_macs();
+    direct_bops_grouped(shape, 1, a_bits, w_bits)
+}
+
+/// Grouped-direct BOPs: each output channel reduces over only its
+/// group's `ic/groups` input channels, so MACs shrink by `groups`
+/// (depthwise = `groups == ic`).
+pub fn direct_bops_grouped(
+    shape: &ConvShape,
+    groups: u64,
+    a_bits: u64,
+    w_bits: u64,
+) -> BopsBreakdown {
+    let macs = shape.direct_macs() / groups.max(1);
     let mbits = a_bits.max(w_bits);
     BopsBreakdown {
         transform_in: 0,
@@ -48,6 +68,20 @@ pub fn direct_bops(shape: &ConvShape, a_bits: u64, w_bits: u64) -> BopsBreakdown
 /// whose transform-domain operands are quantized to `a_bits`/`w_bits`.
 /// The filter transform is amortized (weights transformed once offline).
 pub fn fast_bops(shape: &ConvShape, algo: &Bilinear, a_bits: u64, w_bits: u64) -> BopsBreakdown {
+    fast_bops_grouped(shape, algo, 1, a_bits, w_bits)
+}
+
+/// Grouped tiled-bilinear BOPs. The input/output transforms touch every
+/// channel exactly once regardless of grouping, but the per-frequency ⊙
+/// reduction runs `groups` independent `[tiles×IC/g]·[IC/g×OC/g]`
+/// blocks, so the multiply/accumulate terms shrink by `groups`.
+pub fn fast_bops_grouped(
+    shape: &ConvShape,
+    algo: &Bilinear,
+    groups: u64,
+    a_bits: u64,
+    w_bits: u64,
+) -> BopsBreakdown {
     assert_eq!(shape.r, algo.r, "algorithm kernel mismatch");
     assert_eq!(shape.stride, 1, "fast conv is stride-1");
     let m = algo.m as u64;
@@ -66,8 +100,9 @@ pub fn fast_bops(shape: &ConvShape, algo: &Bilinear, a_bits: u64, w_bits: u64) -
     let in_adds_per_tile = bt_adds_1d * l + bt_adds_1d * t;
     let transform_in = tiles * ic * in_adds_per_tile * in_bits;
 
-    // ⊙: T² mults per (tile, ic→oc pair) at quantized width + i32 accumulate
-    let odot = tiles * ic * oc * t * t;
+    // ⊙: T² mults per (tile, within-group ic→oc pair) at quantized
+    // width + i32 accumulate
+    let odot = tiles * ic * oc * t * t / groups.max(1);
     let multiply = odot * mul_bops(a_bits.max(w_bits));
     let accumulate = odot * ACC_BITS;
 
@@ -147,6 +182,20 @@ mod tests {
         let b = fast_bops(&shape(), &sfc(6, 6, 3), 8, 8);
         let frac = (b.transform_in + b.transform_out) as f64 / b.total() as f64;
         assert!(frac < 0.2, "transform fraction {frac}");
+    }
+
+    #[test]
+    fn grouped_bops_scale_only_the_odot_terms() {
+        let s = shape();
+        let dense = direct_bops(&s, 8, 8).total();
+        let g4 = direct_bops_grouped(&s, 4, 8, 8).total();
+        assert_eq!(dense, 4 * g4, "direct BOPs shrink by the group count");
+        let a = sfc(6, 7, 3);
+        let f_dense = fast_bops(&s, &a, 8, 8);
+        let f_dw = fast_bops_grouped(&s, &a, s.ic as u64, 8, 8);
+        assert_eq!(f_dense.transform_in, f_dw.transform_in, "transforms touch every channel");
+        assert_eq!(f_dense.transform_out, f_dw.transform_out);
+        assert_eq!(f_dense.multiply, f_dw.multiply * s.ic as u64, "⊙ shrinks by groups");
     }
 
     #[test]

@@ -68,16 +68,24 @@ impl ModelRunner for EngineExecutor {
     }
 }
 
+/// Batcher sizing/timing knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
+    /// fixed execution batch size (tail batches are zero-padded)
     pub batch_size: usize,
+    /// bounded request-queue depth (backpressure)
     pub queue_depth: usize,
+    /// max wait for stragglers before executing a partial batch
     pub batch_timeout_ms: u64,
 }
 
+/// One request's completed result.
 pub struct Response {
+    /// the request's logits row
     pub logits: Vec<f32>,
+    /// index of the winning class
     pub argmax: usize,
+    /// enqueue-to-completion latency in seconds
     pub latency_s: f64,
 }
 
@@ -93,6 +101,7 @@ pub struct Pending {
 }
 
 impl Pending {
+    /// Block until the batcher completes this request.
     pub fn wait(self) -> Result<Response> {
         self.rx
             .recv()
@@ -111,6 +120,8 @@ struct WorkerStats {
     ws_heap_allocs: AtomicU64,
 }
 
+/// Handle to a running batcher: submit requests, read worker stats,
+/// shut down.
 pub struct Server {
     tx: SyncSender<Request>,
     stop: Arc<AtomicBool>,
@@ -173,6 +184,7 @@ impl Server {
         Ok(Pending { rx })
     }
 
+    /// Number of batches the worker has executed so far.
     pub fn batches_executed(&self) -> u64 {
         self.batches.load(Ordering::Relaxed)
     }
@@ -189,6 +201,7 @@ impl Server {
         self.stats.ws_heap_allocs.load(Ordering::Relaxed)
     }
 
+    /// Stop the worker thread and join it.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         drop(self.tx.clone()); // original tx dropped in Drop

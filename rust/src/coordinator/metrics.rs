@@ -32,17 +32,25 @@ pub fn workspace_counters() -> (u64, u64) {
     crate::engine::workspace::global_counters()
 }
 
+/// Latency summary over a set of per-request samples (seconds).
 #[derive(Clone, Copy, Debug)]
 pub struct LatencyStats {
+    /// sample count
     pub n: usize,
+    /// arithmetic mean
     pub mean: f64,
+    /// median
     pub p50: f64,
+    /// 95th percentile
     pub p95: f64,
+    /// 99th percentile
     pub p99: f64,
+    /// worst sample
     pub max: f64,
 }
 
 impl LatencyStats {
+    /// Summarize a non-empty sample set.
     pub fn from_samples(samples: &[f64]) -> LatencyStats {
         assert!(!samples.is_empty());
         let mut s = samples.to_vec();

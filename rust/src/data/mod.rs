@@ -17,26 +17,35 @@ use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
+/// Dataset file magic (`SFCD`).
 pub const MAGIC: &[u8; 4] = b"SFCD";
 
 /// An image-classification dataset in CHW f32 layout.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// sample count
     pub n: usize,
+    /// channels per image
     pub c: usize,
+    /// image height
     pub h: usize,
+    /// image width
     pub w: usize,
+    /// number of label classes
     pub n_classes: usize,
+    /// per-sample class labels
     pub labels: Vec<u8>,
     /// n × c × h × w, sample-major
     pub images: Vec<f32>,
 }
 
 impl Dataset {
+    /// Floats per image (C·H·W).
     pub fn sample_len(&self) -> usize {
         self.c * self.h * self.w
     }
 
+    /// One image as a CHW slice.
     pub fn image(&self, i: usize) -> &[f32] {
         let s = self.sample_len();
         &self.images[i * s..(i + 1) * s]
@@ -56,6 +65,7 @@ impl Dataset {
         }
     }
 
+    /// Write the dataset in the SFCD binary format.
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         f.write_all(MAGIC)?;
@@ -69,6 +79,7 @@ impl Dataset {
         Ok(())
     }
 
+    /// Read a dataset written by [`Dataset::save`].
     pub fn load(path: &Path) -> Result<Dataset> {
         let mut f = std::io::BufReader::new(
             std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,

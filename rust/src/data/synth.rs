@@ -11,8 +11,11 @@
 use super::Dataset;
 use crate::util::Pcg32;
 
+/// Number of texture classes.
 pub const CLASSES: usize = 10;
+/// Image height/width in pixels.
 pub const SIZE: usize = 32;
+/// Color channels per image.
 pub const CHANNELS: usize = 3;
 
 /// Generate `n` labelled samples (deterministic in `seed`).

@@ -21,11 +21,14 @@ use std::sync::{Arc, Mutex, OnceLock};
 /// different engines for one descriptor).
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct PlanKey {
+    /// the convolution problem the plan solves
     pub desc: ConvDesc,
+    /// selection mode that produced the plan (engine name or policy tag)
     pub mode: String,
 }
 
 impl PlanKey {
+    /// Key for `desc` planned under `mode`.
     pub fn new(desc: ConvDesc, mode: &str) -> PlanKey {
         PlanKey { desc, mode: mode.to_string() }
     }
@@ -39,6 +42,7 @@ pub struct PlanCache {
 }
 
 impl PlanCache {
+    /// An empty cache.
     pub fn new() -> PlanCache {
         PlanCache { map: Mutex::new(HashMap::new()), hits: AtomicU64::new(0), misses: AtomicU64::new(0) }
     }
@@ -63,22 +67,27 @@ impl PlanCache {
         Ok(plan)
     }
 
+    /// Lookups served from the cache.
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }
 
+    /// Lookups that had to build a plan.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Number of cached plans.
     pub fn len(&self) -> usize {
         self.map.lock().unwrap().len()
     }
 
+    /// True when no plans are cached.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Drop every cached plan (counters are kept).
     pub fn clear(&self) {
         self.map.lock().unwrap().clear();
     }

@@ -2,10 +2,14 @@
 //! from the "how" (engines) and the "ready-to-run" (plans).
 //!
 //! A [`ConvDesc`] fully describes one conv layer invocation: tensor
-//! shapes, stride/pad geometry and (optionally) the quantization scheme
-//! of §5 (bit-widths + scale-group granularity per operand). Descriptors
-//! are small, hashable values — they key the [`crate::engine::PlanCache`]
+//! shapes, stride/pad geometry, channel grouping (dense, grouped or
+//! depthwise) and (optionally) the quantization scheme of §5
+//! (bit-widths + scale-group granularity per operand). Descriptors are
+//! small, hashable values — they key the [`crate::engine::PlanCache`]
 //! and parameterize every engine's `supports`/`plan`/`cost_model`.
+//! Descriptors with many axes are assembled with [`ConvDescBuilder`]
+//! ([`ConvDesc::builder`]) instead of ever-growing positional argument
+//! lists.
 
 use crate::nn::model::ConvShape;
 use crate::quant::Granularity;
@@ -14,9 +18,13 @@ use crate::quant::Granularity;
 /// and scale-group granularity for weights and activations.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct QuantSpec {
+    /// weight bit-width
     pub w_bits: u32,
+    /// activation bit-width
     pub a_bits: u32,
+    /// weight scale-group granularity
     pub w_gran: Granularity,
+    /// activation scale-group granularity
     pub a_gran: Granularity,
 }
 
@@ -47,26 +55,58 @@ impl QuantSpec {
 /// Full description of one 2-D convolution problem (NCHW, square kernel).
 ///
 /// `quant: None` means float execution; `Some(spec)` asks engines for
-/// their low-precision path with the given scheme. Shape-identical layers
-/// produce equal descriptors, which is what makes plan caching effective
-/// across the repeated blocks of ResNet/VGG topologies.
+/// their low-precision path with the given scheme. `groups` splits the
+/// channel axes into independent convolutions (`groups == ic` is the
+/// depthwise case); weight tensors for a grouped descriptor are
+/// `[OC, IC/groups, R, R]`. Shape-identical layers produce equal
+/// descriptors, which is what makes plan caching effective across the
+/// repeated blocks of ResNet/VGG/MobileNet topologies.
+///
+/// ```
+/// use sfc::engine::ConvDesc;
+///
+/// // dense 3×3 stride-1: 32×32 input stays 32×32 under pad 1
+/// let d = ConvDesc::new(1, 16, 32, 32, 32, 3, 1, 1);
+/// assert_eq!(d.out_hw(), (32, 32));
+///
+/// // a depthwise variant of the same geometry, via the builder
+/// let dw = ConvDesc::builder(16, 16).hw(32).kernel(3).pad(1).groups(16).build();
+/// assert_eq!(dw.group_channels(), (1, 1));
+/// assert_eq!(dw.macs(), d.macs() / 16 / 2); // ⁄16 channels, ⁄2 oc
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ConvDesc {
     /// batch size the plan is tuned for (kernels accept any batch)
     pub batch: usize,
+    /// input channels (the full tensor's channel count, all groups)
     pub ic: usize,
+    /// output channels (the full tensor's channel count, all groups)
     pub oc: usize,
-    /// input spatial height/width
+    /// input spatial height
     pub h: usize,
+    /// input spatial width
     pub w: usize,
     /// square kernel size
     pub r: usize,
+    /// spatial stride
     pub stride: usize,
+    /// symmetric zero padding
     pub pad: usize,
+    /// channel groups: 1 = dense, `ic` = depthwise; must divide `ic`
+    /// and `oc`
+    pub groups: usize,
+    /// kernel dilation — **reserved**: carried in the descriptor (and
+    /// its hash) so dilated support can land without a key migration,
+    /// but every engine currently requires `dilation == 1`
+    pub dilation: usize,
+    /// quantization scheme (`None` = float execution)
     pub quant: Option<QuantSpec>,
 }
 
 impl ConvDesc {
+    /// A dense (groups = 1) float descriptor. Descriptors with more
+    /// axes (groups, quantization) are assembled with
+    /// [`ConvDesc::builder`] or the `with_*` combinators.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         batch: usize,
@@ -78,19 +118,70 @@ impl ConvDesc {
         stride: usize,
         pad: usize,
     ) -> ConvDesc {
-        assert!(stride >= 1, "stride must be >= 1");
-        assert!(r >= 1, "kernel must be >= 1");
+        let d = ConvDesc {
+            batch,
+            ic,
+            oc,
+            h,
+            w,
+            r,
+            stride,
+            pad,
+            groups: 1,
+            dilation: 1,
+            quant: None,
+        };
+        d.validate();
+        d
+    }
+
+    /// Start a [`ConvDescBuilder`] for the given channel counts.
+    pub fn builder(ic: usize, oc: usize) -> ConvDescBuilder {
+        ConvDescBuilder::new(ic, oc)
+    }
+
+    /// Panic unless the descriptor is internally consistent (divisible
+    /// groups, kernel within the padded input, reserved dilation).
+    fn validate(&self) {
+        assert!(self.stride >= 1, "stride must be >= 1");
+        assert!(self.r >= 1, "kernel must be >= 1");
         assert!(
-            h + 2 * pad >= r && w + 2 * pad >= r,
-            "kernel {r} exceeds padded input {h}x{w} (pad {pad})"
+            self.h + 2 * self.pad >= self.r && self.w + 2 * self.pad >= self.r,
+            "kernel {} exceeds padded input {}x{} (pad {})",
+            self.r,
+            self.h,
+            self.w,
+            self.pad
         );
-        ConvDesc { batch, ic, oc, h, w, r, stride, pad, quant: None }
+        assert!(self.groups >= 1, "groups must be >= 1");
+        assert!(
+            self.ic % self.groups == 0 && self.oc % self.groups == 0,
+            "groups {} must divide ic {} and oc {}",
+            self.groups,
+            self.ic,
+            self.oc
+        );
+        assert_eq!(self.dilation, 1, "dilation is reserved; engines require dilation == 1");
     }
 
     /// Same problem with a quantization scheme attached.
     pub fn with_quant(mut self, spec: QuantSpec) -> ConvDesc {
         self.quant = Some(spec);
         self
+    }
+
+    /// Same problem with a channel grouping (`groups == ic` =
+    /// depthwise). Panics unless `groups` divides both channel counts.
+    pub fn with_groups(mut self, groups: usize) -> ConvDesc {
+        self.groups = groups;
+        self.validate();
+        self
+    }
+
+    /// Per-group channel counts `(ic/groups, oc/groups)` — the GEMM
+    /// block shape of grouped execution.
+    pub fn group_channels(&self) -> (usize, usize) {
+        (self.ic / self.groups, self.oc / self.groups)
     }
 
     /// Output spatial size.
@@ -100,13 +191,16 @@ impl ConvDesc {
         (oh, ow)
     }
 
-    /// Multiply-accumulates for direct execution of the whole batch.
+    /// Multiply-accumulates for direct execution of the whole batch
+    /// (each output channel only reduces over its group's `ic/groups`
+    /// input channels).
     pub fn macs(&self) -> u64 {
         let (oh, ow) = self.out_hw();
-        (self.batch * oh * ow * self.oc * self.ic * self.r * self.r) as u64
+        (self.batch * oh * ow * self.oc * (self.ic / self.groups) * self.r * self.r) as u64
     }
 
-    /// The analytical-model shape (BOPs / FPGA layers use this view).
+    /// The analytical-model shape (BOPs / FPGA layers use this dense
+    /// view; grouped cost models additionally divide by `groups`).
     pub fn shape(&self) -> ConvShape {
         ConvShape {
             ic: self.ic,
@@ -130,6 +224,132 @@ impl ConvDesc {
             Some(q) => (q.a_bits as u64, q.w_bits as u64),
             None => (16, 16),
         }
+    }
+}
+
+/// Fluent construction for [`ConvDesc`] — the growth path for new
+/// descriptor axes (`groups` today, `dilation` when it lands) without
+/// making [`ConvDesc::new`]'s positional argument list any worse.
+///
+/// Defaults: batch 1, 3×3 kernel, stride 1, pad 0, dense (groups 1),
+/// float. The spatial size has no default — call
+/// [`ConvDescBuilder::hw`] (or [`ConvDescBuilder::hw2`]) before
+/// [`ConvDescBuilder::build`].
+///
+/// ```
+/// use sfc::engine::{ConvDesc, QuantSpec};
+///
+/// let d = ConvDesc::builder(32, 64)
+///     .batch(8)
+///     .hw(28)
+///     .kernel(3)
+///     .pad(1)
+///     .groups(4)
+///     .quant(QuantSpec::transform_default(8))
+///     .build();
+/// assert_eq!((d.ic, d.oc, d.groups), (32, 64, 4));
+/// assert_eq!(d.out_hw(), (28, 28));
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct ConvDescBuilder {
+    batch: usize,
+    ic: usize,
+    oc: usize,
+    h: usize,
+    w: usize,
+    r: usize,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    quant: Option<QuantSpec>,
+}
+
+impl ConvDescBuilder {
+    /// Builder for an `ic → oc` convolution (see type-level docs for
+    /// the defaults).
+    pub fn new(ic: usize, oc: usize) -> ConvDescBuilder {
+        ConvDescBuilder {
+            batch: 1,
+            ic,
+            oc,
+            h: 0,
+            w: 0,
+            r: 3,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+            quant: None,
+        }
+    }
+
+    /// Batch size the plan is tuned for.
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Square input spatial size.
+    pub fn hw(self, hw: usize) -> Self {
+        self.hw2(hw, hw)
+    }
+
+    /// Rectangular input spatial size.
+    pub fn hw2(mut self, h: usize, w: usize) -> Self {
+        self.h = h;
+        self.w = w;
+        self
+    }
+
+    /// Square kernel size.
+    pub fn kernel(mut self, r: usize) -> Self {
+        self.r = r;
+        self
+    }
+
+    /// Spatial stride.
+    pub fn stride(mut self, stride: usize) -> Self {
+        self.stride = stride;
+        self
+    }
+
+    /// Symmetric zero padding.
+    pub fn pad(mut self, pad: usize) -> Self {
+        self.pad = pad;
+        self
+    }
+
+    /// Channel groups (`ic` = depthwise).
+    pub fn groups(mut self, groups: usize) -> Self {
+        self.groups = groups;
+        self
+    }
+
+    /// Attach a quantization scheme.
+    pub fn quant(mut self, spec: QuantSpec) -> Self {
+        self.quant = Some(spec);
+        self
+    }
+
+    /// Finish: validates the assembled descriptor (panics on
+    /// inconsistent geometry, e.g. a missing `hw` or indivisible
+    /// groups).
+    pub fn build(self) -> ConvDesc {
+        assert!(self.h > 0 && self.w > 0, "ConvDescBuilder: set the spatial size with .hw(..)");
+        let d = ConvDesc {
+            batch: self.batch,
+            ic: self.ic,
+            oc: self.oc,
+            h: self.h,
+            w: self.w,
+            r: self.r,
+            stride: self.stride,
+            pad: self.pad,
+            groups: self.groups,
+            dilation: 1,
+            quant: self.quant,
+        };
+        d.validate();
+        d
     }
 }
 
@@ -166,5 +386,35 @@ mod tests {
         let d1 = ConvDesc::new(1, 4, 4, 8, 8, 3, 1, 1);
         let d2 = ConvDesc::new(2, 4, 4, 8, 8, 3, 1, 1);
         assert_eq!(d1.macs() * 2, d2.macs());
+    }
+
+    #[test]
+    fn groups_shrink_macs_and_distinguish_descriptors() {
+        let dense = ConvDesc::new(1, 8, 8, 16, 16, 3, 1, 1);
+        let g2 = dense.with_groups(2);
+        let dw = dense.with_groups(8);
+        assert_eq!(dense.macs(), 2 * g2.macs());
+        assert_eq!(dense.macs(), 8 * dw.macs());
+        assert_eq!(dw.group_channels(), (1, 1));
+        assert_ne!(dense, g2);
+        assert_ne!(g2, dw);
+        let mut m: HashMap<ConvDesc, u32> = HashMap::new();
+        m.insert(dense, 0);
+        m.insert(g2, 1);
+        m.insert(dw, 2);
+        assert_eq!(m.len(), 3, "groups must participate in the cache key");
+    }
+
+    #[test]
+    fn builder_round_trips_new() {
+        let a = ConvDesc::new(2, 16, 32, 28, 28, 3, 2, 1);
+        let b = ConvDesc::builder(16, 32).batch(2).hw(28).kernel(3).stride(2).pad(1).build();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn indivisible_groups_panic() {
+        let _ = ConvDesc::new(1, 6, 8, 16, 16, 3, 1, 1).with_groups(4);
     }
 }

@@ -16,60 +16,73 @@ use crate::nn::tensor::Tensor;
 use crate::util::par::{num_threads, par_chunks_states};
 
 /// im2col + GEMM convolution into `out`: lower each image to a
-/// [OH·OW × IC·R·R] matrix (one workspace panel per worker) and reduce
-/// with the shared blocked GEMM directly into the image's output chunk.
-/// Supports any stride/pad; this is the classic GEMM-friendly baseline
-/// (cuDNN's `IMPLICIT_GEMM` ancestor).
+/// [OH·OW × (IC/g)·R·R] matrix per group (one workspace panel per
+/// worker) and reduce with the shared blocked GEMM directly into the
+/// image's output chunk. Supports any stride/pad and any `groups`
+/// (weights `[OC, IC/groups, R, R]`, depthwise included); this is the
+/// classic GEMM-friendly baseline (cuDNN's `IMPLICIT_GEMM` ancestor).
+/// At `groups == 1` it is bit-identical to the historical dense
+/// lowering.
+#[allow(clippy::too_many_arguments)]
 pub fn conv2d_im2col_into(
     x: &Tensor,
     w: &Tensor,
     bias: &[f32],
     stride: usize,
     pad: usize,
+    groups: usize,
     ws: &mut Workspace,
     out: &mut Tensor,
 ) {
     let (n, ic, h, wid) = x.dims4();
-    let (oc, ic2, r, r2) = w.dims4();
-    assert_eq!(ic, ic2, "channel mismatch");
+    let (oc, icg, r, r2) = w.dims4();
+    assert!(groups >= 1 && oc % groups == 0, "groups {groups} must divide oc {oc}");
+    assert_eq!(icg * groups, ic, "weight channels {icg}×{groups} groups vs input {ic}");
     assert_eq!(r, r2, "square kernels only");
     assert!(bias.is_empty() || bias.len() == oc);
+    let ocg = oc / groups;
     let oh = (h + 2 * pad - r) / stride + 1;
     let ow = (wid + 2 * pad - r) / stride + 1;
     out.assert_dims(&[n, oc, oh, ow]);
-    let k = ic * r * r;
+    let k = icg * r * r;
     let npix = oh * ow;
     let workers = num_threads().min(n).max(1);
     let mut states: Vec<Vec<f32>> = (0..workers).map(|_| ws.take_f32(npix * k)).collect();
     par_chunks_states(&mut out.data, oc * npix, &mut states, |col, ni, out_img| {
-        // 1) lowering: col[p][kk], kk = (c·R + ky)·R + kx — the same
-        //    layout as one row of the OC×(IC·R·R) weight matrix.
-        for c in 0..ic {
-            let plane = x.plane(ni, c);
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let p = oy * ow + ox;
-                    let dst = &mut col[p * k + c * r * r..p * k + (c + 1) * r * r];
-                    for ky in 0..r {
-                        let yy = (oy * stride + ky) as isize - pad as isize;
-                        for kx in 0..r {
-                            let xx = (ox * stride + kx) as isize - pad as isize;
-                            dst[ky * r + kx] = if yy >= 0
-                                && (yy as usize) < h
-                                && xx >= 0
-                                && (xx as usize) < wid
-                            {
-                                plane[yy as usize * wid + xx as usize]
-                            } else {
-                                0.0
-                            };
+        for gi in 0..groups {
+            // 1) lowering: col[p][kk], kk = (c_local·R + ky)·R + kx —
+            //    the same layout as one row of the group's
+            //    (OC/g)×((IC/g)·R·R) weight block.
+            for il in 0..icg {
+                let plane = x.plane(ni, gi * icg + il);
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let p = oy * ow + ox;
+                        let dst = &mut col[p * k + il * r * r..p * k + (il + 1) * r * r];
+                        for ky in 0..r {
+                            let yy = (oy * stride + ky) as isize - pad as isize;
+                            for kx in 0..r {
+                                let xx = (ox * stride + kx) as isize - pad as isize;
+                                dst[ky * r + kx] = if yy >= 0
+                                    && (yy as usize) < h
+                                    && xx >= 0
+                                    && (xx as usize) < wid
+                                {
+                                    plane[yy as usize * wid + xx as usize]
+                                } else {
+                                    0.0
+                                };
+                            }
                         }
                     }
                 }
             }
+            // 2) GEMM straight into this group's output rows:
+            //    out[o][p] = Σ_kk W[o][kk]·col[p][kk]
+            let wblk = &w.data[gi * ocg * k..(gi + 1) * ocg * k];
+            let oblk = &mut out_img[gi * ocg * npix..(gi + 1) * ocg * npix];
+            gemm_nt_f32(ocg, npix, k, wblk, col, oblk);
         }
-        // 2) GEMM straight into the output: out[o][p] = Σ_kk W[o][kk]·col[p][kk]
-        gemm_nt_f32(oc, npix, k, &w.data, col, out_img);
         if !bias.is_empty() {
             for (o, &b) in bias.iter().enumerate() {
                 for v in &mut out_img[o * npix..(o + 1) * npix] {
@@ -83,15 +96,17 @@ pub fn conv2d_im2col_into(
     }
 }
 
-/// im2col + GEMM convolution (allocating wrapper).
+/// im2col + GEMM convolution (allocating wrapper). The group count is
+/// inferred from the weight shape (`groups = IC / weight IC`).
 pub fn conv2d_im2col(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, pad: usize) -> Tensor {
-    let (n, _, h, wid) = x.dims4();
-    let (oc, _, r, _) = w.dims4();
+    let (n, ic, h, wid) = x.dims4();
+    let (oc, icg, r, _) = w.dims4();
+    assert!(icg >= 1 && ic % icg == 0, "weight channels {icg} must divide input channels {ic}");
     let oh = (h + 2 * pad - r) / stride + 1;
     let ow = (wid + 2 * pad - r) / stride + 1;
     let mut out = Tensor::zeros(&[n, oc, oh, ow]);
     let mut ws = Workspace::new();
-    conv2d_im2col_into(x, w, bias, stride, pad, &mut ws, &mut out);
+    conv2d_im2col_into(x, w, bias, stride, pad, ic / icg, &mut ws, &mut out);
     out
 }
 

@@ -25,14 +25,14 @@ pub mod select;
 pub mod workspace;
 
 pub use cache::{global as global_plan_cache, PlanCache, PlanKey};
-pub use desc::{ConvDesc, QuantSpec};
+pub use desc::{ConvDesc, ConvDescBuilder, QuantSpec};
 pub use select::{default_selector, AutotuneCfg, Policy, Selector, TuneEntry};
 pub use workspace::Workspace;
 
 use crate::algo::ntt::ntt_odot_bits;
 use crate::algo::registry::{catalog, AlgoKind, AlgoSpec};
-use crate::bops::{direct_bops, fast_bops, mul_bops};
-use crate::nn::conv::{conv2d_direct_into, conv2d_fast_into, FastConvPlan};
+use crate::bops::{direct_bops_grouped, fast_bops_grouped, mul_bops};
+use crate::nn::conv::{conv2d_direct_grouped_into, conv2d_fast_into, FastConvPlan};
 use crate::nn::tensor::Tensor;
 use crate::quant::Granularity;
 use anyhow::{bail, Result};
@@ -41,10 +41,16 @@ use std::sync::{Arc, OnceLock};
 /// How a plan executes. The variants map 1:1 onto the executor kernels;
 /// `Fast` carries the shared transform matrices (Winograd/SFC).
 pub enum PlanKernel {
+    /// nested-loop spatial convolution (grouped included)
     Direct,
+    /// per-group im2col lowering + blocked GEMM
     Im2col,
+    /// tiled bilinear fast convolution (Winograd/SFC), with the shared
+    /// transform matrices
     Fast(Arc<FastConvPlan>),
+    /// whole-image float FFT convolution (dense only)
     Fft,
+    /// whole-image exact int8 NTT convolution (dense only)
     Ntt,
 }
 
@@ -53,8 +59,11 @@ pub enum PlanKernel {
 /// immutable and shared via `Arc` (model graphs, the plan cache and the
 /// quantizer all hold references to the same plan).
 pub struct ConvPlan {
+    /// name of the engine that produced the plan
     pub engine: &'static str,
+    /// the problem the plan was built for
     pub desc: ConvDesc,
+    /// the executor kernel that runs it
     pub kernel: PlanKernel,
 }
 
@@ -116,14 +125,34 @@ impl ConvPlan {
         ws: &mut Workspace,
         out: &mut Tensor,
     ) {
+        // `dilation` is reserved: construction validates it, but the
+        // fields are public, so re-check before running an undilated
+        // kernel on a descriptor someone mutated.
+        assert_eq!(self.desc.dilation, 1, "dilation is reserved; engines require dilation == 1");
         match &self.kernel {
-            PlanKernel::Direct => {
-                conv2d_direct_into(x, w, bias, self.desc.stride, self.desc.pad, out)
+            PlanKernel::Direct => conv2d_direct_grouped_into(
+                x,
+                w,
+                bias,
+                self.desc.stride,
+                self.desc.pad,
+                self.desc.groups,
+                out,
+            ),
+            PlanKernel::Im2col => exec::conv2d_im2col_into(
+                x,
+                w,
+                bias,
+                self.desc.stride,
+                self.desc.pad,
+                self.desc.groups,
+                ws,
+                out,
+            ),
+            PlanKernel::Fast(p) => {
+                conv2d_fast_into(x, w, bias, p, self.desc.pad, self.desc.groups, ws, out)
             }
-            PlanKernel::Im2col => {
-                exec::conv2d_im2col_into(x, w, bias, self.desc.stride, self.desc.pad, ws, out)
-            }
-            PlanKernel::Fast(p) => conv2d_fast_into(x, w, bias, p, self.desc.pad, ws, out),
+            // whole-image frequency engines only plan dense descriptors
             PlanKernel::Fft => exec::conv2d_fft_into(x, w, bias, self.desc.pad, ws, out),
             PlanKernel::Ntt => exec::conv2d_ntt_int8_into(x, w, bias, self.desc.pad, ws, out),
         }
@@ -140,12 +169,15 @@ impl ConvPlan {
         match &self.kernel {
             // direct accumulates in the output planes themselves
             PlanKernel::Direct => 0,
-            PlanKernel::Im2col => workers * oh * ow * d.ic * d.r * d.r * 4,
+            // one [OH·OW × (IC/g)·R·R] lowering panel per worker
+            PlanKernel::Im2col => workers * oh * ow * (d.ic / d.groups) * d.r * d.r * 4,
             PlanKernel::Fast(p) => {
                 let (m, l, t) = (p.m(), p.l(), p.t());
                 let tiles = oh.div_ceil(m) * ow.div_ceil(m);
                 let tt = t * t;
-                let shared = tt * d.oc * d.ic + t * d.r + tt;
+                // transformed weights are [T²][OC][IC/g]; the V/P blocks
+                // cover all groups, so their totals match the dense case
+                let shared = tt * d.oc * (d.ic / d.groups) + t * d.r + tt;
                 let per_worker =
                     tt * tiles * (d.ic + d.oc) + l * l + t * l + 2 * tt + m * t + m * m;
                 (shared + workers * per_worker) * 4
@@ -189,6 +221,19 @@ pub trait ConvEngine: Send + Sync {
 
     /// Build an execution plan. Contract: only called on descriptors for
     /// which [`ConvEngine::supports`] returns true.
+    ///
+    /// ```
+    /// use sfc::engine::{default_selector, ConvDesc};
+    ///
+    /// let desc = ConvDesc::new(1, 4, 8, 16, 16, 3, 1, 1);
+    /// let sel = default_selector();
+    /// // plan through a specific supporting engine...
+    /// let engine = sel.candidates(&desc)[0];
+    /// let plan = engine.plan(&desc).unwrap();
+    /// assert_eq!(plan.desc, desc);
+    /// // ...or let the selector choose (and cache) one
+    /// assert!(sel.plan(&desc).is_ok());
+    /// ```
     fn plan(&self, d: &ConvDesc) -> Result<ConvPlan>;
 
     /// Scratch bytes the executor checks out of its [`Workspace`] for
@@ -205,7 +250,8 @@ pub trait ConvEngine: Send + Sync {
 // Direct
 // ---------------------------------------------------------------------
 
-/// Nested-loop spatial convolution; supports every geometry and the
+/// Nested-loop spatial convolution; supports every geometry — any
+/// stride/pad and any channel grouping including depthwise — plus the
 /// spatial int8 quantization scheme. The universal fallback.
 pub struct DirectEngine;
 
@@ -233,7 +279,7 @@ impl ConvEngine for DirectEngine {
 
     fn cost_model(&self, d: &ConvDesc) -> f64 {
         let (a, w) = d.odot_bits();
-        direct_bops(&d.shape(), a, w).total() as f64 * d.batch as f64
+        direct_bops_grouped(&d.shape(), d.groups as u64, a, w).total() as f64 * d.batch as f64
     }
 }
 
@@ -282,6 +328,7 @@ pub struct BilinearEngine {
 }
 
 impl BilinearEngine {
+    /// Engine wrapping one Winograd/SFC catalog row.
     pub fn new(spec: AlgoSpec) -> BilinearEngine {
         assert!(
             matches!(spec.kind, AlgoKind::Winograd | AlgoKind::Sfc),
@@ -302,6 +349,8 @@ impl ConvEngine for BilinearEngine {
     }
 
     fn supports(&self, d: &ConvDesc) -> bool {
+        // any channel grouping: the per-frequency GEMM simply runs one
+        // [tiles×IC/g]·[IC/g×OC/g] block per group (depthwise included)
         if d.r != self.spec.r || d.stride != 1 {
             return false;
         }
@@ -328,7 +377,8 @@ impl ConvEngine for BilinearEngine {
     fn cost_model(&self, d: &ConvDesc) -> f64 {
         let (a, w) = d.odot_bits();
         let p = self.fast_plan();
-        fast_bops(&d.shape(), &p.algo, a, w).total() as f64 * d.batch as f64
+        fast_bops_grouped(&d.shape(), &p.algo, d.groups as u64, a, w).total() as f64
+            * d.batch as f64
     }
 }
 
@@ -357,8 +407,14 @@ impl ConvEngine for FftEngine {
     }
 
     fn supports(&self, d: &ConvDesc) -> bool {
+        // dense only: the whole-image kernel planes accumulate over every
+        // input channel per output channel (grouped descriptors fall
+        // back to the sliced/tiled engines)
         let (sh, sw) = padded_pow2(d);
-        d.stride == 1 && d.quant.is_none() && d.oc * d.ic * sh * sw <= FREQ_KERNEL_ELEMS_MAX
+        d.stride == 1
+            && d.groups == 1
+            && d.quant.is_none()
+            && d.oc * d.ic * sh * sw <= FREQ_KERNEL_ELEMS_MAX
     }
 
     fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
@@ -418,7 +474,10 @@ impl ConvEngine for NttEngine {
                     && q.w_gran == Granularity::Channel
             }
         };
+        // dense only, like the FFT engine: the frequency-domain channel
+        // accumulation has no grouped slicing
         d.stride == 1
+            && d.groups == 1
             && quant_ok
             && Self::acc_bound_ok(d)
             && d.oc * d.ic * sh * sw <= FREQ_KERNEL_ELEMS_MAX
@@ -466,6 +525,51 @@ pub fn all_engines() -> Vec<Box<dyn ConvEngine>> {
     engines
 }
 
+/// The scenario axes of the ENGINE.md "Engine × scenario support
+/// matrix": representative descriptors probing kernel size, stride,
+/// channel grouping and quantization scheme.
+pub fn support_matrix_scenarios() -> Vec<(&'static str, ConvDesc)> {
+    let base = ConvDesc::new(1, 8, 8, 16, 16, 3, 1, 1);
+    vec![
+        ("3x3 f32", base),
+        ("5x5 f32", ConvDesc::new(1, 8, 8, 16, 16, 5, 1, 2)),
+        ("7x7 f32", ConvDesc::new(1, 8, 8, 16, 16, 7, 1, 3)),
+        ("1x1 f32", ConvDesc::new(1, 8, 8, 16, 16, 1, 1, 0)),
+        ("3x3 s2", ConvDesc::new(1, 8, 8, 16, 16, 3, 2, 1)),
+        ("groups=2", base.with_groups(2)),
+        ("depthwise", base.with_groups(8)),
+        ("int8 transform", base.with_quant(QuantSpec::transform_default(8))),
+        ("int8 spatial", base.with_quant(QuantSpec::spatial_default(8))),
+    ]
+}
+
+/// Render the engine × scenario support matrix as the exact markdown
+/// table ENGINE.md embeds. The table is generated from the
+/// catalog-seeded [`all_engines`] list and each engine's
+/// [`ConvEngine::supports`], and `rust/tests/grouped.rs` asserts
+/// ENGINE.md contains it verbatim — so the documentation cannot
+/// silently drift from the code.
+pub fn support_matrix_markdown() -> String {
+    let scenarios = support_matrix_scenarios();
+    let mut s = String::from("| engine |");
+    for (name, _) in &scenarios {
+        s.push_str(&format!(" {name} |"));
+    }
+    s.push_str("\n|---|");
+    for _ in &scenarios {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    for e in all_engines() {
+        s.push_str(&format!("| {} |", e.name()));
+        for (_, d) in &scenarios {
+            s.push_str(if e.supports(d) { " ✓ |" } else { " — |" });
+        }
+        s.push('\n');
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -502,6 +606,68 @@ mod tests {
                 assert!(!e.supports(&dq), "FFT has no quantized datapath");
             }
         }
+    }
+
+    #[test]
+    fn grouped_support_envelopes_and_execution() {
+        use crate::nn::conv::conv2d_direct_grouped;
+        use crate::util::Pcg32;
+        let engines = all_engines();
+        let g2 = ConvDesc::new(1, 8, 8, 16, 16, 3, 1, 1).with_groups(2);
+        let dw = ConvDesc::new(1, 8, 8, 16, 16, 3, 1, 1).with_groups(8);
+        for e in &engines {
+            match e.name() {
+                "direct" | "im2col-gemm" | "SFC-6(7x7,3x3)" | "Wino(4x4,3x3)" => {
+                    assert!(e.supports(&g2) && e.supports(&dw), "{}", e.name())
+                }
+                "FFT" | "NTT" => {
+                    assert!(!e.supports(&g2) && !e.supports(&dw), "{}", e.name())
+                }
+                _ => {}
+            }
+        }
+        // grouped plans execute and agree with grouped direct
+        let mut rng = Pcg32::seeded(0xD7);
+        for d in [g2, dw] {
+            let mut x = Tensor::zeros(&[1, d.ic, d.h, d.w]);
+            rng.fill_gaussian(&mut x.data, 1.0);
+            let mut w = Tensor::zeros(&[d.oc, d.ic / d.groups, d.r, d.r]);
+            rng.fill_gaussian(&mut w.data, 0.3);
+            let want = conv2d_direct_grouped(&x, &w, &[], 1, 1, d.groups);
+            for e in &engines {
+                if !e.supports(&d) {
+                    continue;
+                }
+                let y = e.plan(&d).unwrap().run(&x, &w, &[]);
+                assert_eq!(y.dims, want.dims, "{} groups {}", e.name(), d.groups);
+                assert!(y.mse(&want) < 1e-8, "{} groups {}: {}", e.name(), d.groups, y.mse(&want));
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_cost_models_shrink_with_groups() {
+        let dense = ConvDesc::new(1, 64, 64, 28, 28, 3, 1, 1);
+        let dw = dense.with_groups(64);
+        assert!(
+            DirectEngine.cost_model(&dw) < DirectEngine.cost_model(&dense) / 32.0,
+            "depthwise direct BOPs must collapse"
+        );
+        let sfc = BilinearEngine::new(crate::algo::registry::by_name("SFC-6(7x7,3x3)").unwrap());
+        assert!(sfc.cost_model(&dw) < sfc.cost_model(&dense));
+    }
+
+    #[test]
+    fn support_matrix_covers_every_engine_and_scenario() {
+        let md = support_matrix_markdown();
+        let n_engines = all_engines().len();
+        let lines: Vec<&str> = md.lines().collect();
+        assert_eq!(lines.len(), 2 + n_engines, "header + separator + one row per engine");
+        assert!(lines[0].contains("depthwise") && lines[0].contains("int8 transform"));
+        // spot-check rows: direct supports everything except transform int8
+        assert!(md.contains("| direct | ✓ | ✓ | ✓ | ✓ | ✓ | ✓ | ✓ | — | ✓ |"), "{md}");
+        // FFT is float, stride-1, dense only
+        assert!(md.contains("| FFT | ✓ | ✓ | ✓ | ✓ | — | — | — | — | — |"), "{md}");
     }
 
     #[test]

@@ -24,7 +24,9 @@ use std::time::Instant;
 /// Micro-benchmark budget for [`Policy::Autotune`].
 #[derive(Clone, Copy, Debug)]
 pub struct AutotuneCfg {
+    /// unmeasured warm-up runs per candidate
     pub warmup: usize,
+    /// measured runs per candidate (median is kept)
     pub iters: usize,
 }
 
@@ -55,10 +57,15 @@ impl Policy {
 /// One row of an autotune report.
 #[derive(Clone, Copy, Debug)]
 pub struct TuneEntry {
+    /// candidate engine name
     pub engine: &'static str,
+    /// measured median seconds per run
     pub median_s: f64,
+    /// the engine's analytic BOPs cost for the descriptor
     pub cost_bops: f64,
+    /// the engine's reported scratch demand
     pub workspace_bytes: usize,
+    /// true on the measured winner
     pub selected: bool,
 }
 
@@ -88,14 +95,17 @@ impl Selector {
         Selector { engines: all_engines(), cache, policy }
     }
 
+    /// The selection policy this selector runs.
     pub fn policy(&self) -> Policy {
         self.policy
     }
 
+    /// The plan cache backing this selector.
     pub fn cache(&self) -> &Arc<PlanCache> {
         &self.cache
     }
 
+    /// Every engine this selector chooses among.
     pub fn engines(&self) -> &[Box<dyn ConvEngine>] {
         &self.engines
     }
@@ -171,10 +181,11 @@ impl Selector {
             bail!("no engine supports descriptor {:?}", d);
         }
         // deterministic synthetic workload of the descriptor's shape
+        // (grouped descriptors carry [OC, IC/g, R, R] weights)
         let mut rng = Pcg32::seeded(0xA070 ^ d.macs());
         let mut x = Tensor::zeros(&[d.batch.max(1), d.ic, d.h, d.w]);
         rng.fill_gaussian(&mut x.data, 1.0);
-        let mut w = Tensor::zeros(&[d.oc, d.ic, d.r, d.r]);
+        let mut w = Tensor::zeros(&[d.oc, d.ic / d.groups, d.r, d.r]);
         rng.fill_gaussian(&mut w.data, 0.2);
         let mut entries = Vec::with_capacity(cands.len());
         for e in cands {
@@ -347,6 +358,18 @@ mod tests {
         // the policy plan agrees with the report's winner modulo caching
         let plan = sel.plan(&d).unwrap();
         assert!(entries.iter().any(|t| t.engine == plan.engine));
+    }
+
+    #[test]
+    fn autotune_handles_depthwise_descriptors() {
+        let sel = isolated(Policy::Autotune(AutotuneCfg { warmup: 0, iters: 1 }));
+        let d = ConvDesc::new(1, 4, 4, 10, 10, 3, 1, 1).with_groups(4);
+        let entries = sel.autotune(&d).unwrap();
+        assert!(entries.len() >= 3, "direct, im2col and the fast engines take depthwise");
+        assert!(entries.iter().all(|t| t.engine != "FFT" && t.engine != "NTT"));
+        assert_eq!(entries.iter().filter(|t| t.selected).count(), 1);
+        let plan = sel.plan(&d).unwrap();
+        assert_eq!(plan.desc.groups, 4);
     }
 
     #[test]

@@ -85,6 +85,18 @@ impl<T: Clone + Default> Pool<T> {
 }
 
 /// A reusable scratch-memory arena for conv execution.
+///
+/// ```
+/// use sfc::engine::Workspace;
+///
+/// let mut ws = Workspace::new();
+/// let buf = ws.take_f32(1024); // first checkout allocates...
+/// ws.give_f32(buf);
+/// let buf = ws.take_f32(512); // ...and reuse satisfies later ones
+/// assert_eq!(ws.heap_allocs(), 1);
+/// ws.give_f32(buf);
+/// assert_eq!(ws.in_use_bytes(), 0);
+/// ```
 pub struct Workspace {
     f32s: Pool<f32>,
     f64s: Pool<f64>,
@@ -116,6 +128,7 @@ macro_rules! typed_pool {
 }
 
 impl Workspace {
+    /// An empty arena (pools fill on first use).
     pub fn new() -> Workspace {
         Workspace {
             f32s: Pool::new(),

@@ -13,6 +13,7 @@ use crate::util::{round_fp16, Pcg32};
 /// Operand rounding applied inside ⊙ (the paper's ⊙_Q).
 #[derive(Clone, Copy, Debug)]
 pub enum OdotFormat {
+    /// IEEE half precision (Table 1's ⊙ format)
     Fp16,
     /// symmetric intN with per-tensor max-abs scaling per trial
     Int(u32),
@@ -23,9 +24,13 @@ pub enum OdotFormat {
 /// One Table-1 style measurement for a single algorithm.
 #[derive(Clone, Debug)]
 pub struct ErrorRow {
+    /// algorithm name (Table-1 row)
     pub name: String,
+    /// output MSE normalized to direct convolution = 1.0
     pub mse: f64,
+    /// κ(Aᵀ) condition number of the overlapped output transform
     pub kappa: f64,
+    /// multiplication count relative to direct convolution
     pub complexity: f64,
 }
 

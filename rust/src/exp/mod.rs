@@ -23,10 +23,12 @@ fn env_n(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Calibration-set size (SFC_CALIB_N override).
 pub fn calib_n() -> usize {
     env_n("SFC_CALIB_N", 128)
 }
 
+/// Evaluation-set size (SFC_EVAL_N override).
 pub fn eval_n() -> usize {
     env_n("SFC_EVAL_N", 256)
 }
@@ -41,6 +43,7 @@ pub fn load_split(data_dir: &str, split: &str, n: usize) -> Result<(Tensor, Vec<
     Ok((t, ds.labels))
 }
 
+/// Load a trained mini-ResNet from the artifacts directory.
 pub fn load_model(data_dir: &str, name: &str) -> Result<Model> {
     let cfg: ResNetCfg = match name {
         "resnet18" => resnet18_cfg(),

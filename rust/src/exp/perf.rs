@@ -1,12 +1,15 @@
 //! `sfc bench` — the conv perf-snapshot harness.
 //!
 //! Measures every supporting engine on a fixed set of ResNet/VGG-scale
-//! layer shapes through the steady-state datapath (`run_into` with a
+//! layer shapes — dense plus grouped/depthwise (the MobileNet-block
+//! workloads) — through the steady-state datapath (`run_into` with a
 //! reused [`Workspace`]), prints a table and — with `--json` — writes a
 //! machine-readable `BENCH_conv.json` so the perf trajectory of the
 //! repo is tracked across PRs: per shape and engine, ns/call, GFLOP/s
 //! (2·MACs / time) and the workspace heap-fallback count during the
-//! timed window (0 = the zero-alloc property held).
+//! timed window (0 = the zero-alloc property held). The JSON format is
+//! versioned ([`BENCH_SCHEMA_VERSION`]) and documented in ENGINE.md
+//! §"BENCH_conv.json schema".
 
 use crate::engine::{default_selector, ConvDesc, QuantSpec, Workspace};
 use crate::nn::Tensor;
@@ -22,10 +25,15 @@ const ENGINES: [&str; 7] =
 /// One measured (shape, engine) cell.
 #[derive(Clone, Debug)]
 pub struct BenchRow {
+    /// shape label (`-dw` = depthwise, `-gN` = grouped)
     pub shape: String,
+    /// engine name (`-int8` suffix = the quantized executor)
     pub engine: String,
+    /// median wall time of one call
     pub ns_per_call: f64,
+    /// 2·MACs / ns_per_call (group-aware MACs)
     pub gflops: f64,
+    /// the plan's reported scratch demand
     pub workspace_bytes: usize,
     /// heap fallbacks observed during the timed window (0 = zero-alloc)
     pub ws_heap_allocs_steady: u64,
@@ -33,17 +41,25 @@ pub struct BenchRow {
 
 /// Benchmark configuration (CLI flags).
 pub struct BenchCfg {
+    /// timed iterations per cell
     pub iters: usize,
+    /// unmeasured warm-up iterations per cell
     pub warmup: usize,
     /// restrict to the smallest shape + float engines (CI smoke)
     pub quick: bool,
 }
 
 fn shapes(quick: bool) -> Vec<(&'static str, ConvDesc)> {
-    let mut v = vec![("28x28x32->32", ConvDesc::new(1, 32, 32, 28, 28, 3, 1, 1))];
+    let mut v = vec![
+        ("28x28x32->32", ConvDesc::new(1, 32, 32, 28, 28, 3, 1, 1)),
+        // depthwise 3×3 (groups == ic): the MobileNet-block workhorse
+        ("28x28x32-dw", ConvDesc::new(1, 32, 32, 28, 28, 3, 1, 1).with_groups(32)),
+    ];
     if !quick {
         v.push(("14x14x128->128", ConvDesc::new(1, 128, 128, 14, 14, 3, 1, 1)));
         v.push(("56x56x64->64", ConvDesc::new(1, 64, 64, 56, 56, 3, 1, 1)));
+        v.push(("56x56x64-dw", ConvDesc::new(1, 64, 64, 56, 56, 3, 1, 1).with_groups(64)));
+        v.push(("14x14x64-g4", ConvDesc::new(1, 64, 64, 14, 14, 3, 1, 1).with_groups(4)));
     }
     v
 }
@@ -61,7 +77,7 @@ pub fn run_bench(cfg: &BenchCfg) -> Result<Vec<BenchRow>> {
     for (label, desc) in shapes(cfg.quick) {
         let mut x = Tensor::zeros(&[desc.batch, desc.ic, desc.h, desc.w]);
         rng.fill_gaussian(&mut x.data, 1.0);
-        let mut w = Tensor::zeros(&[desc.oc, desc.ic, desc.r, desc.r]);
+        let mut w = Tensor::zeros(&[desc.oc, desc.ic / desc.groups, desc.r, desc.r]);
         rng.fill_gaussian(&mut w.data, 0.2);
         let flops = 2.0 * desc.macs() as f64;
         println!("\n=== {label} ({:.1} MMACs) ===", desc.macs() as f64 / 1e6);
@@ -141,11 +157,18 @@ pub fn run_bench(cfg: &BenchCfg) -> Result<Vec<BenchRow>> {
     Ok(rows)
 }
 
+/// The BENCH_conv.json format revision, emitted as `schema_version`.
+/// Bump on any field/semantics change; the schema itself is documented
+/// in ENGINE.md §"BENCH_conv.json schema".
+/// v2: added `schema_version` itself + grouped/depthwise shape rows.
+pub const BENCH_SCHEMA_VERSION: u32 = 2;
+
 /// Serialize rows as the BENCH_conv.json snapshot (no serde in this
 /// image — the format is flat enough to emit by hand).
 pub fn to_json(rows: &[BenchRow]) -> String {
-    let mut s = String::from(concat!(
-        "{\n  \"bench\": \"conv\",\n",
+    let mut s = String::from("{\n  \"bench\": \"conv\",\n");
+    s.push_str(&format!("  \"schema_version\": {BENCH_SCHEMA_VERSION},\n"));
+    s.push_str(concat!(
         "  \"units\": {\"time\": \"ns/call\", \"rate\": \"GFLOP/s\"},\n",
         "  \"results\": [\n"
     ));
@@ -215,6 +238,7 @@ mod tests {
         }];
         let j = to_json(&rows);
         assert!(j.contains("\"bench\": \"conv\""));
+        assert!(j.contains(&format!("\"schema_version\": {BENCH_SCHEMA_VERSION}")));
         assert!(j.contains("\"engine\": \"direct\""));
         assert!(j.contains("\"ns_per_call\": 12.5"));
         assert!(!j.contains(",\n  ]"), "no trailing comma before the array close");
@@ -229,5 +253,20 @@ mod tests {
             assert!(r.ns_per_call > 0.0, "{}", r.engine);
             assert_eq!(r.ws_heap_allocs_steady, 0, "{} must be zero-alloc after warm-up", r.engine);
         }
+        // the depthwise shape is measured, and only by engines that
+        // claim grouped support (no whole-image FFT/NTT rows)
+        let dw: Vec<_> = rows.iter().filter(|r| r.shape == "28x28x32-dw").collect();
+        assert!(dw.iter().any(|r| r.engine == "direct"));
+        assert!(dw.iter().any(|r| r.engine.starts_with("SFC") || r.engine.starts_with("Wino")));
+        assert!(dw.iter().all(|r| r.engine != "FFT" && r.engine != "NTT"));
+    }
+
+    #[test]
+    fn default_bench_shapes_cover_grouped_and_depthwise() {
+        let grouped = shapes(false)
+            .iter()
+            .filter(|(_, d)| d.groups > 1)
+            .count();
+        assert!(grouped >= 2, "BENCH_conv.json must report ≥2 grouped/depthwise shapes");
     }
 }

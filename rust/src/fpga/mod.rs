@@ -18,20 +18,32 @@ use crate::nn::model::ConvShape;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Datapath {
     /// direct convolution MAC array
-    Direct { bits: u32 },
+    Direct {
+        /// MAC operand width
+        bits: u32,
+    },
     /// Winograd-style bilinear with `mul_bits` multipliers
-    Bilinear { mul_bits: u32 },
+    Bilinear {
+        /// ⊙ multiplier width
+        mul_bits: u32,
+    },
     /// NTT butterflies + pointwise mod-p multipliers (high width)
-    Ntt { word_bits: u32 },
+    Ntt {
+        /// mod-p word width of the ⊙ multipliers
+        word_bits: u32,
+    },
 }
 
 /// One accelerator configuration (a Table-3 column).
 #[derive(Clone, Debug)]
 pub struct Accel {
+    /// design label (Table-3 row name)
     pub name: String,
+    /// arithmetic style of the datapath
     pub datapath: Datapath,
-    /// input-channel / output-channel parallelism
+    /// input-channel parallelism
     pub p_ic: usize,
+    /// output-channel parallelism
     pub p_oc: usize,
     /// multiplications per (ic, oc) tile-pair per cycle-group:
     /// T² for bilinear, M²·R² for direct, FFT-size for NTT
@@ -42,13 +54,16 @@ pub struct Accel {
     pub tile_eq_macs: usize,
     /// adds per input tile for the transforms (per channel)
     pub transform_adds: usize,
+    /// design clock in MHz
     pub clock_mhz: f64,
 }
 
 /// Resource report (Table 3 rows).
 #[derive(Clone, Debug)]
 pub struct Resources {
+    /// DSP blocks consumed
     pub dsps: u64,
+    /// thousands of LUTs consumed
     pub luts_k: f64,
 }
 
@@ -147,12 +162,19 @@ impl Accel {
 /// A Table-3 style report row.
 #[derive(Clone, Debug)]
 pub struct Table3Row {
+    /// design label
     pub name: String,
+    /// precision label (e.g. "8bit")
     pub precision: String,
+    /// thousands of LUTs
     pub luts_k: f64,
+    /// DSP blocks
     pub dsps: u64,
+    /// design clock in MHz
     pub clock_mhz: f64,
+    /// achieved equivalent-direct GOPs
     pub gops: f64,
+    /// GOPs / DSP / GHz — the headline efficiency metric
     pub gops_per_dsp_per_clock: f64,
 }
 

@@ -16,19 +16,29 @@ use crate::nn::model::ConvShape;
 /// stages; conservative constant).
 pub const FILL_CYCLES: u64 = 64;
 
+/// Simulated execution of one conv layer on an accelerator.
 #[derive(Clone, Debug)]
 pub struct LayerSim {
+    /// cycles spent on the layer
     pub cycles: u64,
+    /// equivalent-direct MACs the layer represents
     pub eq_macs: u64,
+    /// fraction of peak MAC throughput achieved
     pub utilization: f64,
 }
 
+/// Whole-network pipeline simulation result.
 #[derive(Clone, Debug)]
 pub struct SimReport {
+    /// per-layer results in network order
     pub layers: Vec<LayerSim>,
+    /// total cycles across all layers
     pub total_cycles: u64,
+    /// total equivalent-direct MACs
     pub total_eq_macs: u64,
+    /// equivalent-direct GOPs at the design clock
     pub achieved_gops: f64,
+    /// overall fraction of peak MAC throughput
     pub utilization: f64,
 }
 

@@ -11,8 +11,12 @@
 //!   [`algo::registry`] catalog (Table 1 + Table 3 rows) is the single
 //!   source of algorithm truth.
 //! * [`engine`] — the unified convolution API: [`engine::ConvDesc`]
-//!   problem descriptors, the [`engine::ConvEngine`] trait implemented by
-//!   direct / im2col / Winograd / SFC / FFT / NTT backends, shape-keyed
+//!   problem descriptors (stride/pad, channel `groups` up to depthwise,
+//!   quantization; assembled via [`engine::ConvDescBuilder`]), the
+//!   [`engine::ConvEngine`] trait implemented by direct / im2col /
+//!   Winograd / SFC / FFT / NTT backends (envelopes documented by the
+//!   generated ENGINE.md support matrix,
+//!   [`engine::support_matrix_markdown`]), shape-keyed
 //!   [`engine::PlanCache`] plan reuse, the [`engine::Selector`] with
 //!   BOPs-heuristic and measured-autotune policies (`sfc autotune`), and
 //!   the [`engine::Workspace`] arena behind the zero-alloc
@@ -20,11 +24,13 @@
 //! * [`linalg`] — exact rational matrices + Jacobi SVD (condition
 //!   numbers), plus [`linalg::gemm`]: the blocked, register-tiled
 //!   `f32`/`i8→i32` GEMM core every executor's ⊙ reduction runs on.
-//! * [`nn`] / [`quant`] — the CNN inference substrate and the PTQ
-//!   pipeline reproducing §6.1 (Tables 2/4/5, Figs. 4/5); conv layers
-//!   execute through engine plans (`Model::forward_ws` recycles
+//! * [`nn`] / [`quant`] — the CNN inference substrate (ResNet family +
+//!   the depthwise-separable [`nn::model::mobilenet_cfg`] topology) and
+//!   the PTQ pipeline reproducing §6.1 (Tables 2/4/5, Figs. 4/5); conv
+//!   layers execute through engine plans (`Model::forward_ws` recycles
 //!   activations through a per-forward workspace), quantized layers
-//!   through [`quant::qconv::QConvLayer`] built from the same plans.
+//!   through [`quant::qconv::QConvLayer`] built from the same plans —
+//!   grouped and depthwise included.
 //! * [`bops`] / [`error`] / [`fpga`] — the analytical models: §6 BOPs
 //!   (feeding the engine cost models), Table-1 numerical error, Table-3
 //!   FPGA accelerator comparison.
@@ -38,6 +44,7 @@
 //!   [`exp::perf`]: the `sfc bench --json` perf-snapshot harness
 //!   (BENCH_conv.json, tracked across PRs).
 //! * [`util`] — PRNG / fp16 / timing / parallel-for shims.
+#![warn(missing_docs)]
 
 pub mod algo;
 pub mod bops;

@@ -12,7 +12,9 @@ use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
 /// A reduced fraction `num/den`, `den > 0`.
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Frac {
+    /// numerator (sign carrier)
     pub num: i128,
+    /// denominator, always positive
     pub den: i128,
 }
 
@@ -27,9 +29,12 @@ fn gcd(a: i128, b: i128) -> i128 {
 }
 
 impl Frac {
+    /// The fraction 0/1.
     pub const ZERO: Frac = Frac { num: 0, den: 1 };
+    /// The fraction 1/1.
     pub const ONE: Frac = Frac { num: 1, den: 1 };
 
+    /// Reduced fraction num/den (panics on zero denominator).
     pub fn new(num: i128, den: i128) -> Self {
         assert!(den != 0, "zero denominator");
         let g = gcd(num, den).max(1);
@@ -37,31 +42,38 @@ impl Frac {
         Frac { num: sign * num / g, den: sign * den / g }
     }
 
+    /// The integer v as a fraction.
     pub fn int(v: i128) -> Self {
         Frac { num: v, den: 1 }
     }
 
+    /// True for 0.
     pub fn is_zero(&self) -> bool {
         self.num == 0
     }
 
+    /// True when the denominator is 1.
     pub fn is_integer(&self) -> bool {
         self.den == 1
     }
 
+    /// Nearest f64 value.
     pub fn to_f64(&self) -> f64 {
         self.num as f64 / self.den as f64
     }
 
+    /// Absolute value.
     pub fn abs(&self) -> Frac {
         Frac { num: self.num.abs(), den: self.den }
     }
 
+    /// Reciprocal (panics on zero).
     pub fn recip(&self) -> Frac {
         assert!(self.num != 0, "reciprocal of zero");
         Frac::new(self.den, self.num)
     }
 
+    /// Non-negative integer power.
     pub fn pow(&self, e: u32) -> Frac {
         let mut out = Frac::ONE;
         for _ in 0..e {

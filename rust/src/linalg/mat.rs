@@ -6,16 +6,21 @@ use std::fmt;
 /// Exact rational dense matrix, row-major.
 #[derive(Clone, PartialEq, Eq)]
 pub struct FracMat {
+    /// row count
     pub rows: usize,
+    /// column count
     pub cols: usize,
+    /// row-major entries
     pub data: Vec<Frac>,
 }
 
 impl FracMat {
+    /// All-zeros matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         FracMat { rows, cols, data: vec![Frac::ZERO; rows * cols] }
     }
 
+    /// The n×n identity.
     pub fn identity(n: usize) -> Self {
         let mut m = Self::zeros(n, n);
         for i in 0..n {
@@ -24,15 +29,18 @@ impl FracMat {
         m
     }
 
+    /// Matrix from row-major integer entries.
     pub fn from_i128(rows: usize, cols: usize, vals: &[i128]) -> Self {
         assert_eq!(vals.len(), rows * cols);
         FracMat { rows, cols, data: vals.iter().map(|&v| Frac::int(v)).collect() }
     }
 
+    /// One row as a slice.
     pub fn row(&self, r: usize) -> &[Frac] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Exact matrix product.
     pub fn matmul(&self, other: &FracMat) -> FracMat {
         assert_eq!(self.cols, other.rows, "dim mismatch {}x{} * {}x{}", self.rows, self.cols, other.rows, other.cols);
         let mut out = FracMat::zeros(self.rows, other.cols);
@@ -53,6 +61,7 @@ impl FracMat {
         out
     }
 
+    /// Transposed copy.
     pub fn transpose(&self) -> FracMat {
         let mut out = FracMat::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -63,6 +72,7 @@ impl FracMat {
         out
     }
 
+    /// Exact matrix–vector product.
     pub fn matvec(&self, v: &[Frac]) -> Vec<Frac> {
         assert_eq!(v.len(), self.cols);
         (0..self.rows)
@@ -78,10 +88,12 @@ impl FracMat {
             .collect()
     }
 
+    /// Lower every entry to f64.
     pub fn to_f64(&self) -> Mat {
         Mat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|f| f.to_f64()).collect() }
     }
 
+    /// Lower every entry to f32, row-major.
     pub fn to_f32_vec(&self) -> Vec<f32> {
         self.data.iter().map(|f| f.to_f64() as f32).collect()
     }
@@ -212,25 +224,32 @@ impl fmt::Debug for FracMat {
 /// f64 dense matrix, row-major.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
+    /// row count
     pub rows: usize,
+    /// column count
     pub cols: usize,
+    /// row-major entries
     pub data: Vec<f64>,
 }
 
 impl Mat {
+    /// All-zeros matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Mat { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Matrix from row-major entries.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         assert_eq!(data.len(), rows * cols);
         Mat { rows, cols, data }
     }
 
+    /// One row as a slice.
     pub fn row(&self, r: usize) -> &[f64] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Matrix product.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows);
         let mut out = Mat::zeros(self.rows, other.cols);
@@ -250,6 +269,7 @@ impl Mat {
         out
     }
 
+    /// Transposed copy.
     pub fn transpose(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -260,6 +280,7 @@ impl Mat {
         out
     }
 
+    /// Matrix–vector product.
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(v.len(), self.cols);
         (0..self.rows).map(|i| self.row(i).iter().zip(v).map(|(a, b)| a * b).sum()).collect()

@@ -80,9 +80,10 @@ experiments (paper table/figure per DESIGN.md §6):
   appendix-b                                           iterative large-kernel conv
 
 engine selection (cuDNN findAlgorithm-style):
-  autotune    [--model resnet18|resnet34|resnet50|vgg16] [--batch 1]
-              [--iters 3] [--bits 0]
-              micro-benchmark every supporting engine per layer shape,
+  autotune    [--model resnet18|resnet34|resnet50|mobilenet|vgg16]
+              [--batch 1] [--iters 3] [--bits 0]
+              micro-benchmark every supporting engine per layer shape
+              (mobilenet exercises the grouped/depthwise descriptors),
               print measured times + the selected winner (--bits N asks
               for the intN transform-domain scheme; 0 = float)
 
@@ -280,7 +281,7 @@ fn resnet_cfg_by_name(name: &str) -> Result<sfc::nn::model::ResNetCfg> {
         "resnet18" => resnet18_cfg(),
         "resnet34" => resnet34_cfg(),
         "resnet50" => resnet50_cfg(),
-        other => bail!("unknown model {other} (try resnet18|resnet34|resnet50|vgg16)"),
+        other => bail!("unknown model {other} (try resnet18|resnet34|resnet50|mobilenet|vgg16)"),
     })
 }
 
@@ -289,56 +290,62 @@ fn resnet_cfg_by_name(name: &str) -> Result<sfc::nn::model::ResNetCfg> {
 /// `findAlgorithm` workflow over the Table-1 engine catalog).
 fn cmd_autotune(opts: &HashMap<String, String>) -> Result<()> {
     use sfc::engine::{AutotuneCfg, ConvDesc, Policy, QuantSpec, Selector};
-    use sfc::nn::model::{model_conv_shapes, resnet_random, vgg16_conv_shapes};
+    use sfc::nn::model::{
+        mobilenet_cfg, mobilenet_random, model_conv_descs, resnet_random, vgg16_conv_shapes,
+    };
 
     let model_name = opt(opts, "model", "resnet18");
     let batch: usize = parse_opt(opts, "batch", 1)?;
     let iters: usize = parse_opt(opts, "iters", 3)?;
     let bits: u32 = parse_opt(opts, "bits", 0)?; // 0 = float path
 
-    let shapes: Vec<(String, sfc::nn::model::ConvShape)> = if model_name == "vgg16" {
+    // Layer descriptors straight from the built model's conv plans
+    // (preserving stride/pad and groups — mobilenet's dw layers are
+    // depthwise); VGG-16 is a dense shape catalog without a builder.
+    let descs: Vec<(String, ConvDesc)> = if model_name == "vgg16" {
         vgg16_conv_shapes()
             .into_iter()
             .enumerate()
-            .map(|(i, s)| (format!("conv{}", i + 1), s))
+            .map(|(i, s)| (format!("conv{}", i + 1), ConvDesc::from_shape(&s, batch)))
             .collect()
+    } else if model_name == "mobilenet" {
+        model_conv_descs(&mobilenet_random(&mobilenet_cfg(), 1, 10), batch)
     } else {
         let cfg = resnet_cfg_by_name(model_name)?;
-        let m = resnet_random(&cfg, 1, 10);
-        model_conv_shapes(&m, 32)
+        model_conv_descs(&resnet_random(&cfg, 1, 10), batch)
     };
 
-    // Group layers by descriptor: repeated ResNet blocks share shapes.
-    let mut groups: Vec<(ConvDesc, Vec<String>)> = Vec::new();
-    for (name, s) in &shapes {
-        let mut d = ConvDesc::from_shape(s, batch);
+    // Bucket layers by descriptor: repeated blocks share shapes.
+    let mut buckets: Vec<(ConvDesc, Vec<String>)> = Vec::new();
+    for (name, base) in &descs {
+        let mut d = *base;
         if bits > 0 {
             // transform-domain scheme where fast engines apply, the
             // spatial scheme on layers only direct/NTT can quantize
-            let spec = if s.r == 3 && s.stride == 1 {
+            let spec = if d.r == 3 && d.stride == 1 {
                 QuantSpec::transform_default(bits)
             } else {
                 QuantSpec::spatial_default(bits)
             };
             d = d.with_quant(spec);
         }
-        if let Some(pos) = groups.iter().position(|(d2, _)| *d2 == d) {
-            groups[pos].1.push(name.clone());
+        if let Some(pos) = buckets.iter().position(|(d2, _)| *d2 == d) {
+            buckets[pos].1.push(name.clone());
         } else {
-            groups.push((d, vec![name.clone()]));
+            buckets.push((d, vec![name.clone()]));
         }
     }
 
     let scheme = if bits > 0 { format!("int{bits} transform-domain") } else { "f32".to_string() };
     println!(
         "autotune — {model_name}, batch {batch}, {scheme}, {} distinct shapes from {} conv layers\n",
-        groups.len(),
-        shapes.len()
+        buckets.len(),
+        descs.len()
     );
     let sel = Selector::new(Policy::Autotune(AutotuneCfg { warmup: 1, iters }));
-    for (d, names) in &groups {
+    for (d, names) in &buckets {
         println!(
-            "shape {}x{}x{} -> {} (r={}, stride {}, pad {}) — {} layer(s): {}",
+            "shape {}x{}x{} -> {} (r={}, stride {}, pad {}, groups {}) — {} layer(s): {}",
             d.h,
             d.w,
             d.ic,
@@ -346,6 +353,7 @@ fn cmd_autotune(opts: &HashMap<String, String>) -> Result<()> {
             d.r,
             d.stride,
             d.pad,
+            d.groups,
             names.len(),
             names.join(", ")
         );
@@ -372,8 +380,12 @@ fn cmd_autotune(opts: &HashMap<String, String>) -> Result<()> {
     // property the PlanCache exists for.
     if model_name != "vgg16" {
         let (h0, _) = sfc::coordinator::metrics::plan_cache_counters();
-        let cfg = resnet_cfg_by_name(model_name)?;
-        let _ = resnet_random(&cfg, 2, 10);
+        if model_name == "mobilenet" {
+            let _ = mobilenet_random(&mobilenet_cfg(), 2, 10);
+        } else {
+            let cfg = resnet_cfg_by_name(model_name)?;
+            let _ = resnet_random(&cfg, 2, 10);
+        }
         let (h1, m1) = sfc::coordinator::metrics::plan_cache_counters();
         println!(
             "rebuilt {model_name}: +{} plan-cache hits from shared layer shapes",

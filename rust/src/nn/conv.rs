@@ -20,6 +20,7 @@ use crate::util::par::{num_threads, par_chunks_mut, par_chunks_states};
 /// Precomputed matrices for a tiled fast convolution.
 #[derive(Debug)]
 pub struct FastConvPlan {
+    /// the exact bilinear algorithm the matrices were lowered from
     pub algo: Bilinear,
     /// Bᵀ as f32, T×L row-major
     pub bt: Vec<f32>,
@@ -30,6 +31,7 @@ pub struct FastConvPlan {
 }
 
 impl FastConvPlan {
+    /// Lower a bilinear algorithm's matrices to f32 once.
     pub fn new(algo: Bilinear) -> FastConvPlan {
         let bt = algo.bt.to_f32_vec();
         let at = algo.at.to_f32_vec();
@@ -37,18 +39,22 @@ impl FastConvPlan {
         FastConvPlan { algo, bt, at, g }
     }
 
+    /// Transform points per axis (T).
     pub fn t(&self) -> usize {
         self.algo.t
     }
 
+    /// Output tile edge (M).
     pub fn m(&self) -> usize {
         self.algo.m
     }
 
+    /// Kernel size (R).
     pub fn r(&self) -> usize {
         self.algo.r
     }
 
+    /// Input tile edge (L = M + R − 1).
     pub fn l(&self) -> usize {
         self.algo.input_len()
     }
@@ -209,31 +215,39 @@ impl FastConvPlan {
     }
 }
 
-/// Direct correlation with stride and symmetric zero padding, written
-/// into `out` (shape `[N, OC, OH, OW]`). Allocation-free: each output
-/// plane is accumulated in place by its worker.
-pub fn conv2d_direct_into(
+/// Grouped direct correlation with stride and symmetric zero padding,
+/// written into `out` (shape `[N, OC, OH, OW]`). The weight tensor is
+/// `[OC, IC/groups, R, R]`; output channel `o` reduces over input
+/// channels of its group only (`groups == ic` is depthwise).
+/// Allocation-free: each output plane is accumulated in place by its
+/// worker. With `groups == 1` this is bit-identical to the historical
+/// dense kernel.
+pub fn conv2d_direct_grouped_into(
     x: &Tensor,
     w: &Tensor,
     bias: &[f32],
     stride: usize,
     pad: usize,
+    groups: usize,
     out: &mut Tensor,
 ) {
     let (n, ic, h, wid) = x.dims4();
-    let (oc, ic2, r, r2) = w.dims4();
-    assert_eq!(ic, ic2, "channel mismatch");
+    let (oc, icg, r, r2) = w.dims4();
     assert_eq!(r, r2, "square kernels only");
+    assert!(groups >= 1 && oc % groups == 0, "groups {groups} must divide oc {oc}");
+    assert_eq!(icg * groups, ic, "weight channels {icg}×{groups} groups vs input {ic}");
     assert!(bias.is_empty() || bias.len() == oc);
+    let ocg = oc / groups;
     let oh = (h + 2 * pad - r) / stride + 1;
     let ow = (wid + 2 * pad - r) / stride + 1;
     out.assert_dims(&[n, oc, oh, ow]);
     par_chunks_mut(&mut out.data, oh * ow, |job, plane| {
         let (ni, o) = (job / oc, job % oc);
+        let gi = o / ocg;
         plane.fill(0.0);
-        for i in 0..ic {
-            let xp = x.plane(ni, i);
-            let wp = w.plane(o, i);
+        for il in 0..icg {
+            let xp = x.plane(ni, gi * icg + il);
+            let wp = w.plane(o, il);
             for oy in 0..oh {
                 for ox in 0..ow {
                     let mut acc = 0f32;
@@ -262,15 +276,46 @@ pub fn conv2d_direct_into(
     });
 }
 
-/// Direct correlation with stride and symmetric zero padding.
-pub fn conv2d_direct(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, pad: usize) -> Tensor {
+/// Dense direct correlation into `out` — [`conv2d_direct_grouped_into`]
+/// at `groups == 1`.
+pub fn conv2d_direct_into(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    pad: usize,
+    out: &mut Tensor,
+) {
+    conv2d_direct_grouped_into(x, w, bias, stride, pad, 1, out);
+}
+
+/// Grouped direct correlation (allocating wrapper).
+pub fn conv2d_direct_grouped(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> Tensor {
     let (n, _, h, wid) = x.dims4();
     let (oc, _, r, _) = w.dims4();
     let oh = (h + 2 * pad - r) / stride + 1;
     let ow = (wid + 2 * pad - r) / stride + 1;
     let mut out = Tensor::zeros(&[n, oc, oh, ow]);
-    conv2d_direct_into(x, w, bias, stride, pad, &mut out);
+    conv2d_direct_grouped_into(x, w, bias, stride, pad, groups, &mut out);
     out
+}
+
+/// Direct correlation with stride and symmetric zero padding. Like the
+/// other allocating wrappers, the group count is inferred from the
+/// weight shape (`groups = IC / weight IC`; dense weights give 1) —
+/// the crate-wide convention that `[OC, IC/g, R, R]` encodes grouping.
+pub fn conv2d_direct(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, pad: usize) -> Tensor {
+    let (_, ic, _, _) = x.dims4();
+    let icg = w.dims[1];
+    assert!(icg >= 1 && ic % icg == 0, "weight channels {icg} must divide input channels {ic}");
+    conv2d_direct_grouped(x, w, bias, stride, pad, ic / icg)
 }
 
 /// Gather the L×L input tile for output tile (ty, tx) of image n, channel c
@@ -363,23 +408,31 @@ impl FastScratch {
 
 /// Tiled fast convolution (stride 1), float transform domain, executed
 /// out of `ws` into `out`: gather all tiles → batched Bᵀ·x·B → one
-/// [tiles×IC]·[IC×OC] GEMM per transform point → batched Aᵀ·(·)·A →
-/// scatter. All data buffers come from `ws` — zero workspace heap
-/// allocation once the arena is warm.
+/// [tiles×IC/g]·[IC/g×OC/g] GEMM per (transform point, group) →
+/// batched Aᵀ·(·)·A → scatter. The weight tensor is
+/// `[OC, IC/groups, R, R]`; SFC's per-frequency structure applies
+/// per-group unchanged, each group just runs a smaller channel
+/// reduction. All data buffers come from `ws` — zero workspace heap
+/// allocation once the arena is warm. At `groups == 1` the indexing
+/// degenerates to the historical dense layout, bit-identically.
+#[allow(clippy::too_many_arguments)]
 pub fn conv2d_fast_into(
     x: &Tensor,
     w: &Tensor,
     bias: &[f32],
     plan: &FastConvPlan,
     pad: usize,
+    groups: usize,
     ws: &mut Workspace,
     out: &mut Tensor,
 ) {
     let (n, ic, h, wid) = x.dims4();
-    let (oc, ic2, r, _) = w.dims4();
-    assert_eq!(ic, ic2);
+    let (oc, icg, r, _) = w.dims4();
+    assert!(groups >= 1 && oc % groups == 0, "groups {groups} must divide oc {oc}");
+    assert_eq!(icg * groups, ic, "weight channels {icg}×{groups} groups vs input {ic}");
     assert_eq!(r, plan.r());
     assert!(bias.is_empty() || bias.len() == oc);
+    let ocg = oc / groups;
     let (m, l, t) = (plan.m(), plan.l(), plan.t());
     let oh = h + 2 * pad - r + 1;
     let ow = wid + 2 * pad - r + 1;
@@ -389,12 +442,15 @@ pub fn conv2d_fast_into(
     let n_tiles = tiles_y * tiles_x;
     let tt = t * t;
 
-    // Transformed weights, freq-major [T²][OC][IC], shared by all workers.
-    let mut u = ws.take_f32(tt * oc * ic);
+    // Transformed weights, freq-major [T²][OC][IC/g], shared by all
+    // workers. Output channels are contiguous per group, so this is
+    // simultaneously the group-major [T²][G][OC/g][IC/g] layout the
+    // per-group GEMM consumes.
+    let mut u = ws.take_f32(tt * oc * icg);
     {
         let mut tmp = ws.take_f32(t * r);
         let mut utile = ws.take_f32(tt);
-        plan.transform_weights_into(&w.data, oc, ic, &mut tmp, &mut utile, &mut u);
+        plan.transform_weights_into(&w.data, oc, icg, &mut tmp, &mut utile, &mut u);
         ws.give_f32(tmp);
         ws.give_f32(utile);
     }
@@ -406,35 +462,44 @@ pub fn conv2d_fast_into(
         (0..workers).map(|_| FastScratch::take(ws, tt, n_tiles, ic, oc, m, l, t)).collect();
     let img_len = oc * oh * ow;
     par_chunks_states(&mut out.data, img_len, &mut states, |st, ni, out_img| {
-        // 1) gather + transform all tiles: V freq-major [T²][tiles][IC]
+        // 1) gather + transform all tiles: V group-major
+        //    [T²][G][tiles][IC/g] (== [T²][tiles][IC] when groups == 1)
         for ty in 0..tiles_y {
             for tx in 0..tiles_x {
                 let tile_idx = ty * tiles_x + tx;
                 for c in 0..ic {
+                    let (gi, il) = (c / icg, c % icg);
                     gather_tile(x, ni, c, ty, tx, m, l, pad, &mut st.tile);
                     plan.transform_tile(&st.tile, &mut st.tscr, &mut st.tv);
                     for uv in 0..tt {
-                        st.v[(uv * n_tiles + tile_idx) * ic + c] = st.tv[uv];
+                        st.v[((uv * groups + gi) * n_tiles + tile_idx) * icg + il] = st.tv[uv];
                     }
                 }
             }
         }
-        // 2) per-frequency GEMM: P[uv] = V[uv] · U[uv]ᵀ ([tiles×IC]·[IC×OC])
+        // 2) per-(frequency, group) GEMM:
+        //    P[uv][g] = V[uv][g] · U[uv][g]ᵀ ([tiles×IC/g]·[IC/g×OC/g])
         for uv in 0..tt {
-            let vblk = &st.v[uv * n_tiles * ic..(uv + 1) * n_tiles * ic];
-            let ublk = &u[uv * oc * ic..(uv + 1) * oc * ic];
-            let pblk = &mut st.p[uv * n_tiles * oc..(uv + 1) * n_tiles * oc];
-            gemm_nt_f32(n_tiles, oc, ic, vblk, ublk, pblk);
+            for gi in 0..groups {
+                let vb = (uv * groups + gi) * n_tiles * icg;
+                let ub = (uv * oc + gi * ocg) * icg;
+                let pb = (uv * groups + gi) * n_tiles * ocg;
+                let vblk = &st.v[vb..vb + n_tiles * icg];
+                let ublk = &u[ub..ub + ocg * icg];
+                let pblk = &mut st.p[pb..pb + n_tiles * ocg];
+                gemm_nt_f32(n_tiles, ocg, icg, vblk, ublk, pblk);
+            }
         }
         // 3) inverse transform + scatter into this image's output chunk
         for o in 0..oc {
+            let (gi, ol) = (o / ocg, o % ocg);
             let b = if bias.is_empty() { 0.0 } else { bias[o] };
             let plane = &mut out_img[o * oh * ow..(o + 1) * oh * ow];
             for ty in 0..tiles_y {
                 for tx in 0..tiles_x {
                     let tile_idx = ty * tiles_x + tx;
                     for uv in 0..tt {
-                        st.prod[uv] = st.p[(uv * n_tiles + tile_idx) * oc + o];
+                        st.prod[uv] = st.p[((uv * groups + gi) * n_tiles + tile_idx) * ocg + ol];
                     }
                     plan.inverse_tile(&st.prod, &mut st.iscr, &mut st.ytile);
                     for i in 0..m.min(oh - ty * m) {
@@ -452,15 +517,17 @@ pub fn conv2d_fast_into(
     ws.give_f32(u);
 }
 
-/// Tiled fast convolution (stride 1), float transform domain.
+/// Tiled fast convolution (stride 1), float transform domain. The group
+/// count is inferred from the weight shape (`groups = IC / weight IC`).
 pub fn conv2d_fast(x: &Tensor, w: &Tensor, bias: &[f32], plan: &FastConvPlan, pad: usize) -> Tensor {
-    let (n, _, h, wid) = x.dims4();
-    let (oc, _, r, _) = w.dims4();
+    let (n, ic, h, wid) = x.dims4();
+    let (oc, icg, r, _) = w.dims4();
+    assert!(icg >= 1 && ic % icg == 0, "weight channels {icg} must divide input channels {ic}");
     let oh = h + 2 * pad - r + 1;
     let ow = wid + 2 * pad - r + 1;
     let mut out = Tensor::zeros(&[n, oc, oh, ow]);
     let mut ws = Workspace::new();
-    conv2d_fast_into(x, w, bias, plan, pad, &mut ws, &mut out);
+    conv2d_fast_into(x, w, bias, plan, pad, ic / icg, &mut ws, &mut out);
     out
 }
 
@@ -551,6 +618,56 @@ mod tests {
         let direct = conv2d_direct(&x, &w, &[], 1, 1);
         let fast = conv2d_fast(&x, &w, &[], &plan, 1);
         assert!(direct.mse(&fast) < 1e-8);
+    }
+
+    #[test]
+    fn grouped_direct_matches_per_group_dense() {
+        let mut rng = Pcg32::seeded(26);
+        let (n, ic, oc, groups) = (2usize, 6usize, 4usize, 2usize);
+        let (hh, ww, r) = (9usize, 9usize, 3usize);
+        let (icg, ocg) = (ic / groups, oc / groups);
+        let x = rand_tensor(&[n, ic, hh, ww], &mut rng);
+        let w = rand_tensor(&[oc, icg, r, r], &mut rng);
+        let bias: Vec<f32> = (0..oc).map(|i| 0.05 * i as f32).collect();
+        let got = conv2d_direct_grouped(&x, &w, &bias, 1, 1, groups);
+        // reference: slice each group out and run the dense kernel on it
+        for gi in 0..groups {
+            let mut xg = Tensor::zeros(&[n, icg, hh, ww]);
+            for ni in 0..n {
+                for il in 0..icg {
+                    xg.plane_mut(ni, il).copy_from_slice(x.plane(ni, gi * icg + il));
+                }
+            }
+            let mut wg = Tensor::zeros(&[ocg, icg, r, r]);
+            wg.data.copy_from_slice(&w.data[gi * ocg * icg * r * r..(gi + 1) * ocg * icg * r * r]);
+            let bg = bias[gi * ocg..(gi + 1) * ocg].to_vec();
+            let want = conv2d_direct(&xg, &wg, &bg, 1, 1);
+            for ni in 0..n {
+                for ol in 0..ocg {
+                    assert_eq!(
+                        got.plane(ni, gi * ocg + ol),
+                        want.plane(ni, ol),
+                        "group {gi} out-channel {ol} must be bit-identical"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_and_depthwise_fast_match_direct() {
+        let mut rng = Pcg32::seeded(27);
+        let plan = FastConvPlan::new(sfc(6, 6, 3));
+        for (ic, oc, groups) in [(6usize, 4usize, 2usize), (5, 5, 5)] {
+            let icg = ic / groups;
+            let x = rand_tensor(&[2, ic, 13, 11], &mut rng);
+            let w = rand_tensor(&[oc, icg, 3, 3], &mut rng);
+            let direct = conv2d_direct_grouped(&x, &w, &[], 1, 1, groups);
+            let fast = conv2d_fast(&x, &w, &[], &plan, 1);
+            assert_eq!(direct.dims, fast.dims);
+            let mse = direct.mse(&fast);
+            assert!(mse < 1e-8, "groups {groups}: mse {mse}");
+        }
     }
 
     #[test]

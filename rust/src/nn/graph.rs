@@ -18,42 +18,62 @@ use std::sync::Arc;
 /// One conv layer's parameters (BN already folded at export time).
 #[derive(Clone, Debug)]
 pub struct ConvParams {
-    pub weight: Tensor, // OC×IC×R×R
+    /// `[OC, IC/groups, R, R]` filter bank (the weight shape is what
+    /// encodes the channel grouping)
+    pub weight: Tensor,
+    /// per-output-channel bias (may be empty)
     pub bias: Vec<f32>,
+    /// spatial stride
     pub stride: usize,
+    /// symmetric zero padding
     pub pad: usize,
 }
 
+/// One graph operation.
 pub enum Op {
     /// Graph input placeholder.
     Input,
+    /// Convolution through an engine plan (float or quantized).
     Conv {
+        /// weights/bias and geometry
         params: ConvParams,
         /// engine-selected execution plan (see [`crate::engine`])
         plan: Arc<ConvPlan>,
         /// set by the PTQ pass: quantized executor overriding `plan`
         quantized: Option<QConvLayer>,
     },
+    /// Element-wise max(0, x).
     Relu,
     /// 2×2 max-pool, stride 2.
     MaxPool2,
+    /// Spatial mean per channel → [N, C, 1, 1].
     GlobalAvgPool,
+    /// Fully-connected head.
     Linear {
-        weight: Tensor, // OUT×IN
+        /// OUT×IN weight matrix
+        weight: Tensor,
+        /// per-output bias
         bias: Vec<f32>,
     },
     /// Element-wise sum of the two inputs (residual join).
     Add,
 }
 
+/// One SSA node: an op applied to earlier nodes' outputs.
 pub struct Node {
+    /// the operation
     pub op: Op,
+    /// indices of the consumed nodes
     pub inputs: Vec<usize>,
+    /// diagnostic name (weight-map prefix)
     pub name: String,
 }
 
+/// A CNN inference graph in SSA form.
 pub struct Model {
+    /// nodes in topological order
     pub nodes: Vec<Node>,
+    /// model name
     pub name: String,
 }
 
@@ -145,10 +165,12 @@ fn ws_tensor(ws: &mut Workspace, dims: &[usize]) -> Tensor {
 }
 
 impl Model {
+    /// An empty graph.
     pub fn new(name: &str) -> Model {
         Model { nodes: Vec::new(), name: name.into() }
     }
 
+    /// Append a node; returns its index.
     pub fn push(&mut self, op: Op, inputs: Vec<usize>, name: impl Into<String>) -> usize {
         self.nodes.push(Node { op, inputs, name: name.into() });
         self.nodes.len() - 1
@@ -177,6 +199,12 @@ impl Model {
                         (params.stride, params.pad),
                         (plan.desc.stride, plan.desc.pad),
                         "ConvParams and plan descriptor disagree at {}",
+                        node.name
+                    );
+                    debug_assert_eq!(
+                        params.weight.dims[1] * plan.desc.groups,
+                        plan.desc.ic,
+                        "weight grouping and plan descriptor disagree at {}",
                         node.name
                     );
                     let inp = get(node.inputs[0]);
@@ -269,6 +297,12 @@ impl Model {
                         (params.stride, params.pad),
                         (plan.desc.stride, plan.desc.pad),
                         "ConvParams and plan descriptor disagree at {}",
+                        node.name
+                    );
+                    debug_assert_eq!(
+                        params.weight.dims[1] * plan.desc.groups,
+                        plan.desc.ic,
+                        "weight grouping and plan descriptor disagree at {}",
                         node.name
                     );
                     let inp = acts[node.inputs[0]].as_ref().expect("SSA order");

@@ -15,20 +15,27 @@ use std::sync::Arc;
 
 /// ResNet block config: (blocks per stage, width per stage, bottleneck?).
 pub struct ResNetCfg {
+    /// model name (graph + weight-map prefix)
     pub name: &'static str,
+    /// residual blocks per stage
     pub stages: [usize; 4],
+    /// channel width per stage
     pub widths: [usize; 4],
+    /// bottleneck (1-3-1) blocks instead of basic (3-3)
     pub bottleneck: bool,
 }
 
+/// The mini ResNet-18 configuration.
 pub fn resnet18_cfg() -> ResNetCfg {
     ResNetCfg { name: "resnet18", stages: [2, 2, 2, 2], widths: [16, 32, 64, 128], bottleneck: false }
 }
 
+/// The mini ResNet-34 configuration.
 pub fn resnet34_cfg() -> ResNetCfg {
     ResNetCfg { name: "resnet34", stages: [3, 4, 6, 3], widths: [16, 32, 64, 128], bottleneck: false }
 }
 
+/// The mini ResNet-50 (bottleneck) configuration.
 pub fn resnet50_cfg() -> ResNetCfg {
     ResNetCfg { name: "resnet50", stages: [3, 4, 6, 3], widths: [16, 32, 64, 128], bottleneck: true }
 }
@@ -72,9 +79,7 @@ impl Source<'_> {
     }
 }
 
-/// Push one conv node: weights from `src`, execution plan from the
-/// default selector over a [`ConvDesc`] of the layer's geometry (spatial
-/// size tracked by the builder). Returns (node index, output spatial).
+/// Push one dense conv node ([`push_conv_grouped`] at `groups == 1`).
 #[allow(clippy::too_many_arguments)]
 fn push_conv(
     m: &mut Model,
@@ -88,8 +93,35 @@ fn push_conv(
     pad: usize,
     hw: usize,
 ) -> (usize, usize) {
-    let (weight, bias) = src.conv(name, oc, ic, r);
-    let desc = ConvDesc::new(1, ic, oc, hw, hw, r, stride, pad);
+    push_conv_grouped(m, src, name, input, oc, ic, r, stride, pad, 1, hw)
+}
+
+/// Push one (possibly grouped) conv node: `[OC, IC/groups, R, R]`
+/// weights from `src`, execution plan from the default selector over a
+/// [`ConvDesc`] of the layer's geometry (spatial size tracked by the
+/// topology builder). Returns (node index, output spatial).
+#[allow(clippy::too_many_arguments)]
+fn push_conv_grouped(
+    m: &mut Model,
+    src: &mut Source,
+    name: &str,
+    input: usize,
+    oc: usize,
+    ic: usize,
+    r: usize,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    hw: usize,
+) -> (usize, usize) {
+    let (weight, bias) = src.conv(name, oc, ic / groups, r);
+    let desc = ConvDesc::builder(ic, oc)
+        .hw(hw)
+        .kernel(r)
+        .stride(stride)
+        .pad(pad)
+        .groups(groups)
+        .build();
     let plan = default_selector()
         .plan(&desc)
         .unwrap_or_else(|_| Arc::new(ConvPlan::direct(desc)));
@@ -175,14 +207,87 @@ pub fn resnet_random(cfg: &ResNetCfg, seed: u64, classes: usize) -> Model {
     build_resnet(cfg, Source::Random(Pcg32::seeded(seed)), classes)
 }
 
+/// MobileNet-style depthwise-separable config: a dense stem plus
+/// `(out channels, stride)` per block; every block is a depthwise 3×3
+/// (`groups == channels`) followed by a pointwise 1×1 — the topology
+/// family where grouped convolution dominates the MAC budget.
+pub struct MobileNetCfg {
+    /// model name (graph + weight-map prefix)
+    pub name: &'static str,
+    /// stem output channels (dense 3×3 from RGB)
+    pub stem: usize,
+    /// per-block (pointwise output channels, depthwise stride)
+    pub blocks: &'static [(usize, usize)],
+}
+
+/// The mini MobileNet used by tests/benches/serving demos (32×32
+/// SynthImage substrate, like the ResNet family above).
+pub fn mobilenet_cfg() -> MobileNetCfg {
+    MobileNetCfg { name: "mobilenet", stem: 16, blocks: &[(32, 1), (64, 2), (128, 2)] }
+}
+
+fn build_mobilenet(cfg: &MobileNetCfg, mut src: Source, classes: usize) -> Model {
+    let mut m = Model::new(cfg.name);
+    let input = m.push(Op::Input, vec![], "input");
+    let mut hw = 32usize;
+    let (stem, stem_hw) = push_conv(&mut m, &mut src, "stem", input, cfg.stem, 3, 3, 1, 1, hw);
+    hw = stem_hw;
+    let mut cur = m.push(Op::Relu, vec![stem], "stem.relu");
+    let mut prev_c = cfg.stem;
+    for (bi, &(width, stride)) in cfg.blocks.iter().enumerate() {
+        let prefix = format!("b{bi}");
+        // depthwise 3×3 over each channel, then pointwise 1×1 mixing
+        let (dw, dw_hw) = push_conv_grouped(
+            &mut m,
+            &mut src,
+            &format!("{prefix}.dw"),
+            cur,
+            prev_c,
+            prev_c,
+            3,
+            stride,
+            1,
+            prev_c,
+            hw,
+        );
+        let rdw = m.push(Op::Relu, vec![dw], format!("{prefix}.dw.relu"));
+        let pw_name = format!("{prefix}.pw");
+        let (pw, pw_hw) =
+            push_conv(&mut m, &mut src, &pw_name, rdw, width, prev_c, 1, 1, 0, dw_hw);
+        cur = m.push(Op::Relu, vec![pw], format!("{prefix}.pw.relu"));
+        prev_c = width;
+        hw = pw_hw;
+    }
+    let gap = m.push(Op::GlobalAvgPool, vec![cur], "gap");
+    let (weight, bias) = src.linear("fc", classes, prev_c);
+    m.push(Op::Linear { weight, bias }, vec![gap], "fc");
+    m
+}
+
+/// Build the mini MobileNet with trained weights.
+pub fn mobilenet_from_weights(cfg: &MobileNetCfg, map: &WeightMap, classes: usize) -> Model {
+    build_mobilenet(cfg, Source::Map(map), classes)
+}
+
+/// Build the mini MobileNet with random (He-init) weights.
+pub fn mobilenet_random(cfg: &MobileNetCfg, seed: u64, classes: usize) -> Model {
+    build_mobilenet(cfg, Source::Random(Pcg32::seeded(seed)), classes)
+}
+
 /// A conv layer shape (for analytical models: BOPs, FPGA).
 #[derive(Clone, Copy, Debug)]
 pub struct ConvShape {
+    /// input channels
     pub ic: usize,
+    /// output channels
     pub oc: usize,
+    /// input height
     pub h: usize,
+    /// input width
     pub w: usize,
+    /// square kernel size
     pub r: usize,
+    /// spatial stride
     pub stride: usize,
 }
 
@@ -247,6 +352,27 @@ pub fn model_conv_shapes(model: &Model, input_hw: usize) -> Vec<(String, ConvSha
         .collect()
 }
 
+/// Conv descriptors of a built model, read straight from each conv
+/// node's engine plan — preserving stride/pad **and groups**, which the
+/// dense [`ConvShape`] view cannot carry — with the batch size
+/// overridden and any quantization scheme stripped (callers re-attach
+/// their own). This is what `sfc autotune` iterates.
+pub fn model_conv_descs(model: &Model, batch: usize) -> Vec<(String, ConvDesc)> {
+    model
+        .nodes
+        .iter()
+        .filter_map(|n| match &n.op {
+            Op::Conv { plan, .. } => {
+                let mut d = plan.desc;
+                d.batch = batch;
+                d.quant = None;
+                Some((n.name.clone(), d))
+            }
+            _ => None,
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,5 +422,31 @@ mod tests {
         assert_eq!(shapes.len(), 20);
         assert_eq!(shapes[0].1.ic, 3);
         assert_eq!(shapes[0].1.h, 32);
+    }
+
+    #[test]
+    fn mobilenet_depthwise_forward_shape() {
+        let cfg = mobilenet_cfg();
+        let m = mobilenet_random(&cfg, 5, 10);
+        let x = Tensor::zeros(&[2, 3, 32, 32]);
+        let y = m.forward(&x);
+        assert_eq!(y.dims, vec![2, 10, 1, 1]);
+        // stem + (dw + pw) per block
+        assert_eq!(m.conv_nodes().len(), 1 + 2 * cfg.blocks.len());
+    }
+
+    #[test]
+    fn mobilenet_descs_carry_depthwise_groups() {
+        let cfg = mobilenet_cfg();
+        let m = mobilenet_random(&cfg, 6, 10);
+        let descs = model_conv_descs(&m, 4);
+        let dw: Vec<_> = descs.iter().filter(|(n, _)| n.ends_with(".dw")).collect();
+        assert_eq!(dw.len(), cfg.blocks.len());
+        for (name, d) in dw {
+            assert_eq!(d.groups, d.ic, "{name} must be depthwise");
+            assert_eq!(d.batch, 4);
+        }
+        let pw: Vec<_> = descs.iter().filter(|(n, _)| n.ends_with(".pw")).collect();
+        assert!(pw.iter().all(|(_, d)| d.groups == 1 && d.r == 1));
     }
 }

@@ -1,25 +1,32 @@
 //! Minimal NCHW f32 tensor.
 
+/// A dense f32 tensor (NCHW for activations/weights).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// dimension sizes, outermost first
     pub dims: Vec<usize>,
+    /// row-major values
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// All-zeros tensor of the given shape.
     pub fn zeros(dims: &[usize]) -> Tensor {
         Tensor { dims: dims.to_vec(), data: vec![0.0; dims.iter().product()] }
     }
 
+    /// Tensor over an existing buffer (length must match the shape).
     pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Tensor {
         assert_eq!(data.len(), dims.iter().product::<usize>(), "shape/data mismatch");
         Tensor { dims: dims.to_vec(), data }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -32,11 +39,13 @@ impl Tensor {
     }
 
     #[inline]
+    /// Mutable NCHW accessor.
     pub fn at4_mut(&mut self, n: usize, c: usize, h: usize, w: usize) -> &mut f32 {
         let (_, cc, hh, ww) = self.dims4();
         &mut self.data[((n * cc + c) * hh + h) * ww + w]
     }
 
+    /// The shape as (N, C, H, W); panics unless 4-D.
     pub fn dims4(&self) -> (usize, usize, usize, usize) {
         assert_eq!(self.dims.len(), 4, "expected NCHW, got {:?}", self.dims);
         (self.dims[0], self.dims[1], self.dims[2], self.dims[3])
@@ -49,6 +58,7 @@ impl Tensor {
         &self.data[base..base + hh * ww]
     }
 
+    /// Mutable (n, c) image plane.
     pub fn plane_mut(&mut self, n: usize, c: usize) -> &mut [f32] {
         let (_, cc, hh, ww) = self.dims4();
         let base = (n * cc + c) * hh * ww;
@@ -62,6 +72,7 @@ impl Tensor {
         assert_eq!(self.dims, dims, "tensor shape mismatch: got {:?}, want {dims:?}", self.dims);
     }
 
+    /// Largest absolute value (0 for empty tensors).
     pub fn max_abs(&self) -> f32 {
         self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
     }

@@ -10,14 +10,18 @@ use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
+/// Weight file magic (`SFCW`).
 pub const MAGIC: &[u8; 4] = b"SFCW";
 
+/// Named tensor store (the trainer's export format).
 #[derive(Debug, Default)]
 pub struct WeightMap {
+    /// tensors by export name
     pub tensors: BTreeMap<String, Tensor>,
 }
 
 impl WeightMap {
+    /// Add or replace a tensor.
     pub fn insert(&mut self, name: &str, t: Tensor) {
         self.tensors.insert(name.to_string(), t);
     }
@@ -39,6 +43,7 @@ impl WeightMap {
         Tensor::from_vec(dims, t.data.clone())
     }
 
+    /// Write the map in the SFCW binary format.
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         f.write_all(MAGIC)?;
@@ -57,6 +62,7 @@ impl WeightMap {
         Ok(())
     }
 
+    /// Read a map written by [`WeightMap::save`].
     pub fn load(path: &Path) -> Result<WeightMap> {
         let mut f = std::io::BufReader::new(
             std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,

@@ -26,15 +26,20 @@ pub struct QuantConfig {
     /// Engine installed on supporting conv layers (a Table-1 catalog
     /// name). `None` = spatially-quantized direct conv on every layer.
     pub engine: Option<&'static str>,
+    /// weight bit-width
     pub w_bits: u32,
+    /// activation bit-width
     pub a_bits: u32,
+    /// weight scale-group granularity
     pub w_gran: Granularity,
+    /// activation scale-group granularity
     pub a_gran: Granularity,
     /// AdaQuant-lite scale search (off = plain max-abs calibration)
     pub adaquant: bool,
 }
 
 impl QuantConfig {
+    /// The paper's SFC scheme: SFC-6(7x7,3x3) + Freq/Chan×Freq scales.
     pub fn sfc_default(bits: u32) -> QuantConfig {
         QuantConfig {
             engine: Some("SFC-6(7x7,3x3)"),
@@ -46,6 +51,7 @@ impl QuantConfig {
         }
     }
 
+    /// The Winograd baseline: Wino(4x4,3x3) + Freq/Chan×Freq scales.
     pub fn winograd_default(bits: u32) -> QuantConfig {
         QuantConfig {
             engine: Some("Wino(4x4,3x3)"),
@@ -57,6 +63,7 @@ impl QuantConfig {
         }
     }
 
+    /// The spatial baseline: direct conv + Tensor/Channel scales.
     pub fn direct_default(bits: u32) -> QuantConfig {
         QuantConfig {
             engine: None,
@@ -98,11 +105,21 @@ pub fn quantize_model(model: &mut Model, calib: &Tensor, cfg: &QuantConfig) -> V
         let layer_in = &acts[input_idx];
         let layer_ref = &acts[idx];
         let node = &model.nodes[idx];
-        let Op::Conv { params, .. } = &node.op else { unreachable!() };
+        let Op::Conv { params, plan: float_plan, .. } = &node.op else { unreachable!() };
         let (n, ic, h, w) = layer_in.dims4();
-        let (oc, _, r, _) = params.weight.dims4();
-        let desc =
-            ConvDesc::new(n, ic, oc, h, w, r, params.stride, params.pad).with_quant(cfg.spec());
+        let (oc, icg, r, _) = params.weight.dims4();
+        // grouping comes from the node's float plan (the authoritative
+        // descriptor); the weight shape must agree with it
+        let groups = float_plan.desc.groups;
+        assert_eq!(
+            icg * groups,
+            ic,
+            "weight channels {icg}×{groups} groups vs activation channels {ic} at {}",
+            node.name
+        );
+        let desc = ConvDesc::new(n, ic, oc, h, w, r, params.stride, params.pad)
+            .with_groups(groups)
+            .with_quant(cfg.spec());
         let Ok(plan) = sel.plan_named(engine_name, &desc) else {
             continue; // engine unknown or unsupported for this layer
         };

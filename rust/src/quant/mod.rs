@@ -11,7 +11,9 @@ pub use qconv::{Granularity, QConvLayer};
 /// Symmetric intN quantization parameters for one scale group.
 #[derive(Clone, Copy, Debug)]
 pub struct QParams {
+    /// float value of one integer step
     pub scale: f32,
+    /// top code (2^(bits−1) − 1)
     pub qmax: i32,
 }
 
@@ -24,12 +26,14 @@ impl QParams {
     }
 
     #[inline]
+    /// Round to the integer grid, clamped to ±qmax.
     pub fn quantize(&self, v: f32) -> i32 {
         let q = (v / self.scale).round() as i32;
         q.clamp(-self.qmax, self.qmax)
     }
 
     #[inline]
+    /// Map an integer code back to float.
     pub fn dequantize(&self, q: i32) -> f32 {
         q as f32 * self.scale
     }

@@ -33,14 +33,19 @@ pub enum Granularity {
 /// Resolved scale lookup: maps (uv, oc) → scale.
 #[derive(Clone, Debug)]
 pub struct ScaleGroup {
+    /// the granularity the scales were reduced at
     pub gran: Granularity,
+    /// transform points (T²) the frequency axis indexes
     pub t2: usize,
+    /// output channels the channel axis indexes
     pub oc: usize,
+    /// resolved scales, laid out per `gran`
     pub scales: Vec<f32>,
 }
 
 impl ScaleGroup {
     #[inline]
+    /// The scale for transform point `uv` and output channel `oc`.
     pub fn scale(&self, uv: usize, oc: usize) -> f32 {
         match self.gran {
             Granularity::Tensor => self.scales[0],
@@ -87,6 +92,7 @@ impl ScaleGroup {
         ScaleGroup { gran, t2, oc, scales }
     }
 
+    /// Copy with every scale multiplied by `factor` (AdaQuant search).
     pub fn scaled(&self, factor: f32) -> ScaleGroup {
         let mut s = self.clone();
         for v in s.scales.iter_mut() {
@@ -109,18 +115,23 @@ pub enum QCalib<'a> {
 /// (transform-domain int GEMM vs spatial int conv, optionally through
 /// the NTT); the layer owns the quantized weights and resolved scales.
 pub struct QConvLayer {
+    /// the engine plan the layer was built from
     pub plan: Arc<ConvPlan>,
+    /// float bias added after dequantization
     pub bias: Vec<f32>,
     kernel: QKernel,
 }
 
 enum QKernel {
     /// Eq. 17: quantize BᵀxB and GfGᵀ, exact i32 ⊙-accumulation,
-    /// float inverse transform.
+    /// float inverse transform. Grouped descriptors run one
+    /// `[tiles×IC/g]·[IC/g×OC/g]` integer GEMM per (frequency, group).
     TransformDomain {
         oc: usize,
-        ic: usize,
-        /// quantized transformed weights, freq-major [T²][OC][IC]
+        /// per-group input channels (`desc.ic / desc.groups`)
+        icg: usize,
+        /// quantized transformed weights, freq-major [T²][OC][IC/g]
+        /// (output channels contiguous per group)
         wq: Vec<i8>,
         /// weight scale per (uv, oc) resolved from granularity
         w_scales: ScaleGroup,
@@ -129,12 +140,14 @@ enum QKernel {
         a_bits: u32,
     },
     /// Spatially quantized conv: int8 per-tensor activations ×
-    /// per-channel weights, executed by nested loops or the exact NTT.
+    /// per-channel weights, executed by (grouped) nested loops or the
+    /// exact NTT (dense only).
     Spatial {
-        /// quantized weights [OC][IC·R·R]
+        /// quantized weights [OC][(IC/g)·R·R]
         wq: Vec<i8>,
         oc: usize,
-        ic: usize,
+        /// per-group input channels (`desc.ic / desc.groups`)
+        icg: usize,
         r: usize,
         w_scales: Vec<f32>,
         a_scale: QParams,
@@ -186,20 +199,27 @@ impl QConvLayer {
         act_maxima: &[f32],
     ) -> QConvLayer {
         let fast = plan.fast_plan().expect("bilinear plan").clone();
-        let (oc, ic, r, _) = weight.dims4();
+        let (oc, icg, r, _) = weight.dims4();
         assert_eq!(r, fast.r());
         assert_eq!(plan.desc.stride, 1, "fast conv requires stride 1");
+        assert_eq!(
+            icg * plan.desc.groups,
+            plan.desc.ic,
+            "weight channels {icg}×{} groups vs descriptor ic {}",
+            plan.desc.groups,
+            plan.desc.ic
+        );
         let t2 = fast.t() * fast.t();
         assert_eq!(act_maxima.len(), t2);
-        // transform weights (f32, freq-major [T²][OC][IC])
-        let u = fast.transform_weights(&weight.data, oc, ic);
-        // per (uv, oc) maxima over ic
+        // transform weights (f32, freq-major [T²][OC][IC/g])
+        let u = fast.transform_weights(&weight.data, oc, icg);
+        // per (uv, oc) maxima over the group's input channels
         let mut w_maxima = vec![0f32; t2 * oc];
         for uv in 0..t2 {
             for o in 0..oc {
                 let mut m = 0f32;
-                for i in 0..ic {
-                    m = m.max(u[(uv * oc + o) * ic + i].abs());
+                for i in 0..icg {
+                    m = m.max(u[(uv * oc + o) * icg + i].abs());
                 }
                 w_maxima[uv * oc + o] = m;
             }
@@ -210,11 +230,18 @@ impl QConvLayer {
             "activation granularity must be Tensor or Freq"
         );
         let a_scales = ScaleGroup::from_maxima(spec.a_gran, t2, 1, act_maxima, spec.a_bits);
-        let wq = quantize_weights(&u, t2, oc, ic, &w_scales, spec.w_bits);
+        let wq = quantize_weights(&u, t2, oc, icg, &w_scales, spec.w_bits);
         QConvLayer {
             plan,
             bias,
-            kernel: QKernel::TransformDomain { oc, ic, wq, w_scales, a_scales, a_bits: spec.a_bits },
+            kernel: QKernel::TransformDomain {
+                oc,
+                icg,
+                wq,
+                w_scales,
+                a_scales,
+                a_bits: spec.a_bits,
+            },
         }
     }
 
@@ -226,16 +253,24 @@ impl QConvLayer {
         act_max_abs: f32,
         via_ntt: bool,
     ) -> QConvLayer {
-        let (oc, ic, r, _) = weight.dims4();
+        let (oc, icg, r, _) = weight.dims4();
+        assert_eq!(
+            icg * plan.desc.groups,
+            plan.desc.ic,
+            "weight channels {icg}×{} groups vs descriptor ic {}",
+            plan.desc.groups,
+            plan.desc.ic
+        );
+        assert!(!via_ntt || plan.desc.groups == 1, "the NTT spatial path is dense-only");
         let qmax = ((1i32 << (spec.w_bits - 1)) - 1) as f32;
         let mut w_scales = vec![1f32; oc];
-        let mut wq = vec![0i8; oc * ic * r * r];
+        let mut wq = vec![0i8; oc * icg * r * r];
         for o in 0..oc {
-            let row = &weight.data[o * ic * r * r..(o + 1) * ic * r * r];
+            let row = &weight.data[o * icg * r * r..(o + 1) * icg * r * r];
             let m = super::max_abs(row);
             let s = if m > 0.0 { m / qmax } else { 1.0 };
             w_scales[o] = s;
-            for (dst, &v) in wq[o * ic * r * r..(o + 1) * ic * r * r].iter_mut().zip(row) {
+            for (dst, &v) in wq[o * icg * r * r..(o + 1) * icg * r * r].iter_mut().zip(row) {
                 *dst = ((v / s).round() as i32).clamp(-(qmax as i32), qmax as i32) as i8;
             }
         }
@@ -243,7 +278,7 @@ impl QConvLayer {
         QConvLayer {
             plan,
             bias,
-            kernel: QKernel::Spatial { wq, oc, ic, r, w_scales, a_scale, via_ntt },
+            kernel: QKernel::Spatial { wq, oc, icg, r, w_scales, a_scale, via_ntt },
         }
     }
 
@@ -283,15 +318,17 @@ impl QConvLayer {
     /// into `out`. Bit-identical to [`QConvLayer::forward`] whether `ws`
     /// is fresh or reused.
     pub fn forward_into(&self, x: &Tensor, ws: &mut Workspace, out: &mut Tensor) {
+        let dil = self.plan.desc.dilation;
+        assert_eq!(dil, 1, "dilation is reserved; engines require dilation == 1");
         match &self.kernel {
-            QKernel::TransformDomain { oc, ic, wq, w_scales, a_scales, a_bits } => {
-                forward_transform_q(x, self, *oc, *ic, wq, w_scales, a_scales, *a_bits, ws, out)
+            QKernel::TransformDomain { oc, icg, wq, w_scales, a_scales, a_bits } => {
+                forward_transform_q(x, self, *oc, *icg, wq, w_scales, a_scales, *a_bits, ws, out)
             }
-            QKernel::Spatial { wq, oc, ic, r, w_scales, a_scale, via_ntt } => {
+            QKernel::Spatial { wq, oc, icg, r, w_scales, a_scale, via_ntt } => {
                 if *via_ntt {
-                    forward_spatial_ntt(x, self, wq, *oc, *ic, *r, w_scales, *a_scale, ws, out)
+                    forward_spatial_ntt(x, self, wq, *oc, *icg, *r, w_scales, *a_scale, ws, out)
                 } else {
-                    forward_spatial_q(x, self, wq, *oc, *ic, *r, w_scales, *a_scale, ws, out)
+                    forward_spatial_q(x, self, wq, *oc, *icg, *r, w_scales, *a_scale, ws, out)
                 }
             }
         }
@@ -333,7 +370,7 @@ fn forward_transform_q(
     x: &Tensor,
     layer: &QConvLayer,
     oc: usize,
-    ic: usize,
+    icg: usize,
     wq: &[i8],
     w_scales: &ScaleGroup,
     a_scales: &ScaleGroup,
@@ -342,6 +379,9 @@ fn forward_transform_q(
     out: &mut Tensor,
 ) {
     let plan = layer.plan.fast_plan().expect("bilinear plan");
+    let groups = layer.plan.desc.groups;
+    let ic = icg * groups;
+    let ocg = oc / groups;
     let (n, ic2, h, wid) = x.dims4();
     assert_eq!(ic, ic2);
     let (m, l, t) = (plan.m(), plan.l(), plan.t());
@@ -370,31 +410,41 @@ fn forward_transform_q(
         })
         .collect();
     par_chunks_states(&mut out.data, oc * oh * ow, &mut states, |st, ni, out_img| {
-        // 1) gather + transform + QUANTIZE tiles: Vq freq-major [T²][tiles][IC]
+        // 1) gather + transform + QUANTIZE tiles: Vq group-major
+        //    [T²][G][tiles][IC/g] (== [T²][tiles][IC] when groups == 1)
         for ty in 0..tiles_y {
             for tx in 0..tiles_x {
                 let tile_idx = ty * tiles_x + tx;
                 for c in 0..ic {
+                    let (gi, il) = (c / icg, c % icg);
                     gather_tile(x, ni, c, ty, tx, m, l, pad, &mut st.tile);
                     plan.transform_tile(&st.tile, &mut st.tscr, &mut st.tv);
                     for uv in 0..tt {
                         let s = a_scales.scale(uv, 0);
                         let q = (st.tv[uv] / s).round() as i32;
-                        st.vq[(uv * n_tiles + tile_idx) * ic + c] = q.clamp(-a_qmax, a_qmax) as i8;
+                        st.vq[((uv * groups + gi) * n_tiles + tile_idx) * icg + il] =
+                            q.clamp(-a_qmax, a_qmax) as i8;
                     }
                 }
             }
         }
-        // 2) integer per-frequency GEMM, i32 accumulation (exact):
-        //    PI[uv] = Vq[uv] · Wq[uv]ᵀ ([tiles×IC]·[IC×OC])
+        // 2) integer per-(frequency, group) GEMM, i32 accumulation
+        //    (exact): PI[uv][g] = Vq[uv][g] · Wq[uv][g]ᵀ
+        //    ([tiles×IC/g]·[IC/g×OC/g])
         for uv in 0..tt {
-            let vblk = &st.vq[uv * n_tiles * ic..(uv + 1) * n_tiles * ic];
-            let ublk = &wq[uv * oc * ic..(uv + 1) * oc * ic];
-            let pblk = &mut st.pi[uv * n_tiles * oc..(uv + 1) * n_tiles * oc];
-            gemm_nt_i8_i32(n_tiles, oc, ic, vblk, ublk, pblk);
+            for gi in 0..groups {
+                let vb = (uv * groups + gi) * n_tiles * icg;
+                let ub = (uv * oc + gi * ocg) * icg;
+                let pb = (uv * groups + gi) * n_tiles * ocg;
+                let vblk = &st.vq[vb..vb + n_tiles * icg];
+                let ublk = &wq[ub..ub + ocg * icg];
+                let pblk = &mut st.pi[pb..pb + n_tiles * ocg];
+                gemm_nt_i8_i32(n_tiles, ocg, icg, vblk, ublk, pblk);
+            }
         }
         // 3) dequantize + inverse transform + bias + scatter
         for o in 0..oc {
+            let (gi, ol) = (o / ocg, o % ocg);
             let b = if layer.bias.is_empty() { 0.0 } else { layer.bias[o] };
             let plane = &mut out_img[o * oh * ow..(o + 1) * oh * ow];
             for ty in 0..tiles_y {
@@ -403,7 +453,8 @@ fn forward_transform_q(
                     for uv in 0..tt {
                         // dequantize: both operand scales
                         let sa = a_scales.scale(uv, 0);
-                        st.prod[uv] = st.pi[(uv * n_tiles + tile_idx) * oc + o] as f32
+                        st.prod[uv] = st.pi[((uv * groups + gi) * n_tiles + tile_idx) * ocg + ol]
+                            as f32
                             * sa
                             * w_scales.scale(uv, o);
                     }
@@ -435,13 +486,16 @@ fn forward_spatial_q(
     layer: &QConvLayer,
     wq: &[i8],
     oc: usize,
-    ic: usize,
+    icg: usize,
     r: usize,
     w_scales: &[f32],
     a_scale: QParams,
     ws: &mut Workspace,
     out: &mut Tensor,
 ) {
+    let groups = layer.plan.desc.groups;
+    let ic = icg * groups;
+    let ocg = oc / groups;
     let (n, ic2, h, wid) = x.dims4();
     assert_eq!(ic, ic2);
     let (stride, pad) = (layer.plan.desc.stride, layer.plan.desc.pad);
@@ -455,14 +509,16 @@ fn forward_spatial_q(
     }
     par_chunks_mut(&mut out.data, oh * ow, |job, plane| {
         let (ni, o) = (job / oc, job % oc);
+        let gi = o / ocg;
         let deq = a_scale.scale * w_scales[o];
         let b = if layer.bias.is_empty() { 0.0 } else { layer.bias[o] };
         for oy in 0..oh {
             for ox in 0..ow {
                 let mut acc: i32 = 0;
-                for i in 0..ic {
-                    let xplane = &xq[(ni * ic + i) * h * wid..(ni * ic + i + 1) * h * wid];
-                    let wplane = &wq[(o * ic + i) * r * r..(o * ic + i + 1) * r * r];
+                for il in 0..icg {
+                    let ci = gi * icg + il;
+                    let xplane = &xq[(ni * ic + ci) * h * wid..(ni * ic + ci + 1) * h * wid];
+                    let wplane = &wq[(o * icg + il) * r * r..(o * icg + il + 1) * r * r];
                     for ky in 0..r {
                         let yy = oy * stride + ky;
                         if yy < pad || yy >= h + pad {
@@ -489,6 +545,8 @@ fn forward_spatial_q(
 /// The NTT-backed spatial path: bit-identical accumulators to
 /// [`forward_spatial_q`] (both are exact integer arithmetic), computed
 /// through the frequency domain — the Table-3 NTT accelerator datapath.
+/// Dense only (the NTT engine's `supports` rejects grouped
+/// descriptors).
 #[allow(clippy::too_many_arguments)]
 fn forward_spatial_ntt(
     x: &Tensor,
@@ -504,6 +562,7 @@ fn forward_spatial_ntt(
 ) {
     let (n, ic2, h, wid) = x.dims4();
     assert_eq!(ic, ic2);
+    assert_eq!(layer.plan.desc.groups, 1, "NTT path is dense-only");
     let pad = layer.plan.desc.pad;
     assert_eq!(layer.plan.desc.stride, 1, "NTT path is stride-1");
     let oh = h + 2 * pad - r + 1;
@@ -665,6 +724,65 @@ mod tests {
         let q = QConvLayer::from_plan(plan, &w, vec![], &QCalib::MaxAbs(x.max_abs()));
         let got = q.forward(&x);
         assert_eq!(got.dims, vec![1, 2, 4, 4]);
+    }
+
+    #[test]
+    fn grouped_int8_spatial_matches_per_group_dense_exactly() {
+        // The grouped direct int8 path vs slicing each group into its
+        // own dense layer under identical calibration: both are exact
+        // integer arithmetic over the same quantizers → equal to the bit.
+        let mut rng = Pcg32::seeded(48);
+        let (n, ic, oc, hw, groups) = (1usize, 4usize, 4usize, 8usize, 2usize);
+        let (icg, ocg) = (ic / groups, oc / groups);
+        let x = rand_tensor(&[n, ic, hw, hw], &mut rng, 1.0);
+        let w = rand_tensor(&[oc, icg, 3, 3], &mut rng, 0.3);
+        let spec = QuantSpec::spatial_default(8);
+        let desc = ConvDesc::new(n, ic, oc, hw, hw, 3, 1, 1).with_groups(groups).with_quant(spec);
+        let plan = named_plan("direct", desc);
+        let calib = QCalib::MaxAbs(x.max_abs());
+        let q = QConvLayer::from_plan(plan, &w, vec![], &calib);
+        let got = q.forward(&x);
+        for gi in 0..groups {
+            let mut xg = Tensor::zeros(&[n, icg, hw, hw]);
+            for ni in 0..n {
+                for il in 0..icg {
+                    xg.plane_mut(ni, il).copy_from_slice(x.plane(ni, gi * icg + il));
+                }
+            }
+            let mut wg = Tensor::zeros(&[ocg, icg, 3, 3]);
+            wg.data.copy_from_slice(&w.data[gi * ocg * icg * 9..(gi + 1) * ocg * icg * 9]);
+            let dg = ConvDesc::new(n, icg, ocg, hw, hw, 3, 1, 1).with_quant(spec);
+            let qg = QConvLayer::from_plan(named_plan("direct", dg), &wg, vec![], &calib);
+            let want = qg.forward(&xg);
+            for ni in 0..n {
+                for ol in 0..ocg {
+                    assert_eq!(
+                        got.plane(ni, gi * ocg + ol),
+                        want.plane(ni, ol),
+                        "group {gi} out-channel {ol}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_int8_transform_close_to_float() {
+        let mut rng = Pcg32::seeded(49);
+        let (ic, hw) = (8usize, 14usize);
+        let x = rand_tensor(&[1, ic, hw, hw], &mut rng, 1.0);
+        let w = rand_tensor(&[ic, 1, 3, 3], &mut rng, 0.3);
+        let spec = transform_spec(8, 8, Granularity::ChannelFreq, Granularity::Freq);
+        let desc = ConvDesc::new(1, ic, ic, hw, hw, 3, 1, 1).with_groups(ic).with_quant(spec);
+        let plan = named_plan("SFC-6(7x7,3x3)", desc);
+        let maxima = collect_act_maxima(&x, plan.fast_plan().unwrap(), 1);
+        let q = QConvLayer::from_plan(plan, &w, vec![0.0; ic], &QCalib::TransformMaxima(&maxima));
+        let want = crate::nn::conv::conv2d_direct_grouped(&x, &w, &[0.0; ic], 1, 1, ic);
+        let got = q.forward(&x);
+        assert_eq!(got.dims, want.dims);
+        let denom = want.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / want.len() as f64;
+        let rel = got.mse(&want) / denom;
+        assert!(rel < 5e-3, "depthwise int8 transform rel error {rel}");
     }
 
     #[test]

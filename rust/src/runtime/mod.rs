@@ -41,6 +41,7 @@ mod pjrt_impl {
             Ok(Executor { client, exe, input_dims: input_dims.to_vec(), out_classes })
         }
 
+        /// PJRT platform name (e.g. "cpu").
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
@@ -65,6 +66,7 @@ mod pjrt_impl {
             Ok(v)
         }
 
+        /// Batch size the artifact was compiled for.
         pub fn batch_size(&self) -> usize {
             self.input_dims[0]
         }
@@ -91,6 +93,7 @@ mod pjrt_impl {
     }
 
     impl Executor {
+        /// Always errors: the `pjrt` feature is disabled.
         pub fn load(hlo_path: &Path, _input_dims: &[usize], _out_classes: usize) -> Result<Executor> {
             anyhow::bail!(
                 "PJRT runtime disabled (build with `--features pjrt` and the vendored `xla` \
@@ -99,14 +102,17 @@ mod pjrt_impl {
             )
         }
 
+        /// Always "stub".
         pub fn platform(&self) -> String {
             "stub".into()
         }
 
+        /// Always errors: the `pjrt` feature is disabled.
         pub fn run(&self, _batch: &[f32]) -> Result<Vec<f32>> {
             anyhow::bail!("PJRT runtime disabled (build with `--features pjrt`)")
         }
 
+        /// Batch size from the configured input dims.
         pub fn batch_size(&self) -> usize {
             self.input_dims[0]
         }
@@ -135,15 +141,18 @@ pub struct EngineExecutor {
 }
 
 impl EngineExecutor {
+    /// Executor over a built model (NCHW `input_dims`, index 0 = batch).
     pub fn from_model(model: Model, input_dims: Vec<usize>, out_classes: usize) -> EngineExecutor {
         assert_eq!(input_dims.len(), 4, "NCHW input dims expected, got {input_dims:?}");
         EngineExecutor { model, input_dims, out_classes }
     }
 
+    /// Always "rust-engine".
     pub fn platform(&self) -> String {
         "rust-engine".into()
     }
 
+    /// Batch size from the configured input dims.
     pub fn batch_size(&self) -> usize {
         self.input_dims[0]
     }

@@ -2,6 +2,7 @@
 //! platforms, used everywhere randomness is needed so every experiment in
 //! EXPERIMENTS.md is exactly reproducible from its seed.
 
+/// PCG-XSH-RR 64/32 generator state.
 #[derive(Clone, Debug)]
 pub struct Pcg32 {
     state: u64,
@@ -9,6 +10,7 @@ pub struct Pcg32 {
 }
 
 impl Pcg32 {
+    /// Generator for (seed, stream).
     pub fn new(seed: u64, stream: u64) -> Self {
         let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
         rng.next_u32();
@@ -17,11 +19,13 @@ impl Pcg32 {
         rng
     }
 
+    /// Generator on the default stream.
     pub fn seeded(seed: u64) -> Self {
         Self::new(seed, 54)
     }
 
     #[inline]
+    /// Next 32 uniform random bits.
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(6364136223846793005).wrapping_add(self.inc);
@@ -31,6 +35,7 @@ impl Pcg32 {
     }
 
     #[inline]
+    /// Next 64 uniform random bits.
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
     }

@@ -4,23 +4,28 @@
 
 use std::time::Instant;
 
+/// Wall-clock stopwatch.
 pub struct Timer {
     start: Instant,
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Self {
         Timer { start: Instant::now() }
     }
 
+    /// Seconds since start.
     pub fn elapsed_s(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Milliseconds since start.
     pub fn elapsed_ms(&self) -> f64 {
         self.elapsed_s() * 1e3
     }
 
+    /// Microseconds since start.
     pub fn elapsed_us(&self) -> f64 {
         self.elapsed_s() * 1e6
     }
@@ -29,14 +34,20 @@ impl Timer {
 /// Statistics over a set of per-iteration timings (seconds).
 #[derive(Debug, Clone, Copy)]
 pub struct BenchStats {
+    /// sample count
     pub iters: usize,
+    /// arithmetic mean seconds
     pub mean_s: f64,
+    /// median seconds
     pub median_s: f64,
+    /// fastest sample
     pub min_s: f64,
+    /// 95th-percentile seconds
     pub p95_s: f64,
 }
 
 impl BenchStats {
+    /// Statistics over a non-empty sample set.
     pub fn from_samples(mut samples: Vec<f64>) -> Self {
         assert!(!samples.is_empty());
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());

@@ -1,0 +1,266 @@
+//! Grouped/depthwise convolution across the engine stack: per-group
+//! equivalence against dense execution (float + int8), depthwise
+//! bit-identity where the arithmetic is exact, plan-cache key
+//! distinctness over `groups`, the ENGINE.md support matrix vs
+//! `supports()`, and the depthwise-separable model end to end — float
+//! and int8, `Model::forward_ws` and the server path, with zero
+//! steady-state workspace heap allocations.
+
+use sfc::coordinator::{Server, ServerConfig};
+use sfc::engine::{default_selector, ConvDesc, ConvPlan, PlanCache, Policy, Selector, Workspace};
+use sfc::nn::model::{mobilenet_cfg, mobilenet_random};
+use sfc::nn::{Op, Tensor};
+use sfc::quant::calib::{dequantize_model, quantize_model, QuantConfig};
+use sfc::runtime::EngineExecutor;
+use sfc::util::Pcg32;
+use std::sync::Arc;
+
+fn rand_tensor(dims: &[usize], rng: &mut Pcg32, sigma: f64) -> Tensor {
+    let mut t = Tensor::zeros(dims);
+    rng.fill_gaussian(&mut t.data, sigma);
+    t
+}
+
+fn rel_mse(got: &Tensor, want: &Tensor) -> f64 {
+    let denom =
+        want.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / want.len().max(1) as f64;
+    got.mse(want) / denom.max(1e-30)
+}
+
+/// Property: every engine that supports a grouped descriptor agrees
+/// with grouped direct convolution, for groups ∈ {2, ic} (depthwise).
+#[test]
+fn property_grouped_engines_match_grouped_direct() {
+    use sfc::nn::conv::conv2d_direct_grouped;
+    let sel = default_selector();
+    let mut rng = Pcg32::seeded(0x6047);
+    for (ic, oc, groups) in [(8usize, 8usize, 2usize), (6, 9, 3), (8, 8, 8), (5, 10, 5)] {
+        let d = ConvDesc::new(2, ic, oc, 13, 11, 3, 1, 1).with_groups(groups);
+        let x = rand_tensor(&[2, ic, 13, 11], &mut rng, 1.0);
+        let w = rand_tensor(&[oc, ic / groups, 3, 3], &mut rng, 0.3);
+        let bias: Vec<f32> = (0..oc).map(|i| i as f32 * 0.1 - 0.3).collect();
+        let want = conv2d_direct_grouped(&x, &w, &bias, 1, 1, groups);
+        let mut tested = 0;
+        for e in sel.engines() {
+            if !e.supports(&d) {
+                continue;
+            }
+            let plan = sel.plan_named(e.name(), &d).unwrap();
+            let got = plan.run(&x, &w, &bias);
+            assert_eq!(got.dims, want.dims, "{} on {d:?}", e.name());
+            let rel = rel_mse(&got, &want);
+            assert!(rel < 1e-6, "{} groups {groups}: rel mse {rel}", e.name());
+            tested += 1;
+        }
+        assert!(tested >= 3, "groups {groups}: expected several engines, got {tested}");
+    }
+}
+
+/// Depthwise direct and im2col run the same additions in the same
+/// order (a single-channel reduction), so their outputs are exactly
+/// equal — the strongest cross-engine check grouped execution allows
+/// in float.
+#[test]
+fn depthwise_direct_and_im2col_exactly_equal() {
+    let sel = default_selector();
+    let mut rng = Pcg32::seeded(0x9A);
+    let d = ConvDesc::new(2, 8, 8, 12, 12, 3, 1, 1).with_groups(8);
+    let x = rand_tensor(&[2, 8, 12, 12], &mut rng, 1.0);
+    let w = rand_tensor(&[8, 1, 3, 3], &mut rng, 0.3);
+    let bias = vec![0.1f32; 8];
+    let yd = sel.plan_named("direct", &d).unwrap().run(&x, &w, &bias);
+    let yi = sel.plan_named("im2col-gemm", &d).unwrap().run(&x, &w, &bias);
+    assert_eq!(yd.dims, yi.dims);
+    assert_eq!(yd.data, yi.data, "depthwise direct vs im2col must agree exactly");
+}
+
+/// Grouped plans are bit-identical between fresh and reused workspaces
+/// (the zero-alloc contract extends to the new descriptor axis).
+#[test]
+fn grouped_plans_bit_identical_under_workspace_reuse() {
+    let sel = default_selector();
+    let mut rng = Pcg32::seeded(0x6E);
+    let d = ConvDesc::new(2, 8, 8, 14, 14, 3, 1, 1).with_groups(4);
+    let x = rand_tensor(&[2, 8, 14, 14], &mut rng, 1.0);
+    let w = rand_tensor(&[8, 2, 3, 3], &mut rng, 0.3);
+    for e in sel.engines() {
+        if !e.supports(&d) {
+            continue;
+        }
+        let plan = sel.plan_named(e.name(), &d).unwrap();
+        let want = plan.run(&x, &w, &[]);
+        let mut ws = Workspace::new();
+        let mut out = Tensor::zeros(&plan.out_dims(&x, &w));
+        plan.run_into(&x, &w, &[], &mut ws, &mut out);
+        assert_eq!(out.data, want.data, "{}: fresh workspace", e.name());
+        let warm = ws.heap_allocs();
+        out.data.fill(f32::NAN);
+        plan.run_into(&x, &w, &[], &mut ws, &mut out);
+        assert_eq!(out.data, want.data, "{}: reused workspace", e.name());
+        assert_eq!(ws.heap_allocs(), warm, "{}: steady state must not allocate", e.name());
+        assert_eq!(ws.in_use_bytes(), 0, "{}: all buffers returned", e.name());
+    }
+}
+
+/// `groups` is part of the plan-cache key: one shape at groups ∈
+/// {1, 2, ic} plans three distinct entries, and repeats hit.
+#[test]
+fn plan_cache_keys_distinguish_groups() {
+    let cache = Arc::new(PlanCache::new());
+    let sel = Selector::with_cache(Policy::Heuristic, cache.clone());
+    let base = ConvDesc::new(1, 8, 8, 16, 16, 3, 1, 1);
+    for g in [1usize, 2, 8] {
+        sel.plan(&base.with_groups(g)).unwrap();
+    }
+    assert_eq!(cache.misses(), 3, "each group count is its own cache entry");
+    assert_eq!(cache.len(), 3);
+    for g in [1usize, 2, 8] {
+        sel.plan(&base.with_groups(g)).unwrap();
+    }
+    assert_eq!(cache.hits(), 3, "repeats must hit");
+    assert_eq!(cache.misses(), 3);
+}
+
+/// The ENGINE.md "Engine × scenario support matrix" is generated from
+/// `all_engines()` + `supports()`; the committed docs must contain the
+/// generated table verbatim, so they cannot silently drift.
+#[test]
+fn engine_md_support_matrix_matches_supports() {
+    let md_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../ENGINE.md");
+    let md = std::fs::read_to_string(md_path).expect("ENGINE.md at the repo root");
+    let table = sfc::engine::support_matrix_markdown();
+    assert!(
+        md.contains(&table),
+        "ENGINE.md support matrix drifted from supports(); regenerate it from \
+         sfc::engine::support_matrix_markdown():\n{table}"
+    );
+}
+
+/// The depthwise-separable model through `Model::forward_ws`: bit-
+/// identical to `forward_all`, and alloc-free once the workspace is
+/// warm.
+#[test]
+fn depthwise_model_forward_ws_bit_identical_and_alloc_free() {
+    let m = mobilenet_random(&mobilenet_cfg(), 11, 10);
+    let mut rng = Pcg32::seeded(12);
+    let x = rand_tensor(&[2, 3, 32, 32], &mut rng, 1.0);
+    let want = m.forward_all(&x).pop().unwrap();
+    let mut ws = Workspace::new();
+    let y1 = m.forward_ws(&x, &mut ws);
+    assert_eq!(y1.data, want.data, "workspace forward must be bit-identical");
+    ws.give_f32(y1.data);
+    let warm = ws.heap_allocs();
+    let y2 = m.forward_ws(&x, &mut ws);
+    assert_eq!(y2.data, want.data, "reused-workspace forward must be bit-identical");
+    assert_eq!(ws.heap_allocs(), warm, "steady-state depthwise forward must be alloc-free");
+}
+
+/// The engines the selector picks for the depthwise model agree with
+/// an all-direct pin of the same graph (same descriptors, groups kept)
+/// within float fast-conv tolerance.
+#[test]
+fn depthwise_model_selected_engines_agree_with_direct() {
+    let mut m = mobilenet_random(&mobilenet_cfg(), 13, 10);
+    let mut rng = Pcg32::seeded(14);
+    let x = rand_tensor(&[2, 3, 32, 32], &mut rng, 1.0);
+    let selected = m.forward(&x);
+    for i in m.conv_nodes() {
+        if let Op::Conv { plan, .. } = &mut m.nodes[i].op {
+            *plan = Arc::new(ConvPlan::direct(plan.desc));
+        }
+    }
+    let reference = m.forward(&x);
+    let rel = rel_mse(&selected, &reference);
+    assert!(rel < 1e-5, "selected engines drifted from direct: rel mse {rel}");
+}
+
+/// int8 PTQ over the depthwise model: the spatial scheme quantizes
+/// every conv (depthwise included), the transform scheme takes the
+/// 3×3 stride-1 layers through the SFC engine per-group.
+#[test]
+fn depthwise_model_int8_ptq_close_to_float() {
+    let cfg = mobilenet_cfg();
+    let mut m = mobilenet_random(&cfg, 15, 10);
+    let mut rng = Pcg32::seeded(16);
+    let calib = rand_tensor(&[8, 3, 32, 32], &mut rng, 1.0);
+    let fp32 = m.forward(&calib);
+
+    let done = quantize_model(&mut m, &calib, &QuantConfig::direct_default(8));
+    assert_eq!(done.len(), 1 + 2 * cfg.blocks.len(), "spatial int8 must take every conv");
+    let q = m.forward(&calib);
+    let rel = rel_mse(&q, &fp32);
+    assert!(rel < 1e-1, "spatial int8 depthwise model rel err {rel}");
+    dequantize_model(&mut m);
+
+    let done = quantize_model(&mut m, &calib, &QuantConfig::sfc_default(8));
+    // stem (dense 3×3 s1) + the stride-1 depthwise layer; strided dw
+    // and pointwise 1×1 layers stay float, per supports()
+    assert_eq!(done.len(), 2, "SFC engine takes exactly the 3×3 stride-1 layers");
+    let q = m.forward(&calib);
+    let rel = rel_mse(&q, &fp32);
+    assert!(rel < 1e-1, "transform int8 depthwise model rel err {rel}");
+}
+
+/// The server path over the depthwise model, float and int8: logits
+/// bit-identical to direct executor calls, zero steady-state workspace
+/// heap allocations.
+#[test]
+fn depthwise_model_serves_float_and_int8_alloc_free() {
+    let mut rng = Pcg32::seeded(17);
+    let images: Vec<Vec<f32>> = (0..12)
+        .map(|_| {
+            let mut v = vec![0f32; 3 * 32 * 32];
+            rng.fill_gaussian(&mut v, 1.0);
+            v
+        })
+        .collect();
+    for int8 in [false, true] {
+        let mut m = mobilenet_random(&mobilenet_cfg(), 18, 10);
+        if int8 {
+            let calib = rand_tensor(&[4, 3, 32, 32], &mut rng, 1.0);
+            let done = quantize_model(&mut m, &calib, &QuantConfig::direct_default(8));
+            assert!(!done.is_empty());
+        }
+        let exe = EngineExecutor::from_model(m, vec![4, 3, 32, 32], 10);
+        // expected logits straight through the executor (per-image rows
+        // are independent of batch packing, so serving must match them)
+        let mut expected: Vec<Vec<f32>> = Vec::new();
+        for chunk in images.chunks(4) {
+            let mut batch = vec![0f32; 4 * 3 * 32 * 32];
+            for (i, img) in chunk.iter().enumerate() {
+                batch[i * 3 * 32 * 32..(i + 1) * 3 * 32 * 32].copy_from_slice(img);
+            }
+            let logits = exe.run(&batch).unwrap();
+            for i in 0..chunk.len() {
+                expected.push(logits[i * 10..(i + 1) * 10].to_vec());
+            }
+        }
+        let server = Server::start(
+            move || Ok(exe),
+            ServerConfig { batch_size: 4, queue_depth: 32, batch_timeout_ms: 1 },
+        )
+        .unwrap();
+        // warm-up wave fills the worker's workspace pools
+        let handles: Vec<_> =
+            images.iter().map(|img| server.submit(img.clone()).unwrap()).collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let r = h.wait().unwrap();
+            assert_eq!(r.logits, expected[i], "int8={int8} request {i}");
+        }
+        let warm_allocs = server.ws_heap_allocs();
+        assert!(warm_allocs > 0, "warm-up must populate the workspace");
+        // steady state: more traffic, no new heap fallbacks
+        let handles: Vec<_> =
+            images.iter().map(|img| server.submit(img.clone()).unwrap()).collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let r = h.wait().unwrap();
+            assert_eq!(r.logits, expected[i], "int8={int8} steady request {i}");
+        }
+        assert_eq!(
+            server.ws_heap_allocs(),
+            warm_allocs,
+            "int8={int8}: steady-state depthwise serving must be alloc-free"
+        );
+        server.shutdown();
+    }
+}
