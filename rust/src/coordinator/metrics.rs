@@ -32,6 +32,21 @@ pub fn workspace_counters() -> (u64, u64) {
     crate::engine::workspace::global_counters()
 }
 
+/// Live bytes of pre-packed weight artifacts across the process
+/// ([`crate::engine::packed_weight_bytes`]) — the memory cost of
+/// plan-time weight pre-packing, reported by `sfc serve` so it stays
+/// observable alongside the workspace accounting.
+pub fn packed_weight_bytes() -> u64 {
+    crate::engine::packed_weight_bytes()
+}
+
+/// The active compute-kernel dispatch arm (`"avx2" | "neon" |
+/// "scalar"`, see [`crate::linalg::simd`]) — reported by `sfc serve`
+/// and recorded in the BENCH_conv.json `kernel` field.
+pub fn kernel_name() -> &'static str {
+    crate::linalg::simd::kernel_name()
+}
+
 /// Latency summary over a set of per-request samples (seconds).
 #[derive(Clone, Copy, Debug)]
 pub struct LatencyStats {

@@ -102,12 +102,17 @@ pub fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
         stats.max * 1e3
     );
     println!("  batches    : {}", server.batches_executed());
+    println!("  kernel     : {}", metrics::kernel_name());
     let (hits, misses) = metrics::plan_cache_counters();
     println!("  plan cache : {hits} hits / {misses} misses");
     println!(
         "  workspace  : peak {:.1} KB · {} heap fallbacks (0 after warm-up = zero-alloc)",
         server.ws_peak_bytes() as f64 / 1024.0,
         server.ws_heap_allocs()
+    );
+    println!(
+        "  packed wts : {:.1} KB pre-packed weight panels (plan-time, live)",
+        metrics::packed_weight_bytes() as f64 / 1024.0
     );
     server.shutdown();
     Ok(())

@@ -82,6 +82,14 @@ impl PlanCache {
         self.map.lock().unwrap().len()
     }
 
+    /// Live bytes of pre-packed weight artifacts built from the cached
+    /// plans ([`ConvPlan::packed_bytes`] summed over every entry) — the
+    /// memory cost of plan-time weight pre-packing, reported by
+    /// `sfc serve` next to the hit/miss counters.
+    pub fn packed_weight_bytes(&self) -> usize {
+        self.map.lock().unwrap().values().map(|p| p.packed_bytes()).sum()
+    }
+
     /// True when no plans are cached.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
@@ -131,6 +139,27 @@ mod tests {
         assert_eq!(cache.len(), 3);
         cache.clear();
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn packed_weight_bytes_sum_over_cached_plans() {
+        use crate::engine::{PackedWeights, Selector};
+        use crate::nn::tensor::Tensor;
+        use crate::util::Pcg32;
+        let cache = Arc::new(PlanCache::new());
+        let sel = Selector::with_cache(crate::engine::Policy::Heuristic, cache.clone());
+        let d = ConvDesc::new(1, 4, 4, 12, 12, 3, 1, 1);
+        let plan = sel.plan_named("SFC-6(6x6,3x3)", &d).unwrap();
+        assert_eq!(cache.packed_weight_bytes(), 0, "nothing packed yet");
+        let mut w = Tensor::zeros(&[4, 4, 3, 3]);
+        Pcg32::seeded(1).fill_gaussian(&mut w.data, 0.3);
+        let p1 = PackedWeights::pack(&plan, &w);
+        let p2 = PackedWeights::pack(&plan, &w);
+        assert_eq!(cache.packed_weight_bytes(), p1.bytes() + p2.bytes());
+        drop(p1);
+        assert_eq!(cache.packed_weight_bytes(), p2.bytes());
+        drop(p2);
+        assert_eq!(cache.packed_weight_bytes(), 0, "drops release the accounted bytes");
     }
 
     #[test]

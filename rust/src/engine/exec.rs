@@ -11,7 +11,8 @@
 use super::workspace::Workspace;
 use crate::algo::fft::fft_inplace;
 use crate::algo::ntt::{ntt_inplace, P};
-use crate::linalg::gemm::gemm_nt_f32;
+use crate::linalg::gemm::{gemm_packed_f32, PANEL};
+use crate::linalg::simd::quantize_i8_slice;
 use crate::nn::tensor::Tensor;
 use crate::util::par::{num_threads, par_chunks_states};
 
@@ -46,24 +47,31 @@ pub fn conv2d_im2col_into(
     out.assert_dims(&[n, oc, oh, ow]);
     let k = icg * r * r;
     let npix = oh * ow;
+    // The lowering panel is built directly in the packed GEMM B layout:
+    // 8-pixel column panels, `col[(p/8)·k·8 + kk·8 + p%8]`. Pixels are
+    // padded to the panel width; the lowering never writes the pad
+    // lanes, the GEMM loads-and-discards them, and their contents stay
+    // benign because Workspace checkouts arrive zeroed and later calls
+    // only ever leave earlier finite lowering values behind.
+    let col_len = npix.div_ceil(PANEL) * k * PANEL;
     let workers = num_threads().min(n).max(1);
-    let mut states: Vec<Vec<f32>> = (0..workers).map(|_| ws.take_f32(npix * k)).collect();
+    let mut states: Vec<Vec<f32>> = (0..workers).map(|_| ws.take_f32(col_len)).collect();
     par_chunks_states(&mut out.data, oc * npix, &mut states, |col, ni, out_img| {
         for gi in 0..groups {
-            // 1) lowering: col[p][kk], kk = (c_local·R + ky)·R + kx —
-            //    the same layout as one row of the group's
-            //    (OC/g)×((IC/g)·R·R) weight block.
+            // 1) lowering: kk = (c_local·R + ky)·R + kx — the same k
+            //    order as one row of the group's (OC/g)×((IC/g)·R·R)
+            //    weight block, written panel-packed over pixels.
             for il in 0..icg {
                 let plane = x.plane(ni, gi * icg + il);
                 for oy in 0..oh {
                     for ox in 0..ow {
                         let p = oy * ow + ox;
-                        let dst = &mut col[p * k + il * r * r..p * k + (il + 1) * r * r];
+                        let base = (p / PANEL) * k * PANEL + (il * r * r) * PANEL + p % PANEL;
                         for ky in 0..r {
                             let yy = (oy * stride + ky) as isize - pad as isize;
                             for kx in 0..r {
                                 let xx = (ox * stride + kx) as isize - pad as isize;
-                                dst[ky * r + kx] = if yy >= 0
+                                col[base + (ky * r + kx) * PANEL] = if yy >= 0
                                     && (yy as usize) < h
                                     && xx >= 0
                                     && (xx as usize) < wid
@@ -77,11 +85,11 @@ pub fn conv2d_im2col_into(
                     }
                 }
             }
-            // 2) GEMM straight into this group's output rows:
-            //    out[o][p] = Σ_kk W[o][kk]·col[p][kk]
+            // 2) dispatched packed GEMM straight into this group's
+            //    output rows: out[o][p] = Σ_kk W[o][kk]·col[p][kk]
             let wblk = &w.data[gi * ocg * k..(gi + 1) * ocg * k];
             let oblk = &mut out_img[gi * ocg * npix..(gi + 1) * ocg * npix];
-            gemm_nt_f32(ocg, npix, k, wblk, col, oblk);
+            gemm_packed_f32(ocg, npix, k, wblk, col, oblk);
         }
         if !bias.is_empty() {
             for (o, &b) in bias.iter().enumerate() {
@@ -471,13 +479,9 @@ pub fn conv2d_ntt_int8_into(
         }
     };
     let mut xq = ws.take_i8(x.data.len());
-    for (q, &v) in xq.iter_mut().zip(&x.data) {
-        *q = ((v / sx).round() as i32).clamp(-127, 127) as i8;
-    }
+    quantize_i8_slice(&x.data, sx, 127, &mut xq);
     let mut wq = ws.take_i8(w.data.len());
-    for (q, &v) in wq.iter_mut().zip(&w.data) {
-        *q = ((v / sw_).round() as i32).clamp(-127, 127) as i8;
-    }
+    quantize_i8_slice(&w.data, sw_, 127, &mut wq);
     let mut acc = ws.take_i64(n * oc * oh * ow);
     ntt_corr2d_i8_into(&xq, n, ic, h, wid, &wq, oc, r, pad, ws, &mut acc);
     let deq = sx * sw_;

@@ -32,10 +32,15 @@ pub use workspace::Workspace;
 use crate::algo::ntt::ntt_odot_bits;
 use crate::algo::registry::{catalog, AlgoKind, AlgoSpec};
 use crate::bops::{direct_bops_grouped, fast_bops_grouped, mul_bops};
-use crate::nn::conv::{conv2d_direct_grouped_into, conv2d_fast_into, FastConvPlan};
+use crate::linalg::gemm::{packed_b_f32_len, PANEL};
+use crate::nn::conv::{
+    conv2d_direct_grouped_into, conv2d_fast_into, conv2d_fast_packed_into, pack_fast_weights,
+    FastConvPlan, TILE_LANES,
+};
 use crate::nn::tensor::Tensor;
 use crate::quant::Granularity;
 use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
 
 /// How a plan executes. The variants map 1:1 onto the executor kernels;
@@ -65,12 +70,139 @@ pub struct ConvPlan {
     pub desc: ConvDesc,
     /// the executor kernel that runs it
     pub kernel: PlanKernel,
+    /// live bytes of pre-packed weight artifacts built from this plan
+    /// ([`PackedWeights`] + quantized packed panels), for the
+    /// plan-cache / serving memory accounting
+    packed_bytes: AtomicUsize,
+}
+
+/// Process-wide live bytes held by pre-packed weight artifacts
+/// (transform-domain packed panels, float and int8). Mirrored into
+/// `coordinator::metrics` and printed by `sfc serve`.
+static PACKED_WEIGHT_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Live bytes of pre-packed weights across the process (see
+/// [`PackedWeights`] and the quantized packed panels in
+/// [`crate::quant::qconv::QConvLayer`]).
+pub fn packed_weight_bytes() -> u64 {
+    PACKED_WEIGHT_BYTES.load(Ordering::Relaxed)
+}
+
+/// RAII accounting for pre-packed weight storage: registers the byte
+/// count into the process-wide counter and the owning plan's counter,
+/// deregisters both on drop.
+pub(crate) struct PackedBytesGuard {
+    plan: Arc<ConvPlan>,
+    bytes: usize,
+}
+
+impl PackedBytesGuard {
+    pub(crate) fn register(plan: &Arc<ConvPlan>, bytes: usize) -> PackedBytesGuard {
+        PACKED_WEIGHT_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+        plan.packed_bytes.fetch_add(bytes, Ordering::Relaxed);
+        PackedBytesGuard { plan: plan.clone(), bytes }
+    }
+}
+
+impl Drop for PackedBytesGuard {
+    fn drop(&mut self) {
+        PACKED_WEIGHT_BYTES.fetch_sub(self.bytes as u64, Ordering::Relaxed);
+        self.plan.packed_bytes.fetch_sub(self.bytes, Ordering::Relaxed);
+    }
+}
+
+/// Plan-time pre-packed weights for one conv layer: the weight
+/// transform (`G·f·Gᵀ`) and the GEMM panel packing hoisted out of the
+/// per-call path, so steady-state [`ConvPlan::run_packed_into`] touches
+/// only pre-packed operands. Built once per layer via
+/// [`PackedWeights::pack`]; plans stay shape-keyed and shareable — the
+/// packed artifact rides with the layer that owns the weights, and its
+/// byte cost is visible per plan ([`ConvPlan::packed_bytes`]) and
+/// process-wide ([`packed_weight_bytes`]).
+pub struct PackedWeights {
+    desc: ConvDesc,
+    kind: PackedKind,
+    _guard: Option<PackedBytesGuard>,
+}
+
+enum PackedKind {
+    /// pre-transformed + panel-packed weights for a bilinear plan:
+    /// per (frequency, group) GEMM B panels, group-major; `tt` pins the
+    /// transform-point count (T²) the panels were built for, so panels
+    /// cannot silently run under a different bilinear algorithm that
+    /// shares the descriptor
+    Fast { up: Vec<f32>, oc: usize, icg: usize, tt: usize },
+    /// kernels whose weights are already in executor layout (direct,
+    /// im2col A-side, FFT/NTT whole-image): use the tensor as-is
+    Raw,
+}
+
+impl PackedWeights {
+    /// Pre-transform and pre-pack `w` for `plan`. For bilinear
+    /// (Winograd/SFC) plans this performs the `[T²][OC][IC/g]` weight
+    /// transform and packs each (frequency, group) block into the
+    /// dispatched GEMM's panel layout; other kernels consume weights
+    /// in their natural layout and return a zero-byte passthrough.
+    pub fn pack(plan: &Arc<ConvPlan>, w: &Tensor) -> PackedWeights {
+        match &plan.kernel {
+            PlanKernel::Fast(p) => {
+                let (oc, icg, r, _) = w.dims4();
+                assert_eq!(r, p.r(), "weight kernel size vs plan");
+                assert_eq!(oc, plan.desc.oc, "weight output channels disagree with the plan");
+                assert_eq!(
+                    icg * plan.desc.groups,
+                    plan.desc.ic,
+                    "weight grouping disagrees with the plan descriptor"
+                );
+                let tt = p.t() * p.t();
+                let ocg = oc / plan.desc.groups;
+                let u = p.transform_weights(&w.data, oc, icg);
+                let mut up =
+                    vec![0f32; tt * plan.desc.groups * packed_b_f32_len(ocg, icg)];
+                pack_fast_weights(&u, oc, icg, plan.desc.groups, tt, &mut up);
+                let bytes = up.len() * std::mem::size_of::<f32>();
+                PackedWeights {
+                    desc: plan.desc,
+                    kind: PackedKind::Fast { up, oc, icg, tt },
+                    _guard: Some(PackedBytesGuard::register(plan, bytes)),
+                }
+            }
+            _ => PackedWeights { desc: plan.desc, kind: PackedKind::Raw, _guard: None },
+        }
+    }
+
+    /// Bytes of packed storage this artifact holds (0 for passthrough
+    /// kernels).
+    pub fn bytes(&self) -> usize {
+        match &self.kind {
+            PackedKind::Fast { up, .. } => up.len() * std::mem::size_of::<f32>(),
+            PackedKind::Raw => 0,
+        }
+    }
+}
+
+impl std::fmt::Debug for PackedWeights {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PackedWeights").field("bytes", &self.bytes()).finish()
+    }
 }
 
 impl ConvPlan {
+    /// A plan for `desc` executed by `kernel`, produced by `engine`.
+    pub fn new(engine: &'static str, desc: ConvDesc, kernel: PlanKernel) -> ConvPlan {
+        ConvPlan { engine, desc, kernel, packed_bytes: AtomicUsize::new(0) }
+    }
+
     /// A direct-conv plan for any descriptor (the universal fallback).
     pub fn direct(desc: ConvDesc) -> ConvPlan {
-        ConvPlan { engine: "direct", desc, kernel: PlanKernel::Direct }
+        ConvPlan::new("direct", desc, PlanKernel::Direct)
+    }
+
+    /// Live bytes of pre-packed weight artifacts built from this plan
+    /// (see [`PackedWeights`]; quantized layers register their packed
+    /// panels here too).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed_bytes.load(Ordering::Relaxed)
     }
 
     /// The bilinear transform matrices, when this is a Winograd/SFC plan
@@ -111,6 +243,55 @@ impl ConvPlan {
         let oh = (h + 2 * pad - r) / stride + 1;
         let ow = (wid + 2 * pad - r) / stride + 1;
         vec![n, oc, oh, ow]
+    }
+
+    /// Like [`ConvPlan::run_into`] but with plan-time pre-packed
+    /// weights: bilinear (Winograd/SFC) plans skip the per-call weight
+    /// transform + panel packing and execute straight over the packed
+    /// panels; kernels without a packed form fall through to
+    /// [`ConvPlan::run_into`] on the raw tensor. Bit-identical to
+    /// [`ConvPlan::run_into`] in all cases (the per-call path packs
+    /// into workspace scratch and runs the same core).
+    pub fn run_packed_into(
+        &self,
+        x: &Tensor,
+        w: &Tensor,
+        packed: &PackedWeights,
+        bias: &[f32],
+        ws: &mut Workspace,
+        out: &mut Tensor,
+    ) {
+        assert_eq!(
+            packed.desc, self.desc,
+            "packed weights were built for a different descriptor"
+        );
+        match (&self.kernel, &packed.kind) {
+            (PlanKernel::Fast(p), PackedKind::Fast { up, oc, icg, tt }) => {
+                assert_eq!(
+                    *tt,
+                    p.t() * p.t(),
+                    "packed weights were built for a different bilinear algorithm \
+                     (transform-point count mismatch)"
+                );
+                assert_eq!(
+                    self.desc.dilation, 1,
+                    "dilation is reserved; engines require dilation == 1"
+                );
+                conv2d_fast_packed_into(
+                    x,
+                    up,
+                    *oc,
+                    *icg,
+                    bias,
+                    p,
+                    self.desc.pad,
+                    self.desc.groups,
+                    ws,
+                    out,
+                );
+            }
+            _ => self.run_into(x, w, bias, ws, out),
+        }
     }
 
     /// The zero-alloc entry point: execute out of `ws` straight into
@@ -169,17 +350,27 @@ impl ConvPlan {
         match &self.kernel {
             // direct accumulates in the output planes themselves
             PlanKernel::Direct => 0,
-            // one [OH·OW × (IC/g)·R·R] lowering panel per worker
-            PlanKernel::Im2col => workers * oh * ow * (d.ic / d.groups) * d.r * d.r * 4,
+            // one [⌈OH·OW/8⌉·8 × (IC/g)·R·R] packed lowering panel per
+            // worker (pixels padded to the GEMM panel width)
+            PlanKernel::Im2col => {
+                let npix = (oh * ow).div_ceil(PANEL) * PANEL;
+                workers * npix * (d.ic / d.groups) * d.r * d.r * 4
+            }
             PlanKernel::Fast(p) => {
                 let (m, l, t) = (p.m(), p.l(), p.t());
                 let tiles = oh.div_ceil(m) * ow.div_ceil(m);
                 let tt = t * t;
-                // transformed weights are [T²][OC][IC/g]; the V/P blocks
-                // cover all groups, so their totals match the dense case
-                let shared = tt * d.oc * (d.ic / d.groups) + t * d.r + tt;
-                let per_worker =
-                    tt * tiles * (d.ic + d.oc) + l * l + t * l + 2 * tt + m * t + m * m;
+                let (icg, ocg) = d.group_channels();
+                // transformed weights [T²][OC][IC/g] + their packed GEMM
+                // panels (the per-call path builds both; run_packed_into
+                // needs neither); the V/P blocks cover all groups, so
+                // their totals match the dense case. The per-tile
+                // transform scratch is lane-batched ×8.
+                let shared = tt * d.oc * icg + tt * d.groups * packed_b_f32_len(ocg, icg)
+                    + t * d.r
+                    + tt;
+                let per_worker = tt * tiles * (d.ic + d.oc)
+                    + TILE_LANES * (l * l + t * l + 2 * tt + m * t + m * m);
                 (shared + workers * per_worker) * 4
             }
             PlanKernel::Fft => {
@@ -301,11 +492,11 @@ impl ConvEngine for Im2colEngine {
     }
 
     fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
-        Ok(ConvPlan { engine: self.name(), desc: *d, kernel: PlanKernel::Im2col })
+        Ok(ConvPlan::new(self.name(), *d, PlanKernel::Im2col))
     }
 
     fn workspace_bytes(&self, d: &ConvDesc) -> usize {
-        ConvPlan { engine: self.name(), desc: *d, kernel: PlanKernel::Im2col }.workspace_bytes()
+        ConvPlan::new(self.name(), *d, PlanKernel::Im2col).workspace_bytes()
     }
 
     fn cost_model(&self, d: &ConvDesc) -> f64 {
@@ -366,12 +557,11 @@ impl ConvEngine for BilinearEngine {
         if !self.supports(d) {
             bail!("{} does not support descriptor {:?}", self.name(), d);
         }
-        Ok(ConvPlan { engine: self.name(), desc: *d, kernel: PlanKernel::Fast(self.fast_plan()) })
+        Ok(ConvPlan::new(self.name(), *d, PlanKernel::Fast(self.fast_plan())))
     }
 
     fn workspace_bytes(&self, d: &ConvDesc) -> usize {
-        ConvPlan { engine: self.name(), desc: *d, kernel: PlanKernel::Fast(self.fast_plan()) }
-            .workspace_bytes()
+        ConvPlan::new(self.name(), *d, PlanKernel::Fast(self.fast_plan())).workspace_bytes()
     }
 
     fn cost_model(&self, d: &ConvDesc) -> f64 {
@@ -421,11 +611,11 @@ impl ConvEngine for FftEngine {
         if !self.supports(d) {
             bail!("FFT engine does not support descriptor {:?}", d);
         }
-        Ok(ConvPlan { engine: self.name(), desc: *d, kernel: PlanKernel::Fft })
+        Ok(ConvPlan::new(self.name(), *d, PlanKernel::Fft))
     }
 
     fn workspace_bytes(&self, d: &ConvDesc) -> usize {
-        ConvPlan { engine: self.name(), desc: *d, kernel: PlanKernel::Fft }.workspace_bytes()
+        ConvPlan::new(self.name(), *d, PlanKernel::Fft).workspace_bytes()
     }
 
     fn cost_model(&self, d: &ConvDesc) -> f64 {
@@ -487,11 +677,11 @@ impl ConvEngine for NttEngine {
         if !self.supports(d) {
             bail!("NTT engine does not support descriptor {:?}", d);
         }
-        Ok(ConvPlan { engine: self.name(), desc: *d, kernel: PlanKernel::Ntt })
+        Ok(ConvPlan::new(self.name(), *d, PlanKernel::Ntt))
     }
 
     fn workspace_bytes(&self, d: &ConvDesc) -> usize {
-        ConvPlan { engine: self.name(), desc: *d, kernel: PlanKernel::Ntt }.workspace_bytes()
+        ConvPlan::new(self.name(), *d, PlanKernel::Ntt).workspace_bytes()
     }
 
     fn cost_model(&self, d: &ConvDesc) -> f64 {
@@ -705,6 +895,44 @@ mod tests {
             } else {
                 assert!(e.workspace_bytes(&d) > 0, "{}", e.name());
             }
+        }
+    }
+
+    #[test]
+    fn packed_weights_match_run_into_and_account_bytes() {
+        use crate::util::Pcg32;
+        let mut rng = Pcg32::seeded(0x51);
+        let d = ConvDesc::new(1, 3, 4, 12, 12, 3, 1, 1);
+        let mut x = Tensor::zeros(&[1, 3, 12, 12]);
+        rng.fill_gaussian(&mut x.data, 1.0);
+        let mut w = Tensor::zeros(&[4, 3, 3, 3]);
+        rng.fill_gaussian(&mut w.data, 0.3);
+        let bias = vec![0.2, -0.1, 0.0, 0.4];
+        for e in all_engines() {
+            if !e.supports(&d) {
+                continue;
+            }
+            let plan = Arc::new(e.plan(&d).unwrap());
+            let want = plan.run(&x, &w, &bias);
+            let packed = PackedWeights::pack(&plan, &w);
+            let mut ws = Workspace::new();
+            let mut out = Tensor::zeros(&plan.out_dims(&x, &w));
+            plan.run_packed_into(&x, &w, &packed, &bias, &mut ws, &mut out);
+            assert_eq!(out.data, want.data, "{}: packed vs per-call path", e.name());
+            // repeat from a warm workspace stays bit-identical + alloc-free
+            let warm = ws.heap_allocs();
+            out.data.fill(f32::NAN);
+            plan.run_packed_into(&x, &w, &packed, &bias, &mut ws, &mut out);
+            assert_eq!(out.data, want.data, "{}: warm packed run", e.name());
+            assert_eq!(ws.heap_allocs(), warm, "{}: packed steady state allocates", e.name());
+            if plan.fast_plan().is_some() {
+                assert!(packed.bytes() > 0, "{}: fast plans must pre-pack", e.name());
+                assert_eq!(plan.packed_bytes(), packed.bytes(), "{}", e.name());
+            } else {
+                assert_eq!(packed.bytes(), 0, "{}: passthrough packs nothing", e.name());
+            }
+            drop(packed);
+            assert_eq!(plan.packed_bytes(), 0, "{}: drop must release the bytes", e.name());
         }
     }
 

@@ -2,25 +2,37 @@
 //!
 //! Measures every supporting engine on a fixed set of ResNet/VGG-scale
 //! layer shapes — dense plus grouped/depthwise (the MobileNet-block
-//! workloads) — through the steady-state datapath (`run_into` with a
-//! reused [`Workspace`]), prints a table and — with `--json` — writes a
+//! workloads) — through the steady-state datapath (pre-packed weights +
+//! `run_packed_into` over a reused [`Workspace`], exactly what a serving
+//! worker runs), prints a table and — with `--json` — writes a
 //! machine-readable `BENCH_conv.json` so the perf trajectory of the
 //! repo is tracked across PRs: per shape and engine, ns/call, GFLOP/s
 //! (2·MACs / time) and the workspace heap-fallback count during the
-//! timed window (0 = the zero-alloc property held). The JSON format is
-//! versioned ([`BENCH_SCHEMA_VERSION`]) and documented in ENGINE.md
-//! §"BENCH_conv.json schema".
+//! timed window (0 = the zero-alloc property held). The snapshot also
+//! records which dispatch arm ran (`kernel`: `"avx2" | "neon" |
+//! "scalar"`, see [`crate::linalg::simd`]) and — when a SIMD kernel is
+//! active — a scalar-vs-SIMD `speedup` block measured in-process by
+//! re-running the dense 3×3 GEMM-backed engines with dispatch pinned to
+//! scalar. The JSON format is versioned ([`BENCH_SCHEMA_VERSION`]) and
+//! documented in ENGINE.md §"BENCH_conv.json schema".
 
-use crate::engine::{default_selector, ConvDesc, QuantSpec, Workspace};
+use crate::engine::{default_selector, ConvDesc, ConvPlan, PackedWeights, QuantSpec, Workspace};
+use crate::linalg::simd::{self, Kernel};
 use crate::nn::Tensor;
 use crate::quant::qconv::{collect_act_maxima, QCalib, QConvLayer};
 use crate::util::Pcg32;
 use anyhow::{Context, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// The engines every snapshot covers (where they support the shape).
 const ENGINES: [&str; 7] =
     ["direct", "im2col-gemm", "Wino(4x4,3x3)", "SFC-6(6x6,3x3)", "SFC-6(7x7,3x3)", "FFT", "NTT"];
+
+/// The GEMM-backed engines the scalar-vs-SIMD speedup block measures on
+/// the dense 3×3 shapes (plus the int8 SFC executor in full mode).
+const SPEEDUP_ENGINES: [&str; 4] =
+    ["im2col-gemm", "Wino(4x4,3x3)", "SFC-6(6x6,3x3)", "SFC-6(7x7,3x3)"];
 
 /// One measured (shape, engine) cell.
 #[derive(Clone, Debug)]
@@ -37,6 +49,21 @@ pub struct BenchRow {
     pub workspace_bytes: usize,
     /// heap fallbacks observed during the timed window (0 = zero-alloc)
     pub ws_heap_allocs_steady: u64,
+}
+
+/// One scalar-vs-SIMD comparison cell (dense 3×3 shapes only).
+#[derive(Clone, Debug)]
+pub struct SpeedupRow {
+    /// shape label
+    pub shape: String,
+    /// engine name
+    pub engine: String,
+    /// median ns/call with dispatch pinned to the scalar kernels
+    pub scalar_ns_per_call: f64,
+    /// median ns/call under the detected SIMD kernel
+    pub ns_per_call: f64,
+    /// `scalar_ns_per_call / ns_per_call`
+    pub speedup: f64,
 }
 
 /// Benchmark configuration (CLI flags).
@@ -69,16 +96,62 @@ fn median_ns(samples: &mut Vec<f64>) -> f64 {
     samples[samples.len() / 2]
 }
 
+/// Deterministic workload tensors for one descriptor.
+fn workload(desc: &ConvDesc, rng: &mut Pcg32) -> (Tensor, Tensor) {
+    let mut x = Tensor::zeros(&[desc.batch, desc.ic, desc.h, desc.w]);
+    rng.fill_gaussian(&mut x.data, 1.0);
+    let mut w = Tensor::zeros(&[desc.oc, desc.ic / desc.groups, desc.r, desc.r]);
+    rng.fill_gaussian(&mut w.data, 0.2);
+    (x, w)
+}
+
+/// Time a float plan on the steady-state datapath: weights pre-packed
+/// once (plan time), then warm-up + timed `run_packed_into` calls over
+/// one reused workspace. Returns (median ns/call, steady heap allocs).
+fn time_float_plan(plan: &Arc<ConvPlan>, x: &Tensor, w: &Tensor, cfg: &BenchCfg) -> (f64, u64) {
+    let packed = PackedWeights::pack(plan, w);
+    let mut ws = Workspace::new();
+    let mut out = Tensor::zeros(&plan.out_dims(x, w));
+    for _ in 0..cfg.warmup.max(1) {
+        plan.run_packed_into(x, w, &packed, &[], &mut ws, &mut out);
+    }
+    let allocs_before = ws.heap_allocs();
+    let mut samples = Vec::with_capacity(cfg.iters.max(1));
+    for _ in 0..cfg.iters.max(1) {
+        let t0 = Instant::now();
+        plan.run_packed_into(x, w, &packed, &[], &mut ws, &mut out);
+        std::hint::black_box(&out.data);
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    (median_ns(&mut samples), ws.heap_allocs() - allocs_before)
+}
+
+/// Time a quantized layer on the steady-state datapath (its packed
+/// panels were built at construction).
+fn time_qconv(q: &QConvLayer, x: &Tensor, cfg: &BenchCfg) -> (f64, u64) {
+    let mut ws = Workspace::new();
+    let mut out = Tensor::zeros(&q.out_dims(x));
+    for _ in 0..cfg.warmup.max(1) {
+        q.forward_into(x, &mut ws, &mut out);
+    }
+    let allocs_before = ws.heap_allocs();
+    let mut samples = Vec::with_capacity(cfg.iters.max(1));
+    for _ in 0..cfg.iters.max(1) {
+        let t0 = Instant::now();
+        q.forward_into(x, &mut ws, &mut out);
+        std::hint::black_box(&out.data);
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    (median_ns(&mut samples), ws.heap_allocs() - allocs_before)
+}
+
 /// Run the snapshot; returns every measured row.
 pub fn run_bench(cfg: &BenchCfg) -> Result<Vec<BenchRow>> {
     let sel = default_selector();
     let mut rng = Pcg32::seeded(42);
     let mut rows = Vec::new();
     for (label, desc) in shapes(cfg.quick) {
-        let mut x = Tensor::zeros(&[desc.batch, desc.ic, desc.h, desc.w]);
-        rng.fill_gaussian(&mut x.data, 1.0);
-        let mut w = Tensor::zeros(&[desc.oc, desc.ic / desc.groups, desc.r, desc.r]);
-        rng.fill_gaussian(&mut w.data, 0.2);
+        let (x, w) = workload(&desc, &mut rng);
         let flops = 2.0 * desc.macs() as f64;
         println!("\n=== {label} ({:.1} MMACs) ===", desc.macs() as f64 / 1e6);
         for name in ENGINES {
@@ -86,27 +159,14 @@ pub fn run_bench(cfg: &BenchCfg) -> Result<Vec<BenchRow>> {
                 println!("  {name:<18} (unsupported at this shape)");
                 continue;
             };
-            let mut ws = Workspace::new();
-            let mut out = Tensor::zeros(&plan.out_dims(&x, &w));
-            for _ in 0..cfg.warmup.max(1) {
-                plan.run_into(&x, &w, &[], &mut ws, &mut out);
-            }
-            let allocs_before = ws.heap_allocs();
-            let mut samples = Vec::with_capacity(cfg.iters.max(1));
-            for _ in 0..cfg.iters.max(1) {
-                let t0 = Instant::now();
-                plan.run_into(&x, &w, &[], &mut ws, &mut out);
-                std::hint::black_box(&out.data);
-                samples.push(t0.elapsed().as_nanos() as f64);
-            }
-            let ns = median_ns(&mut samples);
+            let (ns, steady_allocs) = time_float_plan(&plan, &x, &w, cfg);
             let row = BenchRow {
                 shape: label.to_string(),
                 engine: name.to_string(),
                 ns_per_call: ns,
                 gflops: flops / ns.max(1.0),
                 workspace_bytes: plan.workspace_bytes(),
-                ws_heap_allocs_steady: ws.heap_allocs() - allocs_before,
+                ws_heap_allocs_steady: steady_allocs,
             };
             println!(
                 "  {:<18} {:>12.0} ns/call {:>8.2} GFLOP/s  ws {:>8.1} KB  steady allocs {}",
@@ -124,27 +184,14 @@ pub fn run_bench(cfg: &BenchCfg) -> Result<Vec<BenchRow>> {
             if let Ok(qplan) = sel.plan_named("SFC-6(7x7,3x3)", &qdesc) {
                 let maxima = collect_act_maxima(&x, qplan.fast_plan().unwrap(), desc.pad);
                 let q = QConvLayer::from_plan(qplan, &w, vec![], &QCalib::TransformMaxima(&maxima));
-                let mut ws = Workspace::new();
-                let mut out = Tensor::zeros(&q.out_dims(&x));
-                for _ in 0..cfg.warmup.max(1) {
-                    q.forward_into(&x, &mut ws, &mut out);
-                }
-                let allocs_before = ws.heap_allocs();
-                let mut samples = Vec::with_capacity(cfg.iters.max(1));
-                for _ in 0..cfg.iters.max(1) {
-                    let t0 = Instant::now();
-                    q.forward_into(&x, &mut ws, &mut out);
-                    std::hint::black_box(&out.data);
-                    samples.push(t0.elapsed().as_nanos() as f64);
-                }
-                let ns = median_ns(&mut samples);
+                let (ns, steady_allocs) = time_qconv(&q, &x, cfg);
                 let row = BenchRow {
                     shape: label.to_string(),
                     engine: "SFC-6(7x7,3x3)-int8".to_string(),
                     ns_per_call: ns,
                     gflops: flops / ns.max(1.0),
                     workspace_bytes: 0,
-                    ws_heap_allocs_steady: ws.heap_allocs() - allocs_before,
+                    ws_heap_allocs_steady: steady_allocs,
                 };
                 println!(
                     "  {:<18} {:>12.0} ns/call {:>8.2} GFLOP/s  (int8 ⊙)      steady allocs {}",
@@ -157,17 +204,77 @@ pub fn run_bench(cfg: &BenchCfg) -> Result<Vec<BenchRow>> {
     Ok(rows)
 }
 
+/// Measure the scalar-vs-SIMD speedup block: the dense 3×3 shapes ×
+/// the GEMM-backed engines, each cell timed under the detected kernel
+/// and again with dispatch pinned to scalar
+/// ([`crate::linalg::simd::set_kernel_override`]). Empty when the
+/// process is already running the scalar kernels — the snapshot then
+/// *is* the scalar baseline.
+pub fn run_speedup(cfg: &BenchCfg) -> Result<Vec<SpeedupRow>> {
+    let active = simd::active_kernel();
+    if active == Kernel::Scalar {
+        return Ok(Vec::new());
+    }
+    let sel = default_selector();
+    let mut rng = Pcg32::seeded(42);
+    let mut rows = Vec::new();
+    for (label, desc) in shapes(cfg.quick) {
+        if desc.groups != 1 || desc.r != 3 {
+            continue; // the acceptance metric tracks the dense 3×3 shapes
+        }
+        let (x, w) = workload(&desc, &mut rng);
+        for name in SPEEDUP_ENGINES {
+            let Ok(plan) = sel.plan_named(name, &desc) else { continue };
+            let (simd_ns, _) = time_float_plan(&plan, &x, &w, cfg);
+            simd::set_kernel_override(Some(Kernel::Scalar));
+            let (scalar_ns, _) = time_float_plan(&plan, &x, &w, cfg);
+            simd::set_kernel_override(None);
+            rows.push(SpeedupRow {
+                shape: label.to_string(),
+                engine: name.to_string(),
+                scalar_ns_per_call: scalar_ns,
+                ns_per_call: simd_ns,
+                speedup: scalar_ns / simd_ns.max(1.0),
+            });
+        }
+        if !cfg.quick {
+            // the quantized SFC executor: int8 GEMM + quantize loops
+            let qdesc = desc.with_quant(QuantSpec::transform_default(8));
+            if let Ok(qplan) = sel.plan_named("SFC-6(7x7,3x3)", &qdesc) {
+                let maxima = collect_act_maxima(&x, qplan.fast_plan().unwrap(), desc.pad);
+                let q = QConvLayer::from_plan(qplan, &w, vec![], &QCalib::TransformMaxima(&maxima));
+                let (simd_ns, _) = time_qconv(&q, &x, cfg);
+                simd::set_kernel_override(Some(Kernel::Scalar));
+                let (scalar_ns, _) = time_qconv(&q, &x, cfg);
+                simd::set_kernel_override(None);
+                rows.push(SpeedupRow {
+                    shape: label.to_string(),
+                    engine: "SFC-6(7x7,3x3)-int8".to_string(),
+                    scalar_ns_per_call: scalar_ns,
+                    ns_per_call: simd_ns,
+                    speedup: scalar_ns / simd_ns.max(1.0),
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
 /// The BENCH_conv.json format revision, emitted as `schema_version`.
 /// Bump on any field/semantics change; the schema itself is documented
 /// in ENGINE.md §"BENCH_conv.json schema".
 /// v2: added `schema_version` itself + grouped/depthwise shape rows.
-pub const BENCH_SCHEMA_VERSION: u32 = 2;
+/// v3: added the top-level `kernel` dispatch-arm field and the
+/// scalar-vs-SIMD `speedup` block; float cells measure the pre-packed
+/// `run_packed_into` datapath.
+pub const BENCH_SCHEMA_VERSION: u32 = 3;
 
 /// Serialize rows as the BENCH_conv.json snapshot (no serde in this
 /// image — the format is flat enough to emit by hand).
-pub fn to_json(rows: &[BenchRow]) -> String {
+pub fn to_json(rows: &[BenchRow], speedups: &[SpeedupRow], kernel: &str) -> String {
     let mut s = String::from("{\n  \"bench\": \"conv\",\n");
     s.push_str(&format!("  \"schema_version\": {BENCH_SCHEMA_VERSION},\n"));
+    s.push_str(&format!("  \"kernel\": \"{kernel}\",\n"));
     s.push_str(concat!(
         "  \"units\": {\"time\": \"ns/call\", \"rate\": \"GFLOP/s\"},\n",
         "  \"results\": [\n"
@@ -188,15 +295,43 @@ pub fn to_json(rows: &[BenchRow]) -> String {
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
+    s.push_str("  ],\n  \"speedup\": [\n");
+    for (i, r) in speedups.iter().enumerate() {
+        s.push_str(&format!(
+            concat!(
+                "    {{\"shape\": \"{}\", \"engine\": \"{}\", ",
+                "\"scalar_ns_per_call\": {:.1}, \"ns_per_call\": {:.1}, ",
+                "\"speedup\": {:.3}}}{}\n"
+            ),
+            r.shape,
+            r.engine,
+            r.scalar_ns_per_call,
+            r.ns_per_call,
+            r.speedup,
+            if i + 1 == speedups.len() { "" } else { "," }
+        ));
+    }
     s.push_str("  ]\n}\n");
     s
 }
 
 /// `sfc bench [--json] [--out PATH] [--iters N] [--warmup N] [--quick]`.
 pub fn cmd_bench(cfg: &BenchCfg, json: bool, out_path: &str) -> Result<()> {
+    let kernel = simd::kernel_name();
+    println!("kernel dispatch: {kernel} (SFC_FORCE_SCALAR=1 pins scalar)");
     let rows = run_bench(cfg)?;
+    let speedups = run_speedup(cfg)?;
+    if !speedups.is_empty() {
+        println!("\nscalar → {kernel} speedup (dense 3×3 shapes):");
+        for r in &speedups {
+            println!(
+                "  {:<16} {:<20} {:>10.0} → {:>10.0} ns/call  {:.2}x",
+                r.shape, r.engine, r.scalar_ns_per_call, r.ns_per_call, r.speedup
+            );
+        }
+    }
     if json {
-        let body = to_json(&rows);
+        let body = to_json(&rows, &speedups, kernel);
         std::fs::write(out_path, &body).with_context(|| format!("write {out_path}"))?;
         println!("\nwrote {out_path} ({} rows)", rows.len());
     }
@@ -236,12 +371,24 @@ mod tests {
             workspace_bytes: 64,
             ws_heap_allocs_steady: 0,
         }];
-        let j = to_json(&rows);
+        let speedups = vec![SpeedupRow {
+            shape: "s".into(),
+            engine: "im2col-gemm".into(),
+            scalar_ns_per_call: 25.0,
+            ns_per_call: 12.5,
+            speedup: 2.0,
+        }];
+        let j = to_json(&rows, &speedups, "avx2");
         assert!(j.contains("\"bench\": \"conv\""));
         assert!(j.contains(&format!("\"schema_version\": {BENCH_SCHEMA_VERSION}")));
+        assert!(j.contains("\"kernel\": \"avx2\""));
         assert!(j.contains("\"engine\": \"direct\""));
         assert!(j.contains("\"ns_per_call\": 12.5"));
-        assert!(!j.contains(",\n  ]"), "no trailing comma before the array close");
+        assert!(j.contains("\"speedup\": 2.000"));
+        assert!(!j.contains(",\n  ]"), "no trailing comma before an array close");
+        // empty speedup block (scalar host) still closes the array
+        let j = to_json(&rows, &[], "scalar");
+        assert!(j.contains("\"speedup\": [\n  ]"), "{j}");
     }
 
     #[test]
@@ -259,6 +406,25 @@ mod tests {
         assert!(dw.iter().any(|r| r.engine == "direct"));
         assert!(dw.iter().any(|r| r.engine.starts_with("SFC") || r.engine.starts_with("Wino")));
         assert!(dw.iter().all(|r| r.engine != "FFT" && r.engine != "NTT"));
+    }
+
+    #[test]
+    fn speedup_block_covers_dense_3x3_when_simd_is_active() {
+        // run_speedup toggles the process-global kernel override
+        let _g = crate::linalg::simd::TEST_OVERRIDE_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let cfg = BenchCfg { iters: 1, warmup: 1, quick: true };
+        let speedups = run_speedup(&cfg).unwrap();
+        if crate::linalg::simd::active_kernel() == Kernel::Scalar {
+            assert!(speedups.is_empty(), "scalar host: the snapshot is the baseline");
+        } else {
+            assert!(!speedups.is_empty(), "SIMD host must record the speedup block");
+            for r in &speedups {
+                assert_eq!(r.shape, "28x28x32->32", "quick mode: dense 3×3 only");
+                assert!(r.scalar_ns_per_call > 0.0 && r.ns_per_call > 0.0, "{}", r.engine);
+            }
+        }
     }
 
     #[test]

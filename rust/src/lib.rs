@@ -23,7 +23,13 @@
 //!   `ConvPlan::run_into` execution path (see ENGINE.md §Memory model).
 //! * [`linalg`] — exact rational matrices + Jacobi SVD (condition
 //!   numbers), plus [`linalg::gemm`]: the blocked, register-tiled
-//!   `f32`/`i8→i32` GEMM core every executor's ⊙ reduction runs on.
+//!   `f32`/`i8→i32` GEMM core every executor's ⊙ reduction runs on, and
+//!   [`linalg::simd`]: the runtime-dispatched kernel layer (one-time
+//!   CPU detection → AVX2 / NEON microkernels over packed B panels,
+//!   scalar fallback, `SFC_FORCE_SCALAR=1` override) — every arm
+//!   bit-identical to the scalar reference (see ENGINE.md §Kernel
+//!   dispatch). Bilinear plans pre-transform + pre-pack weights at plan
+//!   time ([`engine::PackedWeights`], `ConvPlan::run_packed_into`).
 //! * [`nn`] / [`quant`] — the CNN inference substrate (ResNet family +
 //!   the depthwise-separable [`nn::model::mobilenet_cfg`] topology) and
 //!   the PTQ pipeline reproducing §6.1 (Tables 2/4/5, Figs. 4/5); conv

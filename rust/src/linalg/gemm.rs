@@ -12,9 +12,23 @@
 //!
 //! The kernels are blocked (`MB×NB` panels keep the B panel hot in L1/L2)
 //! and register-tiled (a 4×4 micro-kernel reuses every loaded operand
-//! four times). The `k` loop runs in index order inside each micro-tile,
-//! so float results are bit-identical to the naive scalar dot product —
-//! a property the workspace-reuse tests rely on.
+//! four times; `m`/`n` remainders reuse the same blocking through 1×4 and
+//! 4×1 micro-kernels instead of falling to per-element loops). The `k`
+//! loop runs in index order inside each micro-tile, so float results are
+//! bit-identical to the naive scalar dot product — a property the
+//! workspace-reuse tests rely on.
+//!
+//! [`gemm_nt_f32`]/[`gemm_nt_i8_i32`] are the scalar reference kernels.
+//! The hot executors run [`gemm_packed_f32`]/[`gemm_packed_i8_i32`]
+//! instead: the same computation over a **packed B panel layout**
+//! (8-column panels, see [`pack_b_f32`]/[`pack_b_i8`]) dispatched at
+//! runtime to the SIMD microkernels in [`crate::linalg::simd`] — AVX2 /
+//! NEON when detected, a scalar packed kernel otherwise. Every variant
+//! keeps one accumulator per output element with `k` ascending and no
+//! FMA contraction, so **all of them are bit-identical** to the scalar
+//! reference (int8 is exact integer arithmetic either way).
+
+use super::simd::{self, Kernel};
 
 /// Panel height (rows of A per block).
 const MB: usize = 64;
@@ -77,19 +91,47 @@ fn block_nt_f32(
             }
             j += NR;
         }
+        // n-remainder: 4×1 micro-kernel (same k-order per element)
         while j < j1 {
             let br = &b[j * k..j * k + k];
-            for (ii, ar) in [a0, a1, a2, a3].into_iter().enumerate() {
-                c[(i + ii) * n + j] = dot_f32(ar, br);
+            let mut acc = [0f32; MR];
+            for l in 0..k {
+                let bv = br[l];
+                acc[0] += a0[l] * bv;
+                acc[1] += a1[l] * bv;
+                acc[2] += a2[l] * bv;
+                acc[3] += a3[l] * bv;
+            }
+            for (ii, &v) in acc.iter().enumerate() {
+                c[(i + ii) * n + j] = v;
             }
             j += 1;
         }
         i += MR;
     }
+    // m-remainder: 1×4 micro-kernel over the same column blocking
     while i < i1 {
         let ar = &a[i * k..i * k + k];
-        for j in j0..j1 {
+        let mut j = j0;
+        while j + NR <= j1 {
+            let b0 = &b[j * k..j * k + k];
+            let b1 = &b[(j + 1) * k..(j + 1) * k + k];
+            let b2 = &b[(j + 2) * k..(j + 2) * k + k];
+            let b3 = &b[(j + 3) * k..(j + 3) * k + k];
+            let mut acc = [0f32; NR];
+            for l in 0..k {
+                let av = ar[l];
+                acc[0] += av * b0[l];
+                acc[1] += av * b1[l];
+                acc[2] += av * b2[l];
+                acc[3] += av * b3[l];
+            }
+            c[i * n + j..i * n + j + NR].copy_from_slice(&acc);
+            j += NR;
+        }
+        while j < j1 {
             c[i * n + j] = dot_f32(ar, &b[j * k..j * k + k]);
+            j += 1;
         }
         i += 1;
     }
@@ -158,19 +200,47 @@ fn block_nt_i8(
             }
             j += NR;
         }
+        // n-remainder: 4×1 micro-kernel
         while j < j1 {
             let br = &b[j * k..j * k + k];
-            for (ii, ar) in [a0, a1, a2, a3].into_iter().enumerate() {
-                c[(i + ii) * n + j] = dot_i8(ar, br);
+            let mut acc = [0i32; MR];
+            for l in 0..k {
+                let bv = br[l] as i32;
+                acc[0] += a0[l] as i32 * bv;
+                acc[1] += a1[l] as i32 * bv;
+                acc[2] += a2[l] as i32 * bv;
+                acc[3] += a3[l] as i32 * bv;
+            }
+            for (ii, &v) in acc.iter().enumerate() {
+                c[(i + ii) * n + j] = v;
             }
             j += 1;
         }
         i += MR;
     }
+    // m-remainder: 1×4 micro-kernel over the same column blocking
     while i < i1 {
         let ar = &a[i * k..i * k + k];
-        for j in j0..j1 {
+        let mut j = j0;
+        while j + NR <= j1 {
+            let b0 = &b[j * k..j * k + k];
+            let b1 = &b[(j + 1) * k..(j + 1) * k + k];
+            let b2 = &b[(j + 2) * k..(j + 2) * k + k];
+            let b3 = &b[(j + 3) * k..(j + 3) * k + k];
+            let mut acc = [0i32; NR];
+            for l in 0..k {
+                let av = ar[l] as i32;
+                acc[0] += av * b0[l] as i32;
+                acc[1] += av * b1[l] as i32;
+                acc[2] += av * b2[l] as i32;
+                acc[3] += av * b3[l] as i32;
+            }
+            c[i * n + j..i * n + j + NR].copy_from_slice(&acc);
+            j += NR;
+        }
+        while j < j1 {
             c[i * n + j] = dot_i8(ar, &b[j * k..j * k + k]);
+            j += 1;
         }
         i += 1;
     }
@@ -183,6 +253,151 @@ fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
         acc += (*x as i32) * (*y as i32);
     }
     acc
+}
+
+// ---------------------------------------------------------------------
+// Packed B panels + runtime-dispatched microkernels
+// ---------------------------------------------------------------------
+
+/// Column-panel width of the packed B layout (one AVX2 f32 vector; the
+/// NEON and scalar kernels consume the same layout as 2×4 / 8×1 lanes).
+pub const PANEL: usize = 8;
+
+/// Elements of the packed f32 B buffer for an `n×k` operand:
+/// `⌈n/8⌉` panels of `[k][8]` (missing columns zero-padded).
+pub fn packed_b_f32_len(n: usize, k: usize) -> usize {
+    n.div_ceil(PANEL) * k * PANEL
+}
+
+/// Bytes/elements of the packed i8 B buffer for an `n×k` operand:
+/// `⌈n/8⌉` panels of `[⌈k/2⌉][8][2]` interleaved k-pairs (odd `k` and
+/// missing columns zero-padded).
+pub fn packed_b_i8_len(n: usize, k: usize) -> usize {
+    n.div_ceil(PANEL) * k.div_ceil(2) * PANEL * 2
+}
+
+/// Pack a row-major `B[n][k]` operand into 8-column panels
+/// (`dst[(panel·k + l)·8 + lane] = B[panel·8+lane][l]`). Every element
+/// of `dst[..packed_b_f32_len(n, k)]` is written, so reused workspace
+/// buffers need no pre-zeroing.
+pub fn pack_b_f32(n: usize, k: usize, rows: &[f32], dst: &mut [f32]) {
+    assert!(rows.len() >= n * k, "B too small: {} < {}", rows.len(), n * k);
+    let len = packed_b_f32_len(n, k);
+    assert!(dst.len() >= len, "packed dst too small: {} < {len}", dst.len());
+    let npan = n.div_ceil(PANEL);
+    for jp in 0..npan {
+        let panel = &mut dst[jp * k * PANEL..(jp + 1) * k * PANEL];
+        for l in 0..k {
+            for lane in 0..PANEL {
+                let j = jp * PANEL + lane;
+                panel[l * PANEL + lane] = if j < n { rows[j * k + l] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack a row-major `B[n][k]` i8 operand into 8-column panels of
+/// interleaved k-pairs (`dst[((panel·⌈k/2⌉ + l/2)·8 + lane)·2 + l%2]`).
+/// Every element of `dst[..packed_b_i8_len(n, k)]` is written.
+pub fn pack_b_i8(n: usize, k: usize, rows: &[i8], dst: &mut [i8]) {
+    assert!(rows.len() >= n * k, "B too small: {} < {}", rows.len(), n * k);
+    let len = packed_b_i8_len(n, k);
+    assert!(dst.len() >= len, "packed dst too small: {} < {len}", dst.len());
+    let k2 = k.div_ceil(2);
+    let npan = n.div_ceil(PANEL);
+    for jp in 0..npan {
+        let panel = &mut dst[jp * k2 * 16..(jp + 1) * k2 * 16];
+        for l2 in 0..k2 {
+            for lane in 0..PANEL {
+                let j = jp * PANEL + lane;
+                for q in 0..2 {
+                    let l = 2 * l2 + q;
+                    panel[(l2 * PANEL + lane) * 2 + q] =
+                        if j < n && l < k { rows[j * k + l] } else { 0 };
+                }
+            }
+        }
+    }
+}
+
+/// Scalar packed-panel f32 kernel — the dispatch fallback and the
+/// bit-exactness reference for the SIMD variants (identical per-element
+/// multiply+add sequence, `k` ascending).
+pub fn gemm_packed_f32_scalar(m: usize, n: usize, k: usize, a: &[f32], bp: &[f32], c: &mut [f32]) {
+    let npan = n.div_ceil(PANEL);
+    for jp in 0..npan {
+        let panel = &bp[jp * k * PANEL..(jp + 1) * k * PANEL];
+        let j0 = jp * PANEL;
+        let lanes = (n - j0).min(PANEL);
+        for i in 0..m {
+            let ar = &a[i * k..i * k + k];
+            let mut acc = [0f32; PANEL];
+            for (l, &av) in ar.iter().enumerate() {
+                let brow = &panel[l * PANEL..(l + 1) * PANEL];
+                for (accv, &bv) in acc.iter_mut().zip(brow) {
+                    *accv += av * bv;
+                }
+            }
+            c[i * n + j0..i * n + j0 + lanes].copy_from_slice(&acc[..lanes]);
+        }
+    }
+}
+
+/// Scalar packed-panel i8→i32 kernel (exact; the dispatch fallback).
+pub fn gemm_packed_i8_i32_scalar(m: usize, n: usize, k: usize, a: &[i8], bp: &[i8], c: &mut [i32]) {
+    let k2 = k.div_ceil(2);
+    let npan = n.div_ceil(PANEL);
+    for jp in 0..npan {
+        let panel = &bp[jp * k2 * 16..(jp + 1) * k2 * 16];
+        let j0 = jp * PANEL;
+        let lanes = (n - j0).min(PANEL);
+        for i in 0..m {
+            let ar = &a[i * k..i * k + k];
+            let mut acc = [0i32; PANEL];
+            for l2 in 0..k2 {
+                let a0 = ar[2 * l2] as i32;
+                let a1 = if 2 * l2 + 1 < k { ar[2 * l2 + 1] as i32 } else { 0 };
+                let brow = &panel[l2 * 16..(l2 + 1) * 16];
+                for (lane, accv) in acc.iter_mut().enumerate() {
+                    *accv += a0 * brow[lane * 2] as i32 + a1 * brow[lane * 2 + 1] as i32;
+                }
+            }
+            c[i * n + j0..i * n + j0 + lanes].copy_from_slice(&acc[..lanes]);
+        }
+    }
+}
+
+/// Runtime-dispatched packed-panel f32 GEMM:
+/// `C[m×n] = A[m×k] · Bᵀ` with B pre-packed by [`pack_b_f32`].
+/// Bit-identical to [`gemm_nt_f32`] on the unpacked operand under every
+/// dispatch arm (AVX2 / NEON / scalar — see [`crate::linalg::simd`]).
+pub fn gemm_packed_f32(m: usize, n: usize, k: usize, a: &[f32], bp: &[f32], c: &mut [f32]) {
+    assert!(a.len() >= m * k, "A too small: {} < {}", a.len(), m * k);
+    assert!(bp.len() >= packed_b_f32_len(n, k), "packed B too small");
+    assert!(c.len() >= m * n, "C too small: {} < {}", c.len(), m * n);
+    match simd::active_kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { simd::avx2::gemm_packed_f32(m, n, k, a, bp, c) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { simd::neon::gemm_packed_f32(m, n, k, a, bp, c) },
+        _ => gemm_packed_f32_scalar(m, n, k, a, bp, c),
+    }
+}
+
+/// Runtime-dispatched packed-panel i8→i32 GEMM (exact i32 accumulation;
+/// B pre-packed by [`pack_b_i8`]). Bit-identical to [`gemm_nt_i8_i32`]
+/// under every dispatch arm.
+pub fn gemm_packed_i8_i32(m: usize, n: usize, k: usize, a: &[i8], bp: &[i8], c: &mut [i32]) {
+    assert!(a.len() >= m * k, "A too small: {} < {}", a.len(), m * k);
+    assert!(bp.len() >= packed_b_i8_len(n, k), "packed B too small");
+    assert!(c.len() >= m * n, "C too small: {} < {}", c.len(), m * n);
+    match simd::active_kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { simd::avx2::gemm_packed_i8_i32(m, n, k, a, bp, c) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { simd::neon::gemm_packed_i8_i32(m, n, k, a, bp, c) },
+        _ => gemm_packed_i8_i32_scalar(m, n, k, a, bp, c),
+    }
 }
 
 #[cfg(test)]
@@ -233,6 +448,63 @@ mod tests {
     fn zero_k_zeroes_c() {
         let mut c = vec![3f32; 6];
         gemm_nt_f32(2, 3, 0, &[], &[], &mut c);
+        assert_eq!(c, vec![0f32; 6]);
+    }
+
+    #[test]
+    fn packed_f32_bit_identical_to_reference_over_remainders() {
+        let mut rng = Pcg32::seeded(7);
+        for (m, n, k) in [
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, 8, 16),
+            (5, 9, 3),
+            (6, 7, 1),
+            (17, 16, 21),
+            (13, 23, 33),
+            (33, 41, 40),
+        ] {
+            let mut a = vec![0f32; m * k];
+            let mut b = vec![0f32; n * k];
+            rng.fill_gaussian(&mut a, 1.0);
+            rng.fill_gaussian(&mut b, 1.0);
+            let mut want = vec![0f32; m * n];
+            gemm_nt_f32(m, n, k, &a, &b, &mut want);
+            let mut bp = vec![f32::NAN; packed_b_f32_len(n, k)]; // poison: pack must overwrite
+            pack_b_f32(n, k, &b, &mut bp);
+            let mut got = vec![7f32; m * n];
+            gemm_packed_f32(m, n, k, &a, &bp, &mut got);
+            assert_eq!(got, want, "dispatched packed m{m} n{n} k{k}");
+            let mut got_s = vec![7f32; m * n];
+            gemm_packed_f32_scalar(m, n, k, &a, &bp, &mut got_s);
+            assert_eq!(got_s, want, "scalar packed m{m} n{n} k{k}");
+        }
+    }
+
+    #[test]
+    fn packed_i8_exact_over_remainders_and_odd_k() {
+        let mut rng = Pcg32::seeded(8);
+        for (m, n, k) in [(1usize, 3usize, 5usize), (4, 8, 9), (6, 6, 6), (19, 11, 35), (9, 17, 2)]
+        {
+            let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let b: Vec<i8> = (0..n * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let mut want = vec![0i32; m * n];
+            gemm_nt_i8_i32(m, n, k, &a, &b, &mut want);
+            let mut bp = vec![77i8; packed_b_i8_len(n, k)]; // poison: pack must overwrite
+            pack_b_i8(n, k, &b, &mut bp);
+            let mut got = vec![-1i32; m * n];
+            gemm_packed_i8_i32(m, n, k, &a, &bp, &mut got);
+            assert_eq!(got, want, "dispatched packed m{m} n{n} k{k}");
+            let mut got_s = vec![-1i32; m * n];
+            gemm_packed_i8_i32_scalar(m, n, k, &a, &bp, &mut got_s);
+            assert_eq!(got_s, want, "scalar packed m{m} n{n} k{k}");
+        }
+    }
+
+    #[test]
+    fn packed_zero_k_zeroes_c() {
+        let mut c = vec![3f32; 6];
+        gemm_packed_f32(2, 3, 0, &[], &[], &mut c);
         assert_eq!(c, vec![0f32; 6]);
     }
 

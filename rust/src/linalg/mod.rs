@@ -6,14 +6,18 @@
 //! are bit-identical to their mathematical definition; condition numbers
 //! for Table 1 come from the Jacobi SVD here. [`gemm`] holds the
 //! register-tiled `f32` / `i8→i32` kernels shared by im2col, the tiled
-//! bilinear fast path and the quantized Eq.-17 datapath.
+//! bilinear fast path and the quantized Eq.-17 datapath; [`simd`] is the
+//! runtime-dispatched kernel layer (AVX2 / NEON / scalar) behind the
+//! packed-panel variants those executors actually run.
 
 pub mod frac;
 pub mod gemm;
 pub mod mat;
+pub mod simd;
 pub mod svd;
 
 pub use frac::Frac;
-pub use gemm::{gemm_nt_f32, gemm_nt_i8_i32};
+pub use gemm::{gemm_nt_f32, gemm_nt_i8_i32, gemm_packed_f32, gemm_packed_i8_i32};
 pub use mat::{FracMat, Mat};
+pub use simd::{active_kernel, kernel_name, Kernel};
 pub use svd::{condition_number, singular_values};

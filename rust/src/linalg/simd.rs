@@ -1,0 +1,514 @@
+//! Runtime CPU-kernel dispatch and the SIMD microkernels behind the
+//! packed-panel GEMM and (de)quantize hot loops.
+//!
+//! The engine's ⊙-reduction kernels come in three flavours selected
+//! once per process by [`active_kernel`]:
+//!
+//! * **`avx2`** (`x86_64` with AVX2 detected at runtime) — 8-lane f32
+//!   and 16-lane int8 microkernels over the packed-B panel layout of
+//!   [`crate::linalg::gemm`], plus a vectorized int8 quantizer;
+//! * **`neon`** (`aarch64`, where NEON is architectural) — 4-lane
+//!   equivalents of the GEMM kernels (the int8 quantizer currently has
+//!   only an AVX2 variant; NEON dispatch falls back to scalar there);
+//! * **`scalar`** — the portable reference kernels, always compiled and
+//!   always correct. `SFC_FORCE_SCALAR=1` pins dispatch here.
+//!
+//! **Numerics contract.** Every SIMD kernel computes *exactly* the same
+//! float sequence as its scalar reference: one accumulator per output
+//! element, `k` ascending, separate multiply and add (no FMA
+//! contraction, which Rust also never applies to the scalar code), and
+//! the int8 path is exact integer arithmetic. SIMD and scalar results
+//! are therefore **bit-identical** (0 ULP) — the property tests in
+//! `rust/tests/simd.rs` assert exact equality, and the workspace
+//! bit-identity suite remains valid under either dispatch arm. The
+//! lanes vectorize across *output columns*, not across `k`, which is
+//! what makes the no-reassociation guarantee possible.
+//!
+//! Dispatch is observable: [`kernel_name`] is reported by
+//! `coordinator::metrics`, printed by `sfc serve` and recorded in the
+//! BENCH_conv.json `kernel` field; [`set_kernel_override`] lets the
+//! bench harness measure the scalar arm from the same process.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Which microkernel family executes the hot loops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// x86-64 AVX2: 8-lane f32, 16-lane int8 (`_mm256_madd_epi16`)
+    Avx2,
+    /// AArch64 NEON: 4-lane f32, 8-lane int8 (`vmull_s16`)
+    Neon,
+    /// portable reference kernels (also the `SFC_FORCE_SCALAR=1` arm)
+    Scalar,
+}
+
+impl Kernel {
+    /// Stable lower-case name (`"avx2" | "neon" | "scalar"`), used in
+    /// metrics and the BENCH_conv.json `kernel` field.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+            Kernel::Scalar => "scalar",
+        }
+    }
+}
+
+/// Detect the best kernel for this process: the `SFC_FORCE_SCALAR=1`
+/// env override wins, then runtime CPU-feature detection.
+pub fn detect() -> Kernel {
+    if std::env::var("SFC_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false) {
+        return Kernel::Scalar;
+    }
+    detect_arch()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch() -> Kernel {
+    if std::is_x86_feature_detected!("avx2") {
+        Kernel::Avx2
+    } else {
+        Kernel::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_arch() -> Kernel {
+    // NEON (ASIMD) is architecturally mandatory on AArch64.
+    Kernel::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_arch() -> Kernel {
+    Kernel::Scalar
+}
+
+/// 0 = no override; otherwise the forced kernel + 1.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Can this process actually execute `k`'s microkernels? (`Scalar`
+/// always; SIMD arms only on their architecture with the feature
+/// present.)
+pub fn is_supported(k: Kernel) -> bool {
+    match k {
+        Kernel::Scalar => true,
+        _ => detect_arch() == k,
+    }
+}
+
+/// Force dispatch to a specific kernel (`None` restores detection).
+/// Used by `sfc bench` to measure the scalar arm in-process and by the
+/// dispatch tests; takes effect on the next [`active_kernel`] call.
+/// Requesting a kernel this CPU cannot execute pins `Scalar` instead —
+/// dispatch must never route into microkernels whose instructions the
+/// host lacks (that would be undefined behavior reachable from safe
+/// code).
+pub fn set_kernel_override(k: Option<Kernel>) {
+    let v = match k {
+        None => 0,
+        Some(k) if !is_supported(k) => 3,
+        Some(Kernel::Avx2) => 1,
+        Some(Kernel::Neon) => 2,
+        Some(Kernel::Scalar) => 3,
+    };
+    OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// The kernel the dispatched entry points run right now: the
+/// [`set_kernel_override`] pin if set, else the one-time [`detect`]
+/// result (env + CPUID), cached for the process lifetime.
+pub fn active_kernel() -> Kernel {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        1 => Kernel::Avx2,
+        2 => Kernel::Neon,
+        3 => Kernel::Scalar,
+        _ => {
+            static DETECTED: OnceLock<Kernel> = OnceLock::new();
+            *DETECTED.get_or_init(detect)
+        }
+    }
+}
+
+/// [`active_kernel`]`().name()` — the metrics / bench spelling.
+pub fn kernel_name() -> &'static str {
+    active_kernel().name()
+}
+
+/// Serializes in-crate unit tests that toggle (or assert) the
+/// process-global kernel override — `cargo test` runs tests in threads,
+/// and the override is process-wide. Integration tests keep their own
+/// lock per binary.
+#[cfg(test)]
+pub(crate) static TEST_OVERRIDE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+// ---------------------------------------------------------------------
+// Quantize: dst[i] = clamp(round(src[i] / scale), ±qmax) as i8
+// ---------------------------------------------------------------------
+
+/// Scalar int8 quantizer — the same formula as
+/// [`crate::quant::QParams::quantize`], shared by every spatial
+/// quantize loop.
+pub fn quantize_i8_slice_scalar(src: &[f32], scale: f32, qmax: i32, dst: &mut [i8]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = ((v / scale).round() as i32).clamp(-qmax, qmax) as i8;
+    }
+}
+
+/// Dispatched int8 quantizer: divide, round half-away-from-zero, clamp
+/// to ±`qmax`. Bit-identical to [`quantize_i8_slice_scalar`] for finite
+/// inputs under every dispatch arm.
+pub fn quantize_i8_slice(src: &[f32], scale: f32, qmax: i32, dst: &mut [i8]) {
+    assert_eq!(src.len(), dst.len());
+    match active_kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::quantize_i8(src, scale, qmax, dst) },
+        _ => quantize_i8_slice_scalar(src, scale, qmax, dst),
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2 microkernels (x86_64)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2 {
+    //! AVX2 implementations of the packed-panel GEMM microkernels and
+    //! the int8 quantizer. Panel layouts are defined in
+    //! [`crate::linalg::gemm`] (`pack_b_f32` / `pack_b_i8`). All
+    //! functions here require AVX2 at runtime — callers dispatch via
+    //! [`super::active_kernel`].
+
+    use std::arch::x86_64::*;
+
+    /// `C[m×n] = A[m×k]·Bᵀ` with B in 8-column packed panels
+    /// (`[panel][k][8]`). Per-element k-ascending multiply+add — bit-
+    /// identical to the scalar packed kernel.
+    ///
+    /// # Safety
+    /// Requires AVX2. Slice bounds are asserted by the dispatching
+    /// wrapper in `linalg::gemm`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_packed_f32(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        bp: &[f32],
+        c: &mut [f32],
+    ) {
+        let npan = n.div_ceil(8);
+        for jp in 0..npan {
+            let pb = bp.as_ptr().add(jp * k * 8);
+            let j0 = jp * 8;
+            let lanes = (n - j0).min(8);
+            let mut i = 0usize;
+            while i + 4 <= m {
+                let a0 = a.as_ptr().add(i * k);
+                let a1 = a.as_ptr().add((i + 1) * k);
+                let a2 = a.as_ptr().add((i + 2) * k);
+                let a3 = a.as_ptr().add((i + 3) * k);
+                let mut acc0 = _mm256_setzero_ps();
+                let mut acc1 = _mm256_setzero_ps();
+                let mut acc2 = _mm256_setzero_ps();
+                let mut acc3 = _mm256_setzero_ps();
+                for l in 0..k {
+                    let bv = _mm256_loadu_ps(pb.add(l * 8));
+                    acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_set1_ps(*a0.add(l)), bv));
+                    acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_set1_ps(*a1.add(l)), bv));
+                    acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_set1_ps(*a2.add(l)), bv));
+                    acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_set1_ps(*a3.add(l)), bv));
+                }
+                store_f32(c, i * n + j0, acc0, lanes);
+                store_f32(c, (i + 1) * n + j0, acc1, lanes);
+                store_f32(c, (i + 2) * n + j0, acc2, lanes);
+                store_f32(c, (i + 3) * n + j0, acc3, lanes);
+                i += 4;
+            }
+            // m-remainder: same microkernel blocking, one row at a time
+            while i < m {
+                let ar = a.as_ptr().add(i * k);
+                let mut acc = _mm256_setzero_ps();
+                for l in 0..k {
+                    let bv = _mm256_loadu_ps(pb.add(l * 8));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(*ar.add(l)), bv));
+                }
+                store_f32(c, i * n + j0, acc, lanes);
+                i += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn store_f32(c: &mut [f32], off: usize, acc: __m256, lanes: usize) {
+        if lanes == 8 {
+            _mm256_storeu_ps(c.as_mut_ptr().add(off), acc);
+        } else {
+            let mut tmp = [0f32; 8];
+            _mm256_storeu_ps(tmp.as_mut_ptr(), acc);
+            c[off..off + lanes].copy_from_slice(&tmp[..lanes]);
+        }
+    }
+
+    /// Int8 packed GEMM: `C[m×n] (i32) = A[m×k]·Bᵀ` with B in 8-column
+    /// panels of interleaved k-pairs (`[panel][k/2][8][2]`, odd k
+    /// zero-padded). Exact i32 accumulation via `_mm256_madd_epi16`
+    /// (i8 operands ⇒ the pairwise i16 dot cannot overflow).
+    ///
+    /// # Safety
+    /// Requires AVX2. Slice bounds are asserted by the dispatching
+    /// wrapper in `linalg::gemm`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_packed_i8_i32(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[i8],
+        bp: &[i8],
+        c: &mut [i32],
+    ) {
+        let k2 = k.div_ceil(2);
+        let npan = n.div_ceil(8);
+        for jp in 0..npan {
+            let pb = bp.as_ptr().add(jp * k2 * 16);
+            let j0 = jp * 8;
+            let lanes = (n - j0).min(8);
+            let mut i = 0usize;
+            while i + 4 <= m {
+                let rows = [
+                    a.as_ptr().add(i * k),
+                    a.as_ptr().add((i + 1) * k),
+                    a.as_ptr().add((i + 2) * k),
+                    a.as_ptr().add((i + 3) * k),
+                ];
+                let mut acc = [_mm256_setzero_si256(); 4];
+                for l2 in 0..k2 {
+                    let b16 =
+                        _mm256_cvtepi8_epi16(_mm_loadu_si128(pb.add(l2 * 16) as *const __m128i));
+                    for (r, row) in rows.iter().enumerate() {
+                        let av = _mm256_set1_epi32(apair(*row, l2, k));
+                        acc[r] = _mm256_add_epi32(acc[r], _mm256_madd_epi16(av, b16));
+                    }
+                }
+                for (r, accv) in acc.iter().enumerate() {
+                    store_i32(c, (i + r) * n + j0, *accv, lanes);
+                }
+                i += 4;
+            }
+            while i < m {
+                let row = a.as_ptr().add(i * k);
+                let mut acc = _mm256_setzero_si256();
+                for l2 in 0..k2 {
+                    let b16 =
+                        _mm256_cvtepi8_epi16(_mm_loadu_si128(pb.add(l2 * 16) as *const __m128i));
+                    let av = _mm256_set1_epi32(apair(row, l2, k));
+                    acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, b16));
+                }
+                store_i32(c, i * n + j0, acc, lanes);
+                i += 1;
+            }
+        }
+    }
+
+    /// The A-side operand for one k-pair: two consecutive i8 values of
+    /// row `row` sign-extended to i16 and packed into one i32 (low half
+    /// = k even element), zero-padding the odd tail.
+    #[inline(always)]
+    unsafe fn apair(row: *const i8, l2: usize, k: usize) -> i32 {
+        let a0 = *row.add(2 * l2) as i32;
+        let a1 = if 2 * l2 + 1 < k { *row.add(2 * l2 + 1) as i32 } else { 0 };
+        (((a0 as u32) & 0xffff) | (((a1 as u32) & 0xffff) << 16)) as i32
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn store_i32(c: &mut [i32], off: usize, acc: __m256i, lanes: usize) {
+        if lanes == 8 {
+            _mm256_storeu_si256(c.as_mut_ptr().add(off) as *mut __m256i, acc);
+        } else {
+            let mut tmp = [0i32; 8];
+            _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, acc);
+            c[off..off + lanes].copy_from_slice(&tmp[..lanes]);
+        }
+    }
+
+    /// Vectorized int8 quantizer: `clamp(round(v / scale), ±qmax)`.
+    /// Round is exact half-away-from-zero (trunc + |frac| ≥ ½ step), so
+    /// the result matches `f32::round` bit-for-bit on finite inputs.
+    ///
+    /// # Safety
+    /// Requires AVX2. `src.len() == dst.len()` is asserted by the
+    /// dispatching wrapper.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_i8(src: &[f32], scale: f32, qmax: i32, dst: &mut [i8]) {
+        let n = src.len();
+        let vs = _mm256_set1_ps(scale);
+        let qf = _mm256_set1_ps(qmax as f32);
+        let fix = _mm256_setr_epi32(0, 4, 1, 5, 2, 6, 3, 7);
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let p = src.as_ptr().add(i);
+            let q0 = quantize8(p, vs, qf);
+            let q1 = quantize8(p.add(8), vs, qf);
+            let q2 = quantize8(p.add(16), vs, qf);
+            let q3 = quantize8(p.add(24), vs, qf);
+            // 4×8 i32 → 32 i8; packs interleaves 128-bit lanes, the
+            // permute restores element order
+            let p01 = _mm256_packs_epi32(q0, q1);
+            let p23 = _mm256_packs_epi32(q2, q3);
+            let packed = _mm256_permutevar8x32_epi32(_mm256_packs_epi16(p01, p23), fix);
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, packed);
+            i += 32;
+        }
+        super::quantize_i8_slice_scalar(&src[i..], scale, qmax, &mut dst[i..]);
+    }
+
+    /// One 8-lane quantize step: divide, round half-away-from-zero
+    /// (trunc + step when the exactly-representable fraction reaches
+    /// 0.5), clamp to ±qmax, convert (integral input ⇒ exact).
+    #[target_feature(enable = "avx2")]
+    unsafe fn quantize8(p: *const f32, vs: __m256, qf: __m256) -> __m256i {
+        let half = _mm256_set1_ps(0.5);
+        let one = _mm256_set1_ps(1.0);
+        let sign = _mm256_set1_ps(-0.0);
+        let d = _mm256_div_ps(_mm256_loadu_ps(p), vs);
+        let t = _mm256_round_ps::<{ _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC }>(d);
+        let frac = _mm256_sub_ps(d, t);
+        let ge = _mm256_cmp_ps::<_CMP_GE_OQ>(_mm256_andnot_ps(sign, frac), half);
+        let step = _mm256_and_ps(_mm256_or_ps(one, _mm256_and_ps(d, sign)), ge);
+        let r = _mm256_add_ps(t, step);
+        let nqf = _mm256_sub_ps(_mm256_setzero_ps(), qf);
+        _mm256_cvtps_epi32(_mm256_max_ps(_mm256_min_ps(r, qf), nqf))
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON microkernels (aarch64)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon {
+    //! NEON implementations of the packed-panel GEMM microkernels.
+    //! Same panel layouts and the same exact numerics contract as the
+    //! AVX2 module (separate multiply/add, k ascending, one accumulator
+    //! per output element). NEON is architecturally mandatory on
+    //! AArch64, so these are plain `unsafe fn`s without a
+    //! `target_feature` gate.
+
+    use std::arch::aarch64::*;
+
+    /// Packed f32 GEMM (see the AVX2 twin for the layout contract).
+    ///
+    /// # Safety
+    /// Slice bounds are asserted by the dispatching wrapper.
+    pub unsafe fn gemm_packed_f32(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        bp: &[f32],
+        c: &mut [f32],
+    ) {
+        let npan = n.div_ceil(8);
+        for jp in 0..npan {
+            let pb = bp.as_ptr().add(jp * k * 8);
+            let j0 = jp * 8;
+            let lanes = (n - j0).min(8);
+            for i in 0..m {
+                let ar = a.as_ptr().add(i * k);
+                let mut acc0 = vdupq_n_f32(0.0);
+                let mut acc1 = vdupq_n_f32(0.0);
+                for l in 0..k {
+                    let av = vdupq_n_f32(*ar.add(l));
+                    let b0 = vld1q_f32(pb.add(l * 8));
+                    let b1 = vld1q_f32(pb.add(l * 8 + 4));
+                    acc0 = vaddq_f32(acc0, vmulq_f32(av, b0));
+                    acc1 = vaddq_f32(acc1, vmulq_f32(av, b1));
+                }
+                let mut tmp = [0f32; 8];
+                vst1q_f32(tmp.as_mut_ptr(), acc0);
+                vst1q_f32(tmp.as_mut_ptr().add(4), acc1);
+                c[i * n + j0..i * n + j0 + lanes].copy_from_slice(&tmp[..lanes]);
+            }
+        }
+    }
+
+    /// Packed int8 GEMM with exact i32 accumulation (see the AVX2 twin
+    /// for the interleaved k-pair layout).
+    ///
+    /// # Safety
+    /// Slice bounds are asserted by the dispatching wrapper.
+    pub unsafe fn gemm_packed_i8_i32(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[i8],
+        bp: &[i8],
+        c: &mut [i32],
+    ) {
+        let k2 = k.div_ceil(2);
+        let npan = n.div_ceil(8);
+        for jp in 0..npan {
+            let pb = bp.as_ptr().add(jp * k2 * 16);
+            let j0 = jp * 8;
+            let lanes = (n - j0).min(8);
+            for i in 0..m {
+                let row = a.as_ptr().add(i * k);
+                let mut acc_lo = vdupq_n_s32(0); // columns j0..j0+4
+                let mut acc_hi = vdupq_n_s32(0); // columns j0+4..j0+8
+                for l2 in 0..k2 {
+                    let a0 = *row.add(2 * l2) as i32;
+                    let a1 = if 2 * l2 + 1 < k { *row.add(2 * l2 + 1) as i32 } else { 0 };
+                    let pair = (((a0 as u32) & 0xffff) | (((a1 as u32) & 0xffff) << 16)) as i32;
+                    let apair = vreinterpretq_s16_s32(vdupq_n_s32(pair));
+                    let b = vld1q_s8(pb.add(l2 * 16));
+                    let blo = vmovl_s8(vget_low_s8(b)); // cols j0..j0+4, pairs
+                    let bhi = vmovl_s8(vget_high_s8(b));
+                    let p0 = vmull_s16(vget_low_s16(blo), vget_low_s16(apair));
+                    let p1 = vmull_s16(vget_high_s16(blo), vget_high_s16(apair));
+                    acc_lo = vaddq_s32(acc_lo, vpaddq_s32(p0, p1));
+                    let p2 = vmull_s16(vget_low_s16(bhi), vget_low_s16(apair));
+                    let p3 = vmull_s16(vget_high_s16(bhi), vget_high_s16(apair));
+                    acc_hi = vaddq_s32(acc_hi, vpaddq_s32(p2, p3));
+                }
+                let mut tmp = [0i32; 8];
+                vst1q_s32(tmp.as_mut_ptr(), acc_lo);
+                vst1q_s32(tmp.as_mut_ptr().add(4), acc_hi);
+                c[i * n + j0..i * n + j0 + lanes].copy_from_slice(&tmp[..lanes]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_names_are_stable() {
+        assert_eq!(Kernel::Avx2.name(), "avx2");
+        assert_eq!(Kernel::Neon.name(), "neon");
+        assert_eq!(Kernel::Scalar.name(), "scalar");
+    }
+
+    #[test]
+    fn env_force_scalar_is_honored_by_detection() {
+        let _g = TEST_OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        // When the suite runs under SFC_FORCE_SCALAR=1 (the CI scalar
+        // arm), detection — and therefore dispatch — must pin scalar.
+        if std::env::var("SFC_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false) {
+            assert_eq!(detect(), Kernel::Scalar);
+            assert_eq!(active_kernel(), Kernel::Scalar);
+        }
+    }
+
+    #[test]
+    fn quantize_matches_qparams_formula() {
+        let src: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.37).collect();
+        let mut a = vec![0i8; src.len()];
+        let mut b = vec![0i8; src.len()];
+        quantize_i8_slice(&src, 0.21, 127, &mut a);
+        quantize_i8_slice_scalar(&src, 0.21, 127, &mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -87,12 +87,14 @@ engine selection (cuDNN findAlgorithm-style):
               print measured times + the selected winner (--bits N asks
               for the intN transform-domain scheme; 0 = float)
 
-perf snapshot (steady-state run_into over a reused workspace):
+perf snapshot (steady-state pre-packed run over a reused workspace):
   bench       [--json] [--out BENCH_conv.json] [--iters 9] [--warmup 2]
               [--quick]
-              per-shape, per-engine ns/call + GFLOP/s; --json writes the
-              machine-readable snapshot tracked across PRs; --quick is
-              the CI smoke subset
+              per-shape, per-engine ns/call + GFLOP/s, the active kernel
+              dispatch arm (avx2|neon|scalar; SFC_FORCE_SCALAR=1 pins
+              scalar) and a scalar-vs-SIMD speedup block on the dense
+              3x3 shapes; --json writes the machine-readable snapshot
+              tracked across PRs; --quick is the CI smoke subset
 
 serving demo (L3 over PJRT artifacts, or --runner engine for the
 pure-Rust workspace-backed path):

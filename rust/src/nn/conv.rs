@@ -14,8 +14,15 @@
 use super::tensor::Tensor;
 use crate::algo::Bilinear;
 use crate::engine::Workspace;
-use crate::linalg::gemm::gemm_nt_f32;
+use crate::linalg::gemm::{
+    gemm_packed_f32, pack_b_f32, pack_b_i8, packed_b_f32_len, packed_b_i8_len,
+};
 use crate::util::par::{num_threads, par_chunks_mut, par_chunks_states};
+
+/// Lane width of the batched tile transforms (`transform_tiles8` /
+/// `inverse_tiles8` process 8 tiles per sweep; equals the packed-GEMM
+/// panel width, so one tile group feeds one output panel).
+pub const TILE_LANES: usize = 8;
 
 /// Precomputed matrices for a tiled fast convolution.
 #[derive(Debug)]
@@ -180,6 +187,60 @@ impl FastConvPlan {
         }
     }
 
+    /// Transform a lane-batched group of up to [`TILE_LANES`] L×L input
+    /// tiles at once: per lane, exactly the operation sequence of
+    /// [`FastConvPlan::transform_tile`], so batched and single-tile
+    /// results are bit-identical. Buffers are lane-major:
+    /// `tiles[(i·L+j)·8 + lane]`; `scratch` holds T×L×8 floats, `out`
+    /// T×T×8. The add-only ±1 rows of Bᵀ become pure 8-lane add/sub
+    /// sweeps, which is what lets the compiler vectorize the transform.
+    pub fn transform_tiles8(&self, tiles: &[f32], scratch: &mut [f32], out: &mut [f32]) {
+        let (t, l) = (self.t(), self.l());
+        let lw = TILE_LANES;
+        debug_assert!(tiles.len() >= l * l * lw);
+        for v in scratch.iter_mut().take(t * l * lw) {
+            *v = 0.0;
+        }
+        for i in 0..t {
+            for k in 0..l {
+                let bv = self.bt[i * l + k];
+                if bv != 0.0 {
+                    let (ds, de) = (i * l * lw, (i + 1) * l * lw);
+                    let src = &tiles[k * l * lw..(k + 1) * l * lw];
+                    let dst = &mut scratch[ds..de];
+                    if bv == 1.0 {
+                        for (d, s) in dst.iter_mut().zip(src) {
+                            *d += s;
+                        }
+                    } else if bv == -1.0 {
+                        for (d, s) in dst.iter_mut().zip(src) {
+                            *d -= s;
+                        }
+                    } else {
+                        for (d, s) in dst.iter_mut().zip(src) {
+                            *d += bv * s;
+                        }
+                    }
+                }
+            }
+        }
+        for i in 0..t {
+            for j in 0..t {
+                let mut acc = [0f32; TILE_LANES];
+                for k in 0..l {
+                    let bv = self.bt[j * l + k];
+                    if bv != 0.0 {
+                        let src = &scratch[(i * l + k) * lw..(i * l + k + 1) * lw];
+                        for (a, s) in acc.iter_mut().zip(src) {
+                            *a += s * bv;
+                        }
+                    }
+                }
+                out[(i * t + j) * lw..(i * t + j + 1) * lw].copy_from_slice(&acc);
+            }
+        }
+    }
+
     /// Inverse transform a T×T product block: Y = Aᵀ·p·A (M×M).
     pub fn inverse_tile(&self, p: &[f32], scratch: &mut [f32], out: &mut [f32]) {
         let (t, m) = (self.t(), self.m());
@@ -210,6 +271,46 @@ impl FastConvPlan {
                     }
                 }
                 out[i * m + j] = acc;
+            }
+        }
+    }
+
+    /// Inverse-transform a lane-batched group of up to [`TILE_LANES`]
+    /// T×T product blocks at once (lane-major buffers, per-lane
+    /// bit-identical to [`FastConvPlan::inverse_tile`]). `scratch`
+    /// holds M×T×8 floats, `out` M×M×8.
+    pub fn inverse_tiles8(&self, p8: &[f32], scratch: &mut [f32], out: &mut [f32]) {
+        let (t, m) = (self.t(), self.m());
+        let lw = TILE_LANES;
+        debug_assert!(p8.len() >= t * t * lw);
+        for v in scratch.iter_mut().take(m * t * lw) {
+            *v = 0.0;
+        }
+        for i in 0..m {
+            for k in 0..t {
+                let av = self.at[i * t + k];
+                if av != 0.0 {
+                    let src = &p8[k * t * lw..(k + 1) * t * lw];
+                    let dst = &mut scratch[i * t * lw..(i + 1) * t * lw];
+                    for (d, s) in dst.iter_mut().zip(src) {
+                        *d += av * s;
+                    }
+                }
+            }
+        }
+        for i in 0..m {
+            for j in 0..m {
+                let mut acc = [0f32; TILE_LANES];
+                for k in 0..t {
+                    let av = self.at[j * t + k];
+                    if av != 0.0 {
+                        let src = &scratch[(i * t + k) * lw..(i * t + k + 1) * lw];
+                        for (a, s) in acc.iter_mut().zip(src) {
+                            *a += s * av;
+                        }
+                    }
+                }
+                out[(i * m + j) * lw..(i * m + j + 1) * lw].copy_from_slice(&acc);
             }
         }
     }
@@ -349,24 +450,65 @@ pub fn gather_tile(
     }
 }
 
+/// Gather up to [`TILE_LANES`] consecutive tiles (row-major tile
+/// indices `base..base+lanes`) of image `n`, channel `c` into the
+/// lane-major batch buffer `out[(i·L+j)·8 + lane]` (stride-1 fast path,
+/// zero padding `pad`). Lanes ≥ `lanes` keep their previous contents —
+/// the batched transforms compute and discard those lanes.
+#[allow(clippy::too_many_arguments)]
+pub fn gather_tiles8(
+    x: &Tensor,
+    n: usize,
+    c: usize,
+    base: usize,
+    lanes: usize,
+    tiles_x: usize,
+    m: usize,
+    l: usize,
+    pad: usize,
+    out: &mut [f32],
+) {
+    let (_, _, h, w) = x.dims4();
+    let plane = x.plane(n, c);
+    for lane in 0..lanes {
+        let tile_idx = base + lane;
+        let (ty, tx) = (tile_idx / tiles_x, tile_idx % tiles_x);
+        let y0 = (ty * m) as isize - pad as isize;
+        let x0 = (tx * m) as isize - pad as isize;
+        for i in 0..l {
+            let yy = y0 + i as isize;
+            for j in 0..l {
+                let xx = x0 + j as isize;
+                out[(i * l + j) * TILE_LANES + lane] =
+                    if yy >= 0 && (yy as usize) < h && xx >= 0 && (xx as usize) < w {
+                        plane[yy as usize * w + xx as usize]
+                    } else {
+                        0.0
+                    };
+            }
+        }
+    }
+}
+
 /// Per-worker scratch for the tiled fast path, checked out of a
-/// [`Workspace`] before the parallel region and returned after.
+/// [`Workspace`] before the parallel region and returned after. The
+/// per-tile buffers are lane-batched ([`TILE_LANES`] tiles wide).
 struct FastScratch {
     /// V blocks, freq-major [T²][tiles][IC]
     v: Vec<f32>,
     /// P blocks, freq-major [T²][tiles][OC]
     p: Vec<f32>,
-    /// gathered L×L input tile
+    /// gathered L×L input tiles, lane-major [L²][8]
     tile: Vec<f32>,
-    /// Bᵀ·x intermediate (T×L)
+    /// Bᵀ·x intermediate (T×L×8)
     tscr: Vec<f32>,
-    /// one transformed tile (T×T)
+    /// one transformed tile group (T×T×8)
     tv: Vec<f32>,
-    /// one tile's ⊙ products (T×T)
+    /// one tile group's ⊙ products (T×T×8)
     prod: Vec<f32>,
-    /// Aᵀ·p intermediate (M×T)
+    /// Aᵀ·p intermediate (M×T×8)
     iscr: Vec<f32>,
-    /// one M×M output tile
+    /// M×M output tiles, lane-major (M²×8)
     ytile: Vec<f32>,
 }
 
@@ -385,12 +527,12 @@ impl FastScratch {
         FastScratch {
             v: ws.take_f32(tt * n_tiles * ic),
             p: ws.take_f32(tt * n_tiles * oc),
-            tile: ws.take_f32(l * l),
-            tscr: ws.take_f32(t * l),
-            tv: ws.take_f32(tt),
-            prod: ws.take_f32(tt),
-            iscr: ws.take_f32(m * t),
-            ytile: ws.take_f32(m * m),
+            tile: ws.take_f32(l * l * TILE_LANES),
+            tscr: ws.take_f32(t * l * TILE_LANES),
+            tv: ws.take_f32(tt * TILE_LANES),
+            prod: ws.take_f32(tt * TILE_LANES),
+            iscr: ws.take_f32(m * t * TILE_LANES),
+            ytile: ws.take_f32(m * m * TILE_LANES),
         }
     }
 
@@ -426,27 +568,20 @@ pub fn conv2d_fast_into(
     ws: &mut Workspace,
     out: &mut Tensor,
 ) {
-    let (n, ic, h, wid) = x.dims4();
+    let (_, ic, _, _) = x.dims4();
     let (oc, icg, r, _) = w.dims4();
     assert!(groups >= 1 && oc % groups == 0, "groups {groups} must divide oc {oc}");
     assert_eq!(icg * groups, ic, "weight channels {icg}×{groups} groups vs input {ic}");
     assert_eq!(r, plan.r());
-    assert!(bias.is_empty() || bias.len() == oc);
     let ocg = oc / groups;
-    let (m, l, t) = (plan.m(), plan.l(), plan.t());
-    let oh = h + 2 * pad - r + 1;
-    let ow = wid + 2 * pad - r + 1;
-    out.assert_dims(&[n, oc, oh, ow]);
-    let tiles_y = oh.div_ceil(m);
-    let tiles_x = ow.div_ceil(m);
-    let n_tiles = tiles_y * tiles_x;
-    let tt = t * t;
-
-    // Transformed weights, freq-major [T²][OC][IC/g], shared by all
-    // workers. Output channels are contiguous per group, so this is
-    // simultaneously the group-major [T²][G][OC/g][IC/g] layout the
-    // per-group GEMM consumes.
+    let (t, tt) = (plan.t(), plan.t() * plan.t());
+    // Transform weights (freq-major [T²][OC][IC/g], output channels
+    // contiguous per group) and pack each (frequency, group) block into
+    // the GEMM panel layout — the per-call twin of the plan-time
+    // pre-packing in `engine::PackedWeights` (bit-identical results).
+    let blk = packed_b_f32_len(ocg, icg);
     let mut u = ws.take_f32(tt * oc * icg);
+    let mut up = ws.take_f32(tt * groups * blk);
     {
         let mut tmp = ws.take_f32(t * r);
         let mut utile = ws.take_f32(tt);
@@ -454,6 +589,99 @@ pub fn conv2d_fast_into(
         ws.give_f32(tmp);
         ws.give_f32(utile);
     }
+    pack_fast_weights(&u, oc, icg, groups, tt, &mut up);
+    ws.give_f32(u);
+    conv2d_fast_packed_into(x, &up, oc, icg, bias, plan, pad, groups, ws, out);
+    ws.give_f32(up);
+}
+
+/// Pack transformed weights (freq-major `[T²][OC][IC/g]`, output
+/// channels contiguous per group) into per-(frequency, group) GEMM B
+/// panels — the layout [`conv2d_fast_packed_into`] consumes. `up` must
+/// hold `T²·groups·packed_b_f32_len(OC/g, IC/g)` floats.
+pub fn pack_fast_weights(
+    u: &[f32],
+    oc: usize,
+    icg: usize,
+    groups: usize,
+    tt: usize,
+    up: &mut [f32],
+) {
+    let ocg = oc / groups;
+    let blk = packed_b_f32_len(ocg, icg);
+    assert!(up.len() >= tt * groups * blk);
+    for uv in 0..tt {
+        for gi in 0..groups {
+            let rows = &u[(uv * oc + gi * ocg) * icg..(uv * oc + (gi + 1) * ocg) * icg];
+            let dst = &mut up[(uv * groups + gi) * blk..(uv * groups + gi + 1) * blk];
+            pack_b_f32(ocg, icg, rows, dst);
+        }
+    }
+}
+
+/// The int8 twin of [`pack_fast_weights`]: pack quantized transformed
+/// weights (freq-major `[T²][OC][IC/g]`) into per-(frequency, group)
+/// interleaved-k-pair GEMM B panels. `up` must hold
+/// `T²·groups·packed_b_i8_len(OC/g, IC/g)` bytes. The group-major block
+/// order matches the f32 layout, so the two packers cannot drift apart.
+pub fn pack_fast_weights_i8(
+    u: &[i8],
+    oc: usize,
+    icg: usize,
+    groups: usize,
+    tt: usize,
+    up: &mut [i8],
+) {
+    let ocg = oc / groups;
+    let blk = packed_b_i8_len(ocg, icg);
+    assert!(up.len() >= tt * groups * blk);
+    for uv in 0..tt {
+        for gi in 0..groups {
+            let rows = &u[(uv * oc + gi * ocg) * icg..(uv * oc + (gi + 1) * ocg) * icg];
+            let dst = &mut up[(uv * groups + gi) * blk..(uv * groups + gi + 1) * blk];
+            pack_b_i8(ocg, icg, rows, dst);
+        }
+    }
+}
+
+/// The packed-weight fast-conv core: like [`conv2d_fast_into`] but the
+/// weights arrive pre-transformed and pre-packed (`up`, laid out by
+/// [`pack_fast_weights`] — what a cached
+/// [`crate::engine::PackedWeights`] holds), so a steady-state call
+/// touches only packed operands. Stage 1 gathers and transforms tiles
+/// in lane batches of [`TILE_LANES`], stage 2 runs the dispatched
+/// packed GEMM per (frequency, group), stage 3 inverse-transforms lane
+/// batches and scatters. Bit-identical to [`conv2d_fast_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_fast_packed_into(
+    x: &Tensor,
+    up: &[f32],
+    oc: usize,
+    icg: usize,
+    bias: &[f32],
+    plan: &FastConvPlan,
+    pad: usize,
+    groups: usize,
+    ws: &mut Workspace,
+    out: &mut Tensor,
+) {
+    let (n, ic, h, wid) = x.dims4();
+    assert!(groups >= 1 && oc % groups == 0, "groups {groups} must divide oc {oc}");
+    assert_eq!(icg * groups, ic, "weight channels {icg}×{groups} groups vs input {ic}");
+    assert!(bias.is_empty() || bias.len() == oc);
+    let ocg = oc / groups;
+    let r = plan.r();
+    let (m, l, t) = (plan.m(), plan.l(), plan.t());
+    let oh = h + 2 * pad - r + 1;
+    let ow = wid + 2 * pad - r + 1;
+    out.assert_dims(&[n, oc, oh, ow]);
+    let tiles_y = oh.div_ceil(m);
+    let tiles_x = ow.div_ceil(m);
+    let n_tiles = tiles_y * tiles_x;
+    let ntg = n_tiles.div_ceil(TILE_LANES);
+    let tt = t * t;
+    let blk = packed_b_f32_len(ocg, icg);
+    assert!(up.len() >= tt * groups * blk, "packed weights too small");
 
     // One scratch set per worker; images are distributed contiguously and
     // each worker writes its images' output chunks directly (no mutex).
@@ -462,49 +690,59 @@ pub fn conv2d_fast_into(
         (0..workers).map(|_| FastScratch::take(ws, tt, n_tiles, ic, oc, m, l, t)).collect();
     let img_len = oc * oh * ow;
     par_chunks_states(&mut out.data, img_len, &mut states, |st, ni, out_img| {
-        // 1) gather + transform all tiles: V group-major
+        // 1) gather + transform tile groups (8 lanes): V group-major
         //    [T²][G][tiles][IC/g] (== [T²][tiles][IC] when groups == 1)
-        for ty in 0..tiles_y {
-            for tx in 0..tiles_x {
-                let tile_idx = ty * tiles_x + tx;
-                for c in 0..ic {
-                    let (gi, il) = (c / icg, c % icg);
-                    gather_tile(x, ni, c, ty, tx, m, l, pad, &mut st.tile);
-                    plan.transform_tile(&st.tile, &mut st.tscr, &mut st.tv);
-                    for uv in 0..tt {
-                        st.v[((uv * groups + gi) * n_tiles + tile_idx) * icg + il] = st.tv[uv];
+        for tg in 0..ntg {
+            let base = tg * TILE_LANES;
+            let lanes = (n_tiles - base).min(TILE_LANES);
+            for c in 0..ic {
+                let (gi, il) = (c / icg, c % icg);
+                gather_tiles8(x, ni, c, base, lanes, tiles_x, m, l, pad, &mut st.tile);
+                plan.transform_tiles8(&st.tile, &mut st.tscr, &mut st.tv);
+                for uv in 0..tt {
+                    let row = ((uv * groups + gi) * n_tiles + base) * icg + il;
+                    for lane in 0..lanes {
+                        st.v[row + lane * icg] = st.tv[uv * TILE_LANES + lane];
                     }
                 }
             }
         }
-        // 2) per-(frequency, group) GEMM:
+        // 2) per-(frequency, group) packed GEMM (runtime-dispatched):
         //    P[uv][g] = V[uv][g] · U[uv][g]ᵀ ([tiles×IC/g]·[IC/g×OC/g])
         for uv in 0..tt {
             for gi in 0..groups {
                 let vb = (uv * groups + gi) * n_tiles * icg;
-                let ub = (uv * oc + gi * ocg) * icg;
+                let ub = (uv * groups + gi) * blk;
                 let pb = (uv * groups + gi) * n_tiles * ocg;
                 let vblk = &st.v[vb..vb + n_tiles * icg];
-                let ublk = &u[ub..ub + ocg * icg];
+                let ublk = &up[ub..ub + blk];
                 let pblk = &mut st.p[pb..pb + n_tiles * ocg];
-                gemm_nt_f32(n_tiles, ocg, icg, vblk, ublk, pblk);
+                gemm_packed_f32(n_tiles, ocg, icg, vblk, ublk, pblk);
             }
         }
-        // 3) inverse transform + scatter into this image's output chunk
+        // 3) lane-batched inverse transform + scatter into this image's
+        //    output chunk
         for o in 0..oc {
             let (gi, ol) = (o / ocg, o % ocg);
             let b = if bias.is_empty() { 0.0 } else { bias[o] };
             let plane = &mut out_img[o * oh * ow..(o + 1) * oh * ow];
-            for ty in 0..tiles_y {
-                for tx in 0..tiles_x {
-                    let tile_idx = ty * tiles_x + tx;
-                    for uv in 0..tt {
-                        st.prod[uv] = st.p[((uv * groups + gi) * n_tiles + tile_idx) * ocg + ol];
+            for tg in 0..ntg {
+                let base = tg * TILE_LANES;
+                let lanes = (n_tiles - base).min(TILE_LANES);
+                for uv in 0..tt {
+                    let row = ((uv * groups + gi) * n_tiles + base) * ocg + ol;
+                    for lane in 0..lanes {
+                        st.prod[uv * TILE_LANES + lane] = st.p[row + lane * ocg];
                     }
-                    plan.inverse_tile(&st.prod, &mut st.iscr, &mut st.ytile);
+                }
+                plan.inverse_tiles8(&st.prod, &mut st.iscr, &mut st.ytile);
+                for lane in 0..lanes {
+                    let tile_idx = base + lane;
+                    let (ty, tx) = (tile_idx / tiles_x, tile_idx % tiles_x);
                     for i in 0..m.min(oh - ty * m) {
                         for j in 0..m.min(ow - tx * m) {
-                            plane[(ty * m + i) * ow + tx * m + j] = st.ytile[i * m + j] + b;
+                            plane[(ty * m + i) * ow + tx * m + j] =
+                                st.ytile[(i * m + j) * TILE_LANES + lane] + b;
                         }
                     }
                 }
@@ -514,7 +752,6 @@ pub fn conv2d_fast_into(
     for st in states {
         st.give(ws);
     }
-    ws.give_f32(u);
 }
 
 /// Tiled fast convolution (stride 1), float transform domain. The group
@@ -667,6 +904,50 @@ mod tests {
             assert_eq!(direct.dims, fast.dims);
             let mse = direct.mse(&fast);
             assert!(mse < 1e-8, "groups {groups}: mse {mse}");
+        }
+    }
+
+    #[test]
+    fn batched_transforms_bit_identical_to_single_tile() {
+        let mut rng = Pcg32::seeded(31);
+        let plan = FastConvPlan::new(sfc(6, 6, 3));
+        let (t, l, m) = (plan.t(), plan.l(), plan.m());
+        let (tt, lw) = (t * t, TILE_LANES);
+        // forward: 8 random tiles, batched vs one-at-a-time
+        let mut tiles = vec![0f32; l * l * lw];
+        rng.fill_gaussian(&mut tiles, 1.0);
+        let mut tscr8 = vec![0f32; t * l * lw];
+        let mut tv8 = vec![0f32; tt * lw];
+        plan.transform_tiles8(&tiles, &mut tscr8, &mut tv8);
+        let mut tile = vec![0f32; l * l];
+        let mut tscr = vec![0f32; t * l];
+        let mut tv = vec![0f32; tt];
+        for lane in 0..lw {
+            for (e, dst) in tile.iter_mut().enumerate() {
+                *dst = tiles[e * lw + lane];
+            }
+            plan.transform_tile(&tile, &mut tscr, &mut tv);
+            for (uv, &want) in tv.iter().enumerate() {
+                assert_eq!(tv8[uv * lw + lane], want, "fwd lane {lane} uv {uv}");
+            }
+        }
+        // inverse: 8 random product blocks, batched vs one-at-a-time
+        let mut p8 = vec![0f32; tt * lw];
+        rng.fill_gaussian(&mut p8, 1.0);
+        let mut iscr8 = vec![0f32; m * t * lw];
+        let mut y8 = vec![0f32; m * m * lw];
+        plan.inverse_tiles8(&p8, &mut iscr8, &mut y8);
+        let mut p1 = vec![0f32; tt];
+        let mut iscr = vec![0f32; m * t];
+        let mut y1 = vec![0f32; m * m];
+        for lane in 0..lw {
+            for (e, dst) in p1.iter_mut().enumerate() {
+                *dst = p8[e * lw + lane];
+            }
+            plan.inverse_tile(&p1, &mut iscr, &mut y1);
+            for (e, &want) in y1.iter().enumerate() {
+                assert_eq!(y8[e * lw + lane], want, "inv lane {lane} elem {e}");
+            }
         }
     }
 

@@ -11,7 +11,7 @@
 //! consumer ran — the zero-alloc serving path.
 
 use super::tensor::Tensor;
-use crate::engine::{ConvPlan, Workspace};
+use crate::engine::{ConvPlan, PackedWeights, Workspace};
 use crate::quant::qconv::QConvLayer;
 use std::sync::Arc;
 
@@ -39,6 +39,11 @@ pub enum Op {
         params: ConvParams,
         /// engine-selected execution plan (see [`crate::engine`])
         plan: Arc<ConvPlan>,
+        /// plan-time pre-packed weights ([`Model::prepack_weights`]);
+        /// when set, the workspace forward runs
+        /// [`ConvPlan::run_packed_into`] — bit-identical to the
+        /// per-call path, minus the per-call transform + packing
+        packed: Option<Arc<PackedWeights>>,
         /// set by the PTQ pass: quantized executor overriding `plan`
         quantized: Option<QConvLayer>,
     },
@@ -186,6 +191,25 @@ impl Model {
             .collect()
     }
 
+    /// Pre-transform + pre-pack every float conv layer's weights once
+    /// (plan time), so steady-state [`Model::forward_ws`] runs
+    /// [`ConvPlan::run_packed_into`] over pre-packed operands only.
+    /// Idempotent; layers the PTQ pass quantized keep their own packed
+    /// panels inside the [`QConvLayer`]. Returns the packed bytes added.
+    pub fn prepack_weights(&mut self) -> usize {
+        let mut added = 0usize;
+        for node in &mut self.nodes {
+            if let Op::Conv { params, plan, packed, quantized } = &mut node.op {
+                if quantized.is_none() && packed.is_none() {
+                    let p = Arc::new(PackedWeights::pack(plan, &params.weight));
+                    added += p.bytes();
+                    *packed = Some(p);
+                }
+            }
+        }
+        added
+    }
+
     /// Forward pass; returns every node's activation (used by PTQ
     /// calibration and the Fig.-3/Fig.-5 per-layer probes).
     pub fn forward_all(&self, x: &Tensor) -> Vec<Tensor> {
@@ -194,7 +218,7 @@ impl Model {
             let get = |i: usize| -> &Tensor { &acts[i] };
             let out = match &node.op {
                 Op::Input => x.clone(),
-                Op::Conv { params, plan, quantized } => {
+                Op::Conv { params, plan, quantized, .. } => {
                     debug_assert_eq!(
                         (params.stride, params.pad),
                         (plan.desc.stride, plan.desc.pad),
@@ -292,7 +316,7 @@ impl Model {
                 Op::Input => input
                     .take()
                     .expect("forward_ws_owned supports one Input node; use forward_ws"),
-                Op::Conv { params, plan, quantized } => {
+                Op::Conv { params, plan, packed, quantized } => {
                     debug_assert_eq!(
                         (params.stride, params.pad),
                         (plan.desc.stride, plan.desc.pad),
@@ -312,7 +336,19 @@ impl Model {
                         out
                     } else {
                         let mut out = ws_tensor(ws, &plan.out_dims(inp, &params.weight));
-                        plan.run_into(inp, &params.weight, &params.bias, ws, &mut out);
+                        match packed {
+                            Some(p) => plan.run_packed_into(
+                                inp,
+                                &params.weight,
+                                p,
+                                &params.bias,
+                                ws,
+                                &mut out,
+                            ),
+                            None => {
+                                plan.run_into(inp, &params.weight, &params.bias, ws, &mut out)
+                            }
+                        }
                         out
                     }
                 }
@@ -430,6 +466,7 @@ mod tests {
             Op::Conv {
                 params: ConvParams { weight: w, bias: vec![0.0; 4], stride: 1, pad: 1 },
                 plan: Arc::new(ConvPlan::direct(desc)),
+                packed: None,
                 quantized: None,
             },
             vec![inp],

@@ -127,7 +127,12 @@ fn push_conv_grouped(
         .unwrap_or_else(|_| Arc::new(ConvPlan::direct(desc)));
     let out_hw = (hw + 2 * pad - r) / stride + 1;
     let node = m.push(
-        Op::Conv { params: ConvParams { weight, bias, stride, pad }, plan, quantized: None },
+        Op::Conv {
+            params: ConvParams { weight, bias, stride, pad },
+            plan,
+            packed: None,
+            quantized: None,
+        },
         vec![input],
         name,
     );

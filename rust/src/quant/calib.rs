@@ -124,8 +124,11 @@ pub fn quantize_model(model: &mut Model, calib: &Tensor, cfg: &QuantConfig) -> V
             continue; // engine unknown or unsupported for this layer
         };
         let q = build_quantized(plan, layer_in, layer_ref, params, cfg);
-        if let Op::Conv { quantized, .. } = &mut model.nodes[idx].op {
+        if let Op::Conv { quantized, packed, .. } = &mut model.nodes[idx].op {
             *quantized = Some(q);
+            // the quantized executor owns its own packed panels; drop
+            // the float pre-pack so its bytes are released
+            *packed = None;
         }
         done.push(idx);
     }
@@ -166,7 +169,11 @@ fn build_quantized(
     }
 }
 
-/// Remove quantization (restore fp32 execution).
+/// Remove quantization (restore fp32 execution). Pre-packed float
+/// weights are **not** rebuilt here (quantization dropped them) — a
+/// serving caller that wants the pre-packed steady-state datapath back
+/// should run [`Model::prepack_weights`] afterwards (idempotent); the
+/// per-call path the layers fall back to is bit-identical, just slower.
 pub fn dequantize_model(model: &mut Model) {
     for node in &mut model.nodes {
         if let Op::Conv { quantized, .. } = &mut node.op {
@@ -273,6 +280,7 @@ mod tests {
             Op::Conv {
                 params: ConvParams { weight: w, bias, stride: 1, pad: 1 },
                 plan: Arc::new(ConvPlan::direct(desc)),
+                packed: None,
                 quantized: None,
             },
             vec![input],

@@ -10,9 +10,10 @@
 
 use super::QParams;
 use crate::engine::exec::ntt_corr2d_i8_into;
-use crate::engine::{ConvPlan, PlanKernel, QuantSpec, Workspace};
-use crate::linalg::gemm::gemm_nt_i8_i32;
-use crate::nn::conv::{gather_tile, FastConvPlan};
+use crate::engine::{ConvPlan, PackedBytesGuard, PlanKernel, QuantSpec, Workspace};
+use crate::linalg::gemm::{gemm_packed_i8_i32, packed_b_i8_len};
+use crate::linalg::simd::quantize_i8_slice;
+use crate::nn::conv::{gather_tile, gather_tiles8, pack_fast_weights_i8, FastConvPlan, TILE_LANES};
 use crate::nn::tensor::Tensor;
 use crate::util::par::{num_threads, par_chunks_mut, par_chunks_states};
 use std::sync::Arc;
@@ -130,14 +131,18 @@ enum QKernel {
         oc: usize,
         /// per-group input channels (`desc.ic / desc.groups`)
         icg: usize,
-        /// quantized transformed weights, freq-major [T²][OC][IC/g]
-        /// (output channels contiguous per group)
-        wq: Vec<i8>,
+        /// quantized transformed weights pre-packed at build time into
+        /// the dispatched GEMM's panel layout: one
+        /// `packed_b_i8_len(OC/g, IC/g)` block per (frequency, group),
+        /// group-major — steady-state forwards touch only this
+        wqp: Vec<i8>,
         /// weight scale per (uv, oc) resolved from granularity
         w_scales: ScaleGroup,
         /// activation scale per uv resolved from granularity
         a_scales: ScaleGroup,
         a_bits: u32,
+        /// byte accounting for the packed panels (plan + process-wide)
+        _packed: PackedBytesGuard,
     },
     /// Spatially quantized conv: int8 per-tensor activations ×
     /// per-channel weights, executed by (grouped) nested loops or the
@@ -231,16 +236,24 @@ impl QConvLayer {
         );
         let a_scales = ScaleGroup::from_maxima(spec.a_gran, t2, 1, act_maxima, spec.a_bits);
         let wq = quantize_weights(&u, t2, oc, icg, &w_scales, spec.w_bits);
+        // pre-pack each (frequency, group) block into the dispatched
+        // integer GEMM's panel layout (plan-time, not per forward)
+        let groups = plan.desc.groups;
+        let blk = packed_b_i8_len(oc / groups, icg);
+        let mut wqp = vec![0i8; t2 * groups * blk];
+        pack_fast_weights_i8(&wq, oc, icg, groups, t2, &mut wqp);
+        let packed = PackedBytesGuard::register(&plan, wqp.len());
         QConvLayer {
             plan,
             bias,
             kernel: QKernel::TransformDomain {
                 oc,
                 icg,
-                wq,
+                wqp,
                 w_scales,
                 a_scales,
                 a_bits: spec.a_bits,
+                _packed: packed,
             },
         }
     }
@@ -321,8 +334,8 @@ impl QConvLayer {
         let dil = self.plan.desc.dilation;
         assert_eq!(dil, 1, "dilation is reserved; engines require dilation == 1");
         match &self.kernel {
-            QKernel::TransformDomain { oc, icg, wq, w_scales, a_scales, a_bits } => {
-                forward_transform_q(x, self, *oc, *icg, wq, w_scales, a_scales, *a_bits, ws, out)
+            QKernel::TransformDomain { oc, icg, wqp, w_scales, a_scales, a_bits, .. } => {
+                forward_transform_q(x, self, *oc, *icg, wqp, w_scales, a_scales, *a_bits, ws, out)
             }
             QKernel::Spatial { wq, oc, icg, r, w_scales, a_scale, via_ntt } => {
                 if *via_ntt {
@@ -351,7 +364,8 @@ fn quantize_weights(u: &[f32], t2: usize, oc: usize, ic: usize, scales: &ScaleGr
     wq
 }
 
-/// Per-worker scratch for the quantized transform-domain path.
+/// Per-worker scratch for the quantized transform-domain path (tile
+/// buffers lane-batched, [`TILE_LANES`] wide).
 struct QFastScratch {
     /// quantized V blocks, freq-major [T²][tiles][IC]
     vq: Vec<i8>,
@@ -371,7 +385,7 @@ fn forward_transform_q(
     layer: &QConvLayer,
     oc: usize,
     icg: usize,
-    wq: &[i8],
+    wqp: &[i8],
     w_scales: &ScaleGroup,
     a_scales: &ScaleGroup,
     a_bits: u32,
@@ -393,75 +407,86 @@ fn forward_transform_q(
     let tiles_y = oh.div_ceil(m);
     let tiles_x = ow.div_ceil(m);
     let n_tiles = tiles_y * tiles_x;
+    let ntg = n_tiles.div_ceil(TILE_LANES);
     let tt = t * t;
     let a_qmax = (1i32 << (a_bits - 1)) - 1;
+    let blk = packed_b_i8_len(ocg, icg);
+    assert!(wqp.len() >= tt * groups * blk, "packed quantized weights too small");
 
     let workers = num_threads().min(n).max(1);
     let mut states: Vec<QFastScratch> = (0..workers)
         .map(|_| QFastScratch {
             vq: ws.take_i8(tt * n_tiles * ic),
             pi: ws.take_i32(tt * n_tiles * oc),
-            tile: ws.take_f32(l * l),
-            tscr: ws.take_f32(t * l),
-            tv: ws.take_f32(tt),
-            prod: ws.take_f32(tt),
-            iscr: ws.take_f32(m * t),
-            ytile: ws.take_f32(m * m),
+            tile: ws.take_f32(l * l * TILE_LANES),
+            tscr: ws.take_f32(t * l * TILE_LANES),
+            tv: ws.take_f32(tt * TILE_LANES),
+            prod: ws.take_f32(tt * TILE_LANES),
+            iscr: ws.take_f32(m * t * TILE_LANES),
+            ytile: ws.take_f32(m * m * TILE_LANES),
         })
         .collect();
     par_chunks_states(&mut out.data, oc * oh * ow, &mut states, |st, ni, out_img| {
-        // 1) gather + transform + QUANTIZE tiles: Vq group-major
-        //    [T²][G][tiles][IC/g] (== [T²][tiles][IC] when groups == 1)
-        for ty in 0..tiles_y {
-            for tx in 0..tiles_x {
-                let tile_idx = ty * tiles_x + tx;
-                for c in 0..ic {
-                    let (gi, il) = (c / icg, c % icg);
-                    gather_tile(x, ni, c, ty, tx, m, l, pad, &mut st.tile);
-                    plan.transform_tile(&st.tile, &mut st.tscr, &mut st.tv);
-                    for uv in 0..tt {
-                        let s = a_scales.scale(uv, 0);
-                        let q = (st.tv[uv] / s).round() as i32;
-                        st.vq[((uv * groups + gi) * n_tiles + tile_idx) * icg + il] =
-                            q.clamp(-a_qmax, a_qmax) as i8;
+        // 1) lane-batched gather + transform + QUANTIZE tile groups:
+        //    Vq group-major [T²][G][tiles][IC/g]
+        //    (== [T²][tiles][IC] when groups == 1)
+        for tg in 0..ntg {
+            let base = tg * TILE_LANES;
+            let lanes = (n_tiles - base).min(TILE_LANES);
+            for c in 0..ic {
+                let (gi, il) = (c / icg, c % icg);
+                gather_tiles8(x, ni, c, base, lanes, tiles_x, m, l, pad, &mut st.tile);
+                plan.transform_tiles8(&st.tile, &mut st.tscr, &mut st.tv);
+                for uv in 0..tt {
+                    let s = a_scales.scale(uv, 0);
+                    let row = ((uv * groups + gi) * n_tiles + base) * icg + il;
+                    for lane in 0..lanes {
+                        let q = (st.tv[uv * TILE_LANES + lane] / s).round() as i32;
+                        st.vq[row + lane * icg] = q.clamp(-a_qmax, a_qmax) as i8;
                     }
                 }
             }
         }
-        // 2) integer per-(frequency, group) GEMM, i32 accumulation
-        //    (exact): PI[uv][g] = Vq[uv][g] · Wq[uv][g]ᵀ
+        // 2) dispatched integer per-(frequency, group) packed GEMM,
+        //    i32 accumulation (exact): PI[uv][g] = Vq[uv][g] · Wq[uv][g]ᵀ
         //    ([tiles×IC/g]·[IC/g×OC/g])
         for uv in 0..tt {
             for gi in 0..groups {
                 let vb = (uv * groups + gi) * n_tiles * icg;
-                let ub = (uv * oc + gi * ocg) * icg;
+                let ub = (uv * groups + gi) * blk;
                 let pb = (uv * groups + gi) * n_tiles * ocg;
                 let vblk = &st.vq[vb..vb + n_tiles * icg];
-                let ublk = &wq[ub..ub + ocg * icg];
+                let ublk = &wqp[ub..ub + blk];
                 let pblk = &mut st.pi[pb..pb + n_tiles * ocg];
-                gemm_nt_i8_i32(n_tiles, ocg, icg, vblk, ublk, pblk);
+                gemm_packed_i8_i32(n_tiles, ocg, icg, vblk, ublk, pblk);
             }
         }
-        // 3) dequantize + inverse transform + bias + scatter
+        // 3) lane-batched dequantize + inverse transform + bias + scatter
         for o in 0..oc {
             let (gi, ol) = (o / ocg, o % ocg);
             let b = if layer.bias.is_empty() { 0.0 } else { layer.bias[o] };
             let plane = &mut out_img[o * oh * ow..(o + 1) * oh * ow];
-            for ty in 0..tiles_y {
-                for tx in 0..tiles_x {
-                    let tile_idx = ty * tiles_x + tx;
-                    for uv in 0..tt {
-                        // dequantize: both operand scales
-                        let sa = a_scales.scale(uv, 0);
-                        st.prod[uv] = st.pi[((uv * groups + gi) * n_tiles + tile_idx) * ocg + ol]
-                            as f32
-                            * sa
-                            * w_scales.scale(uv, o);
+            for tg in 0..ntg {
+                let base = tg * TILE_LANES;
+                let lanes = (n_tiles - base).min(TILE_LANES);
+                for uv in 0..tt {
+                    // dequantize: both operand scales
+                    let sa = a_scales.scale(uv, 0);
+                    let sw = w_scales.scale(uv, o);
+                    let row = ((uv * groups + gi) * n_tiles + base) * ocg + ol;
+                    for lane in 0..lanes {
+                        st.prod[uv * TILE_LANES + lane] =
+                            st.pi[row + lane * ocg] as f32 * sa * sw;
                     }
-                    plan.inverse_tile(&st.prod, &mut st.iscr, &mut st.ytile);
+                }
+                plan.inverse_tiles8(&st.prod, &mut st.iscr, &mut st.ytile);
+                for lane in 0..lanes {
+                    let tile_idx = base + lane;
+                    let (ty, tx) = (tile_idx / tiles_x, tile_idx % tiles_x);
                     for i in 0..m.min(oh - ty * m) {
                         for j in 0..m.min(ow - tx * m) {
-                            plane[(ty * m + i) * ow + tx * m + j] = st.ytile[i * m + j] + b;
+                            plane[(ty * m + i) * ow + tx * m + j] =
+                                st.ytile[(i * m + j) * TILE_LANES + lane] + b;
                         }
                     }
                 }
@@ -502,11 +527,9 @@ fn forward_spatial_q(
     let oh = (h + 2 * pad - r) / stride + 1;
     let ow = (wid + 2 * pad - r) / stride + 1;
     assert_eq!(out.dims, [n, oc, oh, ow], "output shape mismatch: {:?}", out.dims);
-    // quantize input per-tensor
+    // quantize input per-tensor (dispatched SIMD quantizer)
     let mut xq = ws.take_i8(x.data.len());
-    for (q, &v) in xq.iter_mut().zip(&x.data) {
-        *q = a_scale.quantize(v) as i8;
-    }
+    quantize_i8_slice(&x.data, a_scale.scale, a_scale.qmax, &mut xq);
     par_chunks_mut(&mut out.data, oh * ow, |job, plane| {
         let (ni, o) = (job / oc, job % oc);
         let gi = o / ocg;
@@ -569,9 +592,7 @@ fn forward_spatial_ntt(
     let ow = wid + 2 * pad - r + 1;
     assert_eq!(out.dims, [n, oc, oh, ow], "output shape mismatch: {:?}", out.dims);
     let mut xq = ws.take_i8(x.data.len());
-    for (q, &v) in xq.iter_mut().zip(&x.data) {
-        *q = a_scale.quantize(v) as i8;
-    }
+    quantize_i8_slice(&x.data, a_scale.scale, a_scale.qmax, &mut xq);
     let mut acc = ws.take_i64(n * oc * oh * ow);
     ntt_corr2d_i8_into(&xq, n, ic, h, wid, wq, oc, r, pad, ws, &mut acc);
     for ni in 0..n {

@@ -179,6 +179,7 @@ fn model_through_selected_plans_matches_reference_numerics() {
                 Op::Conv {
                     params: ConvParams { weight: w, bias: vec![0.0; oc], stride: 1, pad: 1 },
                     plan,
+                    packed: None,
                     quantized: None,
                 },
                 vec![prev],

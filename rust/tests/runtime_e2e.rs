@@ -145,6 +145,7 @@ fn engine_server_steady_state_is_alloc_free() {
                 pad: 1,
             },
             plan: default_selector().plan(&desc).unwrap(),
+            packed: None,
             quantized: None,
         },
         vec![inp],

@@ -1,0 +1,184 @@
+//! SIMD↔scalar kernel-dispatch property tests (cross-layer).
+//!
+//! The kernel layer's contract is strong: every dispatch arm (AVX2 /
+//! NEON / scalar) computes the identical float sequence — one
+//! accumulator per output element, k ascending, no FMA contraction —
+//! so executor outputs must be **bit-identical** across arms (0 ULP;
+//! the int8 paths are exact integer arithmetic either way). These tests
+//! pin that equivalence end-to-end on odd shapes that exercise every
+//! remainder lane (panel width 8, micro-tile 4, int8 k-pairs), plus the
+//! dispatch controls themselves (`set_kernel_override`,
+//! `SFC_FORCE_SCALAR=1`).
+//!
+//! The override is process-global, and equality assertions hold under
+//! any arm, so a mutex only guards the tests that *assert which* kernel
+//! is active while they toggle it.
+
+use sfc::engine::{default_selector, ConvDesc, PackedWeights, QuantSpec, Workspace};
+use sfc::linalg::simd::{self, Kernel};
+use sfc::nn::Tensor;
+use sfc::quant::qconv::{collect_act_maxima, QCalib, QConvLayer};
+use sfc::util::Pcg32;
+use std::sync::Mutex;
+
+/// Serializes tests that toggle the process-wide kernel override.
+static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn rand_tensor(dims: &[usize], rng: &mut Pcg32, sigma: f64) -> Tensor {
+    let mut t = Tensor::zeros(dims);
+    rng.fill_gaussian(&mut t.data, sigma);
+    t
+}
+
+/// Run `f` once under the detected kernel and once with dispatch
+/// pinned to scalar, returning both results.
+fn both_arms<T>(mut f: impl FnMut() -> T) -> (T, T) {
+    simd::set_kernel_override(None);
+    let native = f();
+    simd::set_kernel_override(Some(Kernel::Scalar));
+    let scalar = f();
+    simd::set_kernel_override(None);
+    (native, scalar)
+}
+
+#[test]
+fn override_controls_dispatch_and_env_pins_scalar() {
+    let _g = lock();
+    simd::set_kernel_override(Some(Kernel::Scalar));
+    assert_eq!(simd::active_kernel(), Kernel::Scalar, "override must pin scalar");
+    simd::set_kernel_override(None);
+    assert_eq!(simd::active_kernel(), simd::detect(), "no override ⇒ detection");
+    // the CI scalar arm runs the whole suite under SFC_FORCE_SCALAR=1;
+    // detection (and therefore dispatch) must honor it
+    if std::env::var("SFC_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false) {
+        assert_eq!(simd::detect(), Kernel::Scalar);
+        assert_eq!(simd::active_kernel(), Kernel::Scalar);
+        assert_eq!(simd::kernel_name(), "scalar");
+    }
+}
+
+#[test]
+fn fast_conv_bit_identical_across_dispatch_arms() {
+    let _g = lock();
+    let sel = default_selector();
+    let mut rng = Pcg32::seeded(0x5151);
+    // odd spatial sizes + odd channel counts: tile-group remainders
+    // (n_tiles % 8 ≠ 0), panel remainders (ocg % 8 ≠ 0) and k
+    // remainders all exercised; dense and grouped.
+    for (ic, oc, groups, h, w) in
+        [(3usize, 5usize, 1usize, 11usize, 13usize), (6, 9, 3, 9, 7), (5, 5, 5, 14, 10)]
+    {
+        let d = ConvDesc::new(2, ic, oc, h, w, 3, 1, 1).with_groups(groups);
+        let x = rand_tensor(&[2, ic, h, w], &mut rng, 1.0);
+        let wt = rand_tensor(&[oc, ic / groups, 3, 3], &mut rng, 0.3);
+        let bias: Vec<f32> = (0..oc).map(|i| i as f32 * 0.05 - 0.1).collect();
+        for name in ["SFC-6(6x6,3x3)", "Wino(4x4,3x3)", "im2col-gemm"] {
+            let plan = sel.plan_named(name, &d).unwrap();
+            let (native, scalar) = both_arms(|| plan.run(&x, &wt, &bias));
+            assert_eq!(
+                native.data, scalar.data,
+                "{name} ic{ic} oc{oc} g{groups}: SIMD and scalar arms must be bit-identical"
+            );
+            // the pre-packed datapath agrees too, on both arms
+            let packed = PackedWeights::pack(&plan, &wt);
+            let (pn, ps) = both_arms(|| {
+                let mut ws = Workspace::new();
+                let mut out = Tensor::zeros(&plan.out_dims(&x, &wt));
+                plan.run_packed_into(&x, &wt, &packed, &bias, &mut ws, &mut out);
+                out
+            });
+            assert_eq!(pn.data, native.data, "{name}: packed vs per-call path");
+            assert_eq!(ps.data, native.data, "{name}: packed scalar arm");
+        }
+    }
+}
+
+#[test]
+fn int8_transform_path_bit_identical_across_dispatch_arms() {
+    let _g = lock();
+    let sel = default_selector();
+    let mut rng = Pcg32::seeded(0x5152);
+    // icg = 3 (odd k ⇒ the zero-padded k-pair tail), ocg = 5 (panel
+    // remainder), 13×11 (tile-group remainder)
+    for (ic, oc, groups) in [(3usize, 5usize, 1usize), (6, 4, 2)] {
+        let d = ConvDesc::new(1, ic, oc, 13, 11, 3, 1, 1)
+            .with_groups(groups)
+            .with_quant(QuantSpec::transform_default(8));
+        let x = rand_tensor(&[1, ic, 13, 11], &mut rng, 1.0);
+        let wt = rand_tensor(&[oc, ic / groups, 3, 3], &mut rng, 0.3);
+        let plan = sel.plan_named("SFC-6(6x6,3x3)", &d).unwrap();
+        let maxima = collect_act_maxima(&x, plan.fast_plan().unwrap(), 1);
+        let q = QConvLayer::from_plan(plan, &wt, vec![0.1; oc], &QCalib::TransformMaxima(&maxima));
+        let (native, scalar) = both_arms(|| q.forward(&x));
+        assert_eq!(
+            native.data, scalar.data,
+            "int8 ⊙ is exact integer arithmetic: arms must agree to the bit (g={groups})"
+        );
+    }
+}
+
+#[test]
+fn spatial_int8_quantize_bit_identical_across_dispatch_arms() {
+    let _g = lock();
+    let sel = default_selector();
+    let mut rng = Pcg32::seeded(0x5153);
+    let d = ConvDesc::new(1, 3, 4, 10, 10, 3, 1, 1).with_quant(QuantSpec::spatial_default(8));
+    let x = rand_tensor(&[1, 3, 10, 10], &mut rng, 1.0);
+    let wt = rand_tensor(&[4, 3, 3, 3], &mut rng, 0.3);
+    let plan = sel.plan_named("direct", &d).unwrap();
+    let q = QConvLayer::from_plan(plan, &wt, vec![], &QCalib::MaxAbs(x.max_abs()));
+    let (native, scalar) = both_arms(|| q.forward(&x));
+    assert_eq!(native.data, scalar.data, "vectorized input quantize must match scalar");
+}
+
+#[test]
+fn quantizer_matches_scalar_on_rounding_edges() {
+    let _g = lock();
+    // half-way points, sign flips, clamp range and a long random tail —
+    // the exact cases where a round-to-nearest-even shortcut would
+    // diverge from f32::round (half away from zero)
+    let mut vals: Vec<f32> = vec![
+        0.0, 0.5, -0.5, 1.5, -1.5, 2.5, -2.5, 126.5, -126.5, 127.49, -127.49, 200.0, -200.0,
+        0.49999997, -0.49999997, 63.5, -63.5,
+    ];
+    let mut rng = Pcg32::seeded(0x5154);
+    let mut tail = vec![0f32; 997]; // odd length: SIMD tail path runs
+    rng.fill_gaussian(&mut tail, 40.0);
+    vals.extend(tail);
+    for scale in [1.0f32, 0.37, 0.013] {
+        let scaled: Vec<f32> = vals.iter().map(|v| v * scale).collect();
+        let mut want = vec![0i8; scaled.len()];
+        simd::quantize_i8_slice_scalar(&scaled, scale, 127, &mut want);
+        let (native, scalar) = both_arms(|| {
+            let mut got = vec![0i8; scaled.len()];
+            simd::quantize_i8_slice(&scaled, scale, 127, &mut got);
+            got
+        });
+        assert_eq!(native, want, "scale {scale}: dispatched quantize drifted from scalar");
+        assert_eq!(scalar, want, "scale {scale}: scalar arm must be the reference");
+    }
+}
+
+#[test]
+fn model_forward_identical_across_dispatch_arms_with_prepack() {
+    let _g = lock();
+    use sfc::nn::model::{mobilenet_cfg, mobilenet_random};
+    let mut m = mobilenet_random(&mobilenet_cfg(), 21, 10);
+    let added = m.prepack_weights();
+    assert!(added > 0, "the depthwise model has fast-conv layers to pre-pack");
+    assert_eq!(m.prepack_weights(), 0, "prepack must be idempotent");
+    let mut rng = Pcg32::seeded(22);
+    let x = rand_tensor(&[2, 3, 32, 32], &mut rng, 1.0);
+    let (native, scalar) = both_arms(|| {
+        let mut ws = Workspace::new();
+        m.forward_ws(&x, &mut ws)
+    });
+    assert_eq!(native.data, scalar.data, "whole-model forward must not depend on the arm");
+    // and the packed forward matches the unpacked forward_all reference
+    let want = m.forward_all(&x).pop().unwrap();
+    assert_eq!(native.data, want.data, "pre-packed forward_ws vs forward_all");
+}

@@ -130,6 +130,7 @@ fn toy_model(rng: &mut Pcg32) -> Model {
         Op::Conv {
             params: ConvParams { weight: w1, bias: vec![0.1; 3], stride: 1, pad: 1 },
             plan: sel.plan_named("SFC-6(6x6,3x3)", &d1).unwrap(),
+            packed: None,
             quantized: None,
         },
         vec![inp],
@@ -143,6 +144,7 @@ fn toy_model(rng: &mut Pcg32) -> Model {
         Op::Conv {
             params: ConvParams { weight: w2, bias: vec![0.0; 8], stride: 1, pad: 1 },
             plan: Arc::new(ConvPlan::direct(d2)),
+            packed: None,
             quantized: None,
         },
         vec![add],
