@@ -40,13 +40,22 @@ where
 /// or the pure-Rust engine stack with `--runner engine`), serve a stream
 /// of requests from the SynthImage test split, report accuracy, latency
 /// percentiles, throughput and workspace stats (EXPERIMENTS.md §E2E).
+/// `--runner engine --quant 8` serves the compiled int8 model: PTQ over
+/// the calibration split (spatial direct scheme on every conv), then
+/// the graph compiler fuses epilogues and installs the int8 dataflow —
+/// still under the zero-steady-state-alloc workspace guarantee.
 pub fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
     let data_dir = opts.get("data-dir").map(|s| s.as_str()).unwrap_or("artifacts");
     let default_hlo = format!("{data_dir}/resnet18_b8.hlo.txt");
     let hlo = opts.get("hlo").map(|s| s.as_str()).unwrap_or(&default_hlo);
     let requests: usize = parse_opt(opts, "requests", 256)?;
     let batch: usize = parse_opt(opts, "batch", 8)?;
+    let quant_bits: u32 = parse_opt(opts, "quant", 0)?;
     let runner = opts.get("runner").map(|s| s.as_str()).unwrap_or("pjrt");
+    anyhow::ensure!(
+        quant_bits == 0 || runner == "engine",
+        "--quant requires --runner engine (the PJRT artifact is fixed-precision)"
+    );
 
     let (images, labels) = crate::exp::load_split(data_dir, "test", requests)?;
     let cfg = ServerConfig { batch_size: batch, queue_depth: 64, batch_timeout_ms: 2 };
@@ -60,11 +69,21 @@ pub fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
         "engine" => {
             let model_name =
                 opts.get("model").map(|s| s.as_str()).unwrap_or("resnet18").to_string();
-            println!("loading {model_name} weights from {data_dir} (batch {batch}) ...");
+            let scheme = if quant_bits > 0 { format!("int{quant_bits}") } else { "f32".into() };
+            println!("loading {model_name} weights from {data_dir} (batch {batch}, {scheme}) ...");
             let data_dir = data_dir.to_string();
             Server::start(
                 move || {
-                    let m = crate::exp::load_model(&data_dir, &model_name)?;
+                    let mut m = crate::exp::load_model(&data_dir, &model_name)?;
+                    if quant_bits > 0 {
+                        let (calib, _) =
+                            crate::exp::load_split(&data_dir, "train", crate::exp::calib_n())?;
+                        let cfg = crate::quant::QuantConfig::direct_default(quant_bits);
+                        let done = crate::quant::quantize_model(&mut m, &calib, &cfg);
+                        println!("quantized {} conv layers (spatial int{quant_bits})", done.len());
+                    }
+                    // from_model compiles the graph (epilogue fusion +
+                    // int8 dataflow) and pre-packs float weights
                     Ok(crate::runtime::EngineExecutor::from_model(m, dims, 10))
                 },
                 cfg,

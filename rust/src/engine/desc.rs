@@ -13,6 +13,50 @@
 
 use crate::nn::model::ConvShape;
 use crate::quant::Granularity;
+use anyhow::{bail, Result};
+
+/// A fused output epilogue applied inside the executors' scatter/output
+/// loops (the graph compiler's conv+bias+ReLU fusion), instead of as a
+/// separate full pass over the activation tensor. Part of [`ConvDesc`]
+/// — and therefore of the plan-cache key — so fused and unfused plans
+/// for one geometry never collide.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Epilogue {
+    /// no epilogue: the executor writes `y + bias` as-is
+    #[default]
+    None,
+    /// clamp negatives at output-write time: `max(0, y + bias)`,
+    /// bit-identical to a separate ReLU pass over the unfused output
+    Relu,
+}
+
+impl Epilogue {
+    /// Apply the epilogue to one output value. The ReLU arm uses the
+    /// same `v < 0.0` comparison as the graph's standalone ReLU kernel,
+    /// so fused and unfused results agree to the bit (including the
+    /// `-0.0` corner, which both leave untouched).
+    #[inline]
+    pub fn apply(self, v: f32) -> f32 {
+        match self {
+            Epilogue::None => v,
+            Epilogue::Relu => {
+                if v < 0.0 {
+                    0.0
+                } else {
+                    v
+                }
+            }
+        }
+    }
+
+    /// Stable lower-case name for graph dumps and annotations.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Epilogue::None => "-",
+            Epilogue::Relu => "relu",
+        }
+    }
+}
 
 /// Quantization scheme for a conv (Eq. 17 / Table 4–5 axes): bit-widths
 /// and scale-group granularity for weights and activations.
@@ -98,7 +142,12 @@ pub struct ConvDesc {
     /// kernel dilation — **reserved**: carried in the descriptor (and
     /// its hash) so dilated support can land without a key migration,
     /// but every engine currently requires `dilation == 1`
+    /// ([`ConvDesc::ensure_undilated`] is the contextful gate every
+    /// engine's `plan` runs)
     pub dilation: usize,
+    /// fused output epilogue applied at output-write time (set by the
+    /// graph compiler's conv+ReLU fusion pass; every engine supports it)
+    pub epilogue: Epilogue,
     /// quantization scheme (`None` = float execution)
     pub quant: Option<QuantSpec>,
 }
@@ -129,6 +178,7 @@ impl ConvDesc {
             pad,
             groups: 1,
             dilation: 1,
+            epilogue: Epilogue::None,
             quant: None,
         };
         d.validate();
@@ -164,9 +214,34 @@ impl ConvDesc {
         assert_eq!(self.dilation, 1, "dilation is reserved; engines require dilation == 1");
     }
 
+    /// Contextful gate for the reserved `dilation` field: the fields
+    /// are public, so a descriptor mutated after construction can carry
+    /// `dilation != 1` into an engine — every engine's `plan` calls
+    /// this and reports the offending field by name instead of
+    /// silently accepting (and then ignoring) the dilation.
+    pub fn ensure_undilated(&self) -> Result<()> {
+        if self.dilation != 1 {
+            bail!(
+                "ConvDesc::dilation = {} is unsupported: the field is reserved and every \
+                 engine requires dilation == 1 (descriptor {:?})",
+                self.dilation,
+                self
+            );
+        }
+        Ok(())
+    }
+
     /// Same problem with a quantization scheme attached.
     pub fn with_quant(mut self, spec: QuantSpec) -> ConvDesc {
         self.quant = Some(spec);
+        self
+    }
+
+    /// Same problem with a fused output epilogue (the graph compiler's
+    /// conv+ReLU fusion attaches [`Epilogue::Relu`] here; the epilogue
+    /// participates in the plan-cache key).
+    pub fn with_epilogue(mut self, ep: Epilogue) -> ConvDesc {
+        self.epilogue = ep;
         self
     }
 
@@ -261,6 +336,7 @@ pub struct ConvDescBuilder {
     stride: usize,
     pad: usize,
     groups: usize,
+    epilogue: Epilogue,
     quant: Option<QuantSpec>,
 }
 
@@ -278,6 +354,7 @@ impl ConvDescBuilder {
             stride: 1,
             pad: 0,
             groups: 1,
+            epilogue: Epilogue::None,
             quant: None,
         }
     }
@@ -330,6 +407,12 @@ impl ConvDescBuilder {
         self
     }
 
+    /// Attach a fused output epilogue.
+    pub fn epilogue(mut self, ep: Epilogue) -> Self {
+        self.epilogue = ep;
+        self
+    }
+
     /// Finish: validates the assembled descriptor (panics on
     /// inconsistent geometry, e.g. a missing `hw` or indivisible
     /// groups).
@@ -346,6 +429,7 @@ impl ConvDescBuilder {
             pad: self.pad,
             groups: self.groups,
             dilation: 1,
+            epilogue: self.epilogue,
             quant: self.quant,
         };
         d.validate();
@@ -416,5 +500,32 @@ mod tests {
     #[should_panic(expected = "must divide")]
     fn indivisible_groups_panic() {
         let _ = ConvDesc::new(1, 6, 8, 16, 16, 3, 1, 1).with_groups(4);
+    }
+
+    #[test]
+    fn epilogue_distinguishes_descriptors_and_applies_relu() {
+        let a = ConvDesc::new(1, 3, 16, 32, 32, 3, 1, 1);
+        let b = a.with_epilogue(Epilogue::Relu);
+        assert_ne!(a, b, "epilogue must participate in the cache key");
+        let mut m: HashMap<ConvDesc, u32> = HashMap::new();
+        m.insert(a, 1);
+        m.insert(b, 2);
+        assert_eq!(m.len(), 2);
+        assert_eq!(Epilogue::Relu.apply(-3.0), 0.0);
+        assert_eq!(Epilogue::Relu.apply(2.5), 2.5);
+        assert_eq!(Epilogue::None.apply(-3.0), -3.0);
+        // the -0.0 corner: the standalone ReLU kernel's `v < 0.0` test
+        // leaves -0.0 untouched; the fused epilogue must match bitwise
+        assert_eq!(Epilogue::Relu.apply(-0.0).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn mutated_dilation_is_a_contextful_error() {
+        let mut d = ConvDesc::new(1, 3, 16, 32, 32, 3, 1, 1);
+        assert!(d.ensure_undilated().is_ok());
+        d.dilation = 2;
+        let err = d.ensure_undilated().unwrap_err().to_string();
+        assert!(err.contains("ConvDesc::dilation = 2"), "{err}");
+        assert!(err.contains("dilation == 1"), "{err}");
     }
 }

@@ -8,6 +8,7 @@
 //! entry point that runs entirely out of a caller [`Workspace`] — the
 //! historical allocating signatures remain as thin wrappers.
 
+use super::desc::Epilogue;
 use super::workspace::Workspace;
 use crate::algo::fft::fft_inplace;
 use crate::algo::ntt::{ntt_inplace, P};
@@ -32,6 +33,7 @@ pub fn conv2d_im2col_into(
     stride: usize,
     pad: usize,
     groups: usize,
+    ep: Epilogue,
     ws: &mut Workspace,
     out: &mut Tensor,
 ) {
@@ -91,10 +93,11 @@ pub fn conv2d_im2col_into(
             let oblk = &mut out_img[gi * ocg * npix..(gi + 1) * ocg * npix];
             gemm_packed_f32(ocg, npix, k, wblk, col, oblk);
         }
-        if !bias.is_empty() {
-            for (o, &b) in bias.iter().enumerate() {
+        if !bias.is_empty() || ep != Epilogue::None {
+            for o in 0..oc {
+                let b = if bias.is_empty() { 0.0 } else { bias[o] };
                 for v in &mut out_img[o * npix..(o + 1) * npix] {
-                    *v += b;
+                    *v = ep.apply(*v + b);
                 }
             }
         }
@@ -114,7 +117,7 @@ pub fn conv2d_im2col(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, pad: u
     let ow = (wid + 2 * pad - r) / stride + 1;
     let mut out = Tensor::zeros(&[n, oc, oh, ow]);
     let mut ws = Workspace::new();
-    conv2d_im2col_into(x, w, bias, stride, pad, ic / icg, &mut ws, &mut out);
+    conv2d_im2col_into(x, w, bias, stride, pad, ic / icg, Epilogue::None, &mut ws, &mut out);
     out
 }
 
@@ -166,6 +169,7 @@ pub fn conv2d_fft_into(
     w: &Tensor,
     bias: &[f32],
     pad: usize,
+    ep: Epilogue,
     ws: &mut Workspace,
     out: &mut Tensor,
 ) {
@@ -252,8 +256,9 @@ pub fn conv2d_fft_into(
             let plane = &mut out_img[o * oh * ow..(o + 1) * oh * ow];
             for oy in 0..oh {
                 for ox in 0..ow {
-                    plane[oy * ow + ox] =
-                        (st.acc_re[(oy + r - 1) * sw + (ox + r - 1)] * inv_scale) as f32 + b;
+                    plane[oy * ow + ox] = ep.apply(
+                        (st.acc_re[(oy + r - 1) * sw + (ox + r - 1)] * inv_scale) as f32 + b,
+                    );
                 }
             }
         }
@@ -278,7 +283,7 @@ pub fn conv2d_fft(x: &Tensor, w: &Tensor, bias: &[f32], pad: usize) -> Tensor {
     let ow = wid + 2 * pad - r + 1;
     let mut out = Tensor::zeros(&[n, oc, oh, ow]);
     let mut ws = Workspace::new();
-    conv2d_fft_into(x, w, bias, pad, &mut ws, &mut out);
+    conv2d_fft_into(x, w, bias, pad, Epilogue::None, &mut ws, &mut out);
     out
 }
 
@@ -452,6 +457,7 @@ pub fn conv2d_ntt_int8_into(
     w: &Tensor,
     bias: &[f32],
     pad: usize,
+    ep: Epilogue,
     ws: &mut Workspace,
     out: &mut Tensor,
 ) {
@@ -491,7 +497,7 @@ pub fn conv2d_ntt_int8_into(
             let src = &acc[(ni * oc + o) * oh * ow..(ni * oc + o + 1) * oh * ow];
             let dst = out.plane_mut(ni, o);
             for (d, &a) in dst.iter_mut().zip(src) {
-                *d = a as f32 * deq + b;
+                *d = ep.apply(a as f32 * deq + b);
             }
         }
     }
@@ -508,7 +514,7 @@ pub fn conv2d_ntt_int8(x: &Tensor, w: &Tensor, bias: &[f32], pad: usize) -> Tens
     let ow = wid + 2 * pad - r + 1;
     let mut out = Tensor::zeros(&[n, oc, oh, ow]);
     let mut ws = Workspace::new();
-    conv2d_ntt_int8_into(x, w, bias, pad, &mut ws, &mut out);
+    conv2d_ntt_int8_into(x, w, bias, pad, Epilogue::None, &mut ws, &mut out);
     out
 }
 

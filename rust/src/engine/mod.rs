@@ -25,7 +25,7 @@ pub mod select;
 pub mod workspace;
 
 pub use cache::{global as global_plan_cache, PlanCache, PlanKey};
-pub use desc::{ConvDesc, ConvDescBuilder, QuantSpec};
+pub use desc::{ConvDesc, ConvDescBuilder, Epilogue, QuantSpec};
 pub use select::{default_selector, AutotuneCfg, Policy, Selector, TuneEntry};
 pub use workspace::Workspace;
 
@@ -286,6 +286,7 @@ impl ConvPlan {
                     p,
                     self.desc.pad,
                     self.desc.groups,
+                    self.desc.epilogue,
                     ws,
                     out,
                 );
@@ -310,6 +311,7 @@ impl ConvPlan {
         // fields are public, so re-check before running an undilated
         // kernel on a descriptor someone mutated.
         assert_eq!(self.desc.dilation, 1, "dilation is reserved; engines require dilation == 1");
+        let ep = self.desc.epilogue;
         match &self.kernel {
             PlanKernel::Direct => conv2d_direct_grouped_into(
                 x,
@@ -318,6 +320,7 @@ impl ConvPlan {
                 self.desc.stride,
                 self.desc.pad,
                 self.desc.groups,
+                ep,
                 out,
             ),
             PlanKernel::Im2col => exec::conv2d_im2col_into(
@@ -327,15 +330,16 @@ impl ConvPlan {
                 self.desc.stride,
                 self.desc.pad,
                 self.desc.groups,
+                ep,
                 ws,
                 out,
             ),
             PlanKernel::Fast(p) => {
-                conv2d_fast_into(x, w, bias, p, self.desc.pad, self.desc.groups, ws, out)
+                conv2d_fast_into(x, w, bias, p, self.desc.pad, self.desc.groups, ep, ws, out)
             }
             // whole-image frequency engines only plan dense descriptors
-            PlanKernel::Fft => exec::conv2d_fft_into(x, w, bias, self.desc.pad, ws, out),
-            PlanKernel::Ntt => exec::conv2d_ntt_int8_into(x, w, bias, self.desc.pad, ws, out),
+            PlanKernel::Fft => exec::conv2d_fft_into(x, w, bias, self.desc.pad, ep, ws, out),
+            PlanKernel::Ntt => exec::conv2d_ntt_int8_into(x, w, bias, self.desc.pad, ep, ws, out),
         }
     }
 
@@ -461,6 +465,7 @@ impl ConvEngine for DirectEngine {
     }
 
     fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
+        d.ensure_undilated()?;
         Ok(ConvPlan::direct(*d))
     }
 
@@ -492,6 +497,7 @@ impl ConvEngine for Im2colEngine {
     }
 
     fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
+        d.ensure_undilated()?;
         Ok(ConvPlan::new(self.name(), *d, PlanKernel::Im2col))
     }
 
@@ -554,6 +560,7 @@ impl ConvEngine for BilinearEngine {
     }
 
     fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
+        d.ensure_undilated()?;
         if !self.supports(d) {
             bail!("{} does not support descriptor {:?}", self.name(), d);
         }
@@ -608,6 +615,7 @@ impl ConvEngine for FftEngine {
     }
 
     fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
+        d.ensure_undilated()?;
         if !self.supports(d) {
             bail!("FFT engine does not support descriptor {:?}", d);
         }
@@ -674,6 +682,7 @@ impl ConvEngine for NttEngine {
     }
 
     fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
+        d.ensure_undilated()?;
         if !self.supports(d) {
             bail!("NTT engine does not support descriptor {:?}", d);
         }

@@ -18,8 +18,11 @@
 
 use crate::engine::{default_selector, ConvDesc, ConvPlan, PackedWeights, QuantSpec, Workspace};
 use crate::linalg::simd::{self, Kernel};
-use crate::nn::Tensor;
+use crate::nn::graph::Op;
+use crate::nn::model::{mobilenet_cfg, mobilenet_random};
+use crate::nn::{Model, Tensor};
 use crate::quant::qconv::{collect_act_maxima, QCalib, QConvLayer};
+use crate::quant::{quantize_model, QuantConfig};
 use crate::util::Pcg32;
 use anyhow::{Context, Result};
 use std::sync::Arc;
@@ -145,6 +148,75 @@ fn time_qconv(q: &QConvLayer, x: &Tensor, cfg: &BenchCfg) -> (f64, u64) {
     (median_ns(&mut samples), ws.heap_allocs() - allocs_before)
 }
 
+/// Group-aware conv MACs of a whole model for one image, read from the
+/// conv nodes' plan descriptors.
+fn model_macs(m: &Model) -> u64 {
+    m.nodes
+        .iter()
+        .filter_map(|n| match &n.op {
+            Op::Conv { plan, .. } => Some(plan.desc.macs() / plan.desc.batch.max(1) as u64),
+            _ => None,
+        })
+        .sum()
+}
+
+/// End-to-end compiled-model rows (schema v4): the mini MobileNet
+/// through `Model::forward_ws` over one reused workspace, once
+/// float-compiled (fused epilogues + pre-packed weights) and once
+/// int8-compiled (spatial int8 PTQ + the graph compiler's int8
+/// dataflow, so consecutive quantized convs exchange int8 codes with
+/// no f32 round trip). The shape label carries the batch; gflops uses
+/// the group-aware conv MACs of the whole stack.
+pub fn run_model_e2e(cfg: &BenchCfg) -> Result<Vec<BenchRow>> {
+    let batch = 2usize;
+    let mut rng = Pcg32::seeded(0xE2E);
+    let mut x = Tensor::zeros(&[batch, 3, 32, 32]);
+    rng.fill_gaussian(&mut x.data, 1.0);
+    let mut rows = Vec::new();
+    for (engine, int8) in [("e2e-f32-compiled", false), ("e2e-int8-compiled", true)] {
+        let mut m = mobilenet_random(&mobilenet_cfg(), 11, 10);
+        if int8 {
+            // plain max-abs calibration: the bench measures the
+            // datapath, not the PTQ quality
+            let mut qcfg = QuantConfig::direct_default(8);
+            qcfg.adaquant = false;
+            quantize_model(&mut m, &x, &qcfg);
+        }
+        let flops = 2.0 * model_macs(&m) as f64 * batch as f64;
+        m.compile();
+        m.prepack_weights();
+        let mut ws = Workspace::new();
+        for _ in 0..cfg.warmup.max(1) {
+            let y = m.forward_ws(&x, &mut ws);
+            ws.give_f32(y.data);
+        }
+        let allocs_before = ws.heap_allocs();
+        let mut samples = Vec::with_capacity(cfg.iters.max(1));
+        for _ in 0..cfg.iters.max(1) {
+            let t0 = Instant::now();
+            let y = m.forward_ws(&x, &mut ws);
+            std::hint::black_box(&y.data);
+            ws.give_f32(y.data);
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let ns = median_ns(&mut samples);
+        let row = BenchRow {
+            shape: format!("mobilenet-32x32-b{batch}"),
+            engine: engine.to_string(),
+            ns_per_call: ns,
+            gflops: flops / ns.max(1.0),
+            workspace_bytes: 0,
+            ws_heap_allocs_steady: ws.heap_allocs() - allocs_before,
+        };
+        println!(
+            "  {:<18} {:>12.0} ns/model {:>8.2} GFLOP/s  steady allocs {}",
+            row.engine, row.ns_per_call, row.gflops, row.ws_heap_allocs_steady
+        );
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
 /// Run the snapshot; returns every measured row.
 pub fn run_bench(cfg: &BenchCfg) -> Result<Vec<BenchRow>> {
     let sel = default_selector();
@@ -200,6 +272,13 @@ pub fn run_bench(cfg: &BenchCfg) -> Result<Vec<BenchRow>> {
                 rows.push(row);
             }
         }
+    }
+    if !cfg.quick {
+        // end-to-end compiled-model rows (f32 + int8 MobileNet through
+        // the graph compiler) — the saved passes of the fused/int8
+        // dataflow show up in the perf trajectory
+        println!("\n=== mobilenet e2e (compiled graph, batch 2) ===");
+        rows.extend(run_model_e2e(cfg)?);
     }
     Ok(rows)
 }
@@ -267,7 +346,12 @@ pub fn run_speedup(cfg: &BenchCfg) -> Result<Vec<SpeedupRow>> {
 /// v3: added the top-level `kernel` dispatch-arm field and the
 /// scalar-vs-SIMD `speedup` block; float cells measure the pre-packed
 /// `run_packed_into` datapath.
-pub const BENCH_SCHEMA_VERSION: u32 = 3;
+/// v4: added the end-to-end compiled-model rows (shape
+/// `mobilenet-32x32-b2`, engines `e2e-f32-compiled` /
+/// `e2e-int8-compiled`): whole-model `Model::forward_ws` of the
+/// pass-pipeline-compiled graph, int8 row running the requantized
+/// int8 dataflow between consecutive quantized convs.
+pub const BENCH_SCHEMA_VERSION: u32 = 4;
 
 /// Serialize rows as the BENCH_conv.json snapshot (no serde in this
 /// image — the format is flat enough to emit by hand).
@@ -424,6 +508,23 @@ mod tests {
                 assert_eq!(r.shape, "28x28x32->32", "quick mode: dense 3×3 only");
                 assert!(r.scalar_ns_per_call > 0.0 && r.ns_per_call > 0.0, "{}", r.engine);
             }
+        }
+    }
+
+    #[test]
+    fn model_e2e_rows_measure_compiled_f32_and_int8() {
+        let rows = run_model_e2e(&BenchCfg { iters: 1, warmup: 1, quick: true }).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().any(|r| r.engine == "e2e-f32-compiled"));
+        assert!(rows.iter().any(|r| r.engine == "e2e-int8-compiled"));
+        for r in &rows {
+            assert!(r.ns_per_call > 0.0 && r.gflops > 0.0, "{}", r.engine);
+            assert_eq!(
+                r.ws_heap_allocs_steady, 0,
+                "{} must be alloc-free after warm-up",
+                r.engine
+            );
+            assert_eq!(r.shape, "mobilenet-32x32-b2");
         }
     }
 

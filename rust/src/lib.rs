@@ -36,7 +36,14 @@
 //!   layers execute through engine plans (`Model::forward_ws` recycles
 //!   activations through a per-forward workspace), quantized layers
 //!   through [`quant::qconv::QConvLayer`] built from the same plans —
-//!   grouped and depthwise included.
+//!   grouped and depthwise included. [`nn::passes`] is the graph
+//!   compiler ([`nn::Model::compile`], `sfc graph`): conv+bias+ReLU
+//!   epilogue fusion (the [`engine::Epilogue`] carried on descriptors
+//!   and applied inside executor output loops), Add+ReLU fusion,
+//!   dead-node elimination, and the int8-dataflow pass that keeps
+//!   activations in int8 ([`quant::QTensor`]) between consecutive
+//!   spatially-quantized convs via per-channel fixed-point
+//!   requantization ([`quant::Requant`], ENGINE.md §Graph compilation).
 //! * [`bops`] / [`error`] / [`fpga`] — the analytical models: §6 BOPs
 //!   (feeding the engine cost models), Table-1 numerical error, Table-3
 //!   FPGA accelerator comparison.

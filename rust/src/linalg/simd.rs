@@ -169,6 +169,71 @@ pub fn quantize_i8_slice(src: &[f32], scale: f32, qmax: i32, dst: &mut [i8]) {
 }
 
 // ---------------------------------------------------------------------
+// Requantize: dst[i] = clamp(fixedpoint((acc[i] + bias_q) · m0 · 2^-(31+shift)), lo, hi)
+// ---------------------------------------------------------------------
+
+/// The exact fixed-point requantization primitive shared by the scalar
+/// and SIMD arms (and by [`crate::quant::Requant::apply`]): multiply
+/// the i32 accumulator by the q31 mantissa `m0`, then shift right by
+/// `31 + shift` rounding half away from zero — the same rounding
+/// convention as [`quantize_i8_slice`]. `31 + shift` must be in
+/// `1..=62` (the [`crate::quant::Requant`] constructor guarantees it).
+#[inline]
+pub fn requant_one(acc: i32, m0: i32, shift: i32) -> i32 {
+    debug_assert!((1..=62).contains(&(31 + shift)), "requant shift out of range");
+    let prod = acc as i64 * m0 as i64;
+    let ts = (31 + shift) as u32;
+    let round = 1i64 << (ts - 1);
+    let v = if prod >= 0 { (prod + round) >> ts } else { -((-prod + round) >> ts) };
+    v as i32
+}
+
+/// Scalar int8 requantizer: add the accumulator-scale quantized bias,
+/// apply the per-channel fixed-point multiplier ([`requant_one`]) and
+/// clamp to `[lo, hi]` (`lo == 0` is the int8-domain fused ReLU).
+#[allow(clippy::too_many_arguments)]
+pub fn requant_i8_slice_scalar(
+    acc: &[i32],
+    bias_q: i32,
+    m0: i32,
+    shift: i32,
+    lo: i32,
+    hi: i32,
+    dst: &mut [i8],
+) {
+    assert_eq!(acc.len(), dst.len());
+    assert!((i8::MIN as i32..=i8::MAX as i32).contains(&lo) && hi <= i8::MAX as i32 && lo <= hi);
+    for (d, &a) in dst.iter_mut().zip(acc) {
+        *d = requant_one(a.wrapping_add(bias_q), m0, shift).clamp(lo, hi) as i8;
+    }
+}
+
+/// Dispatched int8 requantizer — the integer output stage of the
+/// compiled int8 dataflow (see ENGINE.md §Graph compilation). Bit-
+/// identical to [`requant_i8_slice_scalar`] under every dispatch arm
+/// (the AVX2 arm computes the same 64-bit products and the same
+/// round-half-away-from-zero shift; NEON currently falls back to
+/// scalar, like the quantizer).
+#[allow(clippy::too_many_arguments)]
+pub fn requant_i8_slice(
+    acc: &[i32],
+    bias_q: i32,
+    m0: i32,
+    shift: i32,
+    lo: i32,
+    hi: i32,
+    dst: &mut [i8],
+) {
+    assert_eq!(acc.len(), dst.len());
+    assert!((i8::MIN as i32..=i8::MAX as i32).contains(&lo) && hi <= i8::MAX as i32 && lo <= hi);
+    match active_kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::requant_i8(acc, bias_q, m0, shift, lo, hi, dst) },
+        _ => requant_i8_slice_scalar(acc, bias_q, m0, shift, lo, hi, dst),
+    }
+}
+
+// ---------------------------------------------------------------------
 // AVX2 microkernels (x86_64)
 // ---------------------------------------------------------------------
 
@@ -363,6 +428,89 @@ pub(crate) mod avx2 {
         super::quantize_i8_slice_scalar(&src[i..], scale, qmax, &mut dst[i..]);
     }
 
+    /// Vectorized int8 requantizer: per lane, exactly the scalar
+    /// sequence of [`super::requant_i8_slice_scalar`] — wrap-add the
+    /// quantized bias, 64-bit product with the q31 mantissa, rounding
+    /// shift right half-away-from-zero, truncate to i32, clamp — so
+    /// SIMD and scalar arms are bit-identical.
+    ///
+    /// # Safety
+    /// Requires AVX2. Slice lengths and clamp bounds are asserted by
+    /// the dispatching wrapper.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn requant_i8(
+        acc: &[i32],
+        bias_q: i32,
+        m0: i32,
+        shift: i32,
+        lo: i32,
+        hi: i32,
+        dst: &mut [i8],
+    ) {
+        let n = acc.len();
+        let ts = 31 + shift;
+        debug_assert!((1..=62).contains(&ts));
+        let vb = _mm256_set1_epi32(bias_q);
+        let vm = _mm256_set1_epi32(m0);
+        let vround = _mm256_set1_epi64x(1i64 << (ts - 1));
+        let vts = _mm_cvtsi32_si128(ts);
+        let vlo = _mm256_set1_epi32(lo);
+        let vhi = _mm256_set1_epi32(hi);
+        let lowmask = _mm256_set1_epi64x(0xffff_ffff);
+        let fix = _mm256_setr_epi32(0, 4, 1, 5, 2, 6, 3, 7);
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let p = acc.as_ptr().add(i);
+            let q0 = requant8(p, vb, vm, vround, vts, vlo, vhi, lowmask);
+            let q1 = requant8(p.add(8), vb, vm, vround, vts, vlo, vhi, lowmask);
+            let q2 = requant8(p.add(16), vb, vm, vround, vts, vlo, vhi, lowmask);
+            let q3 = requant8(p.add(24), vb, vm, vround, vts, vlo, vhi, lowmask);
+            // clamped to [lo, hi] ⊆ i8 range ⇒ the saturating packs are inert
+            let p01 = _mm256_packs_epi32(q0, q1);
+            let p23 = _mm256_packs_epi32(q2, q3);
+            let packed = _mm256_permutevar8x32_epi32(_mm256_packs_epi16(p01, p23), fix);
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, packed);
+            i += 32;
+        }
+        super::requant_i8_slice_scalar(&acc[i..], bias_q, m0, shift, lo, hi, &mut dst[i..]);
+    }
+
+    /// One 8-lane requant step: returns 8 clamped i32 results.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn requant8(
+        p: *const i32,
+        vb: __m256i,
+        vm: __m256i,
+        vround: __m256i,
+        vts: __m128i,
+        vlo: __m256i,
+        vhi: __m256i,
+        lowmask: __m256i,
+    ) -> __m256i {
+        let x = _mm256_add_epi32(_mm256_loadu_si256(p as *const __m256i), vb);
+        // 64-bit products of the even / odd i32 lanes (sign-extended)
+        let pe = _mm256_mul_epi32(x, vm);
+        let po = _mm256_mul_epi32(_mm256_srli_epi64(x, 32), vm);
+        let re = rshift_round_i64(pe, vround, vts);
+        let ro = rshift_round_i64(po, vround, vts);
+        // interleave the truncated low-32 results back into lane order
+        let comb = _mm256_or_si256(_mm256_and_si256(re, lowmask), _mm256_slli_epi64(ro, 32));
+        _mm256_min_epi32(_mm256_max_epi32(comb, vlo), vhi)
+    }
+
+    /// 4×i64 rounding shift right, half away from zero (the scalar
+    /// `±((|p| + round) >> ts)` sequence, lane-parallel).
+    #[target_feature(enable = "avx2")]
+    unsafe fn rshift_round_i64(p: __m256i, vround: __m256i, vts: __m128i) -> __m256i {
+        let zero = _mm256_setzero_si256();
+        let isneg = _mm256_cmpgt_epi64(zero, p);
+        let absp = _mm256_blendv_epi8(p, _mm256_sub_epi64(zero, p), isneg);
+        let r = _mm256_srl_epi64(_mm256_add_epi64(absp, vround), vts);
+        _mm256_blendv_epi8(r, _mm256_sub_epi64(zero, r), isneg)
+    }
+
     /// One 8-lane quantize step: divide, round half-away-from-zero
     /// (trunc + step when the exactly-representable fraction reaches
     /// 0.5), clamp to ±qmax, convert (integral input ⇒ exact).
@@ -510,5 +658,34 @@ mod tests {
         quantize_i8_slice(&src, 0.21, 127, &mut a);
         quantize_i8_slice_scalar(&src, 0.21, 127, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn requant_one_rounds_half_away_from_zero() {
+        // m0 = 2^30, shift = 0 → multiply by exactly 0.5
+        let (m0, shift) = (1i32 << 30, 0);
+        assert_eq!(requant_one(4, m0, shift), 2);
+        assert_eq!(requant_one(3, m0, shift), 2, "1.5 rounds away from zero");
+        assert_eq!(requant_one(-3, m0, shift), -2, "-1.5 rounds away from zero");
+        assert_eq!(requant_one(-4, m0, shift), -2);
+        assert_eq!(requant_one(0, m0, shift), 0);
+    }
+
+    #[test]
+    fn requant_slice_simd_bit_identical_to_scalar() {
+        // odd length exercises every remainder lane; values span signs
+        // and magnitudes around the clamp bounds
+        let acc: Vec<i32> = (0..1001i64)
+            .map(|i| (i * 2654435761 % 600_000_007 - 300_000_000) as i32)
+            .collect();
+        for (m0, shift, bias_q, lo) in
+            [(1_687_194_767i32, 12, 17, -127), (1_073_741_824, 0, -5, 0), (2_000_000_011, 25, 0, 0)]
+        {
+            let mut a = vec![0i8; acc.len()];
+            let mut b = vec![0i8; acc.len()];
+            requant_i8_slice(&acc, bias_q, m0, shift, lo, 127, &mut a);
+            requant_i8_slice_scalar(&acc, bias_q, m0, shift, lo, 127, &mut b);
+            assert_eq!(a, b, "m0 {m0} shift {shift}");
+        }
     }
 }

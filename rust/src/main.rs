@@ -31,6 +31,7 @@ fn main() -> Result<()> {
         "serve" => sfc::coordinator::cmd_serve(&opts),
         "autotune" => cmd_autotune(&opts),
         "bench" => cmd_bench(&opts),
+        "graph" => cmd_graph(&opts),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -92,17 +93,69 @@ perf snapshot (steady-state pre-packed run over a reused workspace):
               [--quick]
               per-shape, per-engine ns/call + GFLOP/s, the active kernel
               dispatch arm (avx2|neon|scalar; SFC_FORCE_SCALAR=1 pins
-              scalar) and a scalar-vs-SIMD speedup block on the dense
-              3x3 shapes; --json writes the machine-readable snapshot
-              tracked across PRs; --quick is the CI smoke subset
+              scalar), a scalar-vs-SIMD speedup block on the dense
+              3x3 shapes and end-to-end compiled-model rows (f32 + int8
+              MobileNet through the graph compiler, schema v4); --json
+              writes the machine-readable snapshot tracked across PRs;
+              --quick is the CI smoke subset
+
+graph compiler (pass pipeline debuggability):
+  graph       [--model resnet18|resnet34|resnet50|mobilenet] [--quant 8]
+              build the model (random weights), run Model::compile()
+              (conv+ReLU epilogue fusion, Add+ReLU fusion, dead-node
+              elimination, int8 dataflow) and print the compiled graph:
+              node, engine, fused epilogue, activation dtypes in/out and
+              requantization annotations; --quant N first runs spatial
+              intN PTQ on a synthetic calibration batch so the int8
+              chains are visible
 
 serving demo (L3 over PJRT artifacts, or --runner engine for the
 pure-Rust workspace-backed path):
   serve       [--hlo artifacts/resnet18_b8.hlo.txt] [--data-dir artifacts]
               [--requests 256] [--batch 8] [--runner pjrt|engine]
-              [--model resnet18]
+              [--model resnet18] [--quant 8]
+              (--quant N: PTQ + compiled int8 dataflow, engine runner)
 "#
     );
+}
+
+/// `sfc graph` — print the compiled graph with fusion/requant
+/// annotations (the pass-pipeline debugging view).
+fn cmd_graph(opts: &HashMap<String, String>) -> Result<()> {
+    use sfc::nn::model::{mobilenet_cfg, mobilenet_random, resnet_random};
+    use sfc::nn::Tensor;
+    use sfc::quant::{quantize_model, QuantConfig};
+    use sfc::util::Pcg32;
+
+    let model_name = opt(opts, "model", "resnet18");
+    let quant_bits: u32 = parse_opt(opts, "quant", 0)?;
+    let mut model = if model_name == "mobilenet" {
+        mobilenet_random(&mobilenet_cfg(), 1, 10)
+    } else {
+        resnet_random(&resnet_cfg_by_name(model_name)?, 1, 10)
+    };
+    if quant_bits > 0 {
+        // synthetic calibration batch: enough to exercise every scale
+        let mut calib = Tensor::zeros(&[4, 3, 32, 32]);
+        Pcg32::seeded(7).fill_gaussian(&mut calib.data, 1.0);
+        let done = quantize_model(&mut model, &calib, &QuantConfig::direct_default(quant_bits));
+        println!("PTQ: quantized {} conv layers (spatial int{quant_bits})", done.len());
+    }
+    let before = model.nodes.len();
+    let report = model.compile();
+    model.prepack_weights();
+    println!(
+        "compile: {} -> {} nodes · {} conv+relu fused · {} add+relu fused · {} dead removed · \
+         {} int8 links",
+        before,
+        model.nodes.len(),
+        report.conv_relu_fused,
+        report.add_relu_fused,
+        report.dead_removed,
+        report.int8_links
+    );
+    print!("{}", sfc::nn::passes::describe(&model));
+    Ok(())
 }
 
 fn opt<'a>(opts: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {

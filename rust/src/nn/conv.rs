@@ -13,7 +13,7 @@
 
 use super::tensor::Tensor;
 use crate::algo::Bilinear;
-use crate::engine::Workspace;
+use crate::engine::{Epilogue, Workspace};
 use crate::linalg::gemm::{
     gemm_packed_f32, pack_b_f32, pack_b_i8, packed_b_f32_len, packed_b_i8_len,
 };
@@ -322,7 +322,10 @@ impl FastConvPlan {
 /// channels of its group only (`groups == ic` is depthwise).
 /// Allocation-free: each output plane is accumulated in place by its
 /// worker. With `groups == 1` this is bit-identical to the historical
-/// dense kernel.
+/// dense kernel. The fused epilogue `ep` is applied at output-write
+/// time (bit-identical to a separate ReLU pass over the unfused
+/// output).
+#[allow(clippy::too_many_arguments)]
 pub fn conv2d_direct_grouped_into(
     x: &Tensor,
     w: &Tensor,
@@ -330,6 +333,7 @@ pub fn conv2d_direct_grouped_into(
     stride: usize,
     pad: usize,
     groups: usize,
+    ep: Epilogue,
     out: &mut Tensor,
 ) {
     let (n, ic, h, wid) = x.dims4();
@@ -372,7 +376,7 @@ pub fn conv2d_direct_grouped_into(
         }
         let b = if bias.is_empty() { 0.0 } else { bias[o] };
         for v in plane.iter_mut() {
-            *v += b;
+            *v = ep.apply(*v + b);
         }
     });
 }
@@ -387,7 +391,7 @@ pub fn conv2d_direct_into(
     pad: usize,
     out: &mut Tensor,
 ) {
-    conv2d_direct_grouped_into(x, w, bias, stride, pad, 1, out);
+    conv2d_direct_grouped_into(x, w, bias, stride, pad, 1, Epilogue::None, out);
 }
 
 /// Grouped direct correlation (allocating wrapper).
@@ -404,7 +408,7 @@ pub fn conv2d_direct_grouped(
     let oh = (h + 2 * pad - r) / stride + 1;
     let ow = (wid + 2 * pad - r) / stride + 1;
     let mut out = Tensor::zeros(&[n, oc, oh, ow]);
-    conv2d_direct_grouped_into(x, w, bias, stride, pad, groups, &mut out);
+    conv2d_direct_grouped_into(x, w, bias, stride, pad, groups, Epilogue::None, &mut out);
     out
 }
 
@@ -565,6 +569,7 @@ pub fn conv2d_fast_into(
     plan: &FastConvPlan,
     pad: usize,
     groups: usize,
+    ep: Epilogue,
     ws: &mut Workspace,
     out: &mut Tensor,
 ) {
@@ -591,7 +596,7 @@ pub fn conv2d_fast_into(
     }
     pack_fast_weights(&u, oc, icg, groups, tt, &mut up);
     ws.give_f32(u);
-    conv2d_fast_packed_into(x, &up, oc, icg, bias, plan, pad, groups, ws, out);
+    conv2d_fast_packed_into(x, &up, oc, icg, bias, plan, pad, groups, ep, ws, out);
     ws.give_f32(up);
 }
 
@@ -662,6 +667,7 @@ pub fn conv2d_fast_packed_into(
     plan: &FastConvPlan,
     pad: usize,
     groups: usize,
+    ep: Epilogue,
     ws: &mut Workspace,
     out: &mut Tensor,
 ) {
@@ -742,7 +748,7 @@ pub fn conv2d_fast_packed_into(
                     for i in 0..m.min(oh - ty * m) {
                         for j in 0..m.min(ow - tx * m) {
                             plane[(ty * m + i) * ow + tx * m + j] =
-                                st.ytile[(i * m + j) * TILE_LANES + lane] + b;
+                                ep.apply(st.ytile[(i * m + j) * TILE_LANES + lane] + b);
                         }
                     }
                 }
@@ -764,7 +770,7 @@ pub fn conv2d_fast(x: &Tensor, w: &Tensor, bias: &[f32], plan: &FastConvPlan, pa
     let ow = wid + 2 * pad - r + 1;
     let mut out = Tensor::zeros(&[n, oc, oh, ow]);
     let mut ws = Workspace::new();
-    conv2d_fast_into(x, w, bias, plan, pad, ic / icg, &mut ws, &mut out);
+    conv2d_fast_into(x, w, bias, plan, pad, ic / icg, Epilogue::None, &mut ws, &mut out);
     out
 }
 

@@ -13,6 +13,7 @@
 use super::tensor::Tensor;
 use crate::engine::{ConvPlan, PackedWeights, Workspace};
 use crate::quant::qconv::QConvLayer;
+use crate::quant::QTensor;
 use std::sync::Arc;
 
 /// One conv layer's parameters (BN already folded at export time).
@@ -62,6 +63,39 @@ pub enum Op {
     },
     /// Element-wise sum of the two inputs (residual join).
     Add,
+    /// Fused residual join: `max(0, a + b)` in one pass (produced by the
+    /// graph compiler's Add+ReLU fusion, bit-identical to `Add → Relu`).
+    AddRelu,
+}
+
+/// One node's activation value: a float tensor, or the int8 codes a
+/// requantizing conv produced for a downstream quantized conv (the
+/// compiled int8 dataflow — see [`crate::nn::passes`]).
+pub enum Act {
+    /// f32 activation
+    F32(Tensor),
+    /// int8 activation (codes + scale)
+    I8(QTensor),
+}
+
+impl Act {
+    /// Dimension sizes (NCHW for conv activations).
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Act::F32(t) => &t.dims,
+            Act::I8(q) => &q.dims,
+        }
+    }
+
+    /// The f32 tensor, panicking with context if the activation is
+    /// int8 (ops other than quantized convs require float inputs; the
+    /// compiler only routes int8 into quantized convs).
+    fn expect_f32(&self, name: &str) -> &Tensor {
+        match self {
+            Act::F32(t) => t,
+            Act::I8(_) => panic!("{name}: op requires an f32 input but got an int8 activation"),
+        }
+    }
 }
 
 /// One SSA node: an op applied to earlier nodes' outputs.
@@ -164,9 +198,34 @@ fn add_assign(t: &mut Tensor, b: &Tensor, name: &str) {
     }
 }
 
+/// The fused residual join: one pass computing `max(0, a + b)` —
+/// bit-identical to [`add_assign`] followed by [`relu_inplace`] (same
+/// `v < 0.0` comparison).
+fn add_relu_assign(t: &mut Tensor, b: &Tensor, name: &str) {
+    assert_eq!(t.dims, b.dims, "residual shape mismatch at {name}");
+    for (x, y) in t.data.iter_mut().zip(&b.data) {
+        let v = *x + y;
+        *x = if v < 0.0 { 0.0 } else { v };
+    }
+}
+
 /// A tensor whose buffer is checked out of the workspace (zeroed).
 fn ws_tensor(ws: &mut Workspace, dims: &[usize]) -> Tensor {
     Tensor::from_vec(dims, ws.take_f32(dims.iter().product()))
+}
+
+/// An int8 activation whose buffer is checked out of the workspace;
+/// the executor sets the scale from its requant stage.
+fn ws_qtensor(ws: &mut Workspace, dims: &[usize]) -> QTensor {
+    QTensor { data: ws.take_i8(dims.iter().product()), dims: dims.to_vec(), scale: 0.0 }
+}
+
+/// Return an activation's buffer to the workspace pool.
+fn give_act(ws: &mut Workspace, a: Act) {
+    match a {
+        Act::F32(t) => ws.give_f32(t.data),
+        Act::I8(q) => ws.give_i8(q.data),
+    }
 }
 
 impl Model {
@@ -191,6 +250,18 @@ impl Model {
             .collect()
     }
 
+    /// Run the graph compiler's pass pipeline over the model in place —
+    /// conv+ReLU epilogue fusion, Add+ReLU fusion into [`Op::AddRelu`],
+    /// dead-node elimination, and the int8-dataflow pass that installs
+    /// integer requantization between consecutive spatially-quantized
+    /// convs (see [`crate::nn::passes`]). Idempotent; bit-identical for
+    /// float graphs, and the serving entry point
+    /// (`EngineExecutor::from_model`) runs it before pre-packing
+    /// weights. Returns the pass report.
+    pub fn compile(&mut self) -> crate::nn::passes::CompileReport {
+        crate::nn::passes::compile(self)
+    }
+
     /// Pre-transform + pre-pack every float conv layer's weights once
     /// (plan time), so steady-state [`Model::forward_ws`] runs
     /// [`ConvPlan::run_packed_into`] over pre-packed operands only.
@@ -211,13 +282,17 @@ impl Model {
     }
 
     /// Forward pass; returns every node's activation (used by PTQ
-    /// calibration and the Fig.-3/Fig.-5 per-layer probes).
+    /// calibration and the Fig.-3/Fig.-5 per-layer probes). On a
+    /// compiled graph the execution follows the compiled dataflow
+    /// (fused epilogues, int8 links); int8 activations are dequantized
+    /// for the returned probe list only — the edges between quantized
+    /// convs stay integer.
     pub fn forward_all(&self, x: &Tensor) -> Vec<Tensor> {
-        let mut acts: Vec<Tensor> = Vec::with_capacity(self.nodes.len());
+        let mut ws = Workspace::new();
+        let mut acts: Vec<Act> = Vec::with_capacity(self.nodes.len());
         for node in &self.nodes {
-            let get = |i: usize| -> &Tensor { &acts[i] };
             let out = match &node.op {
-                Op::Input => x.clone(),
+                Op::Input => Act::F32(x.clone()),
                 Op::Conv { params, plan, quantized, .. } => {
                     debug_assert_eq!(
                         (params.stride, params.pad),
@@ -231,45 +306,83 @@ impl Model {
                         "weight grouping and plan descriptor disagree at {}",
                         node.name
                     );
-                    let inp = get(node.inputs[0]);
-                    if let Some(q) = quantized {
-                        q.forward(inp)
-                    } else {
-                        plan.run(inp, &params.weight, &params.bias)
+                    let inp = &acts[node.inputs[0]];
+                    match quantized {
+                        Some(q) => {
+                            let odims = q.out_dims_for(inp.dims());
+                            if q.produces_q() {
+                                let mut qt = QTensor {
+                                    data: vec![0i8; odims.iter().product()],
+                                    dims: odims,
+                                    scale: 0.0,
+                                };
+                                match inp {
+                                    Act::F32(t) => q.forward_into_q(t, &mut ws, &mut qt),
+                                    Act::I8(t) => q.forward_q_into_q(t, &mut ws, &mut qt),
+                                }
+                                Act::I8(qt)
+                            } else {
+                                let mut t = Tensor::zeros(&odims);
+                                match inp {
+                                    Act::F32(xt) => q.forward_into(xt, &mut ws, &mut t),
+                                    Act::I8(xt) => q.forward_q_into(xt, &mut ws, &mut t),
+                                }
+                                Act::F32(t)
+                            }
+                        }
+                        None => Act::F32(plan.run(
+                            inp.expect_f32(&node.name),
+                            &params.weight,
+                            &params.bias,
+                        )),
                     }
                 }
                 Op::Relu => {
-                    let mut t = get(node.inputs[0]).clone();
+                    let mut t = acts[node.inputs[0]].expect_f32(&node.name).clone();
                     relu_inplace(&mut t);
-                    t
+                    Act::F32(t)
                 }
                 Op::MaxPool2 => {
-                    let inp = get(node.inputs[0]);
+                    let inp = acts[node.inputs[0]].expect_f32(&node.name);
                     let mut t = Tensor::zeros(&maxpool2_dims(inp));
                     maxpool2_into(inp, &mut t);
-                    t
+                    Act::F32(t)
                 }
                 Op::GlobalAvgPool => {
-                    let inp = get(node.inputs[0]);
+                    let inp = acts[node.inputs[0]].expect_f32(&node.name);
                     let mut t = Tensor::zeros(&gap_dims(inp));
                     global_avg_pool_into(inp, &mut t);
-                    t
+                    Act::F32(t)
                 }
                 Op::Linear { weight, bias } => {
-                    let inp = get(node.inputs[0]);
+                    let inp = acts[node.inputs[0]].expect_f32(&node.name);
                     let mut t = Tensor::zeros(&linear_dims(inp, weight));
                     linear_into(inp, weight, bias, &mut t);
-                    t
+                    Act::F32(t)
                 }
                 Op::Add => {
-                    let mut t = get(node.inputs[0]).clone();
-                    add_assign(&mut t, get(node.inputs[1]), &node.name);
-                    t
+                    let mut t = acts[node.inputs[0]].expect_f32(&node.name).clone();
+                    add_assign(&mut t, acts[node.inputs[1]].expect_f32(&node.name), &node.name);
+                    Act::F32(t)
+                }
+                Op::AddRelu => {
+                    let mut t = acts[node.inputs[0]].expect_f32(&node.name).clone();
+                    add_relu_assign(
+                        &mut t,
+                        acts[node.inputs[1]].expect_f32(&node.name),
+                        &node.name,
+                    );
+                    Act::F32(t)
                 }
             };
             acts.push(out);
         }
-        acts
+        acts.into_iter()
+            .map(|a| match a {
+                Act::F32(t) => t,
+                Act::I8(q) => q.dequantize(),
+            })
+            .collect()
     }
 
     /// Forward pass returning logits (last node's output flattened to
@@ -310,12 +423,14 @@ impl Model {
             }
         }
         let mut input = Some(x);
-        let mut acts: Vec<Option<Tensor>> = (0..self.nodes.len()).map(|_| None).collect();
+        let mut acts: Vec<Option<Act>> = (0..self.nodes.len()).map(|_| None).collect();
         for (i, node) in self.nodes.iter().enumerate() {
             let out = match &node.op {
-                Op::Input => input
-                    .take()
-                    .expect("forward_ws_owned supports one Input node; use forward_ws"),
+                Op::Input => Act::F32(
+                    input
+                        .take()
+                        .expect("forward_ws_owned supports one Input node; use forward_ws"),
+                ),
                 Op::Conv { params, plan, packed, quantized } => {
                     debug_assert_eq!(
                         (params.stride, params.pad),
@@ -330,60 +445,87 @@ impl Model {
                         node.name
                     );
                     let inp = acts[node.inputs[0]].as_ref().expect("SSA order");
-                    if let Some(q) = quantized {
-                        let mut out = ws_tensor(ws, &q.out_dims(inp));
-                        q.forward_into(inp, ws, &mut out);
-                        out
-                    } else {
-                        let mut out = ws_tensor(ws, &plan.out_dims(inp, &params.weight));
-                        match packed {
-                            Some(p) => plan.run_packed_into(
-                                inp,
-                                &params.weight,
-                                p,
-                                &params.bias,
-                                ws,
-                                &mut out,
-                            ),
-                            None => {
-                                plan.run_into(inp, &params.weight, &params.bias, ws, &mut out)
+                    match quantized {
+                        Some(q) => {
+                            let odims = q.out_dims_for(inp.dims());
+                            if q.produces_q() {
+                                // the compiled int8 link: emit codes on
+                                // the consumer's grid, no f32 in between
+                                let mut qt = ws_qtensor(ws, &odims);
+                                match inp {
+                                    Act::F32(t) => q.forward_into_q(t, ws, &mut qt),
+                                    Act::I8(t) => q.forward_q_into_q(t, ws, &mut qt),
+                                }
+                                Act::I8(qt)
+                            } else {
+                                let mut out = ws_tensor(ws, &odims);
+                                match inp {
+                                    Act::F32(t) => q.forward_into(t, ws, &mut out),
+                                    Act::I8(t) => q.forward_q_into(t, ws, &mut out),
+                                }
+                                Act::F32(out)
                             }
                         }
-                        out
+                        None => {
+                            let xt = inp.expect_f32(&node.name);
+                            let mut out = ws_tensor(ws, &plan.out_dims(xt, &params.weight));
+                            match packed {
+                                Some(p) => plan.run_packed_into(
+                                    xt,
+                                    &params.weight,
+                                    p,
+                                    &params.bias,
+                                    ws,
+                                    &mut out,
+                                ),
+                                None => {
+                                    plan.run_into(xt, &params.weight, &params.bias, ws, &mut out)
+                                }
+                            }
+                            Act::F32(out)
+                        }
                     }
                 }
                 Op::Relu => {
                     let src = node.inputs[0];
-                    let mut t = take_or_copy(&mut acts, src, last_use[src] == i, ws);
+                    let mut t = take_or_copy(&mut acts, src, last_use[src] == i, ws, &node.name);
                     relu_inplace(&mut t);
-                    t
+                    Act::F32(t)
                 }
                 Op::MaxPool2 => {
                     let inp = acts[node.inputs[0]].as_ref().expect("SSA order");
+                    let inp = inp.expect_f32(&node.name);
                     let mut t = ws_tensor(ws, &maxpool2_dims(inp));
                     maxpool2_into(inp, &mut t);
-                    t
+                    Act::F32(t)
                 }
                 Op::GlobalAvgPool => {
                     let inp = acts[node.inputs[0]].as_ref().expect("SSA order");
+                    let inp = inp.expect_f32(&node.name);
                     let mut t = ws_tensor(ws, &gap_dims(inp));
                     global_avg_pool_into(inp, &mut t);
-                    t
+                    Act::F32(t)
                 }
                 Op::Linear { weight, bias } => {
                     let inp = acts[node.inputs[0]].as_ref().expect("SSA order");
+                    let inp = inp.expect_f32(&node.name);
                     let mut t = ws_tensor(ws, &linear_dims(inp, weight));
                     linear_into(inp, weight, bias, &mut t);
-                    t
+                    Act::F32(t)
                 }
-                Op::Add => {
+                Op::Add | Op::AddRelu => {
                     // Keep the a + b evaluation order of `forward_all`;
                     // reuse a's buffer when this is its last use.
                     let (ia, ib) = (node.inputs[0], node.inputs[1]);
-                    let mut t = take_or_copy(&mut acts, ia, last_use[ia] == i && ia != ib, ws);
-                    let b = acts[ib].as_ref().expect("SSA order");
-                    add_assign(&mut t, b, &node.name);
-                    t
+                    let mut t =
+                        take_or_copy(&mut acts, ia, last_use[ia] == i && ia != ib, ws, &node.name);
+                    let b = acts[ib].as_ref().expect("SSA order").expect_f32(&node.name);
+                    if matches!(node.op, Op::AddRelu) {
+                        add_relu_assign(&mut t, b, &node.name);
+                    } else {
+                        add_assign(&mut t, b, &node.name);
+                    }
+                    Act::F32(t)
                 }
             };
             // Recycle activations whose last consumer just ran (ones an
@@ -391,7 +533,7 @@ impl Model {
             for &inp in &node.inputs {
                 if last_use[inp] == i {
                     if let Some(dead) = acts[inp].take() {
-                        ws.give_f32(dead.data);
+                        give_act(ws, dead);
                     }
                 }
             }
@@ -402,12 +544,22 @@ impl Model {
         // the last-use release above — recycle them so reuse stays
         // alloc-free and `in_use_bytes` returns to the output alone.
         for dead in acts.into_iter().flatten() {
-            ws.give_f32(dead.data);
+            give_act(ws, dead);
         }
         if let Some(unused) = input.take() {
             ws.give_f32(unused.data);
         }
-        result
+        match result {
+            Act::F32(t) => t,
+            // the int8-dataflow pass never requantizes a conv without
+            // consumers, so an int8 model output cannot happen through
+            // `compile` — decode defensively anyway
+            Act::I8(q) => {
+                let t = q.dequantize();
+                ws.give_i8(q.data);
+                t
+            }
+        }
     }
 
     /// Top-1 accuracy over a labelled batch.
@@ -432,18 +584,24 @@ impl Model {
     }
 }
 
-/// Move activation `src` out of `acts` when this is its last use (the
-/// in-place fast path), else copy it into a fresh workspace tensor.
+/// Move the f32 activation `src` out of `acts` when this is its last
+/// use (the in-place fast path), else copy it into a fresh workspace
+/// tensor. Panics with context when the producer emitted int8 — the
+/// compiler never routes int8 into element-wise ops.
 fn take_or_copy(
-    acts: &mut [Option<Tensor>],
+    acts: &mut [Option<Act>],
     src: usize,
     movable: bool,
     ws: &mut Workspace,
+    name: &str,
 ) -> Tensor {
     if movable {
-        acts[src].take().expect("SSA order")
+        match acts[src].take().expect("SSA order") {
+            Act::F32(t) => t,
+            Act::I8(_) => panic!("{name}: op requires an f32 input but got an int8 activation"),
+        }
     } else {
-        let inp = acts[src].as_ref().expect("SSA order");
+        let inp = acts[src].as_ref().expect("SSA order").expect_f32(name);
         let mut t = ws_tensor(ws, &inp.dims);
         t.data.copy_from_slice(&inp.data);
         t

@@ -1,18 +1,22 @@
 //! The CNN inference engine (the substrate for §6's PTQ experiments).
 //!
-//! NCHW f32 tensors, a small SSA graph IR, conv layers that execute
-//! through any of the paper's algorithms (direct im2col, tiled Winograd,
-//! tiled SFC — float or transform-domain-quantized per Eq. 17), the
-//! mini-ResNet-18/34/50 topologies matching the paper's benchmark models,
-//! the VGG-16 shape catalog for the FPGA study, and the build-time weight
-//! format shared with the JAX trainer.
+//! NCHW f32 tensors, a small SSA graph IR plus the graph compiler's
+//! pass pipeline ([`passes`]: epilogue fusion, dead-node elimination,
+//! int8 dataflow), conv layers that execute through any of the paper's
+//! algorithms (direct im2col, tiled Winograd, tiled SFC — float or
+//! transform-domain-quantized per Eq. 17), the mini-ResNet-18/34/50
+//! topologies matching the paper's benchmark models, the MobileNet
+//! depthwise-separable topology, the VGG-16 shape catalog for the FPGA
+//! study, and the build-time weight format shared with the JAX trainer.
 
 pub mod conv;
 pub mod graph;
 pub mod model;
+pub mod passes;
 pub mod tensor;
 pub mod weights;
 
 pub use conv::{conv2d_direct, conv2d_fast, FastConvPlan};
 pub use graph::{Model, Op};
+pub use passes::CompileReport;
 pub use tensor::Tensor;

@@ -1,0 +1,406 @@
+//! The graph compiler: an explicit optimization pass pipeline over
+//! [`Model`].
+//!
+//! [`compile`] (reached via [`Model::compile`]) lowers the straight-line
+//! SSA graph the topology builders emit into the form the serving stack
+//! executes:
+//!
+//! 1. **Epilogue fusion** — a `Relu` whose producer is a single-consumer
+//!    `Conv` is folded into the conv's plan as
+//!    [`Epilogue::Relu`](crate::engine::Epilogue) (applied inside the
+//!    executor's scatter/output loop, and part of the plan-cache key);
+//!    a `Relu` over a single-consumer `Add` becomes the fused
+//!    [`Op::AddRelu`] residual join. Either way the separate full-tensor
+//!    activation pass disappears.
+//! 2. **Dead-node elimination** — nodes unreachable from the model
+//!    output (including the fused-away `Relu`s) are dropped and inputs
+//!    remapped; the output node stays last, so `Model` execution
+//!    semantics are unchanged.
+//! 3. **Int8 dataflow** — for every spatially-quantized conv whose
+//!    consumers are all spatially-quantized convs sharing one calibrated
+//!    input quantizer, an integer requantization output stage
+//!    ([`crate::quant::QConvLayer::install_requant`]) is installed: the producer emits
+//!    int8 codes directly on the consumer's grid (per-channel
+//!    fixed-point `(m0, shift)` multipliers, fused ReLU as a clamp floor
+//!    at 0), eliminating the dequantize→f32→quantize hop on every such
+//!    edge.
+//!
+//! The pipeline is idempotent: compiling a compiled model finds nothing
+//! left to fuse. PTQ composes in either order — `quantize_model`
+//! preserves fused epilogues, and re-running [`compile`] after PTQ
+//! installs the int8 dataflow over the fresh quantized layers.
+
+use super::graph::{Model, Op};
+use crate::engine::{default_selector, Epilogue};
+use crate::quant::QParams;
+
+/// What one [`compile`] run changed — printed by `sfc graph` and
+/// asserted by the graph-compiler tests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CompileReport {
+    /// `Conv → Relu` pairs fused into a conv epilogue
+    pub conv_relu_fused: usize,
+    /// `Add → Relu` pairs fused into [`Op::AddRelu`]
+    pub add_relu_fused: usize,
+    /// nodes removed as unreachable from the output (fused-away `Relu`
+    /// nodes are not counted here)
+    pub dead_removed: usize,
+    /// producer→consumer edges converted to direct int8 dataflow
+    /// (requant stages installed on the producers)
+    pub int8_links: usize,
+}
+
+/// Run the pass pipeline over `model` in place. See the module docs for
+/// the pass list; returns what changed.
+pub fn compile(model: &mut Model) -> CompileReport {
+    let (conv_relu_fused, add_relu_fused, dead_removed) = fuse_and_prune(model);
+    let int8_links = int8_dataflow(model);
+    CompileReport { conv_relu_fused, add_relu_fused, dead_removed, int8_links }
+}
+
+/// How many nodes consume each node's output.
+fn consumer_counts(model: &Model) -> Vec<usize> {
+    let mut c = vec![0usize; model.nodes.len()];
+    for n in &model.nodes {
+        for &i in &n.inputs {
+            c[i] += 1;
+        }
+    }
+    c
+}
+
+/// Epilogue fusion + dead-node elimination in one rebuild, preserving
+/// the output-is-last-node invariant (every node reachable from the
+/// output has a smaller index, so pruning to the reachable set keeps
+/// the output last).
+fn fuse_and_prune(model: &mut Model) -> (usize, usize, usize) {
+    let n = model.nodes.len();
+    if n == 0 {
+        return (0, 0, 0);
+    }
+    let consumers = consumer_counts(model);
+    // remap[i]: the node whose output now stands for i's (identity
+    // unless i is a fused-away Relu); dropped[i]: i leaves the graph.
+    let mut remap: Vec<usize> = (0..n).collect();
+    let mut dropped = vec![false; n];
+    // fusion sites, counted only if the fused node survives DCE (a
+    // fusion inside a dead subgraph is not a fusion of the compiled
+    // graph)
+    let mut conv_fused_at = vec![false; n];
+    let mut add_fused_at = vec![false; n];
+    for i in 0..n {
+        if !matches!(model.nodes[i].op, Op::Relu) {
+            continue;
+        }
+        let src = model.nodes[i].inputs[0];
+        // the pre-activation value must have no other consumer
+        if consumers[src] != 1 || dropped[src] {
+            continue;
+        }
+        let src_op = &mut model.nodes[src].op;
+        match src_op {
+            Op::Conv { plan, packed, quantized, .. } => {
+                if plan.desc.epilogue != Epilogue::None {
+                    continue; // already fused (idempotence)
+                }
+                let desc = plan.desc.with_epilogue(Epilogue::Relu);
+                // same engine, epilogue-annotated descriptor; the plan
+                // cache keys on (desc, engine) so fused plans are shared
+                let Ok(newplan) = default_selector().plan_named(plan.engine, &desc) else {
+                    continue;
+                };
+                // a PTQ'd node carries its own plan (different engine +
+                // quant descriptor than the float plan) — refit it
+                // against its own engine, and only fuse when that works
+                if let Some(q) = quantized {
+                    let qdesc = q.plan.desc.with_epilogue(Epilogue::Relu);
+                    let Ok(qplan) = default_selector().plan_named(q.plan.engine, &qdesc) else {
+                        continue;
+                    };
+                    q.plan = qplan;
+                }
+                *plan = newplan;
+                // pre-packed weights carry the descriptor — drop the
+                // stale artifact; Model::prepack_weights re-packs
+                *packed = None;
+                remap[i] = src;
+                dropped[i] = true;
+                conv_fused_at[src] = true;
+            }
+            Op::Add => {
+                *src_op = Op::AddRelu;
+                remap[i] = src;
+                dropped[i] = true;
+                add_fused_at[src] = true;
+            }
+            _ => {}
+        }
+    }
+    // Reachability from the (possibly remapped) output node.
+    let resolve = |mut i: usize| -> usize {
+        while dropped[i] {
+            debug_assert_ne!(remap[i], i, "dropped node without a replacement");
+            i = remap[i];
+        }
+        i
+    };
+    let out = resolve(n - 1);
+    let mut live = vec![false; n];
+    let mut stack = vec![out];
+    while let Some(i) = stack.pop() {
+        if live[i] {
+            continue;
+        }
+        live[i] = true;
+        for &inp in &model.nodes[i].inputs {
+            stack.push(resolve(inp));
+        }
+    }
+    let dead_removed = (0..n).filter(|&i| !dropped[i] && !live[i]).count();
+    let conv_fused = (0..n).filter(|&i| conv_fused_at[i] && live[i]).count();
+    let add_fused = (0..n).filter(|&i| add_fused_at[i] && live[i]).count();
+    // Rebuild: keep live nodes in order, remap inputs through the fused
+    // Relus to the new dense indices.
+    let mut new_idx = vec![usize::MAX; n];
+    let mut k = 0usize;
+    for i in 0..n {
+        if live[i] {
+            new_idx[i] = k;
+            k += 1;
+        }
+    }
+    let nodes = std::mem::take(&mut model.nodes);
+    model.nodes = nodes
+        .into_iter()
+        .enumerate()
+        .filter(|(i, _)| live[*i])
+        .map(|(_, mut node)| {
+            for inp in node.inputs.iter_mut() {
+                *inp = new_idx[resolve(*inp)];
+            }
+            node
+        })
+        .collect();
+    (conv_fused, add_fused, dead_removed)
+}
+
+/// Install integer requantization on every spatially-quantized conv
+/// whose consumers are all spatially-quantized convs with one common
+/// calibrated input quantizer. Returns the number of producer→consumer
+/// edges that now carry int8 activations.
+fn int8_dataflow(model: &mut Model) -> usize {
+    let n = model.nodes.len();
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, node) in model.nodes.iter().enumerate() {
+        for &inp in &node.inputs {
+            consumers[inp].push(i);
+        }
+    }
+    // a consumer's calibrated input quantizer, when it is a
+    // spatially-quantized conv (the only ops that can take int8 input)
+    let in_qparams = |op: &Op| -> Option<QParams> {
+        match op {
+            Op::Conv { quantized: Some(q), .. } => q.spatial_in_qparams(),
+            _ => None,
+        }
+    };
+    let mut links = 0usize;
+    for p in 0..n {
+        // the producer must itself be a spatially-quantized conv
+        if in_qparams(&model.nodes[p].op).is_none() || consumers[p].is_empty() {
+            continue;
+        }
+        let mut out_qp: Option<QParams> = None;
+        let mut ok = true;
+        for &c in &consumers[p] {
+            match (in_qparams(&model.nodes[c].op), out_qp) {
+                (Some(qp), None) => out_qp = Some(qp),
+                (Some(qp), Some(prev))
+                    if qp.scale.to_bits() == prev.scale.to_bits() && qp.qmax == prev.qmax => {}
+                _ => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            continue;
+        }
+        let Some(out_qp) = out_qp else { continue };
+        if let Op::Conv { quantized: Some(q), .. } = &mut model.nodes[p].op {
+            // idempotence: a stage installed by an earlier compile with
+            // the same output quantizer is left alone and not re-counted
+            let already = q.out_qparams().is_some_and(|cur| {
+                cur.scale.to_bits() == out_qp.scale.to_bits() && cur.qmax == out_qp.qmax
+            });
+            if !already && q.install_requant(out_qp) {
+                links += consumers[p].len();
+            }
+        }
+    }
+    links
+}
+
+/// Render the compiled graph as the `sfc graph` debug table: one row
+/// per node with op kind, executing engine, fused epilogue, activation
+/// dtypes in/out and the int8-dataflow annotation.
+pub fn describe(model: &Model) -> String {
+    use std::fmt::Write;
+    // which nodes produce int8 activations
+    let emits_i8: Vec<bool> = model
+        .nodes
+        .iter()
+        .map(|n| matches!(&n.op, Op::Conv { quantized: Some(q), .. } if q.produces_q()))
+        .collect();
+    let dtype = |i: usize| if emits_i8[i] { "int8" } else { "f32" };
+    let mut s = String::new();
+    let _ = writeln!(s, "graph {} ({} nodes)", model.name, model.nodes.len());
+    let _ = writeln!(
+        s,
+        "{:>3}  {:<18} {:<9} {:<22} {:<5} {:<11} {}",
+        "#", "name", "op", "engine", "epi", "dtype", "notes"
+    );
+    for (i, node) in model.nodes.iter().enumerate() {
+        let ins = if node.inputs.is_empty() {
+            "-".to_string()
+        } else {
+            node.inputs.iter().map(|j| dtype(*j)).collect::<Vec<_>>().join("+")
+        };
+        let io = format!("{}->{}", ins, dtype(i));
+        let (kind, engine, epi, note) = match &node.op {
+            Op::Input => ("input", String::from("-"), "-", String::new()),
+            Op::Conv { plan, packed, quantized, .. } => {
+                let epi = plan.desc.epilogue.name();
+                match quantized {
+                    Some(q) => {
+                        let note = match q.out_qparams() {
+                            Some(qp) => format!(
+                                "requant per-channel (m0,shift) -> s_out {:.4e}",
+                                qp.scale
+                            ),
+                            None => "dequant f32 out".to_string(),
+                        };
+                        ("conv", format!("{}-int8", q.engine()), epi, note)
+                    }
+                    None => {
+                        let note =
+                            if packed.is_some() { "pre-packed".to_string() } else { String::new() };
+                        ("conv", plan.engine.to_string(), epi, note)
+                    }
+                }
+            }
+            Op::Relu => ("relu", String::from("-"), "-", String::new()),
+            Op::MaxPool2 => ("maxpool2", String::from("-"), "-", String::new()),
+            Op::GlobalAvgPool => ("gap", String::from("-"), "-", String::new()),
+            Op::Linear { .. } => ("linear", String::from("-"), "-", String::new()),
+            Op::Add => ("add", String::from("-"), "-", String::new()),
+            Op::AddRelu => ("add", String::from("-"), "relu", "fused residual join".to_string()),
+        };
+        let _ = writeln!(
+            s,
+            "{i:>3}  {:<18} {:<9} {:<22} {:<5} {:<11} {}",
+            node.name, kind, engine, epi, io, note
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ConvDesc, ConvPlan};
+    use crate::nn::graph::ConvParams;
+    use crate::nn::tensor::Tensor;
+    use crate::util::Pcg32;
+    use std::sync::Arc;
+
+    fn conv_node(m: &mut Model, input: usize, rng: &mut Pcg32, name: &str) -> usize {
+        let mut w = Tensor::zeros(&[4, 4, 3, 3]);
+        rng.fill_gaussian(&mut w.data, 0.3);
+        let desc = ConvDesc::new(1, 4, 4, 8, 8, 3, 1, 1);
+        m.push(
+            Op::Conv {
+                params: ConvParams { weight: w, bias: vec![0.1; 4], stride: 1, pad: 1 },
+                plan: Arc::new(ConvPlan::direct(desc)),
+                packed: None,
+                quantized: None,
+            },
+            vec![input],
+            name,
+        )
+    }
+
+    #[test]
+    fn relu_fuses_into_single_consumer_conv() {
+        let mut rng = Pcg32::seeded(1);
+        let mut m = Model::new("t");
+        let i = m.push(Op::Input, vec![], "in");
+        let c = conv_node(&mut m, i, &mut rng, "conv");
+        m.push(Op::Relu, vec![c], "relu");
+        let mut x = Tensor::zeros(&[1, 4, 8, 8]);
+        rng.fill_gaussian(&mut x.data, 1.0);
+        let want = m.forward(&x);
+        let report = m.compile();
+        assert_eq!(report.conv_relu_fused, 1);
+        assert_eq!(m.nodes.len(), 2, "the relu node is gone");
+        let Op::Conv { plan, .. } = &m.nodes[1].op else { panic!("conv survives") };
+        assert_eq!(plan.desc.epilogue, Epilogue::Relu);
+        assert_eq!(m.forward(&x).data, want.data, "fusion is bit-identical");
+        // idempotent
+        let report2 = m.compile();
+        assert_eq!(report2, CompileReport::default());
+    }
+
+    #[test]
+    fn relu_with_shared_preactivation_is_not_fused() {
+        // conv's output is consumed by the relu AND a residual add —
+        // fusing would corrupt the second consumer's value
+        let mut rng = Pcg32::seeded(2);
+        let mut m = Model::new("t");
+        let i = m.push(Op::Input, vec![], "in");
+        let c = conv_node(&mut m, i, &mut rng, "conv");
+        let r = m.push(Op::Relu, vec![c], "relu");
+        m.push(Op::Add, vec![c, r], "add");
+        let mut x = Tensor::zeros(&[1, 4, 8, 8]);
+        rng.fill_gaussian(&mut x.data, 1.0);
+        let want = m.forward(&x);
+        let report = m.compile();
+        assert_eq!(report.conv_relu_fused, 0);
+        assert_eq!(m.forward(&x).data, want.data);
+    }
+
+    #[test]
+    fn add_relu_fuses_and_dead_nodes_are_pruned() {
+        let mut rng = Pcg32::seeded(3);
+        let mut m = Model::new("t");
+        let i = m.push(Op::Input, vec![], "in");
+        let c1 = conv_node(&mut m, i, &mut rng, "conv1");
+        let c2 = conv_node(&mut m, i, &mut rng, "conv2");
+        // dangling auxiliary head: unreachable from the output
+        conv_node(&mut m, c1, &mut rng, "aux");
+        let add = m.push(Op::Add, vec![c1, c2], "add");
+        m.push(Op::Relu, vec![add], "relu");
+        let mut x = Tensor::zeros(&[1, 4, 8, 8]);
+        rng.fill_gaussian(&mut x.data, 1.0);
+        let want = m.forward(&x);
+        let report = m.compile();
+        assert_eq!(report.add_relu_fused, 1);
+        assert_eq!(report.dead_removed, 1, "the aux head is unreachable");
+        assert!(matches!(m.nodes.last().unwrap().op, Op::AddRelu));
+        assert_eq!(m.forward(&x).data, want.data, "AddRelu is bit-identical to add→relu");
+    }
+
+    #[test]
+    fn describe_annotates_fusion() {
+        let mut rng = Pcg32::seeded(4);
+        let mut m = Model::new("t");
+        let i = m.push(Op::Input, vec![], "in");
+        let c = conv_node(&mut m, i, &mut rng, "convX");
+        m.push(Op::Relu, vec![c], "relu");
+        m.compile();
+        let s = describe(&m);
+        assert!(s.contains("convX"), "{s}");
+        assert!(s.contains("relu"), "fused epilogue shown: {s}");
+        assert!(s.contains("f32->f32"), "{s}");
+    }
+}

@@ -117,8 +117,11 @@ pub fn quantize_model(model: &mut Model, calib: &Tensor, cfg: &QuantConfig) -> V
             "weight channels {icg}×{groups} groups vs activation channels {ic} at {}",
             node.name
         );
+        // the epilogue rides along: quantizing a compiled graph (fused
+        // conv+ReLU) must not silently drop the fused activation
         let desc = ConvDesc::new(n, ic, oc, h, w, r, params.stride, params.pad)
             .with_groups(groups)
+            .with_epilogue(float_plan.desc.epilogue)
             .with_quant(cfg.spec());
         let Ok(plan) = sel.plan_named(engine_name, &desc) else {
             continue; // engine unknown or unsupported for this layer

@@ -8,6 +8,9 @@ pub mod qconv;
 pub use calib::{quantize_model, QuantConfig};
 pub use qconv::{Granularity, QConvLayer};
 
+use crate::nn::tensor::Tensor;
+use std::sync::atomic::{AtomicU64, Ordering};
+
 /// Symmetric intN quantization parameters for one scale group.
 #[derive(Clone, Copy, Debug)]
 pub struct QParams {
@@ -50,6 +53,167 @@ pub fn max_abs(xs: &[f32]) -> f32 {
     xs.iter().fold(0.0f32, |m, v| m.max(v.abs()))
 }
 
+/// A quantized int8 activation tensor: NCHW codes plus the symmetric
+/// scale they were produced at. This is what flows between
+/// consecutive quantized convs in a compiled graph — the consumer
+/// asserts the producer's `scale` matches its own calibrated input
+/// quantizer, so the int8 dataflow can never silently mix scales.
+#[derive(Clone, Debug)]
+pub struct QTensor {
+    /// dimension sizes, outermost first (NCHW)
+    pub dims: Vec<usize>,
+    /// int8 codes, row-major
+    pub data: Vec<i8>,
+    /// float value of one integer step
+    pub scale: f32,
+}
+
+impl QTensor {
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// The shape as (N, C, H, W); panics unless 4-D.
+    pub fn dims4(&self) -> (usize, usize, usize, usize) {
+        assert_eq!(self.dims.len(), 4, "expected NCHW, got {:?}", self.dims);
+        (self.dims[0], self.dims[1], self.dims[2], self.dims[3])
+    }
+
+    /// One image plane (n, c) as a contiguous slice.
+    pub fn plane(&self, n: usize, c: usize) -> &[i8] {
+        let (_, cc, hh, ww) = self.dims4();
+        let base = (n * cc + c) * hh * ww;
+        &self.data[base..base + hh * ww]
+    }
+
+    /// Decode to an f32 tensor (`v = q · scale`) — probe/debug use
+    /// only; the compiled hot path never materializes this between
+    /// quantized convs.
+    pub fn dequantize(&self) -> Tensor {
+        let data = self.data.iter().map(|&q| q as f32 * self.scale).collect();
+        Tensor::from_vec(&self.dims, data)
+    }
+}
+
+/// Fixed-point requantization multiplier: represents a positive real
+/// scale ratio as `m0 · 2^-(31+shift)` with the q31 mantissa `m0` in
+/// `[2^30, 2^31)` — the integer-only rescaling scheme of "Efficient
+/// Winograd Convolution via Integer Arithmetic" (Meng & Brothers) and
+/// gemmlowp. [`Requant::apply`] maps an i32 accumulator to the output
+/// integer grid without touching floating point; the rounding is exact
+/// half-away-from-zero, matching the crate's float quantizer
+/// ([`crate::linalg::simd::quantize_i8_slice`]), so the integer chain
+/// stays within 1 code of the dequantize→quantize reference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Requant {
+    /// q31 mantissa in `[2^30, 2^31)` (smaller only for underflowing
+    /// scales clamped by the constructor)
+    pub m0: i32,
+    /// additional right shift (may be negative for multipliers > 1;
+    /// `31 + shift` is always in `1..=62`)
+    pub shift: i32,
+}
+
+impl Requant {
+    /// The frexp-style mantissa decomposition shared by both
+    /// constructors: `real = frac·2^exp` with `frac ∈ [0.5, 1)`,
+    /// returning `(round(frac·2^31), -exp)` with the rounding carry
+    /// folded back into the exponent. Caller validated `real` positive
+    /// and finite.
+    fn decompose(real: f64) -> (i64, i32) {
+        let mut exp = 0i32;
+        let mut frac = real;
+        while frac >= 1.0 {
+            frac *= 0.5;
+            exp += 1;
+        }
+        while frac < 0.5 {
+            frac *= 2.0;
+            exp -= 1;
+        }
+        let mut m0 = (frac * (1i64 << 31) as f64).round() as i64;
+        if m0 == 1i64 << 31 {
+            m0 /= 2;
+            exp += 1;
+        }
+        (m0, -exp)
+    }
+
+    /// Decompose a positive real multiplier into `(m0, shift)`, or
+    /// `None` when the ratio cannot be represented at full q31
+    /// precision (`31 + shift` outside `1..=62`, i.e. M outside
+    /// roughly `[2^-31, 2^30]`). Degenerately-calibrated scale ratios
+    /// land here; callers (the int8-dataflow pass) refuse the link and
+    /// keep the edge f32 instead of shipping a corrupted multiplier.
+    pub fn try_from_real(real: f64) -> Option<Requant> {
+        if !(real.is_finite() && real > 0.0) {
+            return None;
+        }
+        let (m0, shift) = Requant::decompose(real);
+        if !(1..=62).contains(&(31 + shift)) {
+            return None;
+        }
+        Some(Requant { m0: m0 as i32, shift })
+    }
+
+    /// Like [`Requant::try_from_real`], but clamps underflowing
+    /// multipliers toward zero by halving the mantissa (the result
+    /// rounds to 0 for any i32 accumulator) and panics on multipliers
+    /// ≥ ~2^30. Convenience for tests/tools; production requant
+    /// installation goes through the refusing [`Requant::try_from_real`].
+    pub fn from_real(real: f64) -> Requant {
+        assert!(real.is_finite() && real > 0.0, "requant multiplier must be positive, got {real}");
+        if let Some(rq) = Requant::try_from_real(real) {
+            return rq;
+        }
+        let (mut m0, mut shift) = Requant::decompose(real);
+        while 31 + shift > 62 {
+            m0 = (m0 + 1) / 2;
+            shift -= 1;
+        }
+        assert!(31 + shift >= 1, "requant multiplier {real} too large");
+        Requant { m0: m0 as i32, shift }
+    }
+
+    /// The real multiplier this fixed-point pair encodes.
+    pub fn real(self) -> f64 {
+        self.m0 as f64 * (2f64).powi(-(31 + self.shift))
+    }
+
+    /// Apply to an i32 accumulator: `round(acc · m0 · 2^-(31+shift))`,
+    /// half away from zero, exactly — delegates to the shared scalar
+    /// primitive the SIMD arm is tested bit-identical against.
+    #[inline]
+    pub fn apply(self, acc: i32) -> i32 {
+        crate::linalg::simd::requant_one(acc, self.m0, self.shift)
+    }
+}
+
+/// Process-wide count of f32 activation materializations performed by
+/// quantized conv layers (a quantized conv writing a float output
+/// tensor). The compiled int8 dataflow exists to drive this to the
+/// graph's exits only: between consecutive quantized convs the count
+/// must not grow — asserted by the graph-compiler tests.
+static DEQUANT_MATERIALIZATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the f32-materialization counter (bumped by the
+/// [`QConvLayer`] float output stages).
+pub fn dequant_materializations() -> u64 {
+    DEQUANT_MATERIALIZATIONS.load(Ordering::Relaxed)
+}
+
+/// Record one quantized-conv f32 output materialization (called by the
+/// [`QConvLayer`] float output stages).
+pub(crate) fn record_dequant_materialization() {
+    DEQUANT_MATERIALIZATIONS.fetch_add(1, Ordering::Relaxed);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,5 +250,66 @@ mod tests {
         let e8 = (QParams::from_max_abs(1.0, 8).fake_quant(v) - v).abs();
         let e4 = (QParams::from_max_abs(1.0, 4).fake_quant(v) - v).abs();
         assert!(e4 > e8);
+    }
+
+    #[test]
+    fn requant_decomposition_is_tight() {
+        for real in [0.5f64, 0.9999, 1.0, 1.5, 0.003, 7.25e-5, 3.2] {
+            let rq = Requant::from_real(real);
+            assert!(
+                (rq.m0 as i64) < (1i64 << 31) && rq.m0 > 0,
+                "m0 {} out of range for {real}",
+                rq.m0
+            );
+            let rel = (rq.real() - real).abs() / real;
+            assert!(rel < 1e-9, "{real}: encoded {} (rel {rel})", rq.real());
+            assert!((1..=62).contains(&(31 + rq.shift)), "{real}: shift {}", rq.shift);
+        }
+    }
+
+    #[test]
+    fn requant_apply_matches_float_reference_within_one() {
+        // the ≤1-code contract of the fixed-point rounding: for every
+        // accumulator, |apply(acc) − round(acc·M)| ≤ 1
+        for real in [0.37e-3f64, 0.021, 0.49, 1.0 / 3.0] {
+            let rq = Requant::from_real(real);
+            for acc in (-200_000i32..200_000).step_by(9973) {
+                let want = (acc as f64 * real).round();
+                let got = rq.apply(acc) as f64;
+                assert!(
+                    (got - want).abs() <= 1.0,
+                    "M {real} acc {acc}: fixed {got} vs float {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn requant_underflow_clamps_to_zero() {
+        let rq = Requant::from_real(1e-15);
+        assert_eq!(rq.apply(i32::MAX), 0);
+        assert_eq!(rq.apply(i32::MIN + 1), 0);
+    }
+
+    #[test]
+    fn try_from_real_refuses_unencodable_ratios() {
+        // the strict constructor (the int8-dataflow pass's gate): None
+        // outside the faithful q31 range, Some inside it
+        assert!(Requant::try_from_real(1e-15).is_none(), "underflow must be refused");
+        assert!(Requant::try_from_real(1e12).is_none(), "overflow must be refused");
+        assert!(Requant::try_from_real(0.0).is_none());
+        assert!(Requant::try_from_real(f64::NAN).is_none());
+        for ok in [1e-6, 0.5, 1.0, 1000.0] {
+            let rq = Requant::try_from_real(ok).expect("encodable");
+            assert!((rq.real() - ok).abs() / ok < 1e-9);
+        }
+    }
+
+    #[test]
+    fn qtensor_round_trip() {
+        let q = QTensor { dims: vec![1, 1, 1, 3], data: vec![-2, 0, 5], scale: 0.5 };
+        let t = q.dequantize();
+        assert_eq!(t.data, vec![-1.0, 0.0, 2.5]);
+        assert_eq!(q.plane(0, 0), &[-2, 0, 5]);
     }
 }

@@ -8,11 +8,11 @@
 //! granularity (§5: per-tensor or per-frequency for activations;
 //! per-channel, per-frequency or channel×frequency for weights).
 
-use super::QParams;
+use super::{QParams, QTensor, Requant};
 use crate::engine::exec::ntt_corr2d_i8_into;
-use crate::engine::{ConvPlan, PackedBytesGuard, PlanKernel, QuantSpec, Workspace};
+use crate::engine::{ConvPlan, Epilogue, PackedBytesGuard, PlanKernel, QuantSpec, Workspace};
 use crate::linalg::gemm::{gemm_packed_i8_i32, packed_b_i8_len};
-use crate::linalg::simd::quantize_i8_slice;
+use crate::linalg::simd::{quantize_i8_slice, requant_i8_slice};
 use crate::nn::conv::{gather_tile, gather_tiles8, pack_fast_weights_i8, FastConvPlan, TILE_LANES};
 use crate::nn::tensor::Tensor;
 use crate::util::par::{num_threads, par_chunks_mut, par_chunks_states};
@@ -121,6 +121,25 @@ pub struct QConvLayer {
     /// float bias added after dequantization
     pub bias: Vec<f32>,
     kernel: QKernel,
+    /// integer output stage installed by the graph compiler's
+    /// int8-dataflow pass (spatial kernels only); `Some` makes the
+    /// layer emit int8 activations directly
+    requant: Option<RequantStage>,
+}
+
+/// Integer-only output stage for a quantized conv whose consumers are
+/// all quantized convs: per-output-channel fixed-point multipliers
+/// `(s_a·s_w[o]) / s_out` (see [`Requant`]), the bias pre-quantized at
+/// the accumulator scale, and the output quantizer — which is exactly
+/// the consumer's calibrated input quantizer, so the producer's int8
+/// codes feed the next conv without any f32 round trip.
+pub struct RequantStage {
+    /// per-output-channel fixed-point multiplier
+    mults: Vec<Requant>,
+    /// bias at the accumulator scale: `round(b[o] / (s_a·s_w[o]))`
+    bias_q: Vec<i32>,
+    /// the output quantizer (the consumer's input scale)
+    out: QParams,
 }
 
 enum QKernel {
@@ -255,6 +274,7 @@ impl QConvLayer {
                 a_bits: spec.a_bits,
                 _packed: packed,
             },
+            requant: None,
         }
     }
 
@@ -292,12 +312,96 @@ impl QConvLayer {
             plan,
             bias,
             kernel: QKernel::Spatial { wq, oc, icg, r, w_scales, a_scale, via_ntt },
+            requant: None,
         }
     }
 
     /// Which engine executes this layer.
     pub fn engine(&self) -> &'static str {
         self.plan.engine
+    }
+
+    /// The fused output epilogue carried by the plan descriptor (set by
+    /// the graph compiler's conv+ReLU fusion).
+    pub fn epilogue(&self) -> Epilogue {
+        self.plan.desc.epilogue
+    }
+
+    /// The calibrated input quantizer of the spatial datapath (`None`
+    /// for transform-domain layers, which quantize per-frequency after
+    /// the input transform and therefore cannot consume raw int8
+    /// activations).
+    pub fn spatial_in_qparams(&self) -> Option<QParams> {
+        match &self.kernel {
+            QKernel::Spatial { a_scale, .. } => Some(*a_scale),
+            QKernel::TransformDomain { .. } => None,
+        }
+    }
+
+    /// Install the integer requantization output stage: the layer then
+    /// emits int8 activations quantized at `out` (the consumer's
+    /// calibrated input quantizer) through per-channel fixed-point
+    /// multipliers — no f32 in the output path. Returns `false` — and
+    /// installs nothing, keeping the f32 output path — for
+    /// transform-domain layers (their per-frequency scale structure
+    /// requires the float inverse transform, Eq. 17) and for
+    /// degenerate scale ratios the fixed-point scheme cannot encode
+    /// faithfully (a per-channel multiplier outside [`Requant`]'s q31
+    /// range or ≥ 1 — `M < 1` is what keeps the i32 requant result
+    /// wrap-free before the clamp — or a quantized bias overflowing the
+    /// i32 accumulator headroom, as with near-dead channels' tiny
+    /// weight scales). A refused installation also clears any
+    /// previously-installed stage. The f32 fallback is always correct,
+    /// just not integer-only.
+    pub fn install_requant(&mut self, out: QParams) -> bool {
+        // a refused (re-)installation must leave the layer on the f32
+        // path, not on a stale stage for some earlier consumer scale
+        self.requant = None;
+        let QKernel::Spatial { oc, w_scales, a_scale, .. } = &self.kernel else {
+            return false;
+        };
+        let mut mults = Vec::with_capacity(*oc);
+        let mut bias_q = Vec::with_capacity(*oc);
+        for o in 0..*oc {
+            let acc_scale = a_scale.scale as f64 * w_scales[o] as f64;
+            let Some(m) = Requant::try_from_real(acc_scale / out.scale as f64) else {
+                return false;
+            };
+            // M < 1 (shift ≥ 0) guarantees |requant(acc)| ≤ |acc| + 1,
+            // so the i32 result can never wrap before the clamp — a
+            // multiplier ≥ 1 means a degenerately small output scale;
+            // refuse the link rather than risk overflow on
+            // out-of-calibration accumulators
+            if m.shift < 0 {
+                return false;
+            }
+            mults.push(m);
+            let b = if self.bias.is_empty() { 0.0 } else { self.bias[o] } as f64;
+            let bq = (b / acc_scale).round();
+            // half the i32 range, so `acc + bias_q` cannot wrap either
+            if bq.abs() > (i32::MAX / 2) as f64 {
+                return false;
+            }
+            bias_q.push(bq as i32);
+        }
+        self.requant = Some(RequantStage { mults, bias_q, out });
+        true
+    }
+
+    /// Remove the integer output stage (back to f32 outputs).
+    pub fn clear_requant(&mut self) {
+        self.requant = None;
+    }
+
+    /// True when the layer emits int8 activations (a requant stage is
+    /// installed).
+    pub fn produces_q(&self) -> bool {
+        self.requant.is_some()
+    }
+
+    /// The output quantizer, when the layer is int8-producing.
+    pub fn out_qparams(&self) -> Option<QParams> {
+        self.requant.as_ref().map(|r| r.out)
     }
 
     /// Convenience wrapper over [`QConvLayer::forward_into`] with a
@@ -316,7 +420,13 @@ impl QConvLayer {
 
     /// Output shape for an actual input batch.
     pub fn out_dims(&self, x: &Tensor) -> Vec<usize> {
-        let (n, _, h, wid) = x.dims4();
+        self.out_dims_for(&x.dims)
+    }
+
+    /// Output shape from input dimensions (NCHW).
+    pub fn out_dims_for(&self, in_dims: &[usize]) -> Vec<usize> {
+        assert_eq!(in_dims.len(), 4, "expected NCHW, got {in_dims:?}");
+        let (n, h, wid) = (in_dims[0], in_dims[2], in_dims[3]);
         let (stride, pad) = (self.plan.desc.stride, self.plan.desc.pad);
         let (oc, r) = match &self.kernel {
             QKernel::TransformDomain { oc, .. } => (*oc, self.plan.desc.r),
@@ -329,21 +439,167 @@ impl QConvLayer {
 
     /// The zero-alloc quantized entry point: execute out of `ws` straight
     /// into `out`. Bit-identical to [`QConvLayer::forward`] whether `ws`
-    /// is fresh or reused.
+    /// is fresh or reused. Any installed requant stage is ignored — this
+    /// is the f32-producing path (and counts as one f32 activation
+    /// materialization in [`crate::quant::dequant_materializations`]).
     pub fn forward_into(&self, x: &Tensor, ws: &mut Workspace, out: &mut Tensor) {
         let dil = self.plan.desc.dilation;
         assert_eq!(dil, 1, "dilation is reserved; engines require dilation == 1");
+        super::record_dequant_materialization();
         match &self.kernel {
             QKernel::TransformDomain { oc, icg, wqp, w_scales, a_scales, a_bits, .. } => {
                 forward_transform_q(x, self, *oc, *icg, wqp, w_scales, a_scales, *a_bits, ws, out)
             }
             QKernel::Spatial { wq, oc, icg, r, w_scales, a_scale, via_ntt } => {
                 if *via_ntt {
-                    forward_spatial_ntt(x, self, wq, *oc, *icg, *r, w_scales, *a_scale, ws, out)
+                    forward_spatial_ntt(
+                        SpatialIn::F32(x),
+                        self,
+                        wq,
+                        *oc,
+                        *icg,
+                        *r,
+                        w_scales,
+                        *a_scale,
+                        ws,
+                        SpatialOut::F32(out),
+                    )
                 } else {
-                    forward_spatial_q(x, self, wq, *oc, *icg, *r, w_scales, *a_scale, ws, out)
+                    forward_spatial_q(
+                        SpatialIn::F32(x),
+                        self,
+                        wq,
+                        *oc,
+                        *icg,
+                        *r,
+                        w_scales,
+                        *a_scale,
+                        ws,
+                        SpatialOut::F32(out),
+                    )
                 }
             }
+        }
+    }
+
+    /// int8 in → f32 out: consume a producer's int8 activation directly
+    /// (the tail of a compiled int8 chain). Spatial kernels only; the
+    /// producer's scale must equal this layer's calibrated input scale
+    /// to the bit.
+    pub fn forward_q_into(&self, xq: &QTensor, ws: &mut Workspace, out: &mut Tensor) {
+        super::record_dequant_materialization();
+        self.run_spatial(SpatialIn::I8(xq), ws, SpatialOut::F32(out));
+    }
+
+    /// f32 in → int8 out: quantize the input with the calibrated
+    /// quantizer, run the exact integer conv, requantize straight onto
+    /// the consumer's grid (the head of a compiled int8 chain). Panics
+    /// unless [`QConvLayer::install_requant`] ran.
+    pub fn forward_into_q(&self, x: &Tensor, ws: &mut Workspace, out: &mut QTensor) {
+        self.run_spatial(SpatialIn::F32(x), ws, SpatialOut::I8(out));
+    }
+
+    /// int8 in → int8 out: an interior link of a compiled int8 chain —
+    /// no floating point anywhere between the producer's codes and the
+    /// consumer's. Panics unless [`QConvLayer::install_requant`] ran.
+    pub fn forward_q_into_q(&self, xq: &QTensor, ws: &mut Workspace, out: &mut QTensor) {
+        self.run_spatial(SpatialIn::I8(xq), ws, SpatialOut::I8(out));
+    }
+
+    fn run_spatial(&self, input: SpatialIn, ws: &mut Workspace, out: SpatialOut) {
+        let dil = self.plan.desc.dilation;
+        assert_eq!(dil, 1, "dilation is reserved; engines require dilation == 1");
+        let QKernel::Spatial { wq, oc, icg, r, w_scales, a_scale, via_ntt } = &self.kernel else {
+            panic!(
+                "{}: transform-domain layers have no int8 dataflow entry (Eq. 17 needs the \
+                 float inverse transform)",
+                self.plan.engine
+            );
+        };
+        if matches!(out, SpatialOut::I8(_)) {
+            assert!(
+                self.requant.is_some(),
+                "int8 output requested but no requant stage installed (run the graph \
+                 compiler's int8-dataflow pass / install_requant first)"
+            );
+        }
+        if *via_ntt {
+            forward_spatial_ntt(input, self, wq, *oc, *icg, *r, w_scales, *a_scale, ws, out)
+        } else {
+            forward_spatial_q(input, self, wq, *oc, *icg, *r, w_scales, *a_scale, ws, out)
+        }
+    }
+}
+
+/// The spatial executors' input operand: a float tensor to quantize, or
+/// a producer's int8 codes to consume directly.
+enum SpatialIn<'a> {
+    /// float activation (quantized with the layer's calibrated scale)
+    F32(&'a Tensor),
+    /// int8 activation from an upstream requantizing conv
+    I8(&'a QTensor),
+}
+
+impl SpatialIn<'_> {
+    fn dims4(&self) -> (usize, usize, usize, usize) {
+        match self {
+            SpatialIn::F32(t) => t.dims4(),
+            SpatialIn::I8(q) => q.dims4(),
+        }
+    }
+}
+
+/// The spatial executors' output operand: dequantize to f32, or
+/// requantize onto the consumer's int8 grid.
+enum SpatialOut<'a> {
+    /// f32 output (dequantize + bias + epilogue)
+    F32(&'a mut Tensor),
+    /// int8 output (integer bias + fixed-point requant + clamp)
+    I8(&'a mut QTensor),
+}
+
+/// Input codes for the spatial integer conv: owned (freshly quantized
+/// into a workspace buffer) or borrowed from the producer's [`QTensor`].
+enum Codes<'a> {
+    Owned(Vec<i8>),
+    Borrowed(&'a [i8]),
+}
+
+impl Codes<'_> {
+    fn slice(&self) -> &[i8] {
+        match self {
+            Codes::Owned(v) => v,
+            Codes::Borrowed(s) => s,
+        }
+    }
+
+    fn give(self, ws: &mut Workspace) {
+        if let Codes::Owned(v) = self {
+            ws.give_i8(v);
+        }
+    }
+}
+
+/// Resolve the input codes: quantize a float input with the calibrated
+/// quantizer (dispatched SIMD), or borrow the producer's codes after
+/// asserting the int8-dataflow scale contract bit-exactly.
+fn take_codes<'a>(input: &SpatialIn<'a>, a_scale: QParams, ws: &mut Workspace) -> Codes<'a> {
+    match input {
+        SpatialIn::F32(x) => {
+            let mut xq = ws.take_i8(x.data.len());
+            quantize_i8_slice(&x.data, a_scale.scale, a_scale.qmax, &mut xq);
+            Codes::Owned(xq)
+        }
+        SpatialIn::I8(q) => {
+            assert_eq!(
+                q.scale.to_bits(),
+                a_scale.scale.to_bits(),
+                "int8 dataflow scale contract violated: producer scale {} vs calibrated \
+                 input scale {}",
+                q.scale,
+                a_scale.scale
+            );
+            Codes::Borrowed(&q.data)
         }
     }
 }
@@ -410,6 +666,7 @@ fn forward_transform_q(
     let ntg = n_tiles.div_ceil(TILE_LANES);
     let tt = t * t;
     let a_qmax = (1i32 << (a_bits - 1)) - 1;
+    let ep = layer.epilogue();
     let blk = packed_b_i8_len(ocg, icg);
     assert!(wqp.len() >= tt * groups * blk, "packed quantized weights too small");
 
@@ -486,7 +743,7 @@ fn forward_transform_q(
                     for i in 0..m.min(oh - ty * m) {
                         for j in 0..m.min(ow - tx * m) {
                             plane[(ty * m + i) * ow + tx * m + j] =
-                                st.ytile[(i * m + j) * TILE_LANES + lane] + b;
+                                ep.apply(st.ytile[(i * m + j) * TILE_LANES + lane] + b);
                         }
                     }
                 }
@@ -505,9 +762,59 @@ fn forward_transform_q(
     }
 }
 
+/// One output plane of the exact integer spatial conv: accumulate
+/// `acc[idx]` in i32 (the shared core of the f32- and int8-producing
+/// output stages — identical accumulators, so the two stages differ
+/// only in how the plane is written).
+#[allow(clippy::too_many_arguments)]
+fn spatial_plane_acc(
+    xq: &[i8],
+    ic: usize,
+    h: usize,
+    wid: usize,
+    ni: usize,
+    o: usize,
+    wq: &[i8],
+    icg: usize,
+    ocg: usize,
+    r: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    mut emit: impl FnMut(usize, i32),
+) {
+    let gi = o / ocg;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut acc: i32 = 0;
+            for il in 0..icg {
+                let ci = gi * icg + il;
+                let xplane = &xq[(ni * ic + ci) * h * wid..(ni * ic + ci + 1) * h * wid];
+                let wplane = &wq[(o * icg + il) * r * r..(o * icg + il + 1) * r * r];
+                for ky in 0..r {
+                    let yy = oy * stride + ky;
+                    if yy < pad || yy >= h + pad {
+                        continue;
+                    }
+                    let yy = yy - pad;
+                    for kx in 0..r {
+                        let xx = ox * stride + kx;
+                        if xx < pad || xx >= wid + pad {
+                            continue;
+                        }
+                        acc += (wplane[ky * r + kx] as i32) * (xplane[yy * wid + xx - pad] as i32);
+                    }
+                }
+            }
+            emit(oy * ow + ox, acc);
+        }
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn forward_spatial_q(
-    x: &Tensor,
+    input: SpatialIn,
     layer: &QConvLayer,
     wq: &[i8],
     oc: usize,
@@ -516,53 +823,89 @@ fn forward_spatial_q(
     w_scales: &[f32],
     a_scale: QParams,
     ws: &mut Workspace,
-    out: &mut Tensor,
+    out: SpatialOut,
 ) {
     let groups = layer.plan.desc.groups;
     let ic = icg * groups;
     let ocg = oc / groups;
-    let (n, ic2, h, wid) = x.dims4();
+    let (n, ic2, h, wid) = input.dims4();
     assert_eq!(ic, ic2);
     let (stride, pad) = (layer.plan.desc.stride, layer.plan.desc.pad);
     let oh = (h + 2 * pad - r) / stride + 1;
     let ow = (wid + 2 * pad - r) / stride + 1;
-    assert_eq!(out.dims, [n, oc, oh, ow], "output shape mismatch: {:?}", out.dims);
-    // quantize input per-tensor (dispatched SIMD quantizer)
-    let mut xq = ws.take_i8(x.data.len());
-    quantize_i8_slice(&x.data, a_scale.scale, a_scale.qmax, &mut xq);
-    par_chunks_mut(&mut out.data, oh * ow, |job, plane| {
-        let (ni, o) = (job / oc, job % oc);
-        let gi = o / ocg;
-        let deq = a_scale.scale * w_scales[o];
-        let b = if layer.bias.is_empty() { 0.0 } else { layer.bias[o] };
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let mut acc: i32 = 0;
-                for il in 0..icg {
-                    let ci = gi * icg + il;
-                    let xplane = &xq[(ni * ic + ci) * h * wid..(ni * ic + ci + 1) * h * wid];
-                    let wplane = &wq[(o * icg + il) * r * r..(o * icg + il + 1) * r * r];
-                    for ky in 0..r {
-                        let yy = oy * stride + ky;
-                        if yy < pad || yy >= h + pad {
-                            continue;
-                        }
-                        let yy = yy - pad;
-                        for kx in 0..r {
-                            let xx = ox * stride + kx;
-                            if xx < pad || xx >= wid + pad {
-                                continue;
-                            }
-                            acc += (wplane[ky * r + kx] as i32)
-                                * (xplane[yy * wid + xx - pad] as i32);
-                        }
-                    }
-                }
-                plane[oy * ow + ox] = acc as f32 * deq + b;
+    let ep = layer.epilogue();
+    let xq = take_codes(&input, a_scale, ws);
+    let codes = xq.slice();
+    match out {
+        SpatialOut::F32(out) => {
+            assert_eq!(out.dims, [n, oc, oh, ow], "output shape mismatch: {:?}", out.dims);
+            par_chunks_mut(&mut out.data, oh * ow, |job, plane| {
+                let (ni, o) = (job / oc, job % oc);
+                let deq = a_scale.scale * w_scales[o];
+                let b = if layer.bias.is_empty() { 0.0 } else { layer.bias[o] };
+                spatial_plane_acc(
+                    codes,
+                    ic,
+                    h,
+                    wid,
+                    ni,
+                    o,
+                    wq,
+                    icg,
+                    ocg,
+                    r,
+                    stride,
+                    pad,
+                    oh,
+                    ow,
+                    |idx, acc| plane[idx] = ep.apply(acc as f32 * deq + b),
+                );
+            });
+        }
+        SpatialOut::I8(outq) => {
+            let rq = layer.requant.as_ref().expect("run_spatial checked the requant stage");
+            assert_eq!(
+                outq.dims,
+                [n, oc, oh, ow],
+                "output shape mismatch: {:?}",
+                outq.dims
+            );
+            outq.scale = rq.out.scale;
+            // the int8-domain fused ReLU is a clamp floor at code 0
+            let lo = if ep == Epilogue::Relu { 0 } else { -rq.out.qmax };
+            let hi = rq.out.qmax;
+            // per-worker i32 accumulator planes, then one dispatched
+            // requant sweep per plane (SIMD on AVX2 hosts)
+            let workers = num_threads().min(n * oc).max(1);
+            let mut states: Vec<Vec<i32>> = (0..workers).map(|_| ws.take_i32(oh * ow)).collect();
+            par_chunks_states(&mut outq.data, oh * ow, &mut states, |accp, job, plane| {
+                let (ni, o) = (job / oc, job % oc);
+                spatial_plane_acc(
+                    codes,
+                    ic,
+                    h,
+                    wid,
+                    ni,
+                    o,
+                    wq,
+                    icg,
+                    ocg,
+                    r,
+                    stride,
+                    pad,
+                    oh,
+                    ow,
+                    |idx, acc| accp[idx] = acc,
+                );
+                let m = rq.mults[o];
+                requant_i8_slice(accp, rq.bias_q[o], m.m0, m.shift, lo, hi, plane);
+            });
+            for st in states {
+                ws.give_i32(st);
             }
         }
-    });
-    ws.give_i8(xq);
+    }
+    xq.give(ws);
 }
 
 /// The NTT-backed spatial path: bit-identical accumulators to
@@ -572,7 +915,7 @@ fn forward_spatial_q(
 /// descriptors).
 #[allow(clippy::too_many_arguments)]
 fn forward_spatial_ntt(
-    x: &Tensor,
+    input: SpatialIn,
     layer: &QConvLayer,
     wq: &[i8],
     oc: usize,
@@ -581,32 +924,68 @@ fn forward_spatial_ntt(
     w_scales: &[f32],
     a_scale: QParams,
     ws: &mut Workspace,
-    out: &mut Tensor,
+    out: SpatialOut,
 ) {
-    let (n, ic2, h, wid) = x.dims4();
+    let (n, ic2, h, wid) = input.dims4();
     assert_eq!(ic, ic2);
     assert_eq!(layer.plan.desc.groups, 1, "NTT path is dense-only");
     let pad = layer.plan.desc.pad;
     assert_eq!(layer.plan.desc.stride, 1, "NTT path is stride-1");
     let oh = h + 2 * pad - r + 1;
     let ow = wid + 2 * pad - r + 1;
-    assert_eq!(out.dims, [n, oc, oh, ow], "output shape mismatch: {:?}", out.dims);
-    let mut xq = ws.take_i8(x.data.len());
-    quantize_i8_slice(&x.data, a_scale.scale, a_scale.qmax, &mut xq);
+    let ep = layer.epilogue();
+    let xq = take_codes(&input, a_scale, ws);
     let mut acc = ws.take_i64(n * oc * oh * ow);
-    ntt_corr2d_i8_into(&xq, n, ic, h, wid, wq, oc, r, pad, ws, &mut acc);
-    for ni in 0..n {
-        for o in 0..oc {
-            let deq = a_scale.scale * w_scales[o];
-            let b = if layer.bias.is_empty() { 0.0 } else { layer.bias[o] };
-            let src = &acc[(ni * oc + o) * oh * ow..(ni * oc + o + 1) * oh * ow];
-            let dst = out.plane_mut(ni, o);
-            for (d, &a) in dst.iter_mut().zip(src) {
-                *d = a as f32 * deq + b;
+    ntt_corr2d_i8_into(xq.slice(), n, ic, h, wid, wq, oc, r, pad, ws, &mut acc);
+    match out {
+        SpatialOut::F32(out) => {
+            assert_eq!(out.dims, [n, oc, oh, ow], "output shape mismatch: {:?}", out.dims);
+            for ni in 0..n {
+                for o in 0..oc {
+                    let deq = a_scale.scale * w_scales[o];
+                    let b = if layer.bias.is_empty() { 0.0 } else { layer.bias[o] };
+                    let src = &acc[(ni * oc + o) * oh * ow..(ni * oc + o + 1) * oh * ow];
+                    let dst = out.plane_mut(ni, o);
+                    for (d, &a) in dst.iter_mut().zip(src) {
+                        *d = ep.apply(a as f32 * deq + b);
+                    }
+                }
             }
         }
+        SpatialOut::I8(outq) => {
+            let rq = layer.requant.as_ref().expect("run_spatial checked the requant stage");
+            assert_eq!(outq.dims, [n, oc, oh, ow], "output shape mismatch: {:?}", outq.dims);
+            outq.scale = rq.out.scale;
+            let lo = if ep == Epilogue::Relu { 0 } else { -rq.out.qmax };
+            let hi = rq.out.qmax;
+            // the NTT engine's accumulator bound (supports(): IC·R² ≤
+            // 16384) keeps |acc| < 2³¹, so the i64 → i32 narrowing is
+            // exact and the output stage is the same dispatched requant
+            // sweep as the direct path — the two stay bit-identical.
+            let mut acc32 = ws.take_i32(oh * ow);
+            for ni in 0..n {
+                for o in 0..oc {
+                    let src = &acc[(ni * oc + o) * oh * ow..(ni * oc + o + 1) * oh * ow];
+                    for (d, &a) in acc32.iter_mut().zip(src) {
+                        *d = a as i32;
+                    }
+                    let base = (ni * oc + o) * oh * ow;
+                    let m = rq.mults[o];
+                    requant_i8_slice(
+                        &acc32,
+                        rq.bias_q[o],
+                        m.m0,
+                        m.shift,
+                        lo,
+                        hi,
+                        &mut outq.data[base..base + oh * ow],
+                    );
+                }
+            }
+            ws.give_i32(acc32);
+        }
     }
-    ws.give_i8(xq);
+    xq.give(ws);
     ws.give_i64(acc);
 }
 

@@ -142,13 +142,18 @@ pub struct EngineExecutor {
 
 impl EngineExecutor {
     /// Executor over a built model (NCHW `input_dims`, index 0 = batch).
-    /// Weights of float conv layers are pre-transformed + pre-packed
-    /// here (plan time), so the serving hot path runs
+    /// The graph is compiled first ([`Model::compile`]: conv+ReLU
+    /// epilogue fusion, Add+ReLU fusion, dead-node elimination, and —
+    /// for PTQ'd models — the int8-dataflow pass that keeps activations
+    /// in int8 between consecutive quantized convs), then weights of
+    /// float conv layers are pre-transformed + pre-packed (plan time),
+    /// so the serving hot path runs
     /// [`crate::engine::ConvPlan::run_packed_into`] over pre-packed
     /// operands only — bit-identical to the per-call path.
     pub fn from_model(model: Model, input_dims: Vec<usize>, out_classes: usize) -> EngineExecutor {
         assert_eq!(input_dims.len(), 4, "NCHW input dims expected, got {input_dims:?}");
         let mut model = model;
+        model.compile();
         model.prepack_weights();
         EngineExecutor { model, input_dims, out_classes }
     }

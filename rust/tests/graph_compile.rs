@@ -1,0 +1,352 @@
+//! Graph-compiler property tests: epilogue fusion bit-identity (float
+//! and int8, dense/grouped/depthwise, every engine), the int8 requant
+//! chain's fixed-point rounding contract (and scalar-vs-SIMD
+//! bit-identity), compiled-vs-uncompiled model agreement on the
+//! ResNet/MobileNet configs, and the compiled int8 MobileNet through
+//! the server path with zero steady-state workspace allocations.
+//!
+//! Several tests read process-global state (the dequantize counter,
+//! the kernel-dispatch override); `GLOBAL_LOCK` serializes them within
+//! this binary.
+
+use sfc::engine::{
+    all_engines, default_selector, ConvDesc, ConvEngine, Epilogue, QuantSpec, Workspace,
+};
+use sfc::nn::model::{mobilenet_cfg, mobilenet_random, resnet18_cfg, resnet_random};
+use sfc::nn::Tensor;
+use sfc::quant::qconv::{collect_act_maxima, QCalib, QConvLayer};
+use sfc::quant::{dequant_materializations, quantize_model, QParams, QTensor, QuantConfig};
+use sfc::util::Pcg32;
+use std::sync::Mutex;
+
+static GLOBAL_LOCK: Mutex<()> = Mutex::new(());
+
+fn rand_tensor(dims: &[usize], rng: &mut Pcg32, sigma: f64) -> Tensor {
+    let mut t = Tensor::zeros(dims);
+    rng.fill_gaussian(&mut t.data, sigma);
+    t
+}
+
+/// Standalone ReLU with the graph kernel's exact comparison.
+fn relu_ref(t: &mut Tensor) {
+    for v in t.data.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// (a), float arm: for every engine × dense/grouped/depthwise geometry
+/// it supports, the fused conv+ReLU epilogue is bit-identical to the
+/// unfused conv followed by a standalone ReLU pass.
+#[test]
+fn fused_conv_relu_bit_identical_float_all_engines() {
+    let mut rng = Pcg32::seeded(0xF0);
+    let geoms = [
+        ("dense", ConvDesc::new(1, 8, 8, 12, 12, 3, 1, 1)),
+        ("groups=2", ConvDesc::new(1, 8, 8, 12, 12, 3, 1, 1).with_groups(2)),
+        ("depthwise", ConvDesc::new(1, 8, 8, 12, 12, 3, 1, 1).with_groups(8)),
+    ];
+    for (label, d) in geoms {
+        let x = rand_tensor(&[1, d.ic, d.h, d.w], &mut rng, 1.0);
+        let w = rand_tensor(&[d.oc, d.ic / d.groups, d.r, d.r], &mut rng, 0.3);
+        // negative biases guarantee the ReLU actually clamps something
+        let bias: Vec<f32> = (0..d.oc).map(|i| -0.4 + 0.05 * i as f32).collect();
+        for e in all_engines() {
+            if !e.supports(&d) {
+                continue;
+            }
+            let plain = e.plan(&d).unwrap();
+            let fused = e.plan(&d.with_epilogue(Epilogue::Relu)).unwrap();
+            let mut want = plain.run(&x, &w, &bias);
+            assert!(want.data.iter().any(|v| *v < 0.0), "{label} {}: nothing to clamp", e.name());
+            relu_ref(&mut want);
+            let got = fused.run(&x, &w, &bias);
+            assert_eq!(got.data, want.data, "{label} {}: fused epilogue drifted", e.name());
+        }
+    }
+}
+
+/// (a), int8 arm: the fused epilogue on quantized executors (spatial
+/// direct, spatial NTT, transform-domain SFC; dense/grouped/depthwise
+/// where supported) is bit-identical to the unfused quantized conv
+/// followed by a standalone ReLU.
+#[test]
+fn fused_conv_relu_bit_identical_int8() {
+    let _g = GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Pcg32::seeded(0xF1);
+    let sel = default_selector();
+    // spatial scheme on direct (all geometries) + NTT (dense)
+    let spatial = QuantSpec::spatial_default(8);
+    let cases = [
+        ("direct", ConvDesc::new(1, 8, 8, 12, 12, 3, 1, 1).with_quant(spatial)),
+        ("direct", ConvDesc::new(1, 8, 8, 12, 12, 3, 1, 1).with_groups(2).with_quant(spatial)),
+        ("direct", ConvDesc::new(1, 8, 8, 12, 12, 3, 1, 1).with_groups(8).with_quant(spatial)),
+        ("NTT", ConvDesc::new(1, 8, 8, 12, 12, 3, 1, 1).with_quant(spatial)),
+        (
+            "SFC-6(6x6,3x3)",
+            ConvDesc::new(1, 8, 8, 12, 12, 3, 1, 1)
+                .with_quant(QuantSpec::transform_default(8)),
+        ),
+        (
+            "SFC-6(6x6,3x3)",
+            ConvDesc::new(1, 8, 8, 12, 12, 3, 1, 1)
+                .with_groups(8)
+                .with_quant(QuantSpec::transform_default(8)),
+        ),
+    ];
+    for (engine, d) in cases {
+        let x = rand_tensor(&[1, d.ic, d.h, d.w], &mut rng, 1.0);
+        let w = rand_tensor(&[d.oc, d.ic / d.groups, d.r, d.r], &mut rng, 0.3);
+        let bias: Vec<f32> = (0..d.oc).map(|i| -0.3 + 0.04 * i as f32).collect();
+        let plain = sel.plan_named(engine, &d).unwrap();
+        let fused = sel.plan_named(engine, &d.with_epilogue(Epilogue::Relu)).unwrap();
+        let build = |plan: std::sync::Arc<sfc::engine::ConvPlan>| -> QConvLayer {
+            match plan.fast_plan() {
+                Some(fast) => {
+                    let maxima = collect_act_maxima(&x, fast, d.pad);
+                    QConvLayer::from_plan(plan, &w, bias.clone(), &QCalib::TransformMaxima(&maxima))
+                }
+                None => QConvLayer::from_plan(plan, &w, bias.clone(), &QCalib::MaxAbs(x.max_abs())),
+            }
+        };
+        let q_plain = build(plain);
+        let q_fused = build(fused);
+        let mut want = q_plain.forward(&x);
+        assert!(want.data.iter().any(|v| *v < 0.0), "{engine} g{}: nothing to clamp", d.groups);
+        relu_ref(&mut want);
+        let got = q_fused.forward(&x);
+        assert_eq!(got.data, want.data, "{engine} g{}: fused int8 epilogue drifted", d.groups);
+    }
+}
+
+/// Build a calibrated spatial int8 layer + the output quantizer of a
+/// hypothetical consumer, for the requant-contract tests.
+fn spatial_layer(
+    engine: &str,
+    d: ConvDesc,
+    x: &Tensor,
+    w: &Tensor,
+    bias: Vec<f32>,
+) -> (QConvLayer, QParams) {
+    let plan = default_selector().plan_named(engine, &d).unwrap();
+    let q = QConvLayer::from_plan(plan, w, bias, &QCalib::MaxAbs(x.max_abs()));
+    // consumer input quantizer calibrated on the layer's own output
+    let y = q.forward(x);
+    let out_qp = QParams::from_max_abs(y.max_abs(), 8);
+    (q, out_qp)
+}
+
+/// (b): the integer requant chain matches the dequantize→quantize
+/// reference within one output code (the ≤1-ulp fixed-point rounding
+/// contract), with and without the fused ReLU, and the NTT spatial
+/// path produces bit-identical int8 codes to the direct path.
+#[test]
+fn requant_chain_matches_dequant_quantize_reference() {
+    let _g = GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Pcg32::seeded(0xB2);
+    for ep in [Epilogue::None, Epilogue::Relu] {
+        let d = ConvDesc::new(2, 4, 6, 10, 10, 3, 1, 1)
+            .with_epilogue(ep)
+            .with_quant(QuantSpec::spatial_default(8));
+        let x = rand_tensor(&[2, 4, 10, 10], &mut rng, 1.0);
+        let w = rand_tensor(&[6, 4, 3, 3], &mut rng, 0.3);
+        let bias: Vec<f32> = (0..6).map(|i| 0.1 * i as f32 - 0.2).collect();
+        let (mut q, out_qp) = spatial_layer("direct", d, &x, &w, bias.clone());
+        let yf = q.forward(&x); // f32 reference (epilogue applied)
+        assert!(q.install_requant(out_qp));
+        let mut ws = Workspace::new();
+        let mut qt = QTensor {
+            dims: q.out_dims(&x),
+            data: vec![0i8; yf.len()],
+            scale: 0.0,
+        };
+        q.forward_into_q(&x, &mut ws, &mut qt);
+        assert_eq!(qt.scale, out_qp.scale);
+        for (i, (&code, &yv)) in qt.data.iter().zip(&yf.data).enumerate() {
+            let want = out_qp.quantize(yv);
+            assert!(
+                (code as i32 - want).abs() <= 1,
+                "elem {i} ({ep:?}): int8 chain {code} vs reference {want} (y {yv})"
+            );
+        }
+        // the NTT spatial path shares the exact accumulators and the
+        // same requant sweep, so its codes must match to the bit
+        let dn = ConvDesc::new(2, 4, 6, 10, 10, 3, 1, 1)
+            .with_epilogue(ep)
+            .with_quant(QuantSpec::spatial_default(8));
+        let (mut qn, _) = spatial_layer("NTT", dn, &x, &w, bias);
+        assert!(qn.install_requant(out_qp));
+        let mut qt2 = QTensor {
+            dims: qn.out_dims(&x),
+            data: vec![0i8; yf.len()],
+            scale: 0.0,
+        };
+        qn.forward_into_q(&x, &mut ws, &mut qt2);
+        assert_eq!(qt.data, qt2.data, "NTT vs direct int8 codes ({ep:?})");
+    }
+}
+
+/// (b), dispatch arms: the whole int8-producing layer is bit-identical
+/// between the scalar and dispatched (SIMD, where present) kernels.
+#[test]
+fn requant_chain_bit_identical_across_dispatch_arms() {
+    let _g = GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    use sfc::linalg::simd::{self, Kernel};
+    let mut rng = Pcg32::seeded(0xB3);
+    let d = ConvDesc::new(1, 4, 4, 11, 9, 3, 1, 1).with_quant(QuantSpec::spatial_default(8));
+    let x = rand_tensor(&[1, 4, 11, 9], &mut rng, 1.0);
+    let w = rand_tensor(&[4, 4, 3, 3], &mut rng, 0.3);
+    let (mut q, out_qp) = spatial_layer("direct", d, &x, &w, vec![0.05, -0.1, 0.2, 0.0]);
+    assert!(q.install_requant(out_qp));
+    let run = || {
+        let mut ws2 = Workspace::new();
+        let mut qt = QTensor {
+            dims: q.out_dims(&x),
+            data: vec![0i8; q.out_dims(&x).iter().product()],
+            scale: 0.0,
+        };
+        q.forward_into_q(&x, &mut ws2, &mut qt);
+        qt.data
+    };
+    let dispatched = run();
+    simd::set_kernel_override(Some(Kernel::Scalar));
+    let scalar = run();
+    simd::set_kernel_override(None);
+    assert_eq!(dispatched, scalar, "requant output depends on the dispatch arm");
+}
+
+/// (c), float arm: compiling (epilogue fusion + AddRelu + DCE) is
+/// bit-identical end-to-end on the ResNet-18 and MobileNet configs,
+/// and fuses the expected node counts.
+#[test]
+fn compiled_equals_uncompiled_float_models() {
+    let mut rng = Pcg32::seeded(0xC0);
+    let x = rand_tensor(&[2, 3, 32, 32], &mut rng, 1.0);
+
+    let mut resnet = resnet_random(&resnet18_cfg(), 21, 10);
+    let want = resnet.forward(&x);
+    let report = resnet.compile();
+    // stem + one relu1 per basic block fuse into convs; every residual
+    // relu2 fuses into its Add
+    assert_eq!(report.conv_relu_fused, 9, "{report:?}");
+    assert_eq!(report.add_relu_fused, 8, "{report:?}");
+    assert_eq!(report.dead_removed, 0, "{report:?}");
+    resnet.prepack_weights();
+    assert_eq!(resnet.forward(&x).data, want.data, "resnet18 compiled forward drifted");
+
+    let mut mobilenet = mobilenet_random(&mobilenet_cfg(), 22, 10);
+    let want = mobilenet.forward(&x);
+    let report = mobilenet.compile();
+    assert_eq!(report.conv_relu_fused, 7, "{report:?}");
+    assert_eq!(report.add_relu_fused, 0, "{report:?}");
+    mobilenet.prepack_weights();
+    assert_eq!(mobilenet.forward(&x).data, want.data, "mobilenet compiled forward drifted");
+}
+
+/// (c), int8 arm + the acceptance criterion: the compiled int8
+/// MobileNet keeps every conv→conv edge in int8 — a full forward
+/// materializes exactly ONE f32 activation from a quantized conv (the
+/// graph exit) — and the compiled model agrees with the uncompiled
+/// quantized reference.
+#[test]
+fn compiled_int8_mobilenet_zero_f32_between_convs() {
+    let _g = GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Pcg32::seeded(0xC1);
+    let x = rand_tensor(&[2, 3, 32, 32], &mut rng, 1.0);
+    let mut m = mobilenet_random(&mobilenet_cfg(), 23, 10);
+    let mut cfg = QuantConfig::direct_default(8);
+    cfg.adaquant = false;
+    let done = quantize_model(&mut m, &x, &cfg);
+    assert_eq!(done.len(), 7, "direct PTQ must take every conv");
+    let want = m.forward(&x); // uncompiled quantized reference
+    let report = m.compile();
+    // stem→dw→pw→dw→pw→dw→pw: 6 interior edges carry int8
+    assert_eq!(report.int8_links, 6, "{report:?}");
+    assert_eq!(report.conv_relu_fused, 7, "{report:?}");
+    let before = dequant_materializations();
+    let got = m.forward(&x);
+    let delta = dequant_materializations() - before;
+    assert_eq!(
+        delta, 1,
+        "exactly one f32 materialization (the graph exit); interior conv→conv edges stay int8"
+    );
+    // the integer requant chain is within 1 code per activation of the
+    // dequantize→quantize reference; after 7 layers the logits stay
+    // close and the ranking is stable
+    let denom = want.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / want.len() as f64;
+    let rel = got.mse(&want) / denom.max(1e-30);
+    assert!(rel < 5e-2, "compiled int8 vs uncompiled quantized rel MSE {rel}");
+    // compile is report-idempotent on the quantized graph too: the
+    // second run finds the requant stages already installed
+    let report2 = m.compile();
+    assert_eq!(report2.int8_links, 0, "{report2:?}");
+    assert_eq!(report2.conv_relu_fused, 0, "{report2:?}");
+}
+
+/// (c), int8 arm on the residual topology: ResNet-18 under the spatial
+/// scheme compiles with int8 links on every conv1→conv2 edge and stays
+/// close to the uncompiled quantized model.
+#[test]
+fn compiled_int8_resnet_links_and_agreement() {
+    let _g = GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Pcg32::seeded(0xC2);
+    let x = rand_tensor(&[2, 3, 32, 32], &mut rng, 1.0);
+    let mut m = resnet_random(&resnet18_cfg(), 24, 10);
+    let mut cfg = QuantConfig::direct_default(8);
+    cfg.adaquant = false;
+    let done = quantize_model(&mut m, &x, &cfg);
+    assert_eq!(done.len(), 20, "direct PTQ must take every conv");
+    let want = m.forward(&x);
+    let report = m.compile();
+    // one conv1→conv2 link per basic block; convs feeding the residual
+    // Add (conv2, proj, fused stem) stay f32-producing
+    assert_eq!(report.int8_links, 8, "{report:?}");
+    let got = m.forward(&x);
+    let denom = want.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / want.len() as f64;
+    let rel = got.mse(&want) / denom.max(1e-30);
+    assert!(rel < 5e-2, "compiled int8 resnet vs uncompiled rel MSE {rel}");
+}
+
+/// The quantized-e2e serving smoke (run by CI in both dispatch arms):
+/// the compiled int8 MobileNet through the server batcher keeps the
+/// zero-steady-state-allocation workspace guarantee.
+#[test]
+fn compiled_int8_mobilenet_server_steady_state_alloc_free() {
+    let _g = GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    use sfc::coordinator::{Server, ServerConfig};
+    use sfc::runtime::EngineExecutor;
+    let mut rng = Pcg32::seeded(0xC3);
+    let calib = rand_tensor(&[4, 3, 32, 32], &mut rng, 1.0);
+    let mut m = mobilenet_random(&mobilenet_cfg(), 25, 10);
+    let mut cfg = QuantConfig::direct_default(8);
+    cfg.adaquant = false;
+    quantize_model(&mut m, &calib, &cfg);
+    // from_model runs the graph compiler (fusion + int8 dataflow)
+    let exe = EngineExecutor::from_model(m, vec![4, 3, 32, 32], 10);
+    let server = Server::start(
+        move || Ok(exe),
+        ServerConfig { batch_size: 4, queue_depth: 32, batch_timeout_ms: 1 },
+    )
+    .unwrap();
+    let sample = 3 * 32 * 32;
+    let submit_wait = |k: usize| {
+        let handles: Vec<_> =
+            (0..k).map(|_| server.submit(vec![0.25f32; sample]).unwrap()).collect();
+        for h in handles {
+            let r = h.wait().unwrap();
+            assert_eq!(r.logits.len(), 10);
+            assert!(r.logits.iter().all(|v| v.is_finite()));
+        }
+    };
+    submit_wait(8); // warm-up fills the pools (f32 + int8 + i32 buffers)
+    let warm_allocs = server.ws_heap_allocs();
+    assert!(warm_allocs > 0 && server.ws_peak_bytes() > 0);
+    submit_wait(16);
+    assert_eq!(
+        server.ws_heap_allocs(),
+        warm_allocs,
+        "compiled int8 serving must perform zero steady-state workspace heap allocations"
+    );
+    server.shutdown();
+}
