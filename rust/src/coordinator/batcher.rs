@@ -1,18 +1,20 @@
-//! Dynamic batcher: bounded request queue → fixed-batch execution.
+//! Single-model dynamic batcher — now a thin shim over the multi-model
+//! scheduler in [`super::sched`].
 //!
-//! Requests queue into a bounded channel (sync_channel gives natural
-//! backpressure); the batcher thread drains up to `batch_size` requests,
-//! waiting at most `batch_timeout_ms` for stragglers, pads the final
-//! partial batch with zeros, executes on the PJRT model and completes the
-//! per-request response channels.
+//! The original `Server` API (blocking bounded-queue submit, fixed batch
+//! size with a straggler timeout, padded tail batches, per-worker
+//! workspace) is preserved exactly for existing callers and tests, but
+//! the batching/queueing machinery lives in [`super::sched::MultiServer`]
+//! with this type registering one model named `"default"`. Gained along
+//! the way: graceful shutdown now *drains* queued requests (executes
+//! them and completes their waiters) and fails anything the worker never
+//! reached with the typed [`super::sched::ServerStopped`] error instead
+//! of leaving callers blocked.
 
+use super::sched::{self, MultiServer, SchedConfig};
 use crate::engine::Workspace;
 use crate::runtime::{EngineExecutor, Executor};
 use anyhow::Result;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
-use std::sync::Arc;
-use std::time::{Duration, Instant};
 
 /// What the batcher needs from a model backend. `Executor` (PJRT) and
 /// the workspace-backed [`EngineExecutor`] are the production impls;
@@ -20,7 +22,9 @@ use std::time::{Duration, Instant};
 pub trait ModelRunner {
     /// flattened NCHW input dims (index 0 = batch)
     fn input_dims(&self) -> &[usize];
+    /// number of classes in each logits row
     fn out_classes(&self) -> usize;
+    /// run one padded batch, returning `[batch, classes]` logits
     fn run(&self, batch: &[f32]) -> Result<Vec<f32>>;
     /// Workspace-aware entry point: the batcher worker owns one
     /// [`Workspace`] for its lifetime and passes it to every batch, so
@@ -30,6 +34,7 @@ pub trait ModelRunner {
     fn run_with(&self, batch: &[f32], _ws: &mut Workspace) -> Result<Vec<f32>> {
         self.run(batch)
     }
+    /// backend platform name for the startup banner
     fn platform(&self) -> String {
         "mock".into()
     }
@@ -89,45 +94,34 @@ pub struct Response {
     pub latency_s: f64,
 }
 
-struct Request {
-    image: Vec<f32>,
-    enqueued: Instant,
-    reply: Sender<Result<Response, String>>,
-}
-
 /// Handle for one in-flight request.
 pub struct Pending {
-    rx: Receiver<Result<Response, String>>,
+    ticket: sched::Ticket,
 }
 
 impl Pending {
     /// Block until the batcher completes this request.
     pub fn wait(self) -> Result<Response> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server dropped request"))?
-            .map_err(|e| anyhow::anyhow!(e))
+        match self.ticket.wait()? {
+            sched::Response::Done(c) => {
+                Ok(Response { logits: c.logits, argmax: c.argmax, latency_s: c.latency_s })
+            }
+            // unreachable through this shim: blocking submit never sheds
+            // and the effectively-infinite deadline never expires
+            sched::Response::Shed(s) => {
+                anyhow::bail!("request unexpectedly shed ({})", s.reason.name())
+            }
+        }
     }
 }
 
-/// Worker-side resource counters, published after every batch.
-#[derive(Default)]
-struct WorkerStats {
-    /// peak bytes checked out of the worker's workspace
-    ws_peak_bytes: AtomicU64,
-    /// workspace checkouts that fell back to the heap (pool misses);
-    /// stops growing once serving reaches steady state
-    ws_heap_allocs: AtomicU64,
-}
+/// the single resident model registered by the shim
+const SHIM_MODEL: &str = "default";
 
 /// Handle to a running batcher: submit requests, read worker stats,
-/// shut down.
+/// shut down. One-model shim over [`MultiServer`].
 pub struct Server {
-    tx: SyncSender<Request>,
-    stop: Arc<AtomicBool>,
-    batches: Arc<AtomicU64>,
-    stats: Arc<WorkerStats>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    inner: MultiServer,
 }
 
 impl Server {
@@ -140,166 +134,57 @@ impl Server {
         R: ModelRunner,
         F: FnOnce() -> Result<R> + Send + 'static,
     {
-        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        let stop = Arc::new(AtomicBool::new(false));
-        let batches = Arc::new(AtomicU64::new(0));
-        let stats = Arc::new(WorkerStats::default());
-        let stop2 = stop.clone();
-        let batches2 = batches.clone();
-        let stats2 = stats.clone();
-        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<String, String>>();
-        let worker = std::thread::spawn(move || {
-            let exe = match factory() {
-                Ok(e) => {
-                    let _ = ready_tx.send(Ok(e.platform()));
-                    e
-                }
-                Err(err) => {
-                    let _ = ready_tx.send(Err(format!("{err:#}")));
-                    return;
-                }
-            };
-            batch_loop(exe, cfg, rx, stop2, batches2, stats2)
+        let inner = MultiServer::new(SchedConfig {
+            queue_depth: cfg.queue_depth,
+            // legacy requests carry no deadline: make it unreachable so
+            // deadline shedding can never fire through this API
+            default_deadline_ms: 3_600_000,
+            linger_ms: cfg.batch_timeout_ms,
+            packed_budget_bytes: 0,
         });
-        match ready_rx.recv() {
-            Ok(Ok(platform)) => {
-                println!("server ready on platform: {platform}");
-                Ok(Server { tx, stop, batches, stats, worker: Some(worker) })
-            }
-            Ok(Err(e)) => {
-                let _ = worker.join();
-                Err(anyhow::anyhow!(e))
-            }
-            Err(_) => Err(anyhow::anyhow!("worker died during startup")),
-        }
+        let platform = inner.add_model(SHIM_MODEL, factory)?;
+        println!("server ready on platform: {platform}");
+        Ok(Server { inner })
     }
 
     /// Submit one image (CHW flattened); returns a wait handle.
     /// Blocks when the queue is full (backpressure).
     pub fn submit(&self, image: Vec<f32>) -> Result<Pending> {
-        let (reply, rx) = std::sync::mpsc::channel();
-        self.tx
-            .send(Request { image, enqueued: Instant::now(), reply })
-            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
-        Ok(Pending { rx })
+        let ticket = self.inner.submit_blocking(SHIM_MODEL, image)?;
+        Ok(Pending { ticket })
     }
 
     /// Number of batches the worker has executed so far.
     pub fn batches_executed(&self) -> u64 {
-        self.batches.load(Ordering::Relaxed)
+        self.inner.snapshot(SHIM_MODEL).map(|s| s.batches).unwrap_or(0)
     }
 
     /// Peak bytes checked out of the worker's workspace so far.
     pub fn ws_peak_bytes(&self) -> u64 {
-        self.stats.ws_peak_bytes.load(Ordering::Relaxed)
+        self.inner.snapshot(SHIM_MODEL).map(|s| s.ws_peak_bytes).unwrap_or(0)
     }
 
     /// Workspace checkouts that fell back to a heap allocation. After
     /// the warm-up batch this must stop growing — the steady-state
     /// zero-alloc property asserted by the runtime e2e test.
     pub fn ws_heap_allocs(&self) -> u64 {
-        self.stats.ws_heap_allocs.load(Ordering::Relaxed)
+        self.inner.snapshot(SHIM_MODEL).map(|s| s.ws_heap_allocs).unwrap_or(0)
     }
 
-    /// Stop the worker thread and join it.
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        drop(self.tx.clone()); // original tx dropped in Drop
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-    }
-}
-
-impl Drop for Server {
-    fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-    }
-}
-
-fn batch_loop<R: ModelRunner>(
-    exe: R,
-    cfg: ServerConfig,
-    rx: Receiver<Request>,
-    stop: Arc<AtomicBool>,
-    batches: Arc<AtomicU64>,
-    stats: Arc<WorkerStats>,
-) {
-    let sample: usize = exe.input_dims()[1..].iter().product();
-    let classes = exe.out_classes();
-    // One workspace and one padded input buffer for the worker's
-    // lifetime: after the first batch warms the pools, steady-state
-    // serving checks every buffer out of the arena.
-    let mut ws = Workspace::new();
-    let mut input = vec![0f32; cfg.batch_size * sample];
-    loop {
-        // collect a batch
-        let mut batch: Vec<Request> = Vec::with_capacity(cfg.batch_size);
-        match rx.recv_timeout(Duration::from_millis(50)) {
-            Ok(r) => batch.push(r),
-            Err(RecvTimeoutError::Timeout) => {
-                if stop.load(Ordering::Relaxed) {
-                    return;
-                }
-                continue;
-            }
-            Err(RecvTimeoutError::Disconnected) => return,
-        }
-        let deadline = Instant::now() + Duration::from_millis(cfg.batch_timeout_ms);
-        while batch.len() < cfg.batch_size {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        // pad + execute (the input buffer is reused; zero the tail pad)
-        input[batch.len() * sample..].fill(0.0);
-        for (i, r) in batch.iter().enumerate() {
-            input[i * sample..(i + 1) * sample].copy_from_slice(&r.image);
-        }
-        let result = exe.run_with(&input, &mut ws);
-        batches.fetch_add(1, Ordering::Relaxed);
-        stats.ws_peak_bytes.store(ws.peak_bytes() as u64, Ordering::Relaxed);
-        stats.ws_heap_allocs.store(ws.heap_allocs(), Ordering::Relaxed);
-        match result {
-            Ok(logits) => {
-                for (i, r) in batch.into_iter().enumerate() {
-                    let row = logits[i * classes..(i + 1) * classes].to_vec();
-                    let argmax = row
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(k, _)| k)
-                        .unwrap_or(0);
-                    let _ = r.reply.send(Ok(Response {
-                        logits: row,
-                        argmax,
-                        latency_s: r.enqueued.elapsed().as_secs_f64(),
-                    }));
-                }
-            }
-            Err(e) => {
-                let msg = format!("execute failed: {e}");
-                for r in batch {
-                    let _ = r.reply.send(Err(msg.clone()));
-                }
-            }
-        }
+    /// Stop the worker: queued requests are drained (executed, waiters
+    /// completed), stragglers fail with the typed
+    /// [`sched::ServerStopped`] error, and the worker thread is joined.
+    /// Subsequent `submit` calls error immediately.
+    pub fn shutdown(self) {
+        self.inner.shutdown();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicUsize;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
 
     /// Mock model: logit k = image[0] for class (image[0] as usize), so
     /// the argmax round-trips the input deterministically.
@@ -307,6 +192,7 @@ mod tests {
         dims: Vec<usize>,
         calls: Arc<AtomicUsize>,
         fail: bool,
+        delay_ms: u64,
     }
 
     impl ModelRunner for Mock {
@@ -320,6 +206,9 @@ mod tests {
             self.calls.fetch_add(1, Ordering::Relaxed);
             if self.fail {
                 anyhow::bail!("injected failure");
+            }
+            if self.delay_ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(self.delay_ms));
             }
             let sample: usize = self.dims[1..].iter().product();
             let n = self.dims[0];
@@ -336,9 +225,7 @@ mod tests {
         let calls = Arc::new(AtomicUsize::new(0));
         let calls2 = calls.clone();
         let server = Server::start(
-            move || {
-                Ok(Mock { dims: vec![batch, 1, 2, 2], calls: calls2, fail })
-            },
+            move || Ok(Mock { dims: vec![batch, 1, 2, 2], calls: calls2, fail, delay_ms: 0 }),
             ServerConfig { batch_size: batch, queue_depth: 16, batch_timeout_ms: 1 },
         )
         .unwrap();
@@ -397,5 +284,31 @@ mod tests {
             ServerConfig { batch_size: 1, queue_depth: 1, batch_timeout_ms: 1 },
         );
         assert!(r.is_err());
+    }
+
+    /// The graceful-shutdown satellite: requests queued behind a slow
+    /// batch are *drained* by shutdown — executed and answered, not
+    /// dropped — so every waiter completes successfully.
+    #[test]
+    fn shutdown_drains_queued_requests() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let calls2 = calls.clone();
+        let server = Server::start(
+            move || Ok(Mock { dims: vec![2, 1, 2, 2], calls: calls2, fail: false, delay_ms: 5 }),
+            ServerConfig { batch_size: 2, queue_depth: 16, batch_timeout_ms: 1 },
+        )
+        .unwrap();
+        let handles: Vec<_> = (0..8).map(|_| server.submit(vec![1f32; 4]).unwrap()).collect();
+        // shut down while most of those 8 are still queued behind the
+        // 5 ms-per-batch worker
+        let waiter = std::thread::spawn(move || {
+            handles.into_iter().map(|h| h.wait()).collect::<Vec<_>>()
+        });
+        server.shutdown();
+        for (i, r) in waiter.join().unwrap().into_iter().enumerate() {
+            let resp = r.unwrap_or_else(|e| panic!("request {i} lost in shutdown: {e}"));
+            assert_eq!(resp.argmax, 1, "request {i}");
+        }
+        assert!(calls.load(Ordering::Relaxed) >= 4, "all queued batches must have executed");
     }
 }

@@ -1,5 +1,5 @@
-//! Serving-layer metrics: latency statistics and engine plan-cache
-//! counters.
+//! Serving-layer metrics: latency statistics (exact and streaming),
+//! per-model scheduler gauges, and engine plan-cache counters.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -85,9 +85,194 @@ impl LatencyStats {
     }
 }
 
+/// Geometric bucket count of a [`StreamingHistogram`] — fixed, so the
+/// memory footprint is bounded no matter how many samples are recorded.
+pub const HIST_BUCKETS: usize = 256;
+/// Histogram floor (seconds): everything below lands in bucket 0.
+const HIST_MIN_S: f64 = 1e-6;
+/// Histogram ceiling (seconds): everything above lands in the top bucket.
+const HIST_MAX_S: f64 = 1e2;
+
+/// Geometric growth factor between bucket boundaries: `HIST_BUCKETS - 2`
+/// log-spaced buckets cover [`HIST_MIN_S`, `HIST_MAX_S`] (plus one
+/// underflow and one overflow bucket), giving ≈ 3.7 % worst-case
+/// relative quantile error — far below the run-to-run noise of any
+/// latency distribution worth a p99.
+fn hist_growth() -> f64 {
+    (HIST_MAX_S / HIST_MIN_S).powf(1.0 / (HIST_BUCKETS - 2) as f64)
+}
+
+/// Streaming latency histogram with bounded memory: a fixed array of
+/// geometrically spaced buckets (HDR-histogram style). `record` is O(1)
+/// and allocation-free, quantile queries walk the cumulative counts, and
+/// two histograms over disjoint sample sets [`StreamingHistogram::merge`]
+/// into exactly the histogram of the concatenated set — the properties
+/// the scheduler needs to keep per-model p50/p99 under sustained load
+/// without retaining per-request samples (which `LatencyStats` does).
+#[derive(Clone, Debug)]
+pub struct StreamingHistogram {
+    counts: Vec<u64>,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for StreamingHistogram {
+    fn default() -> Self {
+        StreamingHistogram::new()
+    }
+}
+
+impl StreamingHistogram {
+    /// An empty histogram ([`HIST_BUCKETS`] zeroed buckets).
+    pub fn new() -> StreamingHistogram {
+        StreamingHistogram {
+            counts: vec![0; HIST_BUCKETS],
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+
+    fn bucket_index(v: f64) -> usize {
+        if !(v > HIST_MIN_S) {
+            return 0;
+        }
+        let idx = 1 + ((v / HIST_MIN_S).ln() / hist_growth().ln()).floor() as usize;
+        idx.min(HIST_BUCKETS - 1)
+    }
+
+    /// Record one sample (seconds). Negative/NaN samples count into the
+    /// underflow bucket rather than poisoning the quantiles.
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        self.counts[Self::bucket_index(v)] += 1;
+        self.n += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Arithmetic mean of the recorded samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Largest recorded sample (exact, tracked outside the buckets).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Smallest recorded sample (exact; 0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Estimated `q`-quantile (q in [0, 1]) of the recorded samples:
+    /// the geometric midpoint of the bucket holding the `ceil(q·n)`-th
+    /// sample, clamped to the exact observed [min, max]. Returns 0 on an
+    /// empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.n as f64).ceil() as u64).clamp(1, self.n);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let rep = if i == 0 {
+                    HIST_MIN_S
+                } else {
+                    let lower = HIST_MIN_S * hist_growth().powi(i as i32 - 1);
+                    lower * hist_growth().sqrt()
+                };
+                return rep.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Median estimate.
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    /// 99th-percentile estimate.
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Fold `other` into `self`: afterwards `self` is exactly the
+    /// histogram that would have resulted from recording both sample
+    /// streams into one instance (bucket-wise sum; min/max/mean exact).
+    pub fn merge(&mut self, other: &StreamingHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of buckets held — constant ([`HIST_BUCKETS`]) regardless
+    /// of how many samples were recorded (the bounded-memory property).
+    pub fn bucket_count(&self) -> usize {
+        self.counts.len()
+    }
+}
+
+/// Per-model serving gauges and counters, maintained by the
+/// [`crate::coordinator::sched`] scheduler and snapshotted into
+/// [`crate::coordinator::sched::ModelSnapshot`]. All atomics so the
+/// submit path and the worker update them without taking the queue lock.
+#[derive(Default)]
+pub struct ModelGauges {
+    /// requests accepted by `submit` (admitted or shed — every outcome
+    /// is accounted: `submitted == completed + shed + failed` once the
+    /// queue drains)
+    pub submitted: AtomicU64,
+    /// requests completed with logits
+    pub completed: AtomicU64,
+    /// requests shed by admission control, displacement or deadline
+    /// expiry (the typed `Response::Shed` outcomes)
+    pub shed: AtomicU64,
+    /// requests whose batch execution failed (error propagated to the
+    /// waiter)
+    pub failed: AtomicU64,
+    /// completed requests that finished at or before their deadline
+    pub deadline_met: AtomicU64,
+    /// current queue depth (gauge: stored, not accumulated)
+    pub queue_depth: AtomicU64,
+    /// batches the model's worker has executed
+    pub batches: AtomicU64,
+    /// peak bytes checked out of the worker's workspace
+    pub ws_peak_bytes: AtomicU64,
+    /// workspace checkouts that fell back to the heap; stops growing
+    /// once serving reaches steady state (the zero-alloc contract)
+    pub ws_heap_allocs: AtomicU64,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Pcg32;
 
     #[test]
     fn percentiles_ordered() {
@@ -104,5 +289,105 @@ mod tests {
         let st = LatencyStats::from_samples(&[0.5]);
         assert_eq!(st.p99, 0.5);
         assert_eq!(st.mean, 0.5);
+    }
+
+    #[test]
+    fn histogram_empty_and_single() {
+        let mut h = StreamingHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.p99(), 0.0);
+        h.record(0.025);
+        assert_eq!(h.count(), 1);
+        // one sample: every quantile is clamped onto it exactly
+        assert_eq!(h.p50(), 0.025);
+        assert_eq!(h.p99(), 0.025);
+        assert_eq!(h.max(), 0.025);
+    }
+
+    /// Property: on random sample sets spanning several orders of
+    /// magnitude, the streaming p50/p99 stay within the bucket
+    /// resolution (< 8 % relative error, see [`hist_growth`]) of the
+    /// exact sorted-sample quantiles.
+    #[test]
+    fn histogram_quantiles_track_exact_quantiles() {
+        let mut rng = Pcg32::seeded(0x51A7);
+        for trial in 0..20 {
+            let n = 200 + (rng.next_u32() % 2000) as usize;
+            let mut h = StreamingHistogram::new();
+            let mut samples = Vec::with_capacity(n);
+            for _ in 0..n {
+                // log-uniform over ~[100 µs, 1 s] plus a heavy tail
+                let v = 1e-4 * (9.21 * rng.next_f64()).exp();
+                let v = if rng.next_f64() < 0.05 { v * 10.0 } else { v };
+                h.record(v);
+                samples.push(v);
+            }
+            let exact = LatencyStats::from_samples(&samples);
+            for (got, want, name) in
+                [(h.p50(), exact.p50, "p50"), (h.p99(), exact.p99, "p99")]
+            {
+                let rel = (got - want).abs() / want;
+                assert!(
+                    rel < 0.08,
+                    "trial {trial}: {name} streaming {got} vs exact {want} (rel {rel:.3})"
+                );
+            }
+            assert!((h.mean() - exact.mean).abs() / exact.mean < 1e-9, "mean is exact");
+            assert_eq!(h.max(), exact.max, "max is exact");
+        }
+    }
+
+    /// Property: merging two histograms equals recording the
+    /// concatenated stream into one — bucket-exact, not approximate.
+    #[test]
+    fn histogram_merge_is_exact() {
+        let mut rng = Pcg32::seeded(0xDEAD);
+        let mut a = StreamingHistogram::new();
+        let mut b = StreamingHistogram::new();
+        let mut both = StreamingHistogram::new();
+        for i in 0..3000 {
+            let v = 1e-5 * (11.0 * rng.next_f64()).exp();
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.counts, both.counts);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.max(), both.max());
+        assert_eq!(a.min(), both.min());
+        assert!((a.mean() - both.mean()).abs() < 1e-12);
+        assert_eq!(a.p99(), both.p99());
+    }
+
+    /// Property: memory is bounded — the bucket array never grows, no
+    /// matter how many samples or how extreme their spread.
+    #[test]
+    fn histogram_memory_is_bounded() {
+        let mut h = StreamingHistogram::new();
+        assert_eq!(h.bucket_count(), HIST_BUCKETS);
+        for i in 0..100_000u64 {
+            h.record((i as f64) * 1e-7);
+        }
+        h.record(1e9); // overflow bucket
+        h.record(-3.0); // underflow bucket
+        h.record(f64::NAN); // must not poison anything
+        assert_eq!(h.bucket_count(), HIST_BUCKETS);
+        assert_eq!(h.count(), 100_003);
+        assert!(h.p99().is_finite() && h.p50() <= h.p99());
+    }
+
+    #[test]
+    fn histogram_out_of_range_samples_clamp() {
+        let mut h = StreamingHistogram::new();
+        h.record(1e-9); // below the floor
+        h.record(1e4); // above the ceiling
+        assert_eq!(h.count(), 2);
+        // quantiles stay within the exact observed range
+        assert!(h.quantile(0.0) >= h.min() && h.quantile(1.0) <= h.max());
     }
 }

@@ -1,18 +1,26 @@
-//! L3 serving coordinator: request router + dynamic batcher + worker over
-//! the PJRT executor, with latency/throughput metrics.
+//! L3 serving coordinator: multi-model scheduler + dynamic batcher +
+//! per-model workers, with latency/throughput/shed metrics.
 //!
 //! Architecture (vLLM-router-like, scaled to this paper's inference-kernel
-//! scope): clients submit single-image classification requests to a
-//! bounded queue (backpressure); a batcher thread drains the queue into
-//! fixed-size batches — padding the tail batch — and executes them on the
-//! AOT-compiled model; responses flow back through per-request channels.
-//! Everything is std-only (tokio is not vendored in this image).
+//! scope): clients submit single-image classification requests to a named
+//! resident model on the [`sched::MultiServer`]; a continuous batcher
+//! per model forms batches by per-request *deadline* (not fixed size),
+//! sheds lowest-priority work first under overload (typed
+//! [`sched::Response::Shed`] outcomes), and executes on the engine stack
+//! or the AOT-compiled PJRT model; responses flow back through
+//! per-request channels. The original single-model [`Server`] API is a
+//! shim over one resident model. Everything is std-only (tokio is not
+//! vendored in this image).
 
 pub mod batcher;
 pub mod metrics;
+pub mod sched;
 
-pub use batcher::{Server, ServerConfig};
+pub use batcher::{ModelRunner, Server, ServerConfig};
 pub use metrics::LatencyStats;
+pub use sched::{
+    ModelSnapshot, MultiServer, Priority, SchedConfig, ServerStopped, SubmitOpts, Ticket,
+};
 
 use crate::runtime::Executor;
 use anyhow::Result;
@@ -36,6 +44,33 @@ where
     }
 }
 
+/// Parse one `--model` spec `name[:intN]` → (model name, quant bits).
+fn parse_model_spec(spec: &str) -> Result<(&str, u32)> {
+    match spec.split_once(':') {
+        None => Ok((spec, 0)),
+        Some((name, q)) => {
+            let bits: u32 = q
+                .strip_prefix("int")
+                .and_then(|b| b.parse().ok())
+                .ok_or_else(|| anyhow::anyhow!("bad model spec '{spec}' (expected name[:intN])"))?;
+            anyhow::ensure!((2..=16).contains(&bits), "bad quant bits in model spec '{spec}'");
+            Ok((name, bits))
+        }
+    }
+}
+
+/// Load `--tuning <file>` (if given) and install it process-wide, so
+/// every selector pins tuned descriptors to their measured winner
+/// instead of re-running heuristics/micro-benchmarks.
+fn install_tuning(opts: &HashMap<String, String>) -> Result<()> {
+    if let Some(path) = opts.get("tuning") {
+        let table = crate::engine::TuningTable::load(std::path::Path::new(path))?;
+        println!("tuning: {} descriptors pinned from {path}", table.len());
+        crate::engine::tuning::install_global(table)?;
+    }
+    Ok(())
+}
+
 /// `sfc serve` — the end-to-end demo: load a model (PJRT AOT artifact,
 /// or the pure-Rust engine stack with `--runner engine`), serve a stream
 /// of requests from the SynthImage test split, report accuracy, latency
@@ -44,6 +79,11 @@ where
 /// the calibration split (spatial direct scheme on every conv), then
 /// the graph compiler fuses epilogues and installs the int8 dataflow —
 /// still under the zero-steady-state-alloc workspace guarantee.
+/// `--tuning tuning.json` warms engine selection from a committed
+/// autotune table. `--model a,b:int8` (comma-separated or repeated
+/// `--model` flags, engine runner) serves several resident models from
+/// the shared plan cache through the [`sched::MultiServer`], round-robin
+/// across the request stream.
 pub fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
     let data_dir = opts.get("data-dir").map(|s| s.as_str()).unwrap_or("artifacts");
     let default_hlo = format!("{data_dir}/resnet18_b8.hlo.txt");
@@ -56,6 +96,16 @@ pub fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
         quant_bits == 0 || runner == "engine",
         "--quant requires --runner engine (the PJRT artifact is fixed-precision)"
     );
+    install_tuning(opts)?;
+    if let Some(models) = opts.get("model") {
+        if models.contains(',') {
+            anyhow::ensure!(
+                runner == "engine",
+                "multi-model serving requires --runner engine (one PJRT artifact is one model)"
+            );
+            return serve_multi(opts, data_dir, models, requests, batch);
+        }
+    }
 
     let (images, labels) = crate::exp::load_split(data_dir, "test", requests)?;
     let cfg = ServerConfig { batch_size: batch, queue_depth: 64, batch_timeout_ms: 2 };
@@ -132,6 +182,197 @@ pub fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
     println!(
         "  packed wts : {:.1} KB pre-packed weight panels (plan-time, live)",
         metrics::packed_weight_bytes() as f64 / 1024.0
+    );
+    server.shutdown();
+    Ok(())
+}
+
+/// Split a comma-separated model list into trimmed, non-empty specs.
+fn split_specs(csv: &str) -> Vec<String> {
+    csv.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+}
+
+/// The multi-model arm of `sfc serve`: several engine-backed models
+/// resident on one [`MultiServer`], sharing the plan cache and the
+/// packed-weight budget, round-robin over the test-split request stream.
+fn serve_multi(
+    opts: &HashMap<String, String>,
+    data_dir: &str,
+    specs_csv: &str,
+    requests: usize,
+    batch: usize,
+) -> Result<()> {
+    let queue_depth: usize = parse_opt(opts, "queue-depth", 64)?;
+    let budget_mb: u64 = parse_opt(opts, "budget-mb", 0)?;
+    let linger_ms: u64 = parse_opt(opts, "linger-ms", 2)?;
+    let specs = split_specs(specs_csv);
+    let server = MultiServer::new(SchedConfig {
+        queue_depth,
+        default_deadline_ms: 60_000,
+        linger_ms,
+        packed_budget_bytes: budget_mb * 1024 * 1024,
+    });
+    let budget = crate::engine::PackBudget::new((budget_mb * 1024 * 1024) as usize);
+    let dims = vec![batch, 3, 32, 32];
+    for spec in &specs {
+        let (name, bits) = parse_model_spec(spec)?;
+        let name = name.to_string();
+        let dir = data_dir.to_string();
+        let dims2 = dims.clone();
+        let spec2 = spec.clone();
+        let platform = server.add_model(spec, move || {
+            let mut m = crate::exp::load_model(&dir, &name)?;
+            if bits > 0 {
+                let (calib, _) = crate::exp::load_split(&dir, "train", crate::exp::calib_n())?;
+                let qcfg = crate::quant::QuantConfig::direct_default(bits);
+                let done = crate::quant::quantize_model(&mut m, &calib, &qcfg);
+                println!("{spec2}: quantized {} conv layers (spatial int{bits})", done.len());
+            }
+            let (exe, rep) =
+                crate::runtime::EngineExecutor::from_model_budgeted(m, dims2, 10, &budget);
+            println!(
+                "{spec2}: pre-packed {} layers ({} skipped by budget, {:.1} KB)",
+                rep.packed_layers,
+                rep.skipped_layers,
+                rep.added_bytes as f64 / 1024.0
+            );
+            Ok(exe)
+        })?;
+        println!("model '{spec}' ready on platform: {platform}");
+    }
+    let (images, labels) = crate::exp::load_split(data_dir, "test", requests)?;
+    let sample = images.dims[1] * images.dims[2] * images.dims[3];
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let img = images.data[i * sample..(i + 1) * sample].to_vec();
+        let spec = &specs[i % specs.len()];
+        handles.push((i, server.submit_blocking(spec, img)?));
+    }
+    let mut correct = vec![0usize; specs.len()];
+    let mut served = vec![0usize; specs.len()];
+    for (i, h) in handles {
+        if let sched::Response::Done(c) = h.wait()? {
+            let mi = i % specs.len();
+            served[mi] += 1;
+            correct[mi] += (c.argmax == labels[i] as usize) as usize;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\nE2E multi-model serving ({requests} requests, batch {batch}, {} models, {:.1} img/s):",
+        specs.len(),
+        requests as f64 / wall
+    );
+    for (mi, spec) in specs.iter().enumerate() {
+        let s = server.snapshot(spec).expect("registered model");
+        println!(
+            "  {spec}: accuracy {:.2}% ({}/{}) · p50 {:.2} ms · p99 {:.2} ms · batches {} · \
+             shed {} · ws heap fallbacks {}",
+            100.0 * correct[mi] as f64 / served[mi].max(1) as f64,
+            correct[mi],
+            served[mi],
+            s.latency.p50() * 1e3,
+            s.latency.p99() * 1e3,
+            s.batches,
+            s.shed,
+            s.ws_heap_allocs
+        );
+    }
+    let (hits, misses) = metrics::plan_cache_counters();
+    println!("  plan cache : {hits} hits / {misses} misses (shared across models)");
+    println!(
+        "  packed wts : {:.1} KB live (budget {})",
+        metrics::packed_weight_bytes() as f64 / 1024.0,
+        if budget_mb > 0 { format!("{budget_mb} MB") } else { "unlimited".into() }
+    );
+    println!("  kernel     : {}", metrics::kernel_name());
+    server.shutdown();
+    Ok(())
+}
+
+/// `sfc loadgen` — drive a freshly built multi-model server (random
+/// weights, no artifacts needed) at a controlled QPS with a mixed
+/// model/priority/deadline scenario, and print the goodput/latency/shed
+/// report ([`crate::exp::loadgen`]). The measurement harness for the
+/// scheduler: overload it (`--qps` beyond capacity) and the report
+/// shows load shedding doing its job — low-priority sheds, high-priority
+/// goodput, flat workspace allocations, clean drain.
+pub fn cmd_loadgen(opts: &HashMap<String, String>) -> Result<()> {
+    let models_csv =
+        opts.get("models").cloned().unwrap_or_else(|| "resnet18,mobilenet:int8".into());
+    let qps: f64 = parse_opt(opts, "qps", 400.0)?;
+    let duration_s: f64 = parse_opt(opts, "duration-s", 2.0)?;
+    let deadline_ms: u64 = parse_opt(opts, "deadline-ms", 25)?;
+    let low_ratio: f64 = parse_opt(opts, "low-ratio", 0.6)?;
+    let batch: usize = parse_opt(opts, "batch", 8)?;
+    let queue_depth: usize = parse_opt(opts, "queue-depth", 32)?;
+    let budget_mb: u64 = parse_opt(opts, "budget-mb", 64)?;
+    let linger_ms: u64 = parse_opt(opts, "linger-ms", 2)?;
+    let seed: u64 = parse_opt(opts, "seed", 7)?;
+    install_tuning(opts)?;
+    let server = MultiServer::new(SchedConfig {
+        queue_depth,
+        default_deadline_ms: deadline_ms,
+        linger_ms,
+        packed_budget_bytes: budget_mb * 1024 * 1024,
+    });
+    let budget = crate::engine::PackBudget::new((budget_mb * 1024 * 1024) as usize);
+    let dims = vec![batch, 3, 32, 32];
+    let specs = split_specs(&models_csv);
+    anyhow::ensure!(!specs.is_empty(), "--models needs at least one model spec");
+    for spec in &specs {
+        let (name, bits) = parse_model_spec(spec)?;
+        let mut m = match name {
+            "resnet18" => crate::nn::model::resnet_random(&crate::nn::model::resnet18_cfg(), 1, 10),
+            "resnet34" => crate::nn::model::resnet_random(&crate::nn::model::resnet34_cfg(), 1, 10),
+            "resnet50" => crate::nn::model::resnet_random(&crate::nn::model::resnet50_cfg(), 1, 10),
+            "mobilenet" => {
+                crate::nn::model::mobilenet_random(&crate::nn::model::mobilenet_cfg(), 1, 10)
+            }
+            other => anyhow::bail!(
+                "unknown model '{other}' for loadgen (expected resnet18|resnet34|resnet50|mobilenet)"
+            ),
+        };
+        if bits > 0 {
+            let mut calib = crate::nn::Tensor::zeros(&[4, 3, 32, 32]);
+            crate::util::Pcg32::seeded(seed).fill_gaussian(&mut calib.data, 1.0);
+            let qcfg = crate::quant::QuantConfig::direct_default(bits);
+            let done = crate::quant::quantize_model(&mut m, &calib, &qcfg);
+            println!("{spec}: quantized {} conv layers (spatial int{bits})", done.len());
+        }
+        let dims2 = dims.clone();
+        let spec2 = spec.clone();
+        let platform = server.add_model(spec, move || {
+            let (exe, rep) =
+                crate::runtime::EngineExecutor::from_model_budgeted(m, dims2, 10, &budget);
+            println!(
+                "{spec2}: pre-packed {} layers ({} skipped by budget, {:.1} KB)",
+                rep.packed_layers,
+                rep.skipped_layers,
+                rep.added_bytes as f64 / 1024.0
+            );
+            Ok(exe)
+        })?;
+        println!("model '{spec}' ready on platform: {platform}");
+    }
+    let cfg = crate::exp::loadgen::LoadgenCfg { qps, duration_s, deadline_ms, low_ratio, seed };
+    let names = server.models();
+    println!(
+        "loadgen: {} models · {qps} qps offered · {duration_s} s · deadlines {deadline_ms}/{} ms \
+         (low/high) · {:.0}% low priority",
+        names.len(),
+        deadline_ms * 4,
+        low_ratio * 100.0
+    );
+    let reports = crate::exp::loadgen::run(&server, &names, &cfg)?;
+    crate::exp::loadgen::print_report(&reports);
+    let (hits, misses) = metrics::plan_cache_counters();
+    println!(
+        "loadgen: plan_cache_hits={hits} plan_cache_misses={misses} packed_kb={:.1} \
+         budget_mb={budget_mb} kernel={}",
+        metrics::packed_weight_bytes() as f64 / 1024.0,
+        metrics::kernel_name()
     );
     server.shutdown();
     Ok(())

@@ -1,0 +1,737 @@
+//! Multi-model serving scheduler: continuous batching with deadlines,
+//! admission control, and load shedding.
+//!
+//! [`MultiServer`] hosts several resident models (registered by name via
+//! [`MultiServer::add_model`], e.g. a float ResNet next to an int8
+//! MobileNet). All models share the process-wide
+//! [`crate::engine::PlanCache`] and a global packed-weight byte budget
+//! ([`SchedConfig::packed_budget_bytes`], enforced against
+//! [`crate::engine::packed_weight_bytes`] at registration time); each
+//! model gets one worker thread, one long-lived
+//! [`crate::engine::Workspace`] and one reusable padded input buffer, so
+//! the zero-steady-state-alloc contract of the single-model batcher
+//! carries over unchanged.
+//!
+//! ## Scheduler state machine (per model)
+//!
+//! ```text
+//!             submit(model, image, opts)
+//!                     │
+//!       queue full?───┼──────────────┐
+//!           │no       │yes           │
+//!           ▼         ▼              ▼
+//!       [QUEUED]   newcomer out-  lowest-priority victim displaced
+//!           │      ranks victim?  (typed Response::Shed, Displaced)
+//!           │      no → newcomer shed (QueueFull)
+//!           ▼
+//!   worker: WAIT ──arrival/timeout──▶ FORM ──fire──▶ EXECUTE ──▶ COMPLETE
+//!           ▲        (deadline-driven linger)            │
+//!           │  expired entries shed (DeadlineExpired)    │
+//!           └────────────────────────────────────────────┘
+//! ```
+//!
+//! **Batch formation is deadline-driven, not size-driven.** The worker
+//! lingers for stragglers only while it can afford to: it fires as soon
+//! as the batch is full, or when `earliest_deadline − 2·exec_ewma` (a
+//! running estimate of batch execution time) arrives, or when the oldest
+//! request has lingered [`SchedConfig::linger_ms`] — whichever comes
+//! first. Requests whose deadline has already passed are shed from the
+//! queue (never executed — executing doomed work is how overload turns
+//! into collapse), ordered most-expired first.
+//!
+//! **Admission control** is displacement-based: a full queue sheds the
+//! lowest-priority / closest-to-expiry entry to admit a higher-priority
+//! newcomer, and sheds the newcomer itself otherwise. Shedding is a
+//! first-class outcome — the waiter gets [`Response::Shed`] with a typed
+//! [`ShedReason`], not an error string — so load tests can assert *what*
+//! was sacrificed, and callers can retry or degrade deliberately.
+//!
+//! Shutdown drains: queued work is executed, in-flight waiters complete,
+//! and only then do late `submit` calls and orphaned tickets fail with
+//! the typed [`ServerStopped`] error.
+
+use super::batcher::ModelRunner;
+use super::metrics::{ModelGauges, StreamingHistogram};
+use crate::engine::Workspace;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Request priority: under overload, lower priorities are shed first.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Shed first — best-effort traffic.
+    Low,
+    /// The default tier.
+    #[default]
+    Normal,
+    /// Shed last — displaces queued lower-priority work when the queue
+    /// is full.
+    High,
+}
+
+impl Priority {
+    /// Lower-case tier name (for reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+}
+
+/// Per-request scheduling knobs for [`MultiServer::submit`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOpts {
+    /// shed ordering tier (default [`Priority::Normal`])
+    pub priority: Priority,
+    /// completion deadline measured from submit; `None` uses
+    /// [`SchedConfig::default_deadline_ms`]
+    pub deadline: Option<Duration>,
+}
+
+/// Why a request was shed instead of executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// queue full at admission and the newcomer did not outrank any
+    /// queued entry
+    QueueFull,
+    /// evicted from the queue by a higher-priority newcomer
+    Displaced,
+    /// deadline passed while still queued; executing it would waste a
+    /// batch slot on an answer nobody is waiting for
+    DeadlineExpired,
+}
+
+impl ShedReason {
+    /// Snake-case reason name (for reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::Displaced => "displaced",
+            ShedReason::DeadlineExpired => "expired",
+        }
+    }
+}
+
+/// A shed outcome: the request was sacrificed by admission control or
+/// deadline policy, and this records the circumstances.
+#[derive(Clone, Debug)]
+pub struct Shed {
+    /// model the request targeted
+    pub model: String,
+    /// why it was shed
+    pub reason: ShedReason,
+    /// priority it carried
+    pub priority: Priority,
+    /// seconds it waited in the queue before being shed
+    pub waited_s: f64,
+}
+
+/// A completed inference.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    /// the request's logits row
+    pub logits: Vec<f32>,
+    /// index of the winning class
+    pub argmax: usize,
+    /// submit-to-completion latency in seconds
+    pub latency_s: f64,
+    /// whether completion beat the request's deadline
+    pub deadline_met: bool,
+}
+
+/// Outcome of one scheduled request: either a completed inference or a
+/// typed shed. Shedding is *not* an error — [`Ticket::wait`] returns
+/// `Ok(Response::Shed(..))` so callers distinguish policy (shed) from
+/// failure (execution error, stopped server).
+#[derive(Clone, Debug)]
+pub enum Response {
+    /// executed; logits attached
+    Done(Completion),
+    /// sacrificed by admission control or deadline policy
+    Shed(Shed),
+}
+
+/// Typed error for requests that hit a stopped (or stopping) server:
+/// `submit` after shutdown, and tickets orphaned by a dead worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServerStopped;
+
+impl std::fmt::Display for ServerStopped {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server stopped")
+    }
+}
+
+impl std::error::Error for ServerStopped {}
+
+/// Reply-channel payload error (internal): distinguishes "server went
+/// away" from "the batch execution itself failed".
+enum ReplyErr {
+    Stopped,
+    Exec(String),
+}
+
+struct SchedRequest {
+    image: Vec<f32>,
+    enqueued: Instant,
+    deadline: Instant,
+    priority: Priority,
+    reply: Sender<Result<Response, ReplyErr>>,
+}
+
+/// Handle for one scheduled request.
+pub struct Ticket {
+    rx: Receiver<Result<Response, ReplyErr>>,
+}
+
+impl Ticket {
+    /// Block until the scheduler resolves this request: a completion, a
+    /// typed shed, an execution error, or [`ServerStopped`].
+    pub fn wait(self) -> Result<Response> {
+        match self.rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(ReplyErr::Exec(e))) => Err(anyhow::anyhow!(e)),
+            Ok(Err(ReplyErr::Stopped)) | Err(_) => Err(anyhow::Error::new(ServerStopped)),
+        }
+    }
+}
+
+/// Scheduler sizing/policy knobs, shared by every resident model.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedConfig {
+    /// per-model bounded queue depth; admission control kicks in beyond it
+    pub queue_depth: usize,
+    /// deadline applied when [`SubmitOpts::deadline`] is `None`
+    pub default_deadline_ms: u64,
+    /// max time the oldest queued request lingers waiting for batch
+    /// stragglers before a partial batch fires
+    pub linger_ms: u64,
+    /// global budget for plan-time packed weights
+    /// ([`crate::engine::packed_weight_bytes`] across *all* models);
+    /// `0` = unlimited. `add_model` fails if registering a model
+    /// overruns it.
+    pub packed_budget_bytes: u64,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            queue_depth: 64,
+            default_deadline_ms: 50,
+            linger_ms: 2,
+            packed_budget_bytes: 0,
+        }
+    }
+}
+
+struct QueueState {
+    q: VecDeque<SchedRequest>,
+    stopping: bool,
+    dead: bool,
+}
+
+/// State shared between a model's submitters and its worker thread.
+struct ModelShared {
+    name: String,
+    state: Mutex<QueueState>,
+    /// worker sleeps here between arrivals
+    arrivals: Condvar,
+    /// legacy blocking submitters sleep here when the queue is full
+    space: Condvar,
+    gauges: ModelGauges,
+    latency: Mutex<StreamingHistogram>,
+    /// per-request flattened sample length (set by the worker from the
+    /// runner's dims before it signals ready)
+    sample_len: AtomicUsize,
+    /// execution batch size (runner dims\[0\])
+    max_batch: AtomicUsize,
+}
+
+struct ModelEntry {
+    shared: Arc<ModelShared>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Point-in-time per-model scheduler statistics
+/// ([`MultiServer::snapshot`]).
+#[derive(Clone, Debug)]
+pub struct ModelSnapshot {
+    /// model name
+    pub model: String,
+    /// requests accepted by `submit`
+    pub submitted: u64,
+    /// requests completed with logits
+    pub completed: u64,
+    /// requests shed (all [`ShedReason`]s)
+    pub shed: u64,
+    /// requests whose batch execution failed
+    pub failed: u64,
+    /// completed requests that beat their deadline
+    pub deadline_met: u64,
+    /// current queue depth
+    pub queue_depth: u64,
+    /// batches executed by the worker
+    pub batches: u64,
+    /// peak bytes checked out of the worker's workspace
+    pub ws_peak_bytes: u64,
+    /// workspace heap fallbacks (flat after warm-up = zero-alloc)
+    pub ws_heap_allocs: u64,
+    /// streaming completion-latency histogram (seconds)
+    pub latency: StreamingHistogram,
+}
+
+/// Multi-model continuous-batching server. See the module docs for the
+/// scheduling policy; see [`super::batcher::Server`] for the single-model
+/// shim over this type that preserves the original API.
+pub struct MultiServer {
+    cfg: SchedConfig,
+    /// registration-ordered so reports are deterministic
+    models: Mutex<Vec<(String, ModelEntry)>>,
+    stopping: AtomicBool,
+}
+
+impl MultiServer {
+    /// An empty server; register models with [`MultiServer::add_model`].
+    pub fn new(cfg: SchedConfig) -> MultiServer {
+        MultiServer { cfg, models: Mutex::new(Vec::new()), stopping: AtomicBool::new(false) }
+    }
+
+    /// The configuration every resident model runs under.
+    pub fn config(&self) -> SchedConfig {
+        self.cfg
+    }
+
+    /// Register a model under `name` and start its worker thread. The
+    /// runner is constructed *inside* the worker from `factory` (PJRT
+    /// executors are not `Send`); construction errors are returned
+    /// synchronously. After a successful build, the global packed-weight
+    /// budget is checked: if [`crate::engine::packed_weight_bytes`] now
+    /// exceeds [`SchedConfig::packed_budget_bytes`], the worker is torn
+    /// down and registration fails — budget admission happens here, at
+    /// plan/pack time, not per request. Returns the runner's platform
+    /// name.
+    pub fn add_model<R, F>(&self, name: &str, factory: F) -> Result<String>
+    where
+        R: ModelRunner,
+        F: FnOnce() -> Result<R> + Send + 'static,
+    {
+        if self.stopping.load(Ordering::SeqCst) {
+            return Err(anyhow::Error::new(ServerStopped));
+        }
+        {
+            let models = self.models.lock().unwrap();
+            anyhow::ensure!(
+                !models.iter().any(|(n, _)| n == name),
+                "model '{name}' is already registered"
+            );
+        }
+        let shared = Arc::new(ModelShared {
+            name: name.to_string(),
+            state: Mutex::new(QueueState { q: VecDeque::new(), stopping: false, dead: false }),
+            arrivals: Condvar::new(),
+            space: Condvar::new(),
+            gauges: ModelGauges::default(),
+            latency: Mutex::new(StreamingHistogram::new()),
+            sample_len: AtomicUsize::new(0),
+            max_batch: AtomicUsize::new(0),
+        });
+        let shared2 = shared.clone();
+        let cfg = self.cfg;
+        let (ready_tx, ready_rx) = channel::<Result<String, String>>();
+        let worker = std::thread::Builder::new()
+            .name(format!("sfc-sched-{name}"))
+            .spawn(move || {
+                let exe = match factory() {
+                    Ok(e) => {
+                        let dims = e.input_dims();
+                        shared2
+                            .sample_len
+                            .store(dims[1..].iter().product(), Ordering::SeqCst);
+                        shared2.max_batch.store(dims[0].max(1), Ordering::SeqCst);
+                        let _ = ready_tx.send(Ok(e.platform()));
+                        e
+                    }
+                    Err(err) => {
+                        let _ = ready_tx.send(Err(format!("{err:#}")));
+                        return;
+                    }
+                };
+                worker_loop(exe, shared2, cfg);
+            })
+            .expect("spawn scheduler worker");
+        let platform = match ready_rx.recv() {
+            Ok(Ok(platform)) => platform,
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                return Err(anyhow::anyhow!(e));
+            }
+            Err(_) => return Err(anyhow::anyhow!("worker died during startup")),
+        };
+        if self.cfg.packed_budget_bytes > 0 {
+            let live = crate::engine::packed_weight_bytes();
+            if live > self.cfg.packed_budget_bytes {
+                stop_model(&shared);
+                let _ = worker.join();
+                fail_queue(&shared);
+                anyhow::bail!(
+                    "registering '{name}' overruns the packed-weight budget: {live} B live > \
+                     {} B budget (pre-pack fewer layers or raise --budget-mb)",
+                    self.cfg.packed_budget_bytes
+                );
+            }
+        }
+        let mut models = self.models.lock().unwrap();
+        models.push((name.to_string(), ModelEntry { shared, worker: Some(worker) }));
+        Ok(platform)
+    }
+
+    /// Registered model names, in registration order.
+    pub fn models(&self) -> Vec<String> {
+        self.models.lock().unwrap().iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    /// Flattened per-request input length a model expects (`None` for an
+    /// unknown model) — what load generators size their images to.
+    pub fn input_len(&self, model: &str) -> Option<usize> {
+        let models = self.models.lock().unwrap();
+        models
+            .iter()
+            .find(|(n, _)| n == model)
+            .map(|(_, e)| e.shared.sample_len.load(Ordering::SeqCst))
+    }
+
+    fn shared_for(&self, model: &str) -> Result<Arc<ModelShared>> {
+        let models = self.models.lock().unwrap();
+        models
+            .iter()
+            .find(|(n, _)| n == model)
+            .map(|(_, e)| e.shared.clone())
+            .ok_or_else(|| {
+                let known: Vec<String> = models.iter().map(|(n, _)| n.clone()).collect();
+                anyhow::anyhow!("unknown model '{model}' (registered: {known:?})")
+            })
+    }
+
+    /// Submit one image (CHW flattened) to a resident model. Never
+    /// blocks on a full queue — admission control resolves overload
+    /// immediately by displacement or shedding, and a shed newcomer
+    /// still gets an `Ok` ticket that resolves to [`Response::Shed`].
+    /// Errors: stopped server (typed [`ServerStopped`]), unknown model,
+    /// wrong image length.
+    pub fn submit(&self, model: &str, image: Vec<f32>, opts: SubmitOpts) -> Result<Ticket> {
+        if self.stopping.load(Ordering::SeqCst) {
+            return Err(anyhow::Error::new(ServerStopped));
+        }
+        let shared = self.shared_for(model)?;
+        let sample = shared.sample_len.load(Ordering::SeqCst);
+        anyhow::ensure!(
+            image.len() == sample,
+            "image for '{model}' has {} values, expected {sample}",
+            image.len()
+        );
+        let now = Instant::now();
+        let deadline =
+            now + opts.deadline.unwrap_or(Duration::from_millis(self.cfg.default_deadline_ms));
+        let (reply, rx) = channel();
+        let req =
+            SchedRequest { image, enqueued: now, deadline, priority: opts.priority, reply };
+        let mut st = shared.state.lock().unwrap();
+        if st.stopping || st.dead {
+            return Err(anyhow::Error::new(ServerStopped));
+        }
+        shared.gauges.submitted.fetch_add(1, Ordering::Relaxed);
+        if st.q.len() >= self.cfg.queue_depth {
+            // admission control: displace the weakest queued entry if the
+            // newcomer outranks it, else shed the newcomer
+            let victim = st
+                .q
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, r)| (r.priority, r.deadline))
+                .map(|(i, r)| (i, r.priority));
+            match victim {
+                Some((i, vp)) if vp < req.priority => {
+                    let evicted = st.q.remove(i).unwrap();
+                    shed_request(&shared, evicted, ShedReason::Displaced, now);
+                    st.q.push_back(req);
+                }
+                _ => {
+                    shed_request(&shared, req, ShedReason::QueueFull, now);
+                }
+            }
+        } else {
+            st.q.push_back(req);
+        }
+        shared.gauges.queue_depth.store(st.q.len() as u64, Ordering::Relaxed);
+        drop(st);
+        shared.arrivals.notify_all();
+        Ok(Ticket { rx })
+    }
+
+    /// Legacy blocking submit (the single-model [`super::batcher::Server`]
+    /// contract): [`Priority::Normal`], effectively no deadline, and a
+    /// full queue *blocks* instead of shedding. Errors with
+    /// [`ServerStopped`] if the server stops while waiting.
+    pub fn submit_blocking(&self, model: &str, image: Vec<f32>) -> Result<Ticket> {
+        if self.stopping.load(Ordering::SeqCst) {
+            return Err(anyhow::Error::new(ServerStopped));
+        }
+        let shared = self.shared_for(model)?;
+        let sample = shared.sample_len.load(Ordering::SeqCst);
+        anyhow::ensure!(
+            image.len() == sample,
+            "image for '{model}' has {} values, expected {sample}",
+            image.len()
+        );
+        let mut st = shared.state.lock().unwrap();
+        loop {
+            if st.stopping || st.dead {
+                return Err(anyhow::Error::new(ServerStopped));
+            }
+            if st.q.len() < self.cfg.queue_depth {
+                break;
+            }
+            let (g, _) = shared.space.wait_timeout(st, Duration::from_millis(100)).unwrap();
+            st = g;
+        }
+        let now = Instant::now();
+        let (reply, rx) = channel();
+        shared.gauges.submitted.fetch_add(1, Ordering::Relaxed);
+        st.q.push_back(SchedRequest {
+            image,
+            enqueued: now,
+            deadline: now + Duration::from_secs(3600),
+            priority: Priority::Normal,
+            reply,
+        });
+        shared.gauges.queue_depth.store(st.q.len() as u64, Ordering::Relaxed);
+        drop(st);
+        shared.arrivals.notify_all();
+        Ok(Ticket { rx })
+    }
+
+    /// Per-model statistics snapshot (`None` for an unknown model).
+    pub fn snapshot(&self, model: &str) -> Option<ModelSnapshot> {
+        let models = self.models.lock().unwrap();
+        let (_, e) = models.iter().find(|(n, _)| n == model)?;
+        let g = &e.shared.gauges;
+        Some(ModelSnapshot {
+            model: model.to_string(),
+            submitted: g.submitted.load(Ordering::Relaxed),
+            completed: g.completed.load(Ordering::Relaxed),
+            shed: g.shed.load(Ordering::Relaxed),
+            failed: g.failed.load(Ordering::Relaxed),
+            deadline_met: g.deadline_met.load(Ordering::Relaxed),
+            queue_depth: g.queue_depth.load(Ordering::Relaxed),
+            batches: g.batches.load(Ordering::Relaxed),
+            ws_peak_bytes: g.ws_peak_bytes.load(Ordering::Relaxed),
+            ws_heap_allocs: g.ws_heap_allocs.load(Ordering::Relaxed),
+            latency: e.shared.latency.lock().unwrap().clone(),
+        })
+    }
+
+    /// Stop every model: workers drain their queues (queued requests
+    /// execute, their waiters complete), then any stragglers fail with
+    /// the typed [`ServerStopped`] error, and all worker threads are
+    /// joined. Idempotent; `Drop` calls it too.
+    pub fn shutdown(&self) {
+        if self.stopping.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let mut models = self.models.lock().unwrap();
+        for (_, entry) in models.iter_mut() {
+            {
+                let mut st = entry.shared.state.lock().unwrap();
+                st.stopping = true;
+            }
+            entry.shared.arrivals.notify_all();
+            entry.shared.space.notify_all();
+            if let Some(w) = entry.worker.take() {
+                let _ = w.join();
+            }
+            fail_queue(&entry.shared);
+        }
+    }
+}
+
+impl Drop for MultiServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Ask one model's worker to stop and wake everything waiting on it
+/// (used when budget admission rejects a freshly built model).
+fn stop_model(shared: &Arc<ModelShared>) {
+    let mut st = shared.state.lock().unwrap();
+    st.stopping = true;
+    drop(st);
+    shared.arrivals.notify_all();
+    shared.space.notify_all();
+}
+
+/// Fail every still-queued request with the typed stopped error and mark
+/// the queue dead. Only reachable for requests the (exited) worker never
+/// drained — normal shutdown executes the queue first.
+fn fail_queue(shared: &Arc<ModelShared>) {
+    let mut st = shared.state.lock().unwrap();
+    st.dead = true;
+    while let Some(r) = st.q.pop_front() {
+        let _ = r.reply.send(Err(ReplyErr::Stopped));
+    }
+    shared.gauges.queue_depth.store(0, Ordering::Relaxed);
+    drop(st);
+    shared.space.notify_all();
+}
+
+/// Resolve one request as shed: bump the gauge and complete its ticket
+/// with the typed [`Response::Shed`] outcome.
+fn shed_request(shared: &ModelShared, r: SchedRequest, reason: ShedReason, now: Instant) {
+    shared.gauges.shed.fetch_add(1, Ordering::Relaxed);
+    let _ = r.reply.send(Ok(Response::Shed(Shed {
+        model: shared.name.clone(),
+        reason,
+        priority: r.priority,
+        waited_s: now.duration_since(r.enqueued).as_secs_f64(),
+    })));
+}
+
+/// Shed every queued request whose deadline has passed (most-expired
+/// first is implied: they all go). Caller holds the state lock.
+fn shed_expired(shared: &ModelShared, st: &mut QueueState, now: Instant) {
+    let mut i = 0;
+    while i < st.q.len() {
+        if st.q[i].deadline <= now {
+            let r = st.q.remove(i).unwrap();
+            shed_request(shared, r, ShedReason::DeadlineExpired, now);
+        } else {
+            i += 1;
+        }
+    }
+    shared.gauges.queue_depth.store(st.q.len() as u64, Ordering::Relaxed);
+}
+
+fn worker_loop<R: ModelRunner>(exe: R, shared: Arc<ModelShared>, cfg: SchedConfig) {
+    let sample: usize = exe.input_dims()[1..].iter().product();
+    let classes = exe.out_classes();
+    let max_batch = exe.input_dims()[0].max(1);
+    let linger = Duration::from_millis(cfg.linger_ms);
+    // One workspace and one padded input buffer for the worker's
+    // lifetime: after the first batch warms the pools, steady-state
+    // serving checks every buffer out of the arena.
+    let mut ws = Workspace::new();
+    let mut input = vec![0f32; max_batch * sample];
+    let mut batch: Vec<SchedRequest> = Vec::with_capacity(max_batch);
+    // running batch-execution-time estimate, for the deadline margin
+    let mut exec_ewma = Duration::from_micros(500);
+    loop {
+        let mut st = shared.state.lock().unwrap();
+        // WAIT: sleep until work arrives (or drain-and-exit on stop)
+        loop {
+            shed_expired(&shared, &mut st, Instant::now());
+            if !st.q.is_empty() {
+                break;
+            }
+            if st.stopping {
+                st.dead = true;
+                drop(st);
+                shared.space.notify_all();
+                return;
+            }
+            let (g, _) = shared.arrivals.wait_timeout(st, Duration::from_millis(20)).unwrap();
+            st = g;
+        }
+        // FORM: linger for stragglers while the earliest deadline and the
+        // oldest arrival still allow it
+        loop {
+            if st.q.len() >= max_batch || st.stopping {
+                break;
+            }
+            shed_expired(&shared, &mut st, Instant::now());
+            if st.q.is_empty() {
+                break;
+            }
+            let earliest = st.q.iter().map(|r| r.deadline).min().unwrap();
+            let oldest = st.q.iter().map(|r| r.enqueued).min().unwrap();
+            let now = Instant::now();
+            // fire early enough that execution can still beat the
+            // earliest deadline (2x the EWMA leaves copy/complete slack)
+            let fire_by = earliest.checked_sub(exec_ewma * 2).unwrap_or(now);
+            let wait_until = fire_by.min(oldest + linger);
+            if now >= wait_until {
+                break;
+            }
+            let dur = (wait_until - now).min(Duration::from_millis(5));
+            let (g, _) = shared.arrivals.wait_timeout(st, dur).unwrap();
+            st = g;
+        }
+        if st.q.is_empty() {
+            continue; // everything expired while forming
+        }
+        // SELECT: earliest deadline first, higher priority breaking ties
+        st.q.make_contiguous()
+            .sort_by(|a, b| a.deadline.cmp(&b.deadline).then(b.priority.cmp(&a.priority)));
+        while batch.len() < max_batch {
+            match st.q.pop_front() {
+                Some(r) => batch.push(r),
+                None => break,
+            }
+        }
+        shared.gauges.queue_depth.store(st.q.len() as u64, Ordering::Relaxed);
+        drop(st);
+        shared.space.notify_all();
+        // EXECUTE: pad + run (the input buffer is reused; zero the tail)
+        input[batch.len() * sample..].fill(0.0);
+        for (i, r) in batch.iter().enumerate() {
+            input[i * sample..(i + 1) * sample].copy_from_slice(&r.image);
+        }
+        let t0 = Instant::now();
+        let result = exe.run_with(&input, &mut ws);
+        exec_ewma = (t0.elapsed() + exec_ewma * 3) / 4;
+        shared.gauges.batches.fetch_add(1, Ordering::Relaxed);
+        shared.gauges.ws_peak_bytes.store(ws.peak_bytes() as u64, Ordering::Relaxed);
+        shared.gauges.ws_heap_allocs.store(ws.heap_allocs(), Ordering::Relaxed);
+        // COMPLETE
+        match result {
+            Ok(logits) => {
+                let finish = Instant::now();
+                let mut hist = shared.latency.lock().unwrap();
+                for (i, r) in batch.drain(..).enumerate() {
+                    let row = logits[i * classes..(i + 1) * classes].to_vec();
+                    let argmax = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(k, _)| k)
+                        .unwrap_or(0);
+                    let latency_s = finish.duration_since(r.enqueued).as_secs_f64();
+                    let deadline_met = finish <= r.deadline;
+                    shared.gauges.completed.fetch_add(1, Ordering::Relaxed);
+                    if deadline_met {
+                        shared.gauges.deadline_met.fetch_add(1, Ordering::Relaxed);
+                    }
+                    hist.record(latency_s);
+                    let _ = r.reply.send(Ok(Response::Done(Completion {
+                        logits: row,
+                        argmax,
+                        latency_s,
+                        deadline_met,
+                    })));
+                }
+            }
+            Err(e) => {
+                let msg = format!("execute failed: {e}");
+                for r in batch.drain(..) {
+                    shared.gauges.failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = r.reply.send(Err(ReplyErr::Exec(msg.clone())));
+                }
+            }
+        }
+    }
+}

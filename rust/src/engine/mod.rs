@@ -22,11 +22,13 @@ pub mod cache;
 pub mod desc;
 pub mod exec;
 pub mod select;
+pub mod tuning;
 pub mod workspace;
 
 pub use cache::{global as global_plan_cache, PlanCache, PlanKey};
 pub use desc::{ConvDesc, ConvDescBuilder, Epilogue, QuantSpec};
 pub use select::{default_selector, AutotuneCfg, Policy, Selector, TuneEntry};
+pub use tuning::TuningTable;
 pub use workspace::Workspace;
 
 use crate::algo::ntt::ntt_odot_bits;
@@ -184,6 +186,56 @@ impl PackedWeights {
 impl std::fmt::Debug for PackedWeights {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("PackedWeights").field("bytes", &self.bytes()).finish()
+    }
+}
+
+/// Bytes [`PackedWeights::pack`] would register for this plan, computed
+/// *without* building anything — what budget admission checks before
+/// deciding whether a layer gets pre-packed. Exact by construction: the
+/// same `T²·groups·panel_len(OC/g, IC/g)` sizing the packer allocates.
+pub fn packed_bytes_estimate(plan: &ConvPlan) -> usize {
+    match &plan.kernel {
+        PlanKernel::Fast(p) => {
+            let tt = p.t() * p.t();
+            let (icg, ocg) = plan.desc.group_channels();
+            tt * plan.desc.groups * packed_b_f32_len(ocg, icg) * std::mem::size_of::<f32>()
+        }
+        _ => 0,
+    }
+}
+
+/// A byte budget for plan-time packed-weight storage, checked against
+/// the process-wide [`packed_weight_bytes`] counter. Layers that don't
+/// fit are simply not pre-packed — they fall back to the per-call
+/// transform+pack path, which is bit-identical, just slower. A limit of
+/// `0` means unlimited (the historical behavior).
+#[derive(Clone, Copy, Debug)]
+pub struct PackBudget {
+    limit_bytes: usize,
+}
+
+impl PackBudget {
+    /// Budget capped at `limit_bytes` (0 = unlimited).
+    pub fn new(limit_bytes: usize) -> PackBudget {
+        PackBudget { limit_bytes }
+    }
+
+    /// The no-op budget: everything is admitted.
+    pub fn unlimited() -> PackBudget {
+        PackBudget { limit_bytes: 0 }
+    }
+
+    /// The configured cap in bytes (0 = unlimited).
+    pub fn limit_bytes(&self) -> usize {
+        self.limit_bytes
+    }
+
+    /// Would packing `extra` more bytes stay within budget, given
+    /// everything already packed process-wide? (A point-in-time check:
+    /// admission races only ever over-admit by one layer, and the
+    /// registration-time check in `coordinator::sched` backstops it.)
+    pub fn try_admit(&self, extra: usize) -> bool {
+        self.limit_bytes == 0 || packed_weight_bytes() as usize + extra <= self.limit_bytes
     }
 }
 

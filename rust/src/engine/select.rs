@@ -11,6 +11,7 @@
 
 use super::cache::{self, PlanCache, PlanKey};
 use super::desc::{ConvDesc, QuantSpec};
+use super::tuning::{self, TuningTable};
 use super::{all_engines, ConvEngine, ConvPlan};
 use crate::nn::model::ConvShape;
 use crate::nn::tensor::Tensor;
@@ -69,11 +70,14 @@ pub struct TuneEntry {
     pub selected: bool,
 }
 
-/// The algorithm selector: engine list + plan cache + policy.
+/// The algorithm selector: engine list + plan cache + policy, optionally
+/// warmed from a persisted [`TuningTable`] so committed measurements
+/// replace startup re-tuning.
 pub struct Selector {
     engines: Vec<Box<dyn ConvEngine>>,
     cache: Arc<PlanCache>,
     policy: Policy,
+    tuning: Option<TuningTable>,
 }
 
 impl Selector {
@@ -92,7 +96,25 @@ impl Selector {
 
     /// Selector with an isolated cache (tests, experiments).
     pub fn with_cache(policy: Policy, cache: Arc<PlanCache>) -> Selector {
-        Selector { engines: all_engines(), cache, policy }
+        Selector { engines: all_engines(), cache, policy, tuning: None }
+    }
+
+    /// Attach a persisted tuning table: [`Selector::plan`] pins tuned
+    /// descriptors to their measured winner before consulting the
+    /// policy. (Selectors without their own table still consult the
+    /// process-wide one, see [`tuning::install_global`].)
+    pub fn with_tuning(mut self, table: TuningTable) -> Selector {
+        self.tuning = Some(table);
+        self
+    }
+
+    /// The measured winner for a descriptor, if any tuning table (own,
+    /// then process-wide) covers it.
+    fn tuned_engine(&self, d: &ConvDesc) -> Option<String> {
+        if let Some(c) = self.tuning.as_ref().and_then(|t| t.lookup(d)) {
+            return Some(c.engine.clone());
+        }
+        tuning::global_lookup(d).map(|c| c.engine.clone())
     }
 
     /// The selection policy this selector runs.
@@ -120,8 +142,17 @@ impl Selector {
         self.engines.iter().filter(|e| e.supports(d)).map(|e| e.as_ref()).collect()
     }
 
-    /// Policy-driven plan for a descriptor (cached).
+    /// Policy-driven plan for a descriptor (cached). Descriptors covered
+    /// by a tuning table are pinned to the measured winner; if that
+    /// engine no longer exists or no longer supports the descriptor
+    /// (stale table), selection falls through to the policy rather than
+    /// failing.
     pub fn plan(&self, d: &ConvDesc) -> Result<Arc<ConvPlan>> {
+        if let Some(name) = self.tuned_engine(d) {
+            if let Ok(p) = self.plan_named(&name, d) {
+                return Ok(p);
+            }
+        }
         self.cache.get_or_try_insert(PlanKey::new(*d, self.policy.tag()), || {
             let plan = match self.policy {
                 Policy::Heuristic => self.select_heuristic(d)?,
@@ -370,6 +401,37 @@ mod tests {
         assert_eq!(entries.iter().filter(|t| t.selected).count(), 1);
         let plan = sel.plan(&d).unwrap();
         assert_eq!(plan.desc.groups, 4);
+    }
+
+    #[test]
+    fn tuning_table_pins_the_planned_engine() {
+        // heuristic would pick a fast engine for 3x3 stride-1; the table
+        // pins direct, and the pin must win
+        let d = ConvDesc::new(1, 16, 16, 20, 20, 3, 1, 1);
+        let mut table = TuningTable::new();
+        table.insert(&d, "direct", 1e-3);
+        let sel = isolated(Policy::Heuristic).with_tuning(table);
+        assert_eq!(sel.plan(&d).unwrap().engine, "direct");
+        // untuned descriptors still follow the policy
+        let other = ConvDesc::new(1, 32, 32, 28, 28, 3, 1, 1);
+        assert!(sel.plan(&other).unwrap().fast_plan().is_some());
+    }
+
+    #[test]
+    fn stale_tuning_entries_fall_through_to_the_policy() {
+        let d = ConvDesc::new(1, 16, 16, 20, 20, 3, 1, 1);
+        let mut gone = TuningTable::new();
+        gone.insert(&d, "engine-removed-from-catalog", 1e-3);
+        let sel = isolated(Policy::Heuristic).with_tuning(gone);
+        // unknown engine name: plan() must still succeed via the policy
+        assert!(sel.plan(&d).is_ok());
+        // unsupported engine (FFT can't take quantized): same fall-through
+        let dq = d.with_quant(QuantSpec::transform_default(8));
+        let mut unsup = TuningTable::new();
+        unsup.insert(&dq, "FFT", 1e-3);
+        let sel = isolated(Policy::Heuristic).with_tuning(unsup);
+        let plan = sel.plan(&dq).unwrap();
+        assert_ne!(plan.engine, "FFT");
     }
 
     #[test]

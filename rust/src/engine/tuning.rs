@@ -1,0 +1,254 @@
+//! Persisted autotune results: measure once with `sfc autotune --out
+//! tuning.json`, commit the table, and warm every future [`Selector`]
+//! (and `sfc serve`) from the file instead of re-running multi-second
+//! micro-benchmarks at startup.
+//!
+//! The table maps a canonical descriptor key ([`desc_key`]: every field
+//! that affects engine choice — shape, stride/pad, grouping, epilogue,
+//! quantization scheme) to the measured winning engine. Lookups happen
+//! at plan time in [`Selector::plan`][crate::engine::Selector::plan]: a
+//! hit pins the engine (falling back to the policy if that engine can't
+//! take the descriptor — tables survive catalog changes), a miss runs
+//! the configured policy as before. The JSON schema is hand-rolled like
+//! `exp::perf` (std-only repo; no serde).
+
+use super::desc::ConvDesc;
+use crate::quant::Granularity;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::OnceLock;
+
+/// Schema version stamped into tuning files; bump on breaking changes.
+pub const TUNING_SCHEMA_VERSION: u32 = 1;
+
+fn gran_code(g: Granularity) -> &'static str {
+    match g {
+        Granularity::Tensor => "t",
+        Granularity::Channel => "c",
+        Granularity::Freq => "f",
+        Granularity::ChannelFreq => "cf",
+    }
+}
+
+/// Canonical string key for a descriptor: every selection-relevant field,
+/// stable across runs (no hashing, so files stay human-diffable).
+pub fn desc_key(d: &ConvDesc) -> String {
+    let mut k = format!(
+        "b{}_ic{}_oc{}_h{}x{}_r{}_s{}_p{}_g{}_d{}_e{}",
+        d.batch,
+        d.ic,
+        d.oc,
+        d.h,
+        d.w,
+        d.r,
+        d.stride,
+        d.pad,
+        d.groups,
+        d.dilation,
+        d.epilogue.name(),
+    );
+    if let Some(q) = d.quant {
+        k.push_str(&format!(
+            "_qa{}w{}ga{}gw{}",
+            q.a_bits,
+            q.w_bits,
+            gran_code(q.a_gran),
+            gran_code(q.w_gran)
+        ));
+    }
+    k
+}
+
+/// One measured choice: the winning engine and its median runtime.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunedChoice {
+    /// catalog name of the measured winner
+    pub engine: String,
+    /// measured median nanoseconds per run (informational)
+    pub median_ns: f64,
+}
+
+/// A persisted autotune table: descriptor key → measured winner.
+#[derive(Clone, Debug, Default)]
+pub struct TuningTable {
+    entries: HashMap<String, TunedChoice>,
+}
+
+impl TuningTable {
+    /// An empty table.
+    pub fn new() -> TuningTable {
+        TuningTable::default()
+    }
+
+    /// Number of tuned descriptors.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no descriptors are tuned.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Record the measured winner for a descriptor.
+    pub fn insert(&mut self, d: &ConvDesc, engine: &str, median_s: f64) {
+        self.entries.insert(
+            desc_key(d),
+            TunedChoice { engine: engine.to_string(), median_ns: median_s * 1e9 },
+        );
+    }
+
+    /// The recorded winner for a descriptor, if tuned.
+    pub fn lookup(&self, d: &ConvDesc) -> Option<&TunedChoice> {
+        self.entries.get(&desc_key(d))
+    }
+
+    /// Render the table as the tuning-file JSON (one entry per line,
+    /// keys sorted, so committed files diff cleanly run to run).
+    pub fn to_json(&self) -> String {
+        let mut body = String::new();
+        body.push_str("{\n");
+        body.push_str("  \"tuning\": \"sfc-autotune\",\n");
+        body.push_str(&format!("  \"schema_version\": {TUNING_SCHEMA_VERSION},\n"));
+        body.push_str(&format!("  \"kernel\": \"{}\",\n", crate::linalg::simd::kernel_name()));
+        body.push_str("  \"entries\": [\n");
+        let mut keys: Vec<&String> = self.entries.keys().collect();
+        keys.sort();
+        for (i, k) in keys.iter().enumerate() {
+            let c = &self.entries[*k];
+            body.push_str(&format!(
+                "    {{\"desc\": \"{}\", \"engine\": \"{}\", \"median_ns\": {:.1}}}{}\n",
+                k,
+                c.engine,
+                c.median_ns,
+                if i + 1 < keys.len() { "," } else { "" }
+            ));
+        }
+        body.push_str("  ]\n}\n");
+        body
+    }
+
+    /// Parse a tuning file produced by [`TuningTable::to_json`]. The
+    /// parser is line-oriented (one entry object per line, the shape we
+    /// emit) — not a general JSON parser, by design: the repo is
+    /// std-only and the file format is ours.
+    pub fn from_json(text: &str) -> Result<TuningTable> {
+        anyhow::ensure!(
+            text.contains("\"tuning\": \"sfc-autotune\""),
+            "not an sfc tuning file (missing the \"tuning\" marker)"
+        );
+        let version = num_field(text, "schema_version")
+            .context("tuning file has no schema_version")? as u32;
+        anyhow::ensure!(
+            version == TUNING_SCHEMA_VERSION,
+            "tuning file schema v{version} unsupported (expected v{TUNING_SCHEMA_VERSION})"
+        );
+        let mut entries = HashMap::new();
+        for line in text.lines() {
+            let Some(desc) = quoted_field(line, "desc") else { continue };
+            let engine = quoted_field(line, "engine")
+                .with_context(|| format!("tuning entry without engine: {line}"))?;
+            let median_ns = num_field(line, "median_ns")
+                .with_context(|| format!("tuning entry without median_ns: {line}"))?;
+            entries.insert(
+                desc.to_string(),
+                TunedChoice { engine: engine.to_string(), median_ns },
+            );
+        }
+        Ok(TuningTable { entries })
+    }
+
+    /// Write the table to `path` as tuning-file JSON.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("write tuning table {}", path.display()))
+    }
+
+    /// Load a tuning table from a file written by [`TuningTable::save`].
+    pub fn load(path: &Path) -> Result<TuningTable> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read tuning table {}", path.display()))?;
+        TuningTable::from_json(&text)
+            .with_context(|| format!("parse tuning table {}", path.display()))
+    }
+}
+
+/// Extract `"key": "value"` from one line.
+fn quoted_field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\": \"");
+    let start = line.find(&pat)? + pat.len();
+    let end = line[start..].find('"')?;
+    Some(&line[start..start + end])
+}
+
+/// Extract `"key": <number>` from one line.
+fn num_field(text: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\": ");
+    let start = text.find(&pat)? + pat.len();
+    let rest = &text[start..];
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == 'E'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// The process-wide tuning table, consulted by every selector (after its
+/// own table, if any). Installed once, typically by `sfc serve --tuning`.
+static GLOBAL_TUNING: OnceLock<TuningTable> = OnceLock::new();
+
+/// Install the process-wide tuning table. Errors if one is already
+/// installed (tables are startup configuration, not mutable state).
+pub fn install_global(table: TuningTable) -> Result<()> {
+    GLOBAL_TUNING
+        .set(table)
+        .map_err(|_| anyhow::anyhow!("a global tuning table is already installed"))
+}
+
+/// Look a descriptor up in the process-wide tuning table, if installed.
+pub fn global_lookup(d: &ConvDesc) -> Option<&'static TunedChoice> {
+    GLOBAL_TUNING.get().and_then(|t| t.lookup(d))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::QuantSpec;
+
+    #[test]
+    fn desc_key_distinguishes_quant_and_shape() {
+        let d = ConvDesc::new(8, 3, 16, 32, 32, 3, 1, 1);
+        let dq = d.with_quant(QuantSpec::transform_default(8));
+        let d5 = ConvDesc::new(8, 3, 16, 32, 32, 5, 1, 2);
+        assert_ne!(desc_key(&d), desc_key(&dq));
+        assert_ne!(desc_key(&d), desc_key(&d5));
+        // shape-identical descriptors share a key (plan-cache property)
+        assert_eq!(desc_key(&d), desc_key(&ConvDesc::new(8, 3, 16, 32, 32, 3, 1, 1)));
+    }
+
+    #[test]
+    fn round_trips_through_json() {
+        let d1 = ConvDesc::new(8, 3, 16, 32, 32, 3, 1, 1);
+        let d2 = ConvDesc::new(8, 16, 32, 16, 16, 3, 1, 1)
+            .with_quant(QuantSpec::transform_default(8));
+        let mut t = TuningTable::new();
+        t.insert(&d1, "SFC-6(6x6,3x3)", 1.25e-3);
+        t.insert(&d2, "direct", 3.5e-4);
+        let text = t.to_json();
+        let back = TuningTable::from_json(&text).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.lookup(&d1).unwrap().engine, "SFC-6(6x6,3x3)");
+        assert_eq!(back.lookup(&d2).unwrap().engine, "direct");
+        assert!((back.lookup(&d1).unwrap().median_ns - 1.25e6).abs() < 1.0);
+        // deterministic rendering (committed files must diff cleanly)
+        assert_eq!(text, back.to_json());
+    }
+
+    #[test]
+    fn rejects_foreign_and_versioned_files() {
+        assert!(TuningTable::from_json("{\"not\": \"ours\"}").is_err());
+        let bad = "{\n  \"tuning\": \"sfc-autotune\",\n  \"schema_version\": 99,\n  \
+                   \"entries\": [\n  ]\n}\n";
+        assert!(TuningTable::from_json(bad).is_err());
+    }
+}

@@ -1,0 +1,235 @@
+//! Load generation against the multi-model scheduler: paced QPS, mixed
+//! model/priority/deadline traffic, and a goodput/latency/shed report.
+//!
+//! This is the measurement half of the serving subsystem — the batching
+//! and shedding policies in [`crate::coordinator::sched`] are only real
+//! if they are drivable and observable. `sfc loadgen` builds a
+//! two-model server (float + int8 by default), offers an open-loop
+//! request stream at a configured rate, and reports per model: offered
+//! vs. goodput, sheds by typed reason, deadline hit rate, streaming
+//! p50/p99 latency, and the workspace alloc-flatness that CI soaks
+//! assert on.
+
+use crate::coordinator::sched::{MultiServer, Priority, Response, SubmitOpts, Ticket};
+use crate::util::Pcg32;
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+/// Traffic shape for one [`run`].
+#[derive(Clone, Copy, Debug)]
+pub struct LoadgenCfg {
+    /// offered request rate, summed across models (open loop)
+    pub qps: f64,
+    /// seconds of paced traffic
+    pub duration_s: f64,
+    /// deadline for low-priority requests; high-priority get 4×
+    pub deadline_ms: u64,
+    /// fraction of requests sent at [`Priority::Low`] (rest are High)
+    pub low_ratio: f64,
+    /// RNG seed for the priority mix
+    pub seed: u64,
+}
+
+impl Default for LoadgenCfg {
+    fn default() -> Self {
+        LoadgenCfg { qps: 400.0, duration_s: 2.0, deadline_ms: 25, low_ratio: 0.6, seed: 7 }
+    }
+}
+
+/// Per-model outcome of one [`run`]. Counters cover the paced phase
+/// only (tallied from ticket outcomes); `p50_ms`/`p99_ms`/`batches`
+/// come from the scheduler's streaming snapshot.
+#[derive(Clone, Debug)]
+pub struct ModelReport {
+    /// model name
+    pub model: String,
+    /// requests offered during the paced phase
+    pub offered: u64,
+    /// requests completed with logits (goodput)
+    pub completed: u64,
+    /// requests shed, all reasons
+    pub shed: u64,
+    /// sheds at admission (queue full, newcomer not outranking anyone)
+    pub shed_queue_full: u64,
+    /// sheds by displacement (evicted for a higher-priority newcomer)
+    pub shed_displaced: u64,
+    /// sheds by deadline expiry while queued
+    pub shed_expired: u64,
+    /// requests whose batch execution failed
+    pub failed: u64,
+    /// completed requests that beat their deadline
+    pub deadline_met: u64,
+    /// streaming median completion latency, milliseconds
+    pub p50_ms: f64,
+    /// streaming p99 completion latency, milliseconds
+    pub p99_ms: f64,
+    /// batches the model's worker executed (lifetime)
+    pub batches: u64,
+    /// workspace heap fallbacks after the run (lifetime)
+    pub ws_heap_allocs: u64,
+    /// true when the paced phase added zero workspace heap fallbacks
+    /// beyond the warm-up — the zero-steady-state-alloc contract
+    pub alloc_flat: bool,
+    /// queue depth after every ticket resolved (0 = clean drain)
+    pub queue_final: u64,
+}
+
+/// Drive `server` at `cfg.qps` across `models` (round-robin) for
+/// `cfg.duration_s`, mixing priorities and deadlines per `cfg`, and
+/// return one report per model. Before pacing starts, each model gets a
+/// warm-up wave (two full batches of high-priority requests) so the
+/// workspace pools are populated and `alloc_flat` measures steady state
+/// only.
+pub fn run(server: &MultiServer, models: &[String], cfg: &LoadgenCfg) -> Result<Vec<ModelReport>> {
+    anyhow::ensure!(!models.is_empty(), "loadgen needs at least one model");
+    anyhow::ensure!(cfg.qps > 0.0 && cfg.duration_s > 0.0, "qps and duration must be positive");
+    let mut images = Vec::with_capacity(models.len());
+    for m in models {
+        let len = server
+            .input_len(m)
+            .ok_or_else(|| anyhow::anyhow!("model '{m}' is not registered"))?;
+        let mut img = vec![0f32; len];
+        Pcg32::seeded(cfg.seed ^ len as u64).fill_gaussian(&mut img, 0.5);
+        images.push(img);
+    }
+
+    // warm-up: fill each worker's workspace pools before measuring
+    let mut warm = Vec::new();
+    for (mi, m) in models.iter().enumerate() {
+        for _ in 0..16 {
+            warm.push(server.submit(
+                m,
+                images[mi].clone(),
+                SubmitOpts { priority: Priority::High, deadline: Some(Duration::from_secs(60)) },
+            )?);
+        }
+    }
+    for t in warm {
+        let _ = t.wait();
+    }
+    let warm_allocs: Vec<u64> =
+        models.iter().map(|m| server.snapshot(m).map_or(0, |s| s.ws_heap_allocs)).collect();
+
+    // paced open-loop phase
+    let total = (cfg.qps * cfg.duration_s).round().max(1.0) as usize;
+    let interval = Duration::from_secs_f64(1.0 / cfg.qps);
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let mut tickets: Vec<(usize, Ticket)> = Vec::with_capacity(total);
+    let mut offered = vec![0u64; models.len()];
+    let start = Instant::now();
+    for i in 0..total {
+        let due = start + interval * i as u32;
+        loop {
+            let now = Instant::now();
+            if now >= due {
+                break;
+            }
+            // sleep coarsely, spin the last stretch for pacing accuracy
+            let left = due - now;
+            if left > Duration::from_micros(300) {
+                std::thread::sleep(left - Duration::from_micros(200));
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        let mi = i % models.len();
+        let opts = if rng.next_f64() < cfg.low_ratio {
+            SubmitOpts {
+                priority: Priority::Low,
+                deadline: Some(Duration::from_millis(cfg.deadline_ms)),
+            }
+        } else {
+            SubmitOpts {
+                priority: Priority::High,
+                deadline: Some(Duration::from_millis(cfg.deadline_ms * 4)),
+            }
+        };
+        offered[mi] += 1;
+        tickets.push((mi, server.submit(&models[mi], images[mi].clone(), opts)?));
+    }
+
+    // collect every outcome
+    let mut reports: Vec<ModelReport> = models
+        .iter()
+        .enumerate()
+        .map(|(mi, m)| ModelReport {
+            model: m.clone(),
+            offered: offered[mi],
+            completed: 0,
+            shed: 0,
+            shed_queue_full: 0,
+            shed_displaced: 0,
+            shed_expired: 0,
+            failed: 0,
+            deadline_met: 0,
+            p50_ms: 0.0,
+            p99_ms: 0.0,
+            batches: 0,
+            ws_heap_allocs: 0,
+            alloc_flat: false,
+            queue_final: 0,
+        })
+        .collect();
+    for (mi, t) in tickets {
+        let rep = &mut reports[mi];
+        match t.wait() {
+            Ok(Response::Done(c)) => {
+                rep.completed += 1;
+                if c.deadline_met {
+                    rep.deadline_met += 1;
+                }
+            }
+            Ok(Response::Shed(s)) => {
+                rep.shed += 1;
+                match s.reason {
+                    crate::coordinator::sched::ShedReason::QueueFull => rep.shed_queue_full += 1,
+                    crate::coordinator::sched::ShedReason::Displaced => rep.shed_displaced += 1,
+                    crate::coordinator::sched::ShedReason::DeadlineExpired => {
+                        rep.shed_expired += 1
+                    }
+                }
+            }
+            Err(_) => rep.failed += 1,
+        }
+    }
+    for (mi, rep) in reports.iter_mut().enumerate() {
+        if let Some(s) = server.snapshot(&rep.model) {
+            rep.p50_ms = s.latency.p50() * 1e3;
+            rep.p99_ms = s.latency.p99() * 1e3;
+            rep.batches = s.batches;
+            rep.ws_heap_allocs = s.ws_heap_allocs;
+            rep.alloc_flat = s.ws_heap_allocs == warm_allocs[mi];
+            rep.queue_final = s.queue_depth;
+        }
+    }
+    Ok(reports)
+}
+
+/// Print the loadgen report: one grep-able `loadgen: model=...` line per
+/// model (what the CI soak job asserts on) plus a closing drain line.
+pub fn print_report(reports: &[ModelReport]) {
+    for r in reports {
+        println!(
+            "loadgen: model={} offered={} goodput={} shed={} (queue_full={} displaced={} \
+             expired={}) failed={} deadline_met={} p50_ms={:.2} p99_ms={:.2} batches={} \
+             ws_heap_allocs={} alloc_flat={} queue_final={}",
+            r.model,
+            r.offered,
+            r.completed,
+            r.shed,
+            r.shed_queue_full,
+            r.shed_displaced,
+            r.shed_expired,
+            r.failed,
+            r.deadline_met,
+            r.p50_ms,
+            r.p99_ms,
+            r.batches,
+            r.ws_heap_allocs,
+            r.alloc_flat,
+            r.queue_final
+        );
+    }
+    let clean = reports.iter().all(|r| r.queue_final == 0 && r.failed == 0);
+    println!("loadgen: drain={}", if clean { "clean" } else { "dirty" });
+}

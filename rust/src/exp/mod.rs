@@ -7,6 +7,7 @@
 //! images (paper: 500), evaluation 256 images (paper: 50k val set);
 //! override with SFC_CALIB_N / SFC_EVAL_N.
 
+pub mod loadgen;
 pub mod perf;
 
 use crate::data::Dataset;

@@ -49,9 +49,17 @@
 //!   FPGA accelerator comparison.
 //! * [`runtime`] / [`coordinator`] — serving: PJRT executor over AOT
 //!   artifacts (feature `pjrt`; clean stub otherwise), the pure-Rust
-//!   [`runtime::EngineExecutor`] over the engine stack, and the dynamic
-//!   batcher holding one workspace per worker (zero-alloc steady state,
-//!   surfaced via latency + plan-cache + workspace metrics).
+//!   [`runtime::EngineExecutor`] over the engine stack, and the
+//!   multi-model scheduler [`coordinator::sched::MultiServer`] —
+//!   continuous batching by per-request deadline, priority-based
+//!   admission control and typed load shedding, resident models sharing
+//!   the plan cache under a packed-weight budget
+//!   ([`engine::PackBudget`]), one workspace per model worker
+//!   (zero-alloc steady state), streaming p50/p99 latency histograms
+//!   ([`coordinator::metrics::StreamingHistogram`]) and per-model
+//!   gauges. [`coordinator::batcher::Server`] is the single-model shim;
+//!   `sfc loadgen` ([`exp::loadgen`]) is the overload measurement
+//!   harness (ENGINE.md §Serving & scheduling).
 //! * [`data`] — SynthImage dataset (ImageNet stand-in, DESIGN.md §2).
 //! * [`exp`] — experiment harnesses regenerating the paper's tables, and
 //!   [`exp::perf`]: the `sfc bench --json` perf-snapshot harness

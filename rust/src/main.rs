@@ -29,6 +29,7 @@ fn main() -> Result<()> {
         "fig4" => sfc::exp::cmd_fig4(opt(&opts, "data-dir", "artifacts")),
         "fig5" => sfc::exp::cmd_fig5(opt(&opts, "data-dir", "artifacts")),
         "serve" => sfc::coordinator::cmd_serve(&opts),
+        "loadgen" => sfc::coordinator::cmd_loadgen(&opts),
         "autotune" => cmd_autotune(&opts),
         "bench" => cmd_bench(&opts),
         "graph" => cmd_graph(&opts),
@@ -47,7 +48,18 @@ fn parse_opts(args: &[String]) -> HashMap<String, String> {
         let a = &args[i];
         if let Some(key) = a.strip_prefix("--") {
             if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                map.insert(key.to_string(), args[i + 1].clone());
+                // repeated flags accumulate comma-separated, so
+                // `--model a --model b` reads the same as `--model a,b`
+                match map.entry(key.to_string()) {
+                    std::collections::hash_map::Entry::Occupied(mut e) => {
+                        let v: &mut String = e.get_mut();
+                        v.push(',');
+                        v.push_str(&args[i + 1]);
+                    }
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(args[i + 1].clone());
+                    }
+                }
                 i += 2;
             } else {
                 map.insert(key.to_string(), "true".to_string());
@@ -82,11 +94,13 @@ experiments (paper table/figure per DESIGN.md §6):
 
 engine selection (cuDNN findAlgorithm-style):
   autotune    [--model resnet18|resnet34|resnet50|mobilenet|vgg16]
-              [--batch 1] [--iters 3] [--bits 0]
+              [--batch 1] [--iters 3] [--bits 0] [--out tuning.json]
               micro-benchmark every supporting engine per layer shape
               (mobilenet exercises the grouped/depthwise descriptors),
               print measured times + the selected winner (--bits N asks
-              for the intN transform-domain scheme; 0 = float)
+              for the intN transform-domain scheme; 0 = float); --out
+              writes the measured shape -> engine table that `serve` and
+              `loadgen` warm from via --tuning (no re-measuring)
 
 perf snapshot (steady-state pre-packed run over a reused workspace):
   bench       [--json] [--out BENCH_conv.json] [--iters 9] [--warmup 2]
@@ -113,8 +127,25 @@ serving demo (L3 over PJRT artifacts, or --runner engine for the
 pure-Rust workspace-backed path):
   serve       [--hlo artifacts/resnet18_b8.hlo.txt] [--data-dir artifacts]
               [--requests 256] [--batch 8] [--runner pjrt|engine]
-              [--model resnet18] [--quant 8]
+              [--model resnet18] [--quant 8] [--tuning tuning.json]
               (--quant N: PTQ + compiled int8 dataflow, engine runner)
+              multi-model: repeat --model (or comma-separate) with
+              name[:intN] specs, e.g. --model resnet18 --model
+              mobilenet:int8 — resident models share one plan cache and
+              a packed-weight budget ([--budget-mb 0] [--queue-depth 64]
+              [--linger-ms 2]); requires --runner engine
+
+serving load generator (continuous batching under overload):
+  loadgen     [--models resnet18,mobilenet:int8] [--qps 400]
+              [--duration-s 2.0] [--deadline-ms 25] [--low-ratio 0.6]
+              [--batch 8] [--queue-depth 32] [--budget-mb 64]
+              [--linger-ms 2] [--seed 7] [--tuning tuning.json]
+              open-loop paced traffic against a multi-model scheduler
+              (random weights; name[:intN] specs get synthetic-calib
+              PTQ): mixed priorities/deadlines, deadline-driven batch
+              formation, admission control + load shedding; reports per
+              model goodput, typed sheds, deadline hit rate, streaming
+              p50/p99, batches, workspace alloc flatness and drain state
 "#
     );
 }
@@ -344,7 +375,7 @@ fn resnet_cfg_by_name(name: &str) -> Result<sfc::nn::model::ResNetCfg> {
 /// layer shape of a model and print the per-shape winner (the cuDNN
 /// `findAlgorithm` workflow over the Table-1 engine catalog).
 fn cmd_autotune(opts: &HashMap<String, String>) -> Result<()> {
-    use sfc::engine::{AutotuneCfg, ConvDesc, Policy, QuantSpec, Selector};
+    use sfc::engine::{AutotuneCfg, ConvDesc, Policy, QuantSpec, Selector, TuningTable};
     use sfc::nn::model::{
         mobilenet_cfg, mobilenet_random, model_conv_descs, resnet_random, vgg16_conv_shapes,
     };
@@ -353,6 +384,7 @@ fn cmd_autotune(opts: &HashMap<String, String>) -> Result<()> {
     let batch: usize = parse_opt(opts, "batch", 1)?;
     let iters: usize = parse_opt(opts, "iters", 3)?;
     let bits: u32 = parse_opt(opts, "bits", 0)?; // 0 = float path
+    let out_path = opts.get("out").filter(|v| v.as_str() != "true");
 
     // Layer descriptors straight from the built model's conv plans
     // (preserving stride/pad and groups — mobilenet's dw layers are
@@ -398,6 +430,7 @@ fn cmd_autotune(opts: &HashMap<String, String>) -> Result<()> {
         descs.len()
     );
     let sel = Selector::new(Policy::Autotune(AutotuneCfg { warmup: 1, iters }));
+    let mut table = TuningTable::new();
     for (d, names) in &buckets {
         println!(
             "shape {}x{}x{} -> {} (r={}, stride {}, pad {}, groups {}) — {} layer(s): {}",
@@ -429,6 +462,18 @@ fn cmd_autotune(opts: &HashMap<String, String>) -> Result<()> {
         }
         let winner = entries.iter().find(|t| t.selected).expect("autotune flags a winner");
         println!("    selected: {}\n", winner.engine);
+        table.insert(d, &winner.engine, winner.median_s);
+    }
+
+    if let Some(path) = out_path {
+        table.save(std::path::Path::new(path))?;
+        println!(
+            "wrote {} ({} measured shape -> engine pins; warm `sfc serve`/`sfc loadgen` \
+             with --tuning {})",
+            path,
+            table.len(),
+            path
+        );
     }
 
     // Repeated model construction reuses cached plans — the serving-path

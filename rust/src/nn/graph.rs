@@ -11,7 +11,7 @@
 //! consumer ran — the zero-alloc serving path.
 
 use super::tensor::Tensor;
-use crate::engine::{ConvPlan, PackedWeights, Workspace};
+use crate::engine::{packed_bytes_estimate, ConvPlan, PackBudget, PackedWeights, Workspace};
 use crate::quant::qconv::QConvLayer;
 use crate::quant::QTensor;
 use std::sync::Arc;
@@ -28,6 +28,18 @@ pub struct ConvParams {
     pub stride: usize,
     /// symmetric zero padding
     pub pad: usize,
+}
+
+/// Outcome of [`Model::prepack_weights_budgeted`]: how many conv layers
+/// were pre-packed vs. skipped by the budget, and the bytes added.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrepackReport {
+    /// float conv layers whose weights were pre-transformed + packed
+    pub packed_layers: usize,
+    /// layers skipped by the budget (they run the per-call path)
+    pub skipped_layers: usize,
+    /// packed bytes added by this call
+    pub added_bytes: usize,
 }
 
 /// One graph operation.
@@ -268,17 +280,34 @@ impl Model {
     /// Idempotent; layers the PTQ pass quantized keep their own packed
     /// panels inside the [`QConvLayer`]. Returns the packed bytes added.
     pub fn prepack_weights(&mut self) -> usize {
-        let mut added = 0usize;
+        self.prepack_weights_budgeted(&PackBudget::unlimited()).added_bytes
+    }
+
+    /// Like [`Model::prepack_weights`] but under a [`PackBudget`]: each
+    /// layer's packed size is estimated ([`packed_bytes_estimate`],
+    /// exact by construction) and the layer is only pre-packed if it
+    /// fits next to everything already packed process-wide. Skipped
+    /// layers degrade gracefully — [`Model::forward_ws`] falls back to
+    /// the per-call transform+pack path for them, bit-identical, just
+    /// without the plan-time speedup.
+    pub fn prepack_weights_budgeted(&mut self, budget: &PackBudget) -> PrepackReport {
+        let mut report = PrepackReport::default();
         for node in &mut self.nodes {
             if let Op::Conv { params, plan, packed, quantized } = &mut node.op {
                 if quantized.is_none() && packed.is_none() {
-                    let p = Arc::new(PackedWeights::pack(plan, &params.weight));
-                    added += p.bytes();
-                    *packed = Some(p);
+                    let est = packed_bytes_estimate(plan);
+                    if budget.try_admit(est) {
+                        let p = Arc::new(PackedWeights::pack(plan, &params.weight));
+                        report.added_bytes += p.bytes();
+                        report.packed_layers += 1;
+                        *packed = Some(p);
+                    } else {
+                        report.skipped_layers += 1;
+                    }
                 }
             }
         }
-        added
+        report
     }
 
     /// Forward pass; returns every node's activation (used by PTQ

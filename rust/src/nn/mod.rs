@@ -17,6 +17,6 @@ pub mod tensor;
 pub mod weights;
 
 pub use conv::{conv2d_direct, conv2d_fast, FastConvPlan};
-pub use graph::{Model, Op};
+pub use graph::{Model, Op, PrepackReport};
 pub use passes::CompileReport;
 pub use tensor::Tensor;

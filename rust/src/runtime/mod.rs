@@ -121,8 +121,8 @@ mod pjrt_impl {
 
 pub use pjrt_impl::Executor;
 
-use crate::engine::Workspace;
-use crate::nn::{Model, Tensor};
+use crate::engine::{PackBudget, Workspace};
+use crate::nn::{Model, PrepackReport, Tensor};
 use anyhow::Result;
 
 /// A pure-Rust executor over the engine stack: the same batch-in /
@@ -151,11 +151,32 @@ impl EngineExecutor {
     /// [`crate::engine::ConvPlan::run_packed_into`] over pre-packed
     /// operands only — bit-identical to the per-call path.
     pub fn from_model(model: Model, input_dims: Vec<usize>, out_classes: usize) -> EngineExecutor {
+        EngineExecutor::from_model_budgeted(
+            model,
+            input_dims,
+            out_classes,
+            &PackBudget::unlimited(),
+        )
+        .0
+    }
+
+    /// Like [`EngineExecutor::from_model`] but pre-packing under a
+    /// [`PackBudget`]: layers that would overrun the process-wide
+    /// packed-weight budget are left unpacked (they serve through the
+    /// bit-identical per-call path). Returns the executor and the
+    /// packed-vs-skipped report, so callers (the multi-model scheduler,
+    /// `sfc loadgen`) can surface the budget decision.
+    pub fn from_model_budgeted(
+        model: Model,
+        input_dims: Vec<usize>,
+        out_classes: usize,
+        budget: &PackBudget,
+    ) -> (EngineExecutor, PrepackReport) {
         assert_eq!(input_dims.len(), 4, "NCHW input dims expected, got {input_dims:?}");
         let mut model = model;
         model.compile();
-        model.prepack_weights();
-        EngineExecutor { model, input_dims, out_classes }
+        let report = model.prepack_weights_budgeted(budget);
+        (EngineExecutor { model, input_dims, out_classes }, report)
     }
 
     /// Always "rust-engine".

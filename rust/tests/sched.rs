@@ -1,0 +1,420 @@
+//! Multi-model scheduler tests: deterministic admission-control /
+//! displacement / shedding behavior against a gated mock, the
+//! overload-with-real-models e2e (shared plan cache, packed-weight
+//! budget, deadline p99, flat workspace allocs), budget-skipped
+//! pre-packing staying bit-identical, typed stopped errors, and counter
+//! consistency under concurrent submitters.
+
+use sfc::coordinator::sched::{
+    MultiServer, Priority, Response, SchedConfig, ServerStopped, ShedReason, SubmitOpts,
+};
+use sfc::coordinator::ModelRunner;
+use sfc::engine::{packed_weight_bytes, PackBudget};
+use sfc::nn::model::{mobilenet_cfg, mobilenet_random, resnet18_cfg, resnet_random};
+use sfc::nn::Tensor;
+use sfc::quant::{quantize_model, QuantConfig};
+use sfc::runtime::EngineExecutor;
+use sfc::util::Pcg32;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Mock whose `run` blocks at a gate until the test opens it — lets a
+/// test park the worker mid-batch and manipulate the queue with no
+/// timing races. Logit round-trip: class = image[0].
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+    entered: AtomicUsize,
+}
+
+struct GatedMock {
+    dims: Vec<usize>,
+    gate: Arc<Gate>,
+}
+
+impl ModelRunner for GatedMock {
+    fn input_dims(&self) -> &[usize] {
+        &self.dims
+    }
+    fn out_classes(&self) -> usize {
+        10
+    }
+    fn run(&self, batch: &[f32]) -> Result<Vec<f32>> {
+        self.gate.entered.fetch_add(1, Ordering::SeqCst);
+        let mut open = self.gate.open.lock().unwrap();
+        while !*open {
+            open = self.gate.cv.wait(open).unwrap();
+        }
+        drop(open);
+        mock_logits(&self.dims, batch)
+    }
+}
+
+/// Instant mock (no gate, no delay) for shutdown/concurrency tests.
+struct InstantMock {
+    dims: Vec<usize>,
+}
+
+impl ModelRunner for InstantMock {
+    fn input_dims(&self) -> &[usize] {
+        &self.dims
+    }
+    fn out_classes(&self) -> usize {
+        10
+    }
+    fn run(&self, batch: &[f32]) -> Result<Vec<f32>> {
+        mock_logits(&self.dims, batch)
+    }
+}
+
+fn mock_logits(dims: &[usize], batch: &[f32]) -> Result<Vec<f32>> {
+    let sample: usize = dims[1..].iter().product();
+    let n = dims[0];
+    let mut out = vec![0f32; n * 10];
+    for i in 0..n {
+        let cls = (batch[i * sample] as usize).min(9);
+        out[i * 10 + cls] = 1.0;
+    }
+    Ok(out)
+}
+
+fn img(cls: usize) -> Vec<f32> {
+    let mut v = vec![0f32; 4];
+    v[0] = (cls % 10) as f32;
+    v
+}
+
+fn opts(priority: Priority, deadline_s: u64) -> SubmitOpts {
+    SubmitOpts { priority, deadline: Some(Duration::from_secs(deadline_s)) }
+}
+
+/// The deterministic admission-control script: park the worker on a full
+/// batch behind the gate, fill the queue with Low work, displace every
+/// entry with High work, bounce two more Lows off the all-High queue,
+/// then open the gate and check that every ticket resolved with exactly
+/// the typed outcome the policy promises.
+#[test]
+fn overload_sheds_low_priority_with_typed_outcomes() {
+    let server = MultiServer::new(SchedConfig {
+        queue_depth: 8,
+        default_deadline_ms: 60_000,
+        linger_ms: 2_000, // only partial batches linger; every batch here is full
+        packed_budget_bytes: 0,
+    });
+    let gate = Arc::new(Gate {
+        open: Mutex::new(false),
+        cv: Condvar::new(),
+        entered: AtomicUsize::new(0),
+    });
+    let g2 = gate.clone();
+    server.add_model("m", move || Ok(GatedMock { dims: vec![4, 1, 2, 2], gate: g2 })).unwrap();
+
+    // 4 High fillers: the worker forms a full batch and parks at the gate
+    let fillers: Vec<_> =
+        (0..4).map(|i| server.submit("m", img(i), opts(Priority::High, 60)).unwrap()).collect();
+    let t0 = Instant::now();
+    while gate.entered.load(Ordering::SeqCst) == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker never reached the gate");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(
+        server.snapshot("m").unwrap().queue_depth,
+        0,
+        "the parked batch must hold all 4 fillers"
+    );
+
+    // 8 Low fill the queue to its depth
+    let lows: Vec<_> =
+        (0..8).map(|i| server.submit("m", img(i), opts(Priority::Low, 30)).unwrap()).collect();
+    assert_eq!(server.snapshot("m").unwrap().queue_depth, 8);
+    // 8 High displace every queued Low
+    let highs: Vec<_> =
+        (0..8).map(|i| server.submit("m", img(i), opts(Priority::High, 60)).unwrap()).collect();
+    // 2 more Low bounce off the now all-High queue
+    let rejected: Vec<_> =
+        (0..2).map(|i| server.submit("m", img(i), opts(Priority::Low, 30)).unwrap()).collect();
+
+    {
+        let mut open = gate.open.lock().unwrap();
+        *open = true;
+        gate.cv.notify_all();
+    }
+
+    for (i, t) in fillers.into_iter().enumerate() {
+        match t.wait().unwrap() {
+            Response::Done(c) => {
+                assert_eq!(c.argmax, i % 10, "filler {i}");
+                assert!(c.deadline_met, "filler {i} had a 60 s deadline");
+            }
+            Response::Shed(s) => panic!("filler {i} shed ({})", s.reason.name()),
+        }
+    }
+    for (i, t) in lows.into_iter().enumerate() {
+        match t.wait().unwrap() {
+            Response::Shed(s) => {
+                assert_eq!(s.reason, ShedReason::Displaced, "low {i}");
+                assert_eq!(s.priority, Priority::Low, "low {i}");
+                assert!(s.waited_s >= 0.0);
+            }
+            Response::Done(_) => panic!("low {i} should have been displaced"),
+        }
+    }
+    for (i, t) in highs.into_iter().enumerate() {
+        match t.wait().unwrap() {
+            Response::Done(c) => assert!(c.deadline_met, "high {i}"),
+            Response::Shed(s) => panic!("high {i} shed ({})", s.reason.name()),
+        }
+    }
+    for (i, t) in rejected.into_iter().enumerate() {
+        match t.wait().unwrap() {
+            Response::Shed(s) => {
+                assert_eq!(s.reason, ShedReason::QueueFull, "rejected {i}");
+                assert_eq!(s.priority, Priority::Low, "rejected {i}");
+            }
+            Response::Done(_) => panic!("rejected {i} should have bounced off the full queue"),
+        }
+    }
+
+    let s = server.snapshot("m").unwrap();
+    assert_eq!(s.submitted, 22);
+    assert_eq!(s.completed, 12);
+    assert_eq!(s.shed, 10);
+    assert_eq!(s.failed, 0);
+    assert_eq!(s.deadline_met, 12, "every completion carried a generous deadline");
+    assert_eq!(s.batches, 3, "4 fillers + 8 highs at batch 4 = 3 full batches");
+    assert_eq!(s.queue_depth, 0);
+    assert_eq!(s.latency.count(), 12, "histogram records completions only, not sheds");
+    assert!(s.latency.p99() <= 60.0);
+    server.shutdown();
+}
+
+/// The acceptance e2e: two real resident models (float MobileNet + int8
+/// MobileNet) on one server, overloaded with mixed priorities/deadlines.
+/// Low-priority work sheds (typed), every admitted High meets its
+/// deadline, the second model's plans come from the shared process-wide
+/// PlanCache, live packed weights stay within the configured budget, and
+/// steady-state serving adds zero workspace heap allocations.
+#[test]
+fn two_models_share_cache_and_budget_under_overload() {
+    const BUDGET: u64 = 512 * 1024 * 1024;
+    let server = MultiServer::new(SchedConfig {
+        queue_depth: 16,
+        default_deadline_ms: 30_000,
+        linger_ms: 2,
+        packed_budget_bytes: BUDGET,
+    });
+    let ma = mobilenet_random(&mobilenet_cfg(), 1, 10);
+    let (h0, _) = sfc::coordinator::metrics::plan_cache_counters();
+    let mut mb = mobilenet_random(&mobilenet_cfg(), 2, 10);
+    let (h1, _) = sfc::coordinator::metrics::plan_cache_counters();
+    assert!(h1 > h0, "the second model must plan through the shared PlanCache");
+    let mut calib = Tensor::zeros(&[2, 3, 32, 32]);
+    Pcg32::seeded(9).fill_gaussian(&mut calib.data, 1.0);
+    quantize_model(&mut mb, &calib, &QuantConfig::direct_default(8));
+
+    let budget = PackBudget::new(BUDGET as usize);
+    let dims = vec![2usize, 3, 32, 32];
+    let (da, db) = (dims.clone(), dims.clone());
+    server
+        .add_model("mn-f32", move || Ok(EngineExecutor::from_model_budgeted(ma, da, 10, &budget).0))
+        .unwrap();
+    server
+        .add_model("mn-int8", move || {
+            Ok(EngineExecutor::from_model_budgeted(mb, db, 10, &budget).0)
+        })
+        .unwrap();
+    assert!(
+        packed_weight_bytes() <= BUDGET,
+        "live packed weights {} exceed the configured budget {BUDGET}",
+        packed_weight_bytes()
+    );
+
+    let sample = 3 * 32 * 32;
+    let mut image = vec![0f32; sample];
+    Pcg32::seeded(17).fill_gaussian(&mut image, 0.5);
+    let names = ["mn-f32", "mn-int8"];
+
+    // warm-up: populate each worker's workspace pools before measuring
+    let mut warm = Vec::new();
+    for m in names {
+        for _ in 0..8 {
+            warm.push(server.submit(m, image.clone(), opts(Priority::High, 60)).unwrap());
+        }
+    }
+    for t in warm {
+        t.wait().unwrap();
+    }
+    let warm_allocs: Vec<u64> =
+        names.iter().map(|m| server.snapshot(m).unwrap().ws_heap_allocs).collect();
+
+    // overload burst: 40 Low with a hopeless 5 ms deadline, then 16 High
+    // with a generous one, per model
+    let mut low_tickets = Vec::new();
+    let mut high_tickets = Vec::new();
+    for m in names {
+        for _ in 0..40 {
+            let o = SubmitOpts {
+                priority: Priority::Low,
+                deadline: Some(Duration::from_millis(5)),
+            };
+            low_tickets.push((m, server.submit(m, image.clone(), o).unwrap()));
+        }
+    }
+    for m in names {
+        for _ in 0..16 {
+            high_tickets.push((m, server.submit(m, image.clone(), opts(Priority::High, 30)).unwrap()));
+        }
+    }
+
+    let mut sheds = 0u64;
+    for (m, t) in low_tickets {
+        match t.wait().unwrap() {
+            Response::Shed(s) => {
+                sheds += 1;
+                assert_eq!(s.priority, Priority::Low, "{m}: only Low work may shed here");
+                assert_eq!(s.model, m);
+            }
+            Response::Done(_) => {} // a lucky Low beat its 5 ms deadline window
+        }
+    }
+    assert!(sheds > 0, "overload must shed some low-priority work");
+    for (m, t) in high_tickets {
+        match t.wait().unwrap() {
+            Response::Done(c) => {
+                assert!(c.deadline_met, "{m}: admitted High work must meet its deadline");
+            }
+            Response::Shed(s) => panic!("{m}: High request shed ({})", s.reason.name()),
+        }
+    }
+
+    for (mi, m) in names.iter().enumerate() {
+        let s = server.snapshot(m).unwrap();
+        assert_eq!(s.failed, 0, "{m}");
+        assert_eq!(s.queue_depth, 0, "{m}: every ticket resolved, queue must be drained");
+        assert!(s.latency.count() > 0, "{m}");
+        assert!(s.latency.p99() <= 30.0, "{m}: admitted work completes within deadline at p99");
+        assert_eq!(
+            s.ws_heap_allocs, warm_allocs[mi],
+            "{m}: steady-state serving must add zero workspace heap allocations"
+        );
+    }
+    server.shutdown();
+}
+
+/// Satellite: a tiny pack budget skips every panel (added_bytes == 0)
+/// and the unpacked model still produces bit-identical logits — packing
+/// is a perf decision, never a numerics decision.
+#[test]
+fn prepack_budget_skips_but_stays_bit_identical() {
+    let mut a = resnet_random(&resnet18_cfg(), 5, 10);
+    let mut b = resnet_random(&resnet18_cfg(), 5, 10);
+    a.compile();
+    b.compile();
+    let full = a.prepack_weights_budgeted(&PackBudget::unlimited());
+    assert!(full.packed_layers > 0, "resnet18 must have packable conv layers");
+    assert!(full.added_bytes > 0, "resnet18 must have fast-plan panels to pack");
+    let none = b.prepack_weights_budgeted(&PackBudget::new(1));
+    assert_eq!(none.added_bytes, 0, "a 1-byte budget admits no panel");
+    assert!(none.skipped_layers > 0);
+    let mut x = Tensor::zeros(&[1, 3, 32, 32]);
+    Pcg32::seeded(11).fill_gaussian(&mut x.data, 1.0);
+    let ya = a.forward(&x);
+    let yb = b.forward(&x);
+    assert_eq!(ya.data, yb.data, "budget-skipped serving path must stay bit-identical");
+}
+
+/// Registration-time budget backstop: a model whose unbudgeted pre-pack
+/// overruns `packed_budget_bytes` is torn down and `add_model` fails.
+#[test]
+fn add_model_rejects_budget_overrun() {
+    let server = MultiServer::new(SchedConfig {
+        queue_depth: 4,
+        default_deadline_ms: 1_000,
+        linger_ms: 1,
+        packed_budget_bytes: 1,
+    });
+    let m = resnet_random(&resnet18_cfg(), 6, 10);
+    let err = server
+        .add_model("rn", move || Ok(EngineExecutor::from_model(m, vec![1, 3, 32, 32], 10)))
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("packed-weight budget"),
+        "expected a budget-overrun error, got: {err:#}"
+    );
+    assert!(server.models().is_empty(), "the rejected model must not stay registered");
+    server.shutdown();
+}
+
+/// Satellite: typed stopped errors. `submit` after `shutdown` fails
+/// immediately with [`ServerStopped`]; an unknown model is a plain
+/// (different) error.
+#[test]
+fn submit_after_shutdown_is_a_typed_error() {
+    let server = MultiServer::new(SchedConfig::default());
+    server.add_model("m", || Ok(InstantMock { dims: vec![2, 1, 2, 2] })).unwrap();
+    let unknown = server.submit("nope", img(0), opts(Priority::Normal, 60)).unwrap_err();
+    assert!(!unknown.is::<ServerStopped>(), "unknown model is not a stopped-server error");
+    match server
+        .submit("m", img(3), opts(Priority::Normal, 60))
+        .unwrap()
+        .wait()
+        .unwrap()
+    {
+        Response::Done(c) => assert_eq!(c.argmax, 3),
+        Response::Shed(s) => panic!("unexpected shed ({})", s.reason.name()),
+    }
+    server.shutdown();
+    let err = server.submit("m", img(0), opts(Priority::Normal, 60)).unwrap_err();
+    assert!(err.is::<ServerStopped>(), "submit after shutdown: {err:#}");
+    let err = server.submit_blocking("m", img(0)).unwrap_err();
+    assert!(err.is::<ServerStopped>(), "blocking submit after shutdown: {err:#}");
+}
+
+/// Counter consistency under concurrent submitters: with 4 threads
+/// hammering a tiny queue, every submit is accounted for exactly once —
+/// submitted == completed + shed, nothing lost, queue drained.
+#[test]
+fn counters_consistent_under_concurrent_submitters() {
+    let server = Arc::new(MultiServer::new(SchedConfig {
+        queue_depth: 4,
+        default_deadline_ms: 30_000,
+        linger_ms: 1,
+        packed_budget_bytes: 0,
+    }));
+    server.add_model("m", || Ok(InstantMock { dims: vec![4, 1, 2, 2] })).unwrap();
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let srv = server.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut done = 0u64;
+            let mut shed = 0u64;
+            for i in 0..50 {
+                let pr = if (t + i) % 2 == 0 { Priority::Normal } else { Priority::High };
+                let ticket = srv.submit("m", img(i as usize), opts(pr, 30)).unwrap();
+                match ticket.wait().unwrap() {
+                    Response::Done(_) => done += 1,
+                    Response::Shed(_) => shed += 1,
+                }
+            }
+            (done, shed)
+        }));
+    }
+    let (mut done, mut shed) = (0u64, 0u64);
+    for j in joins {
+        let (d, s) = j.join().unwrap();
+        done += d;
+        shed += s;
+    }
+    assert_eq!(done + shed, 200);
+    let s = server.snapshot("m").unwrap();
+    assert_eq!(s.submitted, 200);
+    assert_eq!(s.completed, done);
+    assert_eq!(s.shed, shed);
+    assert_eq!(s.failed, 0);
+    assert_eq!(s.completed + s.shed, 200, "every submit resolves exactly once");
+    assert_eq!(s.queue_depth, 0);
+    assert_eq!(s.latency.count(), s.completed, "histogram counts completions only");
+    server.shutdown();
+}
