@@ -47,6 +47,15 @@ pub fn kernel_name() -> &'static str {
     crate::linalg::simd::kernel_name()
 }
 
+/// (total, leased, peak) snapshot of the process-wide compute-lane
+/// budget ([`crate::util::par::CoreBudget`]). `peak` is the high-water
+/// mark of concurrently leased lanes — the observable proof that model
+/// workers × intra-op GEMM threads never oversubscribe the host.
+/// Reported by `sfc serve` next to the kernel/workspace stats.
+pub fn core_budget() -> (usize, usize, usize) {
+    crate::util::par::CoreBudget::snapshot()
+}
+
 /// Latency summary over a set of per-request samples (seconds).
 #[derive(Clone, Copy, Debug)]
 pub struct LatencyStats {

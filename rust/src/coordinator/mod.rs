@@ -71,6 +71,25 @@ fn install_tuning(opts: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Apply `--cores <N>` (if given): cap the process-wide
+/// [`crate::util::par::CoreBudget`] so model workers × intra-op GEMM
+/// threads never run more than N concurrent compute lanes. Without the
+/// flag the budget follows `SFC_THREADS`/detected parallelism.
+fn apply_cores(opts: &HashMap<String, String>) -> Result<()> {
+    let cores: usize = parse_opt(opts, "cores", 0)?;
+    if cores > 0 {
+        crate::util::par::CoreBudget::set_total(Some(cores));
+        println!("core budget: capped at {cores} lanes (--cores)");
+    }
+    Ok(())
+}
+
+/// One `key : total/leased/peak` core-budget report line.
+fn core_budget_line() -> String {
+    let (total, leased, peak) = metrics::core_budget();
+    format!("{total} lanes · {leased} leased now · peak {peak} concurrent")
+}
+
 /// `sfc serve` — the end-to-end demo: load a model (PJRT AOT artifact,
 /// or the pure-Rust engine stack with `--runner engine`), serve a stream
 /// of requests from the SynthImage test split, report accuracy, latency
@@ -97,6 +116,7 @@ pub fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
         "--quant requires --runner engine (the PJRT artifact is fixed-precision)"
     );
     install_tuning(opts)?;
+    apply_cores(opts)?;
     if let Some(models) = opts.get("model") {
         if models.contains(',') {
             anyhow::ensure!(
@@ -172,6 +192,7 @@ pub fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
     );
     println!("  batches    : {}", server.batches_executed());
     println!("  kernel     : {}", metrics::kernel_name());
+    println!("  core budget: {}", core_budget_line());
     let (hits, misses) = metrics::plan_cache_counters();
     println!("  plan cache : {hits} hits / {misses} misses");
     println!(
@@ -287,6 +308,7 @@ fn serve_multi(
         if budget_mb > 0 { format!("{budget_mb} MB") } else { "unlimited".into() }
     );
     println!("  kernel     : {}", metrics::kernel_name());
+    println!("  core budget: {}", core_budget_line());
     server.shutdown();
     Ok(())
 }
@@ -311,6 +333,7 @@ pub fn cmd_loadgen(opts: &HashMap<String, String>) -> Result<()> {
     let linger_ms: u64 = parse_opt(opts, "linger-ms", 2)?;
     let seed: u64 = parse_opt(opts, "seed", 7)?;
     install_tuning(opts)?;
+    apply_cores(opts)?;
     let server = MultiServer::new(SchedConfig {
         queue_depth,
         default_deadline_ms: deadline_ms,
@@ -374,6 +397,7 @@ pub fn cmd_loadgen(opts: &HashMap<String, String>) -> Result<()> {
         metrics::packed_weight_bytes() as f64 / 1024.0,
         metrics::kernel_name()
     );
+    println!("loadgen: core budget {}", core_budget_line());
     server.shutdown();
     Ok(())
 }

@@ -618,6 +618,13 @@ fn shed_expired(shared: &ModelShared, st: &mut QueueState, now: Instant) {
 }
 
 fn worker_loop<R: ModelRunner>(exe: R, shared: Arc<ModelShared>, cfg: SchedConfig) {
+    // This worker thread occupies one process-wide CoreBudget lane for
+    // its whole lifetime (it IS a live thread whether batching or
+    // waiting). Intra-op GEMM teams inside `run_with` lease only the
+    // lanes that remain, so N resident models × M gemm threads can
+    // never oversubscribe the host — `metrics::core_budget()` exposes
+    // the peak as proof.
+    let _lane = crate::util::par::CoreBudget::lease(1);
     let sample: usize = exe.input_dims()[1..].iter().product();
     let classes = exe.out_classes();
     let max_batch = exe.input_dims()[0].max(1);

@@ -56,6 +56,11 @@ pub fn conv2d_im2col_into(
     // benign because Workspace checkouts arrive zeroed and later calls
     // only ever leave earlier finite lowering values behind.
     let col_len = npix.div_ceil(PANEL) * k * PANEL;
+    // Two nested levels of parallelism, arbitrated by the CoreBudget:
+    // across images here (one lowering buffer per worker), and inside
+    // each per-group `gemm_packed_f32` call below (the macro-kernel
+    // leases whatever lanes remain, so batch-1 shapes still thread the
+    // GEMM while large batches keep it serial per worker).
     let workers = num_threads().min(n).max(1);
     let mut states: Vec<Vec<f32>> = (0..workers).map(|_| ws.take_f32(col_len)).collect();
     par_chunks_states(&mut out.data, oc * npix, &mut states, |col, ni, out_img| {

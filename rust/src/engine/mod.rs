@@ -397,8 +397,10 @@ impl ConvPlan {
 
     /// Scratch bytes one `run_into` call checks out of its workspace for
     /// the planned descriptor (single-image parallelism accounted at the
-    /// configured thread count). Callers can pre-warm with
-    /// [`Workspace::with_capacity`].
+    /// configured thread count). Intra-op GEMM threads need no extra
+    /// accounting: the macro-kernel's workers slice the caller's packed
+    /// panels and output rows in place, checking out no scratch of
+    /// their own. Callers can pre-warm with [`Workspace::with_capacity`].
     pub fn workspace_bytes(&self) -> usize {
         let d = &self.desc;
         let (oh, ow) = d.out_hw();

@@ -55,6 +55,17 @@ impl Policy {
     }
 }
 
+/// One row of a cache-blocking sweep report ([`Selector::tune_blocking`]).
+#[derive(Clone, Copy, Debug)]
+pub struct BlockTuneEntry {
+    /// the Mc/Kc/Nc candidate that was measured
+    pub blocking: crate::linalg::gemm::Blocking,
+    /// measured median seconds per run
+    pub median_s: f64,
+    /// true on the measured winner
+    pub selected: bool,
+}
+
 /// One row of an autotune report.
 #[derive(Clone, Copy, Debug)]
 pub struct TuneEntry {
@@ -206,65 +217,120 @@ impl Selector {
         self.autotune_with(d, cfg)
     }
 
-    fn autotune_with(&self, d: &ConvDesc, cfg: AutotuneCfg) -> Result<Vec<TuneEntry>> {
-        let cands = self.candidates(d);
-        if cands.is_empty() {
-            bail!("no engine supports descriptor {:?}", d);
-        }
-        // deterministic synthetic workload of the descriptor's shape
-        // (grouped descriptors carry [OC, IC/g, R, R] weights)
+    /// Deterministic synthetic (input, weight) workload of a descriptor's
+    /// shape (grouped descriptors carry [OC, IC/g, R, R] weights).
+    fn synthetic_workload(d: &ConvDesc) -> (Tensor, Tensor) {
         let mut rng = Pcg32::seeded(0xA070 ^ d.macs());
         let mut x = Tensor::zeros(&[d.batch.max(1), d.ic, d.h, d.w]);
         rng.fill_gaussian(&mut x.data, 1.0);
         let mut w = Tensor::zeros(&[d.oc, d.ic / d.groups, d.r, d.r]);
         rng.fill_gaussian(&mut w.data, 0.2);
+        (x, w)
+    }
+
+    /// Median seconds per run of a plan's steady-state (reused-workspace)
+    /// datapath over the synthetic workload — the measurement primitive
+    /// behind both the engine autotuner and the blocking sweep.
+    fn measure_plan(
+        d: &ConvDesc,
+        plan: &Arc<ConvPlan>,
+        x: &Tensor,
+        w: &Tensor,
+        cfg: AutotuneCfg,
+    ) -> f64 {
+        // Quantized descriptors are measured on the datapath PTQ will
+        // actually install (the quantized executor, calibrated on the
+        // synthetic workload) — not the float kernel.
+        let qexec = if d.quant.is_some() {
+            Some(match plan.fast_plan() {
+                Some(fast) => {
+                    let maxima = collect_act_maxima(x, fast, d.pad);
+                    QConvLayer::from_plan(
+                        plan.clone(),
+                        w,
+                        Vec::new(),
+                        &QCalib::TransformMaxima(&maxima),
+                    )
+                }
+                None => {
+                    QConvLayer::from_plan(plan.clone(), w, Vec::new(), &QCalib::MaxAbs(x.max_abs()))
+                }
+            })
+        } else {
+            None
+        };
+        // Measure the steady-state (reused-workspace) datapath, like
+        // a serving worker would run it.
+        let mut ws = super::Workspace::new();
+        let mut run_once = || match &qexec {
+            Some(q) => q.forward_with(x, &mut ws),
+            None => plan.run_with(x, w, &[], &mut ws),
+        };
+        for _ in 0..cfg.warmup {
+            std::hint::black_box(run_once());
+        }
+        let mut samples = Vec::with_capacity(cfg.iters.max(1));
+        for _ in 0..cfg.iters.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(run_once());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples[samples.len() / 2]
+    }
+
+    /// Sweep the GEMM cache-blocking candidates for one engine on one
+    /// descriptor: measure the engine's plan under each
+    /// [`crate::linalg::gemm::Blocking::candidates`] entry and return the
+    /// report, fastest first (winner flagged). The process-wide blocking
+    /// override is cleared afterwards — committing the winner is the
+    /// caller's job (via [`TuningTable::set_blocking`] +
+    /// [`tuning::install_global`]).
+    pub fn tune_blocking(
+        &self,
+        engine: &str,
+        d: &ConvDesc,
+        cfg: AutotuneCfg,
+    ) -> Result<Vec<BlockTuneEntry>> {
+        use crate::linalg::gemm;
+        let Some(e) = self.engine_named(engine) else {
+            bail!("unknown engine '{engine}'")
+        };
+        if !e.supports(d) {
+            bail!("engine '{}' does not support descriptor {:?}", e.name(), d);
+        }
+        let plan = Arc::new(e.plan(d)?);
+        let (x, w) = Self::synthetic_workload(d);
+        let mut entries = Vec::new();
+        for b in gemm::Blocking::candidates() {
+            gemm::set_blocking_override(Some(b));
+            let median_s = Self::measure_plan(d, &plan, &x, &w, cfg);
+            entries.push(BlockTuneEntry { blocking: b, median_s, selected: false });
+        }
+        gemm::set_blocking_override(None);
+        let best = entries
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.median_s.partial_cmp(&b.1.median_s).unwrap())
+            .map(|(i, _)| i)
+            .expect("non-empty candidate list");
+        entries[best].selected = true;
+        entries.sort_by(|a, b| a.median_s.partial_cmp(&b.median_s).unwrap());
+        Ok(entries)
+    }
+
+    fn autotune_with(&self, d: &ConvDesc, cfg: AutotuneCfg) -> Result<Vec<TuneEntry>> {
+        let cands = self.candidates(d);
+        if cands.is_empty() {
+            bail!("no engine supports descriptor {:?}", d);
+        }
+        let (x, w) = Self::synthetic_workload(d);
         let mut entries = Vec::with_capacity(cands.len());
         for e in cands {
             let plan = Arc::new(e.plan(d)?);
-            // Quantized descriptors are measured on the datapath PTQ will
-            // actually install (the quantized executor, calibrated on the
-            // synthetic workload) — not the float kernel.
-            let qexec = if d.quant.is_some() {
-                Some(match plan.fast_plan() {
-                    Some(fast) => {
-                        let maxima = collect_act_maxima(&x, fast, d.pad);
-                        QConvLayer::from_plan(
-                            plan.clone(),
-                            &w,
-                            Vec::new(),
-                            &QCalib::TransformMaxima(&maxima),
-                        )
-                    }
-                    None => QConvLayer::from_plan(
-                        plan.clone(),
-                        &w,
-                        Vec::new(),
-                        &QCalib::MaxAbs(x.max_abs()),
-                    ),
-                })
-            } else {
-                None
-            };
-            // Measure the steady-state (reused-workspace) datapath, like
-            // a serving worker would run it.
-            let mut ws = super::Workspace::new();
-            let mut run_once = || match &qexec {
-                Some(q) => q.forward_with(&x, &mut ws),
-                None => plan.run_with(&x, &w, &[], &mut ws),
-            };
-            for _ in 0..cfg.warmup {
-                std::hint::black_box(run_once());
-            }
-            let mut samples = Vec::with_capacity(cfg.iters.max(1));
-            for _ in 0..cfg.iters.max(1) {
-                let t0 = Instant::now();
-                std::hint::black_box(run_once());
-                samples.push(t0.elapsed().as_secs_f64());
-            }
-            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
             entries.push(TuneEntry {
                 engine: e.name(),
-                median_s: samples[samples.len() / 2],
+                median_s: Self::measure_plan(d, &plan, &x, &w, cfg),
                 cost_bops: e.cost_model(d),
                 workspace_bytes: e.workspace_bytes(d),
                 selected: false,
@@ -389,6 +455,26 @@ mod tests {
         // the policy plan agrees with the report's winner modulo caching
         let plan = sel.plan(&d).unwrap();
         assert!(entries.iter().any(|t| t.engine == plan.engine));
+    }
+
+    #[test]
+    fn blocking_sweep_reports_all_candidates_and_restores_the_override() {
+        use crate::linalg::gemm::Blocking;
+        let _guard = crate::linalg::simd::TEST_OVERRIDE_LOCK
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        let sel = isolated(Policy::Heuristic);
+        let d = ConvDesc::new(1, 8, 8, 12, 12, 3, 1, 1);
+        let cfg = AutotuneCfg { warmup: 0, iters: 1 };
+        let entries = sel.tune_blocking("im2col-gemm", &d, cfg).unwrap();
+        assert_eq!(entries.len(), Blocking::candidates().len());
+        assert_eq!(entries.iter().filter(|t| t.selected).count(), 1);
+        assert!(entries.windows(2).all(|w| w[0].median_s <= w[1].median_s));
+        // the sweep must not leave a process-wide override behind
+        let def = Blocking::for_kernel(crate::linalg::simd::active_kernel());
+        assert_eq!(crate::linalg::gemm::active_blocking(), def);
+        // unknown engines are a clean error
+        assert!(sel.tune_blocking("nope", &d, cfg).is_err());
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! `exp::perf` (std-only repo; no serde).
 
 use super::desc::ConvDesc;
+use crate::linalg::gemm::Blocking;
 use crate::quant::Granularity;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -20,7 +21,12 @@ use std::path::Path;
 use std::sync::OnceLock;
 
 /// Schema version stamped into tuning files; bump on breaking changes.
-pub const TUNING_SCHEMA_VERSION: u32 = 1;
+///
+/// History: v1 = per-descriptor engine entries; v2 adds the table-level
+/// `blocking` object (the tuned GEMM macro-kernel Mc/Kc/Nc — see
+/// [`crate::linalg::gemm::Blocking`]). v1 files still load (they simply
+/// carry no blocking).
+pub const TUNING_SCHEMA_VERSION: u32 = 2;
 
 fn gran_code(g: Granularity) -> &'static str {
     match g {
@@ -69,10 +75,13 @@ pub struct TunedChoice {
     pub median_ns: f64,
 }
 
-/// A persisted autotune table: descriptor key → measured winner.
+/// A persisted autotune table: descriptor key → measured winner, plus
+/// an optional table-level tuned GEMM blocking (one per file — the
+/// blocking is process-wide, chosen on the machine that ran the sweep).
 #[derive(Clone, Debug, Default)]
 pub struct TuningTable {
     entries: HashMap<String, TunedChoice>,
+    blocking: Option<Blocking>,
 }
 
 impl TuningTable {
@@ -104,6 +113,17 @@ impl TuningTable {
         self.entries.get(&desc_key(d))
     }
 
+    /// Record the measured-fastest GEMM macro-kernel blocking
+    /// (`sfc autotune`'s blocking sweep).
+    pub fn set_blocking(&mut self, b: Option<Blocking>) {
+        self.blocking = b;
+    }
+
+    /// The tuned GEMM blocking carried by this table, if any.
+    pub fn blocking(&self) -> Option<Blocking> {
+        self.blocking
+    }
+
     /// Render the table as the tuning-file JSON (one entry per line,
     /// keys sorted, so committed files diff cleanly run to run).
     pub fn to_json(&self) -> String {
@@ -112,6 +132,12 @@ impl TuningTable {
         body.push_str("  \"tuning\": \"sfc-autotune\",\n");
         body.push_str(&format!("  \"schema_version\": {TUNING_SCHEMA_VERSION},\n"));
         body.push_str(&format!("  \"kernel\": \"{}\",\n", crate::linalg::simd::kernel_name()));
+        if let Some(b) = self.blocking {
+            body.push_str(&format!(
+                "  \"blocking\": {{\"mc\": {}, \"kc\": {}, \"nc\": {}}},\n",
+                b.mc, b.kc, b.nc
+            ));
+        }
         body.push_str("  \"entries\": [\n");
         let mut keys: Vec<&String> = self.entries.keys().collect();
         keys.sort();
@@ -141,9 +167,18 @@ impl TuningTable {
         let version = num_field(text, "schema_version")
             .context("tuning file has no schema_version")? as u32;
         anyhow::ensure!(
-            version == TUNING_SCHEMA_VERSION,
-            "tuning file schema v{version} unsupported (expected v{TUNING_SCHEMA_VERSION})"
+            (1..=TUNING_SCHEMA_VERSION).contains(&version),
+            "tuning file schema v{version} unsupported (expected v1..=v{TUNING_SCHEMA_VERSION})"
         );
+        // the blocking object lives on its own line — parse per-line so
+        // num_field's whole-text scan can't collide with entry fields
+        let mut blocking = None;
+        if let Some(line) = text.lines().find(|l| l.contains("\"blocking\"")) {
+            let mc = num_field(line, "mc").context("blocking without mc")? as usize;
+            let kc = num_field(line, "kc").context("blocking without kc")? as usize;
+            let nc = num_field(line, "nc").context("blocking without nc")? as usize;
+            blocking = Some(Blocking { mc, kc, nc });
+        }
         let mut entries = HashMap::new();
         for line in text.lines() {
             let Some(desc) = quoted_field(line, "desc") else { continue };
@@ -156,7 +191,7 @@ impl TuningTable {
                 TunedChoice { engine: engine.to_string(), median_ns },
             );
         }
-        Ok(TuningTable { entries })
+        Ok(TuningTable { entries, blocking })
     }
 
     /// Write the table to `path` as tuning-file JSON.
@@ -199,10 +234,19 @@ static GLOBAL_TUNING: OnceLock<TuningTable> = OnceLock::new();
 
 /// Install the process-wide tuning table. Errors if one is already
 /// installed (tables are startup configuration, not mutable state).
+/// A table that carries a tuned GEMM blocking also applies it
+/// process-wide ([`crate::linalg::gemm::set_blocking_override`]) — safe
+/// because every blocking is bit-identical, so this is purely a
+/// performance setting.
 pub fn install_global(table: TuningTable) -> Result<()> {
+    let blocking = table.blocking();
     GLOBAL_TUNING
         .set(table)
-        .map_err(|_| anyhow::anyhow!("a global tuning table is already installed"))
+        .map_err(|_| anyhow::anyhow!("a global tuning table is already installed"))?;
+    if blocking.is_some() {
+        crate::linalg::gemm::set_blocking_override(blocking);
+    }
+    Ok(())
 }
 
 /// Look a descriptor up in the process-wide tuning table, if installed.
@@ -234,14 +278,27 @@ mod tests {
         let mut t = TuningTable::new();
         t.insert(&d1, "SFC-6(6x6,3x3)", 1.25e-3);
         t.insert(&d2, "direct", 3.5e-4);
+        t.set_blocking(Some(Blocking { mc: 64, kc: 512, nc: 256 }));
         let text = t.to_json();
         let back = TuningTable::from_json(&text).unwrap();
         assert_eq!(back.len(), 2);
         assert_eq!(back.lookup(&d1).unwrap().engine, "SFC-6(6x6,3x3)");
         assert_eq!(back.lookup(&d2).unwrap().engine, "direct");
         assert!((back.lookup(&d1).unwrap().median_ns - 1.25e6).abs() < 1.0);
+        assert_eq!(back.blocking(), Some(Blocking { mc: 64, kc: 512, nc: 256 }));
         // deterministic rendering (committed files must diff cleanly)
         assert_eq!(text, back.to_json());
+    }
+
+    #[test]
+    fn accepts_v1_files_without_blocking() {
+        let v1 = "{\n  \"tuning\": \"sfc-autotune\",\n  \"schema_version\": 1,\n  \
+                  \"kernel\": \"scalar\",\n  \"entries\": [\n    \
+                  {\"desc\": \"b1_ic3_oc16_h32x32_r3_s1_p1_g1_d1_enone\", \
+                  \"engine\": \"direct\", \"median_ns\": 100.0}\n  ]\n}\n";
+        let t = TuningTable::from_json(v1).unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.blocking(), None, "v1 files carry no blocking");
     }
 
     #[test]

@@ -13,8 +13,11 @@
 //! "scalar"`, see [`crate::linalg::simd`]) and — when a SIMD kernel is
 //! active — a scalar-vs-SIMD `speedup` block measured in-process by
 //! re-running the dense 3×3 GEMM-backed engines with dispatch pinned to
-//! scalar. The JSON format is versioned ([`BENCH_SCHEMA_VERSION`]) and
-//! documented in ENGINE.md §"BENCH_conv.json schema".
+//! scalar. Since v5 the snapshot also records the GEMM `threads` count,
+//! the active Mc/Kc/Nc `blocking`, and a single-vs-multi-thread
+//! `scaling` block measured by pinning the thread count to 1. The JSON
+//! format is versioned ([`BENCH_SCHEMA_VERSION`]) and documented in
+//! ENGINE.md §"BENCH_conv.json schema".
 
 use crate::engine::{default_selector, ConvDesc, ConvPlan, PackedWeights, QuantSpec, Workspace};
 use crate::linalg::simd::{self, Kernel};
@@ -67,6 +70,23 @@ pub struct SpeedupRow {
     pub ns_per_call: f64,
     /// `scalar_ns_per_call / ns_per_call`
     pub speedup: f64,
+}
+
+/// One single-vs-multi-thread comparison cell (dense 3×3 shapes only):
+/// the same engine timed with the GEMM macro-kernel pinned to one
+/// thread and under the process thread count.
+#[derive(Clone, Debug)]
+pub struct ScalingRow {
+    /// shape label
+    pub shape: String,
+    /// engine name
+    pub engine: String,
+    /// median ns/call with the thread count pinned to 1
+    pub single_thread_ns_per_call: f64,
+    /// median ns/call under the process thread count
+    pub ns_per_call: f64,
+    /// `single_thread_ns_per_call / ns_per_call`
+    pub scaling: f64,
 }
 
 /// Benchmark configuration (CLI flags).
@@ -339,6 +359,45 @@ pub fn run_speedup(cfg: &BenchCfg) -> Result<Vec<SpeedupRow>> {
     Ok(rows)
 }
 
+/// Measure the single-vs-multi-thread scaling block: the dense 3×3
+/// shapes × the GEMM-backed engines, each cell timed under the process
+/// thread count ([`crate::util::par::num_threads`]) and again with the
+/// count pinned to 1 ([`crate::util::par::set_thread_override`]). Empty
+/// when the process already runs single-threaded — the snapshot then
+/// *is* the single-thread baseline. Note the per-element k-accumulation
+/// order is thread-count invariant, so both cells compute bit-identical
+/// outputs; only the wall time moves.
+pub fn run_scaling(cfg: &BenchCfg) -> Result<Vec<ScalingRow>> {
+    use crate::util::par;
+    if par::num_threads() <= 1 {
+        return Ok(Vec::new());
+    }
+    let sel = default_selector();
+    let mut rng = Pcg32::seeded(42);
+    let mut rows = Vec::new();
+    for (label, desc) in shapes(cfg.quick) {
+        if desc.groups != 1 || desc.r != 3 {
+            continue; // the acceptance metric tracks the dense 3×3 shapes
+        }
+        let (x, w) = workload(&desc, &mut rng);
+        for name in SPEEDUP_ENGINES {
+            let Ok(plan) = sel.plan_named(name, &desc) else { continue };
+            let (multi_ns, _) = time_float_plan(&plan, &x, &w, cfg);
+            par::set_thread_override(Some(1));
+            let (single_ns, _) = time_float_plan(&plan, &x, &w, cfg);
+            par::set_thread_override(None);
+            rows.push(ScalingRow {
+                shape: label.to_string(),
+                engine: name.to_string(),
+                single_thread_ns_per_call: single_ns,
+                ns_per_call: multi_ns,
+                scaling: single_ns / multi_ns.max(1.0),
+            });
+        }
+    }
+    Ok(rows)
+}
+
 /// The BENCH_conv.json format revision, emitted as `schema_version`.
 /// Bump on any field/semantics change; the schema itself is documented
 /// in ENGINE.md §"BENCH_conv.json schema".
@@ -351,14 +410,30 @@ pub fn run_speedup(cfg: &BenchCfg) -> Result<Vec<SpeedupRow>> {
 /// `e2e-int8-compiled`): whole-model `Model::forward_ws` of the
 /// pass-pipeline-compiled graph, int8 row running the requantized
 /// int8 dataflow between consecutive quantized convs.
-pub const BENCH_SCHEMA_VERSION: u32 = 4;
+/// v5: added the top-level `threads` field (GEMM worker-thread count),
+/// the `blocking` object (the active Mc/Kc/Nc cache-blocking of the
+/// dispatched kernel) and the single-vs-multi-thread `scaling` block
+/// next to the scalar-vs-SIMD `speedup` block.
+pub const BENCH_SCHEMA_VERSION: u32 = 5;
 
 /// Serialize rows as the BENCH_conv.json snapshot (no serde in this
 /// image — the format is flat enough to emit by hand).
-pub fn to_json(rows: &[BenchRow], speedups: &[SpeedupRow], kernel: &str) -> String {
+pub fn to_json(
+    rows: &[BenchRow],
+    speedups: &[SpeedupRow],
+    scalings: &[ScalingRow],
+    kernel: &str,
+    threads: usize,
+    blocking: crate::linalg::gemm::Blocking,
+) -> String {
     let mut s = String::from("{\n  \"bench\": \"conv\",\n");
     s.push_str(&format!("  \"schema_version\": {BENCH_SCHEMA_VERSION},\n"));
     s.push_str(&format!("  \"kernel\": \"{kernel}\",\n"));
+    s.push_str(&format!("  \"threads\": {threads},\n"));
+    s.push_str(&format!(
+        "  \"blocking\": {{\"mc\": {}, \"kc\": {}, \"nc\": {}}},\n",
+        blocking.mc, blocking.kc, blocking.nc
+    ));
     s.push_str(concat!(
         "  \"units\": {\"time\": \"ns/call\", \"rate\": \"GFLOP/s\"},\n",
         "  \"results\": [\n"
@@ -395,6 +470,22 @@ pub fn to_json(rows: &[BenchRow], speedups: &[SpeedupRow], kernel: &str) -> Stri
             if i + 1 == speedups.len() { "" } else { "," }
         ));
     }
+    s.push_str("  ],\n  \"scaling\": [\n");
+    for (i, r) in scalings.iter().enumerate() {
+        s.push_str(&format!(
+            concat!(
+                "    {{\"shape\": \"{}\", \"engine\": \"{}\", ",
+                "\"single_thread_ns_per_call\": {:.1}, \"ns_per_call\": {:.1}, ",
+                "\"scaling\": {:.3}}}{}\n"
+            ),
+            r.shape,
+            r.engine,
+            r.single_thread_ns_per_call,
+            r.ns_per_call,
+            r.scaling,
+            if i + 1 == scalings.len() { "" } else { "," }
+        ));
+    }
     s.push_str("  ]\n}\n");
     s
 }
@@ -402,7 +493,13 @@ pub fn to_json(rows: &[BenchRow], speedups: &[SpeedupRow], kernel: &str) -> Stri
 /// `sfc bench [--json] [--out PATH] [--iters N] [--warmup N] [--quick]`.
 pub fn cmd_bench(cfg: &BenchCfg, json: bool, out_path: &str) -> Result<()> {
     let kernel = simd::kernel_name();
+    let threads = crate::util::par::num_threads();
+    let blocking = crate::linalg::gemm::active_blocking();
     println!("kernel dispatch: {kernel} (SFC_FORCE_SCALAR=1 pins scalar)");
+    println!(
+        "threads: {threads} (SFC_THREADS pins) · blocking mc={} kc={} nc={}",
+        blocking.mc, blocking.kc, blocking.nc
+    );
     let rows = run_bench(cfg)?;
     let speedups = run_speedup(cfg)?;
     if !speedups.is_empty() {
@@ -414,8 +511,18 @@ pub fn cmd_bench(cfg: &BenchCfg, json: bool, out_path: &str) -> Result<()> {
             );
         }
     }
+    let scalings = run_scaling(cfg)?;
+    if !scalings.is_empty() {
+        println!("\n1 thread → {threads} threads scaling (dense 3×3 shapes):");
+        for r in &scalings {
+            println!(
+                "  {:<16} {:<20} {:>10.0} → {:>10.0} ns/call  {:.2}x",
+                r.shape, r.engine, r.single_thread_ns_per_call, r.ns_per_call, r.scaling
+            );
+        }
+    }
     if json {
-        let body = to_json(&rows, &speedups, kernel);
+        let body = to_json(&rows, &speedups, &scalings, kernel, threads, blocking);
         std::fs::write(out_path, &body).with_context(|| format!("write {out_path}"))?;
         println!("\nwrote {out_path} ({} rows)", rows.len());
     }
@@ -462,17 +569,31 @@ mod tests {
             ns_per_call: 12.5,
             speedup: 2.0,
         }];
-        let j = to_json(&rows, &speedups, "avx2");
+        let scalings = vec![ScalingRow {
+            shape: "s".into(),
+            engine: "im2col-gemm".into(),
+            single_thread_ns_per_call: 50.0,
+            ns_per_call: 12.5,
+            scaling: 4.0,
+        }];
+        let blocking = crate::linalg::gemm::Blocking { mc: 64, kc: 512, nc: 256 };
+        let j = to_json(&rows, &speedups, &scalings, "avx2", 4, blocking);
         assert!(j.contains("\"bench\": \"conv\""));
         assert!(j.contains(&format!("\"schema_version\": {BENCH_SCHEMA_VERSION}")));
         assert!(j.contains("\"kernel\": \"avx2\""));
+        assert!(j.contains("\"threads\": 4"));
+        assert!(j.contains("\"blocking\": {\"mc\": 64, \"kc\": 512, \"nc\": 256}"));
         assert!(j.contains("\"engine\": \"direct\""));
         assert!(j.contains("\"ns_per_call\": 12.5"));
         assert!(j.contains("\"speedup\": 2.000"));
+        assert!(j.contains("\"scaling\": 4.000"));
+        assert!(j.contains("\"single_thread_ns_per_call\": 50.0"));
         assert!(!j.contains(",\n  ]"), "no trailing comma before an array close");
-        // empty speedup block (scalar host) still closes the array
-        let j = to_json(&rows, &[], "scalar");
+        // empty speedup/scaling blocks (scalar or 1-core host) still
+        // close their arrays
+        let j = to_json(&rows, &[], &[], "scalar", 1, blocking);
         assert!(j.contains("\"speedup\": [\n  ]"), "{j}");
+        assert!(j.contains("\"scaling\": [\n  ]"), "{j}");
     }
 
     #[test]
@@ -507,6 +628,30 @@ mod tests {
             for r in &speedups {
                 assert_eq!(r.shape, "28x28x32->32", "quick mode: dense 3×3 only");
                 assert!(r.scalar_ns_per_call > 0.0 && r.ns_per_call > 0.0, "{}", r.engine);
+            }
+        }
+    }
+
+    #[test]
+    fn scaling_block_covers_dense_3x3_on_multicore_hosts() {
+        // run_scaling toggles the process-global thread override
+        let _g = crate::linalg::simd::TEST_OVERRIDE_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let cfg = BenchCfg { iters: 1, warmup: 1, quick: true };
+        let scalings = run_scaling(&cfg).unwrap();
+        if crate::util::par::num_threads() <= 1 {
+            assert!(scalings.is_empty(), "1-core host: the snapshot is the baseline");
+        } else {
+            assert!(!scalings.is_empty(), "multi-core host must record the scaling block");
+            for r in &scalings {
+                assert_eq!(r.shape, "28x28x32->32", "quick mode: dense 3×3 only");
+                assert!(
+                    r.single_thread_ns_per_call > 0.0 && r.ns_per_call > 0.0,
+                    "{}",
+                    r.engine
+                );
+                assert!(r.scaling > 0.0, "{}", r.engine);
             }
         }
     }

@@ -23,13 +23,17 @@
 //!   `ConvPlan::run_into` execution path (see ENGINE.md §Memory model).
 //! * [`linalg`] — exact rational matrices + Jacobi SVD (condition
 //!   numbers), plus [`linalg::gemm`]: the blocked, register-tiled
-//!   `f32`/`i8→i32` GEMM core every executor's ⊙ reduction runs on, and
-//!   [`linalg::simd`]: the runtime-dispatched kernel layer (one-time
-//!   CPU detection → AVX2 / NEON microkernels over packed B panels,
-//!   scalar fallback, `SFC_FORCE_SCALAR=1` override) — every arm
-//!   bit-identical to the scalar reference (see ENGINE.md §Kernel
-//!   dispatch). Bilinear plans pre-transform + pre-pack weights at plan
-//!   time ([`engine::PackedWeights`], `ConvPlan::run_packed_into`).
+//!   `f32`/`i8→i32` GEMM core every executor's ⊙ reduction runs on —
+//!   threaded BLIS/Goto-style (B panels packed once and shared, workers
+//!   consume disjoint row bands; `SFC_THREADS`), with per-kernel
+//!   [`linalg::gemm::Blocking`] (Mc/Kc/Nc) cache blocking the autotuner
+//!   can sweep — and [`linalg::simd`]: the runtime-dispatched kernel
+//!   layer (one-time CPU detection → AVX2 / NEON microkernels over
+//!   packed B panels, scalar fallback, `SFC_FORCE_SCALAR=1` override) —
+//!   every arm × every thread count bit-identical to the scalar
+//!   reference (see ENGINE.md §Kernel dispatch, §Threading model).
+//!   Bilinear plans pre-transform + pre-pack weights at plan time
+//!   ([`engine::PackedWeights`], `ConvPlan::run_packed_into`).
 //! * [`nn`] / [`quant`] — the CNN inference substrate (ResNet family +
 //!   the depthwise-separable [`nn::model::mobilenet_cfg`] topology) and
 //!   the PTQ pipeline reproducing §6.1 (Tables 2/4/5, Figs. 4/5); conv
@@ -64,7 +68,12 @@
 //! * [`exp`] — experiment harnesses regenerating the paper's tables, and
 //!   [`exp::perf`]: the `sfc bench --json` perf-snapshot harness
 //!   (BENCH_conv.json, tracked across PRs).
-//! * [`util`] — PRNG / fp16 / timing / parallel-for shims.
+//! * [`util`] — PRNG / fp16 / timing shims, and [`util::par`]: the
+//!   parallel-for helpers plus the process-wide
+//!   [`util::par::CoreBudget`] lane pool that keeps model workers ×
+//!   intra-op GEMM threads from oversubscribing the host (observable
+//!   via [`coordinator::metrics::core_budget`], capped with
+//!   `sfc serve --cores N`).
 #![warn(missing_docs)]
 
 pub mod algo;

@@ -1,4 +1,5 @@
-//! Blocked, register-tiled GEMM kernels — the shared ⊙-reduction core.
+//! Blocked, register-tiled, intra-op threaded GEMM — the shared
+//! ⊙-reduction core.
 //!
 //! Every conv executor in this crate ultimately reduces to the same
 //! matrix shape: `C[m×n] = A[m×k] · B[n×k]ᵀ` with both operands row-major
@@ -10,44 +11,235 @@
 //! * [`gemm_nt_f32`] — float path;
 //! * [`gemm_nt_i8_i32`] — int8 operands, exact i32 accumulation.
 //!
-//! The kernels are blocked (`MB×NB` panels keep the B panel hot in L1/L2)
-//! and register-tiled (a 4×4 micro-kernel reuses every loaded operand
-//! four times; `m`/`n` remainders reuse the same blocking through 1×4 and
-//! 4×1 micro-kernels instead of falling to per-element loops). The `k`
-//! loop runs in index order inside each micro-tile, so float results are
-//! bit-identical to the naive scalar dot product — a property the
-//! workspace-reuse tests rely on.
+//! **Cache blocking.** The macro-kernel's Mc/Kc/Nc blocking is no longer
+//! hard-coded: a per-kernel [`Blocking`] (chosen per-CPU by
+//! [`Blocking::for_kernel`], overridable process-wide via
+//! [`set_blocking_override`] — how `engine::tuning` applies a tuned
+//! blocking) drives the loop structure. `kc` splits the reduction into
+//! k-blocks accumulated *into C in ascending k order*, which keeps the
+//! per-element add chain `((0 + p₀) + p₁) + …` identical for every
+//! blocking — blockings are numerically interchangeable, so the
+//! autotuner may sweep them freely ([`Blocking::candidates`]).
+//!
+//! **Threading (BLIS/Goto pack-once/share-across-threads).** The
+//! dispatched entry points partition C's *rows* into contiguous spans
+//! (multiples of the register tile `MR`) and run one span per worker
+//! under a [`crate::util::par::CoreBudget`] lease; all workers consume
+//! disjoint M-tiles of the **same packed B buffer** — B is packed once
+//! (at plan time for weights, by the im2col lowering for activations)
+//! and only read concurrently. Small problems (below [`PAR_MIN_MACS`])
+//! stay serial so spawn cost never dominates, and a nested call (GEMM
+//! inside a batch-parallel worker) degrades to serial when the budget
+//! has no spare lanes.
+//!
+//! **Numerics contract.** Each output element is owned by exactly one
+//! worker and computed with one accumulator, `k` ascending, separate
+//! multiply and add (no FMA) — in the scalar, AVX2 and NEON kernels
+//! alike. Results are therefore **bit-identical** across scalar/SIMD ×
+//! any thread count × any blocking; the property tests in
+//! `rust/tests/threads.rs` assert exact equality.
 //!
 //! [`gemm_nt_f32`]/[`gemm_nt_i8_i32`] are the scalar reference kernels.
 //! The hot executors run [`gemm_packed_f32`]/[`gemm_packed_i8_i32`]
 //! instead: the same computation over a **packed B panel layout**
 //! (8-column panels, see [`pack_b_f32`]/[`pack_b_i8`]) dispatched at
-//! runtime to the SIMD microkernels in [`crate::linalg::simd`] — AVX2 /
-//! NEON when detected, a scalar packed kernel otherwise. Every variant
-//! keeps one accumulator per output element with `k` ascending and no
-//! FMA contraction, so **all of them are bit-identical** to the scalar
-//! reference (int8 is exact integer arithmetic either way).
+//! runtime to the SIMD microkernels in [`crate::linalg::simd`].
 
 use super::simd::{self, Kernel};
+use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Panel height (rows of A per block).
-const MB: usize = 64;
-/// Panel width (rows of B per block).
-const NB: usize = 64;
-/// Register tile edge: the micro-kernel computes MR×NR outputs at once.
+/// Register tile edge: the micro-kernel computes MR×NR outputs at once,
+/// and threaded row partitions are multiples of MR.
 const MR: usize = 4;
 const NR: usize = 4;
 
+/// Minimum problem size (m·n·k multiply-accumulates) before the
+/// dispatched GEMMs consider spawning worker threads. Below this, spawn
+/// and join overhead would dominate — e.g. the per-(freq, group) GEMMs
+/// of a small Winograd tile stay serial while the surrounding batch
+/// loop parallelizes, and a 56×56 im2col GEMM threads internally.
+pub const PAR_MIN_MACS: u64 = 1 << 21;
+
+// ---------------------------------------------------------------------
+// Cache-blocking parameters
+// ---------------------------------------------------------------------
+
+/// Macro-kernel cache-blocking parameters (the BLIS-style Mc/Kc/Nc
+/// knobs), lifted out of hard-coded consts so dispatch can pick
+/// per-CPU defaults and the autotuner can sweep them.
+///
+/// * `mc` — rows of A per macro-block (L2 residency of the A slice) in
+///   the reference path; also the spirit of the threaded row spans.
+/// * `kc` — reduction depth per block. Both the reference and the
+///   packed kernels accumulate k-blocks into C in ascending-k order,
+///   so any `kc` produces bit-identical results (see module docs). For
+///   the int8 kernels `kc` is rounded to the interleaved-pair boundary.
+/// * `nc` — columns of B per macro-block in the reference path (the
+///   packed layout's 8-wide panels fix the micro-blocking of the hot
+///   path, which streams whole panels pack-once/share-across-threads).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Blocking {
+    /// rows of A per macro-block (≥ MR)
+    pub mc: usize,
+    /// reduction depth per k-block (≥ 2, kept even for the int8 pairs)
+    pub kc: usize,
+    /// columns of B per macro-block (≥ NR)
+    pub nc: usize,
+}
+
+impl Blocking {
+    /// Per-CPU default blocking for a dispatch kernel, sized to its
+    /// typical L1/L2 working set (8-lane AVX2 panels want deeper k
+    /// blocks than the scalar reference).
+    pub fn for_kernel(k: Kernel) -> Blocking {
+        match k {
+            Kernel::Avx2 => Blocking { mc: 64, kc: 512, nc: 256 },
+            Kernel::Neon => Blocking { mc: 48, kc: 512, nc: 128 },
+            Kernel::Scalar => Blocking { mc: 64, kc: 256, nc: 128 },
+        }
+    }
+
+    /// The candidate set the autotuner sweeps (`sfc autotune` measures
+    /// each and persists the winner in the tuning table). All
+    /// candidates are numerically interchangeable — the sweep is purely
+    /// a performance search.
+    pub fn candidates() -> [Blocking; 4] {
+        [
+            Blocking { mc: 32, kc: 256, nc: 128 },
+            Blocking { mc: 64, kc: 256, nc: 128 },
+            Blocking { mc: 64, kc: 512, nc: 256 },
+            Blocking { mc: 128, kc: 1024, nc: 256 },
+        ]
+    }
+}
+
+/// Process-wide blocking override, encoded into one atomic (0 = none;
+/// bit 63 set = valid, then 20-bit mc/kc/nc fields). One atomic keeps
+/// the three fields consistent without a lock on the hot path.
+static BLOCKING_OVERRIDE: AtomicU64 = AtomicU64::new(0);
+
+/// Force the macro-kernel blocking process-wide (`None` restores the
+/// per-kernel [`Blocking::for_kernel`] defaults). Safe to flip at any
+/// time — every blocking yields bit-identical results — so this is how
+/// `engine::tuning::install_global` applies a persisted tuned blocking
+/// and how the autotune sweep measures candidates. Values are clamped
+/// to the register-tile floors and `kc` is rounded to the int8
+/// interleaved-pair boundary.
+pub fn set_blocking_override(b: Option<Blocking>) {
+    let v = match b {
+        None => 0,
+        Some(b) => {
+            let mc = b.mc.clamp(MR, 65_535) as u64;
+            let kc = (b.kc.clamp(2, 65_534) & !1) as u64;
+            let nc = b.nc.clamp(NR, 65_535) as u64;
+            (1 << 63) | (mc << 40) | (kc << 20) | nc
+        }
+    };
+    BLOCKING_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// The blocking the macro-kernels use right now: the
+/// [`set_blocking_override`] pin if set, else the per-CPU default for
+/// the active dispatch kernel.
+pub fn active_blocking() -> Blocking {
+    let v = BLOCKING_OVERRIDE.load(Ordering::Relaxed);
+    if v == 0 {
+        return Blocking::for_kernel(simd::active_kernel());
+    }
+    Blocking {
+        mc: ((v >> 40) & 0xf_ffff) as usize,
+        kc: ((v >> 20) & 0xf_ffff) as usize,
+        nc: (v & 0xf_ffff) as usize,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Threaded row partitioning (shared by the nt and packed entry points)
+// ---------------------------------------------------------------------
+
+/// How many workers this problem wants: 1 when the problem is too small
+/// to amortize spawns or has too few rows to split, else the configured
+/// thread count capped by the row count.
+fn gemm_team(m: usize, n: usize, k: usize) -> usize {
+    if m < 2 * MR || n == 0 || k == 0 {
+        return 1;
+    }
+    if (m as u64) * (n as u64) * (k as u64) < PAR_MIN_MACS {
+        return 1;
+    }
+    crate::util::par::num_threads().min(m / MR)
+}
+
+/// Split A/C into contiguous row spans of `span` rows (`span` a multiple
+/// of MR) and run `f(rows, a_span, c_span)` on each — span 0 on the
+/// calling thread, the rest on spawned workers that hold the caller's
+/// leased budget lanes. Every span is a disjoint `&mut` slice of C, so
+/// the partition is safe by construction; all spans read the same B.
+fn par_rows<TA: Sync, TC: Send>(
+    span: usize,
+    k: usize,
+    n: usize,
+    a: &[TA],
+    c: &mut [TC],
+    f: impl Fn(usize, &[TA], &mut [TC]) + Sync,
+) {
+    std::thread::scope(|s| {
+        let mut spans = a.chunks(span * k).zip(c.chunks_mut(span * n));
+        let (a0, c0) = spans.next().expect("at least one row span");
+        for (asub, csub) in spans {
+            let f = &f;
+            s.spawn(move || crate::util::par::counted_lane(|| f(csub.len() / n, asub, csub)));
+        }
+        f(c0.len() / n, a0, c0);
+    });
+}
+
+/// Rows per worker: even split rounded up to the register tile.
+fn row_span(m: usize, threads: usize) -> usize {
+    m.div_ceil(threads).next_multiple_of(MR)
+}
+
 /// `C[m×n] = A[m×k] · B[n×k]ᵀ` (all row-major). `C` is overwritten.
+/// Threads across row spans when the problem is large enough and the
+/// [`crate::util::par::CoreBudget`] has spare lanes; bit-identical at
+/// every thread count and blocking.
 pub fn gemm_nt_f32(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     assert!(a.len() >= m * k, "A too small: {} < {}", a.len(), m * k);
     assert!(b.len() >= n * k, "B too small: {} < {}", b.len(), n * k);
     assert!(c.len() >= m * n, "C too small: {} < {}", c.len(), m * n);
-    for i0 in (0..m).step_by(MB) {
-        let i1 = (i0 + MB).min(m);
-        for j0 in (0..n).step_by(NB) {
-            let j1 = (j0 + NB).min(n);
-            block_nt_f32(i0, i1, j0, j1, n, k, a, b, c);
+    if k == 0 {
+        c[..m * n].fill(0.0);
+        return;
+    }
+    let want = gemm_team(m, n, k);
+    if want > 1 {
+        let lease = crate::util::par::CoreBudget::lease(want);
+        let threads = lease.threads().min(want);
+        if threads > 1 {
+            let span = row_span(m, threads);
+            par_rows(span, k, n, &a[..m * k], &mut c[..m * n], |rows, asub, csub| {
+                gemm_nt_f32_serial(rows, n, k, asub, b, csub)
+            });
+            return;
+        }
+    }
+    gemm_nt_f32_serial(m, n, k, a, b, c);
+}
+
+/// Single-thread blocked macro-kernel for the f32 reference path:
+/// k-blocks outermost (accumulating into C in ascending-k order), then
+/// Mc×Nc panels. Requires `k > 0` (the entry point handles `k == 0`).
+fn gemm_nt_f32_serial(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    let bl = active_blocking();
+    let (mc, kc, nc) = (bl.mc.max(MR), bl.kc.max(1), bl.nc.max(NR));
+    for l0 in (0..k).step_by(kc) {
+        let l1 = (l0 + kc).min(k);
+        for i0 in (0..m).step_by(mc) {
+            let i1 = (i0 + mc).min(m);
+            for j0 in (0..n).step_by(nc) {
+                let j1 = (j0 + nc).min(n);
+                block_nt_f32(i0, i1, j0, j1, n, k, l0, l1, a, b, c);
+            }
         }
     }
 }
@@ -60,24 +252,35 @@ fn block_nt_f32(
     j1: usize,
     n: usize,
     k: usize,
+    l0: usize,
+    l1: usize,
     a: &[f32],
     b: &[f32],
     c: &mut [f32],
 ) {
+    // first k-block overwrites C, later blocks continue the same
+    // per-element add chain from the stored partial sum
+    let first = l0 == 0;
+    let kk = l1 - l0;
     let mut i = i0;
     while i + MR <= i1 {
-        let a0 = &a[i * k..i * k + k];
-        let a1 = &a[(i + 1) * k..(i + 1) * k + k];
-        let a2 = &a[(i + 2) * k..(i + 2) * k + k];
-        let a3 = &a[(i + 3) * k..(i + 3) * k + k];
+        let a0 = &a[i * k + l0..i * k + l1];
+        let a1 = &a[(i + 1) * k + l0..(i + 1) * k + l1];
+        let a2 = &a[(i + 2) * k + l0..(i + 2) * k + l1];
+        let a3 = &a[(i + 3) * k + l0..(i + 3) * k + l1];
         let mut j = j0;
         while j + NR <= j1 {
-            let b0 = &b[j * k..j * k + k];
-            let b1 = &b[(j + 1) * k..(j + 1) * k + k];
-            let b2 = &b[(j + 2) * k..(j + 2) * k + k];
-            let b3 = &b[(j + 3) * k..(j + 3) * k + k];
+            let b0 = &b[j * k + l0..j * k + l1];
+            let b1 = &b[(j + 1) * k + l0..(j + 1) * k + l1];
+            let b2 = &b[(j + 2) * k + l0..(j + 2) * k + l1];
+            let b3 = &b[(j + 3) * k + l0..(j + 3) * k + l1];
             let mut acc = [[0f32; NR]; MR];
-            for l in 0..k {
+            if !first {
+                for (ii, accr) in acc.iter_mut().enumerate() {
+                    accr.copy_from_slice(&c[(i + ii) * n + j..(i + ii) * n + j + NR]);
+                }
+            }
+            for l in 0..kk {
                 let av = [a0[l], a1[l], a2[l], a3[l]];
                 let bv = [b0[l], b1[l], b2[l], b3[l]];
                 for (accr, &avi) in acc.iter_mut().zip(&av) {
@@ -93,9 +296,14 @@ fn block_nt_f32(
         }
         // n-remainder: 4×1 micro-kernel (same k-order per element)
         while j < j1 {
-            let br = &b[j * k..j * k + k];
+            let br = &b[j * k + l0..j * k + l1];
             let mut acc = [0f32; MR];
-            for l in 0..k {
+            if !first {
+                for (ii, accv) in acc.iter_mut().enumerate() {
+                    *accv = c[(i + ii) * n + j];
+                }
+            }
+            for l in 0..kk {
                 let bv = br[l];
                 acc[0] += a0[l] * bv;
                 acc[1] += a1[l] * bv;
@@ -111,15 +319,18 @@ fn block_nt_f32(
     }
     // m-remainder: 1×4 micro-kernel over the same column blocking
     while i < i1 {
-        let ar = &a[i * k..i * k + k];
+        let ar = &a[i * k + l0..i * k + l1];
         let mut j = j0;
         while j + NR <= j1 {
-            let b0 = &b[j * k..j * k + k];
-            let b1 = &b[(j + 1) * k..(j + 1) * k + k];
-            let b2 = &b[(j + 2) * k..(j + 2) * k + k];
-            let b3 = &b[(j + 3) * k..(j + 3) * k + k];
+            let b0 = &b[j * k + l0..j * k + l1];
+            let b1 = &b[(j + 1) * k + l0..(j + 1) * k + l1];
+            let b2 = &b[(j + 2) * k + l0..(j + 2) * k + l1];
+            let b3 = &b[(j + 3) * k + l0..(j + 3) * k + l1];
             let mut acc = [0f32; NR];
-            for l in 0..k {
+            if !first {
+                acc.copy_from_slice(&c[i * n + j..i * n + j + NR]);
+            }
+            for l in 0..kk {
                 let av = ar[l];
                 acc[0] += av * b0[l];
                 acc[1] += av * b1[l];
@@ -130,7 +341,8 @@ fn block_nt_f32(
             j += NR;
         }
         while j < j1 {
-            c[i * n + j] = dot_f32(ar, &b[j * k..j * k + k]);
+            let init = if first { 0.0 } else { c[i * n + j] };
+            c[i * n + j] = dot_f32(init, ar, &b[j * k + l0..j * k + l1]);
             j += 1;
         }
         i += 1;
@@ -138,8 +350,8 @@ fn block_nt_f32(
 }
 
 #[inline]
-fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
-    let mut acc = 0f32;
+fn dot_f32(init: f32, a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = init;
     for (x, y) in a.iter().zip(b) {
         acc += x * y;
     }
@@ -148,15 +360,44 @@ fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
 
 /// `C[m×n] = A[m×k] · B[n×k]ᵀ` with int8 operands and exact i32
 /// accumulation (the Eq.-17 low-precision ⊙ stage). `C` is overwritten.
+/// Threads and blocks like [`gemm_nt_f32`] (integer arithmetic is exact
+/// under any split).
 pub fn gemm_nt_i8_i32(m: usize, n: usize, k: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
     assert!(a.len() >= m * k, "A too small: {} < {}", a.len(), m * k);
     assert!(b.len() >= n * k, "B too small: {} < {}", b.len(), n * k);
     assert!(c.len() >= m * n, "C too small: {} < {}", c.len(), m * n);
-    for i0 in (0..m).step_by(MB) {
-        let i1 = (i0 + MB).min(m);
-        for j0 in (0..n).step_by(NB) {
-            let j1 = (j0 + NB).min(n);
-            block_nt_i8(i0, i1, j0, j1, n, k, a, b, c);
+    if k == 0 {
+        c[..m * n].fill(0);
+        return;
+    }
+    let want = gemm_team(m, n, k);
+    if want > 1 {
+        let lease = crate::util::par::CoreBudget::lease(want);
+        let threads = lease.threads().min(want);
+        if threads > 1 {
+            let span = row_span(m, threads);
+            par_rows(span, k, n, &a[..m * k], &mut c[..m * n], |rows, asub, csub| {
+                gemm_nt_i8_serial(rows, n, k, asub, b, csub)
+            });
+            return;
+        }
+    }
+    gemm_nt_i8_serial(m, n, k, a, b, c);
+}
+
+/// Single-thread blocked macro-kernel for the int8 reference path.
+/// Requires `k > 0`.
+fn gemm_nt_i8_serial(m: usize, n: usize, k: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+    let bl = active_blocking();
+    let (mc, kc, nc) = (bl.mc.max(MR), bl.kc.max(1), bl.nc.max(NR));
+    for l0 in (0..k).step_by(kc) {
+        let l1 = (l0 + kc).min(k);
+        for i0 in (0..m).step_by(mc) {
+            let i1 = (i0 + mc).min(m);
+            for j0 in (0..n).step_by(nc) {
+                let j1 = (j0 + nc).min(n);
+                block_nt_i8(i0, i1, j0, j1, n, k, l0, l1, a, b, c);
+            }
         }
     }
 }
@@ -169,24 +410,33 @@ fn block_nt_i8(
     j1: usize,
     n: usize,
     k: usize,
+    l0: usize,
+    l1: usize,
     a: &[i8],
     b: &[i8],
     c: &mut [i32],
 ) {
+    let first = l0 == 0;
+    let kk = l1 - l0;
     let mut i = i0;
     while i + MR <= i1 {
-        let a0 = &a[i * k..i * k + k];
-        let a1 = &a[(i + 1) * k..(i + 1) * k + k];
-        let a2 = &a[(i + 2) * k..(i + 2) * k + k];
-        let a3 = &a[(i + 3) * k..(i + 3) * k + k];
+        let a0 = &a[i * k + l0..i * k + l1];
+        let a1 = &a[(i + 1) * k + l0..(i + 1) * k + l1];
+        let a2 = &a[(i + 2) * k + l0..(i + 2) * k + l1];
+        let a3 = &a[(i + 3) * k + l0..(i + 3) * k + l1];
         let mut j = j0;
         while j + NR <= j1 {
-            let b0 = &b[j * k..j * k + k];
-            let b1 = &b[(j + 1) * k..(j + 1) * k + k];
-            let b2 = &b[(j + 2) * k..(j + 2) * k + k];
-            let b3 = &b[(j + 3) * k..(j + 3) * k + k];
+            let b0 = &b[j * k + l0..j * k + l1];
+            let b1 = &b[(j + 1) * k + l0..(j + 1) * k + l1];
+            let b2 = &b[(j + 2) * k + l0..(j + 2) * k + l1];
+            let b3 = &b[(j + 3) * k + l0..(j + 3) * k + l1];
             let mut acc = [[0i32; NR]; MR];
-            for l in 0..k {
+            if !first {
+                for (ii, accr) in acc.iter_mut().enumerate() {
+                    accr.copy_from_slice(&c[(i + ii) * n + j..(i + ii) * n + j + NR]);
+                }
+            }
+            for l in 0..kk {
                 let av = [a0[l] as i32, a1[l] as i32, a2[l] as i32, a3[l] as i32];
                 let bv = [b0[l] as i32, b1[l] as i32, b2[l] as i32, b3[l] as i32];
                 for (accr, &avi) in acc.iter_mut().zip(&av) {
@@ -202,9 +452,14 @@ fn block_nt_i8(
         }
         // n-remainder: 4×1 micro-kernel
         while j < j1 {
-            let br = &b[j * k..j * k + k];
+            let br = &b[j * k + l0..j * k + l1];
             let mut acc = [0i32; MR];
-            for l in 0..k {
+            if !first {
+                for (ii, accv) in acc.iter_mut().enumerate() {
+                    *accv = c[(i + ii) * n + j];
+                }
+            }
+            for l in 0..kk {
                 let bv = br[l] as i32;
                 acc[0] += a0[l] as i32 * bv;
                 acc[1] += a1[l] as i32 * bv;
@@ -220,15 +475,18 @@ fn block_nt_i8(
     }
     // m-remainder: 1×4 micro-kernel over the same column blocking
     while i < i1 {
-        let ar = &a[i * k..i * k + k];
+        let ar = &a[i * k + l0..i * k + l1];
         let mut j = j0;
         while j + NR <= j1 {
-            let b0 = &b[j * k..j * k + k];
-            let b1 = &b[(j + 1) * k..(j + 1) * k + k];
-            let b2 = &b[(j + 2) * k..(j + 2) * k + k];
-            let b3 = &b[(j + 3) * k..(j + 3) * k + k];
+            let b0 = &b[j * k + l0..j * k + l1];
+            let b1 = &b[(j + 1) * k + l0..(j + 1) * k + l1];
+            let b2 = &b[(j + 2) * k + l0..(j + 2) * k + l1];
+            let b3 = &b[(j + 3) * k + l0..(j + 3) * k + l1];
             let mut acc = [0i32; NR];
-            for l in 0..k {
+            if !first {
+                acc.copy_from_slice(&c[i * n + j..i * n + j + NR]);
+            }
+            for l in 0..kk {
                 let av = ar[l] as i32;
                 acc[0] += av * b0[l] as i32;
                 acc[1] += av * b1[l] as i32;
@@ -239,7 +497,8 @@ fn block_nt_i8(
             j += NR;
         }
         while j < j1 {
-            c[i * n + j] = dot_i8(ar, &b[j * k..j * k + k]);
+            let init = if first { 0 } else { c[i * n + j] };
+            c[i * n + j] = dot_i8(init, ar, &b[j * k + l0..j * k + l1]);
             j += 1;
         }
         i += 1;
@@ -247,8 +506,8 @@ fn block_nt_i8(
 }
 
 #[inline]
-fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
-    let mut acc = 0i32;
+fn dot_i8(init: i32, a: &[i8], b: &[i8]) -> i32 {
+    let mut acc = init;
     for (x, y) in a.iter().zip(b) {
         acc += (*x as i32) * (*y as i32);
     }
@@ -276,6 +535,25 @@ pub fn packed_b_i8_len(n: usize, k: usize) -> usize {
     n.div_ceil(PANEL) * k.div_ceil(2) * PANEL * 2
 }
 
+/// The interleaved k-pair at pair-index `l2` of one length-`k` operand
+/// row: `[row[2·l2], row[2·l2+1]]` with the odd-`k` tail zero-padded.
+/// The single definition of the layout's tail rule, shared by the
+/// packing ([`pack_b_i8`]), the scalar consume loop and the SIMD
+/// A-side loads — so pack and consume can never disagree about the
+/// padding again.
+#[inline(always)]
+pub fn i8_kpair(row: &[i8], l2: usize) -> [i8; 2] {
+    [row[2 * l2], row.get(2 * l2 + 1).copied().unwrap_or(0)]
+}
+
+/// Sign-extend an interleaved k-pair into two i16 halves packed in one
+/// i32 (low half = even-k element) — the A-side operand format of the
+/// AVX2 `_mm256_madd_epi16` and NEON `vmull_s16` int8 kernels.
+#[inline(always)]
+pub fn i8_pair_word(p: [i8; 2]) -> i32 {
+    ((p[0] as i32 as u32 & 0xffff) | ((p[1] as i32 as u32 & 0xffff) << 16)) as i32
+}
+
 /// Pack a row-major `B[n][k]` operand into 8-column panels
 /// (`dst[(panel·k + l)·8 + lane] = B[panel·8+lane][l]`). Every element
 /// of `dst[..packed_b_f32_len(n, k)]` is written, so reused workspace
@@ -297,8 +575,9 @@ pub fn pack_b_f32(n: usize, k: usize, rows: &[f32], dst: &mut [f32]) {
 }
 
 /// Pack a row-major `B[n][k]` i8 operand into 8-column panels of
-/// interleaved k-pairs (`dst[((panel·⌈k/2⌉ + l/2)·8 + lane)·2 + l%2]`).
-/// Every element of `dst[..packed_b_i8_len(n, k)]` is written.
+/// interleaved k-pairs (`dst[((panel·⌈k/2⌉ + l/2)·8 + lane)·2 + l%2]`,
+/// tail rule per [`i8_kpair`]). Every element of
+/// `dst[..packed_b_i8_len(n, k)]` is written.
 pub fn pack_b_i8(n: usize, k: usize, rows: &[i8], dst: &mut [i8]) {
     assert!(rows.len() >= n * k, "B too small: {} < {}", rows.len(), n * k);
     let len = packed_b_i8_len(n, k);
@@ -310,11 +589,10 @@ pub fn pack_b_i8(n: usize, k: usize, rows: &[i8], dst: &mut [i8]) {
         for l2 in 0..k2 {
             for lane in 0..PANEL {
                 let j = jp * PANEL + lane;
-                for q in 0..2 {
-                    let l = 2 * l2 + q;
-                    panel[(l2 * PANEL + lane) * 2 + q] =
-                        if j < n && l < k { rows[j * k + l] } else { 0 };
-                }
+                let pair =
+                    if j < n { i8_kpair(&rows[j * k..j * k + k], l2) } else { [0, 0] };
+                panel[(l2 * PANEL + lane) * 2] = pair[0];
+                panel[(l2 * PANEL + lane) * 2 + 1] = pair[1];
             }
         }
     }
@@ -324,16 +602,37 @@ pub fn pack_b_i8(n: usize, k: usize, rows: &[i8], dst: &mut [i8]) {
 /// bit-exactness reference for the SIMD variants (identical per-element
 /// multiply+add sequence, `k` ascending).
 pub fn gemm_packed_f32_scalar(m: usize, n: usize, k: usize, a: &[f32], bp: &[f32], c: &mut [f32]) {
+    gemm_packed_f32_scalar_range(m, n, k, 0, k, a, bp, c);
+}
+
+/// Scalar packed f32 kernel over the k-range `[l0, l1)`: the first
+/// block (`l0 == 0`) starts accumulators at zero and overwrites C,
+/// later blocks continue each element's add chain from the stored
+/// partial sum — the k-blocked macro-loop stays bit-identical to one
+/// full-k pass.
+fn gemm_packed_f32_scalar_range(
+    m: usize,
+    n: usize,
+    k: usize,
+    l0: usize,
+    l1: usize,
+    a: &[f32],
+    bp: &[f32],
+    c: &mut [f32],
+) {
     let npan = n.div_ceil(PANEL);
     for jp in 0..npan {
         let panel = &bp[jp * k * PANEL..(jp + 1) * k * PANEL];
         let j0 = jp * PANEL;
         let lanes = (n - j0).min(PANEL);
         for i in 0..m {
-            let ar = &a[i * k..i * k + k];
+            let ar = &a[i * k + l0..i * k + l1];
             let mut acc = [0f32; PANEL];
-            for (l, &av) in ar.iter().enumerate() {
-                let brow = &panel[l * PANEL..(l + 1) * PANEL];
+            if l0 > 0 {
+                acc[..lanes].copy_from_slice(&c[i * n + j0..i * n + j0 + lanes]);
+            }
+            for (off, &av) in ar.iter().enumerate() {
+                let brow = &panel[(l0 + off) * PANEL..(l0 + off + 1) * PANEL];
                 for (accv, &bv) in acc.iter_mut().zip(brow) {
                     *accv += av * bv;
                 }
@@ -345,6 +644,23 @@ pub fn gemm_packed_f32_scalar(m: usize, n: usize, k: usize, a: &[f32], bp: &[f32
 
 /// Scalar packed-panel i8→i32 kernel (exact; the dispatch fallback).
 pub fn gemm_packed_i8_i32_scalar(m: usize, n: usize, k: usize, a: &[i8], bp: &[i8], c: &mut [i32]) {
+    gemm_packed_i8_i32_scalar_range(m, n, k, 0, k.div_ceil(2), a, bp, c);
+}
+
+/// Scalar packed int8 kernel over the pair-range `[p0, p1)` (pair index
+/// `l2` covers k indices `2·l2, 2·l2+1`). Integer accumulation is exact
+/// under any split; `p0 > 0` continues from the stored partials.
+#[allow(clippy::too_many_arguments)]
+fn gemm_packed_i8_i32_scalar_range(
+    m: usize,
+    n: usize,
+    k: usize,
+    p0: usize,
+    p1: usize,
+    a: &[i8],
+    bp: &[i8],
+    c: &mut [i32],
+) {
     let k2 = k.div_ceil(2);
     let npan = n.div_ceil(PANEL);
     for jp in 0..npan {
@@ -354,9 +670,12 @@ pub fn gemm_packed_i8_i32_scalar(m: usize, n: usize, k: usize, a: &[i8], bp: &[i
         for i in 0..m {
             let ar = &a[i * k..i * k + k];
             let mut acc = [0i32; PANEL];
-            for l2 in 0..k2 {
-                let a0 = ar[2 * l2] as i32;
-                let a1 = if 2 * l2 + 1 < k { ar[2 * l2 + 1] as i32 } else { 0 };
+            if p0 > 0 {
+                acc[..lanes].copy_from_slice(&c[i * n + j0..i * n + j0 + lanes]);
+            }
+            for l2 in p0..p1 {
+                let pair = i8_kpair(ar, l2);
+                let (a0, a1) = (pair[0] as i32, pair[1] as i32);
                 let brow = &panel[l2 * 16..(l2 + 1) * 16];
                 for (lane, accv) in acc.iter_mut().enumerate() {
                     *accv += a0 * brow[lane * 2] as i32 + a1 * brow[lane * 2 + 1] as i32;
@@ -367,37 +686,128 @@ pub fn gemm_packed_i8_i32_scalar(m: usize, n: usize, k: usize, a: &[i8], bp: &[i
     }
 }
 
+/// One k-range pass of the dispatched packed f32 kernel.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_packed_f32(
+    m: usize,
+    n: usize,
+    k: usize,
+    l0: usize,
+    l1: usize,
+    a: &[f32],
+    bp: &[f32],
+    c: &mut [f32],
+) {
+    match simd::active_kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { simd::avx2::gemm_packed_f32(m, n, k, l0, l1, a, bp, c) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { simd::neon::gemm_packed_f32(m, n, k, l0, l1, a, bp, c) },
+        _ => gemm_packed_f32_scalar_range(m, n, k, l0, l1, a, bp, c),
+    }
+}
+
+/// One pair-range pass of the dispatched packed int8 kernel.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_packed_i8(
+    m: usize,
+    n: usize,
+    k: usize,
+    p0: usize,
+    p1: usize,
+    a: &[i8],
+    bp: &[i8],
+    c: &mut [i32],
+) {
+    match simd::active_kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { simd::avx2::gemm_packed_i8_i32(m, n, k, p0, p1, a, bp, c) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { simd::neon::gemm_packed_i8_i32(m, n, k, p0, p1, a, bp, c) },
+        _ => gemm_packed_i8_i32_scalar_range(m, n, k, p0, p1, a, bp, c),
+    }
+}
+
+/// Single-thread packed f32 GEMM: the dispatched kernel over `kc`-deep
+/// k-blocks (ascending, accumulating into C — see [`Blocking`]).
+fn gemm_packed_f32_single(m: usize, n: usize, k: usize, a: &[f32], bp: &[f32], c: &mut [f32]) {
+    if k == 0 {
+        // single empty-range pass zero-fills C (acc starts at zero)
+        dispatch_packed_f32(m, n, k, 0, 0, a, bp, c);
+        return;
+    }
+    let kc = active_blocking().kc.max(1);
+    let mut l0 = 0;
+    while l0 < k {
+        let l1 = (l0 + kc).min(k);
+        dispatch_packed_f32(m, n, k, l0, l1, a, bp, c);
+        l0 = l1;
+    }
+}
+
+/// Single-thread packed int8 GEMM over `kc`-deep pair blocks.
+fn gemm_packed_i8_single(m: usize, n: usize, k: usize, a: &[i8], bp: &[i8], c: &mut [i32]) {
+    let k2 = k.div_ceil(2);
+    if k2 == 0 {
+        dispatch_packed_i8(m, n, k, 0, 0, a, bp, c);
+        return;
+    }
+    let kcp = (active_blocking().kc / 2).max(1);
+    let mut p0 = 0;
+    while p0 < k2 {
+        let p1 = (p0 + kcp).min(k2);
+        dispatch_packed_i8(m, n, k, p0, p1, a, bp, c);
+        p0 = p1;
+    }
+}
+
 /// Runtime-dispatched packed-panel f32 GEMM:
 /// `C[m×n] = A[m×k] · Bᵀ` with B pre-packed by [`pack_b_f32`].
 /// Bit-identical to [`gemm_nt_f32`] on the unpacked operand under every
-/// dispatch arm (AVX2 / NEON / scalar — see [`crate::linalg::simd`]).
+/// dispatch arm, thread count and blocking. Large problems run the
+/// macro-kernel across row spans that share the packed B buffer
+/// (pack-once/share-across-threads) under a
+/// [`crate::util::par::CoreBudget`] lease.
 pub fn gemm_packed_f32(m: usize, n: usize, k: usize, a: &[f32], bp: &[f32], c: &mut [f32]) {
     assert!(a.len() >= m * k, "A too small: {} < {}", a.len(), m * k);
     assert!(bp.len() >= packed_b_f32_len(n, k), "packed B too small");
     assert!(c.len() >= m * n, "C too small: {} < {}", c.len(), m * n);
-    match simd::active_kernel() {
-        #[cfg(target_arch = "x86_64")]
-        Kernel::Avx2 => unsafe { simd::avx2::gemm_packed_f32(m, n, k, a, bp, c) },
-        #[cfg(target_arch = "aarch64")]
-        Kernel::Neon => unsafe { simd::neon::gemm_packed_f32(m, n, k, a, bp, c) },
-        _ => gemm_packed_f32_scalar(m, n, k, a, bp, c),
+    let want = gemm_team(m, n, k);
+    if want > 1 {
+        let lease = crate::util::par::CoreBudget::lease(want);
+        let threads = lease.threads().min(want);
+        if threads > 1 {
+            let span = row_span(m, threads);
+            par_rows(span, k, n, &a[..m * k], &mut c[..m * n], |rows, asub, csub| {
+                gemm_packed_f32_single(rows, n, k, asub, bp, csub)
+            });
+            return;
+        }
     }
+    gemm_packed_f32_single(m, n, k, a, bp, c);
 }
 
 /// Runtime-dispatched packed-panel i8→i32 GEMM (exact i32 accumulation;
 /// B pre-packed by [`pack_b_i8`]). Bit-identical to [`gemm_nt_i8_i32`]
-/// under every dispatch arm.
+/// under every dispatch arm, thread count and blocking; threads like
+/// [`gemm_packed_f32`].
 pub fn gemm_packed_i8_i32(m: usize, n: usize, k: usize, a: &[i8], bp: &[i8], c: &mut [i32]) {
     assert!(a.len() >= m * k, "A too small: {} < {}", a.len(), m * k);
     assert!(bp.len() >= packed_b_i8_len(n, k), "packed B too small");
     assert!(c.len() >= m * n, "C too small: {} < {}", c.len(), m * n);
-    match simd::active_kernel() {
-        #[cfg(target_arch = "x86_64")]
-        Kernel::Avx2 => unsafe { simd::avx2::gemm_packed_i8_i32(m, n, k, a, bp, c) },
-        #[cfg(target_arch = "aarch64")]
-        Kernel::Neon => unsafe { simd::neon::gemm_packed_i8_i32(m, n, k, a, bp, c) },
-        _ => gemm_packed_i8_i32_scalar(m, n, k, a, bp, c),
+    let want = gemm_team(m, n, k);
+    if want > 1 {
+        let lease = crate::util::par::CoreBudget::lease(want);
+        let threads = lease.threads().min(want);
+        if threads > 1 {
+            let span = row_span(m, threads);
+            par_rows(span, k, n, &a[..m * k], &mut c[..m * n], |rows, asub, csub| {
+                gemm_packed_i8_single(rows, n, k, asub, bp, csub)
+            });
+            return;
+        }
     }
+    gemm_packed_i8_single(m, n, k, a, bp, c);
 }
 
 #[cfg(test)]
@@ -484,8 +894,14 @@ mod tests {
     #[test]
     fn packed_i8_exact_over_remainders_and_odd_k() {
         let mut rng = Pcg32::seeded(8);
-        for (m, n, k) in [(1usize, 3usize, 5usize), (4, 8, 9), (6, 6, 6), (19, 11, 35), (9, 17, 2)]
-        {
+        for (m, n, k) in [
+            (1usize, 3usize, 5usize),
+            (4, 8, 9),
+            (4, 3, 1),
+            (6, 6, 6),
+            (19, 11, 35),
+            (9, 17, 2),
+        ] {
             let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
             let b: Vec<i8> = (0..n * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
             let mut want = vec![0i32; m * n];
@@ -528,5 +944,86 @@ mod tests {
             gemm_nt_i8_i32(m, n, k, &a, &b, &mut got);
             assert_eq!(got, want, "m{m} n{n} k{k}");
         }
+    }
+
+    #[test]
+    fn kpair_helper_zero_pads_the_odd_tail() {
+        assert_eq!(i8_kpair(&[5], 0), [5, 0], "k = 1");
+        assert_eq!(i8_kpair(&[1, 2, 3], 0), [1, 2]);
+        assert_eq!(i8_kpair(&[1, 2, 3], 1), [3, 0], "k = odd tail");
+        assert_eq!(i8_kpair(&[1, 2, 3, 4], 1), [3, 4], "k = even, no pad");
+        // sign extension survives the i16-halves packing
+        let w = i8_pair_word([-1, -2]);
+        assert_eq!(w as u32, 0xfffe_ffff);
+        assert_eq!(i8_pair_word([3, 0]), 3);
+    }
+
+    #[test]
+    fn blocking_override_is_bit_identical() {
+        let _g = crate::linalg::simd::TEST_OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let (m, n, k) = (33, 41, 40);
+        let mut rng = Pcg32::seeded(11);
+        let mut a = vec![0f32; m * k];
+        let mut b = vec![0f32; n * k];
+        rng.fill_gaussian(&mut a, 1.0);
+        rng.fill_gaussian(&mut b, 1.0);
+        set_blocking_override(None);
+        let mut want = vec![0f32; m * n];
+        gemm_nt_f32(m, n, k, &a, &b, &mut want);
+        let mut bp = vec![0f32; packed_b_f32_len(n, k)];
+        pack_b_f32(n, k, &b, &mut bp);
+        let mut candidates = Blocking::candidates().to_vec();
+        candidates.push(Blocking { mc: 4, kc: 2, nc: 4 }); // degenerate: every block is a remainder
+        candidates.push(Blocking { mc: 7, kc: 3, nc: 9 }); // odd kc rounds to the pair boundary
+        for bl in candidates {
+            set_blocking_override(Some(bl));
+            let mut got = vec![7f32; m * n];
+            gemm_nt_f32(m, n, k, &a, &b, &mut got);
+            assert_eq!(got, want, "nt under {bl:?}");
+            let mut gotp = vec![7f32; m * n];
+            gemm_packed_f32(m, n, k, &a, &bp, &mut gotp);
+            assert_eq!(gotp, want, "packed under {bl:?}");
+        }
+        set_blocking_override(None);
+    }
+
+    #[test]
+    fn threaded_matches_single_thread_bitwise() {
+        let _g = crate::linalg::simd::TEST_OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        // above PAR_MIN_MACS (65·256·130 ≈ 2.16M) with every remainder in play
+        let (m, n, k) = (65, 256, 130);
+        assert!((m * n * k) as u64 >= PAR_MIN_MACS, "shape must take the threaded path");
+        let mut rng = Pcg32::seeded(12);
+        let mut a = vec![0f32; m * k];
+        let mut b = vec![0f32; n * k];
+        rng.fill_gaussian(&mut a, 1.0);
+        rng.fill_gaussian(&mut b, 1.0);
+        let mut bp = vec![0f32; packed_b_f32_len(n, k)];
+        pack_b_f32(n, k, &b, &mut bp);
+        let ai: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let bi: Vec<i8> = (0..n * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let mut bpi = vec![0i8; packed_b_i8_len(n, k)];
+        pack_b_i8(n, k, &bi, &mut bpi);
+        crate::util::par::set_thread_override(Some(1));
+        let mut want = vec![0f32; m * n];
+        gemm_packed_f32(m, n, k, &a, &bp, &mut want);
+        let mut want_nt = vec![0f32; m * n];
+        gemm_nt_f32(m, n, k, &a, &b, &mut want_nt);
+        let mut want_i = vec![0i32; m * n];
+        gemm_packed_i8_i32(m, n, k, &ai, &bpi, &mut want_i);
+        for t in [2usize, 7] {
+            crate::util::par::set_thread_override(Some(t));
+            let mut got = vec![7f32; m * n];
+            gemm_packed_f32(m, n, k, &a, &bp, &mut got);
+            assert_eq!(got, want, "packed f32 at {t} threads");
+            let mut got_nt = vec![7f32; m * n];
+            gemm_nt_f32(m, n, k, &a, &b, &mut got_nt);
+            assert_eq!(got_nt, want_nt, "nt f32 at {t} threads");
+            let mut got_i = vec![-1i32; m * n];
+            gemm_packed_i8_i32(m, n, k, &ai, &bpi, &mut got_i);
+            assert_eq!(got_i, want_i, "packed i8 at {t} threads");
+        }
+        crate::util::par::set_thread_override(None);
+        assert_eq!(want, want_nt, "packed and nt agree bitwise");
     }
 }

@@ -22,7 +22,12 @@
 //! `rust/tests/simd.rs` assert exact equality, and the workspace
 //! bit-identity suite remains valid under either dispatch arm. The
 //! lanes vectorize across *output columns*, not across `k`, which is
-//! what makes the no-reassociation guarantee possible.
+//! what makes the no-reassociation guarantee possible. Threading lives
+//! *above* this layer: `linalg::gemm` partitions row spans across
+//! workers and calls these kernels on sub-problems (each kernel call is
+//! single-threaded), and its `kc` blocking calls them over ascending
+//! k-ranges that continue each element's add chain from the stored
+//! partial sum — both preserve the contract by construction.
 //!
 //! Dispatch is observable: [`kernel_name`] is reported by
 //! `coordinator::metrics`, printed by `sfc serve` and recorded in the
@@ -247,18 +252,24 @@ pub(crate) mod avx2 {
 
     use std::arch::x86_64::*;
 
-    /// `C[m×n] = A[m×k]·Bᵀ` with B in 8-column packed panels
-    /// (`[panel][k][8]`). Per-element k-ascending multiply+add — bit-
-    /// identical to the scalar packed kernel.
+    /// `C[m×n] = A[m×k]·Bᵀ` over the k-range `[l0, l1)` with B in
+    /// 8-column packed panels (`[panel][k][8]`). Per-element k-ascending
+    /// multiply+add — bit-identical to the scalar packed kernel. The
+    /// first k-block (`l0 == 0`) starts accumulators at zero; later
+    /// blocks continue each element's add chain from the stored partial
+    /// sum (the caller's `kc` macro-loop).
     ///
     /// # Safety
     /// Requires AVX2. Slice bounds are asserted by the dispatching
     /// wrapper in `linalg::gemm`.
     #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
     pub unsafe fn gemm_packed_f32(
         m: usize,
         n: usize,
         k: usize,
+        l0: usize,
+        l1: usize,
         a: &[f32],
         bp: &[f32],
         c: &mut [f32],
@@ -274,11 +285,11 @@ pub(crate) mod avx2 {
                 let a1 = a.as_ptr().add((i + 1) * k);
                 let a2 = a.as_ptr().add((i + 2) * k);
                 let a3 = a.as_ptr().add((i + 3) * k);
-                let mut acc0 = _mm256_setzero_ps();
-                let mut acc1 = _mm256_setzero_ps();
-                let mut acc2 = _mm256_setzero_ps();
-                let mut acc3 = _mm256_setzero_ps();
-                for l in 0..k {
+                let mut acc0 = load_f32(c, i * n + j0, lanes, l0);
+                let mut acc1 = load_f32(c, (i + 1) * n + j0, lanes, l0);
+                let mut acc2 = load_f32(c, (i + 2) * n + j0, lanes, l0);
+                let mut acc3 = load_f32(c, (i + 3) * n + j0, lanes, l0);
+                for l in l0..l1 {
                     let bv = _mm256_loadu_ps(pb.add(l * 8));
                     acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_set1_ps(*a0.add(l)), bv));
                     acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_set1_ps(*a1.add(l)), bv));
@@ -294,14 +305,30 @@ pub(crate) mod avx2 {
             // m-remainder: same microkernel blocking, one row at a time
             while i < m {
                 let ar = a.as_ptr().add(i * k);
-                let mut acc = _mm256_setzero_ps();
-                for l in 0..k {
+                let mut acc = load_f32(c, i * n + j0, lanes, l0);
+                for l in l0..l1 {
                     let bv = _mm256_loadu_ps(pb.add(l * 8));
                     acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(*ar.add(l)), bv));
                 }
                 store_f32(c, i * n + j0, acc, lanes);
                 i += 1;
             }
+        }
+    }
+
+    /// Accumulator init for one output row: zero on the first k-block,
+    /// else the stored partial sums (tail lanes stay zero — they are
+    /// never stored back).
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_f32(c: &[f32], off: usize, lanes: usize, l0: usize) -> __m256 {
+        if l0 == 0 {
+            _mm256_setzero_ps()
+        } else if lanes == 8 {
+            _mm256_loadu_ps(c.as_ptr().add(off))
+        } else {
+            let mut tmp = [0f32; 8];
+            tmp[..lanes].copy_from_slice(&c[off..off + lanes]);
+            _mm256_loadu_ps(tmp.as_ptr())
         }
     }
 
@@ -316,19 +343,23 @@ pub(crate) mod avx2 {
         }
     }
 
-    /// Int8 packed GEMM: `C[m×n] (i32) = A[m×k]·Bᵀ` with B in 8-column
-    /// panels of interleaved k-pairs (`[panel][k/2][8][2]`, odd k
-    /// zero-padded). Exact i32 accumulation via `_mm256_madd_epi16`
-    /// (i8 operands ⇒ the pairwise i16 dot cannot overflow).
+    /// Int8 packed GEMM over the pair-range `[p0, p1)`: `C[m×n] (i32) =
+    /// A[m×k]·Bᵀ` with B in 8-column panels of interleaved k-pairs
+    /// (`[panel][k/2][8][2]`, odd k zero-padded). Exact i32 accumulation
+    /// via `_mm256_madd_epi16` (i8 operands ⇒ the pairwise i16 dot
+    /// cannot overflow). `p0 > 0` continues from the stored partials.
     ///
     /// # Safety
     /// Requires AVX2. Slice bounds are asserted by the dispatching
     /// wrapper in `linalg::gemm`.
     #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
     pub unsafe fn gemm_packed_i8_i32(
         m: usize,
         n: usize,
         k: usize,
+        p0: usize,
+        p1: usize,
         a: &[i8],
         bp: &[i8],
         c: &mut [i32],
@@ -342,17 +373,22 @@ pub(crate) mod avx2 {
             let mut i = 0usize;
             while i + 4 <= m {
                 let rows = [
-                    a.as_ptr().add(i * k),
-                    a.as_ptr().add((i + 1) * k),
-                    a.as_ptr().add((i + 2) * k),
-                    a.as_ptr().add((i + 3) * k),
+                    std::slice::from_raw_parts(a.as_ptr().add(i * k), k),
+                    std::slice::from_raw_parts(a.as_ptr().add((i + 1) * k), k),
+                    std::slice::from_raw_parts(a.as_ptr().add((i + 2) * k), k),
+                    std::slice::from_raw_parts(a.as_ptr().add((i + 3) * k), k),
                 ];
-                let mut acc = [_mm256_setzero_si256(); 4];
-                for l2 in 0..k2 {
+                let mut acc = [
+                    load_i32(c, i * n + j0, lanes, p0),
+                    load_i32(c, (i + 1) * n + j0, lanes, p0),
+                    load_i32(c, (i + 2) * n + j0, lanes, p0),
+                    load_i32(c, (i + 3) * n + j0, lanes, p0),
+                ];
+                for l2 in p0..p1 {
                     let b16 =
                         _mm256_cvtepi8_epi16(_mm_loadu_si128(pb.add(l2 * 16) as *const __m128i));
                     for (r, row) in rows.iter().enumerate() {
-                        let av = _mm256_set1_epi32(apair(*row, l2, k));
+                        let av = _mm256_set1_epi32(apair(row, l2));
                         acc[r] = _mm256_add_epi32(acc[r], _mm256_madd_epi16(av, b16));
                     }
                 }
@@ -362,12 +398,12 @@ pub(crate) mod avx2 {
                 i += 4;
             }
             while i < m {
-                let row = a.as_ptr().add(i * k);
-                let mut acc = _mm256_setzero_si256();
-                for l2 in 0..k2 {
+                let row = std::slice::from_raw_parts(a.as_ptr().add(i * k), k);
+                let mut acc = load_i32(c, i * n + j0, lanes, p0);
+                for l2 in p0..p1 {
                     let b16 =
                         _mm256_cvtepi8_epi16(_mm_loadu_si128(pb.add(l2 * 16) as *const __m128i));
-                    let av = _mm256_set1_epi32(apair(row, l2, k));
+                    let av = _mm256_set1_epi32(apair(row, l2));
                     acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, b16));
                 }
                 store_i32(c, i * n + j0, acc, lanes);
@@ -376,14 +412,28 @@ pub(crate) mod avx2 {
         }
     }
 
-    /// The A-side operand for one k-pair: two consecutive i8 values of
-    /// row `row` sign-extended to i16 and packed into one i32 (low half
-    /// = k even element), zero-padding the odd tail.
+    /// The A-side operand for one k-pair, via the shared tail rule in
+    /// `linalg::gemm` (`i8_kpair` zero-pads the odd-k tail, exactly as
+    /// `pack_b_i8` does on the B side).
     #[inline(always)]
-    unsafe fn apair(row: *const i8, l2: usize, k: usize) -> i32 {
-        let a0 = *row.add(2 * l2) as i32;
-        let a1 = if 2 * l2 + 1 < k { *row.add(2 * l2 + 1) as i32 } else { 0 };
-        (((a0 as u32) & 0xffff) | (((a1 as u32) & 0xffff) << 16)) as i32
+    fn apair(row: &[i8], l2: usize) -> i32 {
+        use crate::linalg::gemm::{i8_kpair, i8_pair_word};
+        i8_pair_word(i8_kpair(row, l2))
+    }
+
+    /// Accumulator init: zero on the first pair-block, else the stored
+    /// partial sums (tail lanes stay zero — never stored back).
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_i32(c: &[i32], off: usize, lanes: usize, p0: usize) -> __m256i {
+        if p0 == 0 {
+            _mm256_setzero_si256()
+        } else if lanes == 8 {
+            _mm256_loadu_si256(c.as_ptr().add(off) as *const __m256i)
+        } else {
+            let mut tmp = [0i32; 8];
+            tmp[..lanes].copy_from_slice(&c[off..off + lanes]);
+            _mm256_loadu_si256(tmp.as_ptr() as *const __m256i)
+        }
     }
 
     #[target_feature(enable = "avx2")]
@@ -545,14 +595,18 @@ pub(crate) mod neon {
 
     use std::arch::aarch64::*;
 
-    /// Packed f32 GEMM (see the AVX2 twin for the layout contract).
+    /// Packed f32 GEMM over the k-range `[l0, l1)` (see the AVX2 twin
+    /// for the layout and k-block continuation contract).
     ///
     /// # Safety
     /// Slice bounds are asserted by the dispatching wrapper.
+    #[allow(clippy::too_many_arguments)]
     pub unsafe fn gemm_packed_f32(
         m: usize,
         n: usize,
         k: usize,
+        l0: usize,
+        l1: usize,
         a: &[f32],
         bp: &[f32],
         c: &mut [f32],
@@ -564,16 +618,21 @@ pub(crate) mod neon {
             let lanes = (n - j0).min(8);
             for i in 0..m {
                 let ar = a.as_ptr().add(i * k);
-                let mut acc0 = vdupq_n_f32(0.0);
-                let mut acc1 = vdupq_n_f32(0.0);
-                for l in 0..k {
+                // acc init: zero on the first k-block, stored partials
+                // after (tail lanes stay zero — never stored back)
+                let mut tmp = [0f32; 8];
+                if l0 > 0 {
+                    tmp[..lanes].copy_from_slice(&c[i * n + j0..i * n + j0 + lanes]);
+                }
+                let mut acc0 = vld1q_f32(tmp.as_ptr());
+                let mut acc1 = vld1q_f32(tmp.as_ptr().add(4));
+                for l in l0..l1 {
                     let av = vdupq_n_f32(*ar.add(l));
                     let b0 = vld1q_f32(pb.add(l * 8));
                     let b1 = vld1q_f32(pb.add(l * 8 + 4));
                     acc0 = vaddq_f32(acc0, vmulq_f32(av, b0));
                     acc1 = vaddq_f32(acc1, vmulq_f32(av, b1));
                 }
-                let mut tmp = [0f32; 8];
                 vst1q_f32(tmp.as_mut_ptr(), acc0);
                 vst1q_f32(tmp.as_mut_ptr().add(4), acc1);
                 c[i * n + j0..i * n + j0 + lanes].copy_from_slice(&tmp[..lanes]);
@@ -581,19 +640,24 @@ pub(crate) mod neon {
         }
     }
 
-    /// Packed int8 GEMM with exact i32 accumulation (see the AVX2 twin
-    /// for the interleaved k-pair layout).
+    /// Packed int8 GEMM over the pair-range `[p0, p1)` with exact i32
+    /// accumulation (see the AVX2 twin for the interleaved k-pair
+    /// layout and the pair-block continuation contract).
     ///
     /// # Safety
     /// Slice bounds are asserted by the dispatching wrapper.
+    #[allow(clippy::too_many_arguments)]
     pub unsafe fn gemm_packed_i8_i32(
         m: usize,
         n: usize,
         k: usize,
+        p0: usize,
+        p1: usize,
         a: &[i8],
         bp: &[i8],
         c: &mut [i32],
     ) {
+        use crate::linalg::gemm::{i8_kpair, i8_pair_word};
         let k2 = k.div_ceil(2);
         let npan = n.div_ceil(8);
         for jp in 0..npan {
@@ -601,25 +665,29 @@ pub(crate) mod neon {
             let j0 = jp * 8;
             let lanes = (n - j0).min(8);
             for i in 0..m {
-                let row = a.as_ptr().add(i * k);
-                let mut acc_lo = vdupq_n_s32(0); // columns j0..j0+4
-                let mut acc_hi = vdupq_n_s32(0); // columns j0+4..j0+8
-                for l2 in 0..k2 {
-                    let a0 = *row.add(2 * l2) as i32;
-                    let a1 = if 2 * l2 + 1 < k { *row.add(2 * l2 + 1) as i32 } else { 0 };
-                    let pair = (((a0 as u32) & 0xffff) | (((a1 as u32) & 0xffff) << 16)) as i32;
+                let row = std::slice::from_raw_parts(a.as_ptr().add(i * k), k);
+                // acc init: zero on the first pair-block, stored
+                // partials after (tail lanes stay zero)
+                let mut tmp = [0i32; 8];
+                if p0 > 0 {
+                    tmp[..lanes].copy_from_slice(&c[i * n + j0..i * n + j0 + lanes]);
+                }
+                let mut acc_lo = vld1q_s32(tmp.as_ptr()); // columns j0..j0+4
+                let mut acc_hi = vld1q_s32(tmp.as_ptr().add(4)); // columns j0+4..j0+8
+                for l2 in p0..p1 {
+                    // shared odd-k tail rule (matches pack_b_i8)
+                    let pair = i8_pair_word(i8_kpair(row, l2));
                     let apair = vreinterpretq_s16_s32(vdupq_n_s32(pair));
                     let b = vld1q_s8(pb.add(l2 * 16));
                     let blo = vmovl_s8(vget_low_s8(b)); // cols j0..j0+4, pairs
                     let bhi = vmovl_s8(vget_high_s8(b));
-                    let p0 = vmull_s16(vget_low_s16(blo), vget_low_s16(apair));
-                    let p1 = vmull_s16(vget_high_s16(blo), vget_high_s16(apair));
-                    acc_lo = vaddq_s32(acc_lo, vpaddq_s32(p0, p1));
-                    let p2 = vmull_s16(vget_low_s16(bhi), vget_low_s16(apair));
-                    let p3 = vmull_s16(vget_high_s16(bhi), vget_high_s16(apair));
-                    acc_hi = vaddq_s32(acc_hi, vpaddq_s32(p2, p3));
+                    let q0 = vmull_s16(vget_low_s16(blo), vget_low_s16(apair));
+                    let q1 = vmull_s16(vget_high_s16(blo), vget_high_s16(apair));
+                    acc_lo = vaddq_s32(acc_lo, vpaddq_s32(q0, q1));
+                    let q2 = vmull_s16(vget_low_s16(bhi), vget_low_s16(apair));
+                    let q3 = vmull_s16(vget_high_s16(bhi), vget_high_s16(apair));
+                    acc_hi = vaddq_s32(acc_hi, vpaddq_s32(q2, q3));
                 }
-                let mut tmp = [0i32; 8];
                 vst1q_s32(tmp.as_mut_ptr(), acc_lo);
                 vst1q_s32(tmp.as_mut_ptr().add(4), acc_hi);
                 c[i * n + j0..i * n + j0 + lanes].copy_from_slice(&tmp[..lanes]);

@@ -98,18 +98,23 @@ engine selection (cuDNN findAlgorithm-style):
               micro-benchmark every supporting engine per layer shape
               (mobilenet exercises the grouped/depthwise descriptors),
               print measured times + the selected winner (--bits N asks
-              for the intN transform-domain scheme; 0 = float); --out
-              writes the measured shape -> engine table that `serve` and
-              `loadgen` warm from via --tuning (no re-measuring)
+              for the intN transform-domain scheme; 0 = float); also
+              sweeps the GEMM Mc/Kc/Nc cache-blocking candidates on the
+              largest shape's winner and pins the fastest; --out writes
+              the measured shape -> engine table (+ blocking, schema v2)
+              that `serve` and `loadgen` warm from via --tuning (no
+              re-measuring)
 
 perf snapshot (steady-state pre-packed run over a reused workspace):
   bench       [--json] [--out BENCH_conv.json] [--iters 9] [--warmup 2]
               [--quick]
               per-shape, per-engine ns/call + GFLOP/s, the active kernel
               dispatch arm (avx2|neon|scalar; SFC_FORCE_SCALAR=1 pins
-              scalar), a scalar-vs-SIMD speedup block on the dense
-              3x3 shapes and end-to-end compiled-model rows (f32 + int8
-              MobileNet through the graph compiler, schema v4); --json
+              scalar), the GEMM thread count (SFC_THREADS pins) and
+              active Mc/Kc/Nc blocking, a scalar-vs-SIMD speedup block
+              plus a 1-thread-vs-N scaling block on the dense 3x3
+              shapes, and end-to-end compiled-model rows (f32 + int8
+              MobileNet through the graph compiler) — schema v5; --json
               writes the machine-readable snapshot tracked across PRs;
               --quick is the CI smoke subset
 
@@ -133,13 +138,16 @@ pure-Rust workspace-backed path):
               name[:intN] specs, e.g. --model resnet18 --model
               mobilenet:int8 — resident models share one plan cache and
               a packed-weight budget ([--budget-mb 0] [--queue-depth 64]
-              [--linger-ms 2]); requires --runner engine
+              [--linger-ms 2]); requires --runner engine; --cores N caps
+              the process-wide CoreBudget (model workers x intra-op GEMM
+              threads never exceed N concurrent lanes)
 
 serving load generator (continuous batching under overload):
   loadgen     [--models resnet18,mobilenet:int8] [--qps 400]
               [--duration-s 2.0] [--deadline-ms 25] [--low-ratio 0.6]
               [--batch 8] [--queue-depth 32] [--budget-mb 64]
               [--linger-ms 2] [--seed 7] [--tuning tuning.json]
+              [--cores N]
               open-loop paced traffic against a multi-model scheduler
               (random weights; name[:intN] specs get synthetic-calib
               PTQ): mixed priorities/deadlines, deadline-driven batch
@@ -431,6 +439,7 @@ fn cmd_autotune(opts: &HashMap<String, String>) -> Result<()> {
     );
     let sel = Selector::new(Policy::Autotune(AutotuneCfg { warmup: 1, iters }));
     let mut table = TuningTable::new();
+    let mut biggest: Option<(u64, ConvDesc, String)> = None;
     for (d, names) in &buckets {
         println!(
             "shape {}x{}x{} -> {} (r={}, stride {}, pad {}, groups {}) — {} layer(s): {}",
@@ -463,6 +472,34 @@ fn cmd_autotune(opts: &HashMap<String, String>) -> Result<()> {
         let winner = entries.iter().find(|t| t.selected).expect("autotune flags a winner");
         println!("    selected: {}\n", winner.engine);
         table.insert(d, &winner.engine, winner.median_s);
+        if biggest.as_ref().map_or(true, |(m, _, _)| d.macs() > *m) {
+            biggest = Some((d.macs(), *d, winner.engine.to_string()));
+        }
+    }
+
+    // Cache-blocking sweep: measure the GEMM Mc/Kc/Nc candidates on the
+    // largest shape's winning engine (the GEMM that dominates runtime)
+    // and pin the fastest into the table, so `--tuning` warm-up installs
+    // it process-wide alongside the engine pins.
+    if let Some((macs, d, engine)) = biggest {
+        println!("blocking sweep — {engine} on the largest shape ({:.1} MMACs):", macs as f64 / 1e6);
+        let entries = sel.tune_blocking(&engine, &d, AutotuneCfg { warmup: 1, iters })?;
+        for b in &entries {
+            println!(
+                "  {} mc={:<4} kc={:<5} nc={:<4} {:>9.3} ms",
+                if b.selected { "*" } else { " " },
+                b.blocking.mc,
+                b.blocking.kc,
+                b.blocking.nc,
+                b.median_s * 1e3
+            );
+        }
+        let win = entries.iter().find(|b| b.selected).expect("sweep flags a winner");
+        table.set_blocking(Some(win.blocking));
+        println!(
+            "    selected blocking: mc={} kc={} nc={}\n",
+            win.blocking.mc, win.blocking.kc, win.blocking.nc
+        );
     }
 
     if let Some(path) = out_path {

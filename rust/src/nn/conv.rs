@@ -691,6 +691,9 @@ pub fn conv2d_fast_packed_into(
 
     // One scratch set per worker; images are distributed contiguously and
     // each worker writes its images' output chunks directly (no mutex).
+    // The per-(freq,group) GEMMs below may additionally thread over rows
+    // when large enough — the CoreBudget arbitrates, so batch-level
+    // workers and intra-op GEMM teams share one lane pool.
     let workers = num_threads().min(n).max(1);
     let mut states: Vec<FastScratch> =
         (0..workers).map(|_| FastScratch::take(ws, tt, n_tiles, ic, oc, m, l, t)).collect();

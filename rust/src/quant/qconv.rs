@@ -670,6 +670,9 @@ fn forward_transform_q(
     let blk = packed_b_i8_len(ocg, icg);
     assert!(wqp.len() >= tt * groups * blk, "packed quantized weights too small");
 
+    // Per-image workers; the int8 per-(freq,group) GEMMs below may also
+    // thread over rows under the same CoreBudget (nested parallelism
+    // degrades to serial inner GEMMs when the batch uses every lane).
     let workers = num_threads().min(n).max(1);
     let mut states: Vec<QFastScratch> = (0..workers)
         .map(|_| QFastScratch {

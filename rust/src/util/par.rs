@@ -1,12 +1,26 @@
-//! Data-parallel helpers on std::thread::scope (rayon is not vendored).
+//! Data-parallel helpers on std::thread::scope (rayon is not vendored),
+//! plus the process-wide [`CoreBudget`] that arbitrates cores between
+//! the serving layer's per-model workers and the intra-op GEMM threads.
 //!
 //! The engine's hot loops parallelize over independent chunks (image
-//! batches, output channels, tile groups); a static chunking over the
-//! available cores is enough and keeps the scheduling deterministic.
+//! batches, output channels, tile groups, GEMM row spans); a static
+//! chunking over the available cores is enough and keeps the scheduling
+//! deterministic. Every helper runs its first chunk on the calling
+//! thread and spawns workers only for the rest, and every spawned
+//! worker occupies a leased [`CoreBudget`] lane — so nesting (a model
+//! worker running a batch-parallel conv whose GEMM would also like to
+//! thread) degrades gracefully to serial inner loops instead of
+//! oversubscribing the host.
 
-/// Number of worker threads to use (respects SFC_THREADS, defaults to
-/// available parallelism).
-pub fn num_threads() -> usize {
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Thread-count override slot: 0 = none (env/detection), else the
+/// forced count. Mirrors `linalg::simd::OVERRIDE`.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+fn env_threads() -> usize {
     if let Ok(v) = std::env::var("SFC_THREADS") {
         if let Ok(n) = v.parse::<usize>() {
             return n.max(1);
@@ -15,19 +29,181 @@ pub fn num_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// Number of worker threads to use: the [`set_thread_override`] pin if
+/// set, else `SFC_THREADS` (read once and cached — the environment is
+/// startup configuration, not mutable state), else the machine's
+/// available parallelism.
+pub fn num_threads() -> usize {
+    match THREAD_OVERRIDE.load(Ordering::Relaxed) {
+        0 => {
+            static ENV: OnceLock<usize> = OnceLock::new();
+            *ENV.get_or_init(env_threads)
+        }
+        n => n,
+    }
+}
+
+/// Force the worker-thread count (`None` restores the cached
+/// env/detection value). The explicit override hook for tests and the
+/// bench harness's single-vs-multi-thread scaling block — mirrors
+/// [`crate::linalg::simd::set_kernel_override`]. Takes effect on the
+/// next [`num_threads`] call; process-global, so tests that toggle it
+/// serialize behind a lock like the kernel-override tests do.
+pub fn set_thread_override(n: Option<usize>) {
+    THREAD_OVERRIDE.store(n.map_or(0, |v| v.max(1)), Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// CoreBudget: process-wide compute-lane accounting
+// ---------------------------------------------------------------------
+
+/// Total-lanes override (0 = follow [`num_threads`]).
+static BUDGET_TOTAL: AtomicUsize = AtomicUsize::new(0);
+/// Lanes currently leased across the process.
+static BUDGET_LEASED: AtomicUsize = AtomicUsize::new(0);
+/// High-water mark of `BUDGET_LEASED` (concurrent compute threads).
+static BUDGET_PEAK: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// True while the current thread's lane is already counted in
+    /// `BUDGET_LEASED` (scheduler worker in EXECUTE, or a par-helper /
+    /// GEMM team member) — nested leases must not re-count it.
+    static LANE_COUNTED: Cell<bool> = const { Cell::new(false) };
+}
+
+/// The process-wide core budget: a fixed number of compute *lanes*
+/// (default: [`num_threads`]) that every source of parallelism leases
+/// from — `MultiServer` model workers while they execute a batch, the
+/// batch-parallel conv helpers, and the intra-op GEMM macro-kernel.
+/// Leasing is best-effort and never blocks: a team that can't get extra
+/// lanes simply runs on fewer threads (worst case, serial on the
+/// caller), so nested parallelism degrades instead of oversubscribing.
+/// Observable through [`CoreBudget::snapshot`] /
+/// [`crate::coordinator::metrics::core_budget`].
+pub struct CoreBudget;
+
+impl CoreBudget {
+    /// Total lanes in the budget ([`CoreBudget::set_total`] override,
+    /// else [`num_threads`]).
+    pub fn total() -> usize {
+        match BUDGET_TOTAL.load(Ordering::Relaxed) {
+            0 => num_threads(),
+            n => n,
+        }
+    }
+
+    /// Override the total lane count (`None` restores the
+    /// [`num_threads`] default) — `sfc serve --cores N` and the
+    /// budget tests.
+    pub fn set_total(n: Option<usize>) {
+        BUDGET_TOTAL.store(n.map_or(0, |v| v.max(1)), Ordering::Relaxed);
+    }
+
+    /// (total, leased, peak) lane counts. `peak` is the high-water mark
+    /// of concurrently leased lanes — the acceptance metric for "model
+    /// workers × intra-op threads never oversubscribe".
+    pub fn snapshot() -> (usize, usize, usize) {
+        (
+            CoreBudget::total(),
+            BUDGET_LEASED.load(Ordering::Relaxed),
+            BUDGET_PEAK.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Reset the peak high-water mark (tests measure one scenario).
+    pub fn reset_peak() {
+        BUDGET_PEAK.store(BUDGET_LEASED.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Lease lanes for a team of up to `want` concurrent compute
+    /// threads (including the caller). The caller's own lane is counted
+    /// exactly once across nested leases; extra lanes are granted only
+    /// while the budget has headroom. [`Lease::threads`] says how many
+    /// threads the caller may actually run; dropping the lease returns
+    /// the lanes.
+    pub fn lease(want: usize) -> Lease {
+        let want = want.max(1);
+        let already = LANE_COUNTED.with(|c| c.get());
+        let have = usize::from(already);
+        let mut grabbed;
+        let mut cur = BUDGET_LEASED.load(Ordering::Relaxed);
+        loop {
+            let avail = CoreBudget::total().saturating_sub(cur);
+            // the caller runs regardless of headroom: its own lane is
+            // grabbed even when the budget is exhausted (honest peak
+            // accounting), extra lanes only while lanes remain
+            grabbed = (want - have).min(avail).max(1 - have);
+            match BUDGET_LEASED.compare_exchange_weak(
+                cur,
+                cur + grabbed,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+        BUDGET_PEAK.fetch_max(cur + grabbed, Ordering::Relaxed);
+        let marked = !already && grabbed > 0;
+        if marked {
+            LANE_COUNTED.with(|c| c.set(true));
+        }
+        Lease { grabbed, threads: (have + grabbed).max(1), marked }
+    }
+}
+
+/// A scoped lane lease from the [`CoreBudget`]; lanes return on drop.
+pub struct Lease {
+    grabbed: usize,
+    threads: usize,
+    marked: bool,
+}
+
+impl Lease {
+    /// How many compute threads (including the caller) this lease
+    /// covers. Always ≥ 1.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        if self.marked {
+            LANE_COUNTED.with(|c| c.set(false));
+        }
+        BUDGET_LEASED.fetch_sub(self.grabbed, Ordering::Relaxed);
+    }
+}
+
+/// Run `f` with the current thread marked as holding a counted budget
+/// lane — par helpers and the GEMM macro-kernel wrap their spawned
+/// workers in this so a nested lease on the worker does not re-count
+/// the lane its parent team already leased for it.
+pub fn counted_lane<R>(f: impl FnOnce() -> R) -> R {
+    let prev = LANE_COUNTED.with(|c| c.replace(true));
+    let r = f();
+    LANE_COUNTED.with(|c| c.set(prev));
+    r
+}
+
 /// Parallel for over `0..n`: invokes `f(i)` for each index, splitting the
 /// range into contiguous chunks across worker threads. `f` must be Sync.
+/// The first chunk runs on the calling thread; spawned workers hold
+/// leased [`CoreBudget`] lanes.
 pub fn par_for(n: usize, f: impl Fn(usize) + Sync) {
-    let threads = num_threads().min(n.max(1));
-    if threads <= 1 || n <= 1 {
+    let want = num_threads().min(n.max(1));
+    if want <= 1 || n <= 1 {
         for i in 0..n {
             f(i);
         }
         return;
     }
+    let lease = CoreBudget::lease(want);
+    let threads = lease.threads().min(n);
     let chunk = n.div_ceil(threads);
     std::thread::scope(|s| {
-        for t in 0..threads {
+        for t in 1..threads {
             let lo = t * chunk;
             let hi = ((t + 1) * chunk).min(n);
             if lo >= hi {
@@ -35,10 +211,15 @@ pub fn par_for(n: usize, f: impl Fn(usize) + Sync) {
             }
             let f = &f;
             s.spawn(move || {
-                for i in lo..hi {
-                    f(i);
-                }
+                counted_lane(|| {
+                    for i in lo..hi {
+                        f(i);
+                    }
+                })
             });
+        }
+        for i in 0..chunk.min(n) {
+            f(i);
         }
     });
 }
@@ -47,7 +228,8 @@ pub fn par_for(n: usize, f: impl Fn(usize) + Sync) {
 ///
 /// Results are written once, directly into the output vector's spare
 /// capacity through disjoint per-thread chunks — no `Vec<Option<T>>`
-/// build-then-unwrap second pass, no per-slot `Option` overhead.
+/// build-then-unwrap second pass, no per-slot `Option` overhead. The
+/// first chunk is computed on the calling thread.
 ///
 /// Panic behavior: if `f` panics, the panic propagates after all
 /// workers join and already-computed results are leaked (never
@@ -55,22 +237,31 @@ pub fn par_for(n: usize, f: impl Fn(usize) + Sync) {
 /// rely on `Drop` running when the map aborts.
 pub fn par_map<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
     let mut out: Vec<T> = Vec::with_capacity(n);
-    let threads = num_threads().min(n.max(1));
-    if threads <= 1 || n <= 1 {
+    let want = num_threads().min(n.max(1));
+    if want <= 1 || n <= 1 {
         out.extend((0..n).map(f));
         return out;
     }
+    let lease = CoreBudget::lease(want);
+    let threads = lease.threads().min(n);
     let chunk = n.div_ceil(threads);
     {
         let slots = &mut out.spare_capacity_mut()[..n];
         std::thread::scope(|s| {
-            for (t, slot_chunk) in slots.chunks_mut(chunk).enumerate() {
+            let mut chunks = slots.chunks_mut(chunk);
+            let first = chunks.next().expect("n > 0");
+            for (t, slot_chunk) in chunks.enumerate() {
                 let f = &f;
                 s.spawn(move || {
-                    for (j, slot) in slot_chunk.iter_mut().enumerate() {
-                        slot.write(f(t * chunk + j));
-                    }
+                    counted_lane(|| {
+                        for (j, slot) in slot_chunk.iter_mut().enumerate() {
+                            slot.write(f((t + 1) * chunk + j));
+                        }
+                    })
                 });
+            }
+            for (j, slot) in first.iter_mut().enumerate() {
+                slot.write(f(j));
             }
         });
     }
@@ -86,7 +277,9 @@ pub fn par_map<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
 /// `states` — the pattern conv executors use to combine per-worker
 /// workspace buffers with direct (mutex-free) output writes. Chunks are
 /// distributed contiguously, so which state processes which chunk is
-/// deterministic for a fixed thread count.
+/// deterministic for a fixed worker count; the worker count is
+/// `states.len()` capped by the [`CoreBudget`] lanes actually granted
+/// (state 0 runs on the calling thread).
 pub fn par_chunks_states<S: Send, T: Send>(
     data: &mut [T],
     chunk_size: usize,
@@ -97,52 +290,84 @@ pub fn par_chunks_states<S: Send, T: Send>(
     assert!(!states.is_empty(), "need at least one worker state");
     let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_size).enumerate().collect();
     let nc = chunks.len();
-    if states.len() <= 1 || nc <= 1 {
+    let want = states.len().min(nc);
+    if want <= 1 {
         let st = &mut states[0];
         for (i, c) in chunks {
             f(st, i, c);
         }
         return;
     }
-    let per = nc.div_ceil(states.len());
+    let lease = CoreBudget::lease(want);
+    let threads = lease.threads().min(want);
+    if threads <= 1 {
+        let st = &mut states[0];
+        for (i, c) in chunks {
+            f(st, i, c);
+        }
+        return;
+    }
+    let per = nc.div_ceil(threads);
     std::thread::scope(|s| {
         let mut iter = chunks.into_iter();
-        for st in states.iter_mut() {
+        let first_batch: Vec<(usize, &mut [T])> = iter.by_ref().take(per).collect();
+        let (st0, rest) = states.split_first_mut().expect("non-empty states");
+        for st in rest.iter_mut() {
             let batch: Vec<(usize, &mut [T])> = iter.by_ref().take(per).collect();
             if batch.is_empty() {
                 break;
             }
             let f = &f;
             s.spawn(move || {
-                for (i, c) in batch {
-                    f(st, i, c);
-                }
+                counted_lane(|| {
+                    for (i, c) in batch {
+                        f(st, i, c);
+                    }
+                })
             });
+        }
+        for (i, c) in first_batch {
+            f(st0, i, c);
         }
     });
 }
 
 /// Process disjoint mutable chunks of a slice in parallel:
-/// `f(chunk_index, chunk)`.
+/// `f(chunk_index, chunk)`. First batch on the calling thread, spawned
+/// workers on leased [`CoreBudget`] lanes.
 pub fn par_chunks_mut<T: Send>(data: &mut [T], chunk_size: usize, f: impl Fn(usize, &mut [T]) + Sync) {
     assert!(chunk_size > 0);
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_size).enumerate().collect();
+    let nc = chunks.len();
+    let want = num_threads().min(nc.max(1));
+    if want <= 1 || nc <= 1 {
+        for (i, c) in chunks {
+            f(i, c);
+        }
+        return;
+    }
+    let lease = CoreBudget::lease(want);
+    let threads = lease.threads().min(nc);
+    let per = nc.div_ceil(threads);
     std::thread::scope(|s| {
-        let threads = num_threads();
-        let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_size).enumerate().collect();
-        let n = chunks.len();
-        let per_thread = n.div_ceil(threads.max(1));
         let mut iter = chunks.into_iter();
-        for _ in 0..threads {
-            let batch: Vec<(usize, &mut [T])> = iter.by_ref().take(per_thread).collect();
+        let first_batch: Vec<(usize, &mut [T])> = iter.by_ref().take(per).collect();
+        loop {
+            let batch: Vec<(usize, &mut [T])> = iter.by_ref().take(per).collect();
             if batch.is_empty() {
                 break;
             }
             let f = &f;
             s.spawn(move || {
-                for (i, c) in batch {
-                    f(i, c);
-                }
+                counted_lane(|| {
+                    for (i, c) in batch {
+                        f(i, c);
+                    }
+                })
             });
+        }
+        for (i, c) in first_batch {
+            f(i, c);
         }
     });
 }
@@ -151,6 +376,15 @@ pub fn par_chunks_mut<T: Send>(data: &mut [T], chunk_size: usize, f: impl Fn(usi
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    /// Serializes tests that toggle the process-global thread override
+    /// or budget total (mirrors `simd::TEST_OVERRIDE_LOCK`).
+    static PAR_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        PAR_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
 
     #[test]
     fn par_for_covers_all() {
@@ -227,5 +461,79 @@ mod tests {
             }
         });
         assert_eq!(data, vec![1, 1, 1, 2, 2, 2, 3]);
+    }
+
+    #[test]
+    fn thread_override_pins_and_restores() {
+        let _g = lock();
+        set_thread_override(Some(3));
+        assert_eq!(num_threads(), 3);
+        set_thread_override(Some(1));
+        assert_eq!(num_threads(), 1);
+        set_thread_override(None);
+        assert!(num_threads() >= 1, "cached env/detection value");
+    }
+
+    // NOTE: `BUDGET_LEASED`/`BUDGET_PEAK` are process-wide and other
+    // tests in this binary lease lanes concurrently (every par helper
+    // does) without taking PAR_TEST_LOCK, so these tests only assert
+    // properties that hold under arbitrary concurrent leasing: per-lease
+    // bounds and the caller's own observed concurrency. Exact global
+    // snapshot assertions live in the `threads` integration binary,
+    // where every test shares one lock.
+    #[test]
+    fn budget_lease_grants_within_total() {
+        let _g = lock();
+        CoreBudget::set_total(Some(3));
+        {
+            let l = CoreBudget::lease(8);
+            let n = l.threads();
+            assert!((1..=3).contains(&n), "grant {n} capped by total 3");
+            // nested lease(1) on the same (already counted) thread is
+            // deterministic: the lane is not re-counted and no extra
+            // lane is requested
+            let inner = CoreBudget::lease(1);
+            assert_eq!(inner.threads(), 1);
+            drop(inner);
+        }
+        let (_, _, peak) = CoreBudget::snapshot();
+        assert!(peak >= 1);
+        CoreBudget::set_total(None);
+    }
+
+    #[test]
+    fn budget_never_starves_the_caller() {
+        let _g = lock();
+        CoreBudget::set_total(Some(1));
+        let outer = CoreBudget::lease(1);
+        assert_eq!(outer.threads(), 1);
+        // a second top-level thread would still get its own lane (the
+        // thread runs regardless); simulate via a fresh thread
+        let t = std::thread::spawn(|| CoreBudget::lease(4).threads());
+        assert_eq!(t.join().unwrap(), 1, "over-budget caller runs serial");
+        drop(outer);
+        CoreBudget::set_total(None);
+    }
+
+    #[test]
+    fn par_helpers_respect_budget_total() {
+        let _g = lock();
+        CoreBudget::set_total(Some(2));
+        // measure this call's own concurrency (a global peak assertion
+        // would race against other tests' leases)
+        let live = AtomicUsize::new(0);
+        let high = AtomicUsize::new(0);
+        let count = AtomicUsize::new(0);
+        par_for(64, |_| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            high.fetch_max(now, Ordering::SeqCst);
+            std::thread::yield_now();
+            count.fetch_add(1, Ordering::SeqCst);
+            live.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 64);
+        let high = high.load(Ordering::SeqCst);
+        assert!(high <= 2, "par_for ran {high} threads under a budget of 2");
+        CoreBudget::set_total(None);
     }
 }

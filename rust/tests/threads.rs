@@ -1,0 +1,330 @@
+//! Thread-count invariance property tests (cross-layer).
+//!
+//! The threaded GEMM macro-kernel partitions C by rows; every worker
+//! runs the same per-element k-ascending accumulation the serial kernel
+//! runs, so outputs must be **bit-identical** for any `SFC_THREADS`
+//! (float: 0 ULP; int8: exact integers) on every dispatch arm. These
+//! tests pin that contract from the raw GEMM entry points up through
+//! conv plans, the quantized executor, a whole-model forward and a
+//! `MultiServer` batch under a constrained `CoreBudget`.
+//!
+//! The thread/kernel/budget overrides are process-global, so every test
+//! here serializes behind one lock (mirrors `tests/simd.rs`).
+
+use sfc::coordinator::metrics;
+use sfc::coordinator::sched::{MultiServer, Response, SchedConfig};
+use sfc::engine::{default_selector, ConvDesc, QuantSpec, Workspace};
+use sfc::linalg::gemm::{
+    self, gemm_nt_f32, gemm_nt_i8_i32, gemm_packed_f32, gemm_packed_i8_i32, pack_b_f32,
+    pack_b_i8, packed_b_f32_len, packed_b_i8_len,
+};
+use sfc::linalg::simd::{self, Kernel};
+use sfc::nn::Tensor;
+use sfc::quant::qconv::{collect_act_maxima, QCalib, QConvLayer};
+use sfc::util::par::{self, CoreBudget};
+use sfc::util::Pcg32;
+use std::sync::Mutex;
+
+/// Serializes tests that toggle the process-wide thread / kernel /
+/// budget overrides.
+static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The thread counts the suite sweeps: serial, even split, and a prime
+/// count that never divides the row counts (remainder partitions).
+const THREADS: [usize; 3] = [1, 2, 7];
+
+fn with_threads<T>(t: usize, f: impl FnOnce() -> T) -> T {
+    par::set_thread_override(Some(t));
+    let r = f();
+    par::set_thread_override(None);
+    r
+}
+
+fn with_kernel<T>(k: Option<Kernel>, f: impl FnOnce() -> T) -> T {
+    simd::set_kernel_override(k);
+    let r = f();
+    simd::set_kernel_override(None);
+    r
+}
+
+fn rand_tensor(dims: &[usize], rng: &mut Pcg32, sigma: f64) -> Tensor {
+    let mut t = Tensor::zeros(dims);
+    rng.fill_gaussian(&mut t.data, sigma);
+    t
+}
+
+fn rand_f32(n: usize, rng: &mut Pcg32) -> Vec<f32> {
+    let mut v = vec![0f32; n];
+    rng.fill_gaussian(&mut v, 1.0);
+    v
+}
+
+fn rand_i8(n: usize, rng: &mut Pcg32) -> Vec<i8> {
+    (0..n).map(|_| (rng.next_u32() & 0xff) as u8 as i8).collect()
+}
+
+/// Raw GEMM entries: every (thread count × dispatch arm) combination
+/// must reproduce the serial scalar result to the bit. The shape list
+/// mixes remainder-heavy sizes (m,n,k not multiples of MR/NR/panel
+/// width, k odd and k = 1 for the int8 pair tail) with one shape above
+/// `PAR_MIN_MACS` so the row-parallel path actually runs.
+#[test]
+fn gemm_entries_bit_identical_across_thread_counts_and_arms() {
+    let _g = lock();
+    let mut rng = Pcg32::seeded(0x7E57);
+    let big = (64usize, 256usize, 130usize);
+    assert!(
+        (big.0 * big.1 * big.2) as u64 >= gemm::PAR_MIN_MACS,
+        "the big shape must clear the threading gate"
+    );
+    for (m, n, k) in [(5usize, 7usize, 9usize), (13, 6, 1), (33, 17, 23), big] {
+        let a = rand_f32(m * k, &mut rng);
+        let b = rand_f32(n * k, &mut rng);
+        let mut bp = vec![0f32; packed_b_f32_len(n, k)];
+        pack_b_f32(n, k, &b, &mut bp);
+        let ai = rand_i8(m * k, &mut rng);
+        let bi = rand_i8(n * k, &mut rng);
+        let mut bpi = vec![0i8; packed_b_i8_len(n, k)];
+        pack_b_i8(n, k, &bi, &mut bpi);
+
+        // reference: one thread, scalar kernels
+        let (rf, rpf, ri, rpi) = with_threads(1, || {
+            with_kernel(Some(Kernel::Scalar), || {
+                let mut c = vec![0f32; m * n];
+                gemm_nt_f32(m, n, k, &a, &b, &mut c);
+                let mut cp = vec![0f32; m * n];
+                gemm_packed_f32(m, n, k, &a, &bp, &mut cp);
+                let mut ci = vec![0i32; m * n];
+                gemm_nt_i8_i32(m, n, k, &ai, &bi, &mut ci);
+                let mut cpi = vec![0i32; m * n];
+                gemm_packed_i8_i32(m, n, k, &ai, &bpi, &mut cpi);
+                (c, cp, ci, cpi)
+            })
+        });
+        assert_eq!(rf, rpf, "({m},{n},{k}): packed f32 vs nt f32 reference");
+
+        for t in THREADS {
+            for arm in [None, Some(Kernel::Scalar)] {
+                let (c, cp, ci, cpi) = with_threads(t, || {
+                    with_kernel(arm, || {
+                        let mut c = vec![0f32; m * n];
+                        gemm_nt_f32(m, n, k, &a, &b, &mut c);
+                        let mut cp = vec![0f32; m * n];
+                        gemm_packed_f32(m, n, k, &a, &bp, &mut cp);
+                        let mut ci = vec![0i32; m * n];
+                        gemm_nt_i8_i32(m, n, k, &ai, &bi, &mut ci);
+                        let mut cpi = vec![0i32; m * n];
+                        gemm_packed_i8_i32(m, n, k, &ai, &bpi, &mut cpi);
+                        (c, cp, ci, cpi)
+                    })
+                });
+                let tag = format!("({m},{n},{k}) threads={t} arm={arm:?}");
+                assert_eq!(c, rf, "{tag}: nt f32");
+                assert_eq!(cp, rpf, "{tag}: packed f32");
+                assert_eq!(ci, ri, "{tag}: nt i8");
+                assert_eq!(cpi, rpi, "{tag}: packed i8");
+            }
+        }
+    }
+}
+
+/// Blocking overrides compose with threading: sweeping the Mc/Kc/Nc
+/// candidates under 7 threads still reproduces the default-blocking
+/// serial result bit-for-bit (kc splits continue the same add chain).
+#[test]
+fn blocking_candidates_bit_identical_under_threads() {
+    let _g = lock();
+    let mut rng = Pcg32::seeded(0x7E58);
+    let (m, n, k) = (65usize, 34usize, 77usize);
+    let a = rand_f32(m * k, &mut rng);
+    let b = rand_f32(n * k, &mut rng);
+    let mut bp = vec![0f32; packed_b_f32_len(n, k)];
+    pack_b_f32(n, k, &b, &mut bp);
+    let want = with_threads(1, || {
+        let mut c = vec![0f32; m * n];
+        gemm_packed_f32(m, n, k, &a, &bp, &mut c);
+        c
+    });
+    for blk in gemm::Blocking::candidates() {
+        gemm::set_blocking_override(Some(blk));
+        let got = with_threads(7, || {
+            let mut c = vec![0f32; m * n];
+            gemm_packed_f32(m, n, k, &a, &bp, &mut c);
+            c
+        });
+        gemm::set_blocking_override(None);
+        assert_eq!(got, want, "blocking {blk:?} under 7 threads drifted");
+    }
+}
+
+/// Conv plans (im2col, Winograd, SFC — the GEMM-backed engines) on
+/// remainder-heavy shapes plus one shape big enough to thread its
+/// GEMM: bitwise identical across thread counts on both dispatch arms.
+#[test]
+fn conv_plans_bit_identical_across_thread_counts() {
+    let _g = lock();
+    let sel = default_selector();
+    let mut rng = Pcg32::seeded(0x7E59);
+    // (batch, ic, oc, groups, h, w): odd channels/sizes exercise panel
+    // and tile remainders; the last shape's im2col GEMM (32×784×288 ≈
+    // 7.2 MMACs) clears the threading gate.
+    for (batch, ic, oc, groups, h, w) in
+        [(2usize, 3usize, 5usize, 1usize, 11, 13), (1, 6, 9, 3, 9, 7), (1, 32, 32, 1, 28, 28)]
+    {
+        let d = ConvDesc::new(batch, ic, oc, h, w, 3, 1, 1).with_groups(groups);
+        let x = rand_tensor(&[batch, ic, h, w], &mut rng, 1.0);
+        let wt = rand_tensor(&[oc, ic / groups, 3, 3], &mut rng, 0.3);
+        let bias: Vec<f32> = (0..oc).map(|i| i as f32 * 0.05 - 0.1).collect();
+        for name in ["im2col-gemm", "SFC-6(6x6,3x3)", "Wino(4x4,3x3)"] {
+            let plan = sel.plan_named(name, &d).unwrap();
+            let want = with_threads(1, || {
+                with_kernel(Some(Kernel::Scalar), || plan.run(&x, &wt, &bias))
+            });
+            for t in THREADS {
+                for arm in [None, Some(Kernel::Scalar)] {
+                    let got =
+                        with_threads(t, || with_kernel(arm, || plan.run(&x, &wt, &bias)));
+                    assert_eq!(
+                        got.data, want.data,
+                        "{name} {h}x{w} g{groups} threads={t} arm={arm:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The int8 transform-domain executor: exact integer GEMM cores, so the
+/// outputs are identical (not merely close) for any thread count × arm.
+#[test]
+fn int8_qconv_bit_identical_across_thread_counts() {
+    let _g = lock();
+    let sel = default_selector();
+    let mut rng = Pcg32::seeded(0x7E5A);
+    for (ic, oc, groups) in [(3usize, 5usize, 1usize), (6, 4, 2)] {
+        let d = ConvDesc::new(1, ic, oc, 13, 11, 3, 1, 1)
+            .with_groups(groups)
+            .with_quant(QuantSpec::transform_default(8));
+        let x = rand_tensor(&[1, ic, 13, 11], &mut rng, 1.0);
+        let wt = rand_tensor(&[oc, ic / groups, 3, 3], &mut rng, 0.3);
+        let plan = sel.plan_named("SFC-6(6x6,3x3)", &d).unwrap();
+        let maxima = collect_act_maxima(&x, plan.fast_plan().unwrap(), 1);
+        let q = QConvLayer::from_plan(plan, &wt, vec![0.1; oc], &QCalib::TransformMaxima(&maxima));
+        let want = with_threads(1, || with_kernel(Some(Kernel::Scalar), || q.forward(&x)));
+        for t in THREADS {
+            for arm in [None, Some(Kernel::Scalar)] {
+                let got = with_threads(t, || with_kernel(arm, || q.forward(&x)));
+                assert_eq!(got.data, want.data, "int8 g{groups} threads={t} arm={arm:?}");
+            }
+        }
+    }
+}
+
+/// Whole-model `forward_ws` (pre-packed weights, compiled-style
+/// datapath): 1 vs 7 threads, both dispatch arms, bit-identical.
+#[test]
+fn whole_model_forward_thread_invariant() {
+    let _g = lock();
+    use sfc::nn::model::{mobilenet_cfg, mobilenet_random};
+    let mut m = mobilenet_random(&mobilenet_cfg(), 21, 10);
+    m.prepack_weights();
+    let mut rng = Pcg32::seeded(23);
+    let x = rand_tensor(&[2, 3, 32, 32], &mut rng, 1.0);
+    let want = with_threads(1, || {
+        with_kernel(Some(Kernel::Scalar), || {
+            let mut ws = Workspace::new();
+            m.forward_ws(&x, &mut ws)
+        })
+    });
+    for t in [1usize, 7] {
+        for arm in [None, Some(Kernel::Scalar)] {
+            let got = with_threads(t, || {
+                with_kernel(arm, || {
+                    let mut ws = Workspace::new();
+                    m.forward_ws(&x, &mut ws)
+                })
+            });
+            assert_eq!(got.data, want.data, "forward_ws threads={t} arm={arm:?}");
+        }
+    }
+}
+
+/// Exact CoreBudget accounting: under the suite lock nothing else
+/// leases concurrently (GEMM teams are scoped and joined), so leased
+/// counts are deterministic relative to the starting level.
+#[test]
+fn core_budget_exact_accounting() {
+    let _g = lock();
+    let (_, before, _) = CoreBudget::snapshot();
+    CoreBudget::set_total(Some(before + 3));
+    {
+        let l = CoreBudget::lease(8);
+        assert_eq!(l.threads(), 3, "grant capped by the remaining headroom");
+        let (_, leased, peak) = CoreBudget::snapshot();
+        assert_eq!(leased, before + 3);
+        assert!(peak >= before + 3);
+        // nested lease on the counted thread: no headroom, no re-count
+        let inner = CoreBudget::lease(4);
+        assert_eq!(inner.threads(), 1, "exhausted budget degrades to serial");
+        drop(inner);
+    }
+    let (_, leased, _) = CoreBudget::snapshot();
+    assert_eq!(leased, before, "lanes returned on drop");
+    CoreBudget::set_total(None);
+}
+
+/// `MultiServer` with 2 resident models and intra-op threading enabled
+/// under `CoreBudget::set_total(2)`: each worker holds one lane for its
+/// lifetime and the GEMM teams may only lease the remainder, so the
+/// peak concurrent-lane count never exceeds the budget — observable
+/// through `metrics::core_budget()` (the acceptance metric).
+#[test]
+fn multiserver_stays_within_core_budget() {
+    let _g = lock();
+    let (_, before, _) = CoreBudget::snapshot();
+    let total = before + 2;
+    CoreBudget::set_total(Some(total));
+    let server = MultiServer::new(SchedConfig {
+        queue_depth: 16,
+        default_deadline_ms: 60_000,
+        linger_ms: 1,
+        packed_budget_bytes: 0,
+    });
+    for name in ["a", "b"] {
+        server
+            .add_model(name, move || {
+                use sfc::nn::model::{mobilenet_cfg, mobilenet_random};
+                let m = mobilenet_random(&mobilenet_cfg(), 31, 10);
+                Ok(sfc::runtime::EngineExecutor::from_model(m, vec![2, 3, 32, 32], 10))
+            })
+            .unwrap();
+    }
+    CoreBudget::reset_peak();
+    let mut rng = Pcg32::seeded(0x7E5B);
+    let mut handles = Vec::new();
+    for i in 0..8 {
+        let mut img = vec![0f32; 3 * 32 * 32];
+        rng.fill_gaussian(&mut img, 1.0);
+        let name = if i % 2 == 0 { "a" } else { "b" };
+        handles.push(server.submit_blocking(name, img).unwrap());
+    }
+    for h in handles {
+        match h.wait().unwrap() {
+            Response::Done(_) => {}
+            other => panic!("request did not complete: {other:?}"),
+        }
+    }
+    let (t, leased, peak) = metrics::core_budget();
+    assert_eq!(t, total);
+    assert!(
+        leased >= before + 2,
+        "both resident workers hold their lifetime lanes ({leased})"
+    );
+    assert!(peak <= total, "peak {peak} lanes exceeded the budget of {total}");
+    server.shutdown();
+    CoreBudget::set_total(None);
+}
