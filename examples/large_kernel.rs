@@ -1,13 +1,33 @@
-//! Appendix B: iterative SFC convolution for large kernels (7×7…51×51).
+//! Large-kernel convolution, two ways.
+//!
+//! Part 1 (Appendix B): iterative SFC convolution for very large
+//! kernels (13×13…37×37) — multiplication counts vs direct, with the
+//! transform stage kept addition-only.
+//!
+//! Part 2: the overlap-save tiled frequency-domain engine. On a
+//! 192×192 image with an 11×11 kernel the whole-image FFT/NTT engines
+//! decline (their kernel planes would blow the workspace cap), the
+//! selector picks the tiled engine, and the steady-state datapath runs
+//! through a reused [`Workspace`] without a single heap allocation.
+//! This example is run by CI (`tiling-sweep`) and asserts all three.
 //!
 //!     cargo run --release --example large_kernel
 
 use sfc::algo::iterative::{iterative_conv2d, iterative_cost};
 use sfc::algo::{direct_conv2d, sfc};
+use sfc::engine::{default_selector, ConvDesc, Workspace};
 use sfc::linalg::Mat;
+use sfc::nn::conv::conv2d_direct;
+use sfc::nn::Tensor;
 use sfc::util::{Pcg32, Timer};
 
-fn main() {
+fn rel_mse(got: &Tensor, want: &Tensor) -> f64 {
+    let denom =
+        want.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / want.len().max(1) as f64;
+    got.mse(want) / denom.max(1e-30)
+}
+
+fn iterative_sfc_section() {
     let inner = sfc(6, 6, 5);
     let outer = sfc(6, 5, 6);
     println!("inner algorithm: {} ({} mults 2-D)", inner.name, inner.mults_2d_hermitian());
@@ -22,17 +42,14 @@ fn main() {
         let feat = r_big + 11; // map a bit larger than the kernel
         let c = iterative_cost(r_big, feat - r_big + 1, &inner, &outer);
         let x = Mat::from_vec(feat, feat, (0..feat * feat).map(|_| rng.next_gaussian()).collect());
-        let k = Mat::from_vec(r_big, r_big, (0..r_big * r_big).map(|_| rng.next_gaussian()).collect());
+        let k =
+            Mat::from_vec(r_big, r_big, (0..r_big * r_big).map(|_| rng.next_gaussian()).collect());
         let t = Timer::start();
         let got = iterative_conv2d(&x, &k, &inner);
         let _ms = t.elapsed_ms();
         let want = direct_conv2d(&x, &k);
-        let err = got
-            .data
-            .iter()
-            .zip(&want.data)
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0f64, f64::max);
+        let err =
+            got.data.iter().zip(&want.data).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
         println!(
             "{:>5}×{:<2} {:>12} {:>12} {:>11.1}× {:>9.1e}",
             r_big,
@@ -43,6 +60,53 @@ fn main() {
             err
         );
     }
-    println!("\npaper (29×29): 17,424 mults quoted (3.1% of direct); our exact accounting: 33,856 (6.0%).");
-    println!("Either way the transform stage stays addition-only — the property FFT lacks (App. B).");
+    println!(
+        "\npaper (29×29): 17,424 mults quoted (3.1% of direct); our exact accounting: 33,856 (6.0%)."
+    );
+    println!(
+        "Either way the transform stage stays addition-only — the property FFT lacks (App. B).\n"
+    );
+}
+
+fn tiled_engine_section() {
+    // 192×192, 8→8 channels, 11×11 kernel, same-padded. The padded
+    // image rounds to 256², so whole-image FFT/NTT kernel planes would
+    // be 8·8·256² elements — over the workspace cap; both decline.
+    let d = ConvDesc::new(1, 8, 8, 192, 192, 11, 1, 5);
+    let sel = default_selector();
+    assert!(sel.plan_named("FFT", &d).is_err(), "whole-image FFT must decline this image");
+    assert!(sel.plan_named("NTT", &d).is_err(), "whole-image NTT must decline this image");
+    let plan = sel.plan(&d).expect("the selector must still find an engine");
+    println!("selected engine for 192×192 r11: {}", plan.engine);
+    assert_eq!(plan.engine, "FFT-tiled", "the tiled engine must win the large-kernel image");
+    println!(
+        "tiled workspace bound: {:.1} MiB (kernel-derived, image-independent)",
+        plan.workspace_bytes() as f64 / (1024.0 * 1024.0)
+    );
+
+    let mut rng = Pcg32::seeded(0x11AE);
+    let mut x = Tensor::zeros(&[1, 8, 192, 192]);
+    rng.fill_gaussian(&mut x.data, 1.0);
+    let mut w = Tensor::zeros(&[8, 8, 11, 11]);
+    rng.fill_gaussian(&mut w.data, 0.1);
+    let want = conv2d_direct(&x, &w, &[], 1, 5);
+
+    let mut ws = Workspace::new();
+    let mut out = Tensor::zeros(&plan.out_dims(&x, &w));
+    plan.run_into(&x, &w, &[], &mut ws, &mut out); // warmup sizes the arena
+    let warm = ws.heap_allocs();
+    let t = Timer::start();
+    plan.run_into(&x, &w, &[], &mut ws, &mut out);
+    let ms = t.elapsed_ms();
+    let steady_allocs = ws.heap_allocs() - warm;
+    let err = rel_mse(&out, &want);
+    println!("steady-state run: {ms:.1} ms, rel mse vs direct {err:.2e}, {steady_allocs} allocs");
+    assert!(err < 1e-10, "tiled FFT must match direct: rel mse {err}");
+    assert_eq!(steady_allocs, 0, "steady state must not touch the heap");
+    println!("ok: tiled engine selected, exact vs direct, zero steady-state allocations");
+}
+
+fn main() {
+    iterative_sfc_section();
+    tiled_engine_section();
 }

@@ -54,7 +54,27 @@ pub fn direct_bops_grouped(
     a_bits: u64,
     w_bits: u64,
 ) -> BopsBreakdown {
-    let macs = shape.direct_macs() / groups.max(1);
+    direct_bops_grouped_dilated(shape, groups, 1, a_bits, w_bits)
+}
+
+/// Grouped-direct BOPs with dilation. The tap count per output stays
+/// `r²` — dilation spreads the taps without adding any — but the
+/// effective kernel reach `(r−1)·(dilation−1)` shrinks the output plane
+/// under same-padding bookkeeping, so total MACs drop slightly.
+/// Reduces exactly to [`direct_bops_grouped`] at `dilation == 1`.
+pub fn direct_bops_grouped_dilated(
+    shape: &ConvShape,
+    groups: u64,
+    dilation: u64,
+    a_bits: u64,
+    w_bits: u64,
+) -> BopsBreakdown {
+    let stride = (shape.stride as u64).max(1);
+    let reach = (shape.r as u64).saturating_sub(1) * dilation.max(1).saturating_sub(1);
+    let oh = (shape.h as u64).saturating_sub(reach) / stride;
+    let ow = (shape.w as u64).saturating_sub(reach) / stride;
+    let macs =
+        oh * ow * shape.oc as u64 * shape.ic as u64 * (shape.r * shape.r) as u64 / groups.max(1);
     let mbits = a_bits.max(w_bits);
     BopsBreakdown {
         transform_in: 0,
@@ -196,6 +216,18 @@ mod tests {
         assert_eq!(f_dense.transform_in, f_dw.transform_in, "transforms touch every channel");
         assert_eq!(f_dense.transform_out, f_dw.transform_out);
         assert_eq!(f_dense.multiply, f_dw.multiply * s.ic as u64, "⊙ shrinks by groups");
+    }
+
+    #[test]
+    fn dilated_bops_reduce_to_grouped_at_dilation_one() {
+        let s = shape();
+        let undilated = direct_bops_grouped(&s, 4, 8, 8);
+        let d1 = direct_bops_grouped_dilated(&s, 4, 1, 8, 8);
+        assert_eq!(undilated.total(), d1.total(), "dilation 1 is the historical model");
+        // dilation shrinks the output plane, never grows the tap count
+        let d2 = direct_bops_grouped_dilated(&s, 4, 2, 8, 8);
+        assert!(d2.total() < d1.total(), "d2 {} < d1 {}", d2.total(), d1.total());
+        assert!(d2.total() > 0);
     }
 
     #[test]

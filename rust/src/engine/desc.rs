@@ -13,7 +13,6 @@
 
 use crate::nn::model::ConvShape;
 use crate::quant::Granularity;
-use anyhow::{bail, Result};
 
 /// A fused output epilogue applied inside the executors' scatter/output
 /// loops (the graph compiler's conv+bias+ReLU fusion), instead of as a
@@ -139,11 +138,14 @@ pub struct ConvDesc {
     /// channel groups: 1 = dense, `ic` = depthwise; must divide `ic`
     /// and `oc`
     pub groups: usize,
-    /// kernel dilation — **reserved**: carried in the descriptor (and
-    /// its hash) so dilated support can land without a key migration,
-    /// but every engine currently requires `dilation == 1`
-    /// ([`ConvDesc::ensure_undilated`] is the contextful gate every
-    /// engine's `plan` runs)
+    /// kernel dilation: tap `k` of the kernel reads input offset
+    /// `k * dilation`, so the receptive field grows to
+    /// [`ConvDesc::effective_r`] without adding weights. Direct and
+    /// im2col execute any dilation (dense/grouped/depthwise); transform
+    /// engines decline `dilation != 1` via `supports()` (the bilinear /
+    /// frequency-domain tile algebra assumes contiguous taps). Part of
+    /// the hash, so dilated and undilated plans never collide in the
+    /// cache.
     pub dilation: usize,
     /// fused output epilogue applied at output-write time (set by the
     /// graph compiler's conv+ReLU fusion pass; every engine supports it)
@@ -191,14 +193,18 @@ impl ConvDesc {
     }
 
     /// Panic unless the descriptor is internally consistent (divisible
-    /// groups, kernel within the padded input, reserved dilation).
+    /// groups, effective kernel within the padded input, dilation ≥ 1).
     fn validate(&self) {
         assert!(self.stride >= 1, "stride must be >= 1");
         assert!(self.r >= 1, "kernel must be >= 1");
+        assert!(self.dilation >= 1, "dilation must be >= 1");
+        let er = self.effective_r();
         assert!(
-            self.h + 2 * self.pad >= self.r && self.w + 2 * self.pad >= self.r,
-            "kernel {} exceeds padded input {}x{} (pad {})",
+            self.h + 2 * self.pad >= er && self.w + 2 * self.pad >= er,
+            "effective kernel {} ({}x d{}) exceeds padded input {}x{} (pad {})",
+            er,
             self.r,
+            self.dilation,
             self.h,
             self.w,
             self.pad
@@ -211,24 +217,14 @@ impl ConvDesc {
             self.ic,
             self.oc
         );
-        assert_eq!(self.dilation, 1, "dilation is reserved; engines require dilation == 1");
     }
 
-    /// Contextful gate for the reserved `dilation` field: the fields
-    /// are public, so a descriptor mutated after construction can carry
-    /// `dilation != 1` into an engine — every engine's `plan` calls
-    /// this and reports the offending field by name instead of
-    /// silently accepting (and then ignoring) the dilation.
-    pub fn ensure_undilated(&self) -> Result<()> {
-        if self.dilation != 1 {
-            bail!(
-                "ConvDesc::dilation = {} is unsupported: the field is reserved and every \
-                 engine requires dilation == 1 (descriptor {:?})",
-                self.dilation,
-                self
-            );
-        }
-        Ok(())
+    /// Receptive-field extent of the dilated kernel along one axis:
+    /// `(r − 1) · dilation + 1`. Equals `r` at dilation 1; every output
+    /// arithmetic formula (`out_hw`, padding fit, halo sizing) uses
+    /// this, not the raw tap count.
+    pub fn effective_r(&self) -> usize {
+        (self.r - 1) * self.dilation + 1
     }
 
     /// Same problem with a quantization scheme attached.
@@ -253,16 +249,26 @@ impl ConvDesc {
         self
     }
 
+    /// Same problem with a kernel dilation. Panics if the dilated
+    /// receptive field no longer fits the padded input.
+    pub fn with_dilation(mut self, dilation: usize) -> ConvDesc {
+        self.dilation = dilation;
+        self.validate();
+        self
+    }
+
     /// Per-group channel counts `(ic/groups, oc/groups)` — the GEMM
     /// block shape of grouped execution.
     pub fn group_channels(&self) -> (usize, usize) {
         (self.ic / self.groups, self.oc / self.groups)
     }
 
-    /// Output spatial size.
+    /// Output spatial size (standard conv arithmetic over the
+    /// *effective* — i.e. dilated — kernel extent).
     pub fn out_hw(&self) -> (usize, usize) {
-        let oh = (self.h + 2 * self.pad - self.r) / self.stride + 1;
-        let ow = (self.w + 2 * self.pad - self.r) / self.stride + 1;
+        let er = self.effective_r();
+        let oh = (self.h + 2 * self.pad - er) / self.stride + 1;
+        let ow = (self.w + 2 * self.pad - er) / self.stride + 1;
         (oh, ow)
     }
 
@@ -303,11 +309,11 @@ impl ConvDesc {
 }
 
 /// Fluent construction for [`ConvDesc`] — the growth path for new
-/// descriptor axes (`groups` today, `dilation` when it lands) without
-/// making [`ConvDesc::new`]'s positional argument list any worse.
+/// descriptor axes (`groups` and `dilation` today) without making
+/// [`ConvDesc::new`]'s positional argument list any worse.
 ///
 /// Defaults: batch 1, 3×3 kernel, stride 1, pad 0, dense (groups 1),
-/// float. The spatial size has no default — call
+/// dilation 1, float. The spatial size has no default — call
 /// [`ConvDescBuilder::hw`] (or [`ConvDescBuilder::hw2`]) before
 /// [`ConvDescBuilder::build`].
 ///
@@ -336,6 +342,7 @@ pub struct ConvDescBuilder {
     stride: usize,
     pad: usize,
     groups: usize,
+    dilation: usize,
     epilogue: Epilogue,
     quant: Option<QuantSpec>,
 }
@@ -354,6 +361,7 @@ impl ConvDescBuilder {
             stride: 1,
             pad: 0,
             groups: 1,
+            dilation: 1,
             epilogue: Epilogue::None,
             quant: None,
         }
@@ -401,6 +409,12 @@ impl ConvDescBuilder {
         self
     }
 
+    /// Kernel dilation (1 = ordinary dense taps).
+    pub fn dilation(mut self, dilation: usize) -> Self {
+        self.dilation = dilation;
+        self
+    }
+
     /// Attach a quantization scheme.
     pub fn quant(mut self, spec: QuantSpec) -> Self {
         self.quant = Some(spec);
@@ -428,7 +442,7 @@ impl ConvDescBuilder {
             stride: self.stride,
             pad: self.pad,
             groups: self.groups,
-            dilation: 1,
+            dilation: self.dilation,
             epilogue: self.epilogue,
             quant: self.quant,
         };
@@ -520,12 +534,37 @@ mod tests {
     }
 
     #[test]
-    fn mutated_dilation_is_a_contextful_error() {
-        let mut d = ConvDesc::new(1, 3, 16, 32, 32, 3, 1, 1);
-        assert!(d.ensure_undilated().is_ok());
-        d.dilation = 2;
-        let err = d.ensure_undilated().unwrap_err().to_string();
-        assert!(err.contains("ConvDesc::dilation = 2"), "{err}");
-        assert!(err.contains("dilation == 1"), "{err}");
+    fn dilation_drives_effective_r_and_out_hw() {
+        // 3×3 d2 spans 5 pixels: pad 2 keeps the "same"-conv size
+        let d = ConvDesc::new(1, 3, 16, 32, 32, 3, 1, 2).with_dilation(2);
+        assert_eq!(d.effective_r(), 5);
+        assert_eq!(d.out_hw(), (32, 32));
+        // d1 is plain conv arithmetic
+        assert_eq!(d.with_dilation(1).out_hw(), (34, 34));
+        // dilated + strided: (32 + 2·2 − 5)/2 + 1 = 16
+        let s2 = ConvDesc::builder(3, 16).hw(32).kernel(3).stride(2).pad(2).dilation(2).build();
+        assert_eq!(s2.out_hw(), (16, 16));
+        // 1×1 kernels are dilation-invariant
+        let p = ConvDesc::builder(3, 16).hw(32).kernel(1).dilation(4).build();
+        assert_eq!(p.effective_r(), 1);
+        assert_eq!(p.out_hw(), (32, 32));
+    }
+
+    #[test]
+    fn dilation_distinguishes_descriptors() {
+        let a = ConvDesc::new(1, 3, 16, 32, 32, 3, 1, 2);
+        let b = a.with_dilation(2);
+        assert_ne!(a, b, "dilation must participate in the cache key");
+        let mut m: HashMap<ConvDesc, u32> = HashMap::new();
+        m.insert(a, 1);
+        m.insert(b, 2);
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "effective kernel")]
+    fn oversized_dilation_panics() {
+        // 3×3 d8 spans 17 > 8 + 2·0
+        let _ = ConvDesc::new(1, 3, 16, 8, 8, 3, 1, 0).with_dilation(8);
     }
 }

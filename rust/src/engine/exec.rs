@@ -37,15 +37,40 @@ pub fn conv2d_im2col_into(
     ws: &mut Workspace,
     out: &mut Tensor,
 ) {
+    conv2d_im2col_dilated_into(x, w, bias, stride, pad, groups, 1, ep, ws, out);
+}
+
+/// im2col + GEMM convolution with kernel dilation: the lowering gathers
+/// tap `(ky, kx)` from input offset `(ky·dilation, kx·dilation)`; the
+/// GEMM reduction (and the `(IC/g)·R·R` lowered-row layout) is
+/// untouched, since dilation changes *where* taps read, not how many
+/// there are. At `dilation == 1` the gather arithmetic reduces to
+/// exactly the undilated lowering, so [`conv2d_im2col_into`] (which
+/// delegates here) stays bit-identical to its historical output.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_im2col_dilated_into(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    dilation: usize,
+    ep: Epilogue,
+    ws: &mut Workspace,
+    out: &mut Tensor,
+) {
     let (n, ic, h, wid) = x.dims4();
     let (oc, icg, r, r2) = w.dims4();
     assert!(groups >= 1 && oc % groups == 0, "groups {groups} must divide oc {oc}");
     assert_eq!(icg * groups, ic, "weight channels {icg}×{groups} groups vs input {ic}");
     assert_eq!(r, r2, "square kernels only");
     assert!(bias.is_empty() || bias.len() == oc);
+    assert!(dilation >= 1, "dilation must be >= 1");
     let ocg = oc / groups;
-    let oh = (h + 2 * pad - r) / stride + 1;
-    let ow = (wid + 2 * pad - r) / stride + 1;
+    let er = (r - 1) * dilation + 1;
+    let oh = (h + 2 * pad - er) / stride + 1;
+    let ow = (wid + 2 * pad - er) / stride + 1;
     out.assert_dims(&[n, oc, oh, ow]);
     let k = icg * r * r;
     let npix = oh * ow;
@@ -75,9 +100,9 @@ pub fn conv2d_im2col_into(
                         let p = oy * ow + ox;
                         let base = (p / PANEL) * k * PANEL + (il * r * r) * PANEL + p % PANEL;
                         for ky in 0..r {
-                            let yy = (oy * stride + ky) as isize - pad as isize;
+                            let yy = (oy * stride + ky * dilation) as isize - pad as isize;
                             for kx in 0..r {
-                                let xx = (ox * stride + kx) as isize - pad as isize;
+                                let xx = (ox * stride + kx * dilation) as isize - pad as isize;
                                 col[base + (ky * r + kx) * PANEL] = if yy >= 0
                                     && (yy as usize) < h
                                     && xx >= 0
@@ -128,9 +153,10 @@ pub fn conv2d_im2col(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, pad: u
 
 /// 2-D FFT over a row-major `sh`×`sw` complex grid (both powers of two).
 /// `cr`/`ci` are caller column scratch of `sh` elements each. The inverse
-/// pass does NOT normalize; callers divide by `sh·sw`.
+/// pass does NOT normalize; callers divide by `sh·sw`. Shared with the
+/// overlap-save tiled executor ([`super::tiled`]).
 #[allow(clippy::too_many_arguments)]
-fn fft2d(
+pub(crate) fn fft2d(
     re: &mut [f64],
     im: &mut [f64],
     sh: usize,
@@ -295,8 +321,9 @@ pub fn conv2d_fft(x: &Tensor, w: &Tensor, bias: &[f32], pad: usize) -> Tensor {
 /// 2-D NTT (row-column) over an `sh`×`sw` grid in F_p; `col` is caller
 /// column scratch of `sh` elements. The inverse pass of [`ntt_inplace`]
 /// normalizes per axis, so a full 2-D round trip is already scaled
-/// correctly.
-fn ntt2d(a: &mut [u64], sh: usize, sw: usize, inverse: bool, col: &mut [u64]) {
+/// correctly. Shared with the overlap-save tiled executor
+/// ([`super::tiled`]).
+pub(crate) fn ntt2d(a: &mut [u64], sh: usize, sw: usize, inverse: bool, col: &mut [u64]) {
     for y in 0..sh {
         ntt_inplace(&mut a[y * sw..(y + 1) * sw], inverse);
     }
@@ -311,13 +338,15 @@ fn ntt2d(a: &mut [u64], sh: usize, sw: usize, inverse: bool, col: &mut [u64]) {
     }
 }
 
+/// Lift a signed integer into F_p (canonical residue).
 #[inline]
-fn ntt_encode(v: i64) -> u64 {
+pub(crate) fn ntt_encode(v: i64) -> u64 {
     v.rem_euclid(P as i64) as u64
 }
 
+/// Map an F_p residue back to the signed integer of least magnitude.
 #[inline]
-fn ntt_decode(v: u64) -> i64 {
+pub(crate) fn ntt_decode(v: u64) -> i64 {
     if v > P / 2 {
         v as i64 - P as i64
     } else {

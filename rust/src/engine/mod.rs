@@ -22,6 +22,7 @@ pub mod cache;
 pub mod desc;
 pub mod exec;
 pub mod select;
+pub mod tiled;
 pub mod tuning;
 pub mod workspace;
 
@@ -33,10 +34,10 @@ pub use workspace::Workspace;
 
 use crate::algo::ntt::ntt_odot_bits;
 use crate::algo::registry::{catalog, AlgoKind, AlgoSpec};
-use crate::bops::{direct_bops_grouped, fast_bops_grouped, mul_bops};
+use crate::bops::{direct_bops_grouped_dilated, fast_bops_grouped, mul_bops};
 use crate::linalg::gemm::{packed_b_f32_len, PANEL};
 use crate::nn::conv::{
-    conv2d_direct_grouped_into, conv2d_fast_into, conv2d_fast_packed_into, pack_fast_weights,
+    conv2d_direct_dilated_into, conv2d_fast_into, conv2d_fast_packed_into, pack_fast_weights,
     FastConvPlan, TILE_LANES,
 };
 use crate::nn::tensor::Tensor;
@@ -46,11 +47,12 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
 
 /// How a plan executes. The variants map 1:1 onto the executor kernels;
-/// `Fast` carries the shared transform matrices (Winograd/SFC).
+/// `Fast` carries the shared transform matrices (Winograd/SFC), the
+/// tiled frequency-domain variants carry their transform length.
 pub enum PlanKernel {
-    /// nested-loop spatial convolution (grouped included)
+    /// nested-loop spatial convolution (grouped and dilated included)
     Direct,
-    /// per-group im2col lowering + blocked GEMM
+    /// per-group im2col lowering + blocked GEMM (dilated included)
     Im2col,
     /// tiled bilinear fast convolution (Winograd/SFC), with the shared
     /// transform matrices
@@ -59,6 +61,19 @@ pub enum PlanKernel {
     Fft,
     /// whole-image exact int8 NTT convolution (dense only)
     Ntt,
+    /// overlap-save tiled float FFT convolution (dense only) at the
+    /// carried transform length — workspace is `O(OC·IC·tile²)`,
+    /// independent of the image size
+    FftTiled {
+        /// per-axis transform length (power of two ≥ R)
+        tile: usize,
+    },
+    /// overlap-save tiled exact int8 NTT convolution (dense only) at
+    /// the carried transform length; bit-identical to [`PlanKernel::Ntt`]
+    NttTiled {
+        /// per-axis transform length (power of two ≥ R)
+        tile: usize,
+    },
 }
 
 /// A ready-to-run convolution plan: the descriptor it was planned for,
@@ -287,13 +302,17 @@ impl ConvPlan {
     pub fn out_dims(&self, x: &Tensor, w: &Tensor) -> Vec<usize> {
         let (n, _, h, wid) = x.dims4();
         let (oc, _, r, _) = w.dims4();
-        let (stride, pad) = match self.kernel {
-            // whole-image / tiled kernels are stride-1 by construction
-            PlanKernel::Direct | PlanKernel::Im2col => (self.desc.stride, self.desc.pad),
-            _ => (1, self.desc.pad),
+        let (stride, pad, dilation) = match self.kernel {
+            // frequency-domain kernels (whole-image and tiled) are
+            // stride-1, undilated by construction
+            PlanKernel::Direct | PlanKernel::Im2col => {
+                (self.desc.stride, self.desc.pad, self.desc.dilation)
+            }
+            _ => (1, self.desc.pad, 1),
         };
-        let oh = (h + 2 * pad - r) / stride + 1;
-        let ow = (wid + 2 * pad - r) / stride + 1;
+        let er = (r - 1) * dilation + 1;
+        let oh = (h + 2 * pad - er) / stride + 1;
+        let ow = (wid + 2 * pad - er) / stride + 1;
         vec![n, oc, oh, ow]
     }
 
@@ -327,7 +346,7 @@ impl ConvPlan {
                 );
                 assert_eq!(
                     self.desc.dilation, 1,
-                    "dilation is reserved; engines require dilation == 1"
+                    "bilinear engines decline dilated descriptors via supports()"
                 );
                 conv2d_fast_packed_into(
                     x,
@@ -348,7 +367,7 @@ impl ConvPlan {
     }
 
     /// The zero-alloc entry point: execute out of `ws` straight into
-    /// `out` (shape must equal [`ConvPlan::out_dims`]). All five kernels
+    /// `out` (shape must equal [`ConvPlan::out_dims`]). All kernels
     /// route through here; results are bit-identical to [`ConvPlan::run`]
     /// whether `ws` is fresh or reused across calls and shapes.
     pub fn run_into(
@@ -359,29 +378,37 @@ impl ConvPlan {
         ws: &mut Workspace,
         out: &mut Tensor,
     ) {
-        // `dilation` is reserved: construction validates it, but the
-        // fields are public, so re-check before running an undilated
-        // kernel on a descriptor someone mutated.
-        assert_eq!(self.desc.dilation, 1, "dilation is reserved; engines require dilation == 1");
+        // Only the spatial kernels execute dilation; the fields are
+        // public, so re-check before running an undilated kernel on a
+        // descriptor someone mutated (engines decline dilated
+        // descriptors via supports(), so planned kernels never hit this).
+        if !matches!(self.kernel, PlanKernel::Direct | PlanKernel::Im2col) {
+            assert_eq!(
+                self.desc.dilation, 1,
+                "only the direct and im2col kernels execute dilation != 1"
+            );
+        }
         let ep = self.desc.epilogue;
         match &self.kernel {
-            PlanKernel::Direct => conv2d_direct_grouped_into(
+            PlanKernel::Direct => conv2d_direct_dilated_into(
                 x,
                 w,
                 bias,
                 self.desc.stride,
                 self.desc.pad,
                 self.desc.groups,
+                self.desc.dilation,
                 ep,
                 out,
             ),
-            PlanKernel::Im2col => exec::conv2d_im2col_into(
+            PlanKernel::Im2col => exec::conv2d_im2col_dilated_into(
                 x,
                 w,
                 bias,
                 self.desc.stride,
                 self.desc.pad,
                 self.desc.groups,
+                self.desc.dilation,
                 ep,
                 ws,
                 out,
@@ -389,9 +416,16 @@ impl ConvPlan {
             PlanKernel::Fast(p) => {
                 conv2d_fast_into(x, w, bias, p, self.desc.pad, self.desc.groups, ep, ws, out)
             }
-            // whole-image frequency engines only plan dense descriptors
+            // frequency engines (whole-image and tiled) only plan dense
+            // stride-1 descriptors
             PlanKernel::Fft => exec::conv2d_fft_into(x, w, bias, self.desc.pad, ep, ws, out),
             PlanKernel::Ntt => exec::conv2d_ntt_int8_into(x, w, bias, self.desc.pad, ep, ws, out),
+            PlanKernel::FftTiled { tile } => {
+                tiled::conv2d_fft_tiled_into(x, w, bias, self.desc.pad, *tile, ep, ws, out)
+            }
+            PlanKernel::NttTiled { tile } => {
+                tiled::conv2d_ntt_tiled_int8_into(x, w, bias, self.desc.pad, *tile, ep, ws, out)
+            }
         }
     }
 
@@ -443,6 +477,23 @@ impl ConvPlan {
                 let s2 = sh * sw;
                 let shared = d.oc * d.ic * s2 + sh; // knt + column scratch
                 let per_worker = d.ic * s2 + s2 + sh;
+                let quant = d.batch * d.ic * d.h * d.w + d.oc * d.ic * d.r * d.r; // i8
+                let acc = d.batch * d.oc * oh * ow; // i64
+                (shared + workers * per_worker) * 8 + quant + acc * 8
+            }
+            // the tiled arms mirror their whole-image twins with the
+            // padded power-of-two grid replaced by the fixed tile — the
+            // transform scratch no longer grows with the image
+            PlanKernel::FftTiled { tile } => {
+                let s2 = tile * tile;
+                let shared = 2 * d.oc * d.ic * s2;
+                let per_worker = 2 * d.ic * s2 + 2 * s2 + 2 * tile;
+                (shared + workers * per_worker) * 8
+            }
+            PlanKernel::NttTiled { tile } => {
+                let s2 = tile * tile;
+                let shared = d.oc * d.ic * s2 + tile; // knt + column scratch
+                let per_worker = d.ic * s2 + s2 + tile;
                 let quant = d.batch * d.ic * d.h * d.w + d.oc * d.ic * d.r * d.r; // i8
                 let acc = d.batch * d.oc * oh * ow; // i64
                 (shared + workers * per_worker) * 8 + quant + acc * 8
@@ -511,15 +562,20 @@ impl ConvEngine for DirectEngine {
 
     fn supports(&self, d: &ConvDesc) -> bool {
         match d.quant {
+            // float direct executes any geometry, dilation included
             None => true,
             // spatial quantization: per-tensor activations × per-channel
-            // weights (the implemented Eq.-16 baseline)
-            Some(q) => q.a_gran == Granularity::Tensor && q.w_gran == Granularity::Channel,
+            // weights (the implemented Eq.-16 baseline); the quantized
+            // spatial executor is undilated
+            Some(q) => {
+                d.dilation == 1
+                    && q.a_gran == Granularity::Tensor
+                    && q.w_gran == Granularity::Channel
+            }
         }
     }
 
     fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
-        d.ensure_undilated()?;
         Ok(ConvPlan::direct(*d))
     }
 
@@ -529,7 +585,9 @@ impl ConvEngine for DirectEngine {
 
     fn cost_model(&self, d: &ConvDesc) -> f64 {
         let (a, w) = d.odot_bits();
-        direct_bops_grouped(&d.shape(), d.groups as u64, a, w).total() as f64 * d.batch as f64
+        direct_bops_grouped_dilated(&d.shape(), d.groups as u64, d.dilation as u64, a, w).total()
+            as f64
+            * d.batch as f64
     }
 }
 
@@ -547,11 +605,12 @@ impl ConvEngine for Im2colEngine {
     }
 
     fn supports(&self, d: &ConvDesc) -> bool {
+        // float-only; any geometry, dilation included (the lowering
+        // simply gathers dilated taps)
         d.quant.is_none()
     }
 
     fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
-        d.ensure_undilated()?;
         Ok(ConvPlan::new(self.name(), *d, PlanKernel::Im2col))
     }
 
@@ -601,8 +660,10 @@ impl ConvEngine for BilinearEngine {
 
     fn supports(&self, d: &ConvDesc) -> bool {
         // any channel grouping: the per-frequency GEMM simply runs one
-        // [tiles×IC/g]·[IC/g×OC/g] block per group (depthwise included)
-        if d.r != self.spec.r || d.stride != 1 {
+        // [tiles×IC/g]·[IC/g×OC/g] block per group (depthwise included).
+        // Dilation is declined: the bilinear tile algebra (B/A gathers)
+        // assumes contiguous taps.
+        if d.r != self.spec.r || d.stride != 1 || d.dilation != 1 {
             return false;
         }
         match d.quant {
@@ -614,7 +675,6 @@ impl ConvEngine for BilinearEngine {
     }
 
     fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
-        d.ensure_undilated()?;
         if !self.supports(d) {
             bail!("{} does not support descriptor {:?}", self.name(), d);
         }
@@ -664,12 +724,12 @@ impl ConvEngine for FftEngine {
         let (sh, sw) = padded_pow2(d);
         d.stride == 1
             && d.groups == 1
+            && d.dilation == 1
             && d.quant.is_none()
             && d.oc * d.ic * sh * sw <= FREQ_KERNEL_ELEMS_MAX
     }
 
     fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
-        d.ensure_undilated()?;
         if !self.supports(d) {
             bail!("FFT engine does not support descriptor {:?}", d);
         }
@@ -730,13 +790,13 @@ impl ConvEngine for NttEngine {
         // accumulation has no grouped slicing
         d.stride == 1
             && d.groups == 1
+            && d.dilation == 1
             && quant_ok
             && Self::acc_bound_ok(d)
             && d.oc * d.ic * sh * sw <= FREQ_KERNEL_ELEMS_MAX
     }
 
     fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
-        d.ensure_undilated()?;
         if !self.supports(d) {
             bail!("NTT engine does not support descriptor {:?}", d);
         }
@@ -762,17 +822,146 @@ impl ConvEngine for NttEngine {
     }
 }
 
+// ---------------------------------------------------------------------
+// Tiled frequency-domain (overlap-save)
+// ---------------------------------------------------------------------
+
+/// Per-batch output-block count of the overlap-save grid: each block
+/// contributes `tile − r + 1` valid outputs per axis.
+fn tiled_block_count(d: &ConvDesc, tile: usize) -> f64 {
+    let (oh, ow) = d.out_hw();
+    let step = tile - d.r + 1;
+    (oh.div_ceil(step) * ow.div_ceil(step)) as f64
+}
+
+/// Overlap-save tiled float FFT convolution (cuDNN's `FFT_TILING`
+/// split): the whole-image FFT datapath run per overlapping block at a
+/// kernel-derived transform length, so workspace stays bounded on
+/// images the whole-image engine must decline. Float, stride-1, dense
+/// only — same envelope as [`FftEngine`] minus the image-size cap.
+pub struct FftTilingEngine;
+
+impl ConvEngine for FftTilingEngine {
+    fn name(&self) -> &'static str {
+        "FFT-tiled"
+    }
+
+    fn supports(&self, d: &ConvDesc) -> bool {
+        // the kernel planes are tile-sized, so the cap constrains only
+        // channels × kernel-derived tile — never the image
+        let tile = tiled::default_tile_len(d.r);
+        d.stride == 1
+            && d.groups == 1
+            && d.dilation == 1
+            && d.quant.is_none()
+            && d.oc * d.ic * tile * tile <= FREQ_KERNEL_ELEMS_MAX
+    }
+
+    fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
+        if !self.supports(d) {
+            bail!("FFT-tiled engine does not support descriptor {:?}", d);
+        }
+        let tile = tiled::default_tile_len(d.r);
+        Ok(ConvPlan::new(self.name(), *d, PlanKernel::FftTiled { tile }))
+    }
+
+    fn workspace_bytes(&self, d: &ConvDesc) -> usize {
+        let tile = tiled::default_tile_len(d.r);
+        ConvPlan::new(self.name(), *d, PlanKernel::FftTiled { tile }).workspace_bytes()
+    }
+
+    fn cost_model(&self, d: &ConvDesc) -> f64 {
+        let tile = tiled::default_tile_len(d.r);
+        let s2 = (tile * tile) as f64;
+        let lg = s2.log2().max(1.0);
+        let b = d.batch as f64;
+        let blocks = tiled_block_count(d, tile);
+        let (ic, oc) = (d.ic as f64, d.oc as f64);
+        // per-block input + inverse transforms per image; the kernel
+        // planes transform once at the tile length
+        let fft_mults = (b * blocks * (ic + oc) + ic * oc) * 2.0 * s2 * lg;
+        let pointwise = b * blocks * ic * oc * s2 * 3.0;
+        (fft_mults + pointwise) * mul_bops(16) as f64
+    }
+}
+
+/// Overlap-save tiled exact NTT convolution: bit-identical outputs to
+/// [`NttEngine`] (both are exact integer arithmetic) with tile-bounded
+/// transform workspace. Same quantization envelope as the whole-image
+/// engine; the ⊙ stage still carries full mod-p word width — tiling
+/// changes the memory story, not the paper's §3 precision criticism.
+pub struct NttTilingEngine;
+
+impl ConvEngine for NttTilingEngine {
+    fn name(&self) -> &'static str {
+        "NTT-tiled"
+    }
+
+    fn supports(&self, d: &ConvDesc) -> bool {
+        let tile = tiled::default_tile_len(d.r);
+        let quant_ok = match d.quant {
+            None => true, // float entry runs the int8 fixed-point datapath
+            Some(q) => {
+                q.a_bits <= 8
+                    && q.w_bits <= 8
+                    && q.a_gran == Granularity::Tensor
+                    && q.w_gran == Granularity::Channel
+            }
+        };
+        d.stride == 1
+            && d.groups == 1
+            && d.dilation == 1
+            && quant_ok
+            && NttEngine::acc_bound_ok(d)
+            && d.oc * d.ic * tile * tile <= FREQ_KERNEL_ELEMS_MAX
+    }
+
+    fn plan(&self, d: &ConvDesc) -> Result<ConvPlan> {
+        if !self.supports(d) {
+            bail!("NTT-tiled engine does not support descriptor {:?}", d);
+        }
+        let tile = tiled::default_tile_len(d.r);
+        Ok(ConvPlan::new(self.name(), *d, PlanKernel::NttTiled { tile }))
+    }
+
+    fn workspace_bytes(&self, d: &ConvDesc) -> usize {
+        let tile = tiled::default_tile_len(d.r);
+        ConvPlan::new(self.name(), *d, PlanKernel::NttTiled { tile }).workspace_bytes()
+    }
+
+    fn cost_model(&self, d: &ConvDesc) -> f64 {
+        let tile = tiled::default_tile_len(d.r);
+        let s2 = (tile * tile) as f64;
+        let lg = s2.log2().max(1.0);
+        let b = d.batch as f64;
+        let blocks = tiled_block_count(d, tile);
+        let (ic, oc) = (d.ic as f64, d.oc as f64);
+        let (a_bits, w_bits) = d.odot_bits();
+        let odot = ntt_odot_bits(a_bits.max(w_bits) as u32, d.ic * d.r * d.r) as u64;
+        let transforms = (b * blocks * (ic + oc) + ic * oc) * s2 * lg;
+        let pointwise = b * blocks * ic * oc * s2;
+        (transforms + pointwise) * mul_bops(odot) as f64
+    }
+}
+
 /// The full engine list, seeded from the Table-1 catalog: one universal
 /// direct engine, the im2col lowering, one bilinear engine per
-/// Winograd/SFC row and the FFT/NTT whole-image engines.
+/// Winograd/SFC row, and the FFT/NTT engines in both whole-image and
+/// overlap-save tiled forms.
 pub fn all_engines() -> Vec<Box<dyn ConvEngine>> {
     let mut engines: Vec<Box<dyn ConvEngine>> = vec![Box::new(DirectEngine), Box::new(Im2colEngine)];
     for spec in catalog() {
         match spec.kind {
             AlgoKind::Direct => {} // DirectEngine covers the catalog row
             AlgoKind::Winograd | AlgoKind::Sfc => engines.push(Box::new(BilinearEngine::new(spec))),
-            AlgoKind::Fft => engines.push(Box::new(FftEngine)),
-            AlgoKind::Ntt => engines.push(Box::new(NttEngine)),
+            AlgoKind::Fft => {
+                engines.push(Box::new(FftEngine));
+                engines.push(Box::new(FftTilingEngine));
+            }
+            AlgoKind::Ntt => {
+                engines.push(Box::new(NttEngine));
+                engines.push(Box::new(NttTilingEngine));
+            }
         }
     }
     engines
@@ -789,6 +978,7 @@ pub fn support_matrix_scenarios() -> Vec<(&'static str, ConvDesc)> {
         ("7x7 f32", ConvDesc::new(1, 8, 8, 16, 16, 7, 1, 3)),
         ("1x1 f32", ConvDesc::new(1, 8, 8, 16, 16, 1, 1, 0)),
         ("3x3 s2", ConvDesc::new(1, 8, 8, 16, 16, 3, 2, 1)),
+        ("3x3 d2", base.with_dilation(2)),
         ("groups=2", base.with_groups(2)),
         ("depthwise", base.with_groups(8)),
         ("int8 transform", base.with_quant(QuantSpec::transform_default(8))),
@@ -830,14 +1020,16 @@ mod tests {
     #[test]
     fn engine_list_covers_catalog() {
         let engines = all_engines();
-        assert!(engines.len() >= 12, "got {}", engines.len());
+        assert!(engines.len() >= 14, "got {}", engines.len());
         let names: Vec<&str> = engines.iter().map(|e| e.name()).collect();
         assert!(names.contains(&"direct"));
         assert!(names.contains(&"im2col-gemm"));
         assert!(names.contains(&"SFC-6(7x7,3x3)"));
         assert!(names.contains(&"Wino(4x4,3x3)"));
         assert!(names.contains(&"FFT"));
+        assert!(names.contains(&"FFT-tiled"));
         assert!(names.contains(&"NTT"));
+        assert!(names.contains(&"NTT-tiled"));
     }
 
     #[test]
@@ -873,7 +1065,7 @@ mod tests {
                 "direct" | "im2col-gemm" | "SFC-6(7x7,3x3)" | "Wino(4x4,3x3)" => {
                     assert!(e.supports(&g2) && e.supports(&dw), "{}", e.name())
                 }
-                "FFT" | "NTT" => {
+                "FFT" | "NTT" | "FFT-tiled" | "NTT-tiled" => {
                     assert!(!e.supports(&g2) && !e.supports(&dw), "{}", e.name())
                 }
                 _ => {}
@@ -917,10 +1109,12 @@ mod tests {
         let lines: Vec<&str> = md.lines().collect();
         assert_eq!(lines.len(), 2 + n_engines, "header + separator + one row per engine");
         assert!(lines[0].contains("depthwise") && lines[0].contains("int8 transform"));
+        assert!(lines[0].contains("3x3 d2"), "dilation scenario present: {}", lines[0]);
         // spot-check rows: direct supports everything except transform int8
-        assert!(md.contains("| direct | ✓ | ✓ | ✓ | ✓ | ✓ | ✓ | ✓ | — | ✓ |"), "{md}");
-        // FFT is float, stride-1, dense only
-        assert!(md.contains("| FFT | ✓ | ✓ | ✓ | ✓ | — | — | — | — | — |"), "{md}");
+        assert!(md.contains("| direct | ✓ | ✓ | ✓ | ✓ | ✓ | ✓ | ✓ | ✓ | — | ✓ |"), "{md}");
+        // FFT (whole-image and tiled) is float, stride-1, dense, undilated only
+        assert!(md.contains("| FFT | ✓ | ✓ | ✓ | ✓ | — | — | — | — | — | — |"), "{md}");
+        assert!(md.contains("| FFT-tiled | ✓ | ✓ | ✓ | ✓ | — | — | — | — | — | — |"), "{md}");
     }
 
     #[test]

@@ -1,0 +1,472 @@
+//! Overlap-save tiled frequency-domain executors.
+//!
+//! The whole-image FFT/NTT executors in [`super::exec`] zero-pad the
+//! *entire* padded input up to a power of two, so their transform
+//! workspace grows superlinearly with the image (`OC·IC·SH·SW` kernel
+//! planes) — the reason those engines decline large images. This module
+//! runs the same frequency-domain correlation **per overlapping block**
+//! (cuDNN's `FFT_TILING` split): a fixed transform length `S` is chosen
+//! from the kernel alone, the output is partitioned into `(S − R + 1)²`
+//! blocks, and each block gathers its `S×S` input window (the `R − 1`
+//! halo rows/columns overlap the neighbouring windows), transforms,
+//! multiplies with the once-precomputed flipped-kernel planes, inverse
+//! transforms, and scatters only the valid outputs. Transform workspace
+//! is then `O(OC·IC·S²)` — a function of the *kernel*, not the image.
+//!
+//! Why the valid region is exact: a circular `S`-point convolution of
+//! the gathered window with a kernel of support `R` only wraps around
+//! in its first `R − 1` output positions. The scatter reads positions
+//! `R − 1 … S − 1` — the overlap-*save* discard — where circular and
+//! linear convolution agree, so each tiled output equals the
+//! whole-image value: bit-identical for the exact NTT arm (both sides
+//! are exact integer arithmetic) and within f64 roundoff for the FFT
+//! arm. See ENGINE.md §Tiled frequency-domain execution.
+
+use super::desc::Epilogue;
+use super::exec::{fft2d, ntt2d, ntt_decode, ntt_encode};
+use super::workspace::Workspace;
+use crate::algo::ntt::P;
+use crate::linalg::simd::quantize_i8_slice;
+use crate::nn::tensor::Tensor;
+use crate::util::par::{num_threads, par_chunks_states};
+
+/// Default transform length for kernel size `r`: the smallest power of
+/// two ≥ `max(16, 4·(r − 1))`, so the valid fraction of every block is
+/// at least ¾ while the per-block transform stays cache-resident.
+pub fn default_tile_len(r: usize) -> usize {
+    (4 * (r.saturating_sub(1))).max(16).next_power_of_two()
+}
+
+/// Per-block gather/scatter geometry shared by both tiled arms.
+struct TileGrid {
+    /// transform length per axis (power of two)
+    s: usize,
+    /// valid outputs per block per axis: `s − r + 1`
+    step: usize,
+    /// output blocks along y / x
+    nby: usize,
+    nbx: usize,
+}
+
+impl TileGrid {
+    fn new(tile: usize, r: usize, oh: usize, ow: usize) -> TileGrid {
+        assert!(tile.is_power_of_two(), "tile length {tile} must be a power of two");
+        assert!(tile >= r, "tile length {tile} must cover the kernel {r}");
+        let step = tile - r + 1;
+        TileGrid { s: tile, step, nby: oh.div_ceil(step), nbx: ow.div_ceil(step) }
+    }
+}
+
+/// Float overlap-save tiled FFT convolution (stride 1, dense) into
+/// `out`. Same contract as [`super::exec::conv2d_fft_into`] — results
+/// agree within f64 roundoff — but the transform workspace is
+/// `O(OC·IC·tile²)` independent of the image size.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_fft_tiled_into(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    pad: usize,
+    tile: usize,
+    ep: Epilogue,
+    ws: &mut Workspace,
+    out: &mut Tensor,
+) {
+    let (n, ic, h, wid) = x.dims4();
+    let (oc, ic2, r, r2) = w.dims4();
+    assert_eq!(ic, ic2, "channel mismatch");
+    assert_eq!(r, r2, "square kernels only");
+    assert!(bias.is_empty() || bias.len() == oc);
+    let (hp, wp) = (h + 2 * pad, wid + 2 * pad);
+    let oh = hp - r + 1;
+    let ow = wp - r + 1;
+    out.assert_dims(&[n, oc, oh, ow]);
+    let g = TileGrid::new(tile, r, oh, ow);
+    let s = g.s;
+    let s2 = s * s;
+
+    // Flipped-kernel FFTs at the tile length, once for all blocks and
+    // images: [OC][IC] planes.
+    let mut kf_re = ws.take_f64(oc * ic * s2);
+    let mut kf_im = ws.take_f64(oc * ic * s2);
+    {
+        let mut cr = ws.take_f64(s);
+        let mut ci = ws.take_f64(s);
+        for o in 0..oc {
+            for c in 0..ic {
+                let base = (o * ic + c) * s2;
+                let wplane = w.plane(o, c);
+                for ky in 0..r {
+                    for kx in 0..r {
+                        // correlation = convolution with the flipped filter
+                        kf_re[base + (r - 1 - ky) * s + (r - 1 - kx)] = wplane[ky * r + kx] as f64;
+                    }
+                }
+                let kre = &mut kf_re[base..base + s2];
+                let kim = &mut kf_im[base..base + s2];
+                fft2d(kre, kim, s, s, false, &mut cr, &mut ci);
+            }
+        }
+        ws.give_f64(cr);
+        ws.give_f64(ci);
+    }
+
+    struct St {
+        xre: Vec<f64>,
+        xim: Vec<f64>,
+        acc_re: Vec<f64>,
+        acc_im: Vec<f64>,
+        cr: Vec<f64>,
+        ci: Vec<f64>,
+    }
+    let workers = num_threads().min(n).max(1);
+    let mut states: Vec<St> = (0..workers)
+        .map(|_| St {
+            xre: ws.take_f64(ic * s2),
+            xim: ws.take_f64(ic * s2),
+            acc_re: ws.take_f64(s2),
+            acc_im: ws.take_f64(s2),
+            cr: ws.take_f64(s),
+            ci: ws.take_f64(s),
+        })
+        .collect();
+    let inv_scale = 1.0 / s2 as f64;
+    par_chunks_states(&mut out.data, oc * oh * ow, &mut states, |st, ni, out_img| {
+        for by in 0..g.nby {
+            for bx in 0..g.nbx {
+                // block output origin; the input window starts at the
+                // same coordinate in the *padded* frame and spans S
+                // (halo = R − 1 rows/cols shared with the next block)
+                let oy0 = by * g.step;
+                let ox0 = bx * g.step;
+                let vy = g.step.min(oh - oy0);
+                let vx = g.step.min(ow - ox0);
+                st.xre.fill(0.0);
+                st.xim.fill(0.0);
+                for c in 0..ic {
+                    let base = c * s2;
+                    let plane = x.plane(ni, c);
+                    for y in 0..s {
+                        let py = oy0 + y; // padded-frame row
+                        if py < pad || py >= h + pad {
+                            continue;
+                        }
+                        let yy = py - pad;
+                        for xcol in 0..s {
+                            let px = ox0 + xcol;
+                            if px < pad || px >= wid + pad {
+                                continue;
+                            }
+                            st.xre[base + y * s + xcol] = plane[yy * wid + (px - pad)] as f64;
+                        }
+                    }
+                    let xre = &mut st.xre[base..base + s2];
+                    let xim = &mut st.xim[base..base + s2];
+                    fft2d(xre, xim, s, s, false, &mut st.cr, &mut st.ci);
+                }
+                for o in 0..oc {
+                    st.acc_re.fill(0.0);
+                    st.acc_im.fill(0.0);
+                    for c in 0..ic {
+                        let xb = c * s2;
+                        let kb = (o * ic + c) * s2;
+                        for i in 0..s2 {
+                            let (ar, ai) = (st.xre[xb + i], st.xim[xb + i]);
+                            let (br, bi) = (kf_re[kb + i], kf_im[kb + i]);
+                            st.acc_re[i] += ar * br - ai * bi;
+                            st.acc_im[i] += ar * bi + ai * br;
+                        }
+                    }
+                    fft2d(&mut st.acc_re, &mut st.acc_im, s, s, true, &mut st.cr, &mut st.ci);
+                    let b = if bias.is_empty() { 0.0 } else { bias[o] };
+                    let plane = &mut out_img[o * oh * ow..(o + 1) * oh * ow];
+                    for j in 0..vy {
+                        for i in 0..vx {
+                            // overlap-save: skip the R − 1 wrapped rows/cols
+                            let v = st.acc_re[(j + r - 1) * s + (i + r - 1)] * inv_scale;
+                            plane[(oy0 + j) * ow + (ox0 + i)] = ep.apply(v as f32 + b);
+                        }
+                    }
+                }
+            }
+        }
+    });
+    for st in states {
+        ws.give_f64(st.xre);
+        ws.give_f64(st.xim);
+        ws.give_f64(st.acc_re);
+        ws.give_f64(st.acc_im);
+        ws.give_f64(st.cr);
+        ws.give_f64(st.ci);
+    }
+    ws.give_f64(kf_re);
+    ws.give_f64(kf_im);
+}
+
+/// Float overlap-save tiled FFT convolution (allocating wrapper).
+pub fn conv2d_fft_tiled(x: &Tensor, w: &Tensor, bias: &[f32], pad: usize, tile: usize) -> Tensor {
+    let (n, _, h, wid) = x.dims4();
+    let (oc, _, r, _) = w.dims4();
+    let oh = h + 2 * pad - r + 1;
+    let ow = wid + 2 * pad - r + 1;
+    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    let mut ws = Workspace::new();
+    conv2d_fft_tiled_into(x, w, bias, pad, tile, Epilogue::None, &mut ws, &mut out);
+    out
+}
+
+/// Exact overlap-save tiled integer correlation via the NTT, written
+/// into the `[N][OC][OH][OW]` i64 accumulator slice `out`. Same
+/// exactness contract as [`super::exec::ntt_corr2d_i8_into`]
+/// (`|y| < p/2` ⇒ equal to the nested-loop integer conv), and therefore
+/// **bit-identical** to the whole-image arm — both compute the same
+/// exact integers; only the transform workspace differs
+/// (`O(OC·IC·tile²)` vs `O(OC·IC·SH·SW)`).
+#[allow(clippy::too_many_arguments)]
+pub fn ntt_corr2d_i8_tiled_into(
+    xq: &[i8],
+    n: usize,
+    ic: usize,
+    h: usize,
+    w: usize,
+    wq: &[i8],
+    oc: usize,
+    r: usize,
+    pad: usize,
+    tile: usize,
+    ws: &mut Workspace,
+    out: &mut [i64],
+) {
+    assert_eq!(xq.len(), n * ic * h * w);
+    assert_eq!(wq.len(), oc * ic * r * r);
+    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    let oh = hp - r + 1;
+    let ow = wp - r + 1;
+    assert_eq!(out.len(), n * oc * oh * ow, "accumulator slice size mismatch");
+    let g = TileGrid::new(tile, r, oh, ow);
+    let s = g.s;
+    let s2 = s * s;
+
+    // Flipped-kernel NTTs at the tile length, shared across blocks/images.
+    let mut knt = ws.take_u64(oc * ic * s2);
+    {
+        let mut col = ws.take_u64(s);
+        for o in 0..oc {
+            for c in 0..ic {
+                let base = (o * ic + c) * s2;
+                let wplane = &wq[(o * ic + c) * r * r..(o * ic + c + 1) * r * r];
+                for ky in 0..r {
+                    for kx in 0..r {
+                        knt[base + (r - 1 - ky) * s + (r - 1 - kx)] =
+                            ntt_encode(wplane[ky * r + kx] as i64);
+                    }
+                }
+                ntt2d(&mut knt[base..base + s2], s, s, false, &mut col);
+            }
+        }
+        ws.give_u64(col);
+    }
+
+    struct St {
+        xnt: Vec<u64>,
+        acc: Vec<u64>,
+        col: Vec<u64>,
+    }
+    let workers = num_threads().min(n).max(1);
+    let mut states: Vec<St> = (0..workers)
+        .map(|_| St { xnt: ws.take_u64(ic * s2), acc: ws.take_u64(s2), col: ws.take_u64(s) })
+        .collect();
+    par_chunks_states(out, oc * oh * ow, &mut states, |st, ni, img_out| {
+        for by in 0..g.nby {
+            for bx in 0..g.nbx {
+                let oy0 = by * g.step;
+                let ox0 = bx * g.step;
+                let vy = g.step.min(oh - oy0);
+                let vx = g.step.min(ow - ox0);
+                st.xnt.fill(0);
+                for c in 0..ic {
+                    let base = c * s2;
+                    let plane = &xq[(ni * ic + c) * h * w..(ni * ic + c + 1) * h * w];
+                    for y in 0..s {
+                        let py = oy0 + y;
+                        if py < pad || py >= h + pad {
+                            continue;
+                        }
+                        let yy = py - pad;
+                        for xcol in 0..s {
+                            let px = ox0 + xcol;
+                            if px < pad || px >= w + pad {
+                                continue;
+                            }
+                            st.xnt[base + y * s + xcol] =
+                                ntt_encode(plane[yy * w + (px - pad)] as i64);
+                        }
+                    }
+                    ntt2d(&mut st.xnt[base..base + s2], s, s, false, &mut st.col);
+                }
+                for o in 0..oc {
+                    st.acc.fill(0);
+                    for c in 0..ic {
+                        let xb = c * s2;
+                        let kb = (o * ic + c) * s2;
+                        for i in 0..s2 {
+                            // operands < p < 2^30 ⇒ the product fits u64
+                            st.acc[i] = (st.acc[i] + st.xnt[xb + i] * knt[kb + i] % P) % P;
+                        }
+                    }
+                    ntt2d(&mut st.acc, s, s, true, &mut st.col);
+                    for j in 0..vy {
+                        for i in 0..vx {
+                            img_out[o * oh * ow + (oy0 + j) * ow + (ox0 + i)] =
+                                ntt_decode(st.acc[(j + r - 1) * s + (i + r - 1)]);
+                        }
+                    }
+                }
+            }
+        }
+    });
+    for st in states {
+        ws.give_u64(st.xnt);
+        ws.give_u64(st.acc);
+        ws.give_u64(st.col);
+    }
+    ws.give_u64(knt);
+}
+
+/// Exact overlap-save tiled integer correlation (allocating wrapper):
+/// returns `[N][OC][OH][OW]` i64 accumulators.
+#[allow(clippy::too_many_arguments)]
+pub fn ntt_corr2d_i8_tiled(
+    xq: &[i8],
+    n: usize,
+    ic: usize,
+    h: usize,
+    w: usize,
+    wq: &[i8],
+    oc: usize,
+    r: usize,
+    pad: usize,
+    tile: usize,
+) -> Vec<i64> {
+    let oh = h + 2 * pad - r + 1;
+    let ow = w + 2 * pad - r + 1;
+    let mut out = vec![0i64; n * oc * oh * ow];
+    let mut ws = Workspace::new();
+    ntt_corr2d_i8_tiled_into(xq, n, ic, h, w, wq, oc, r, pad, tile, &mut ws, &mut out);
+    out
+}
+
+/// Float-entry overlap-save tiled NTT convolution into `out`:
+/// per-tensor symmetric int8 quantization (identical scales to the
+/// whole-image arm — both derive them from the full tensors), exact
+/// tiled integer correlation, per-element dequantize. Because the
+/// integer stage is bit-identical to the whole-image arm and the
+/// quantize/dequantize stages are element-wise with the same global
+/// scales, the float results are bit-identical too.
+pub fn conv2d_ntt_tiled_int8_into(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    pad: usize,
+    tile: usize,
+    ep: Epilogue,
+    ws: &mut Workspace,
+    out: &mut Tensor,
+) {
+    let (n, ic, h, wid) = x.dims4();
+    let (oc, ic2, r, r2) = w.dims4();
+    assert_eq!(ic, ic2, "channel mismatch");
+    assert_eq!(r, r2, "square kernels only");
+    let oh = h + 2 * pad - r + 1;
+    let ow = wid + 2 * pad - r + 1;
+    out.assert_dims(&[n, oc, oh, ow]);
+    let sx = {
+        let m = x.max_abs();
+        if m > 0.0 {
+            m / 127.0
+        } else {
+            1.0
+        }
+    };
+    let sw_ = {
+        let m = w.max_abs();
+        if m > 0.0 {
+            m / 127.0
+        } else {
+            1.0
+        }
+    };
+    let mut xq = ws.take_i8(x.data.len());
+    quantize_i8_slice(&x.data, sx, 127, &mut xq);
+    let mut wq = ws.take_i8(w.data.len());
+    quantize_i8_slice(&w.data, sw_, 127, &mut wq);
+    let mut acc = ws.take_i64(n * oc * oh * ow);
+    ntt_corr2d_i8_tiled_into(&xq, n, ic, h, wid, &wq, oc, r, pad, tile, ws, &mut acc);
+    let deq = sx * sw_;
+    for ni in 0..n {
+        for o in 0..oc {
+            let b = if bias.is_empty() { 0.0 } else { bias[o] };
+            let src = &acc[(ni * oc + o) * oh * ow..(ni * oc + o + 1) * oh * ow];
+            let dst = out.plane_mut(ni, o);
+            for (d, &a) in dst.iter_mut().zip(src) {
+                *d = ep.apply(a as f32 * deq + b);
+            }
+        }
+    }
+    ws.give_i8(xq);
+    ws.give_i8(wq);
+    ws.give_i64(acc);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::exec::{conv2d_fft, ntt_corr2d_i8};
+    use crate::util::Pcg32;
+
+    fn rand_tensor(dims: &[usize], rng: &mut Pcg32, sigma: f64) -> Tensor {
+        let mut t = Tensor::zeros(dims);
+        rng.fill_gaussian(&mut t.data, sigma);
+        t
+    }
+
+    #[test]
+    fn default_tile_len_covers_kernel() {
+        for r in [1usize, 3, 5, 7, 11, 13] {
+            let s = default_tile_len(r);
+            assert!(s.is_power_of_two() && s >= r, "r{r}: tile {s}");
+            assert!(s - r + 1 >= s / 2, "r{r}: valid fraction too small ({s})");
+        }
+    }
+
+    #[test]
+    fn tiled_fft_matches_whole_image_fft() {
+        let mut rng = Pcg32::seeded(31);
+        for (hh, ww, r, pad, tile) in
+            [(12usize, 12usize, 3usize, 1usize, 8usize), (20, 17, 5, 2, 16), (9, 9, 3, 0, 16)]
+        {
+            let x = rand_tensor(&[2, 3, hh, ww], &mut rng, 1.0);
+            let w = rand_tensor(&[2, 3, r, r], &mut rng, 0.3);
+            let bias = vec![0.2, -0.4];
+            let want = conv2d_fft(&x, &w, &bias, pad);
+            let got = conv2d_fft_tiled(&x, &w, &bias, pad, tile);
+            assert_eq!(got.dims, want.dims);
+            assert!(got.mse(&want) < 1e-9, "{hh}x{ww} r{r} p{pad} t{tile}: {}", got.mse(&want));
+        }
+    }
+
+    #[test]
+    fn tiled_ntt_bit_identical_to_whole_image() {
+        let mut rng = Pcg32::seeded(32);
+        let (n, ic, h, w, oc, r, pad) = (1usize, 3usize, 13usize, 11usize, 2usize, 3usize, 1usize);
+        let xq: Vec<i8> =
+            (0..n * ic * h * w).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let wq: Vec<i8> =
+            (0..oc * ic * r * r).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let want = ntt_corr2d_i8(&xq, n, ic, h, w, &wq, oc, r, pad);
+        for tile in [4usize, 8, 16, 32] {
+            let got = ntt_corr2d_i8_tiled(&xq, n, ic, h, w, &wq, oc, r, pad, tile);
+            assert_eq!(got, want, "tile {tile}");
+        }
+    }
+}

@@ -32,8 +32,17 @@ use std::sync::Arc;
 use std::time::Instant;
 
 /// The engines every snapshot covers (where they support the shape).
-const ENGINES: [&str; 7] =
-    ["direct", "im2col-gemm", "Wino(4x4,3x3)", "SFC-6(6x6,3x3)", "SFC-6(7x7,3x3)", "FFT", "NTT"];
+const ENGINES: [&str; 9] = [
+    "direct",
+    "im2col-gemm",
+    "Wino(4x4,3x3)",
+    "SFC-6(6x6,3x3)",
+    "SFC-6(7x7,3x3)",
+    "FFT",
+    "FFT-tiled",
+    "NTT",
+    "NTT-tiled",
+];
 
 /// The GEMM-backed engines the scalar-vs-SIMD speedup block measures on
 /// the dense 3×3 shapes (plus the int8 SFC executor in full mode).
@@ -110,6 +119,12 @@ fn shapes(quick: bool) -> Vec<(&'static str, ConvDesc)> {
         v.push(("56x56x64->64", ConvDesc::new(1, 64, 64, 56, 56, 3, 1, 1)));
         v.push(("56x56x64-dw", ConvDesc::new(1, 64, 64, 56, 56, 3, 1, 1).with_groups(64)));
         v.push(("14x14x64-g4", ConvDesc::new(1, 64, 64, 14, 14, 3, 1, 1).with_groups(4)));
+        // large-kernel large-image row (the examples/large_kernel.rs
+        // geometry): the whole-image FFT/NTT engines decline it, the
+        // overlap-save tiled engines carry it
+        v.push(("192x192x8-r11", ConvDesc::new(1, 8, 8, 192, 192, 11, 1, 5)));
+        // dilated 3×3: only the spatial engines (direct/im2col) take it
+        v.push(("28x28x32-d2", ConvDesc::new(1, 32, 32, 28, 28, 3, 1, 2).with_dilation(2)));
     }
     v
 }
@@ -414,7 +429,12 @@ pub fn run_scaling(cfg: &BenchCfg) -> Result<Vec<ScalingRow>> {
 /// the `blocking` object (the active Mc/Kc/Nc cache-blocking of the
 /// dispatched kernel) and the single-vs-multi-thread `scaling` block
 /// next to the scalar-vs-SIMD `speedup` block.
-pub const BENCH_SCHEMA_VERSION: u32 = 5;
+/// v6: engine axis extended with the overlap-save tiled
+/// frequency-domain engines (`FFT-tiled` / `NTT-tiled`) and two new
+/// full-mode shape rows: `192x192x8-r11` (large kernel + large image;
+/// whole-image FFT/NTT decline it) and `28x28x32-d2` (dilation 2;
+/// direct/im2col only).
+pub const BENCH_SCHEMA_VERSION: u32 = 6;
 
 /// Serialize rows as the BENCH_conv.json snapshot (no serde in this
 /// image — the format is flat enough to emit by hand).

@@ -12,10 +12,12 @@
 //!   source of algorithm truth.
 //! * [`engine`] — the unified convolution API: [`engine::ConvDesc`]
 //!   problem descriptors (stride/pad, channel `groups` up to depthwise,
-//!   quantization; assembled via [`engine::ConvDescBuilder`]), the
-//!   [`engine::ConvEngine`] trait implemented by direct / im2col /
-//!   Winograd / SFC / FFT / NTT backends (envelopes documented by the
-//!   generated ENGINE.md support matrix,
+//!   `dilation` executed by direct/im2col, quantization; assembled via
+//!   [`engine::ConvDescBuilder`]), the [`engine::ConvEngine`] trait
+//!   implemented by direct / im2col / Winograd / SFC / FFT / NTT
+//!   backends plus the overlap-save [`engine::tiled`] FFT/NTT engines
+//!   with kernel-derived, image-independent workspace bounds (envelopes
+//!   documented by the generated ENGINE.md support matrix,
 //!   [`engine::support_matrix_markdown`]), shape-keyed
 //!   [`engine::PlanCache`] plan reuse, the [`engine::Selector`] with
 //!   BOPs-heuristic and measured-autotune policies (`sfc autotune`), and

@@ -336,15 +336,39 @@ pub fn conv2d_direct_grouped_into(
     ep: Epilogue,
     out: &mut Tensor,
 ) {
+    conv2d_direct_dilated_into(x, w, bias, stride, pad, groups, 1, ep, out);
+}
+
+/// Grouped direct correlation with kernel dilation: tap `(ky, kx)`
+/// reads input offset `(ky·dilation, kx·dilation)`, so the receptive
+/// field spans `(r−1)·dilation + 1` pixels per axis. At `dilation == 1`
+/// the loop arithmetic reduces to exactly the undilated kernel's, so
+/// [`conv2d_direct_grouped_into`] (which delegates here) is
+/// bit-identical to its historical output. This is the float reference
+/// every dilated engine path is tested against.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_direct_dilated_into(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    dilation: usize,
+    ep: Epilogue,
+    out: &mut Tensor,
+) {
     let (n, ic, h, wid) = x.dims4();
     let (oc, icg, r, r2) = w.dims4();
     assert_eq!(r, r2, "square kernels only");
     assert!(groups >= 1 && oc % groups == 0, "groups {groups} must divide oc {oc}");
     assert_eq!(icg * groups, ic, "weight channels {icg}×{groups} groups vs input {ic}");
     assert!(bias.is_empty() || bias.len() == oc);
+    assert!(dilation >= 1, "dilation must be >= 1");
     let ocg = oc / groups;
-    let oh = (h + 2 * pad - r) / stride + 1;
-    let ow = (wid + 2 * pad - r) / stride + 1;
+    let er = (r - 1) * dilation + 1;
+    let oh = (h + 2 * pad - er) / stride + 1;
+    let ow = (wid + 2 * pad - er) / stride + 1;
     out.assert_dims(&[n, oc, oh, ow]);
     par_chunks_mut(&mut out.data, oh * ow, |job, plane| {
         let (ni, o) = (job / oc, job % oc);
@@ -357,13 +381,13 @@ pub fn conv2d_direct_grouped_into(
                 for ox in 0..ow {
                     let mut acc = 0f32;
                     for ky in 0..r {
-                        let yy = oy * stride + ky;
+                        let yy = oy * stride + ky * dilation;
                         if yy < pad || yy >= h + pad {
                             continue;
                         }
                         let yy = yy - pad;
                         for kx in 0..r {
-                            let xx = ox * stride + kx;
+                            let xx = ox * stride + kx * dilation;
                             if xx < pad || xx >= wid + pad {
                                 continue;
                             }

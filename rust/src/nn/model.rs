@@ -114,6 +114,29 @@ fn push_conv_grouped(
     groups: usize,
     hw: usize,
 ) -> (usize, usize) {
+    push_conv_dilated(m, src, name, input, oc, ic, r, stride, pad, groups, 1, hw)
+}
+
+/// Push one (possibly grouped, possibly dilated) conv node. Dilation
+/// lives only in the plan descriptor — [`ConvParams`] carries the
+/// geometry the executor reads back out of the plan — and the selector
+/// routes dilated layers to the engines whose `supports()` accepts
+/// them (direct and im2col). Returns (node index, output spatial).
+#[allow(clippy::too_many_arguments)]
+fn push_conv_dilated(
+    m: &mut Model,
+    src: &mut Source,
+    name: &str,
+    input: usize,
+    oc: usize,
+    ic: usize,
+    r: usize,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    dilation: usize,
+    hw: usize,
+) -> (usize, usize) {
     let (weight, bias) = src.conv(name, oc, ic / groups, r);
     let desc = ConvDesc::builder(ic, oc)
         .hw(hw)
@@ -121,11 +144,13 @@ fn push_conv_grouped(
         .stride(stride)
         .pad(pad)
         .groups(groups)
+        .dilation(dilation)
         .build();
     let plan = default_selector()
         .plan(&desc)
         .unwrap_or_else(|_| Arc::new(ConvPlan::direct(desc)));
-    let out_hw = (hw + 2 * pad - r) / stride + 1;
+    let er = (r - 1) * dilation + 1;
+    let out_hw = (hw + 2 * pad - er) / stride + 1;
     let node = m.push(
         Op::Conv {
             params: ConvParams { weight, bias, stride, pad },
@@ -279,6 +304,79 @@ pub fn mobilenet_random(cfg: &MobileNetCfg, seed: u64, classes: usize) -> Model 
     build_mobilenet(cfg, Source::Random(Pcg32::seeded(seed)), classes)
 }
 
+/// A compact dilated-context backbone (DeepLab-style): a dense 3×3
+/// stem, then size-preserving 3×3 blocks at growing dilation rates, so
+/// the receptive field grows exponentially while the spatial resolution
+/// never drops.
+pub struct DilatedNetCfg {
+    /// model name (graph + weight-map prefix)
+    pub name: &'static str,
+    /// stem output channels (dense 3×3 from RGB, dilation 1)
+    pub stem: usize,
+    /// per-block (output channels, dilation rate) — 3×3 stride-1 convs
+    /// with `pad = dilation·(r−1)/2` so every block is same-size
+    pub blocks: &'static [(usize, usize)],
+}
+
+/// The mini dilated backbone used by tests (32×32 substrate like the
+/// families above; rates 1/2/4 over three blocks).
+pub fn dilatednet_cfg() -> DilatedNetCfg {
+    DilatedNetCfg { name: "dilatednet", stem: 16, blocks: &[(32, 1), (32, 2), (64, 4)] }
+}
+
+fn build_dilatednet(cfg: &DilatedNetCfg, mut src: Source, classes: usize) -> Model {
+    let mut m = Model::new(cfg.name);
+    let input = m.push(Op::Input, vec![], "input");
+    let mut hw = 32usize;
+    let (stem, stem_hw) = push_conv(&mut m, &mut src, "stem", input, cfg.stem, 3, 3, 1, 1, hw);
+    hw = stem_hw;
+    let mut cur = m.push(Op::Relu, vec![stem], "stem.relu");
+    let mut prev_c = cfg.stem;
+    for (bi, &(width, dilation)) in cfg.blocks.iter().enumerate() {
+        let prefix = format!("d{bi}");
+        // pad = dilation·(r−1)/2 keeps 3×3 blocks size-preserving at any rate
+        let pad = dilation;
+        let (c, c_hw) = push_conv_dilated(
+            &mut m,
+            &mut src,
+            &format!("{prefix}.conv"),
+            cur,
+            width,
+            prev_c,
+            3,
+            1,
+            pad,
+            1,
+            dilation,
+            hw,
+        );
+        cur = m.push(Op::Relu, vec![c], format!("{prefix}.relu"));
+        prev_c = width;
+        hw = c_hw;
+    }
+    // dilated depthwise context layer: grouped and dilated in one node
+    let (dw, dw_hw) = push_conv_dilated(
+        &mut m, &mut src, "ctx.dw", cur, prev_c, prev_c, 3, 1, 2, prev_c, 2, hw,
+    );
+    hw = dw_hw;
+    debug_assert_eq!(hw, 32, "the dilated backbone is size-preserving end to end");
+    let cur = m.push(Op::Relu, vec![dw], "ctx.dw.relu");
+    let gap = m.push(Op::GlobalAvgPool, vec![cur], "gap");
+    let (weight, bias) = src.linear("fc", classes, prev_c);
+    m.push(Op::Linear { weight, bias }, vec![gap], "fc");
+    m
+}
+
+/// Build the mini dilated backbone with trained weights.
+pub fn dilatednet_from_weights(cfg: &DilatedNetCfg, map: &WeightMap, classes: usize) -> Model {
+    build_dilatednet(cfg, Source::Map(map), classes)
+}
+
+/// Build the mini dilated backbone with random (He-init) weights.
+pub fn dilatednet_random(cfg: &DilatedNetCfg, seed: u64, classes: usize) -> Model {
+    build_dilatednet(cfg, Source::Random(Pcg32::seeded(seed)), classes)
+}
+
 /// A conv layer shape (for analytical models: BOPs, FPGA).
 #[derive(Clone, Copy, Debug)]
 pub struct ConvShape {
@@ -358,8 +456,8 @@ pub fn model_conv_shapes(model: &Model, input_hw: usize) -> Vec<(String, ConvSha
 }
 
 /// Conv descriptors of a built model, read straight from each conv
-/// node's engine plan — preserving stride/pad **and groups**, which the
-/// dense [`ConvShape`] view cannot carry — with the batch size
+/// node's engine plan — preserving stride/pad **and groups/dilation**,
+/// which the dense [`ConvShape`] view cannot carry — with the batch size
 /// overridden and any quantization scheme stripped (callers re-attach
 /// their own). This is what `sfc autotune` iterates.
 pub fn model_conv_descs(model: &Model, batch: usize) -> Vec<(String, ConvDesc)> {
@@ -438,6 +536,33 @@ mod tests {
         assert_eq!(y.dims, vec![2, 10, 1, 1]);
         // stem + (dw + pw) per block
         assert_eq!(m.conv_nodes().len(), 1 + 2 * cfg.blocks.len());
+    }
+
+    #[test]
+    fn dilated_backbone_forward_ws_end_to_end() {
+        use crate::engine::Workspace;
+        use crate::util::Pcg32;
+        let cfg = dilatednet_cfg();
+        let m = dilatednet_random(&cfg, 7, 10);
+        // stem + one conv per block + the depthwise context layer
+        assert_eq!(m.conv_nodes().len(), 1 + cfg.blocks.len() + 1);
+        let descs = model_conv_descs(&m, 2);
+        let rates: Vec<usize> =
+            descs.iter().filter(|(n, _)| n.ends_with(".conv")).map(|(_, d)| d.dilation).collect();
+        assert_eq!(rates, vec![1, 2, 4], "block dilation schedule survives into the plans");
+        let ctx = descs.iter().find(|(n, _)| n == "ctx.dw").unwrap();
+        assert_eq!((ctx.1.groups, ctx.1.dilation), (ctx.1.ic, 2), "grouped + dilated node");
+        let mut x = Tensor::zeros(&[2, 3, 32, 32]);
+        Pcg32::seeded(0xD1A).fill_gaussian(&mut x.data, 1.0);
+        let want = m.forward(&x);
+        assert_eq!(want.dims, vec![2, 10, 1, 1]);
+        let mut ws = Workspace::new();
+        let y = m.forward_ws(&x, &mut ws);
+        assert_eq!(y.data, want.data, "workspace forward is bit-identical");
+        let warm = ws.heap_allocs();
+        let y2 = m.forward_ws(&x, &mut ws);
+        assert_eq!(y2.data, want.data);
+        assert_eq!(ws.heap_allocs(), warm, "steady-state dilated forward allocates");
     }
 
     #[test]

@@ -10,6 +10,7 @@
 
 use super::{QParams, QTensor, Requant};
 use crate::engine::exec::ntt_corr2d_i8_into;
+use crate::engine::tiled::ntt_corr2d_i8_tiled_into;
 use crate::engine::{ConvPlan, Epilogue, PackedBytesGuard, PlanKernel, QuantSpec, Workspace};
 use crate::linalg::gemm::{gemm_packed_i8_i32, packed_b_i8_len};
 use crate::linalg::simd::{quantize_i8_slice, requant_i8_slice};
@@ -207,7 +208,7 @@ impl QConvLayer {
             QCalib::MaxAbs(max_abs) => {
                 let via_ntt = match plan.kernel {
                     PlanKernel::Direct | PlanKernel::Im2col => false,
-                    PlanKernel::Ntt => true,
+                    PlanKernel::Ntt | PlanKernel::NttTiled { .. } => true,
                     _ => panic!("{} plan has no spatial quantized path", plan.engine),
                 };
                 QConvLayer::spatial(plan, weight, bias, spec, *max_abs, via_ntt)
@@ -444,7 +445,7 @@ impl QConvLayer {
     /// materialization in [`crate::quant::dequant_materializations`]).
     pub fn forward_into(&self, x: &Tensor, ws: &mut Workspace, out: &mut Tensor) {
         let dil = self.plan.desc.dilation;
-        assert_eq!(dil, 1, "dilation is reserved; engines require dilation == 1");
+        assert_eq!(dil, 1, "quantized executors are undilated; plan dilated convs float-side");
         super::record_dequant_materialization();
         match &self.kernel {
             QKernel::TransformDomain { oc, icg, wqp, w_scales, a_scales, a_bits, .. } => {
@@ -508,7 +509,7 @@ impl QConvLayer {
 
     fn run_spatial(&self, input: SpatialIn, ws: &mut Workspace, out: SpatialOut) {
         let dil = self.plan.desc.dilation;
-        assert_eq!(dil, 1, "dilation is reserved; engines require dilation == 1");
+        assert_eq!(dil, 1, "quantized executors are undilated; plan dilated convs float-side");
         let QKernel::Spatial { wq, oc, icg, r, w_scales, a_scale, via_ntt } = &self.kernel else {
             panic!(
                 "{}: transform-domain layers have no int8 dataflow entry (Eq. 17 needs the \
@@ -939,7 +940,14 @@ fn forward_spatial_ntt(
     let ep = layer.epilogue();
     let xq = take_codes(&input, a_scale, ws);
     let mut acc = ws.take_i64(n * oc * oh * ow);
-    ntt_corr2d_i8_into(xq.slice(), n, ic, h, wid, wq, oc, r, pad, ws, &mut acc);
+    // both arms are exact integer arithmetic, so they are bit-identical;
+    // the tiled arm just bounds transform workspace by the tile length
+    match layer.plan.kernel {
+        PlanKernel::NttTiled { tile } => {
+            ntt_corr2d_i8_tiled_into(xq.slice(), n, ic, h, wid, wq, oc, r, pad, tile, ws, &mut acc)
+        }
+        _ => ntt_corr2d_i8_into(xq.slice(), n, ic, h, wid, wq, oc, r, pad, ws, &mut acc),
+    }
     match out {
         SpatialOut::F32(out) => {
             assert_eq!(out.dims, [n, oc, oh, ow], "output shape mismatch: {:?}", out.dims);

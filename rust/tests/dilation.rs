@@ -1,0 +1,255 @@
+//! Dilated convolution across the engine stack: exactness against a
+//! loop-order-matched naive reference, direct vs im2col agreement over
+//! dense/grouped/depthwise × stride × pad sweeps, `supports()` honesty
+//! for every engine (plan or decline — never a panic), plan-cache key
+//! distinctness over the dilation rate, and the dilated backbone end to
+//! end through `Model::forward_ws`.
+
+use sfc::engine::{default_selector, ConvDesc, PlanCache, Policy, Selector, Workspace};
+use sfc::nn::conv::conv2d_direct_grouped;
+use sfc::nn::model::{dilatednet_cfg, dilatednet_random};
+use sfc::nn::Tensor;
+use sfc::util::Pcg32;
+use std::sync::Arc;
+
+fn rand_tensor(dims: &[usize], rng: &mut Pcg32, sigma: f64) -> Tensor {
+    let mut t = Tensor::zeros(dims);
+    rng.fill_gaussian(&mut t.data, sigma);
+    t
+}
+
+fn rel_mse(got: &Tensor, want: &Tensor) -> f64 {
+    let denom =
+        want.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / want.len().max(1) as f64;
+    got.mse(want) / denom.max(1e-30)
+}
+
+/// Naive dilated grouped correlation with the same loop order and f32
+/// accumulation structure as the direct kernel (per-channel register
+/// accumulator added into the plane), so direct must match it bit for
+/// bit.
+fn naive_dilated(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    dilation: usize,
+) -> Tensor {
+    let (n, ic, h, wid) = x.dims4();
+    let (oc, icg, r, _) = w.dims4();
+    let ocg = oc / groups;
+    let er = (r - 1) * dilation + 1;
+    let oh = (h + 2 * pad - er) / stride + 1;
+    let ow = (wid + 2 * pad - er) / stride + 1;
+    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    for ni in 0..n {
+        for o in 0..oc {
+            let gi = o / ocg;
+            let plane = out.plane_mut(ni, o);
+            for il in 0..icg {
+                let xp = x.plane(ni, gi * icg + il);
+                let wp = w.plane(o, il);
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0f32;
+                        for ky in 0..r {
+                            let yy = oy * stride + ky * dilation;
+                            if yy < pad || yy >= h + pad {
+                                continue;
+                            }
+                            let yy = yy - pad;
+                            for kx in 0..r {
+                                let xx = ox * stride + kx * dilation;
+                                if xx < pad || xx >= wid + pad {
+                                    continue;
+                                }
+                                acc += wp[ky * r + kx] * xp[yy * wid + (xx - pad)];
+                            }
+                        }
+                        plane[oy * ow + ox] += acc;
+                    }
+                }
+            }
+            let b = if bias.is_empty() { 0.0 } else { bias[o] };
+            for v in plane.iter_mut() {
+                *v += b;
+            }
+        }
+    }
+    out
+}
+
+fn sweep() -> Vec<(ConvDesc, &'static str)> {
+    let mut cases = Vec::new();
+    for (ic, oc, groups, tag) in
+        [(6usize, 8usize, 1usize, "dense"), (6, 8, 2, "grouped"), (8, 8, 8, "depthwise")]
+    {
+        for stride in [1usize, 2] {
+            for dilation in [2usize, 3] {
+                for r in [3usize, 5] {
+                    let pad = dilation * (r - 1) / 2;
+                    let d = ConvDesc::builder(ic, oc)
+                        .batch(2)
+                        .hw(17)
+                        .kernel(r)
+                        .stride(stride)
+                        .pad(pad)
+                        .groups(groups)
+                        .dilation(dilation)
+                        .build();
+                    cases.push((d, tag));
+                }
+            }
+        }
+    }
+    cases
+}
+
+/// Property: the dilated direct kernel equals the loop-order-matched
+/// naive reference bit for bit, and at `dilation == 1` it reduces to
+/// the historical undilated kernel exactly.
+#[test]
+fn property_dilated_direct_is_exact() {
+    let mut rng = Pcg32::seeded(0xD11);
+    let sel = default_selector();
+    for (d, tag) in sweep() {
+        let x = rand_tensor(&[d.batch, d.ic, d.h, d.w], &mut rng, 1.0);
+        let w = rand_tensor(&[d.oc, d.ic / d.groups, d.r, d.r], &mut rng, 0.3);
+        let bias: Vec<f32> = (0..d.oc).map(|o| o as f32 * 0.05 - 0.1).collect();
+        let want = naive_dilated(&x, &w, &bias, d.stride, d.pad, d.groups, d.dilation);
+        let plan = sel.plan_named("direct", &d).expect("direct plans every dilated desc");
+        let got = plan.run(&x, &w, &bias);
+        assert_eq!(got.dims, want.dims, "{tag} {d:?}");
+        assert_eq!(got.data, want.data, "{tag} d{} must be exact", d.dilation);
+    }
+    // dilation 1 delegation: the dilated kernel IS the historical kernel
+    let d1 = ConvDesc::new(2, 6, 8, 17, 17, 3, 1, 1).with_groups(2);
+    let x = rand_tensor(&[2, 6, 17, 17], &mut rng, 1.0);
+    let w = rand_tensor(&[8, 3, 3, 3], &mut rng, 0.3);
+    let undilated = conv2d_direct_grouped(&x, &w, &[], 1, 1, 2);
+    let got = default_selector().plan_named("direct", &d1).unwrap().run(&x, &w, &[]);
+    assert_eq!(got.data, undilated.data, "dilation 1 reduces to the undilated kernel");
+}
+
+/// Property: the dilated im2col lowering agrees with direct everywhere
+/// in the sweep (float GEMM reassociates the channel reduction, so the
+/// comparison is tolerance-based — at f64-roundoff scale).
+#[test]
+fn property_dilated_im2col_matches_direct() {
+    let mut rng = Pcg32::seeded(0xD12);
+    let sel = default_selector();
+    for (d, tag) in sweep() {
+        let x = rand_tensor(&[d.batch, d.ic, d.h, d.w], &mut rng, 1.0);
+        let w = rand_tensor(&[d.oc, d.ic / d.groups, d.r, d.r], &mut rng, 0.3);
+        let bias: Vec<f32> = (0..d.oc).map(|o| o as f32 * 0.05 - 0.1).collect();
+        let want = sel.plan_named("direct", &d).unwrap().run(&x, &w, &bias);
+        let plan = sel.plan_named("im2col-gemm", &d).expect("im2col plans every dilated desc");
+        let got = plan.run(&x, &w, &bias);
+        assert_eq!(got.dims, want.dims, "{tag} {d:?}");
+        assert!(
+            rel_mse(&got, &want) < 1e-11,
+            "{tag} d{}: rel mse {}",
+            d.dilation,
+            rel_mse(&got, &want)
+        );
+    }
+}
+
+/// Honesty: every engine either plans a dilated descriptor (and then
+/// its execution matches direct) or declines it via `supports()` —
+/// `plan()` never succeeds where `supports()` said no, and vice versa.
+#[test]
+fn every_engine_plans_or_declines_dilation_honestly() {
+    let mut rng = Pcg32::seeded(0xD13);
+    let sel = default_selector();
+    let descs = [
+        ConvDesc::new(1, 4, 4, 16, 16, 3, 1, 2).with_dilation(2),
+        ConvDesc::new(1, 4, 4, 16, 16, 3, 1, 4).with_dilation(4),
+        ConvDesc::new(1, 8, 8, 16, 16, 3, 1, 2).with_groups(8).with_dilation(2),
+    ];
+    for d in descs {
+        let x = rand_tensor(&[d.batch, d.ic, d.h, d.w], &mut rng, 1.0);
+        let w = rand_tensor(&[d.oc, d.ic / d.groups, d.r, d.r], &mut rng, 0.3);
+        let want = sel.plan_named("direct", &d).unwrap().run(&x, &w, &[]);
+        let mut planned = 0usize;
+        for e in sel.engines() {
+            let plan = e.plan(&d);
+            assert_eq!(
+                plan.is_ok(),
+                e.supports(&d),
+                "{}: plan() and supports() disagree on {d:?}",
+                e.name()
+            );
+            let Ok(plan) = plan else { continue };
+            planned += 1;
+            let got = plan.run(&x, &w, &[]);
+            assert_eq!(got.dims, want.dims, "{}", e.name());
+            assert!(rel_mse(&got, &want) < 1e-11, "{}: {}", e.name(), rel_mse(&got, &want));
+        }
+        assert!(planned >= 2, "direct and im2col must both take {d:?}");
+        // transform engines must all have declined
+        for name in ["FFT", "NTT", "FFT-tiled", "NTT-tiled", "Wino(4x4,3x3)", "SFC-6(7x7,3x3)"] {
+            let e = sel.engine_named(name).unwrap();
+            assert!(!e.supports(&d), "{name} must decline dilation {}", d.dilation);
+        }
+    }
+}
+
+/// The plan cache must key on the dilation rate: equal geometry at
+/// rates 1/2/3 yields three distinct cache entries, and re-planning
+/// hits instead of rebuilding.
+#[test]
+fn plan_cache_distinguishes_dilation_rates() {
+    let cache = Arc::new(PlanCache::new());
+    let sel = Selector::with_cache(Policy::Heuristic, cache.clone());
+    let base = ConvDesc::builder(8, 8).hw(24).kernel(3).pad(2).build();
+    for dilation in [1usize, 2, 3] {
+        let d = base.with_dilation(dilation);
+        sel.plan(&d).unwrap();
+    }
+    assert_eq!(cache.len(), 3, "one entry per dilation rate");
+    let misses = cache.misses();
+    for dilation in [1usize, 2, 3] {
+        sel.plan(&base.with_dilation(dilation)).unwrap();
+    }
+    assert_eq!(cache.misses(), misses, "re-planning the same rates must hit");
+    assert!(cache.hits() >= 3);
+}
+
+/// The support-matrix generator carries the dilation scenario, with the
+/// spatial engines accepting and every transform engine declining.
+#[test]
+fn support_matrix_carries_the_dilation_column() {
+    let md = sfc::engine::support_matrix_markdown();
+    let header = md.lines().next().unwrap();
+    assert!(header.contains("3x3 d2"), "dilation scenario in the header: {header}");
+    let (_, d2) = sfc::engine::support_matrix_scenarios()
+        .into_iter()
+        .find(|(n, _)| *n == "3x3 d2")
+        .expect("3x3 d2 scenario");
+    assert_eq!(d2.dilation, 2);
+    for e in default_selector().engines() {
+        let want = matches!(e.name(), "direct" | "im2col-gemm");
+        assert_eq!(e.supports(&d2), want, "{} on the d2 scenario", e.name());
+    }
+}
+
+/// The dilated backbone runs end to end through `Model::forward_ws`,
+/// bit-identical to the allocating forward and alloc-free once warm.
+#[test]
+fn dilated_backbone_forward_ws_is_stable() {
+    let m = dilatednet_random(&dilatednet_cfg(), 11, 10);
+    let mut rng = Pcg32::seeded(0xD14);
+    let x = rand_tensor(&[2, 3, 32, 32], &mut rng, 1.0);
+    let want = m.forward(&x);
+    assert_eq!(want.dims, vec![2, 10, 1, 1]);
+    let mut ws = Workspace::new();
+    let y = m.forward_ws(&x, &mut ws);
+    assert_eq!(y.data, want.data);
+    let warm = ws.heap_allocs();
+    let y2 = m.forward_ws(&x, &mut ws);
+    assert_eq!(y2.data, want.data);
+    assert_eq!(ws.heap_allocs(), warm, "warm dilated forward must not allocate");
+}

@@ -1,0 +1,261 @@
+//! Overlap-save tiled frequency-domain execution: exactness properties.
+//!
+//! The tiled NTT arm must be **bit-identical** to the whole-image NTT
+//! arm and to a nested-loop integer reference (all three compute exact
+//! integers); the tiled FFT arm must agree with the whole-image FFT
+//! within f64 roundoff. Boundary geometries (image smaller than the
+//! tile, image exactly one tile, a one-pixel overlap remainder) are
+//! pinned explicitly, and the engine-level plans are exercised through
+//! `Workspace` with zero steady-state heap allocations.
+
+use sfc::engine::exec::{conv2d_fft, conv2d_ntt_int8, ntt_corr2d_i8};
+use sfc::engine::tiled::{
+    conv2d_fft_tiled, default_tile_len, ntt_corr2d_i8_tiled,
+};
+use sfc::engine::{default_selector, ConvDesc, QuantSpec, Workspace};
+use sfc::nn::conv::conv2d_direct;
+use sfc::nn::Tensor;
+use sfc::quant::qconv::{QCalib, QConvLayer};
+use sfc::util::Pcg32;
+
+fn rand_tensor(dims: &[usize], rng: &mut Pcg32, sigma: f64) -> Tensor {
+    let mut t = Tensor::zeros(dims);
+    rng.fill_gaussian(&mut t.data, sigma);
+    t
+}
+
+fn rand_i8(len: usize, rng: &mut Pcg32) -> Vec<i8> {
+    (0..len).map(|_| (rng.below(255) as i32 - 127) as i8).collect()
+}
+
+fn rel_mse(got: &Tensor, want: &Tensor) -> f64 {
+    let denom =
+        want.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / want.len().max(1) as f64;
+    got.mse(want) / denom.max(1e-30)
+}
+
+/// Nested-loop i64 correlation — the ground truth both NTT arms must
+/// reproduce exactly while `|y| < p/2`.
+#[allow(clippy::too_many_arguments)]
+fn naive_corr_i64(
+    xq: &[i8],
+    n: usize,
+    ic: usize,
+    h: usize,
+    w: usize,
+    wq: &[i8],
+    oc: usize,
+    r: usize,
+    pad: usize,
+) -> Vec<i64> {
+    let oh = h + 2 * pad - r + 1;
+    let ow = w + 2 * pad - r + 1;
+    let mut out = vec![0i64; n * oc * oh * ow];
+    for ni in 0..n {
+        for o in 0..oc {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0i64;
+                    for c in 0..ic {
+                        for ky in 0..r {
+                            let yy = oy + ky;
+                            if yy < pad || yy >= h + pad {
+                                continue;
+                            }
+                            for kx in 0..r {
+                                let xx = ox + kx;
+                                if xx < pad || xx >= w + pad {
+                                    continue;
+                                }
+                                acc += xq[((ni * ic + c) * h + (yy - pad)) * w + (xx - pad)]
+                                    as i64
+                                    * wq[((o * ic + c) * r + ky) * r + kx] as i64;
+                            }
+                        }
+                    }
+                    out[((ni * oc + o) * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Property: over a randomized sweep of large kernels, paddings and
+/// tile lengths, the tiled NTT arm equals the whole-image NTT arm and
+/// the nested-loop reference bit for bit.
+#[test]
+fn property_tiled_ntt_bit_identical_over_sweep() {
+    let mut rng = Pcg32::seeded(0x71D);
+    for (h, w, ic, oc, r) in
+        [(21usize, 18usize, 3usize, 2usize, 7usize), (17, 17, 2, 3, 11), (24, 13, 4, 2, 7)]
+    {
+        for pad in [0usize, r / 2] {
+            let n = 2;
+            let xq = rand_i8(n * ic * h * w, &mut rng);
+            let wq = rand_i8(oc * ic * r * r, &mut rng);
+            let naive = naive_corr_i64(&xq, n, ic, h, w, &wq, oc, r, pad);
+            let whole = ntt_corr2d_i8(&xq, n, ic, h, w, &wq, oc, r, pad);
+            assert_eq!(whole, naive, "whole-image NTT vs naive: {h}x{w} r{r} p{pad}");
+            for tile in [16usize, 32, 64] {
+                if tile < r {
+                    continue;
+                }
+                let tiled = ntt_corr2d_i8_tiled(&xq, n, ic, h, w, &wq, oc, r, pad, tile);
+                assert_eq!(tiled, naive, "tiled NTT: {h}x{w} r{r} p{pad} tile{tile}");
+            }
+        }
+    }
+}
+
+/// Property: the float-entry tiled NTT arm is bit-identical to the
+/// whole-image float-entry arm — both quantize with scales derived from
+/// the full tensors, and the integer stage in between is exact.
+#[test]
+fn tiled_ntt_float_entry_bit_identical_to_whole_image() {
+    let mut rng = Pcg32::seeded(0x71E);
+    let x = rand_tensor(&[2, 3, 24, 20], &mut rng, 1.0);
+    let w = rand_tensor(&[4, 3, 7, 7], &mut rng, 0.3);
+    let bias = vec![0.1, -0.2, 0.0, 0.4];
+    let want = conv2d_ntt_int8(&x, &w, &bias, 3);
+    let sel = default_selector();
+    let d = ConvDesc::new(2, 3, 4, 24, 20, 7, 1, 3);
+    let plan = sel.plan_named("NTT-tiled", &d).expect("tiled NTT plans the descriptor");
+    let got = plan.run(&x, &w, &bias);
+    assert_eq!(got.dims, want.dims);
+    assert_eq!(got.data, want.data, "tiled float-entry arm must be bit-identical");
+}
+
+/// Property: the tiled FFT arm agrees with the whole-image FFT within
+/// f64 roundoff, and both agree with direct convolution.
+#[test]
+fn property_tiled_fft_within_whole_image_tolerance() {
+    let mut rng = Pcg32::seeded(0x71F);
+    for (h, w, r, pad, tile) in [
+        (21usize, 18usize, 7usize, 3usize, 32usize),
+        (30, 30, 11, 5, 64),
+        (19, 23, 7, 0, 16),
+    ] {
+        let x = rand_tensor(&[2, 3, h, w], &mut rng, 1.0);
+        let wt = rand_tensor(&[2, 3, r, r], &mut rng, 0.3);
+        let bias = vec![0.3, -0.1];
+        let whole = conv2d_fft(&x, &wt, &bias, pad);
+        let tiled = conv2d_fft_tiled(&x, &wt, &bias, pad, tile);
+        assert_eq!(tiled.dims, whole.dims);
+        assert!(
+            tiled.mse(&whole) < 1e-9,
+            "{h}x{w} r{r} p{pad} t{tile}: mse vs whole {}",
+            tiled.mse(&whole)
+        );
+        let direct = conv2d_direct(&x, &wt, &bias, 1, pad);
+        assert!(rel_mse(&tiled, &direct) < 1e-10, "{h}x{w} r{r}: vs direct");
+    }
+}
+
+/// Boundary geometries pinned: the padded image smaller than one tile
+/// (a single partial block), exactly one tile (a single full block),
+/// and a one-pixel valid remainder in the last block row/column.
+#[test]
+fn boundary_tile_geometries_are_exact() {
+    let mut rng = Pcg32::seeded(0xB0);
+    let (ic, oc, r) = (2usize, 2usize, 7usize);
+    let tile = 16usize;
+    let step = tile - r + 1; // 10 valid outputs per block axis
+    // (h + 2·pad, oh) per case: smaller than the tile, exactly the
+    // tile, and oh = step + 1 so the trailing block keeps one pixel.
+    let cases = [
+        (9usize, 1usize), // padded 11 < 16: one partial block
+        (14, 1),          // padded 16 == tile: one full block, oh == step
+        (15, 1),          // oh == step + 1: one-pixel overlap remainder
+    ];
+    for (h, pad) in cases {
+        let oh = h + 2 * pad - r + 1;
+        assert!(oh <= step + 1, "case picks at most a one-pixel remainder ({oh})");
+        let n = 1;
+        let xq = rand_i8(n * ic * h * h, &mut rng);
+        let wq = rand_i8(oc * ic * r * r, &mut rng);
+        let naive = naive_corr_i64(&xq, n, ic, h, h, &wq, oc, r, pad);
+        let tiled = ntt_corr2d_i8_tiled(&xq, n, ic, h, h, &wq, oc, r, pad, tile);
+        assert_eq!(tiled, naive, "h{h} pad{pad} tile{tile}");
+        let x = rand_tensor(&[n, ic, h, h], &mut rng, 1.0);
+        let w = rand_tensor(&[oc, ic, r, r], &mut rng, 0.3);
+        let whole = conv2d_fft(&x, &w, &[], pad);
+        let ftiled = conv2d_fft_tiled(&x, &w, &[], pad, tile);
+        assert!(ftiled.mse(&whole) < 1e-9, "h{h} pad{pad}: {}", ftiled.mse(&whole));
+    }
+}
+
+/// The tile length is kernel-derived: a power of two covering the
+/// kernel with at least half of every block valid.
+#[test]
+fn default_tile_len_is_kernel_derived() {
+    for r in [1usize, 3, 5, 7, 11, 13, 15] {
+        let s = default_tile_len(r);
+        assert!(s.is_power_of_two() && s >= r);
+        assert!(s - r + 1 > s / 2, "r{r}: valid fraction of tile {s} too small");
+    }
+    assert_eq!(default_tile_len(11), 64);
+}
+
+/// Engine level: on a large-image large-kernel descriptor the
+/// whole-image engines decline (kernel-plane cap) but the tiled engines
+/// plan, run through a reused `Workspace` with zero steady-state heap
+/// allocations, and match direct convolution.
+#[test]
+fn tiled_engines_bound_workspace_where_whole_image_declines() {
+    let sel = default_selector();
+    // padded 82 rounds to 128² whole-image planes: 16·16·128² > the
+    // kernel-plane cap, while the tiled planes are 16·16·64² — inside it
+    let d = ConvDesc::new(1, 16, 16, 72, 72, 11, 1, 5);
+    assert!(sel.plan_named("FFT", &d).is_err(), "whole-image FFT must decline");
+    assert!(sel.plan_named("NTT", &d).is_err(), "whole-image NTT must decline");
+    let mut rng = Pcg32::seeded(0xAB);
+    let x = rand_tensor(&[1, 16, 72, 72], &mut rng, 1.0);
+    let w = rand_tensor(&[16, 16, 11, 11], &mut rng, 0.1);
+    let want = conv2d_direct(&x, &w, &[], 1, 5);
+    for name in ["FFT-tiled", "NTT-tiled"] {
+        let plan = sel.plan_named(name, &d).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let mut ws = Workspace::new();
+        let mut out = Tensor::zeros(&plan.out_dims(&x, &w));
+        plan.run_into(&x, &w, &[], &mut ws, &mut out);
+        let tol = if name == "FFT-tiled" { 1e-10 } else { 1e-3 };
+        assert!(rel_mse(&out, &want) < tol, "{name}: rel mse {}", rel_mse(&out, &want));
+        let warm = ws.heap_allocs();
+        out.data.fill(f32::NAN);
+        plan.run_into(&x, &w, &[], &mut ws, &mut out);
+        assert!(rel_mse(&out, &want) < tol, "{name}: warm rerun");
+        assert_eq!(ws.heap_allocs(), warm, "{name}: steady state must not allocate");
+        assert_eq!(ws.in_use_bytes(), 0, "{name}: all buffers returned");
+    }
+}
+
+/// The quantized spatial path dispatches the tiled kernel from the plan
+/// and stays bit-identical to the whole-image NTT layer — both are
+/// exact integer datapaths under identical calibration.
+#[test]
+fn quantized_spatial_ntt_tiled_matches_whole_image_layer() {
+    let mut rng = Pcg32::seeded(0x51C);
+    let spec = QuantSpec::spatial_default(8);
+    let d = ConvDesc::new(1, 3, 4, 20, 20, 7, 1, 3).with_quant(spec);
+    let x = rand_tensor(&[1, 3, 20, 20], &mut rng, 1.0);
+    let w = rand_tensor(&[4, 3, 7, 7], &mut rng, 0.3);
+    let sel = default_selector();
+    let calib = QCalib::MaxAbs(x.max_abs());
+    let qn = QConvLayer::from_plan(
+        sel.plan_named("NTT", &d).unwrap(),
+        &w,
+        vec![0.1; 4],
+        &calib,
+    );
+    let qt = QConvLayer::from_plan(
+        sel.plan_named("NTT-tiled", &d).unwrap(),
+        &w,
+        vec![0.1; 4],
+        &calib,
+    );
+    assert_eq!(qt.engine(), "NTT-tiled");
+    let yn = qn.forward(&x);
+    let yt = qt.forward(&x);
+    assert_eq!(yt.dims, yn.dims);
+    assert_eq!(yt.data, yn.data, "tiled quantized spatial arm must be bit-identical");
+}
