@@ -56,6 +56,16 @@ pub fn core_budget() -> (usize, usize, usize) {
     crate::util::par::CoreBudget::snapshot()
 }
 
+/// Snapshot of the persistent executor-pool gauges
+/// ([`crate::util::pool::gauges`]): resident workers, tasks executed,
+/// tasks stolen off another thread's deque, thread spawns avoided by
+/// reusing resident workers, and park/unpark transitions. Reported by
+/// `sfc serve` / `sfc loadgen` and recorded in the BENCH_conv.json
+/// `pool` block (schema ≥ 7).
+pub fn pool_gauges() -> crate::util::pool::PoolGauges {
+    crate::util::pool::gauges()
+}
+
 /// Latency summary over a set of per-request samples (seconds).
 #[derive(Clone, Copy, Debug)]
 pub struct LatencyStats {

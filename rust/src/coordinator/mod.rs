@@ -90,6 +90,16 @@ fn core_budget_line() -> String {
     format!("{total} lanes · {leased} leased now · peak {peak} concurrent")
 }
 
+/// One executor-pool report line: resident workers plus the lifetime
+/// task/steal/spawn-avoided/park counters ([`metrics::pool_gauges`]).
+fn pool_line() -> String {
+    let g = metrics::pool_gauges();
+    format!(
+        "{} workers · {} tasks · {} steals · {} spawns avoided · {} parks / {} unparks",
+        g.workers, g.tasks, g.steals, g.spawn_avoided, g.parks, g.unparks
+    )
+}
+
 /// `sfc serve` — the end-to-end demo: load a model (PJRT AOT artifact,
 /// or the pure-Rust engine stack with `--runner engine`), serve a stream
 /// of requests from the SynthImage test split, report accuracy, latency
@@ -193,6 +203,7 @@ pub fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
     println!("  batches    : {}", server.batches_executed());
     println!("  kernel     : {}", metrics::kernel_name());
     println!("  core budget: {}", core_budget_line());
+    println!("  pool       : {}", pool_line());
     let (hits, misses) = metrics::plan_cache_counters();
     println!("  plan cache : {hits} hits / {misses} misses");
     println!(
@@ -309,6 +320,7 @@ fn serve_multi(
     );
     println!("  kernel     : {}", metrics::kernel_name());
     println!("  core budget: {}", core_budget_line());
+    println!("  pool       : {}", pool_line());
     server.shutdown();
     Ok(())
 }
@@ -398,6 +410,7 @@ pub fn cmd_loadgen(opts: &HashMap<String, String>) -> Result<()> {
         metrics::kernel_name()
     );
     println!("loadgen: core budget {}", core_budget_line());
+    println!("loadgen: pool {}", pool_line());
     server.shutdown();
     Ok(())
 }

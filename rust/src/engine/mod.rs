@@ -439,6 +439,14 @@ impl ConvPlan {
         let d = &self.desc;
         let (oh, ow) = d.out_hw();
         let workers = crate::util::par::num_threads().min(d.batch.max(1));
+        // worker-state cap for the per-(image, block) tiled executors:
+        // one stealable task per overlap-save block, so up to
+        // batch·⌈OH/step⌉·⌈OW/step⌉ states are live (step = S − R + 1)
+        let tiled_workers = |tile: usize| {
+            let step = (tile + 1).saturating_sub(d.r).max(1);
+            let njobs = d.batch.max(1) * oh.div_ceil(step) * ow.div_ceil(step);
+            crate::util::par::num_threads().min(njobs).max(1)
+        };
         match &self.kernel {
             // direct accumulates in the output planes themselves
             PlanKernel::Direct => 0,
@@ -483,15 +491,20 @@ impl ConvPlan {
             }
             // the tiled arms mirror their whole-image twins with the
             // padded power-of-two grid replaced by the fixed tile — the
-            // transform scratch no longer grows with the image
+            // transform scratch no longer grows with the image. They
+            // parallelize per (image, block), not per image, so the
+            // worker-state count is capped by batch·blocks instead of
+            // batch.
             PlanKernel::FftTiled { tile } => {
                 let s2 = tile * tile;
+                let workers = tiled_workers(*tile);
                 let shared = 2 * d.oc * d.ic * s2;
                 let per_worker = 2 * d.ic * s2 + 2 * s2 + 2 * tile;
                 (shared + workers * per_worker) * 8
             }
             PlanKernel::NttTiled { tile } => {
                 let s2 = tile * tile;
+                let workers = tiled_workers(*tile);
                 let shared = d.oc * d.ic * s2 + tile; // knt + column scratch
                 let per_worker = d.ic * s2 + s2 + tile;
                 let quant = d.batch * d.ic * d.h * d.w + d.oc * d.ic * d.r * d.r; // i8

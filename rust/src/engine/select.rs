@@ -66,6 +66,17 @@ pub struct BlockTuneEntry {
     pub selected: bool,
 }
 
+/// One row of a tile-length sweep report ([`Selector::tune_tile_len`]).
+#[derive(Clone, Copy, Debug)]
+pub struct TileTuneEntry {
+    /// the overlap-save transform length that was measured
+    pub tile_len: usize,
+    /// measured median seconds per run
+    pub median_s: f64,
+    /// true on the measured winner
+    pub selected: bool,
+}
+
 /// One row of an autotune report.
 #[derive(Clone, Copy, Debug)]
 pub struct TuneEntry {
@@ -319,6 +330,58 @@ impl Selector {
         Ok(entries)
     }
 
+    /// Sweep overlap-save transform lengths for one (tiled) engine on
+    /// one descriptor: install each power-of-two candidate ≥ the kernel
+    /// through [`super::tiled::set_tile_len_override`], **re-plan under
+    /// it** (workspace bounds depend on the tile), measure, and return
+    /// the report fastest first (winner flagged). The override is
+    /// cleared afterwards — committing the winner is the caller's job
+    /// (via [`TuningTable::set_tile_len`] + [`tuning::install_global`]).
+    pub fn tune_tile_len(
+        &self,
+        engine: &str,
+        d: &ConvDesc,
+        cfg: AutotuneCfg,
+    ) -> Result<Vec<TileTuneEntry>> {
+        use super::tiled;
+        let Some(e) = self.engine_named(engine) else {
+            bail!("unknown engine '{engine}'")
+        };
+        if !e.supports(d) {
+            bail!("engine '{}' does not support descriptor {:?}", e.name(), d);
+        }
+        let (x, w) = Self::synthetic_workload(d);
+        let mut entries = Vec::new();
+        for t in [8usize, 16, 32, 64, 128] {
+            if t < d.r {
+                continue;
+            }
+            // the override must be live while planning: plans bake the
+            // tile into their gather geometry and workspace bounds.
+            // Cleared again before measuring — the baked plan carries it.
+            tiled::set_tile_len_override(Some(t));
+            let planned = e.plan(d);
+            tiled::set_tile_len_override(None);
+            // a candidate can push the engine past its kernel-plane
+            // cap on big-channel shapes — skip it, don't fail the sweep
+            let Ok(plan) = planned else { continue };
+            let plan = Arc::new(plan);
+            let median_s = Self::measure_plan(d, &plan, &x, &w, cfg);
+            entries.push(TileTuneEntry { tile_len: t, median_s, selected: false });
+        }
+        tiled::set_tile_len_override(None);
+        anyhow::ensure!(!entries.is_empty(), "no tile candidate covers kernel r={}", d.r);
+        let best = entries
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.median_s.partial_cmp(&b.1.median_s).unwrap())
+            .map(|(i, _)| i)
+            .expect("non-empty candidate list");
+        entries[best].selected = true;
+        entries.sort_by(|a, b| a.median_s.partial_cmp(&b.median_s).unwrap());
+        Ok(entries)
+    }
+
     fn autotune_with(&self, d: &ConvDesc, cfg: AutotuneCfg) -> Result<Vec<TuneEntry>> {
         let cands = self.candidates(d);
         if cands.is_empty() {
@@ -475,6 +538,27 @@ mod tests {
         assert_eq!(crate::linalg::gemm::active_blocking(), def);
         // unknown engines are a clean error
         assert!(sel.tune_blocking("nope", &d, cfg).is_err());
+    }
+
+    #[test]
+    fn tile_sweep_reports_candidates_and_restores_the_override() {
+        let _guard = crate::linalg::simd::TEST_OVERRIDE_LOCK
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        let sel = isolated(Policy::Heuristic);
+        let d = ConvDesc::new(1, 3, 4, 12, 12, 3, 1, 1);
+        let cfg = AutotuneCfg { warmup: 0, iters: 1 };
+        let entries = sel.tune_tile_len("FFT-tiled", &d, cfg).unwrap();
+        // every power-of-two candidate ≥ r=3 fits this tiny shape
+        assert_eq!(entries.len(), 5, "got {entries:?}");
+        assert_eq!(entries.iter().filter(|t| t.selected).count(), 1);
+        assert!(entries.windows(2).all(|w| w[0].median_s <= w[1].median_s));
+        for t in &entries {
+            assert!(t.tile_len.is_power_of_two() && t.tile_len >= d.r);
+        }
+        // the sweep must not leave a process-wide override behind
+        assert_eq!(crate::engine::tiled::tile_len_override(), None);
+        assert!(sel.tune_tile_len("nope", &d, cfg).is_err());
     }
 
     #[test]

@@ -28,12 +28,43 @@ use super::workspace::Workspace;
 use crate::algo::ntt::P;
 use crate::linalg::simd::quantize_i8_slice;
 use crate::nn::tensor::Tensor;
-use crate::util::par::{num_threads, par_chunks_states};
+use crate::util::par::{num_threads, par_jobs_states};
+use crate::util::pool::SendPtr;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Default transform length for kernel size `r`: the smallest power of
-/// two ≥ `max(16, 4·(r − 1))`, so the valid fraction of every block is
-/// at least ¾ while the per-block transform stays cache-resident.
+/// Process-wide tuned tile length (0 = unset). Installed by the
+/// autotuner (tuning-table schema ≥ 3) through
+/// [`set_tile_len_override`]; consulted by [`default_tile_len`].
+static TILE_LEN_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Install (or clear, with `None`) a process-wide tile-length override.
+/// The override wins in [`default_tile_len`] only when it is valid for
+/// the requested kernel (power of two and ≥ `r`); otherwise the
+/// closed-form rule applies, so a table tuned on large kernels can
+/// never break small ones.
+pub fn set_tile_len_override(tile: Option<usize>) {
+    TILE_LEN_OVERRIDE.store(tile.unwrap_or(0), Ordering::Relaxed);
+}
+
+/// The currently installed tile-length override, if any.
+pub fn tile_len_override() -> Option<usize> {
+    match TILE_LEN_OVERRIDE.load(Ordering::Relaxed) {
+        0 => None,
+        t => Some(t),
+    }
+}
+
+/// Default transform length for kernel size `r`: the autotuned override
+/// when one is installed *and* valid for this kernel (power of two,
+/// ≥ `r`), else the smallest power of two ≥ `max(16, 4·(r − 1))` — that
+/// closed-form keeps the valid fraction of every block at least ¾ while
+/// the per-block transform stays cache-resident.
 pub fn default_tile_len(r: usize) -> usize {
+    if let Some(t) = tile_len_override() {
+        if t.is_power_of_two() && t >= r {
+            return t;
+        }
+    }
     (4 * (r.saturating_sub(1))).max(16).next_power_of_two()
 }
 
@@ -119,7 +150,11 @@ pub fn conv2d_fft_tiled_into(
         cr: Vec<f64>,
         ci: Vec<f64>,
     }
-    let workers = num_threads().min(n).max(1);
+    // One stealable pool task per (image, block): fine enough that a
+    // few large blocks can't serialize the tail, and every task's
+    // output cells are disjoint (blocks partition the output plane).
+    let njobs = n * g.nby * g.nbx;
+    let workers = num_threads().min(njobs).max(1);
     let mut states: Vec<St> = (0..workers)
         .map(|_| St {
             xre: ws.take_f64(ic * s2),
@@ -131,61 +166,65 @@ pub fn conv2d_fft_tiled_into(
         })
         .collect();
     let inv_scale = 1.0 / s2 as f64;
-    par_chunks_states(&mut out.data, oc * oh * ow, &mut states, |st, ni, out_img| {
-        for by in 0..g.nby {
-            for bx in 0..g.nbx {
-                // block output origin; the input window starts at the
-                // same coordinate in the *padded* frame and spans S
-                // (halo = R − 1 rows/cols shared with the next block)
-                let oy0 = by * g.step;
-                let ox0 = bx * g.step;
-                let vy = g.step.min(oh - oy0);
-                let vx = g.step.min(ow - ox0);
-                st.xre.fill(0.0);
-                st.xim.fill(0.0);
-                for c in 0..ic {
-                    let base = c * s2;
-                    let plane = x.plane(ni, c);
-                    for y in 0..s {
-                        let py = oy0 + y; // padded-frame row
-                        if py < pad || py >= h + pad {
-                            continue;
-                        }
-                        let yy = py - pad;
-                        for xcol in 0..s {
-                            let px = ox0 + xcol;
-                            if px < pad || px >= wid + pad {
-                                continue;
-                            }
-                            st.xre[base + y * s + xcol] = plane[yy * wid + (px - pad)] as f64;
-                        }
-                    }
-                    let xre = &mut st.xre[base..base + s2];
-                    let xim = &mut st.xim[base..base + s2];
-                    fft2d(xre, xim, s, s, false, &mut st.cr, &mut st.ci);
+    let op = SendPtr::new(out.data.as_mut_ptr());
+    par_jobs_states(njobs, &mut states, |st, job| {
+        let ni = job / (g.nby * g.nbx);
+        let by = (job / g.nbx) % g.nby;
+        let bx = job % g.nbx;
+        // block output origin; the input window starts at the
+        // same coordinate in the *padded* frame and spans S
+        // (halo = R − 1 rows/cols shared with the next block)
+        let oy0 = by * g.step;
+        let ox0 = bx * g.step;
+        let vy = g.step.min(oh - oy0);
+        let vx = g.step.min(ow - ox0);
+        st.xre.fill(0.0);
+        st.xim.fill(0.0);
+        for c in 0..ic {
+            let base = c * s2;
+            let plane = x.plane(ni, c);
+            for y in 0..s {
+                let py = oy0 + y; // padded-frame row
+                if py < pad || py >= h + pad {
+                    continue;
                 }
-                for o in 0..oc {
-                    st.acc_re.fill(0.0);
-                    st.acc_im.fill(0.0);
-                    for c in 0..ic {
-                        let xb = c * s2;
-                        let kb = (o * ic + c) * s2;
-                        for i in 0..s2 {
-                            let (ar, ai) = (st.xre[xb + i], st.xim[xb + i]);
-                            let (br, bi) = (kf_re[kb + i], kf_im[kb + i]);
-                            st.acc_re[i] += ar * br - ai * bi;
-                            st.acc_im[i] += ar * bi + ai * br;
-                        }
+                let yy = py - pad;
+                for xcol in 0..s {
+                    let px = ox0 + xcol;
+                    if px < pad || px >= wid + pad {
+                        continue;
                     }
-                    fft2d(&mut st.acc_re, &mut st.acc_im, s, s, true, &mut st.cr, &mut st.ci);
-                    let b = if bias.is_empty() { 0.0 } else { bias[o] };
-                    let plane = &mut out_img[o * oh * ow..(o + 1) * oh * ow];
-                    for j in 0..vy {
-                        for i in 0..vx {
-                            // overlap-save: skip the R − 1 wrapped rows/cols
-                            let v = st.acc_re[(j + r - 1) * s + (i + r - 1)] * inv_scale;
-                            plane[(oy0 + j) * ow + (ox0 + i)] = ep.apply(v as f32 + b);
-                        }
+                    st.xre[base + y * s + xcol] = plane[yy * wid + (px - pad)] as f64;
+                }
+            }
+            let xre = &mut st.xre[base..base + s2];
+            let xim = &mut st.xim[base..base + s2];
+            fft2d(xre, xim, s, s, false, &mut st.cr, &mut st.ci);
+        }
+        for o in 0..oc {
+            st.acc_re.fill(0.0);
+            st.acc_im.fill(0.0);
+            for c in 0..ic {
+                let xb = c * s2;
+                let kb = (o * ic + c) * s2;
+                for i in 0..s2 {
+                    let (ar, ai) = (st.xre[xb + i], st.xim[xb + i]);
+                    let (br, bi) = (kf_re[kb + i], kf_im[kb + i]);
+                    st.acc_re[i] += ar * br - ai * bi;
+                    st.acc_im[i] += ar * bi + ai * br;
+                }
+            }
+            fft2d(&mut st.acc_re, &mut st.acc_im, s, s, true, &mut st.cr, &mut st.ci);
+            let b = if bias.is_empty() { 0.0 } else { bias[o] };
+            let pbase = (ni * oc + o) * oh * ow;
+            for j in 0..vy {
+                for i in 0..vx {
+                    // overlap-save: skip the R − 1 wrapped rows/cols
+                    let v = st.acc_re[(j + r - 1) * s + (i + r - 1)] * inv_scale;
+                    // SAFETY: job (ni, by, bx) exclusively owns the
+                    // valid cells of its block in every output plane.
+                    unsafe {
+                        *op.get().add(pbase + (oy0 + j) * ow + (ox0 + i)) = ep.apply(v as f32 + b);
                     }
                 }
             }
@@ -272,54 +311,63 @@ pub fn ntt_corr2d_i8_tiled_into(
         acc: Vec<u64>,
         col: Vec<u64>,
     }
-    let workers = num_threads().min(n).max(1);
+    // One stealable pool task per (image, block); tasks write disjoint
+    // output cells, and the exact integer result of each block is
+    // independent of which worker runs it — the whole-image
+    // bit-identity contract is a property of the decomposition alone.
+    let njobs = n * g.nby * g.nbx;
+    let workers = num_threads().min(njobs).max(1);
     let mut states: Vec<St> = (0..workers)
         .map(|_| St { xnt: ws.take_u64(ic * s2), acc: ws.take_u64(s2), col: ws.take_u64(s) })
         .collect();
-    par_chunks_states(out, oc * oh * ow, &mut states, |st, ni, img_out| {
-        for by in 0..g.nby {
-            for bx in 0..g.nbx {
-                let oy0 = by * g.step;
-                let ox0 = bx * g.step;
-                let vy = g.step.min(oh - oy0);
-                let vx = g.step.min(ow - ox0);
-                st.xnt.fill(0);
-                for c in 0..ic {
-                    let base = c * s2;
-                    let plane = &xq[(ni * ic + c) * h * w..(ni * ic + c + 1) * h * w];
-                    for y in 0..s {
-                        let py = oy0 + y;
-                        if py < pad || py >= h + pad {
-                            continue;
-                        }
-                        let yy = py - pad;
-                        for xcol in 0..s {
-                            let px = ox0 + xcol;
-                            if px < pad || px >= w + pad {
-                                continue;
-                            }
-                            st.xnt[base + y * s + xcol] =
-                                ntt_encode(plane[yy * w + (px - pad)] as i64);
-                        }
-                    }
-                    ntt2d(&mut st.xnt[base..base + s2], s, s, false, &mut st.col);
+    let op = SendPtr::new(out.as_mut_ptr());
+    par_jobs_states(njobs, &mut states, |st, job| {
+        let ni = job / (g.nby * g.nbx);
+        let by = (job / g.nbx) % g.nby;
+        let bx = job % g.nbx;
+        let oy0 = by * g.step;
+        let ox0 = bx * g.step;
+        let vy = g.step.min(oh - oy0);
+        let vx = g.step.min(ow - ox0);
+        st.xnt.fill(0);
+        for c in 0..ic {
+            let base = c * s2;
+            let plane = &xq[(ni * ic + c) * h * w..(ni * ic + c + 1) * h * w];
+            for y in 0..s {
+                let py = oy0 + y;
+                if py < pad || py >= h + pad {
+                    continue;
                 }
-                for o in 0..oc {
-                    st.acc.fill(0);
-                    for c in 0..ic {
-                        let xb = c * s2;
-                        let kb = (o * ic + c) * s2;
-                        for i in 0..s2 {
-                            // operands < p < 2^30 ⇒ the product fits u64
-                            st.acc[i] = (st.acc[i] + st.xnt[xb + i] * knt[kb + i] % P) % P;
-                        }
+                let yy = py - pad;
+                for xcol in 0..s {
+                    let px = ox0 + xcol;
+                    if px < pad || px >= w + pad {
+                        continue;
                     }
-                    ntt2d(&mut st.acc, s, s, true, &mut st.col);
-                    for j in 0..vy {
-                        for i in 0..vx {
-                            img_out[o * oh * ow + (oy0 + j) * ow + (ox0 + i)] =
-                                ntt_decode(st.acc[(j + r - 1) * s + (i + r - 1)]);
-                        }
+                    st.xnt[base + y * s + xcol] = ntt_encode(plane[yy * w + (px - pad)] as i64);
+                }
+            }
+            ntt2d(&mut st.xnt[base..base + s2], s, s, false, &mut st.col);
+        }
+        for o in 0..oc {
+            st.acc.fill(0);
+            for c in 0..ic {
+                let xb = c * s2;
+                let kb = (o * ic + c) * s2;
+                for i in 0..s2 {
+                    // operands < p < 2^30 ⇒ the product fits u64
+                    st.acc[i] = (st.acc[i] + st.xnt[xb + i] * knt[kb + i] % P) % P;
+                }
+            }
+            ntt2d(&mut st.acc, s, s, true, &mut st.col);
+            let pbase = (ni * oc + o) * oh * ow;
+            for j in 0..vy {
+                for i in 0..vx {
+                    // SAFETY: job (ni, by, bx) exclusively owns the
+                    // valid cells of its block in every output plane.
+                    unsafe {
+                        *op.get().add(pbase + (oy0 + j) * ow + (ox0 + i)) =
+                            ntt_decode(st.acc[(j + r - 1) * s + (i + r - 1)]);
                     }
                 }
             }
@@ -437,6 +485,28 @@ mod tests {
             assert!(s.is_power_of_two() && s >= r, "r{r}: tile {s}");
             assert!(s - r + 1 >= s / 2, "r{r}: valid fraction too small ({s})");
         }
+    }
+
+    #[test]
+    fn tile_len_override_applies_only_when_valid() {
+        // Serialize against the selector's tile sweep, which also
+        // mutates the process-wide override.
+        let _guard = crate::linalg::simd::TEST_OVERRIDE_LOCK
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        // Values chosen so concurrently-running tests that consult
+        // `default_tile_len` stay on valid tiles at every step.
+        set_tile_len_override(Some(64));
+        assert_eq!(default_tile_len(3), 64);
+        assert_eq!(default_tile_len(11), 64);
+        set_tile_len_override(Some(6)); // not a power of two → ignored
+        assert_eq!(default_tile_len(3), 16);
+        set_tile_len_override(Some(4)); // valid for r=3, too small for r=11
+        assert_eq!(default_tile_len(3), 4);
+        assert_eq!(default_tile_len(11), 64);
+        set_tile_len_override(None);
+        assert_eq!(default_tile_len(3), 16);
+        assert_eq!(default_tile_len(11), 64);
     }
 
     #[test]

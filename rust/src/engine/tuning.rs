@@ -24,9 +24,11 @@ use std::sync::OnceLock;
 ///
 /// History: v1 = per-descriptor engine entries; v2 adds the table-level
 /// `blocking` object (the tuned GEMM macro-kernel Mc/Kc/Nc — see
-/// [`crate::linalg::gemm::Blocking`]). v1 files still load (they simply
-/// carry no blocking).
-pub const TUNING_SCHEMA_VERSION: u32 = 2;
+/// [`crate::linalg::gemm::Blocking`]); v3 adds the table-level
+/// `tile_len` field (the tuned overlap-save transform length installed
+/// via [`crate::engine::tiled::set_tile_len_override`]). Older files
+/// still load (they simply carry no blocking / tile length).
+pub const TUNING_SCHEMA_VERSION: u32 = 3;
 
 fn gran_code(g: Granularity) -> &'static str {
     match g {
@@ -82,6 +84,7 @@ pub struct TunedChoice {
 pub struct TuningTable {
     entries: HashMap<String, TunedChoice>,
     blocking: Option<Blocking>,
+    tile_len: Option<usize>,
 }
 
 impl TuningTable {
@@ -124,6 +127,17 @@ impl TuningTable {
         self.blocking
     }
 
+    /// Record the measured-fastest overlap-save tile length
+    /// (`sfc autotune`'s tile sweep; schema ≥ 3).
+    pub fn set_tile_len(&mut self, tile: Option<usize>) {
+        self.tile_len = tile;
+    }
+
+    /// The tuned overlap-save tile length carried by this table, if any.
+    pub fn tile_len(&self) -> Option<usize> {
+        self.tile_len
+    }
+
     /// Render the table as the tuning-file JSON (one entry per line,
     /// keys sorted, so committed files diff cleanly run to run).
     pub fn to_json(&self) -> String {
@@ -137,6 +151,9 @@ impl TuningTable {
                 "  \"blocking\": {{\"mc\": {}, \"kc\": {}, \"nc\": {}}},\n",
                 b.mc, b.kc, b.nc
             ));
+        }
+        if let Some(t) = self.tile_len {
+            body.push_str(&format!("  \"tile_len\": {t},\n"));
         }
         body.push_str("  \"entries\": [\n");
         let mut keys: Vec<&String> = self.entries.keys().collect();
@@ -179,6 +196,11 @@ impl TuningTable {
             let nc = num_field(line, "nc").context("blocking without nc")? as usize;
             blocking = Some(Blocking { mc, kc, nc });
         }
+        // likewise the tile_len line (entries never carry the field)
+        let mut tile_len = None;
+        if let Some(line) = text.lines().find(|l| l.contains("\"tile_len\"")) {
+            tile_len = Some(num_field(line, "tile_len").context("malformed tile_len")? as usize);
+        }
         let mut entries = HashMap::new();
         for line in text.lines() {
             let Some(desc) = quoted_field(line, "desc") else { continue };
@@ -191,7 +213,7 @@ impl TuningTable {
                 TunedChoice { engine: engine.to_string(), median_ns },
             );
         }
-        Ok(TuningTable { entries, blocking })
+        Ok(TuningTable { entries, blocking, tile_len })
     }
 
     /// Write the table to `path` as tuning-file JSON.
@@ -235,16 +257,22 @@ static GLOBAL_TUNING: OnceLock<TuningTable> = OnceLock::new();
 /// Install the process-wide tuning table. Errors if one is already
 /// installed (tables are startup configuration, not mutable state).
 /// A table that carries a tuned GEMM blocking also applies it
-/// process-wide ([`crate::linalg::gemm::set_blocking_override`]) — safe
-/// because every blocking is bit-identical, so this is purely a
-/// performance setting.
+/// process-wide ([`crate::linalg::gemm::set_blocking_override`]), and
+/// one that carries a tuned tile length installs it the same way
+/// ([`crate::engine::tiled::set_tile_len_override`]) — safe because
+/// every blocking is bit-identical and every valid tile length is
+/// output-exact, so both are purely performance settings.
 pub fn install_global(table: TuningTable) -> Result<()> {
     let blocking = table.blocking();
+    let tile_len = table.tile_len();
     GLOBAL_TUNING
         .set(table)
         .map_err(|_| anyhow::anyhow!("a global tuning table is already installed"))?;
     if blocking.is_some() {
         crate::linalg::gemm::set_blocking_override(blocking);
+    }
+    if tile_len.is_some() {
+        crate::engine::tiled::set_tile_len_override(tile_len);
     }
     Ok(())
 }
@@ -279,6 +307,7 @@ mod tests {
         t.insert(&d1, "SFC-6(6x6,3x3)", 1.25e-3);
         t.insert(&d2, "direct", 3.5e-4);
         t.set_blocking(Some(Blocking { mc: 64, kc: 512, nc: 256 }));
+        t.set_tile_len(Some(32));
         let text = t.to_json();
         let back = TuningTable::from_json(&text).unwrap();
         assert_eq!(back.len(), 2);
@@ -286,6 +315,7 @@ mod tests {
         assert_eq!(back.lookup(&d2).unwrap().engine, "direct");
         assert!((back.lookup(&d1).unwrap().median_ns - 1.25e6).abs() < 1.0);
         assert_eq!(back.blocking(), Some(Blocking { mc: 64, kc: 512, nc: 256 }));
+        assert_eq!(back.tile_len(), Some(32));
         // deterministic rendering (committed files must diff cleanly)
         assert_eq!(text, back.to_json());
     }
@@ -299,6 +329,20 @@ mod tests {
         let t = TuningTable::from_json(v1).unwrap();
         assert_eq!(t.len(), 1);
         assert_eq!(t.blocking(), None, "v1 files carry no blocking");
+        assert_eq!(t.tile_len(), None, "v1 files carry no tile length");
+    }
+
+    #[test]
+    fn accepts_v2_files_without_tile_len() {
+        let v2 = "{\n  \"tuning\": \"sfc-autotune\",\n  \"schema_version\": 2,\n  \
+                  \"kernel\": \"scalar\",\n  \
+                  \"blocking\": {\"mc\": 96, \"kc\": 256, \"nc\": 128},\n  \"entries\": [\n    \
+                  {\"desc\": \"b1_ic3_oc16_h32x32_r3_s1_p1_g1_d1_enone\", \
+                  \"engine\": \"direct\", \"median_ns\": 100.0}\n  ]\n}\n";
+        let t = TuningTable::from_json(v2).unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.blocking(), Some(Blocking { mc: 96, kc: 256, nc: 128 }));
+        assert_eq!(t.tile_len(), None, "v2 files carry no tile length");
     }
 
     #[test]

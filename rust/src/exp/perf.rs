@@ -434,7 +434,12 @@ pub fn run_scaling(cfg: &BenchCfg) -> Result<Vec<ScalingRow>> {
 /// full-mode shape rows: `192x192x8-r11` (large kernel + large image;
 /// whole-image FFT/NTT decline it) and `28x28x32-d2` (dilation 2;
 /// direct/im2col only).
-pub const BENCH_SCHEMA_VERSION: u32 = 6;
+/// v7: added the top-level `pool` object — the persistent
+/// executor-pool gauges at snapshot time (`workers` resident,
+/// lifetime `tasks` / `steals` / `spawn_avoided` counters, see
+/// [`crate::util::pool::gauges`]) — the observable proof that parallel
+/// regions ran as pool tasks instead of spawned threads.
+pub const BENCH_SCHEMA_VERSION: u32 = 7;
 
 /// Serialize rows as the BENCH_conv.json snapshot (no serde in this
 /// image — the format is flat enough to emit by hand).
@@ -453,6 +458,11 @@ pub fn to_json(
     s.push_str(&format!(
         "  \"blocking\": {{\"mc\": {}, \"kc\": {}, \"nc\": {}}},\n",
         blocking.mc, blocking.kc, blocking.nc
+    ));
+    let pg = crate::util::pool::gauges();
+    s.push_str(&format!(
+        "  \"pool\": {{\"workers\": {}, \"steals\": {}, \"spawn_avoided\": {}}},\n",
+        pg.workers, pg.steals, pg.spawn_avoided
     ));
     s.push_str(concat!(
         "  \"units\": {\"time\": \"ns/call\", \"rate\": \"GFLOP/s\"},\n",
@@ -541,6 +551,11 @@ pub fn cmd_bench(cfg: &BenchCfg, json: bool, out_path: &str) -> Result<()> {
             );
         }
     }
+    let pg = crate::util::pool::gauges();
+    println!(
+        "\npool: {} workers · {} tasks · {} steals · {} spawns avoided",
+        pg.workers, pg.tasks, pg.steals, pg.spawn_avoided
+    );
     if json {
         let body = to_json(&rows, &speedups, &scalings, kernel, threads, blocking);
         std::fs::write(out_path, &body).with_context(|| format!("write {out_path}"))?;
@@ -603,6 +618,8 @@ mod tests {
         assert!(j.contains("\"kernel\": \"avx2\""));
         assert!(j.contains("\"threads\": 4"));
         assert!(j.contains("\"blocking\": {\"mc\": 64, \"kc\": 512, \"nc\": 256}"));
+        assert!(j.contains("\"pool\": {\"workers\": "), "pool gauges block present: {j}");
+        assert!(j.contains("\"spawn_avoided\": "), "{j}");
         assert!(j.contains("\"engine\": \"direct\""));
         assert!(j.contains("\"ns_per_call\": 12.5"));
         assert!(j.contains("\"speedup\": 2.000"));

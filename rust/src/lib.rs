@@ -70,12 +70,15 @@
 //! * [`exp`] — experiment harnesses regenerating the paper's tables, and
 //!   [`exp::perf`]: the `sfc bench --json` perf-snapshot harness
 //!   (BENCH_conv.json, tracked across PRs).
-//! * [`util`] — PRNG / fp16 / timing shims, and [`util::par`]: the
-//!   parallel-for helpers plus the process-wide
-//!   [`util::par::CoreBudget`] lane pool that keeps model workers ×
-//!   intra-op GEMM threads from oversubscribing the host (observable
-//!   via [`coordinator::metrics::core_budget`], capped with
-//!   `sfc serve --cores N`).
+//! * [`util`] — PRNG / fp16 / timing shims, [`util::pool`]: the
+//!   persistent work-stealing executor pool every parallel region runs
+//!   on (lazily spawned process-lived workers, per-worker deques + an
+//!   injector queue, gauges via [`coordinator::metrics::pool_gauges`]),
+//!   and [`util::par`]: the data-parallel helpers over it plus the
+//!   process-wide [`util::par::CoreBudget`] lane budget that keeps
+//!   model workers × intra-op GEMM threads from oversubscribing the
+//!   host (observable via [`coordinator::metrics::core_budget`], capped
+//!   with `sfc serve --cores N`).
 #![warn(missing_docs)]
 
 pub mod algo;

@@ -23,14 +23,16 @@
 //!
 //! **Threading (BLIS/Goto pack-once/share-across-threads).** The
 //! dispatched entry points partition C's *rows* into contiguous spans
-//! (multiples of the register tile `MR`) and run one span per worker
-//! under a [`crate::util::par::CoreBudget`] lease; all workers consume
+//! (multiples of the register tile `MR`) and submit one span per task
+//! to the persistent executor pool, sized through the
+//! [`crate::util::pool::team`] entry point (a
+//! [`crate::util::par::CoreBudget`] lease); all executors consume
 //! disjoint M-tiles of the **same packed B buffer** — B is packed once
 //! (at plan time for weights, by the im2col lowering for activations)
 //! and only read concurrently. Small problems (below [`PAR_MIN_MACS`])
-//! stay serial so spawn cost never dominates, and a nested call (GEMM
-//! inside a batch-parallel worker) degrades to serial when the budget
-//! has no spare lanes.
+//! stay serial so scheduling cost never dominates, and a nested call
+//! (GEMM inside a batch-parallel worker) degrades to serial when the
+//! budget has no spare lanes.
 //!
 //! **Numerics contract.** Each output element is owned by exactly one
 //! worker and computed with one accumulator, `k` ascending, separate
@@ -54,11 +56,17 @@ const MR: usize = 4;
 const NR: usize = 4;
 
 /// Minimum problem size (m·n·k multiply-accumulates) before the
-/// dispatched GEMMs consider spawning worker threads. Below this, spawn
-/// and join overhead would dominate — e.g. the per-(freq, group) GEMMs
-/// of a small Winograd tile stay serial while the surrounding batch
-/// loop parallelizes, and a 56×56 im2col GEMM threads internally.
-pub const PAR_MIN_MACS: u64 = 1 << 21;
+/// dispatched GEMMs consider a multi-thread team. The threshold is
+/// pool-aware: enlisting a parked pool worker costs a queue push plus a
+/// condvar wake (order 1–2 µs), not the ~20 µs+ of the old
+/// spawn-per-call `thread::scope` path, so the floor sits 8× lower
+/// than the pre-pool `1 << 21`. At ~4 GMAC/s/core a 2¹⁸-MAC GEMM runs
+/// ~65 µs serial — comfortably above the pool's per-task overhead —
+/// while anything smaller is better served by the *batched* submit
+/// paths (`par_chunks_mut` over the per-(freq, group) sweep), which
+/// amortize one submission over many small GEMMs instead of teaming
+/// inside each one.
+pub const PAR_MIN_MACS: u64 = 1 << 18;
 
 // ---------------------------------------------------------------------
 // Cache-blocking parameters
@@ -171,26 +179,33 @@ fn gemm_team(m: usize, n: usize, k: usize) -> usize {
 }
 
 /// Split A/C into contiguous row spans of `span` rows (`span` a multiple
-/// of MR) and run `f(rows, a_span, c_span)` on each — span 0 on the
-/// calling thread, the rest on spawned workers that hold the caller's
-/// leased budget lanes. Every span is a disjoint `&mut` slice of C, so
-/// the partition is safe by construction; all spans read the same B.
+/// of MR) and run `f(rows, a_span, c_span)` on each — one pool task per
+/// span, span 0 guaranteed on the calling thread, up to `threads`
+/// executors under the caller's [`crate::util::pool::team`] lease.
+/// Every span is a disjoint sub-slice of C (the decomposition is fixed
+/// by `span`, never by which thread runs it — the bit-identity
+/// contract's anchor); all spans read the same B.
 fn par_rows<TA: Sync, TC: Send>(
-    span: usize,
+    threads: usize,
     k: usize,
     n: usize,
     a: &[TA],
     c: &mut [TC],
     f: impl Fn(usize, &[TA], &mut [TC]) + Sync,
 ) {
-    std::thread::scope(|s| {
-        let mut spans = a.chunks(span * k).zip(c.chunks_mut(span * n));
-        let (a0, c0) = spans.next().expect("at least one row span");
-        for (asub, csub) in spans {
-            let f = &f;
-            s.spawn(move || crate::util::par::counted_lane(|| f(csub.len() / n, asub, csub)));
-        }
-        f(c0.len() / n, a0, c0);
+    let m = c.len() / n;
+    let span = row_span(m, threads);
+    let njobs = m.div_ceil(span);
+    let cp = crate::util::pool::SendPtr::new(c.as_mut_ptr());
+    crate::util::pool::run(njobs, threads, |t| {
+        let lo = t * span;
+        let rows = span.min(m - lo);
+        let asub = &a[lo * k..(lo + rows) * k];
+        // SAFETY: task t exclusively owns C rows [lo, lo + rows) —
+        // spans tile 0..m without overlap.
+        let csub =
+            unsafe { std::slice::from_raw_parts_mut(cp.get().add(lo * n), rows * n) };
+        f(rows, asub, csub);
     });
 }
 
@@ -213,11 +228,10 @@ pub fn gemm_nt_f32(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [
     }
     let want = gemm_team(m, n, k);
     if want > 1 {
-        let lease = crate::util::par::CoreBudget::lease(want);
-        let threads = lease.threads().min(want);
+        let team = crate::util::pool::team(want);
+        let threads = team.threads().min(want);
         if threads > 1 {
-            let span = row_span(m, threads);
-            par_rows(span, k, n, &a[..m * k], &mut c[..m * n], |rows, asub, csub| {
+            par_rows(threads, k, n, &a[..m * k], &mut c[..m * n], |rows, asub, csub| {
                 gemm_nt_f32_serial(rows, n, k, asub, b, csub)
             });
             return;
@@ -372,11 +386,10 @@ pub fn gemm_nt_i8_i32(m: usize, n: usize, k: usize, a: &[i8], b: &[i8], c: &mut 
     }
     let want = gemm_team(m, n, k);
     if want > 1 {
-        let lease = crate::util::par::CoreBudget::lease(want);
-        let threads = lease.threads().min(want);
+        let team = crate::util::pool::team(want);
+        let threads = team.threads().min(want);
         if threads > 1 {
-            let span = row_span(m, threads);
-            par_rows(span, k, n, &a[..m * k], &mut c[..m * n], |rows, asub, csub| {
+            par_rows(threads, k, n, &a[..m * k], &mut c[..m * n], |rows, asub, csub| {
                 gemm_nt_i8_serial(rows, n, k, asub, b, csub)
             });
             return;
@@ -774,11 +787,10 @@ pub fn gemm_packed_f32(m: usize, n: usize, k: usize, a: &[f32], bp: &[f32], c: &
     assert!(c.len() >= m * n, "C too small: {} < {}", c.len(), m * n);
     let want = gemm_team(m, n, k);
     if want > 1 {
-        let lease = crate::util::par::CoreBudget::lease(want);
-        let threads = lease.threads().min(want);
+        let team = crate::util::pool::team(want);
+        let threads = team.threads().min(want);
         if threads > 1 {
-            let span = row_span(m, threads);
-            par_rows(span, k, n, &a[..m * k], &mut c[..m * n], |rows, asub, csub| {
+            par_rows(threads, k, n, &a[..m * k], &mut c[..m * n], |rows, asub, csub| {
                 gemm_packed_f32_single(rows, n, k, asub, bp, csub)
             });
             return;
@@ -797,11 +809,10 @@ pub fn gemm_packed_i8_i32(m: usize, n: usize, k: usize, a: &[i8], bp: &[i8], c: 
     assert!(c.len() >= m * n, "C too small: {} < {}", c.len(), m * n);
     let want = gemm_team(m, n, k);
     if want > 1 {
-        let lease = crate::util::par::CoreBudget::lease(want);
-        let threads = lease.threads().min(want);
+        let team = crate::util::pool::team(want);
+        let threads = team.threads().min(want);
         if threads > 1 {
-            let span = row_span(m, threads);
-            par_rows(span, k, n, &a[..m * k], &mut c[..m * n], |rows, asub, csub| {
+            par_rows(threads, k, n, &a[..m * k], &mut c[..m * n], |rows, asub, csub| {
                 gemm_packed_i8_single(rows, n, k, asub, bp, csub)
             });
             return;

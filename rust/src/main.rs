@@ -100,10 +100,11 @@ engine selection (cuDNN findAlgorithm-style):
               print measured times + the selected winner (--bits N asks
               for the intN transform-domain scheme; 0 = float); also
               sweeps the GEMM Mc/Kc/Nc cache-blocking candidates on the
-              largest shape's winner and pins the fastest; --out writes
-              the measured shape -> engine table (+ blocking, schema v2)
-              that `serve` and `loadgen` warm from via --tuning (no
-              re-measuring)
+              largest shape's winner (pinning the fastest) and the
+              overlap-save tile lengths for the tiled frequency arm;
+              --out writes the measured shape -> engine table
+              (+ blocking + tile length, schema v3) that `serve` and
+              `loadgen` warm from via --tuning (no re-measuring)
 
 perf snapshot (steady-state pre-packed run over a reused workspace):
   bench       [--json] [--out BENCH_conv.json] [--iters 9] [--warmup 2]
@@ -113,8 +114,10 @@ perf snapshot (steady-state pre-packed run over a reused workspace):
               scalar), the GEMM thread count (SFC_THREADS pins) and
               active Mc/Kc/Nc blocking, a scalar-vs-SIMD speedup block
               plus a 1-thread-vs-N scaling block on the dense 3x3
-              shapes, and end-to-end compiled-model rows (f32 + int8
-              MobileNet through the graph compiler) — schema v5; --json
+              shapes, end-to-end compiled-model rows (f32 + int8
+              MobileNet through the graph compiler) and the executor
+              pool gauges (workers/steals/spawn_avoided) — schema v7;
+              --json
               writes the machine-readable snapshot tracked across PRs;
               --quick is the CI smoke subset
 
@@ -500,6 +503,35 @@ fn cmd_autotune(opts: &HashMap<String, String>) -> Result<()> {
             "    selected blocking: mc={} kc={} nc={}\n",
             win.blocking.mc, win.blocking.kc, win.blocking.nc
         );
+    }
+
+    // Tile-length sweep: measure the overlap-save transform lengths for
+    // the tiled frequency-domain arm on the largest shape it supports
+    // and pin the fastest (schema v3), so `--tuning` warm-up installs it
+    // process-wide alongside the blocking.
+    let tiled_engine = if bits > 0 { "NTT-tiled" } else { "FFT-tiled" };
+    if let Some((macs, d)) = buckets
+        .iter()
+        .filter(|(d, _)| sel.engine_named(tiled_engine).is_some_and(|e| e.supports(d)))
+        .map(|(d, _)| (d.macs(), *d))
+        .max_by_key(|(m, _)| *m)
+    {
+        println!(
+            "tile sweep — {tiled_engine} on the largest supported shape ({:.1} MMACs):",
+            macs as f64 / 1e6
+        );
+        let entries = sel.tune_tile_len(tiled_engine, &d, AutotuneCfg { warmup: 1, iters })?;
+        for t in &entries {
+            println!(
+                "  {} tile={:<4} {:>9.3} ms",
+                if t.selected { "*" } else { " " },
+                t.tile_len,
+                t.median_s * 1e3
+            );
+        }
+        let win = entries.iter().find(|t| t.selected).expect("sweep flags a winner");
+        table.set_tile_len(Some(win.tile_len));
+        println!("    selected tile length: {}\n", win.tile_len);
     }
 
     if let Some(path) = out_path {

@@ -741,18 +741,21 @@ pub fn conv2d_fast_packed_into(
             }
         }
         // 2) per-(frequency, group) packed GEMM (runtime-dispatched):
-        //    P[uv][g] = V[uv][g] · U[uv][g]ᵀ ([tiles×IC/g]·[IC/g×OC/g])
-        for uv in 0..tt {
-            for gi in 0..groups {
-                let vb = (uv * groups + gi) * n_tiles * icg;
-                let ub = (uv * groups + gi) * blk;
-                let pb = (uv * groups + gi) * n_tiles * ocg;
-                let vblk = &st.v[vb..vb + n_tiles * icg];
-                let ublk = &up[ub..ub + blk];
-                let pblk = &mut st.p[pb..pb + n_tiles * ocg];
-                gemm_packed_f32(n_tiles, ocg, icg, vblk, ublk, pblk);
-            }
-        }
+        //    P[uv][g] = V[uv][g] · U[uv][g]ᵀ ([tiles×IC/g]·[IC/g×OC/g]).
+        //    The tt·groups products are independent (disjoint P blocks,
+        //    job = uv·groups + gi), so they go out as one batched pool
+        //    submit — stealable tasks instead of a serial loop. When
+        //    this image worker already holds the only budget lane the
+        //    helper degrades to the same serial job order.
+        let v = &st.v;
+        let pblocks = &mut st.p[..tt * groups * n_tiles * ocg];
+        par_chunks_mut(pblocks, n_tiles * ocg, |job, pblk| {
+            let vb = job * n_tiles * icg;
+            let ub = job * blk;
+            let vblk = &v[vb..vb + n_tiles * icg];
+            let ublk = &up[ub..ub + blk];
+            gemm_packed_f32(n_tiles, ocg, icg, vblk, ublk, pblk);
+        });
         // 3) lane-batched inverse transform + scatter into this image's
         //    output chunk
         for o in 0..oc {

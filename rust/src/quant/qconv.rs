@@ -710,18 +710,19 @@ fn forward_transform_q(
         }
         // 2) dispatched integer per-(frequency, group) packed GEMM,
         //    i32 accumulation (exact): PI[uv][g] = Vq[uv][g] · Wq[uv][g]ᵀ
-        //    ([tiles×IC/g]·[IC/g×OC/g])
-        for uv in 0..tt {
-            for gi in 0..groups {
-                let vb = (uv * groups + gi) * n_tiles * icg;
-                let ub = (uv * groups + gi) * blk;
-                let pb = (uv * groups + gi) * n_tiles * ocg;
-                let vblk = &st.vq[vb..vb + n_tiles * icg];
-                let ublk = &wqp[ub..ub + blk];
-                let pblk = &mut st.pi[pb..pb + n_tiles * ocg];
-                gemm_packed_i8_i32(n_tiles, ocg, icg, vblk, ublk, pblk);
-            }
-        }
+        //    ([tiles×IC/g]·[IC/g×OC/g]). The tt·groups products are
+        //    independent (disjoint PI blocks, job = uv·groups + gi), so
+        //    they are submitted as one batch of stealable pool tasks;
+        //    integer accumulation is exact under any schedule.
+        let vq = &st.vq;
+        let piblocks = &mut st.pi[..tt * groups * n_tiles * ocg];
+        par_chunks_mut(piblocks, n_tiles * ocg, |job, pblk| {
+            let vb = job * n_tiles * icg;
+            let ub = job * blk;
+            let vblk = &vq[vb..vb + n_tiles * icg];
+            let ublk = &wqp[ub..ub + blk];
+            gemm_packed_i8_i32(n_tiles, ocg, icg, vblk, ublk, pblk);
+        });
         // 3) lane-batched dequantize + inverse transform + bias + scatter
         for o in 0..oc {
             let (gi, ol) = (o / ocg, o % ocg);

@@ -1,5 +1,7 @@
 //! Small self-contained utilities: deterministic PRNG, software fp16
-//! rounding, timing helpers and a scoped thread-pool shim.
+//! rounding, timing helpers, the persistent work-stealing executor
+//! pool ([`pool`]) and the data-parallel helpers ([`par`]) that run on
+//! it.
 //!
 //! The build environment vendors only `xla` + `anyhow`, so the usual
 //! ecosystem crates (rand, half, rayon, criterion) are reimplemented here in
@@ -9,6 +11,7 @@ pub mod rng;
 pub mod fp16;
 pub mod timer;
 pub mod par;
+pub mod pool;
 
 pub use fp16::round_fp16;
 pub use rng::Pcg32;

@@ -1,17 +1,24 @@
-//! Data-parallel helpers on std::thread::scope (rayon is not vendored),
-//! plus the process-wide [`CoreBudget`] that arbitrates cores between
-//! the serving layer's per-model workers and the intra-op GEMM threads.
+//! Data-parallel helpers on the persistent work-stealing pool
+//! ([`crate::util::pool`]; rayon is not vendored), plus the
+//! process-wide [`CoreBudget`] that arbitrates cores between the
+//! serving layer's per-model workers and the intra-op GEMM threads.
 //!
 //! The engine's hot loops parallelize over independent chunks (image
-//! batches, output channels, tile groups, GEMM row spans); a static
-//! chunking over the available cores is enough and keeps the scheduling
-//! deterministic. Every helper runs its first chunk on the calling
-//! thread and spawns workers only for the rest, and every spawned
-//! worker occupies a leased [`CoreBudget`] lane — so nesting (a model
-//! worker running a batch-parallel conv whose GEMM would also like to
-//! thread) degrades gracefully to serial inner loops instead of
-//! oversubscribing the host.
+//! batches, output channels, tile groups, (frequency, group) GEMM
+//! blocks, GEMM row spans); a static chunking over the available cores
+//! is enough and keeps the *decomposition* deterministic — which chunk
+//! exists and what it writes never depends on scheduling, only which
+//! thread happens to execute it does. Every helper sizes its team
+//! through the single [`crate::util::pool::team`] entry point
+//! (`SFC_THREADS` / [`set_thread_override`] / [`CoreBudget`] lanes all
+//! meet there), runs its first chunk on the calling thread, and hands
+//! the rest to parked pool workers — so nesting (a model worker running
+//! a batch-parallel conv whose GEMM would also like to thread) degrades
+//! gracefully to serial inner loops instead of oversubscribing the
+//! host, and a helper invocation costs a queue push, not a thread
+//! spawn.
 
+use super::pool;
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
@@ -188,37 +195,30 @@ pub fn counted_lane<R>(f: impl FnOnce() -> R) -> R {
 }
 
 /// Parallel for over `0..n`: invokes `f(i)` for each index, splitting the
-/// range into contiguous chunks across worker threads. `f` must be Sync.
-/// The first chunk runs on the calling thread; spawned workers hold
-/// leased [`CoreBudget`] lanes.
+/// range into contiguous chunks across the pool's worker team. `f` must
+/// be Sync. The first chunk runs on the calling thread; the team is
+/// sized (and its [`CoreBudget`] lanes leased) by
+/// [`crate::util::pool::team`].
 pub fn par_for(n: usize, f: impl Fn(usize) + Sync) {
-    let want = num_threads().min(n.max(1));
-    if want <= 1 || n <= 1 {
+    if n <= 1 {
         for i in 0..n {
             f(i);
         }
         return;
     }
-    let lease = CoreBudget::lease(want);
-    let threads = lease.threads().min(n);
-    let chunk = n.div_ceil(threads);
-    std::thread::scope(|s| {
-        for t in 1..threads {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || {
-                counted_lane(|| {
-                    for i in lo..hi {
-                        f(i);
-                    }
-                })
-            });
+    let team = pool::team(n);
+    let threads = team.threads().min(n);
+    if threads <= 1 {
+        for i in 0..n {
+            f(i);
         }
-        for i in 0..chunk.min(n) {
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    pool::run(n.div_ceil(chunk), threads, |t| {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(n);
+        for i in lo..hi {
             f(i);
         }
     });
@@ -237,37 +237,36 @@ pub fn par_for(n: usize, f: impl Fn(usize) + Sync) {
 /// rely on `Drop` running when the map aborts.
 pub fn par_map<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
     let mut out: Vec<T> = Vec::with_capacity(n);
-    let want = num_threads().min(n.max(1));
-    if want <= 1 || n <= 1 {
+    if n <= 1 {
         out.extend((0..n).map(f));
         return out;
     }
-    let lease = CoreBudget::lease(want);
-    let threads = lease.threads().min(n);
+    let team = pool::team(n);
+    let threads = team.threads().min(n);
+    if threads <= 1 {
+        out.extend((0..n).map(f));
+        return out;
+    }
     let chunk = n.div_ceil(threads);
     {
         let slots = &mut out.spare_capacity_mut()[..n];
-        std::thread::scope(|s| {
-            let mut chunks = slots.chunks_mut(chunk);
-            let first = chunks.next().expect("n > 0");
-            for (t, slot_chunk) in chunks.enumerate() {
-                let f = &f;
-                s.spawn(move || {
-                    counted_lane(|| {
-                        for (j, slot) in slot_chunk.iter_mut().enumerate() {
-                            slot.write(f((t + 1) * chunk + j));
-                        }
-                    })
-                });
-            }
-            for (j, slot) in first.iter_mut().enumerate() {
-                slot.write(f(j));
+        let base = pool::SendPtr::new(slots.as_mut_ptr());
+        pool::run(n.div_ceil(chunk), threads, |t| {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            for i in lo..hi {
+                // SAFETY: task t exclusively owns slots[t*chunk ..
+                // (t+1)*chunk).min(n)] — tasks cover disjoint ranges of
+                // the spare capacity, each slot written exactly once.
+                unsafe {
+                    base.get().add(i).write(std::mem::MaybeUninit::new(f(i)));
+                }
             }
         });
     }
-    // SAFETY: the scope joined every worker; together the disjoint chunks
-    // cover exactly `out[..n]`, so all n slots are initialized. A worker
-    // panic propagates out of the scope above before reaching this line.
+    // SAFETY: pool::run joined every task; together the disjoint chunks
+    // cover exactly `out[..n]`, so all n slots are initialized. A task
+    // panic propagates out of pool::run before reaching this line.
     unsafe { out.set_len(n) };
     out
 }
@@ -288,87 +287,117 @@ pub fn par_chunks_states<S: Send, T: Send>(
 ) {
     assert!(chunk_size > 0, "chunk_size must be positive");
     assert!(!states.is_empty(), "need at least one worker state");
-    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_size).enumerate().collect();
-    let nc = chunks.len();
+    let len = data.len();
+    let nc = len.div_ceil(chunk_size);
+    let serial = |states: &mut [S]| {
+        let st = &mut states[0];
+        for (i, c) in data.chunks_mut(chunk_size).enumerate() {
+            f(st, i, c);
+        }
+    };
     let want = states.len().min(nc);
     if want <= 1 {
-        let st = &mut states[0];
-        for (i, c) in chunks {
-            f(st, i, c);
-        }
+        serial(states);
         return;
     }
-    let lease = CoreBudget::lease(want);
-    let threads = lease.threads().min(want);
+    let team = pool::team(want);
+    let threads = team.threads().min(want);
     if threads <= 1 {
-        let st = &mut states[0];
-        for (i, c) in chunks {
-            f(st, i, c);
-        }
+        serial(states);
         return;
     }
     let per = nc.div_ceil(threads);
-    std::thread::scope(|s| {
-        let mut iter = chunks.into_iter();
-        let first_batch: Vec<(usize, &mut [T])> = iter.by_ref().take(per).collect();
-        let (st0, rest) = states.split_first_mut().expect("non-empty states");
-        for st in rest.iter_mut() {
-            let batch: Vec<(usize, &mut [T])> = iter.by_ref().take(per).collect();
-            if batch.is_empty() {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || {
-                counted_lane(|| {
-                    for (i, c) in batch {
-                        f(st, i, c);
-                    }
-                })
-            });
+    let dp = pool::SendPtr::new(data.as_mut_ptr());
+    let sp = pool::SendPtr::new(states.as_mut_ptr());
+    pool::run(nc.div_ceil(per), threads, |b| {
+        // SAFETY: task b exclusively owns states[b] (one task per state,
+        // nc.div_ceil(per) <= threads <= states.len()) and the disjoint
+        // chunk range [b*per, (b+1)*per).min(nc) of `data` — the same
+        // contiguous batch-per-state decomposition as the serial path,
+        // so which state sees which chunk stays deterministic.
+        let st = unsafe { &mut *sp.get().add(b) };
+        let lo = b * per;
+        let hi = ((b + 1) * per).min(nc);
+        for i in lo..hi {
+            let c0 = i * chunk_size;
+            let c1 = ((i + 1) * chunk_size).min(len);
+            let chunk = unsafe { std::slice::from_raw_parts_mut(dp.get().add(c0), c1 - c0) };
+            f(st, i, chunk);
         }
-        for (i, c) in first_batch {
-            f(st0, i, c);
+    });
+}
+
+/// Run `njobs` independent jobs `f(&mut state, job)` across per-worker
+/// states: jobs are split into contiguous batches, one batch per state,
+/// exactly like [`par_chunks_states`] but over a bare index domain —
+/// for loops whose output regions can't be expressed as a slice
+/// partition (the tiled engines' per-block scatter writes). Which state
+/// runs which job is deterministic for a fixed worker count; the
+/// callback owns the proof that distinct jobs write disjoint data.
+pub fn par_jobs_states<S: Send>(njobs: usize, states: &mut [S], f: impl Fn(&mut S, usize) + Sync) {
+    assert!(!states.is_empty(), "need at least one worker state");
+    let want = states.len().min(njobs);
+    let serial = |states: &mut [S]| {
+        let st = &mut states[0];
+        for j in 0..njobs {
+            f(st, j);
+        }
+    };
+    if want <= 1 {
+        serial(states);
+        return;
+    }
+    let team = pool::team(want);
+    let threads = team.threads().min(want);
+    if threads <= 1 {
+        serial(states);
+        return;
+    }
+    let per = njobs.div_ceil(threads);
+    let sp = pool::SendPtr::new(states.as_mut_ptr());
+    pool::run(njobs.div_ceil(per), threads, |b| {
+        // SAFETY: task b exclusively owns states[b]: one task per
+        // state, njobs.div_ceil(per) <= threads <= states.len().
+        let st = unsafe { &mut *sp.get().add(b) };
+        let lo = b * per;
+        let hi = ((b + 1) * per).min(njobs);
+        for j in lo..hi {
+            f(st, j);
         }
     });
 }
 
 /// Process disjoint mutable chunks of a slice in parallel:
-/// `f(chunk_index, chunk)`. First batch on the calling thread, spawned
-/// workers on leased [`CoreBudget`] lanes.
+/// `f(chunk_index, chunk)`. Each chunk is one stealable pool task (the
+/// batched-submit path the per-(frequency, group) GEMM sweeps ride);
+/// the first task runs on the calling thread and the team holds leased
+/// [`CoreBudget`] lanes via [`crate::util::pool::team`].
 pub fn par_chunks_mut<T: Send>(data: &mut [T], chunk_size: usize, f: impl Fn(usize, &mut [T]) + Sync) {
     assert!(chunk_size > 0);
-    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_size).enumerate().collect();
-    let nc = chunks.len();
-    let want = num_threads().min(nc.max(1));
-    if want <= 1 || nc <= 1 {
-        for (i, c) in chunks {
+    let len = data.len();
+    let nc = len.div_ceil(chunk_size);
+    if nc <= 1 {
+        for (i, c) in data.chunks_mut(chunk_size).enumerate() {
             f(i, c);
         }
         return;
     }
-    let lease = CoreBudget::lease(want);
-    let threads = lease.threads().min(nc);
-    let per = nc.div_ceil(threads);
-    std::thread::scope(|s| {
-        let mut iter = chunks.into_iter();
-        let first_batch: Vec<(usize, &mut [T])> = iter.by_ref().take(per).collect();
-        loop {
-            let batch: Vec<(usize, &mut [T])> = iter.by_ref().take(per).collect();
-            if batch.is_empty() {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || {
-                counted_lane(|| {
-                    for (i, c) in batch {
-                        f(i, c);
-                    }
-                })
-            });
-        }
-        for (i, c) in first_batch {
+    let team = pool::team(nc);
+    let threads = team.threads().min(nc);
+    if threads <= 1 {
+        for (i, c) in data.chunks_mut(chunk_size).enumerate() {
             f(i, c);
         }
+        return;
+    }
+    let dp = pool::SendPtr::new(data.as_mut_ptr());
+    pool::run(nc, threads, |i| {
+        let c0 = i * chunk_size;
+        let c1 = ((i + 1) * chunk_size).min(len);
+        // SAFETY: task i exclusively owns data[i*chunk_size ..
+        // (i+1)*chunk_size).min(len) — chunks partition the slice.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(dp.get().add(c0), c1 - c0) };
+        f(i, chunk);
     });
 }
 
@@ -449,6 +478,18 @@ mod tests {
         assert_eq!(data[52], 11);
         let total: usize = states.iter().sum();
         assert_eq!(total, 11, "every chunk processed exactly once");
+    }
+
+    #[test]
+    fn par_jobs_states_covers_every_job_once() {
+        let mut states = vec![0usize; 3];
+        let hits: Vec<AtomicUsize> = (0..17).map(|_| AtomicUsize::new(0)).collect();
+        par_jobs_states(17, &mut states, |st, j| {
+            *st += 1;
+            hits[j].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert_eq!(states.iter().sum::<usize>(), 17, "every job ran on exactly one state");
     }
 
     #[test]

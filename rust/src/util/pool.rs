@@ -1,0 +1,513 @@
+//! The persistent work-stealing executor pool behind every parallel
+//! region in the crate.
+//!
+//! Before this module existed, each `util::par` helper and the GEMM
+//! macro-kernel spawned fresh OS threads through `std::thread::scope`
+//! per call — fine for the handful of coarse regions (batch chunks, row
+//! bands), but ~20 µs of spawn+join overhead per helper made
+//! fine-grained parallelism (the per-(frequency, group) SFC/Winograd
+//! GEMM sweep, the per-block tiled transforms) a guaranteed loss, so
+//! those loops stayed serial by design. The pool amortizes that cost to
+//! a queue push (~1–2 µs, first submit aside): workers are spawned
+//! lazily on first demand, then parked on a condvar between batches and
+//! reused forever.
+//!
+//! Structure (classic work-stealing, sized for coarse tasks):
+//! * one global **injector** queue for batches submitted from
+//!   non-pool threads (model workers, tests, `main`);
+//! * one **deque** per worker: a worker that submits a nested batch
+//!   pushes to its own deque (LIFO for locality), idle workers steal
+//!   from the front (FIFO);
+//! * a **park lot** (mutex + condvar): workers with nothing to run
+//!   block here; submitters notify it after enqueueing.
+//!
+//! A submitted [`run`] batch is `total` tasks (indices `0..total`)
+//! claimed from a shared atomic cursor, so "stealing" is per *task*,
+//! not per contiguous range — a slow worker never strands the tail of
+//! its range. What goes on the queues are join tickets (`helpers`
+//! clones of one [`Batch`] handle); any parked or idle worker that pops
+//! one joins the claim loop until the cursor is exhausted. The caller
+//! always executes task 0 itself (the "first chunk on the caller" rule
+//! every `util::par` helper documents), keeps claiming while tasks
+//! remain, and only then blocks waiting for in-flight helpers — so a
+//! batch completes even if every worker is busy elsewhere, and nested
+//! submission (a pool task submitting its own batch) cannot deadlock:
+//! the nested submitter drains its own cursor too.
+//!
+//! **Panic isolation:** every task body runs under `catch_unwind`. A
+//! panicking task never kills a pool worker (workers are process-lived
+//! and shared by every model); the first panic payload is stashed on
+//! the batch and re-thrown on the *submitting* thread once the batch
+//! has fully drained — by which point no task can still be touching the
+//! submitter's borrowed closure.
+//!
+//! **Sizing** is not the pool's job: [`team`] is the single sizing
+//! entry point (`SFC_THREADS` / [`par::set_thread_override`] via
+//! [`par::num_threads`], then a [`par::CoreBudget`] lease), and
+//! [`run`] is handed the team size it produced. Workers therefore
+//! never oversubscribe the host: the lanes a `MultiServer` model
+//! worker leases while executing a batch come out of the same budget
+//! the pool's active set is sized from. The worker *threads* may
+//! outnumber the current budget (they are never torn down), but the
+//! excess just stays parked — parked workers cost a few KB of stack
+//! and nothing else.
+//!
+//! Observability: [`gauges`] (delegated by
+//! [`crate::coordinator::metrics::pool_gauges`]) reports workers
+//! spawned, tasks executed, steals, spawn-avoided count and park/unpark
+//! transitions; `sfc serve`, `sfc loadgen` and the BENCH v7 `pool`
+//! block print it.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use super::par;
+
+/// Hard backstop on the number of pool workers ever spawned. Demand is
+/// bounded by `team()` (≤ `num_threads() - 1` helpers per batch) so
+/// this is never the operative limit on sane hosts; it only guards
+/// against a runaway `SFC_THREADS` / budget misconfiguration.
+const MAX_WORKERS: usize = 64;
+
+// ---------------------------------------------------------------------
+// Gauges (process-wide, monotonic)
+// ---------------------------------------------------------------------
+
+static TASKS: AtomicU64 = AtomicU64::new(0);
+static STEALS: AtomicU64 = AtomicU64::new(0);
+static SPAWN_AVOIDED: AtomicU64 = AtomicU64::new(0);
+static PARKS: AtomicU64 = AtomicU64::new(0);
+static UNPARKS: AtomicU64 = AtomicU64::new(0);
+
+/// A snapshot of the pool's monotonic counters ([`gauges`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolGauges {
+    /// live worker threads (spawned once, parked between batches)
+    pub workers: usize,
+    /// tasks executed, on workers and submitters alike
+    pub tasks: u64,
+    /// tasks executed by a thread other than the batch's submitter —
+    /// parallelism actually realized, not just requested
+    pub steals: u64,
+    /// helper slots served by an already-live worker instead of a
+    /// fresh OS thread — the spawn/join overhead the pool amortized
+    pub spawn_avoided: u64,
+    /// worker park transitions (idle worker went to sleep)
+    pub parks: u64,
+    /// worker unpark transitions (sleeping worker woken for work)
+    pub unparks: u64,
+}
+
+/// Snapshot the pool gauges.
+pub fn gauges() -> PoolGauges {
+    PoolGauges {
+        workers: pool().workers.lock().unwrap_or_else(|e| e.into_inner()).len(),
+        tasks: TASKS.load(Ordering::Relaxed),
+        steals: STEALS.load(Ordering::Relaxed),
+        spawn_avoided: SPAWN_AVOIDED.load(Ordering::Relaxed),
+        parks: PARKS.load(Ordering::Relaxed),
+        unparks: UNPARKS.load(Ordering::Relaxed),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Team: the single pool-sizing entry point
+// ---------------------------------------------------------------------
+
+/// A sized (and budget-leased) parallel team: how many threads —
+/// caller included — one parallel region may run. Produced by [`team`];
+/// the [`par::CoreBudget`] lanes return when the team drops, so keep
+/// it alive across the [`run`] call it sizes.
+pub struct Team {
+    _lease: Option<par::Lease>,
+    threads: usize,
+}
+
+impl Team {
+    /// Threads (caller included) this team covers. Always ≥ 1.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+/// Size a parallel team of up to `want` threads. This is the single
+/// sizing entry point every parallel region goes through: the
+/// `SFC_THREADS` env var and the [`par::set_thread_override`] hook
+/// (both read via [`par::num_threads`]) cap the request, then a
+/// [`par::CoreBudget`] lease caps it again by the lanes actually free —
+/// so the env var, the override hook and the budget can never disagree
+/// about team size. Never blocks and never returns 0: a caller that
+/// gets no extra lanes runs serial.
+pub fn team(want: usize) -> Team {
+    let want = want.clamp(1, par::num_threads().max(1));
+    if want <= 1 {
+        return Team { _lease: None, threads: 1 };
+    }
+    let lease = par::CoreBudget::lease(want);
+    let threads = lease.threads().min(want);
+    Team { _lease: Some(lease), threads }
+}
+
+// ---------------------------------------------------------------------
+// Batch: one submitted parallel region
+// ---------------------------------------------------------------------
+
+/// One submitted parallel region: `total` tasks claimed from `cursor`.
+/// The closure reference is lifetime-transmuted to `'static` by
+/// [`run`], which is sound because `run` does not return (or unwind)
+/// until `done == total`, and no claim can succeed once
+/// `cursor >= total` — so the closure is never called after `run`'s
+/// frame is gone. Queued clones that outlive the batch are inert join
+/// tickets: a worker popping one finds the cursor exhausted and drops
+/// it without touching `f`.
+struct Batch {
+    f: &'static (dyn Fn(usize) + Sync),
+    total: usize,
+    /// next unclaimed task index (seeded to 1: task 0 is the caller's)
+    cursor: AtomicUsize,
+    /// tasks finished (success or panic)
+    done: AtomicUsize,
+    /// the submitting thread — executions elsewhere count as steals
+    submitter: std::thread::ThreadId,
+    /// first panic payload from any task, re-thrown by the submitter
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    /// completion latch: `done == total`, guarded for the condvar
+    latch: Mutex<()>,
+    latch_cv: Condvar,
+}
+
+impl Batch {
+    /// Claim-and-execute until the cursor is exhausted.
+    fn drain(&self) {
+        loop {
+            let i = self.cursor.fetch_add(1, Ordering::SeqCst);
+            if i >= self.total {
+                return;
+            }
+            self.exec(i);
+        }
+    }
+
+    /// Execute one claimed task under panic isolation, then retire it.
+    fn exec(&self, i: usize) {
+        TASKS.fetch_add(1, Ordering::Relaxed);
+        if std::thread::current().id() != self.submitter {
+            STEALS.fetch_add(1, Ordering::Relaxed);
+        }
+        let f = self.f;
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+            let mut slot = self.panic.lock().unwrap_or_else(|e| e.into_inner());
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+        }
+        if self.done.fetch_add(1, Ordering::SeqCst) + 1 == self.total {
+            let _g = self.latch.lock().unwrap_or_else(|e| e.into_inner());
+            self.latch_cv.notify_all();
+        }
+    }
+
+    /// Block until every task has retired (the submitter's join).
+    fn wait(&self) {
+        let mut g = self.latch.lock().unwrap_or_else(|e| e.into_inner());
+        while self.done.load(Ordering::SeqCst) < self.total {
+            g = self.latch_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The pool proper
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct WorkerQ {
+    q: Mutex<VecDeque<Arc<Batch>>>,
+}
+
+struct Pool {
+    /// batches from non-pool submitters (FIFO)
+    injector: Mutex<VecDeque<Arc<Batch>>>,
+    /// one deque per worker; grows, never shrinks
+    workers: Mutex<Vec<Arc<WorkerQ>>>,
+    /// queued join tickets not yet picked up (park-lot wake condition)
+    pending: AtomicUsize,
+    /// workers currently blocked in the park lot
+    idle: AtomicUsize,
+    lot: Mutex<()>,
+    lot_cv: Condvar,
+}
+
+thread_local! {
+    /// This thread's pool-worker index, if it is one (routes nested
+    /// submissions to the worker's own deque).
+    static WORKER_ID: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+fn pool() -> &'static Pool {
+    static P: OnceLock<Pool> = OnceLock::new();
+    P.get_or_init(|| Pool {
+        injector: Mutex::new(VecDeque::new()),
+        workers: Mutex::new(Vec::new()),
+        pending: AtomicUsize::new(0),
+        idle: AtomicUsize::new(0),
+        lot: Mutex::new(()),
+        lot_cv: Condvar::new(),
+    })
+}
+
+impl Pool {
+    fn worker_loop(&'static self, id: usize, own: Arc<WorkerQ>) {
+        WORKER_ID.with(|c| c.set(Some(id)));
+        loop {
+            match self.find_work(id, &own) {
+                Some(b) => par::counted_lane(|| b.drain()),
+                None => self.park(),
+            }
+        }
+    }
+
+    /// Own deque (LIFO) → injector (FIFO) → steal others (FIFO).
+    fn find_work(&self, id: usize, own: &WorkerQ) -> Option<Arc<Batch>> {
+        if let Some(b) = own.q.lock().unwrap_or_else(|e| e.into_inner()).pop_back() {
+            self.pending.fetch_sub(1, Ordering::SeqCst);
+            return Some(b);
+        }
+        if let Some(b) = self.injector.lock().unwrap_or_else(|e| e.into_inner()).pop_front() {
+            self.pending.fetch_sub(1, Ordering::SeqCst);
+            return Some(b);
+        }
+        let victims: Vec<Arc<WorkerQ>> =
+            self.workers.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        for (vid, v) in victims.iter().enumerate() {
+            if vid == id {
+                continue;
+            }
+            if let Some(b) = v.q.lock().unwrap_or_else(|e| e.into_inner()).pop_front() {
+                self.pending.fetch_sub(1, Ordering::SeqCst);
+                return Some(b);
+            }
+        }
+        None
+    }
+
+    /// Sleep until a submitter enqueues work. The `pending` check under
+    /// the lot mutex closes the lost-wakeup race: submitters bump
+    /// `pending` before taking the lot to notify, so either this worker
+    /// sees the tickets and returns to scan, or the notification
+    /// arrives after it is waiting.
+    fn park(&self) {
+        let g = self.lot.lock().unwrap_or_else(|e| e.into_inner());
+        if self.pending.load(Ordering::SeqCst) > 0 {
+            return;
+        }
+        self.idle.fetch_add(1, Ordering::SeqCst);
+        PARKS.fetch_add(1, Ordering::Relaxed);
+        let mut g = g;
+        loop {
+            g = self.lot_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+            if self.pending.load(Ordering::SeqCst) > 0 {
+                break;
+            }
+        }
+        self.idle.fetch_sub(1, Ordering::SeqCst);
+        UNPARKS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Enqueue `helpers` join tickets for `batch` and wake sleepers.
+    fn submit(&'static self, batch: &Arc<Batch>, helpers: usize) {
+        let spawned = self.ensure_workers(helpers);
+        SPAWN_AVOIDED.fetch_add(helpers.saturating_sub(spawned) as u64, Ordering::Relaxed);
+        let own = WORKER_ID
+            .with(|c| c.get())
+            .and_then(|id| self.workers.lock().unwrap_or_else(|e| e.into_inner()).get(id).cloned());
+        match own {
+            Some(q) => {
+                let mut g = q.q.lock().unwrap_or_else(|e| e.into_inner());
+                for _ in 0..helpers {
+                    self.pending.fetch_add(1, Ordering::SeqCst);
+                    g.push_back(batch.clone());
+                }
+            }
+            None => {
+                let mut g = self.injector.lock().unwrap_or_else(|e| e.into_inner());
+                for _ in 0..helpers {
+                    self.pending.fetch_add(1, Ordering::SeqCst);
+                    g.push_back(batch.clone());
+                }
+            }
+        }
+        let _g = self.lot.lock().unwrap_or_else(|e| e.into_inner());
+        if self.idle.load(Ordering::SeqCst) > 0 {
+            self.lot_cv.notify_all();
+        }
+    }
+
+    /// Make sure at least `want` workers exist (lazy spawn, capped by
+    /// [`MAX_WORKERS`]); returns how many were freshly spawned.
+    fn ensure_workers(&'static self, want: usize) -> usize {
+        let mut reg = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+        let target = want.min(MAX_WORKERS);
+        let mut spawned = 0;
+        while reg.len() < target {
+            let id = reg.len();
+            let q = Arc::new(WorkerQ::default());
+            let worker_q = q.clone();
+            let ok = std::thread::Builder::new()
+                .name(format!("sfc-pool-{id}"))
+                .spawn(move || self.worker_loop(id, worker_q))
+                .is_ok();
+            if !ok {
+                break; // thread spawn failed: run with what we have
+            }
+            reg.push(q);
+            spawned += 1;
+        }
+        spawned
+    }
+}
+
+/// Execute `total` tasks `f(0..total)` with up to `threads` concurrent
+/// executors (the caller plus `threads - 1` pool workers). The caller
+/// runs task 0 first, then keeps claiming tasks until the batch cursor
+/// is exhausted, then joins the in-flight helpers — so the call always
+/// makes progress even when every worker is busy, and returns only when
+/// every task has retired. Task-to-thread assignment is dynamic
+/// (work-stealing); callers own determinism by making each task's
+/// *output* a pure function of its index, which every `util::par`
+/// helper and the GEMM row-band decomposition do.
+///
+/// Panics: if any task panics, the first payload is re-thrown here
+/// after the batch drains (workers survive; see module docs). Results
+/// a panicking map produced are leaked, not dropped.
+pub fn run(total: usize, threads: usize, f: impl Fn(usize) + Sync) {
+    if total == 0 {
+        return;
+    }
+    let helpers = threads.min(total).saturating_sub(1);
+    if helpers == 0 {
+        for i in 0..total {
+            f(i);
+        }
+        return;
+    }
+    type F<'a> = &'a (dyn Fn(usize) + Sync);
+    let fr: F<'_> = &f;
+    // SAFETY: pure lifetime erasure. `run` only returns (or unwinds,
+    // below) after `wait()` observes `done == total`; a task must be
+    // claimed (`cursor.fetch_add < total`) before `f` is touched, and
+    // no claim succeeds once the cursor is exhausted — so no worker
+    // dereferences this borrow after `run`'s frame ends.
+    let fs: F<'static> = unsafe { std::mem::transmute::<F<'_>, F<'static>>(fr) };
+    let batch = Arc::new(Batch {
+        f: fs,
+        total,
+        cursor: AtomicUsize::new(1),
+        done: AtomicUsize::new(0),
+        submitter: std::thread::current().id(),
+        panic: Mutex::new(None),
+        latch: Mutex::new(()),
+        latch_cv: Condvar::new(),
+    });
+    pool().submit(&batch, helpers);
+    batch.exec(0); // the caller's first chunk, guaranteed
+    batch.drain();
+    batch.wait();
+    let payload = batch.panic.lock().unwrap_or_else(|e| e.into_inner()).take();
+    if let Some(p) = payload {
+        resume_unwind(p);
+    }
+}
+
+/// `Send + Sync` raw-pointer wrapper for the par helpers: pool tasks
+/// write disjoint ranges of one buffer, which shared references can't
+/// express — each use site documents its disjointness argument.
+pub(crate) struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub(crate) fn new(p: *mut T) -> SendPtr<T> {
+        SendPtr(p)
+    }
+    pub(crate) fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn run_covers_every_index_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        run(97, 4, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn serial_paths_skip_the_pool() {
+        // threads <= 1, total <= 1 and total == 0 all run inline on the
+        // caller (gauge deltas are asserted in tests/pool.rs, which can
+        // serialize against the process-global counters)
+        let n = AtomicUsize::new(0);
+        run(8, 1, |_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        run(0, 4, |_| panic!("no tasks"));
+        run(1, 4, |i| {
+            assert_eq!(i, 0);
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 9);
+    }
+
+    #[test]
+    fn task_panic_reaches_the_submitter_and_workers_survive() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            run(16, 4, |i| {
+                if i == 7 {
+                    panic!("task 7 boom");
+                }
+            });
+        }));
+        let msg = caught.expect_err("panic must propagate");
+        let msg = msg.downcast_ref::<&str>().copied().unwrap_or("<non-str payload>");
+        assert!(msg.contains("boom"), "original payload re-thrown, got {msg}");
+        // pool still functional afterwards
+        let n = AtomicUsize::new(0);
+        run(32, 4, |_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn nested_submission_completes() {
+        let n = AtomicUsize::new(0);
+        run(4, 4, |_| {
+            run(8, 2, |_| {
+                n.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn worker_count_is_bounded() {
+        run(64, 8, |_| {});
+        let g = gauges();
+        assert!(g.workers <= MAX_WORKERS, "{} workers", g.workers);
+        assert!(g.tasks >= 64);
+    }
+}

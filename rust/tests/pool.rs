@@ -1,0 +1,309 @@
+//! Persistent executor-pool property tests (cross-layer).
+//!
+//! PR contract: migrating every parallel region onto the work-stealing
+//! pool must change *where* tasks execute, never *what* they compute.
+//! The decomposition (chunk boundaries, state→chunk mapping, per-element
+//! k-ascending GEMM chains) is fixed before submission; work-stealing
+//! only reassigns whole tasks, so outputs stay bit-identical across
+//! `SFC_THREADS` and dispatch arms — float 0 ULP, int8 exact — from the
+//! raw GEMM entry points up through a whole-model `forward_ws`. On top
+//! of that, the pool itself must isolate task panics to the submitting
+//! call, keep its worker set bounded across `MultiServer` lifecycles,
+//! and keep its gauges (tasks/steals/spawn-avoided) consistent under a
+//! multi-model burst.
+//!
+//! The thread/kernel overrides and the pool gauges are process-global,
+//! so every test here serializes behind one lock (mirrors
+//! `tests/threads.rs`).
+
+use sfc::coordinator::sched::{MultiServer, Response, SchedConfig};
+use sfc::engine::{default_selector, ConvDesc, Workspace};
+use sfc::linalg::gemm::{
+    self, gemm_packed_f32, gemm_packed_i8_i32, pack_b_f32, pack_b_i8, packed_b_f32_len,
+    packed_b_i8_len,
+};
+use sfc::linalg::simd::{self, Kernel};
+use sfc::nn::Tensor;
+use sfc::util::par;
+use sfc::util::pool;
+use sfc::util::Pcg32;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Serializes tests that toggle the process-wide thread / kernel
+/// overrides or compare pool-gauge deltas.
+static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Serial, even split, and a prime count that never divides the row
+/// counts (remainder partitions + stale-ticket coverage).
+const THREADS: [usize; 3] = [1, 2, 7];
+
+fn with_threads<T>(t: usize, f: impl FnOnce() -> T) -> T {
+    par::set_thread_override(Some(t));
+    let r = f();
+    par::set_thread_override(None);
+    r
+}
+
+fn with_kernel<T>(k: Option<Kernel>, f: impl FnOnce() -> T) -> T {
+    simd::set_kernel_override(k);
+    let r = f();
+    simd::set_kernel_override(None);
+    r
+}
+
+fn rand_tensor(dims: &[usize], rng: &mut Pcg32, sigma: f64) -> Tensor {
+    let mut t = Tensor::zeros(dims);
+    rng.fill_gaussian(&mut t.data, sigma);
+    t
+}
+
+fn rand_f32(n: usize, rng: &mut Pcg32) -> Vec<f32> {
+    let mut v = vec![0f32; n];
+    rng.fill_gaussian(&mut v, 1.0);
+    v
+}
+
+fn rand_i8(n: usize, rng: &mut Pcg32) -> Vec<i8> {
+    (0..n).map(|_| (rng.next_u32() & 0xff) as u8 as i8).collect()
+}
+
+/// Raw packed GEMM on the pool, float and int8, on a shape above
+/// `PAR_MIN_MACS`: every (thread count × dispatch arm) combination must
+/// reproduce the serial scalar result to the bit.
+#[test]
+fn pooled_gemm_bit_identical_to_serial() {
+    let _g = lock();
+    let mut rng = Pcg32::seeded(0x9001);
+    let (m, n, k) = (64usize, 256usize, 130usize);
+    assert!((m * n * k) as u64 >= gemm::PAR_MIN_MACS, "shape must clear the threading gate");
+    let a = rand_f32(m * k, &mut rng);
+    let b = rand_f32(n * k, &mut rng);
+    let mut bp = vec![0f32; packed_b_f32_len(n, k)];
+    pack_b_f32(n, k, &b, &mut bp);
+    let ai = rand_i8(m * k, &mut rng);
+    let bi = rand_i8(n * k, &mut rng);
+    let mut bpi = vec![0i8; packed_b_i8_len(n, k)];
+    pack_b_i8(n, k, &bi, &mut bpi);
+
+    let (rf, ri) = with_threads(1, || {
+        with_kernel(Some(Kernel::Scalar), || {
+            let mut c = vec![0f32; m * n];
+            gemm_packed_f32(m, n, k, &a, &bp, &mut c);
+            let mut ci = vec![0i32; m * n];
+            gemm_packed_i8_i32(m, n, k, &ai, &bpi, &mut ci);
+            (c, ci)
+        })
+    });
+    for t in THREADS {
+        for arm in [None, Some(Kernel::Scalar)] {
+            let (c, ci) = with_threads(t, || {
+                with_kernel(arm, || {
+                    let mut c = vec![0f32; m * n];
+                    gemm_packed_f32(m, n, k, &a, &bp, &mut c);
+                    let mut ci = vec![0i32; m * n];
+                    gemm_packed_i8_i32(m, n, k, &ai, &bpi, &mut ci);
+                    (c, ci)
+                })
+            });
+            assert_eq!(c, rf, "f32 threads={t} arm={arm:?}");
+            assert_eq!(ci, ri, "i8 threads={t} arm={arm:?}");
+        }
+    }
+}
+
+/// The pool-task sweep paths above the GEMM: a conv plan whose
+/// per-(freq, group) GEMM sweep runs as stealable tasks, and the tiled
+/// frequency-domain engine whose per-block loop does. Bit-identical
+/// across thread counts and arms (FFT-tiled is float — still 0 ULP,
+/// because each block's arithmetic is independent of its executor).
+#[test]
+fn pooled_sweeps_bit_identical_across_thread_counts() {
+    let _g = lock();
+    let sel = default_selector();
+    let mut rng = Pcg32::seeded(0x9002);
+    let d = ConvDesc::new(2, 6, 8, 20, 20, 3, 1, 1);
+    let x = rand_tensor(&[2, 6, 20, 20], &mut rng, 1.0);
+    let wt = rand_tensor(&[8, 6, 3, 3], &mut rng, 0.3);
+    let bias: Vec<f32> = (0..8).map(|i| i as f32 * 0.05 - 0.1).collect();
+    for name in ["SFC-6(6x6,3x3)", "FFT-tiled", "NTT-tiled"] {
+        let plan = sel.plan_named(name, &d).unwrap();
+        let want =
+            with_threads(1, || with_kernel(Some(Kernel::Scalar), || plan.run(&x, &wt, &bias)));
+        for t in THREADS {
+            for arm in [None, Some(Kernel::Scalar)] {
+                let got = with_threads(t, || with_kernel(arm, || plan.run(&x, &wt, &bias)));
+                assert_eq!(got.data, want.data, "{name} threads={t} arm={arm:?}");
+            }
+        }
+    }
+}
+
+/// Whole-model `forward_ws` (pre-packed, compiled-style datapath) over
+/// the pool: 1 vs 2 vs 7 threads, both arms, bit-identical.
+#[test]
+fn whole_model_forward_bit_identical_on_the_pool() {
+    let _g = lock();
+    use sfc::nn::model::{mobilenet_cfg, mobilenet_random};
+    let mut m = mobilenet_random(&mobilenet_cfg(), 41, 10);
+    m.prepack_weights();
+    let mut rng = Pcg32::seeded(0x9003);
+    let x = rand_tensor(&[2, 3, 32, 32], &mut rng, 1.0);
+    let want = with_threads(1, || {
+        with_kernel(Some(Kernel::Scalar), || {
+            let mut ws = Workspace::new();
+            m.forward_ws(&x, &mut ws)
+        })
+    });
+    for t in THREADS {
+        for arm in [None, Some(Kernel::Scalar)] {
+            let got = with_threads(t, || {
+                with_kernel(arm, || {
+                    let mut ws = Workspace::new();
+                    m.forward_ws(&x, &mut ws)
+                })
+            });
+            assert_eq!(got.data, want.data, "forward_ws threads={t} arm={arm:?}");
+        }
+    }
+}
+
+/// A panicking task unwinds the *submitting* `pool::run` call and
+/// nothing else: sibling tasks still execute, the workers survive, and
+/// the pool keeps serving subsequent batches.
+#[test]
+fn task_panic_is_isolated_to_the_submitting_call() {
+    let _g = lock();
+    let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+    let r = std::panic::catch_unwind(|| {
+        pool::run(64, 4, |i| {
+            if i == 13 {
+                panic!("task boom");
+            }
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+    });
+    let err = r.expect_err("the task panic must reach the submitter");
+    let msg = err.downcast_ref::<&str>().copied().unwrap_or("");
+    assert!(msg.contains("task boom"), "payload preserved, got {msg:?}");
+    // every non-panicking sibling ran exactly once (the batch drains
+    // fully before the panic is re-thrown — no abandoned tasks)
+    for (i, h) in hits.iter().enumerate() {
+        let want = usize::from(i != 13);
+        assert_eq!(h.load(Ordering::Relaxed), want, "task {i}");
+    }
+    // the pool still works: workers survived the unwind
+    let count = AtomicUsize::new(0);
+    pool::run(97, 4, |_| {
+        count.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(count.load(Ordering::Relaxed), 97, "pool serves batches after a panic");
+}
+
+/// Pool workers are process-lived and bounded: repeated
+/// `MultiServer` build → burst → `shutdown` cycles must not grow the
+/// worker set (no thread leak), because model workers lease lanes while
+/// the pool reuses its resident threads.
+#[test]
+fn worker_set_stays_bounded_across_server_lifecycles() {
+    let _g = lock();
+    let mut rng = Pcg32::seeded(0x9004);
+    let mut workers_after_cycle = Vec::new();
+    for cycle in 0..3 {
+        let server = MultiServer::new(SchedConfig {
+            queue_depth: 16,
+            default_deadline_ms: 60_000,
+            linger_ms: 1,
+            packed_budget_bytes: 0,
+        });
+        server
+            .add_model("m", move || {
+                use sfc::nn::model::{mobilenet_cfg, mobilenet_random};
+                let m = mobilenet_random(&mobilenet_cfg(), 51, 10);
+                Ok(sfc::runtime::EngineExecutor::from_model(m, vec![2, 3, 32, 32], 10))
+            })
+            .unwrap();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let mut img = vec![0f32; 3 * 32 * 32];
+            rng.fill_gaussian(&mut img, 1.0);
+            handles.push(server.submit_blocking("m", img).unwrap());
+        }
+        for h in handles {
+            match h.wait().unwrap() {
+                Response::Done(_) => {}
+                other => panic!("cycle {cycle}: request did not complete: {other:?}"),
+            }
+        }
+        server.shutdown();
+        workers_after_cycle.push(pool::gauges().workers);
+    }
+    assert!(
+        workers_after_cycle[2] <= 64,
+        "worker set bounded, got {}",
+        workers_after_cycle[2]
+    );
+    assert_eq!(
+        workers_after_cycle[1], workers_after_cycle[2],
+        "steady state: later lifecycles reuse the resident workers instead of spawning"
+    );
+}
+
+/// Gauge consistency under a 2-model burst with intra-op threading
+/// forced on: tasks are executed (the sweeps actually ran as pool
+/// tasks), spawn-avoided grows (submits reused resident workers), and
+/// the counters never contradict each other (steals ≤ tasks; all
+/// monotone).
+#[test]
+fn gauges_consistent_under_two_model_burst() {
+    let _g = lock();
+    let before = pool::gauges();
+    with_threads(4, || {
+        let server = MultiServer::new(SchedConfig {
+            queue_depth: 32,
+            default_deadline_ms: 60_000,
+            linger_ms: 1,
+            packed_budget_bytes: 0,
+        });
+        for name in ["a", "b"] {
+            server
+                .add_model(name, move || {
+                    use sfc::nn::model::{mobilenet_cfg, mobilenet_random};
+                    let m = mobilenet_random(&mobilenet_cfg(), 61, 10);
+                    Ok(sfc::runtime::EngineExecutor::from_model(m, vec![2, 3, 32, 32], 10))
+                })
+                .unwrap();
+        }
+        let mut rng = Pcg32::seeded(0x9005);
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let mut img = vec![0f32; 3 * 32 * 32];
+            rng.fill_gaussian(&mut img, 1.0);
+            let name = if i % 2 == 0 { "a" } else { "b" };
+            handles.push(server.submit_blocking(name, img).unwrap());
+        }
+        for h in handles {
+            match h.wait().unwrap() {
+                Response::Done(_) => {}
+                other => panic!("request did not complete: {other:?}"),
+            }
+        }
+        server.shutdown();
+    });
+    let after = pool::gauges();
+    assert!(after.tasks > before.tasks, "the burst must execute pool tasks");
+    assert!(after.steals >= before.steals && after.steals <= after.tasks);
+    assert!(after.spawn_avoided >= before.spawn_avoided);
+    assert!(after.unparks >= before.unparks && after.parks >= before.parks);
+    assert!(after.workers <= 64, "worker set bounded: {}", after.workers);
+    // once the worker set is warm, at least some submits of the burst
+    // must have found their helpers resident instead of spawning
+    assert!(
+        after.spawn_avoided > before.spawn_avoided,
+        "a multi-layer burst re-submits constantly; spawns must be amortized"
+    );
+}

@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over `sfc bench --json` snapshots.
+
+Compares a freshly measured BENCH_conv.json against the committed
+baseline snapshot and fails CI on hard ns/call regressions on the gated
+rows:
+
+  * the dense 3x3 shapes (shape labels containing "->": the GEMM-backed
+    conv hot path), and
+  * the compiled-MobileNet end-to-end rows (shape "mobilenet-*",
+    engines "e2e-f32-compiled" / "e2e-int8-compiled").
+
+Policy (ratios of fresh/baseline median ns/call, matched by
+(shape, engine)):
+
+  * ratio >  1 + --fail-pct/100  (default 15%)  -> hard failure, exit 1
+  * ratio in (1 + --warn-pct/100, 1 + --fail-pct/100]  (5..15%)
+                                                 -> GitHub warning only
+  * gated row present in the baseline but missing from the fresh run
+                                                 -> hard failure (a row
+                                                   silently disappearing
+                                                   is itself a regression)
+
+Bootstrap mode: when the baseline file does not exist yet, the gate
+prints a warning and exits 0 -- the CI job uploads the fresh snapshot as
+an artifact so a maintainer can commit it as the first baseline. The
+gate never writes or synthesizes baseline numbers itself; baselines only
+ever come from a real measured run.
+
+Comparability guards: the gate refuses to compare (warns, exits 0)
+when the kernel dispatch arms differ (scalar vs avx2 timings are not
+comparable) and tolerates schema drift as long as both files carry the
+gated rows.
+"""
+
+import argparse
+import json
+import sys
+
+
+def is_gated(row):
+    shape = row.get("shape", "")
+    engine = row.get("engine", "")
+    if "->" in shape and not engine.startswith("e2e-"):
+        return True  # dense 3x3 conv rows
+    return shape.startswith("mobilenet-") and engine.startswith("e2e-")
+
+
+def load(path):
+    with open(path) as f:
+        d = json.load(f)
+    if d.get("bench") != "conv" or "results" not in d:
+        sys.exit(f"bench_gate: {path} is not a BENCH_conv snapshot")
+    return d
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="committed snapshot (e.g. BENCH_conv.json)")
+    ap.add_argument("--fresh", required=True, help="snapshot measured by this CI run")
+    ap.add_argument("--fail-pct", type=float, default=15.0, help="hard-failure threshold (%%)")
+    ap.add_argument("--warn-pct", type=float, default=5.0, help="soft-warning threshold (%%)")
+    args = ap.parse_args()
+
+    try:
+        base = load(args.baseline)
+    except FileNotFoundError:
+        print(
+            f"::warning::bench_gate: no committed baseline at {args.baseline} -- "
+            "bootstrap mode. Commit the artifact uploaded by this job as the "
+            "first baseline to arm the gate."
+        )
+        return 0
+    fresh = load(args.fresh)
+
+    bk, fk = base.get("kernel"), fresh.get("kernel")
+    if bk != fk:
+        print(
+            f"::warning::bench_gate: kernel arm mismatch (baseline={bk}, fresh={fk}) -- "
+            "timings are not comparable on this runner, skipping the gate"
+        )
+        return 0
+
+    base_rows = {(r["shape"], r["engine"]): r for r in base["results"] if is_gated(r)}
+    fresh_rows = {(r["shape"], r["engine"]): r for r in fresh["results"] if is_gated(r)}
+    if not base_rows:
+        sys.exit("bench_gate: baseline contains no gated rows -- was it a real `sfc bench --json` run?")
+
+    fail_at = 1.0 + args.fail_pct / 100.0
+    warn_at = 1.0 + args.warn_pct / 100.0
+    failures = []
+    for key in sorted(base_rows):
+        shape, engine = key
+        tag = f"{engine} @ {shape}"
+        if key not in fresh_rows:
+            failures.append(f"{tag}: gated row missing from the fresh snapshot")
+            continue
+        b = base_rows[key]["ns_per_call"]
+        f = fresh_rows[key]["ns_per_call"]
+        if b <= 0:
+            failures.append(f"{tag}: baseline ns_per_call is {b}")
+            continue
+        ratio = f / b
+        pct = (ratio - 1.0) * 100.0
+        if ratio > fail_at:
+            failures.append(f"{tag}: {b:.0f} -> {f:.0f} ns/call (+{pct:.1f}%)")
+        elif ratio > warn_at:
+            print(f"::warning::bench_gate: {tag} slowed {b:.0f} -> {f:.0f} ns/call (+{pct:.1f}%)")
+        else:
+            print(f"bench_gate ok: {tag} {b:.0f} -> {f:.0f} ns/call ({pct:+.1f}%)")
+
+    extra = sorted(set(fresh_rows) - set(base_rows))
+    for shape, engine in extra:
+        print(f"bench_gate: new gated row (no baseline yet): {engine} @ {shape}")
+
+    if failures:
+        for line in failures:
+            print(f"::error::bench_gate regression: {line}")
+        return 1
+    print(f"bench_gate: {len(base_rows)} gated rows within +{args.fail_pct:.0f}% of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
