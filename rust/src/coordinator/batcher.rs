@@ -34,6 +34,19 @@ pub trait ModelRunner {
     fn run_with(&self, batch: &[f32], _ws: &mut Workspace) -> Result<Vec<f32>> {
         self.run(batch)
     }
+    /// Allocation-free variant of [`ModelRunner::run_with`]: logits are
+    /// written into the caller's staging buffer (cleared, then extended
+    /// to `[batch, classes]`). The scheduler's batch loops hoist one
+    /// buffer per execution slot and reuse it across batches, so the
+    /// steady-state-alloc counters stay flat. The default impl routes
+    /// through [`ModelRunner::run_with`] (one allocation per batch);
+    /// workspace-backed runners override it.
+    fn run_with_into(&self, batch: &[f32], ws: &mut Workspace, out: &mut Vec<f32>) -> Result<()> {
+        let logits = self.run_with(batch, ws)?;
+        out.clear();
+        out.extend_from_slice(&logits);
+        Ok(())
+    }
     /// backend platform name for the startup banner
     fn platform(&self) -> String {
         "mock".into()
@@ -67,6 +80,9 @@ impl ModelRunner for EngineExecutor {
     }
     fn run_with(&self, batch: &[f32], ws: &mut Workspace) -> Result<Vec<f32>> {
         EngineExecutor::run_with(self, batch, ws)
+    }
+    fn run_with_into(&self, batch: &[f32], ws: &mut Workspace, out: &mut Vec<f32>) -> Result<()> {
+        EngineExecutor::run_with_into(self, batch, ws, out)
     }
     fn platform(&self) -> String {
         EngineExecutor::platform(self)
@@ -141,6 +157,7 @@ impl Server {
             default_deadline_ms: 3_600_000,
             linger_ms: cfg.batch_timeout_ms,
             packed_budget_bytes: 0,
+            dispatch: sched::DispatchMode::Worker,
         });
         let platform = inner.add_model(SHIM_MODEL, factory)?;
         println!("server ready on platform: {platform}");

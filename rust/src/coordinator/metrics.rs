@@ -32,6 +32,17 @@ pub fn workspace_counters() -> (u64, u64) {
     crate::engine::workspace::global_counters()
 }
 
+/// (peak resident bytes, leases, pool-miss fresh builds) snapshot of the
+/// process-wide shared-workspace-pool counters
+/// ([`crate::engine::workspace::global_pool_counters`]). Non-zero only
+/// under the global batch scheduler (`--sched global`), where models
+/// lease arenas from a shared [`crate::engine::WorkspacePool`] instead
+/// of each worker owning one; `misses` stopping growth is the pooled
+/// form of the zero-steady-state-alloc contract.
+pub fn ws_pool_counters() -> (u64, u64, u64) {
+    crate::engine::workspace::global_pool_counters()
+}
+
 /// Live bytes of pre-packed weight artifacts across the process
 /// ([`crate::engine::packed_weight_bytes`]) — the memory cost of
 /// plan-time weight pre-packing, reported by `sfc serve` so it stays
@@ -281,6 +292,10 @@ pub struct ModelGauges {
     pub queue_depth: AtomicU64,
     /// batches the model's worker has executed
     pub batches: AtomicU64,
+    /// batches speculatively split by the global planner because the
+    /// cost model predicted the full batch would blow the deadline of
+    /// queued later arrivals (the tail was requeued, not dropped)
+    pub splits: AtomicU64,
     /// peak bytes checked out of the worker's workspace
     pub ws_peak_bytes: AtomicU64,
     /// workspace checkouts that fell back to the heap; stops growing

@@ -19,7 +19,8 @@ pub mod sched;
 pub use batcher::{ModelRunner, Server, ServerConfig};
 pub use metrics::LatencyStats;
 pub use sched::{
-    ModelSnapshot, MultiServer, Priority, SchedConfig, ServerStopped, SubmitOpts, Ticket,
+    DispatchMode, ModelSnapshot, MultiServer, Priority, SchedConfig, ServerStopped, SubmitOpts,
+    Ticket,
 };
 
 use crate::runtime::Executor;
@@ -69,6 +70,15 @@ fn install_tuning(opts: &HashMap<String, String>) -> Result<()> {
         crate::engine::tuning::install_global(table)?;
     }
     Ok(())
+}
+
+/// Parse `--sched worker|global` (default worker) into the batch
+/// dispatch planner the [`MultiServer`] runs under.
+fn parse_sched(opts: &HashMap<String, String>) -> Result<DispatchMode> {
+    match opts.get("sched") {
+        None => Ok(DispatchMode::Worker),
+        Some(v) => DispatchMode::parse(v),
+    }
 }
 
 /// Apply `--cores <N>` (if given): cap the process-wide
@@ -237,12 +247,14 @@ fn serve_multi(
     let queue_depth: usize = parse_opt(opts, "queue-depth", 64)?;
     let budget_mb: u64 = parse_opt(opts, "budget-mb", 0)?;
     let linger_ms: u64 = parse_opt(opts, "linger-ms", 2)?;
+    let dispatch = parse_sched(opts)?;
     let specs = split_specs(specs_csv);
     let server = MultiServer::new(SchedConfig {
         queue_depth,
         default_deadline_ms: 60_000,
         linger_ms,
         packed_budget_bytes: budget_mb * 1024 * 1024,
+        dispatch,
     });
     let budget = crate::engine::PackBudget::new((budget_mb * 1024 * 1024) as usize);
     let dims = vec![batch, 3, 32, 32];
@@ -344,6 +356,8 @@ pub fn cmd_loadgen(opts: &HashMap<String, String>) -> Result<()> {
     let budget_mb: u64 = parse_opt(opts, "budget-mb", 64)?;
     let linger_ms: u64 = parse_opt(opts, "linger-ms", 2)?;
     let seed: u64 = parse_opt(opts, "seed", 7)?;
+    let dispatch = parse_sched(opts)?;
+    let json = opts.contains_key("json") || opts.contains_key("out");
     install_tuning(opts)?;
     apply_cores(opts)?;
     let server = MultiServer::new(SchedConfig {
@@ -351,6 +365,7 @@ pub fn cmd_loadgen(opts: &HashMap<String, String>) -> Result<()> {
         default_deadline_ms: deadline_ms,
         linger_ms,
         packed_budget_bytes: budget_mb * 1024 * 1024,
+        dispatch,
     });
     let budget = crate::engine::PackBudget::new((budget_mb * 1024 * 1024) as usize);
     let dims = vec![batch, 3, 32, 32];
@@ -395,13 +410,24 @@ pub fn cmd_loadgen(opts: &HashMap<String, String>) -> Result<()> {
     let names = server.models();
     println!(
         "loadgen: {} models · {qps} qps offered · {duration_s} s · deadlines {deadline_ms}/{} ms \
-         (low/high) · {:.0}% low priority",
+         (low/high) · {:.0}% low priority · sched={}",
         names.len(),
         deadline_ms * 4,
-        low_ratio * 100.0
+        low_ratio * 100.0,
+        dispatch.name()
     );
     let reports = crate::exp::loadgen::run(&server, &names, &cfg)?;
     crate::exp::loadgen::print_report(&reports);
+    if json {
+        let doc = crate::exp::loadgen::report_json(&reports, &server, &cfg);
+        match opts.get("out").filter(|v| v.as_str() != "true") {
+            Some(path) => {
+                std::fs::write(path, &doc)?;
+                println!("loadgen: wrote {path}");
+            }
+            None => print!("{doc}"),
+        }
+    }
     let (hits, misses) = metrics::plan_cache_counters();
     println!(
         "loadgen: plan_cache_hits={hits} plan_cache_misses={misses} packed_kb={:.1} \

@@ -46,9 +46,45 @@
 //! [`ShedReason`], not an error string — so load tests can assert *what*
 //! was sacrificed, and callers can retry or degrade deliberately.
 //!
+//! ## Global batch planning (`--sched global`)
+//!
+//! Under [`DispatchMode::Worker`] each model's thread batches and fires
+//! autonomously: N resident models race N batches onto the CPU at once
+//! regardless of deadlines, and a hot model queues behind its own
+//! thread. [`DispatchMode::Global`] keeps the per-model executor
+//! threads (runners may be `!Send`, so each stays resident where its
+//! factory built it) but moves the *fire decision* into one shared
+//! `GlobalPlan`: an executor with a formed batch publishes a candidate
+//! (earliest deadline, predicted execution time from the cost model)
+//! and runs only when (a) a run slot is free — at most
+//! [`crate::util::par::num_threads`] batches execute concurrently, so
+//! inter-batch parallelism and intra-op GEMM teams share one core
+//! budget — and (b) its candidate has the least slack
+//! (`deadline − predicted`, i.e. cost-aware EDF) among all published
+//! candidates. Execution leases a [`crate::engine::WorkspacePool`]
+//! arena (model-affine, so the zero-steady-state-alloc contract holds
+//! across models) and submits its intra-op work through
+//! [`crate::util::pool::urgent`] so the selected batch jumps the
+//! executor pool's FIFO backlog.
+//!
+//! The **cost model** is a per-(model, batch-size) predicted ns table:
+//! seeded from the installed tuning table's measured ns/call
+//! ([`crate::engine::tuning::global_exec_ns`], written by `sfc autotune
+//! --out`, schema v4), refined online from each executed batch, with a
+//! 500 µs last-resort default. **Speculative batch splitting**: when
+//! the plan is contended and the cost model predicts a full batch would
+//! hold its run slot past the instant a rival model's candidate must
+//! start to meet its deadline, the batch is trimmed to the
+//! predicted-feasible prefix and the tail is requeued at the *front* of
+//! the model queue (it keeps its deadlines, so EDF re-selects it next —
+//! splitting can never starve the tail).
+//!
 //! Shutdown drains: queued work is executed, in-flight waiters complete,
 //! and only then do late `submit` calls and orphaned tickets fail with
-//! the typed [`ServerStopped`] error.
+//! the typed [`ServerStopped`] error. Both dispatch modes drain
+//! identically, and both produce bit-identical logits for identical
+//! request streams (convolution is per-sample independent and tail
+//! padding is zeroed, so batch composition never changes a row).
 
 use super::batcher::ModelRunner;
 use super::metrics::{ModelGauges, StreamingHistogram};
@@ -202,6 +238,39 @@ impl Ticket {
     }
 }
 
+/// Which planner decides when a formed batch executes (`--sched`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum DispatchMode {
+    /// the PR 6 baseline: every model's thread batches and fires
+    /// autonomously, one resident workspace per worker
+    #[default]
+    Worker,
+    /// the global execution planner: candidate batches from all models
+    /// are ordered by cost-aware EDF, at most
+    /// [`crate::util::par::num_threads`] run at once, and workspaces
+    /// come from one shared byte-accounted pool (see the module docs)
+    Global,
+}
+
+impl DispatchMode {
+    /// Lower-case mode name (CLI value, reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchMode::Worker => "worker",
+            DispatchMode::Global => "global",
+        }
+    }
+
+    /// Parse a `--sched` CLI value.
+    pub fn parse(s: &str) -> Result<DispatchMode> {
+        match s {
+            "worker" => Ok(DispatchMode::Worker),
+            "global" => Ok(DispatchMode::Global),
+            other => anyhow::bail!("unknown --sched mode '{other}' (expected worker|global)"),
+        }
+    }
+}
+
 /// Scheduler sizing/policy knobs, shared by every resident model.
 #[derive(Clone, Copy, Debug)]
 pub struct SchedConfig {
@@ -217,6 +286,8 @@ pub struct SchedConfig {
     /// `0` = unlimited. `add_model` fails if registering a model
     /// overruns it.
     pub packed_budget_bytes: u64,
+    /// batch dispatch planner (`--sched worker|global`)
+    pub dispatch: DispatchMode,
 }
 
 impl Default for SchedConfig {
@@ -226,6 +297,7 @@ impl Default for SchedConfig {
             default_deadline_ms: 50,
             linger_ms: 2,
             packed_budget_bytes: 0,
+            dispatch: DispatchMode::Worker,
         }
     }
 }
@@ -278,6 +350,9 @@ pub struct ModelSnapshot {
     pub queue_depth: u64,
     /// batches executed by the worker
     pub batches: u64,
+    /// batches speculatively split by the global planner (always 0
+    /// under [`DispatchMode::Worker`])
+    pub splits: u64,
     /// peak bytes checked out of the worker's workspace
     pub ws_peak_bytes: u64,
     /// workspace heap fallbacks (flat after warm-up = zero-alloc)
@@ -293,18 +368,33 @@ pub struct MultiServer {
     cfg: SchedConfig,
     /// registration-ordered so reports are deterministic
     models: Mutex<Vec<(String, ModelEntry)>>,
+    /// shared execution plan, used by executors when
+    /// `cfg.dispatch == DispatchMode::Global`
+    plan: Arc<GlobalPlan>,
     stopping: AtomicBool,
 }
 
 impl MultiServer {
     /// An empty server; register models with [`MultiServer::add_model`].
     pub fn new(cfg: SchedConfig) -> MultiServer {
-        MultiServer { cfg, models: Mutex::new(Vec::new()), stopping: AtomicBool::new(false) }
+        MultiServer {
+            cfg,
+            models: Mutex::new(Vec::new()),
+            plan: Arc::new(GlobalPlan::new()),
+            stopping: AtomicBool::new(false),
+        }
     }
 
     /// The configuration every resident model runs under.
     pub fn config(&self) -> SchedConfig {
         self.cfg
+    }
+
+    /// Byte-accounting gauges of the shared workspace pool (all zero
+    /// under [`DispatchMode::Worker`], where each worker owns its
+    /// workspace outright).
+    pub fn ws_pool_gauges(&self) -> crate::engine::WsPoolGauges {
+        self.plan.ws_pool.gauges()
     }
 
     /// Register a model under `name` and start its worker thread. The
@@ -343,6 +433,9 @@ impl MultiServer {
         });
         let shared2 = shared.clone();
         let cfg = self.cfg;
+        let plan = self.plan.clone();
+        let plan_idx =
+            if cfg.dispatch == DispatchMode::Global { plan.register() } else { usize::MAX };
         let (ready_tx, ready_rx) = channel::<Result<String, String>>();
         let worker = std::thread::Builder::new()
             .name(format!("sfc-sched-{name}"))
@@ -359,10 +452,16 @@ impl MultiServer {
                     }
                     Err(err) => {
                         let _ = ready_tx.send(Err(format!("{err:#}")));
+                        if cfg.dispatch == DispatchMode::Global {
+                            plan.retire(plan_idx);
+                        }
                         return;
                     }
                 };
-                worker_loop(exe, shared2, cfg);
+                match cfg.dispatch {
+                    DispatchMode::Worker => worker_loop(exe, shared2, cfg),
+                    DispatchMode::Global => global_loop(exe, shared2, cfg, plan, plan_idx),
+                }
             })
             .expect("spawn scheduler worker");
         let platform = match ready_rx.recv() {
@@ -530,6 +629,7 @@ impl MultiServer {
             deadline_met: g.deadline_met.load(Ordering::Relaxed),
             queue_depth: g.queue_depth.load(Ordering::Relaxed),
             batches: g.batches.load(Ordering::Relaxed),
+            splits: g.splits.load(Ordering::Relaxed),
             ws_peak_bytes: g.ws_peak_bytes.load(Ordering::Relaxed),
             ws_heap_allocs: g.ws_heap_allocs.load(Ordering::Relaxed),
             latency: e.shared.latency.lock().unwrap().clone(),
@@ -634,9 +734,12 @@ fn worker_loop<R: ModelRunner>(exe: R, shared: Arc<ModelShared>, cfg: SchedConfi
     // serving checks every buffer out of the arena.
     let mut ws = Workspace::new();
     let mut input = vec![0f32; max_batch * sample];
+    let mut logits: Vec<f32> = Vec::new();
     let mut batch: Vec<SchedRequest> = Vec::with_capacity(max_batch);
-    // running batch-execution-time estimate, for the deadline margin
-    let mut exec_ewma = Duration::from_micros(500);
+    // running batch-execution-time estimate for the deadline margin,
+    // cold-started from the tuning table's measured ns/call when one is
+    // installed (`sfc autotune --out`, schema v4)
+    let mut exec_ewma = Duration::from_nanos(seeded_exec_ns(&shared.name, max_batch) as u64);
     loop {
         let mut st = shared.state.lock().unwrap();
         // WAIT: sleep until work arrives (or drain-and-exit on stop)
@@ -693,52 +796,371 @@ fn worker_loop<R: ModelRunner>(exe: R, shared: Arc<ModelShared>, cfg: SchedConfi
         shared.gauges.queue_depth.store(st.q.len() as u64, Ordering::Relaxed);
         drop(st);
         shared.space.notify_all();
-        // EXECUTE: pad + run (the input buffer is reused; zero the tail)
-        input[batch.len() * sample..].fill(0.0);
-        for (i, r) in batch.iter().enumerate() {
-            input[i * sample..(i + 1) * sample].copy_from_slice(&r.image);
-        }
+        // EXECUTE: pad + run (the input and logits staging buffers are
+        // reused across batches; zero the input tail)
+        fill_input(&mut input, &batch, sample);
         let t0 = Instant::now();
-        let result = exe.run_with(&input, &mut ws);
+        let result = exe.run_with_into(&input, &mut ws, &mut logits);
         exec_ewma = (t0.elapsed() + exec_ewma * 3) / 4;
         shared.gauges.batches.fetch_add(1, Ordering::Relaxed);
         shared.gauges.ws_peak_bytes.store(ws.peak_bytes() as u64, Ordering::Relaxed);
         shared.gauges.ws_heap_allocs.store(ws.heap_allocs(), Ordering::Relaxed);
         // COMPLETE
-        match result {
-            Ok(logits) => {
-                let finish = Instant::now();
-                let mut hist = shared.latency.lock().unwrap();
-                for (i, r) in batch.drain(..).enumerate() {
-                    let row = logits[i * classes..(i + 1) * classes].to_vec();
-                    let argmax = row
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(k, _)| k)
-                        .unwrap_or(0);
-                    let latency_s = finish.duration_since(r.enqueued).as_secs_f64();
-                    let deadline_met = finish <= r.deadline;
-                    shared.gauges.completed.fetch_add(1, Ordering::Relaxed);
-                    if deadline_met {
-                        shared.gauges.deadline_met.fetch_add(1, Ordering::Relaxed);
-                    }
-                    hist.record(latency_s);
-                    let _ = r.reply.send(Ok(Response::Done(Completion {
-                        logits: row,
-                        argmax,
-                        latency_s,
-                        deadline_met,
-                    })));
+        complete_batch(&shared, &mut batch, result, &logits, classes);
+    }
+}
+
+/// Copy each request's image into its batch row and zero the padded
+/// tail, so batch composition never changes a row's logits.
+fn fill_input(input: &mut [f32], batch: &[SchedRequest], sample: usize) {
+    input[batch.len() * sample..].fill(0.0);
+    for (i, r) in batch.iter().enumerate() {
+        input[i * sample..(i + 1) * sample].copy_from_slice(&r.image);
+    }
+}
+
+/// Resolve every request in an executed batch: per-row argmax + latency
+/// accounting on success, the typed exec error for all waiters on
+/// failure. Drains `batch`; `logits` is the batch-major staging buffer.
+fn complete_batch(
+    shared: &ModelShared,
+    batch: &mut Vec<SchedRequest>,
+    result: Result<()>,
+    logits: &[f32],
+    classes: usize,
+) {
+    match result {
+        Ok(()) => {
+            let finish = Instant::now();
+            let mut hist = shared.latency.lock().unwrap();
+            for (i, r) in batch.drain(..).enumerate() {
+                let row = logits[i * classes..(i + 1) * classes].to_vec();
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(k, _)| k)
+                    .unwrap_or(0);
+                let latency_s = finish.duration_since(r.enqueued).as_secs_f64();
+                let deadline_met = finish <= r.deadline;
+                shared.gauges.completed.fetch_add(1, Ordering::Relaxed);
+                if deadline_met {
+                    shared.gauges.deadline_met.fetch_add(1, Ordering::Relaxed);
                 }
-            }
-            Err(e) => {
-                let msg = format!("execute failed: {e}");
-                for r in batch.drain(..) {
-                    shared.gauges.failed.fetch_add(1, Ordering::Relaxed);
-                    let _ = r.reply.send(Err(ReplyErr::Exec(msg.clone())));
-                }
+                hist.record(latency_s);
+                let _ = r.reply.send(Ok(Response::Done(Completion {
+                    logits: row,
+                    argmax,
+                    latency_s,
+                    deadline_met,
+                })));
             }
         }
+        Err(e) => {
+            let msg = format!("execute failed: {e}");
+            for r in batch.drain(..) {
+                shared.gauges.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = r.reply.send(Err(ReplyErr::Exec(msg.clone())));
+            }
+        }
+    }
+}
+
+/// Cold-start execution estimate (ns) for one batch of `n` samples:
+/// the installed tuning table's measured ns/call scaled by batch size
+/// when available ([`crate::engine::tuning::global_exec_ns`]), else a
+/// 500 µs default.
+fn seeded_exec_ns(model: &str, n: usize) -> f64 {
+    crate::engine::tuning::global_exec_ns(model, n).unwrap_or(500_000.0)
+}
+
+/// Per-(model, batch-size) predicted execution cost in ns: seeded from
+/// the tuning table, refined online with the same 1/4 EWMA the worker
+/// path uses for its deadline margin.
+struct CostModel {
+    model: String,
+    /// observed EWMA ns indexed by batch size (slot 0 unused; 0.0 = no
+    /// observation yet)
+    observed: Vec<f64>,
+}
+
+impl CostModel {
+    fn new(model: &str, max_batch: usize) -> CostModel {
+        CostModel { model: model.to_string(), observed: vec![0.0; max_batch + 1] }
+    }
+
+    /// Predicted ns for a batch of `n`: exact observation → nearest
+    /// observed batch size linearly scaled → tuning-table seed → 500 µs.
+    fn predict_ns(&self, n: usize) -> f64 {
+        let n = n.clamp(1, self.observed.len() - 1);
+        if self.observed[n] > 0.0 {
+            return self.observed[n];
+        }
+        let nearest = self
+            .observed
+            .iter()
+            .enumerate()
+            .skip(1)
+            .filter(|(_, &ns)| ns > 0.0)
+            .min_by_key(|(b, _)| b.abs_diff(n));
+        if let Some((b, &ns)) = nearest {
+            return ns * n as f64 / b as f64;
+        }
+        seeded_exec_ns(&self.model, n)
+    }
+
+    /// Predicted execution time for a batch of `n` as a [`Duration`].
+    fn predict(&self, n: usize) -> Duration {
+        Duration::from_nanos(self.predict_ns(n) as u64)
+    }
+
+    /// Fold one measured batch execution into the table.
+    fn observe(&mut self, n: usize, elapsed: Duration) {
+        let n = n.clamp(1, self.observed.len() - 1);
+        let ns = elapsed.as_nanos() as f64;
+        let slot = &mut self.observed[n];
+        *slot = if *slot > 0.0 { (ns + 3.0 * *slot) / 4.0 } else { ns };
+    }
+}
+
+/// One model's published candidate batch: what its executor would run
+/// if granted a slot right now.
+#[derive(Clone, Copy, Debug)]
+struct Candidate {
+    /// latest instant execution must *start* for the candidate's
+    /// earliest deadline to be met (`deadline − predicted`). This is
+    /// the cost-aware-EDF key — at any instant, ordering by slack
+    /// `deadline − now − predicted` is ordering by `start_by` — and
+    /// doubles as the victim threshold for speculative splitting.
+    start_by: Instant,
+}
+
+struct PlanState {
+    /// per-model candidate slot, indexed by [`GlobalPlan::register`]
+    /// order; `None` = that model has nothing ready (or is executing)
+    candidates: Vec<Option<Candidate>>,
+    /// batches currently holding a run slot
+    running: usize,
+}
+
+/// The shared execution plan for [`DispatchMode::Global`]: candidate
+/// batches from every model, the run-slot counter, and the shared
+/// workspace pool. See the module docs for the protocol.
+struct GlobalPlan {
+    state: Mutex<PlanState>,
+    /// claim-waiters sleep here; notified on claim/release/retire
+    cv: Condvar,
+    /// model-affine workspace arenas shared by all executors
+    ws_pool: crate::engine::WorkspacePool,
+    /// max batches executing concurrently — one run slot per core-budget
+    /// lane, so inter-batch and intra-op parallelism share one budget
+    limit: usize,
+}
+
+impl GlobalPlan {
+    fn new() -> GlobalPlan {
+        GlobalPlan {
+            state: Mutex::new(PlanState { candidates: Vec::new(), running: 0 }),
+            cv: Condvar::new(),
+            ws_pool: crate::engine::WorkspacePool::new(0),
+            limit: crate::util::par::num_threads().max(1),
+        }
+    }
+
+    /// Allocate a candidate slot for a new model; returns its index.
+    fn register(&self) -> usize {
+        let mut st = self.state.lock().unwrap();
+        st.candidates.push(None);
+        st.candidates.len() - 1
+    }
+
+    /// Publish `cand` for model `idx` and block until this model may
+    /// execute: a run slot is free AND no other published candidate has
+    /// an earlier `start_by` (less slack). Returns the earliest
+    /// `start_by` still published by a *rival* model if the claim took
+    /// the last free slot — the threshold for speculative splitting —
+    /// else `None`.
+    fn claim(&self, idx: usize, cand: Candidate) -> Option<Instant> {
+        let mut st = self.state.lock().unwrap();
+        st.candidates[idx] = Some(cand);
+        loop {
+            if st.running < self.limit {
+                let most_urgent = st
+                    .candidates
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, c)| c.map(|c| (c.start_by, i)))
+                    .min()
+                    .map(|(_, i)| i);
+                if most_urgent == Some(idx) {
+                    st.candidates[idx] = None;
+                    st.running += 1;
+                    let contended = st.running >= self.limit;
+                    let victim = st.candidates.iter().filter_map(|c| c.map(|c| c.start_by)).min();
+                    drop(st);
+                    // the next-most-urgent candidate may now be claimable
+                    self.cv.notify_all();
+                    return if contended { victim } else { None };
+                }
+            }
+            // timed wait: claims/releases notify, but the timeout also
+            // bounds staleness (rival candidates expire, queues drain)
+            let (g, _) = self.cv.wait_timeout(st, Duration::from_millis(1)).unwrap();
+            st = g;
+        }
+    }
+
+    /// Return a run slot after execution.
+    fn release(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.running -= 1;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Clear a model's candidate slot on executor exit so a ghost entry
+    /// can never outrank live candidates.
+    fn retire(&self, idx: usize) {
+        let mut st = self.state.lock().unwrap();
+        if idx < st.candidates.len() {
+            st.candidates[idx] = None;
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+/// Per-model executor under [`DispatchMode::Global`]: same WAIT/FORM
+/// policy as [`worker_loop`] (so shed/drain semantics are identical),
+/// but the fire decision goes through [`GlobalPlan::claim`], execution
+/// leases a pooled workspace, and an over-long batch is speculatively
+/// split when it would blow a rival candidate's deadline.
+fn global_loop<R: ModelRunner>(
+    exe: R,
+    shared: Arc<ModelShared>,
+    cfg: SchedConfig,
+    plan: Arc<GlobalPlan>,
+    idx: usize,
+) {
+    let sample: usize = exe.input_dims()[1..].iter().product();
+    let classes = exe.out_classes();
+    let max_batch = exe.input_dims()[0].max(1);
+    let linger = Duration::from_millis(cfg.linger_ms);
+    let mut cost = CostModel::new(&shared.name, max_batch);
+    let mut input = vec![0f32; max_batch * sample];
+    let mut logits: Vec<f32> = Vec::new();
+    let mut batch: Vec<SchedRequest> = Vec::with_capacity(max_batch);
+    'serve: loop {
+        // WAIT + FORM: identical policy to worker_loop, with the cost
+        // model supplying the deadline margin
+        let cand = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                shed_expired(&shared, &mut st, Instant::now());
+                if !st.q.is_empty() {
+                    break;
+                }
+                if st.stopping {
+                    st.dead = true;
+                    drop(st);
+                    shared.space.notify_all();
+                    plan.retire(idx);
+                    return;
+                }
+                let (g, _) =
+                    shared.arrivals.wait_timeout(st, Duration::from_millis(20)).unwrap();
+                st = g;
+            }
+            loop {
+                if st.q.len() >= max_batch || st.stopping {
+                    break;
+                }
+                shed_expired(&shared, &mut st, Instant::now());
+                if st.q.is_empty() {
+                    break;
+                }
+                let earliest = st.q.iter().map(|r| r.deadline).min().unwrap();
+                let oldest = st.q.iter().map(|r| r.enqueued).min().unwrap();
+                let now = Instant::now();
+                let margin = cost.predict(st.q.len().min(max_batch)) * 2;
+                let fire_by = earliest.checked_sub(margin).unwrap_or(now);
+                let wait_until = fire_by.min(oldest + linger);
+                if now >= wait_until {
+                    break;
+                }
+                let dur = (wait_until - now).min(Duration::from_millis(5));
+                let (g, _) = shared.arrivals.wait_timeout(st, dur).unwrap();
+                st = g;
+            }
+            if st.q.is_empty() {
+                continue 'serve; // everything expired while forming
+            }
+            let size = st.q.len().min(max_batch);
+            let earliest = st.q.iter().map(|r| r.deadline).min().unwrap();
+            let predicted = cost.predict(size);
+            Candidate {
+                start_by: earliest.checked_sub(predicted).unwrap_or_else(Instant::now),
+            }
+        };
+        // CLAIM: publish the candidate, run when least-slack + slot free
+        let victim_start_by = plan.claim(idx, cand);
+        // SELECT under the queue lock (the queue may have changed while
+        // waiting for the claim — re-shed and re-sort)
+        {
+            let mut st = shared.state.lock().unwrap();
+            let now = Instant::now();
+            shed_expired(&shared, &mut st, now);
+            if st.q.is_empty() {
+                drop(st);
+                plan.release();
+                continue 'serve;
+            }
+            st.q.make_contiguous()
+                .sort_by(|a, b| a.deadline.cmp(&b.deadline).then(b.priority.cmp(&a.priority)));
+            while batch.len() < max_batch {
+                match st.q.pop_front() {
+                    Some(r) => batch.push(r),
+                    None => break,
+                }
+            }
+            // SPLIT: if the plan is contended and running the full batch
+            // would hold the slot past the instant the most urgent rival
+            // candidate must start, trim to the largest predicted-feasible
+            // prefix and requeue the tail at the *front* (it keeps its
+            // deadlines, so EDF re-selects it next round — never starved).
+            if let Some(start_by) = victim_start_by {
+                if batch.len() > 1 && now + cost.predict(batch.len()) > start_by {
+                    let feasible =
+                        (1..batch.len()).rev().find(|&k| now + cost.predict(k) <= start_by);
+                    if let Some(k) = feasible {
+                        for r in batch.drain(k..).rev() {
+                            st.q.push_front(r);
+                        }
+                        shared.gauges.splits.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            shared.gauges.queue_depth.store(st.q.len() as u64, Ordering::Relaxed);
+        }
+        shared.space.notify_all();
+        // EXECUTE: lease a model-affine pooled workspace and one core
+        // lane; intra-op work jumps the executor pool's FIFO backlog
+        let result;
+        {
+            let _lane = crate::util::par::CoreBudget::lease(1);
+            let mut ws = plan.ws_pool.lease(idx);
+            fill_input(&mut input, &batch, sample);
+            let t0 = Instant::now();
+            result =
+                crate::util::pool::urgent(|| exe.run_with_into(&input, &mut ws, &mut logits));
+            cost.observe(batch.len(), t0.elapsed());
+            shared.gauges.batches.fetch_add(1, Ordering::Relaxed);
+            shared.gauges.ws_peak_bytes.store(ws.peak_bytes() as u64, Ordering::Relaxed);
+            shared.gauges.ws_heap_allocs.store(ws.heap_allocs(), Ordering::Relaxed);
+            plan.ws_pool.give(idx, ws);
+        }
+        plan.release();
+        // COMPLETE: identical to the worker path
+        complete_batch(&shared, &mut batch, result, &logits, classes);
     }
 }

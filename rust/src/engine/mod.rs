@@ -30,7 +30,7 @@ pub use cache::{global as global_plan_cache, PlanCache, PlanKey};
 pub use desc::{ConvDesc, ConvDescBuilder, Epilogue, QuantSpec};
 pub use select::{default_selector, AutotuneCfg, Policy, Selector, TuneEntry};
 pub use tuning::TuningTable;
-pub use workspace::Workspace;
+pub use workspace::{Workspace, WorkspacePool, WsPoolGauges};
 
 use crate::algo::ntt::ntt_odot_bits;
 use crate::algo::registry::{catalog, AlgoKind, AlgoSpec};

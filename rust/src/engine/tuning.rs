@@ -16,7 +16,7 @@ use super::desc::ConvDesc;
 use crate::linalg::gemm::Blocking;
 use crate::quant::Granularity;
 use anyhow::{Context, Result};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::sync::OnceLock;
 
@@ -26,9 +26,12 @@ use std::sync::OnceLock;
 /// `blocking` object (the tuned GEMM macro-kernel Mc/Kc/Nc — see
 /// [`crate::linalg::gemm::Blocking`]); v3 adds the table-level
 /// `tile_len` field (the tuned overlap-save transform length installed
-/// via [`crate::engine::tiled::set_tile_len_override`]). Older files
-/// still load (they simply carry no blocking / tile length).
-pub const TUNING_SCHEMA_VERSION: u32 = 3;
+/// via [`crate::engine::tiled::set_tile_len_override`]); v4 adds the
+/// `exec` array of per-(model, batch-size) measured end-to-end ns/call
+/// records ([`TuningTable::set_exec_ns`]) that seed the serving
+/// scheduler's cost model. Older files still load (they simply carry no
+/// blocking / tile length / exec records).
+pub const TUNING_SCHEMA_VERSION: u32 = 4;
 
 fn gran_code(g: Granularity) -> &'static str {
     match g {
@@ -85,6 +88,8 @@ pub struct TuningTable {
     entries: HashMap<String, TunedChoice>,
     blocking: Option<Blocking>,
     tile_len: Option<usize>,
+    /// (model name, batch size) → measured end-to-end ns/call (schema ≥ 4)
+    exec: BTreeMap<(String, usize), f64>,
 }
 
 impl TuningTable {
@@ -138,6 +143,45 @@ impl TuningTable {
         self.tile_len
     }
 
+    /// Record the measured end-to-end ns/call for `model` at `batch`
+    /// (`sfc autotune`'s exec-cost sweep; schema ≥ 4). The serving
+    /// scheduler seeds its per-(model, batch-size) cost table from
+    /// these records instead of a hard-coded cold-start guess.
+    pub fn set_exec_ns(&mut self, model: &str, batch: usize, ns: f64) {
+        self.exec.insert((model.to_string(), batch), ns);
+    }
+
+    /// The exact measured ns/call for `(model, batch)`, if recorded.
+    pub fn exec_ns(&self, model: &str, batch: usize) -> Option<f64> {
+        self.exec.get(&(model.to_string(), batch)).copied()
+    }
+
+    /// Predicted ns/call for `(model, batch)`: the exact record when
+    /// present, otherwise the nearest recorded batch size for the model
+    /// scaled linearly by batch ratio (conv work is linear in batch).
+    pub fn exec_ns_scaled(&self, model: &str, batch: usize) -> Option<f64> {
+        if let Some(ns) = self.exec_ns(model, batch) {
+            return Some(ns);
+        }
+        let mut best: Option<(usize, f64)> = None;
+        for ((m, b), ns) in &self.exec {
+            if m != model {
+                continue;
+            }
+            let dist = b.abs_diff(batch);
+            if best.is_none_or(|(bb, _)| dist < bb.abs_diff(batch)) {
+                best = Some((*b, *ns));
+            }
+        }
+        best.map(|(b, ns)| ns * batch as f64 / b.max(1) as f64)
+    }
+
+    /// Iterate the recorded `(model, batch, ns)` exec-cost records in
+    /// deterministic (sorted) order.
+    pub fn exec_entries(&self) -> impl Iterator<Item = (&str, usize, f64)> {
+        self.exec.iter().map(|((m, b), ns)| (m.as_str(), *b, *ns))
+    }
+
     /// Render the table as the tuning-file JSON (one entry per line,
     /// keys sorted, so committed files diff cleanly run to run).
     pub fn to_json(&self) -> String {
@@ -154,6 +198,21 @@ impl TuningTable {
         }
         if let Some(t) = self.tile_len {
             body.push_str(&format!("  \"tile_len\": {t},\n"));
+        }
+        if !self.exec.is_empty() {
+            // field names deliberately avoid the "desc"/"blocking"/
+            // "tile_len" substrings the line-oriented parser scans for
+            body.push_str("  \"exec\": [\n");
+            for (i, ((m, b), ns)) in self.exec.iter().enumerate() {
+                body.push_str(&format!(
+                    "    {{\"exec_model\": \"{}\", \"exec_batch\": {}, \"exec_ns\": {:.1}}}{}\n",
+                    m,
+                    b,
+                    ns,
+                    if i + 1 < self.exec.len() { "," } else { "" }
+                ));
+            }
+            body.push_str("  ],\n");
         }
         body.push_str("  \"entries\": [\n");
         let mut keys: Vec<&String> = self.entries.keys().collect();
@@ -202,7 +261,17 @@ impl TuningTable {
             tile_len = Some(num_field(line, "tile_len").context("malformed tile_len")? as usize);
         }
         let mut entries = HashMap::new();
+        let mut exec = BTreeMap::new();
         for line in text.lines() {
+            if let Some(model) = quoted_field(line, "exec_model") {
+                let batch = num_field(line, "exec_batch")
+                    .with_context(|| format!("exec record without exec_batch: {line}"))?
+                    as usize;
+                let ns = num_field(line, "exec_ns")
+                    .with_context(|| format!("exec record without exec_ns: {line}"))?;
+                exec.insert((model.to_string(), batch), ns);
+                continue;
+            }
             let Some(desc) = quoted_field(line, "desc") else { continue };
             let engine = quoted_field(line, "engine")
                 .with_context(|| format!("tuning entry without engine: {line}"))?;
@@ -213,7 +282,7 @@ impl TuningTable {
                 TunedChoice { engine: engine.to_string(), median_ns },
             );
         }
-        Ok(TuningTable { entries, blocking, tile_len })
+        Ok(TuningTable { entries, blocking, tile_len, exec })
     }
 
     /// Write the table to `path` as tuning-file JSON.
@@ -282,6 +351,14 @@ pub fn global_lookup(d: &ConvDesc) -> Option<&'static TunedChoice> {
     GLOBAL_TUNING.get().and_then(|t| t.lookup(d))
 }
 
+/// Predicted exec ns/call for `(model, batch)` from the process-wide
+/// tuning table (exact record or nearest-batch linear scaling), if a
+/// table is installed and carries a usable record. The serving
+/// scheduler's cold-start seed ([`crate::coordinator::sched`]).
+pub fn global_exec_ns(model: &str, batch: usize) -> Option<f64> {
+    GLOBAL_TUNING.get().and_then(|t| t.exec_ns_scaled(model, batch))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -308,6 +385,9 @@ mod tests {
         t.insert(&d2, "direct", 3.5e-4);
         t.set_blocking(Some(Blocking { mc: 64, kc: 512, nc: 256 }));
         t.set_tile_len(Some(32));
+        t.set_exec_ns("resnet18", 1, 450_000.0);
+        t.set_exec_ns("resnet18", 8, 2_900_000.0);
+        t.set_exec_ns("mobilenet", 8, 1_200_000.0);
         let text = t.to_json();
         let back = TuningTable::from_json(&text).unwrap();
         assert_eq!(back.len(), 2);
@@ -316,8 +396,37 @@ mod tests {
         assert!((back.lookup(&d1).unwrap().median_ns - 1.25e6).abs() < 1.0);
         assert_eq!(back.blocking(), Some(Blocking { mc: 64, kc: 512, nc: 256 }));
         assert_eq!(back.tile_len(), Some(32));
+        assert_eq!(back.exec_ns("resnet18", 8), Some(2_900_000.0));
+        assert_eq!(back.exec_entries().count(), 3);
         // deterministic rendering (committed files must diff cleanly)
         assert_eq!(text, back.to_json());
+    }
+
+    #[test]
+    fn exec_ns_scaled_interpolates_by_batch() {
+        let mut t = TuningTable::new();
+        t.set_exec_ns("m", 2, 1_000.0);
+        t.set_exec_ns("m", 8, 4_800.0);
+        // exact hit wins
+        assert_eq!(t.exec_ns_scaled("m", 8), Some(4_800.0));
+        // nearest batch, linearly scaled: 4 is nearest to 2
+        assert_eq!(t.exec_ns_scaled("m", 4), Some(2_000.0));
+        // extrapolation above the largest recorded batch
+        assert_eq!(t.exec_ns_scaled("m", 16), Some(9_600.0));
+        // unknown model carries no prediction
+        assert_eq!(t.exec_ns_scaled("other", 4), None);
+    }
+
+    #[test]
+    fn accepts_v3_files_without_exec_records() {
+        let v3 = "{\n  \"tuning\": \"sfc-autotune\",\n  \"schema_version\": 3,\n  \
+                  \"kernel\": \"scalar\",\n  \"tile_len\": 32,\n  \"entries\": [\n    \
+                  {\"desc\": \"b1_ic3_oc16_h32x32_r3_s1_p1_g1_d1_enone\", \
+                  \"engine\": \"direct\", \"median_ns\": 100.0}\n  ]\n}\n";
+        let t = TuningTable::from_json(v3).unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.tile_len(), Some(32));
+        assert_eq!(t.exec_ns_scaled("resnet18", 8), None, "v3 files carry no exec records");
     }
 
     #[test]

@@ -24,17 +24,37 @@
 //! assert the zero-alloc property end to end.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Process-wide high-water mark of bytes simultaneously checked out of
 /// any [`Workspace`] in this process.
 static GLOBAL_PEAK_BYTES: AtomicU64 = AtomicU64::new(0);
 /// Process-wide count of checkouts that fell back to a heap allocation.
 static GLOBAL_HEAP_ALLOCS: AtomicU64 = AtomicU64::new(0);
+/// Process-wide high-water mark of bytes parked in any [`WorkspacePool`]
+/// free list.
+static GLOBAL_POOL_PEAK_BYTES: AtomicU64 = AtomicU64::new(0);
+/// Process-wide [`WorkspacePool::lease`] calls.
+static GLOBAL_POOL_LEASES: AtomicU64 = AtomicU64::new(0);
+/// Process-wide leases that found the pool empty and built a fresh
+/// [`Workspace`] (stops growing once the pool holds the working set).
+static GLOBAL_POOL_MISSES: AtomicU64 = AtomicU64::new(0);
 
 /// (peak bytes, heap-fallback allocations) across every workspace in
 /// the process.
 pub fn global_counters() -> (u64, u64) {
     (GLOBAL_PEAK_BYTES.load(Ordering::Relaxed), GLOBAL_HEAP_ALLOCS.load(Ordering::Relaxed))
+}
+
+/// (peak resident bytes, leases, pool-miss fresh builds) across every
+/// [`WorkspacePool`] in the process — the serving layer re-exports this
+/// via `coordinator::metrics::ws_pool_counters`.
+pub fn global_pool_counters() -> (u64, u64, u64) {
+    (
+        GLOBAL_POOL_PEAK_BYTES.load(Ordering::Relaxed),
+        GLOBAL_POOL_LEASES.load(Ordering::Relaxed),
+        GLOBAL_POOL_MISSES.load(Ordering::Relaxed),
+    )
 }
 
 /// Typed free-list of returned buffers.
@@ -219,6 +239,154 @@ impl std::fmt::Debug for Workspace {
     }
 }
 
+// ---------------------------------------------------------------------
+// WorkspacePool: cross-model shared workspace ownership
+// ---------------------------------------------------------------------
+
+/// A snapshot of one [`WorkspacePool`]'s accounting (see
+/// [`WorkspacePool::gauges`]). All counters are exact under the pool's
+/// mutex; the process-wide mirrors are in [`global_pool_counters`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WsPoolGauges {
+    /// bytes parked in the free list right now (capacity retained by
+    /// returned workspaces)
+    pub resident_bytes: u64,
+    /// high-water mark of `resident_bytes` over the pool's lifetime
+    pub peak_resident_bytes: u64,
+    /// workspaces parked in the free list right now
+    pub resident_ws: u64,
+    /// workspaces currently leased out
+    pub leased: u64,
+    /// high-water mark of simultaneously leased workspaces
+    pub peak_leased: u64,
+    /// total [`WorkspacePool::lease`] calls
+    pub leases: u64,
+    /// leases satisfied by a workspace last used by the *same* model —
+    /// the arena's typed pools hold that model's exact buffer shapes,
+    /// so the execution inside stays heap-alloc-free
+    pub affinity_hits: u64,
+    /// leases that found the free list empty and built a fresh arena
+    pub misses: u64,
+    /// returns dropped (not pooled) because pooling them would exceed
+    /// the configured byte limit
+    pub dropped: u64,
+}
+
+struct WsPoolState {
+    /// (model tag of last use, the parked arena)
+    free: Vec<(usize, Workspace)>,
+    g: WsPoolGauges,
+}
+
+/// A `PackBudget`-style shared pool of whole [`Workspace`] arenas with
+/// byte accounting, for serving paths where several models execute on
+/// shared threads instead of each worker owning one arena for life.
+///
+/// Lease/return contract: an executor [`WorkspacePool::lease`]s an
+/// arena tagged with its model index, runs, and
+/// [`WorkspacePool::give`]s it back. The pool prefers handing a model
+/// the arena it used last (*affinity*): the arena's typed free lists
+/// then already hold that model's exact buffer shapes, so the
+/// zero-steady-state-alloc contract survives models with disjoint
+/// workspace profiles sharing one pool. An optional byte limit bounds
+/// the capacity parked in the free list — over-limit returns are
+/// dropped (correctness is unaffected; the next lease re-warms).
+///
+/// ```
+/// use sfc::engine::WorkspacePool;
+///
+/// let pool = WorkspacePool::new(0); // unlimited
+/// let mut ws = pool.lease(0);
+/// let buf = ws.take_f32(256);
+/// ws.give_f32(buf);
+/// pool.give(0, ws);
+/// assert_eq!(pool.gauges().resident_ws, 1);
+/// ```
+pub struct WorkspacePool {
+    limit_bytes: usize,
+    inner: Mutex<WsPoolState>,
+}
+
+impl WorkspacePool {
+    /// A pool whose free list may retain up to `limit_bytes` of parked
+    /// capacity (0 = unlimited, the historical per-worker behavior).
+    pub fn new(limit_bytes: usize) -> WorkspacePool {
+        WorkspacePool {
+            limit_bytes,
+            inner: Mutex::new(WsPoolState { free: Vec::new(), g: WsPoolGauges::default() }),
+        }
+    }
+
+    /// The configured cap on parked bytes (0 = unlimited).
+    pub fn limit_bytes(&self) -> usize {
+        self.limit_bytes
+    }
+
+    /// Check an arena out for `model`: the arena this model returned
+    /// last if still parked, else any parked arena, else a fresh one.
+    pub fn lease(&self, model: usize) -> Workspace {
+        let mut st = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        st.g.leases += 1;
+        st.g.leased += 1;
+        st.g.peak_leased = st.g.peak_leased.max(st.g.leased);
+        GLOBAL_POOL_LEASES.fetch_add(1, Ordering::Relaxed);
+        let slot = match st.free.iter().position(|(tag, _)| *tag == model) {
+            Some(i) => {
+                st.g.affinity_hits += 1;
+                Some(i)
+            }
+            None => st.free.len().checked_sub(1),
+        };
+        match slot {
+            Some(i) => {
+                let (_, ws) = st.free.swap_remove(i);
+                st.g.resident_bytes -= ws.pooled_bytes() as u64;
+                st.g.resident_ws -= 1;
+                ws
+            }
+            None => {
+                st.g.misses += 1;
+                GLOBAL_POOL_MISSES.fetch_add(1, Ordering::Relaxed);
+                Workspace::new()
+            }
+        }
+    }
+
+    /// Return a leased arena, tagging it with the model that used it.
+    /// Arenas whose parked capacity would push the free list over the
+    /// byte limit are dropped instead of pooled.
+    pub fn give(&self, model: usize, ws: Workspace) {
+        let bytes = ws.pooled_bytes() as u64;
+        let mut st = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        st.g.leased = st.g.leased.saturating_sub(1);
+        if self.limit_bytes > 0 && st.g.resident_bytes + bytes > self.limit_bytes as u64 {
+            st.g.dropped += 1;
+            return; // ws drops here, outside the steady-state contract
+        }
+        st.free.push((model, ws));
+        st.g.resident_bytes += bytes;
+        st.g.resident_ws += 1;
+        st.g.peak_resident_bytes = st.g.peak_resident_bytes.max(st.g.resident_bytes);
+        GLOBAL_POOL_PEAK_BYTES.fetch_max(st.g.resident_bytes, Ordering::Relaxed);
+    }
+
+    /// Snapshot the pool's accounting.
+    pub fn gauges(&self) -> WsPoolGauges {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).g
+    }
+}
+
+impl std::fmt::Debug for WorkspacePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let g = self.gauges();
+        f.debug_struct("WorkspacePool")
+            .field("limit_bytes", &self.limit_bytes)
+            .field("resident_bytes", &g.resident_bytes)
+            .field("leased", &g.leased)
+            .finish()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,5 +442,44 @@ mod tests {
         let v = ws.take_f32(1024);
         assert_eq!(ws.heap_allocs(), before, "prewarmed bytes must satisfy the take");
         ws.give_f32(v);
+    }
+
+    #[test]
+    fn workspace_pool_prefers_affinity_and_accounts_bytes() {
+        let pool = WorkspacePool::new(0);
+        // model 0 warms a large arena, model 1 a small one
+        let mut a = pool.lease(0);
+        let buf = a.take_f32(10_000);
+        a.give_f32(buf);
+        let mut b = pool.lease(1);
+        let buf = b.take_f32(16);
+        b.give_f32(buf);
+        let (ab, bb) = (a.pooled_bytes(), b.pooled_bytes());
+        pool.give(0, a);
+        pool.give(1, b);
+        let g = pool.gauges();
+        assert_eq!(g.resident_ws, 2);
+        assert_eq!(g.leased, 0);
+        assert_eq!(g.misses, 2, "both first leases built fresh arenas");
+        assert_eq!(g.resident_bytes, (ab + bb) as u64);
+        // model 0 gets its own arena back, not model 1's
+        let a2 = pool.lease(0);
+        assert_eq!(a2.pooled_bytes(), ab, "affinity must return the same arena");
+        assert_eq!(pool.gauges().affinity_hits, 1);
+        pool.give(0, a2);
+        assert_eq!(pool.gauges().misses, 2, "affinity leases must not miss");
+    }
+
+    #[test]
+    fn workspace_pool_limit_drops_over_budget_returns() {
+        let pool = WorkspacePool::new(1024);
+        let mut a = pool.lease(0);
+        let buf = a.take_f32(10_000); // 40 KB arena, far over the limit
+        a.give_f32(buf);
+        pool.give(0, a);
+        let g = pool.gauges();
+        assert_eq!(g.dropped, 1, "over-budget return must be dropped");
+        assert_eq!(g.resident_ws, 0);
+        assert_eq!(g.resident_bytes, 0);
     }
 }

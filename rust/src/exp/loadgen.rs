@@ -65,6 +65,9 @@ pub struct ModelReport {
     pub p99_ms: f64,
     /// batches the model's worker executed (lifetime)
     pub batches: u64,
+    /// batches speculatively split by the global planner (0 under
+    /// `--sched worker`)
+    pub splits: u64,
     /// workspace heap fallbacks after the run (lifetime)
     pub ws_heap_allocs: u64,
     /// true when the paced phase added zero workspace heap fallbacks
@@ -165,6 +168,7 @@ pub fn run(server: &MultiServer, models: &[String], cfg: &LoadgenCfg) -> Result<
             p50_ms: 0.0,
             p99_ms: 0.0,
             batches: 0,
+            splits: 0,
             ws_heap_allocs: 0,
             alloc_flat: false,
             queue_final: 0,
@@ -197,6 +201,7 @@ pub fn run(server: &MultiServer, models: &[String], cfg: &LoadgenCfg) -> Result<
             rep.p50_ms = s.latency.p50() * 1e3;
             rep.p99_ms = s.latency.p99() * 1e3;
             rep.batches = s.batches;
+            rep.splits = s.splits;
             rep.ws_heap_allocs = s.ws_heap_allocs;
             rep.alloc_flat = s.ws_heap_allocs == warm_allocs[mi];
             rep.queue_final = s.queue_depth;
@@ -212,7 +217,7 @@ pub fn print_report(reports: &[ModelReport]) {
         println!(
             "loadgen: model={} offered={} goodput={} shed={} (queue_full={} displaced={} \
              expired={}) failed={} deadline_met={} p50_ms={:.2} p99_ms={:.2} batches={} \
-             ws_heap_allocs={} alloc_flat={} queue_final={}",
+             splits={} ws_heap_allocs={} alloc_flat={} queue_final={}",
             r.model,
             r.offered,
             r.completed,
@@ -225,6 +230,7 @@ pub fn print_report(reports: &[ModelReport]) {
             r.p50_ms,
             r.p99_ms,
             r.batches,
+            r.splits,
             r.ws_heap_allocs,
             r.alloc_flat,
             r.queue_final
@@ -232,4 +238,84 @@ pub fn print_report(reports: &[ModelReport]) {
     }
     let clean = reports.iter().all(|r| r.queue_final == 0 && r.failed == 0);
     println!("loadgen: drain={}", if clean { "clean" } else { "dirty" });
+}
+
+/// Render the loadgen outcome as the `BENCH_serve.json` document
+/// (schema v1), hand-rolled like the conv bench writer so the binary
+/// stays dependency-free. Top level: run metadata (`bench: "serve"`,
+/// kernel, threads, dispatch mode, traffic shape), executor-pool and
+/// workspace-pool gauges, then one record per model. `tools/bench_gate.py`
+/// gates `goodput`, `deadline_met_ratio`, and `p99_ms` per model.
+pub fn report_json(
+    reports: &[ModelReport],
+    server: &MultiServer,
+    cfg: &LoadgenCfg,
+) -> String {
+    let sched = server.config().dispatch;
+    let pg = crate::coordinator::metrics::pool_gauges();
+    let wg = server.ws_pool_gauges();
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"serve\",\n");
+    s.push_str("  \"schema_version\": 1,\n");
+    s.push_str(&format!(
+        "  \"kernel\": \"{}\",\n",
+        crate::coordinator::metrics::kernel_name()
+    ));
+    s.push_str(&format!("  \"threads\": {},\n", crate::util::par::num_threads()));
+    s.push_str(&format!("  \"sched\": \"{}\",\n", sched.name()));
+    s.push_str(&format!("  \"qps\": {:.1},\n", cfg.qps));
+    s.push_str(&format!("  \"duration_s\": {:.2},\n", cfg.duration_s));
+    s.push_str(&format!("  \"deadline_ms\": {},\n", cfg.deadline_ms));
+    s.push_str(&format!("  \"low_ratio\": {:.3},\n", cfg.low_ratio));
+    s.push_str(&format!("  \"seed\": {},\n", cfg.seed));
+    s.push_str(&format!(
+        "  \"pool\": {{\"workers\": {}, \"tasks\": {}, \"steals\": {}, \"urgent\": {}}},\n",
+        pg.workers, pg.tasks, pg.steals, pg.urgent
+    ));
+    s.push_str(&format!(
+        "  \"ws_pool\": {{\"resident_bytes\": {}, \"peak_resident_bytes\": {}, \
+         \"resident_ws\": {}, \"peak_leased\": {}, \"leases\": {}, \"affinity_hits\": {}, \
+         \"misses\": {}, \"dropped\": {}}},\n",
+        wg.resident_bytes,
+        wg.peak_resident_bytes,
+        wg.resident_ws,
+        wg.peak_leased,
+        wg.leases,
+        wg.affinity_hits,
+        wg.misses,
+        wg.dropped
+    ));
+    s.push_str("  \"models\": [\n");
+    for (i, r) in reports.iter().enumerate() {
+        let ratio = r.deadline_met as f64 / r.completed.max(1) as f64;
+        s.push_str(&format!(
+            "    {{\"model\": \"{}\", \"offered\": {}, \"goodput\": {}, \"shed\": {}, \
+             \"shed_queue_full\": {}, \"shed_displaced\": {}, \"shed_expired\": {}, \
+             \"failed\": {}, \"deadline_met\": {}, \"deadline_met_ratio\": {:.4}, \
+             \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"batches\": {}, \"splits\": {}, \
+             \"ws_heap_allocs\": {}, \"alloc_flat\": {}, \"queue_final\": {}}}{}\n",
+            r.model,
+            r.offered,
+            r.completed,
+            r.shed,
+            r.shed_queue_full,
+            r.shed_displaced,
+            r.shed_expired,
+            r.failed,
+            r.deadline_met,
+            ratio,
+            r.p50_ms,
+            r.p99_ms,
+            r.batches,
+            r.splits,
+            r.ws_heap_allocs,
+            r.alloc_flat,
+            r.queue_final,
+            if i + 1 < reports.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n");
+    s.push_str("}\n");
+    s
 }

@@ -60,12 +60,18 @@
 //!   continuous batching by per-request deadline, priority-based
 //!   admission control and typed load shedding, resident models sharing
 //!   the plan cache under a packed-weight budget
-//!   ([`engine::PackBudget`]), one workspace per model worker
-//!   (zero-alloc steady state), streaming p50/p99 latency histograms
+//!   ([`engine::PackBudget`]). Two dispatch policies (`--sched`):
+//!   per-model workers each owning one workspace (zero-alloc steady
+//!   state), or the cost-model-driven global batch planner — candidate
+//!   batches from every model ranked by cost-aware EDF (predictions
+//!   seeded from the tuning table, refined online), speculative batch
+//!   splitting, and workspaces leased from the shared byte-accounted
+//!   [`engine::WorkspacePool`]. Streaming p50/p99 latency histograms
 //!   ([`coordinator::metrics::StreamingHistogram`]) and per-model
 //!   gauges. [`coordinator::batcher::Server`] is the single-model shim;
 //!   `sfc loadgen` ([`exp::loadgen`]) is the overload measurement
-//!   harness (ENGINE.md §Serving & scheduling).
+//!   harness with a BENCH_serve.json snapshot writer (ENGINE.md
+//!   §Serving & scheduling).
 //! * [`data`] — SynthImage dataset (ImageNet stand-in, DESIGN.md §2).
 //! * [`exp`] — experiment harnesses regenerating the paper's tables, and
 //!   [`exp::perf`]: the `sfc bench --json` perf-snapshot harness

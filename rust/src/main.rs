@@ -100,11 +100,15 @@ engine selection (cuDNN findAlgorithm-style):
               print measured times + the selected winner (--bits N asks
               for the intN transform-domain scheme; 0 = float); also
               sweeps the GEMM Mc/Kc/Nc cache-blocking candidates on the
-              largest shape's winner (pinning the fastest) and the
-              overlap-save tile lengths for the tiled frequency arm;
+              largest shape's winner (pinning the fastest), the
+              overlap-save tile lengths for the tiled frequency arm, and
+              the compiled model end-to-end at a few batch sizes
+              (per-(model, batch) exec-ns records the serving scheduler
+              seeds its cost table from);
               --out writes the measured shape -> engine table
-              (+ blocking + tile length, schema v3) that `serve` and
-              `loadgen` warm from via --tuning (no re-measuring)
+              (+ blocking + tile length + exec costs, schema v4; v1-v3
+              files still load) that `serve` and `loadgen` warm from via
+              --tuning (no re-measuring)
 
 perf snapshot (steady-state pre-packed run over a reused workspace):
   bench       [--json] [--out BENCH_conv.json] [--iters 9] [--warmup 2]
@@ -143,20 +147,29 @@ pure-Rust workspace-backed path):
               a packed-weight budget ([--budget-mb 0] [--queue-depth 64]
               [--linger-ms 2]); requires --runner engine; --cores N caps
               the process-wide CoreBudget (model workers x intra-op GEMM
-              threads never exceed N concurrent lanes)
+              threads never exceed N concurrent lanes); --sched
+              worker|global picks the batch dispatch planner (global =
+              cost-aware EDF over all models' candidate batches, shared
+              workspace pool, speculative batch splitting)
 
 serving load generator (continuous batching under overload):
   loadgen     [--models resnet18,mobilenet:int8] [--qps 400]
               [--duration-s 2.0] [--deadline-ms 25] [--low-ratio 0.6]
               [--batch 8] [--queue-depth 32] [--budget-mb 64]
               [--linger-ms 2] [--seed 7] [--tuning tuning.json]
-              [--cores N]
+              [--cores N] [--sched worker|global]
+              [--json] [--out BENCH_serve.json]
               open-loop paced traffic against a multi-model scheduler
               (random weights; name[:intN] specs get synthetic-calib
               PTQ): mixed priorities/deadlines, deadline-driven batch
               formation, admission control + load shedding; reports per
               model goodput, typed sheds, deadline hit rate, streaming
-              p50/p99, batches, workspace alloc flatness and drain state
+              p50/p99, batches, splits, workspace alloc flatness and
+              drain state; --sched global routes all models through the
+              cost-model-driven global planner (EDF over candidate
+              batches, shared workspace pool, speculative splitting);
+              --json/--out write the BENCH_serve.json snapshot
+              (schema v1) that tools/bench_gate.py gates
 "#
     );
 }
@@ -532,6 +545,43 @@ fn cmd_autotune(opts: &HashMap<String, String>) -> Result<()> {
         let win = entries.iter().find(|t| t.selected).expect("sweep flags a winner");
         table.set_tile_len(Some(win.tile_len));
         println!("    selected tile length: {}\n", win.tile_len);
+    }
+
+    // Exec-cost sweep (schema v4): run the compiled model end to end at
+    // a few batch sizes and record the median ns/batch, so the serving
+    // scheduler seeds its per-(model, batch-size) cost table — the
+    // worker arm's EWMA cold start and the global planner's predictions
+    // — from measurements instead of the 500 µs default.
+    if model_name != "vgg16" {
+        let mut exec_batches = vec![1usize, 8];
+        if !exec_batches.contains(&batch) {
+            exec_batches.push(batch);
+        }
+        exec_batches.sort_unstable();
+        println!("exec sweep — {model_name} end-to-end ns/batch (schema v4 exec records):");
+        for &n in &exec_batches {
+            let m = if model_name == "mobilenet" {
+                mobilenet_random(&mobilenet_cfg(), 1, 10)
+            } else {
+                resnet_random(&resnet_cfg_by_name(model_name)?, 1, 10)
+            };
+            let exe = sfc::runtime::EngineExecutor::from_model(m, vec![n, 3, 32, 32], 10);
+            let mut ws = sfc::engine::Workspace::new();
+            let input = vec![0.1f32; n * 3 * 32 * 32];
+            let mut out = Vec::new();
+            exe.run_with_into(&input, &mut ws, &mut out)?; // warm the arenas
+            let mut samples = Vec::with_capacity(iters.max(1));
+            for _ in 0..iters.max(1) {
+                let t0 = std::time::Instant::now();
+                exe.run_with_into(&input, &mut ws, &mut out)?;
+                samples.push(t0.elapsed().as_nanos() as f64);
+            }
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let med = samples[samples.len() / 2];
+            table.set_exec_ns(model_name, n, med);
+            println!("  batch {n:<3} {:>9.3} ms/batch", med / 1e6);
+        }
+        println!();
     }
 
     if let Some(path) = out_path {

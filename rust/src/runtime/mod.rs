@@ -192,8 +192,26 @@ impl EngineExecutor {
     /// Run one batch out of a caller workspace: input is NCHW f32 with
     /// dims == `input_dims`; returns the [N, classes] logits. The batch
     /// is copied once, into an arena buffer the graph's `Input` node
-    /// takes ownership of (`forward_ws_owned`).
+    /// takes ownership of (`forward_ws_owned`). Allocates the returned
+    /// logits vector — batch loops that reuse a staging buffer should
+    /// call [`EngineExecutor::run_with_into`] instead.
     pub fn run_with(&self, batch: &[f32], ws: &mut Workspace) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.run_with_into(batch, ws, &mut out)?;
+        Ok(out)
+    }
+
+    /// Like [`EngineExecutor::run_with`] but writing the logits into a
+    /// caller buffer (cleared, then extended to [N, classes]): with a
+    /// long-lived `out` this path performs **zero** heap allocation per
+    /// batch in steady state — the output tensor's arena buffer goes
+    /// straight back to the workspace instead of being cloned.
+    pub fn run_with_into(
+        &self,
+        batch: &[f32],
+        ws: &mut Workspace,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let expect: usize = self.input_dims.iter().product();
         anyhow::ensure!(batch.len() == expect, "batch size mismatch: {} vs {expect}", batch.len());
         let mut xbuf = ws.take_f32(expect);
@@ -208,9 +226,10 @@ impl EngineExecutor {
             n,
             self.out_classes
         );
-        let logits = y.data.clone();
+        out.clear();
+        out.extend_from_slice(&y.data);
         ws.give_f32(y.data);
-        Ok(logits)
+        Ok(())
     }
 
     /// Run one batch with a throwaway workspace.

@@ -81,6 +81,7 @@ static STEALS: AtomicU64 = AtomicU64::new(0);
 static SPAWN_AVOIDED: AtomicU64 = AtomicU64::new(0);
 static PARKS: AtomicU64 = AtomicU64::new(0);
 static UNPARKS: AtomicU64 = AtomicU64::new(0);
+static URGENT_SUBMITS: AtomicU64 = AtomicU64::new(0);
 
 /// A snapshot of the pool's monotonic counters ([`gauges`]).
 #[derive(Clone, Copy, Debug, Default)]
@@ -99,6 +100,9 @@ pub struct PoolGauges {
     pub parks: u64,
     /// worker unpark transitions (sleeping worker woken for work)
     pub unparks: u64,
+    /// batches enqueued at the injector *front* by an [`urgent`]
+    /// submitter (deadline-critical serving batches jumping the FIFO)
+    pub urgent: u64,
 }
 
 /// Snapshot the pool gauges.
@@ -110,6 +114,7 @@ pub fn gauges() -> PoolGauges {
         spawn_avoided: SPAWN_AVOIDED.load(Ordering::Relaxed),
         parks: PARKS.load(Ordering::Relaxed),
         unparks: UNPARKS.load(Ordering::Relaxed),
+        urgent: URGENT_SUBMITS.load(Ordering::Relaxed),
     }
 }
 
@@ -245,6 +250,31 @@ thread_local! {
     /// This thread's pool-worker index, if it is one (routes nested
     /// submissions to the worker's own deque).
     static WORKER_ID: Cell<Option<usize>> = const { Cell::new(None) };
+    /// Batch-priority flag set by [`urgent`]: submissions from this
+    /// thread go to the injector *front* instead of the FIFO back.
+    static URGENT: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Restores the previous urgency flag on drop (panic-safe).
+struct UrgentGuard(bool);
+
+impl Drop for UrgentGuard {
+    fn drop(&mut self) {
+        URGENT.with(|c| c.set(self.0));
+    }
+}
+
+/// Run `f` with this thread's pool submissions flagged *urgent*:
+/// batches it submits are enqueued at the injector front, so their
+/// join tickets are picked up before any backlog of ordinary FIFO
+/// work. The global batch scheduler wraps deadline-critical batch
+/// execution in this so a batch it selected by earliest slack is not
+/// then queued behind best-effort pool work it has no deadline for.
+/// Nesting is fine (the previous flag is restored on exit), and the
+/// flag is per-thread — other submitters are unaffected.
+pub fn urgent<R>(f: impl FnOnce() -> R) -> R {
+    let _g = UrgentGuard(URGENT.with(|c| c.replace(true)));
+    f()
 }
 
 fn pool() -> &'static Pool {
@@ -333,10 +363,18 @@ impl Pool {
                 }
             }
             None => {
+                let front = URGENT.with(|c| c.get());
+                if front {
+                    URGENT_SUBMITS.fetch_add(1, Ordering::Relaxed);
+                }
                 let mut g = self.injector.lock().unwrap_or_else(|e| e.into_inner());
                 for _ in 0..helpers {
                     self.pending.fetch_add(1, Ordering::SeqCst);
-                    g.push_back(batch.clone());
+                    if front {
+                        g.push_front(batch.clone());
+                    } else {
+                        g.push_back(batch.clone());
+                    }
                 }
             }
         }
@@ -509,5 +547,22 @@ mod tests {
         let g = gauges();
         assert!(g.workers <= MAX_WORKERS, "{} workers", g.workers);
         assert!(g.tasks >= 64);
+    }
+
+    #[test]
+    fn urgent_submits_complete_and_restore_the_flag() {
+        let n = AtomicUsize::new(0);
+        let before = gauges().urgent;
+        urgent(|| {
+            run(16, 4, |_| {
+                n.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 16);
+        assert!(gauges().urgent > before, "urgent submit must be counted");
+        assert!(!URGENT.with(|c| c.get()), "flag must restore after the scope");
+        // panic inside the scope still restores the flag
+        let _ = catch_unwind(AssertUnwindSafe(|| urgent(|| panic!("boom"))));
+        assert!(!URGENT.with(|c| c.get()), "flag must restore after a panic");
     }
 }

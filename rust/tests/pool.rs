@@ -219,6 +219,7 @@ fn worker_set_stays_bounded_across_server_lifecycles() {
             default_deadline_ms: 60_000,
             linger_ms: 1,
             packed_budget_bytes: 0,
+            dispatch: sfc::coordinator::DispatchMode::Worker,
         });
         server
             .add_model("m", move || {
@@ -268,6 +269,7 @@ fn gauges_consistent_under_two_model_burst() {
             default_deadline_ms: 60_000,
             linger_ms: 1,
             packed_budget_bytes: 0,
+            dispatch: sfc::coordinator::DispatchMode::Worker,
         });
         for name in ["a", "b"] {
             server

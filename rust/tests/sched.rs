@@ -6,7 +6,8 @@
 //! consistency under concurrent submitters.
 
 use sfc::coordinator::sched::{
-    MultiServer, Priority, Response, SchedConfig, ServerStopped, ShedReason, SubmitOpts,
+    DispatchMode, MultiServer, Priority, Response, SchedConfig, ServerStopped, ShedReason,
+    SubmitOpts,
 };
 use sfc::coordinator::ModelRunner;
 use sfc::engine::{packed_weight_bytes, PackBudget};
@@ -102,6 +103,7 @@ fn overload_sheds_low_priority_with_typed_outcomes() {
         default_deadline_ms: 60_000,
         linger_ms: 2_000, // only partial batches linger; every batch here is full
         packed_budget_bytes: 0,
+        dispatch: DispatchMode::Worker,
     });
     let gate = Arc::new(Gate {
         open: Mutex::new(false),
@@ -204,6 +206,7 @@ fn two_models_share_cache_and_budget_under_overload() {
         default_deadline_ms: 30_000,
         linger_ms: 2,
         packed_budget_bytes: BUDGET,
+        dispatch: DispatchMode::Worker,
     });
     let ma = mobilenet_random(&mobilenet_cfg(), 1, 10);
     let (h0, _) = sfc::coordinator::metrics::plan_cache_counters();
@@ -334,6 +337,7 @@ fn add_model_rejects_budget_overrun() {
         default_deadline_ms: 1_000,
         linger_ms: 1,
         packed_budget_bytes: 1,
+        dispatch: DispatchMode::Worker,
     });
     let m = resnet_random(&resnet18_cfg(), 6, 10);
     let err = server
@@ -382,6 +386,7 @@ fn counters_consistent_under_concurrent_submitters() {
         default_deadline_ms: 30_000,
         linger_ms: 1,
         packed_budget_bytes: 0,
+        dispatch: DispatchMode::Worker,
     }));
     server.add_model("m", || Ok(InstantMock { dims: vec![4, 1, 2, 2] })).unwrap();
     let mut joins = Vec::new();

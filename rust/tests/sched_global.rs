@@ -1,0 +1,364 @@
+//! Global-dispatch scheduler properties: cost-aware EDF never inverts
+//! priority outcomes, speculative batch splitting never starves the
+//! requeued tail, the shared WorkspacePool's byte accounting stays
+//! exact under concurrent lease/return, global-vs-worker dispatch is
+//! bit-identical on identical request streams, and shutdown drains
+//! with typed errors in global mode too.
+
+use sfc::coordinator::sched::{
+    DispatchMode, MultiServer, Priority, Response, SchedConfig, ServerStopped, ShedReason,
+    SubmitOpts,
+};
+use sfc::coordinator::ModelRunner;
+use sfc::engine::WorkspacePool;
+use sfc::nn::model::{resnet18_cfg, resnet_random};
+use sfc::runtime::EngineExecutor;
+use sfc::util::Pcg32;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+fn global_cfg(queue_depth: usize) -> SchedConfig {
+    SchedConfig {
+        queue_depth,
+        default_deadline_ms: 60_000,
+        linger_ms: 2_000, // only partial batches linger; full batches fire
+        packed_budget_bytes: 0,
+        dispatch: DispatchMode::Global,
+    }
+}
+
+/// Mock whose `run` blocks at a gate until the test opens it — parks
+/// the executor mid-batch (holding its run slot) so the test can
+/// manipulate the queue with no timing races. Class = image[0].
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+    entered: AtomicUsize,
+}
+
+struct GatedMock {
+    dims: Vec<usize>,
+    gate: Arc<Gate>,
+}
+
+impl ModelRunner for GatedMock {
+    fn input_dims(&self) -> &[usize] {
+        &self.dims
+    }
+    fn out_classes(&self) -> usize {
+        10
+    }
+    fn run(&self, batch: &[f32]) -> Result<Vec<f32>> {
+        self.gate.entered.fetch_add(1, Ordering::SeqCst);
+        let mut open = self.gate.open.lock().unwrap();
+        while !*open {
+            open = self.gate.cv.wait(open).unwrap();
+        }
+        drop(open);
+        mock_logits(&self.dims, batch)
+    }
+}
+
+/// Mock with a small fixed execution time, for contention scenarios.
+struct SleepMock {
+    dims: Vec<usize>,
+    delay: Duration,
+}
+
+impl ModelRunner for SleepMock {
+    fn input_dims(&self) -> &[usize] {
+        &self.dims
+    }
+    fn out_classes(&self) -> usize {
+        10
+    }
+    fn run(&self, batch: &[f32]) -> Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        mock_logits(&self.dims, batch)
+    }
+}
+
+/// Instant mock (no gate, no delay) for shutdown tests.
+struct InstantMock {
+    dims: Vec<usize>,
+}
+
+impl ModelRunner for InstantMock {
+    fn input_dims(&self) -> &[usize] {
+        &self.dims
+    }
+    fn out_classes(&self) -> usize {
+        10
+    }
+    fn run(&self, batch: &[f32]) -> Result<Vec<f32>> {
+        mock_logits(&self.dims, batch)
+    }
+}
+
+fn mock_logits(dims: &[usize], batch: &[f32]) -> Result<Vec<f32>> {
+    let sample: usize = dims[1..].iter().product();
+    let n = dims[0];
+    let mut out = vec![0f32; n * 10];
+    for i in 0..n {
+        let cls = (batch[i * sample] as usize).min(9);
+        out[i * 10 + cls] = 1.0;
+    }
+    Ok(out)
+}
+
+fn img(cls: usize) -> Vec<f32> {
+    let mut v = vec![0f32; 4];
+    v[0] = (cls % 10) as f32;
+    v
+}
+
+fn opts(priority: Priority, deadline_s: u64) -> SubmitOpts {
+    SubmitOpts { priority, deadline: Some(Duration::from_secs(deadline_s)) }
+}
+
+#[test]
+fn dispatch_mode_parses_and_names() {
+    assert_eq!(DispatchMode::parse("worker").unwrap(), DispatchMode::Worker);
+    assert_eq!(DispatchMode::parse("global").unwrap(), DispatchMode::Global);
+    assert!(DispatchMode::parse("both").is_err());
+    assert_eq!(DispatchMode::Worker.name(), "worker");
+    assert_eq!(DispatchMode::Global.name(), "global");
+    assert_eq!(DispatchMode::default(), DispatchMode::Worker);
+}
+
+/// Cost-aware EDF must never invert priority outcomes: with the
+/// executor parked mid-batch behind the gate, Low fillers are displaced
+/// by later High arrivals (earlier deadlines), and once the gate opens
+/// every High request completes while only Low work was sacrificed.
+#[test]
+fn global_edf_never_inverts_priority_outcomes() {
+    let server = MultiServer::new(global_cfg(8));
+    let gate = Arc::new(Gate {
+        open: Mutex::new(false),
+        cv: Condvar::new(),
+        entered: AtomicUsize::new(0),
+    });
+    let g2 = gate.clone();
+    server
+        .add_model("m", move || Ok(GatedMock { dims: vec![4, 1, 2, 2], gate: g2 }))
+        .unwrap();
+
+    // park the executor on a full High batch
+    let mut first = Vec::new();
+    for c in 0..4 {
+        first.push(server.submit("m", img(c), opts(Priority::High, 60)).unwrap());
+    }
+    while gate.entered.load(Ordering::SeqCst) == 0 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // fill the queue with Low work (later deadlines) ...
+    let mut lows = Vec::new();
+    for c in 0..8 {
+        lows.push(server.submit("m", img(c), opts(Priority::Low, 60)).unwrap());
+    }
+    // ... then High work with earlier deadlines displaces Low entries
+    let mut highs = Vec::new();
+    for c in 0..4 {
+        highs.push(server.submit("m", img(c), opts(Priority::High, 30)).unwrap());
+    }
+    {
+        let mut open = gate.open.lock().unwrap();
+        *open = true;
+        gate.cv.notify_all();
+    }
+
+    for t in first.into_iter().chain(highs) {
+        match t.wait().unwrap() {
+            Response::Done(_) => {}
+            Response::Shed(s) => panic!("High request shed: {s:?} — priority inverted"),
+        }
+    }
+    let mut low_done = 0;
+    let mut low_displaced = 0;
+    for t in lows {
+        match t.wait().unwrap() {
+            Response::Done(_) => low_done += 1,
+            Response::Shed(s) => {
+                assert_eq!(s.reason, ShedReason::Displaced);
+                assert_eq!(s.priority, Priority::Low);
+                low_displaced += 1;
+            }
+        }
+    }
+    assert_eq!(low_done, 4, "Lows surviving displacement must execute");
+    assert_eq!(low_displaced, 4, "each High newcomer displaces one Low");
+    server.shutdown();
+}
+
+/// Speculative splitting must never starve the requeued tail: under a
+/// rival model flooding tight-deadline traffic (which makes the plan
+/// contended and split-prone), every generous-deadline request on the
+/// victim model still completes.
+#[test]
+fn global_splitting_never_starves_the_tail() {
+    let server = MultiServer::new(global_cfg(64));
+    server
+        .add_model("slow", || {
+            Ok(SleepMock { dims: vec![8, 1, 2, 2], delay: Duration::from_millis(2) })
+        })
+        .unwrap();
+    server
+        .add_model("urgent", || {
+            Ok(SleepMock { dims: vec![4, 1, 2, 2], delay: Duration::from_millis(1) })
+        })
+        .unwrap();
+
+    // the batch that may be split: generous deadlines, must all finish
+    let mut tail = Vec::new();
+    for c in 0..24 {
+        tail.push(server.submit("slow", img(c), opts(Priority::Normal, 60)).unwrap());
+    }
+    // rival pressure: tight deadlines keep the plan contended
+    let mut rush = Vec::new();
+    for c in 0..40 {
+        rush.push(server.submit(
+            "urgent",
+            img(c),
+            SubmitOpts { priority: Priority::High, deadline: Some(Duration::from_millis(5)) },
+        ).unwrap());
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    for (c, t) in tail.into_iter().enumerate() {
+        match t.wait().unwrap() {
+            Response::Done(done) => assert_eq!(done.argmax, c % 10),
+            Response::Shed(s) => panic!("tail request {c} starved/shed: {s:?}"),
+        }
+    }
+    for t in rush {
+        let _ = t.wait().unwrap(); // done or shed, never hung
+    }
+    let snap = server.snapshot("slow").unwrap();
+    assert_eq!(snap.completed, 24);
+    assert_eq!(snap.failed, 0);
+    server.shutdown();
+}
+
+/// WorkspacePool byte accounting stays exact under concurrent
+/// lease/return: after the storm, nothing is leased, and the resident
+/// byte gauge equals the sum of pooled bytes across the parked arenas.
+#[test]
+fn workspace_pool_accounting_exact_under_concurrency() {
+    let pool = Arc::new(WorkspacePool::new(0));
+    let threads = 4;
+    let iters = 50;
+    let mut joins = Vec::new();
+    for tid in 0..threads {
+        let p = pool.clone();
+        joins.push(std::thread::spawn(move || {
+            for i in 0..iters {
+                let mut ws = p.lease(tid);
+                let buf = ws.take_f32(1024 + 256 * tid + i);
+                ws.give_f32(buf);
+                p.give(tid, ws);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let g = pool.gauges();
+    assert_eq!(g.leases, (threads * iters) as u64);
+    assert_eq!(g.leased, 0, "every lease was returned");
+    assert!(g.resident_ws >= 1 && g.resident_ws <= g.peak_leased);
+    assert!(g.peak_leased <= threads as u64);
+    assert!(g.affinity_hits + g.misses <= g.leases);
+    assert!(g.peak_resident_bytes >= g.resident_bytes);
+    // exactness: drain the free list and re-add the parked arenas' bytes
+    let mut drained = 0u64;
+    for _ in 0..g.resident_ws {
+        let ws = pool.lease(usize::MAX); // no affinity: pops the free list
+        drained += ws.pooled_bytes() as u64;
+    }
+    assert_eq!(drained, g.resident_bytes, "resident byte gauge must be exact");
+    assert_eq!(pool.gauges().resident_bytes, 0);
+    assert_eq!(pool.gauges().resident_ws, 0);
+}
+
+/// Identical request streams produce bit-identical logits under worker
+/// and global dispatch: convolution is per-sample independent and the
+/// batch tail is zero-padded, so the dispatch policy (batch sizes,
+/// splits, workspace source) must never leak into the numbers.
+#[test]
+fn global_vs_worker_dispatch_is_bit_identical() {
+    let requests = 12;
+    let sample = 3 * 32 * 32;
+    let mut images = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let mut img = vec![0f32; sample];
+        Pcg32::seeded(1000 + i as u64).fill_gaussian(&mut img, 0.5);
+        images.push(img);
+    }
+    let mut arms: Vec<Vec<Vec<f32>>> = Vec::new();
+    for dispatch in [DispatchMode::Worker, DispatchMode::Global] {
+        let server = MultiServer::new(SchedConfig {
+            queue_depth: 64,
+            default_deadline_ms: 60_000,
+            linger_ms: 2,
+            packed_budget_bytes: 0,
+            dispatch,
+        });
+        server
+            .add_model("resnet18", || {
+                let m = resnet_random(&resnet18_cfg(), 1, 10);
+                Ok(EngineExecutor::from_model(m, vec![4, 3, 32, 32], 10))
+            })
+            .unwrap();
+        let mut tickets = Vec::new();
+        for img in &images {
+            tickets.push(
+                server.submit("resnet18", img.clone(), opts(Priority::Normal, 60)).unwrap(),
+            );
+        }
+        let mut logits = Vec::new();
+        for t in tickets {
+            match t.wait().unwrap() {
+                Response::Done(c) => logits.push(c.logits),
+                Response::Shed(s) => panic!("unexpected shed with 60 s deadlines: {s:?}"),
+            }
+        }
+        server.shutdown();
+        arms.push(logits);
+    }
+    for i in 0..requests {
+        assert_eq!(
+            arms[0][i], arms[1][i],
+            "request {i}: worker and global dispatch disagree bit-for-bit"
+        );
+    }
+}
+
+/// Shutdown under global dispatch drains queued work (waiters complete)
+/// and late submits fail with the typed [`ServerStopped`] error.
+#[test]
+fn global_shutdown_drains_then_fails_typed() {
+    let server = MultiServer::new(global_cfg(64));
+    server.add_model("m", || Ok(InstantMock { dims: vec![4, 1, 2, 2] })).unwrap();
+    let mut tickets = Vec::new();
+    for c in 0..20 {
+        tickets.push(server.submit("m", img(c), opts(Priority::Normal, 60)).unwrap());
+    }
+    server.shutdown();
+    let mut done = 0;
+    for t in tickets {
+        match t.wait() {
+            Ok(Response::Done(_)) => done += 1,
+            Ok(Response::Shed(_)) => {}
+            Err(e) => {
+                assert!(e.is::<ServerStopped>(), "non-typed shutdown error: {e:#}");
+            }
+        }
+    }
+    assert!(done > 0, "shutdown must drain queued work, not drop it");
+    let err = server.submit("m", img(0), opts(Priority::Normal, 60)).unwrap_err();
+    assert!(err.is::<ServerStopped>());
+    let snap = server.snapshot("m").unwrap();
+    assert_eq!(snap.queue_depth, 0, "clean drain leaves an empty queue");
+    assert_eq!(snap.failed, 0);
+}

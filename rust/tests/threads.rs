@@ -293,6 +293,7 @@ fn multiserver_stays_within_core_budget() {
         default_deadline_ms: 60_000,
         linger_ms: 1,
         packed_budget_bytes: 0,
+        dispatch: sfc::coordinator::DispatchMode::Worker,
     });
     for name in ["a", "b"] {
         server

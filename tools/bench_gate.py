@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Perf-regression gate over `sfc bench --json` snapshots.
+"""Perf-regression gate over `sfc bench --json` / `sfc loadgen --json` snapshots.
 
 Compares a freshly measured BENCH_conv.json against the committed
 baseline snapshot and fails CI on hard ns/call regressions on the gated
@@ -31,6 +31,19 @@ Comparability guards: the gate refuses to compare (warns, exits 0)
 when the kernel dispatch arms differ (scalar vs avx2 timings are not
 comparable) and tolerates schema drift as long as both files carry the
 gated rows.
+
+Serving snapshots (`sfc loadgen --json --out BENCH_serve.json`,
+`bench: "serve"`) gate per-model records instead of per-shape rows:
+
+  * goodput and deadline_met_ratio must not drop more than --fail-pct
+    below the baseline (these are higher-is-better),
+  * p99_ms must not rise more than --fail-pct above the baseline,
+  * a model present in the baseline but missing from the fresh run is a
+    hard failure.
+
+The same bootstrap mode applies (no committed BENCH_serve baseline ->
+warn and exit 0), plus one extra comparability guard: snapshots from
+different --sched dispatch arms are never compared.
 """
 
 import argparse
@@ -49,9 +62,75 @@ def is_gated(row):
 def load(path):
     with open(path) as f:
         d = json.load(f)
-    if d.get("bench") != "conv" or "results" not in d:
-        sys.exit(f"bench_gate: {path} is not a BENCH_conv snapshot")
-    return d
+    if d.get("bench") == "conv" and "results" in d:
+        return d
+    if d.get("bench") == "serve" and "models" in d:
+        return d
+    sys.exit(f"bench_gate: {path} is not a BENCH_conv or BENCH_serve snapshot")
+
+
+def gate_serve(base, fresh, args):
+    """Gate a serve snapshot: per-model goodput / deadline_met_ratio /
+    p99_ms against the baseline. Returns the process exit code."""
+    bs, fs = base.get("sched"), fresh.get("sched")
+    if bs != fs:
+        print(
+            f"::warning::bench_gate: sched arm mismatch (baseline={bs}, fresh={fs}) -- "
+            "dispatch policies are not comparable, skipping the gate"
+        )
+        return 0
+    base_models = {m["model"]: m for m in base["models"]}
+    fresh_models = {m["model"]: m for m in fresh["models"]}
+    if not base_models:
+        sys.exit("bench_gate: serve baseline contains no models -- was it a real run?")
+
+    fail_at = args.fail_pct / 100.0
+    warn_at = args.warn_pct / 100.0
+    failures = []
+    for name in sorted(base_models):
+        if name not in fresh_models:
+            failures.append(f"{name}: model missing from the fresh snapshot")
+            continue
+        b, f = base_models[name], fresh_models[name]
+        # higher-is-better metrics: fail when fresh drops too far below
+        for metric in ("goodput", "deadline_met_ratio"):
+            bv, fv = b.get(metric, 0), f.get(metric, 0)
+            if bv <= 0:
+                print(f"bench_gate: {name}/{metric} baseline is {bv}, skipping")
+                continue
+            drop = (bv - fv) / bv
+            if drop > fail_at:
+                failures.append(f"{name}/{metric}: {bv} -> {fv} (-{drop * 100.0:.1f}%)")
+            elif drop > warn_at:
+                print(
+                    f"::warning::bench_gate: {name}/{metric} dropped "
+                    f"{bv} -> {fv} (-{drop * 100.0:.1f}%)"
+                )
+            else:
+                print(f"bench_gate ok: {name}/{metric} {bv} -> {fv}")
+        # lower-is-better latency: fail when fresh rises too far above
+        bv, fv = b.get("p99_ms", 0), f.get("p99_ms", 0)
+        if bv > 0:
+            rise = (fv - bv) / bv
+            if rise > fail_at:
+                failures.append(f"{name}/p99_ms: {bv:.2f} -> {fv:.2f} ms (+{rise * 100.0:.1f}%)")
+            elif rise > warn_at:
+                print(
+                    f"::warning::bench_gate: {name}/p99_ms rose "
+                    f"{bv:.2f} -> {fv:.2f} ms (+{rise * 100.0:.1f}%)"
+                )
+            else:
+                print(f"bench_gate ok: {name}/p99_ms {bv:.2f} -> {fv:.2f} ms")
+
+    for name in sorted(set(fresh_models) - set(base_models)):
+        print(f"bench_gate: new model (no baseline yet): {name}")
+
+    if failures:
+        for line in failures:
+            print(f"::error::bench_gate serving regression: {line}")
+        return 1
+    print(f"bench_gate: {len(base_models)} serving models within thresholds of baseline")
+    return 0
 
 
 def main():
@@ -73,6 +152,12 @@ def main():
         return 0
     fresh = load(args.fresh)
 
+    if base.get("bench") != fresh.get("bench"):
+        sys.exit(
+            f"bench_gate: snapshot kind mismatch (baseline={base.get('bench')}, "
+            f"fresh={fresh.get('bench')}) -- compare conv to conv, serve to serve"
+        )
+
     bk, fk = base.get("kernel"), fresh.get("kernel")
     if bk != fk:
         print(
@@ -80,6 +165,9 @@ def main():
             "timings are not comparable on this runner, skipping the gate"
         )
         return 0
+
+    if base.get("bench") == "serve":
+        return gate_serve(base, fresh, args)
 
     base_rows = {(r["shape"], r["engine"]): r for r in base["results"] if is_gated(r)}
     fresh_rows = {(r["shape"], r["engine"]): r for r in fresh["results"] if is_gated(r)}
